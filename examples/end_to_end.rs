@@ -1,0 +1,90 @@
+//! End-to-end driver (the repo's headline workload — see EXPERIMENTS.md):
+//!
+//! 1. builds the Table-2 graph suite at the artifact scale;
+//! 2. runs all four paper algorithms through every executable path —
+//!    hand-written baselines, the DSL interpreter (seq + par) and, when
+//!    `make artifacts` has produced them, the AOT-compiled XLA artifacts
+//!    generated from the same DSL sources;
+//! 3. cross-checks every backend's checksum against the oracles;
+//! 4. prints a compact Table-3/4-style report with timings.
+//!
+//! Run: make artifacts && cargo run --release --example end_to_end
+
+use starplat::algorithms::reference;
+use starplat::backends::xla::XlaBackend;
+use starplat::coordinator::driver::{run_cell, Algo, Backend, PR_BETA, PR_DAMPING, PR_MAX_ITER};
+use starplat::graph::generators::sample_sources;
+use starplat::graph::suite::build_suite;
+use starplat::util::table::{fmt_secs, Table};
+
+fn main() -> anyhow::Result<()> {
+    let xla = match XlaBackend::open(std::path::Path::new("artifacts")) {
+        Ok(x) => Some(x),
+        Err(e) => {
+            eprintln!("note: XLA artifacts unavailable ({e}); running CPU paths only");
+            None
+        }
+    };
+    let scale = xla.as_ref().map(|x| x.rt.scale).unwrap_or(600);
+    let suite = build_suite(scale);
+    println!(
+        "end-to-end: {} graphs at scale {scale}, {} backends\n",
+        suite.len(),
+        3 + xla.is_some() as usize
+    );
+
+    let mut failures = 0;
+    for (algo, name) in
+        [(Algo::Sssp, "SSSP"), (Algo::Pr, "PR"), (Algo::Bc, "BC"), (Algo::Tc, "TC")]
+    {
+        let mut t = Table::new(
+            &format!("{name} — all executable paths (seconds; ✓ = checksum matches oracle)"),
+            &["Graph", "oracle", "lonestar", "gunrock", "interp-par", "xla"],
+        );
+        for e in &suite {
+            let sources = sample_sources(&e.graph, 5, 7);
+            // oracle checksum
+            let oracle = match algo {
+                Algo::Sssp => reference::dijkstra(&e.graph, sources[0])
+                    .iter()
+                    .map(|&d| if d >= reference::INF { 0.0 } else { d as f64 })
+                    .sum::<f64>(),
+                Algo::Pr => {
+                    reference::pagerank(&e.graph, PR_BETA, PR_DAMPING, PR_MAX_ITER).iter().sum()
+                }
+                Algo::Bc => reference::betweenness(&e.graph, &sources).iter().sum(),
+                Algo::Tc => reference::triangle_count(&e.graph) as f64,
+                _ => 0.0,
+            };
+            let mut row = vec![e.short.to_string(), format!("{oracle:.1}")];
+            for backend in [Backend::Lonestar, Backend::Gunrock, Backend::Par, Backend::Xla] {
+                if backend == Backend::Xla && xla.is_none() {
+                    row.push("-".into());
+                    continue;
+                }
+                match run_cell(algo, e.short, &e.graph, backend, &sources, xla.as_ref()) {
+                    Ok(r) => {
+                        let ok = (r.checksum - oracle).abs() <= 1e-3 * (1.0 + oracle.abs());
+                        if !ok {
+                            failures += 1;
+                        }
+                        row.push(format!(
+                            "{}{}",
+                            fmt_secs(r.secs),
+                            if ok { " ✓" } else { " ✗" }
+                        ));
+                    }
+                    Err(_) => row.push("-".into()),
+                }
+            }
+            t.row(row);
+        }
+        println!("{}", t.render());
+    }
+    if failures == 0 {
+        println!("ALL CHECKSUMS MATCH — every backend agrees with the oracles.");
+        Ok(())
+    } else {
+        anyhow::bail!("{failures} checksum mismatches")
+    }
+}

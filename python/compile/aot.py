@@ -1,0 +1,143 @@
+"""AOT lowering: step functions → HLO text artifacts + manifest.json.
+
+Interchange is HLO *text*, not serialized protos: jax >= 0.5 emits 64-bit
+instruction ids that xla_extension 0.5.1 rejects; the text parser reassigns
+ids (see /opt/xla-example/README.md and DESIGN.md).
+
+Shapes come from `artifacts/graphs/shapes.json`, written by
+`starplat export-graphs` (the rust side regenerates identical ELL arrays at
+run time — generation is deterministic). Without shapes.json a small default
+shape set is built so pytest can exercise the pipeline standalone.
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import importlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+S = jax.ShapeDtypeStruct
+I32, F32 = jnp.int32, jnp.float32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def step_fn(algo_fn_name):
+    """Prefer the DSL-compiler-generated module; fall back to model.py."""
+    algo = algo_fn_name.split("_")[0]
+    try:
+        mod = importlib.import_module(f"compile.generated.{algo}_step")
+        if hasattr(mod, algo_fn_name):
+            return getattr(mod, algo_fn_name), f"generated.{algo}_step"
+    except ImportError:
+        pass
+    return getattr(model, algo_fn_name), "model"
+
+
+def specs_for(algo, g):
+    """Input ShapeDtypeStructs per artifact, in the order the rust runtime
+    feeds literals (see backends/xla)."""
+    n, w = g["n_pad"], g["width_in"]
+    ell = [S((n, w), I32), S((n, w), I32), S((n, w), F32)]  # idx, wgt, mask
+    ell_nw = [S((n, w), I32), S((n, w), F32)]  # idx, mask
+    if algo in ("sssp", "cc"):
+        return [S((n,), I32)] + ell
+    if algo == "bfs":
+        return [S((n,), I32), S((), I32)] + ell_nw
+    if algo == "pr":
+        return [S((n,), F32)] + ell_nw + [S((n,), F32), S((), F32), S((), F32)]
+    if algo == "bc_fwd":
+        return [S((n,), I32), S((n,), F32), S((), I32)] + ell_nw
+    if algo == "bc_bwd":
+        return [
+            S((n,), I32),
+            S((n,), F32),
+            S((n,), F32),
+            S((n,), F32),
+            S((), I32),
+            S((), I32),
+        ] + ell_nw
+    if algo == "tc":
+        nd = g["n_dense"]
+        return [S((nd, nd), F32)]
+    raise ValueError(algo)
+
+
+ARTIFACT_FNS = {
+    "sssp": "sssp_step",
+    "cc": "cc_step",
+    "bfs": "bfs_step",
+    "pr": "pr_step",
+    "bc_fwd": "bc_fwd_step",
+    "bc_bwd": "bc_bwd_step",
+    "tc": "tc_step",
+}
+
+
+def default_shapes():
+    return {
+        "scale": 0,
+        "graphs": [
+            {"short": "TEST", "n": 200, "n_pad": 256, "width_in": 16, "n_dense": 256}
+        ],
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--algos", default="sssp,cc,bfs,pr,bc_fwd,bc_bwd,tc")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    shapes_path = os.path.join(args.out, "graphs", "shapes.json")
+    if os.path.exists(shapes_path):
+        with open(shapes_path) as f:
+            shapes = json.load(f)
+    else:
+        print(f"[aot] {shapes_path} missing — using default test shapes")
+        shapes = default_shapes()
+
+    manifest = {"scale": shapes.get("scale", 0), "artifacts": []}
+    for g in shapes["graphs"]:
+        for algo in args.algos.split(","):
+            fn, origin = step_fn(ARTIFACT_FNS[algo])
+            specs = specs_for(algo, g)
+            lowered = jax.jit(fn).lower(*specs)
+            hlo = to_hlo_text(lowered)
+            fname = f"{algo}_{g['short']}.hlo.txt"
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(hlo)
+            manifest["artifacts"].append(
+                {
+                    "algo": algo,
+                    "graph": g["short"],
+                    "file": fname,
+                    "origin": origin,
+                    "n": g["n"],
+                    "n_pad": g["n_pad"],
+                    "width": g["width_in"],
+                    "n_dense": g.get("n_dense", g["n_pad"]),
+                }
+            )
+            print(f"[aot] {fname}: {len(hlo)} chars (from {origin})")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"[aot] wrote {len(manifest['artifacts'])} artifacts + manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Kernel library for the JAX backend (L1 of the three-layer stack).
+
+`ell_relax`, `ell_spmv`, `ell_frontier`, `tc_matmul` are Pallas kernels
+(interpret=True on CPU PJRT); `bc_forward` / `bc_backward` compose them with
+jnp glue at L2. Every function has a pure-jnp oracle in `ref.py`.
+"""
+
+import jax.numpy as jnp
+
+from .ell import ell_frontier, ell_relax, ell_spmv, tc_matmul
+from .ref import INF
+
+
+def bc_forward(level, sigma, depth, idx, mask):
+    """Brandes forward wavefront: discover depth+1, accumulate sigma.
+
+    Gathers share the ELL tiles with `ell_frontier`; the arithmetic after
+    the gather is cheap elementwise work, kept at L2 (see DESIGN.md §2).
+    """
+    gathered_level = jnp.take(level, idx, axis=0)
+    parents = jnp.logical_and(mask > 0, gathered_level == depth)
+    has_parent = jnp.any(parents, axis=1)
+    fresh = jnp.logical_and(level < 0, has_parent)
+    new_level = jnp.where(fresh, depth + 1, level)
+    sigma_in = jnp.take(sigma, idx, axis=0)
+    sigma_add = jnp.sum(jnp.where(parents, sigma_in, 0.0), axis=1)
+    new_sigma = jnp.where(fresh, sigma + sigma_add, sigma)
+    finished = jnp.logical_not(jnp.any(fresh)).astype(jnp.int32)
+    return new_level, new_sigma, finished
+
+
+def bc_backward(level, sigma, delta, bc, depth, src, idx, mask):
+    """Brandes reverse sweep for vertices at `depth` (out-edge ELL view)."""
+    child_level = jnp.take(level, idx, axis=0)
+    children = jnp.logical_and(mask > 0, child_level == depth + 1)
+    sigma_w = jnp.take(sigma, idx, axis=0)
+    delta_w = jnp.take(delta, idx, axis=0)
+    safe_sigma_w = jnp.where(children, sigma_w, 1.0)
+    contrib = (sigma[:, None] / safe_sigma_w) * (1.0 + delta_w)
+    acc = jnp.sum(jnp.where(children, contrib, 0.0), axis=1)
+    at_depth = level == depth
+    new_delta = jnp.where(at_depth, acc, delta)
+    n = level.shape[0]
+    not_src = jnp.arange(n) != src
+    new_bc = bc + jnp.where(jnp.logical_and(at_depth, not_src), new_delta, 0.0)
+    return new_delta, new_bc
+
+
+__all__ = [
+    "INF",
+    "bc_backward",
+    "bc_forward",
+    "ell_frontier",
+    "ell_relax",
+    "ell_spmv",
+    "tc_matmul",
+]

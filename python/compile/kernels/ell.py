@@ -1,0 +1,147 @@
+"""Pallas kernels over the padded ELL layout (DESIGN.md §2).
+
+The paper's warp-per-vertex CSR traversal becomes row-blocked dense tiles:
+each grid step owns `BLOCK_ROWS` vertices whose `[BLOCK_ROWS, width]`
+index/weight/mask tiles stream HBM→VMEM via BlockSpec, while the gathered
+state vector (`dist` / `contrib`) stays VMEM-resident. interpret=True is
+mandatory on CPU PJRT (real-TPU lowering emits Mosaic custom-calls).
+
+VMEM budget (estimated in DESIGN.md §7): a block holds
+  BLOCK_ROWS*width*(4+4+4)B (idx/wgt/mask) + N*4B (state) + BLOCK_ROWS*4B.
+With BLOCK_ROWS=256, width<=512, N<=16384: ~1.6 MiB — comfortably under
+the ~16 MiB/core VMEM of a TPUv4.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import INF
+
+BLOCK_ROWS = 256
+
+
+def _block_rows(n_pad):
+    return min(BLOCK_ROWS, n_pad)
+
+
+def _relax_kernel(dist_ref, idx_ref, wgt_ref, mask_ref, out_ref):
+    dist = dist_ref[...]          # full state vector (VMEM-resident)
+    idx = idx_ref[...]            # [B, W] row tile
+    wgt = wgt_ref[...]
+    mask = mask_ref[...]
+    gathered = jnp.take(dist, idx, axis=0)
+    cand = jnp.where(mask > 0, gathered + wgt, INF)
+    cand = jnp.where(gathered >= INF, INF, cand)
+    out_ref[...] = jnp.min(cand, axis=1).astype(dist.dtype)
+
+
+def ell_relax(dist, idx, wgt, mask):
+    """Min-plus relaxation (SSSP/BFS/CC step). Matches ref.ell_relax_ref."""
+    n_pad, width = idx.shape
+    b = _block_rows(n_pad)
+    grid = (n_pad // b,)
+    return pl.pallas_call(
+        _relax_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(dist.shape, lambda i: (0,)),       # whole vector
+            pl.BlockSpec((b, width), lambda i: (i, 0)),
+            pl.BlockSpec((b, width), lambda i: (i, 0)),
+            pl.BlockSpec((b, width), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), dist.dtype),
+        interpret=True,
+    )(dist, idx, wgt, mask)
+
+
+def _spmv_kernel(contrib_ref, idx_ref, mask_ref, out_ref):
+    contrib = contrib_ref[...]
+    idx = idx_ref[...]
+    mask = mask_ref[...]
+    gathered = jnp.take(contrib, idx, axis=0)
+    out_ref[...] = jnp.sum(gathered * mask, axis=1).astype(contrib.dtype)
+
+
+def ell_spmv(contrib, idx, mask):
+    """Masked gather-sum (PageRank pull step). Matches ref.ell_spmv_ref."""
+    n_pad, width = idx.shape
+    b = _block_rows(n_pad)
+    grid = (n_pad // b,)
+    return pl.pallas_call(
+        _spmv_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(contrib.shape, lambda i: (0,)),
+            pl.BlockSpec((b, width), lambda i: (i, 0)),
+            pl.BlockSpec((b, width), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), contrib.dtype),
+        interpret=True,
+    )(contrib, idx, mask)
+
+
+def _frontier_kernel(level_ref, depth_ref, idx_ref, mask_ref, out_ref):
+    level = level_ref[...]
+    depth = depth_ref[0]
+    idx = idx_ref[...]
+    mask = mask_ref[...]
+    gathered = jnp.take(level, idx, axis=0)
+    out_ref[...] = jnp.any(jnp.logical_and(mask > 0, gathered == depth), axis=1)
+
+
+def ell_frontier(level, depth, idx, mask):
+    """has-parent-at-depth test (BFS wavefront). Matches ell_frontier_ref."""
+    n_pad, width = idx.shape
+    b = _block_rows(n_pad)
+    grid = (n_pad // b,)
+    depth_arr = jnp.asarray(depth, jnp.int32).reshape((1,))
+    return pl.pallas_call(
+        _frontier_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(level.shape, lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((b, width), lambda i: (i, 0)),
+            pl.BlockSpec((b, width), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n_pad,), jnp.bool_),
+        interpret=True,
+    )(level, depth_arr, idx, mask)
+
+
+def _tc_kernel(a_rows_ref, a_cols_ref, a_tile_ref, out_ref):
+    # MXU-friendly tile: (B, N) @ (N, B) then mask by the (B, B) tile.
+    a_rows = a_rows_ref[...]
+    a_cols = a_cols_ref[...]
+    a_tile = a_tile_ref[...]
+    paths2 = jnp.dot(a_rows, a_cols, preferred_element_type=jnp.float32)
+    out_ref[0, 0] = jnp.sum(paths2 * a_tile)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def tc_matmul(adj, block=256):
+    """Triangle count = sum((A@A) ⊙ A) / 6, tiled for the MXU systolic array
+    (the TPU re-think of the paper's per-edge binary search — DESIGN.md §2).
+    """
+    n = adj.shape[0]
+    b = min(block, n)
+    grid = (n // b, n // b)
+    partial = pl.pallas_call(
+        _tc_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, n), lambda i, j: (i, 0)),
+            pl.BlockSpec((n, b), lambda i, j: (0, j)),
+            pl.BlockSpec((b, b), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(grid, jnp.float32),
+        interpret=True,
+    )(adj, adj, adj)
+    return jnp.sum(partial) / 6.0

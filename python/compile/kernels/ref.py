@@ -1,0 +1,75 @@
+"""Pure-jnp oracles for every kernel in the library.
+
+These are the L1 correctness ground truth: each Pallas kernel must match its
+oracle to float tolerance (pytest + hypothesis sweeps in python/tests/).
+"""
+
+import jax.numpy as jnp
+
+# Must equal rust's `reference::INF` (i32::MAX / 2) so distances round-trip.
+INF = 2147483647 // 2
+
+
+def ell_relax_ref(dist, idx, wgt, mask):
+    """Pull min-plus relaxation over ELL in-edges.
+
+    cand[v] = min_k mask[v,k] ? dist[idx[v,k]] + wgt[v,k] : INF
+    """
+    gathered = jnp.take(dist, idx, axis=0)
+    cand = jnp.where(mask > 0, gathered + wgt, INF)
+    # guard against overflow when dist is INF
+    cand = jnp.where(gathered >= INF, INF, cand)
+    return jnp.min(cand, axis=1).astype(dist.dtype)
+
+
+def ell_spmv_ref(contrib, idx, mask):
+    """sums[v] = sum_k mask[v,k] * contrib[idx[v,k]] (PageRank pull)."""
+    gathered = jnp.take(contrib, idx, axis=0)
+    return jnp.sum(gathered * mask, axis=1).astype(contrib.dtype)
+
+
+def ell_frontier_ref(level, depth, idx, mask):
+    """has_parent[v] = any_k mask[v,k] & level[idx[v,k]] == depth."""
+    gathered = jnp.take(level, idx, axis=0)
+    return jnp.any(jnp.logical_and(mask > 0, gathered == depth), axis=1)
+
+
+def bc_forward_ref(level, sigma, depth, idx, mask):
+    """One Brandes forward wavefront over in-edges (ELL pull).
+
+    Returns (level', sigma', finished:int32).
+    """
+    gathered_level = jnp.take(level, idx, axis=0)
+    parents = jnp.logical_and(mask > 0, gathered_level == depth)
+    has_parent = jnp.any(parents, axis=1)
+    fresh = jnp.logical_and(level < 0, has_parent)
+    new_level = jnp.where(fresh, depth + 1, level)
+    sigma_in = jnp.take(sigma, idx, axis=0)
+    sigma_add = jnp.sum(jnp.where(parents, sigma_in, 0.0), axis=1)
+    new_sigma = jnp.where(fresh, sigma + sigma_add, sigma)
+    finished = jnp.logical_not(jnp.any(fresh)).astype(jnp.int32)
+    return new_level, new_sigma, finished
+
+
+def bc_backward_ref(level, sigma, delta, bc, depth, src, idx, mask):
+    """One Brandes reverse sweep step for vertices at `depth` (ELL push view:
+    idx/mask are OUT-edges). Returns (delta', bc')."""
+    child_level = jnp.take(level, idx, axis=0)
+    children = jnp.logical_and(mask > 0, child_level == depth + 1)
+    sigma_w = jnp.take(sigma, idx, axis=0)
+    delta_w = jnp.take(delta, idx, axis=0)
+    safe_sigma_w = jnp.where(children, sigma_w, 1.0)
+    contrib = (sigma[:, None] / safe_sigma_w) * (1.0 + delta_w)
+    acc = jnp.sum(jnp.where(children, contrib, 0.0), axis=1)
+    at_depth = level == depth
+    new_delta = jnp.where(at_depth, acc, delta)
+    n = level.shape[0]
+    not_src = jnp.arange(n) != src
+    new_bc = bc + jnp.where(jnp.logical_and(at_depth, not_src), new_delta, 0.0)
+    return new_delta, new_bc
+
+
+def tc_matmul_ref(adj):
+    """T = sum((A @ A) * A) / 6 on the dense symmetric 0/1 adjacency."""
+    paths2 = adj @ adj
+    return (jnp.sum(paths2 * adj) / 6.0).astype(jnp.float32)

@@ -1,0 +1,62 @@
+"""L2: canonical per-algorithm step functions over padded ELL arrays.
+
+These mirror exactly what the DSL compiler's JAX backend emits into
+`compile/generated/` (the golden tests in python/tests/test_generated.py
+assert the equivalence). aot.py prefers the generated modules when present
+and falls back to these canonical forms, so the AOT pipeline works before
+the first `starplat compile` run.
+
+Conventions shared with the rust runtime (backends/xla):
+- every convergence flag is int32 (1 = finished) — the §4.1 OR-flag word;
+- state arrays come first, then loop scalars, then the ELL arrays.
+"""
+
+import jax.numpy as jnp
+
+from compile import kernels
+
+
+def sssp_step(dist, idx, wgt, mask):
+    """fixedPoint body: pull min-plus relaxation (SSSP / CC / BFS family)."""
+    cand = kernels.ell_relax(dist, idx, wgt, mask)
+    new = jnp.minimum(dist, cand)
+    changed = new < dist
+    finished = jnp.logical_not(jnp.any(changed)).astype(jnp.int32)
+    return new, finished
+
+
+# CC is the same relaxation with weight-0 edges over component labels.
+cc_step = sssp_step
+
+
+def bfs_step(level, depth, idx, mask):
+    """Level-synchronous BFS hop (Fig 9 kernel)."""
+    has_parent = kernels.ell_frontier(level, depth, idx, mask)
+    fresh = jnp.logical_and(level < 0, has_parent)
+    new = jnp.where(fresh, depth + 1, level)
+    finished = jnp.logical_not(jnp.any(fresh)).astype(jnp.int32)
+    return new, finished
+
+
+def pr_step(pageRank, idx, mask, outdeg, delta, num_nodes):
+    """do-while body: double-buffered PageRank pull (Fig 7 analog)."""
+    contrib = pageRank / jnp.maximum(outdeg, 1.0)
+    sums = kernels.ell_spmv(contrib, idx, mask)
+    val = (1.0 - delta) / num_nodes + delta * sums
+    diff = jnp.sum(jnp.abs(val - pageRank))
+    return val, diff
+
+
+def bc_fwd_step(level, sigma, depth, idx, mask):
+    """Brandes forward wavefront (iterateInBFS body)."""
+    return kernels.bc_forward(level, sigma, depth, idx, mask)
+
+
+def bc_bwd_step(level, sigma, delta, bc, depth, src, idx, mask):
+    """Brandes reverse sweep (iterateInReverse body)."""
+    return kernels.bc_backward(level, sigma, delta, bc, depth, src, idx, mask)
+
+
+def tc_step(adj):
+    """Triangle count on the dense adjacency (MXU formulation)."""
+    return kernels.tc_matmul(adj)

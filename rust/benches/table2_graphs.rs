@@ -1,0 +1,19 @@
+//! Regenerates the paper's Table 2: the ten-graph input suite with
+//! |V| / |E| / average and maximum degree (plus a diameter proxy and the
+//! generation time — our graphs are synthesized, not downloaded).
+//!
+//! Run: cargo bench --bench table2_graphs
+
+use starplat::coordinator;
+use starplat::graph::suite;
+use starplat::util::bench::time_once;
+
+fn main() {
+    let scale = suite::default_scale();
+    let (secs, table) = time_once(|| coordinator::table2(scale));
+    println!("{}", table.render());
+    println!("suite generated in {:.2}s at scale {scale} (STARPLAT_SCALE to change)", secs);
+    println!();
+    println!("Paper check (Table 2 shape): six social graphs with hubs (max δ >> avg δ),");
+    println!("two road networks with δ̄≈2–4 and tiny max degree, RMAT skewed, UR tight.");
+}

@@ -1,0 +1,7 @@
+//! Hand-written graph algorithms: sequential oracles plus the two
+//! hand-crafted baselines the paper compares against (Table 3) —
+//! topology-driven LonestarGPU style and frontier-based Gunrock style.
+
+pub mod gunrock;
+pub mod lonestar;
+pub mod reference;

@@ -1,0 +1,254 @@
+//! Sequential, obviously-correct reference implementations of the paper's
+//! four algorithms. These are the correctness oracles for every backend
+//! (interpreter, XLA, and the hand-written Gunrock/Lonestar baselines).
+
+use crate::graph::csr::{Graph, Node};
+use std::collections::VecDeque;
+
+/// Large-but-safe infinity for i32 distance arithmetic (INF + weight must
+/// not overflow, matching the generated `dist[v] != INT_MAX` guards).
+pub const INF: i32 = i32::MAX / 2;
+
+/// BFS levels from `src`; unreachable = INF.
+pub fn bfs_levels(g: &Graph, src: Node) -> Vec<i32> {
+    let mut level = vec![INF; g.num_nodes()];
+    level[src as usize] = 0;
+    let mut q = VecDeque::new();
+    q.push_back(src);
+    while let Some(u) = q.pop_front() {
+        for &w in g.neighbors(u) {
+            if level[w as usize] == INF {
+                level[w as usize] = level[u as usize] + 1;
+                q.push_back(w);
+            }
+        }
+    }
+    level
+}
+
+/// Dijkstra with a binary heap — the SSSP oracle.
+pub fn dijkstra(g: &Graph, src: Node) -> Vec<i32> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut dist = vec![INF; g.num_nodes()];
+    dist[src as usize] = 0;
+    let mut heap = BinaryHeap::new();
+    heap.push(Reverse((0i64, src)));
+    while let Some(Reverse((d, u))) = heap.pop() {
+        if d as i32 > dist[u as usize] {
+            continue;
+        }
+        for e in g.edge_range(u) {
+            let w = g.adj[e];
+            let nd = dist[u as usize].saturating_add(g.weights[e]);
+            if nd < dist[w as usize] {
+                dist[w as usize] = nd;
+                heap.push(Reverse((nd as i64, w)));
+            }
+        }
+    }
+    dist
+}
+
+/// Double-buffered PageRank (the paper's formulation, Fig 7): pull over
+/// in-edges, `(1-d)/n + d * Σ pr[nbr]/outdeg[nbr]`, L1-convergence on beta.
+pub fn pagerank(g: &Graph, beta: f64, damping: f64, max_iter: usize) -> Vec<f64> {
+    let n = g.num_nodes();
+    let mut pr = vec![1.0 / n as f64; n];
+    let mut nxt = vec![0.0; n];
+    for _ in 0..max_iter {
+        let mut diff = 0.0;
+        for v in 0..n {
+            let mut sum = 0.0;
+            for &u in g.in_neighbors(v as Node) {
+                sum += pr[u as usize] / g.out_degree(u) as f64;
+            }
+            let val = (1.0 - damping) / n as f64 + damping * sum;
+            diff += (val - pr[v]).abs();
+            nxt[v] = val;
+        }
+        std::mem::swap(&mut pr, &mut nxt);
+        if diff <= beta {
+            break;
+        }
+    }
+    pr
+}
+
+/// Brandes betweenness centrality accumulated over `sources`
+/// (unweighted shortest paths, as in the paper's BC).
+pub fn betweenness(g: &Graph, sources: &[Node]) -> Vec<f64> {
+    let n = g.num_nodes();
+    let mut bc = vec![0.0f64; n];
+    for &s in sources {
+        // forward phase
+        let mut sigma = vec![0.0f64; n];
+        let mut level = vec![-1i64; n];
+        let mut order: Vec<Node> = Vec::with_capacity(n);
+        sigma[s as usize] = 1.0;
+        level[s as usize] = 0;
+        let mut q = VecDeque::new();
+        q.push_back(s);
+        while let Some(u) = q.pop_front() {
+            order.push(u);
+            for &w in g.neighbors(u) {
+                if level[w as usize] < 0 {
+                    level[w as usize] = level[u as usize] + 1;
+                    q.push_back(w);
+                }
+                if level[w as usize] == level[u as usize] + 1 {
+                    sigma[w as usize] += sigma[u as usize];
+                }
+            }
+        }
+        // backward phase
+        let mut delta = vec![0.0f64; n];
+        for &v in order.iter().rev() {
+            for &w in g.neighbors(v) {
+                if level[w as usize] == level[v as usize] + 1 {
+                    delta[v as usize] +=
+                        (sigma[v as usize] / sigma[w as usize]) * (1.0 + delta[w as usize]);
+                }
+            }
+            if v != s {
+                bc[v as usize] += delta[v as usize];
+            }
+        }
+    }
+    bc
+}
+
+/// Triangle count: for each v, pairs (u, w) of neighbors with u < v < w and
+/// edge (u, w) — each triangle counted exactly once (paper's TC shape).
+pub fn triangle_count(g: &Graph) -> u64 {
+    let mut count = 0u64;
+    for v in 0..g.num_nodes() as Node {
+        let nb = g.neighbors(v);
+        for &u in nb.iter().take_while(|&&u| u < v) {
+            for &w in nb.iter().rev().take_while(|&&w| w > v) {
+                if g.is_an_edge(u, w) {
+                    count += 1;
+                }
+            }
+        }
+    }
+    count
+}
+
+/// Connected components by label propagation (oracle for cc.sp): every
+/// vertex ends with the minimum vertex id of its (weakly) connected
+/// component. Assumes a symmetric graph.
+pub fn connected_components(g: &Graph) -> Vec<i32> {
+    let n = g.num_nodes();
+    let mut comp: Vec<i32> = (0..n as i32).collect();
+    let mut changed = true;
+    while changed {
+        changed = false;
+        for v in 0..n as Node {
+            for &w in g.neighbors(v) {
+                if comp[v as usize] < comp[w as usize] {
+                    comp[w as usize] = comp[v as usize];
+                    changed = true;
+                } else if comp[w as usize] < comp[v as usize] {
+                    comp[v as usize] = comp[w as usize];
+                    changed = true;
+                }
+            }
+        }
+    }
+    comp
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::GraphBuilder;
+    use crate::graph::generators::rmat;
+
+    fn triangle_graph() -> Graph {
+        // K3 plus a pendant
+        let mut b = GraphBuilder::new(4);
+        b.add_undirected(0, 1, 2);
+        b.add_undirected(1, 2, 3);
+        b.add_undirected(0, 2, 10);
+        b.add_undirected(2, 3, 1);
+        b.build()
+    }
+
+    #[test]
+    fn bfs_and_dijkstra_on_triangle() {
+        let g = triangle_graph();
+        assert_eq!(bfs_levels(&g, 0), vec![0, 1, 1, 2]);
+        // dist 0->2: direct 10 vs 0->1->2 = 5
+        assert_eq!(dijkstra(&g, 0), vec![0, 2, 5, 6]);
+    }
+
+    #[test]
+    fn tc_counts_one_triangle() {
+        assert_eq!(triangle_count(&triangle_graph()), 1);
+    }
+
+    #[test]
+    fn tc_on_k4_is_four() {
+        let mut b = GraphBuilder::new(4);
+        for u in 0..4u32 {
+            for v in (u + 1)..4 {
+                b.add_undirected(u, v, 1);
+            }
+        }
+        assert_eq!(triangle_count(&b.build()), 4);
+    }
+
+    #[test]
+    fn pagerank_sums_to_one_and_ranks_hub_highest() {
+        let mut b = GraphBuilder::new(5);
+        for v in 1..5u32 {
+            b.add_undirected(0, v, 1);
+        }
+        let g = b.build();
+        let pr = pagerank(&g, 1e-12, 0.85, 200);
+        let sum: f64 = pr.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-6, "sum {sum}");
+        assert!(pr[0] > pr[1]);
+    }
+
+    #[test]
+    fn bc_path_graph_middle_is_highest() {
+        // path 0-1-2: vertex 1 lies on the 0<->2 shortest path
+        let mut b = GraphBuilder::new(3);
+        b.add_undirected(0, 1, 1);
+        b.add_undirected(1, 2, 1);
+        let g = b.build();
+        let bc = betweenness(&g, &[0, 1, 2]);
+        assert!(bc[1] > bc[0] && bc[1] > bc[2]);
+        assert_eq!(bc[0], 0.0);
+        // From src=0: delta contribution to v=1 is 1 (one dependent vertex).
+        assert!((bc[1] - 2.0).abs() < 1e-12, "bc[1] = {}", bc[1]);
+    }
+
+    #[test]
+    fn cc_labels_components() {
+        let mut b = GraphBuilder::new(5);
+        b.add_undirected(0, 1, 1);
+        b.add_undirected(3, 4, 1);
+        let g = b.build();
+        let c = connected_components(&g);
+        assert_eq!(c, vec![0, 0, 2, 3, 3]);
+    }
+
+    #[test]
+    fn dijkstra_unreachable_is_inf() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1, 5);
+        let g = b.build();
+        let d = dijkstra(&g, 0);
+        assert_eq!(d[2], INF);
+    }
+
+    #[test]
+    fn oracles_deterministic_on_random_graph() {
+        let g = rmat("x", 128, 512, 3);
+        assert_eq!(triangle_count(&g), triangle_count(&g));
+        assert_eq!(dijkstra(&g, 0), dijkstra(&g, 0));
+    }
+}

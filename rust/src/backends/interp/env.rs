@@ -1,0 +1,425 @@
+//! Runtime state for the interpreter: property arrays (atomic, shared across
+//! worker threads) and host scalars.
+
+use crate::dsl::ast::{MinMax, ReduceOp, Type};
+use crate::graph::csr::{Graph, Node};
+use crate::sema::TypedFunction;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+
+/// A runtime scalar value.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Val {
+    I(i64),
+    F(f64),
+    B(bool),
+}
+
+/// The DSL's INF sentinel (safe for additive arithmetic).
+pub const INF_I: i64 = crate::algorithms::reference::INF as i64;
+
+impl Val {
+    pub fn as_i(&self) -> Result<i64> {
+        match self {
+            Val::I(v) => Ok(*v),
+            Val::F(v) => Ok(*v as i64),
+            Val::B(_) => bail!("expected a number, got bool"),
+        }
+    }
+    pub fn as_f(&self) -> Result<f64> {
+        match self {
+            Val::I(v) => Ok(*v as f64),
+            Val::F(v) => Ok(*v),
+            Val::B(_) => bail!("expected a number, got bool"),
+        }
+    }
+    pub fn as_b(&self) -> Result<bool> {
+        match self {
+            Val::B(b) => Ok(*b),
+            _ => bail!("expected a bool"),
+        }
+    }
+    pub fn zero_of(ty: &Type) -> Val {
+        match crate::ir::ScalarTy::of(ty) {
+            crate::ir::ScalarTy::F32 | crate::ir::ScalarTy::F64 => Val::F(0.0),
+            crate::ir::ScalarTy::Bool => Val::B(false),
+            _ => Val::I(0),
+        }
+    }
+}
+
+/// Shared property storage. Integer-family properties (int/long/node) live in
+/// `I`, float-family in `F` (as f64 bit patterns), bool in `B`.
+#[derive(Debug)]
+pub enum PropData {
+    I(Vec<AtomicI64>),
+    F(Vec<AtomicU64>),
+    B(Vec<AtomicBool>),
+}
+
+impl PropData {
+    pub fn alloc(ty: &Type, len: usize) -> PropData {
+        match crate::ir::ScalarTy::of(ty) {
+            crate::ir::ScalarTy::F32 | crate::ir::ScalarTy::F64 => {
+                PropData::F((0..len).map(|_| AtomicU64::new(0f64.to_bits())).collect())
+            }
+            crate::ir::ScalarTy::Bool => {
+                PropData::B((0..len).map(|_| AtomicBool::new(false)).collect())
+            }
+            _ => PropData::I((0..len).map(|_| AtomicI64::new(0)).collect()),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            PropData::I(v) => v.len(),
+            PropData::F(v) => v.len(),
+            PropData::B(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn load(&self, i: usize) -> Val {
+        match self {
+            PropData::I(v) => Val::I(v[i].load(Ordering::Relaxed)),
+            PropData::F(v) => Val::F(f64::from_bits(v[i].load(Ordering::Relaxed))),
+            PropData::B(v) => Val::B(v[i].load(Ordering::Relaxed)),
+        }
+    }
+
+    pub fn store(&self, i: usize, val: Val) {
+        match self {
+            PropData::I(v) => v[i].store(val.as_i().unwrap_or(0), Ordering::Relaxed),
+            PropData::F(v) => v[i].store(val.as_f().unwrap_or(0.0).to_bits(), Ordering::Relaxed),
+            PropData::B(v) => v[i].store(val.as_b().unwrap_or(false), Ordering::Relaxed),
+        }
+    }
+
+    /// Atomic reduction at index `i` (device semantics: atomicAdd & co).
+    pub fn atomic_reduce(&self, i: usize, op: ReduceOp, rhs: Val) {
+        match (self, op) {
+            (PropData::I(v), ReduceOp::Add | ReduceOp::Count) => {
+                v[i].fetch_add(rhs.as_i().unwrap_or(0), Ordering::Relaxed);
+            }
+            (PropData::I(v), ReduceOp::Mul) => {
+                // CAS loop (no fetch_mul)
+                let rhs = rhs.as_i().unwrap_or(1);
+                let mut cur = v[i].load(Ordering::Relaxed);
+                loop {
+                    match v[i].compare_exchange_weak(
+                        cur,
+                        cur.wrapping_mul(rhs),
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => break,
+                        Err(now) => cur = now,
+                    }
+                }
+            }
+            (PropData::F(v), ReduceOp::Add | ReduceOp::Count) => {
+                crate::util::atomics::atomic_add_f64(&v[i], rhs.as_f().unwrap_or(0.0));
+            }
+            (PropData::F(v), ReduceOp::Mul) => {
+                let rhs = rhs.as_f().unwrap_or(1.0);
+                let mut cur = v[i].load(Ordering::Relaxed);
+                loop {
+                    let new = (f64::from_bits(cur) * rhs).to_bits();
+                    match v[i].compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
+                    {
+                        Ok(_) => break,
+                        Err(now) => cur = now,
+                    }
+                }
+            }
+            (PropData::B(v), ReduceOp::And) => {
+                if !rhs.as_b().unwrap_or(true) {
+                    v[i].store(false, Ordering::Relaxed);
+                }
+            }
+            (PropData::B(v), ReduceOp::Or) => {
+                if rhs.as_b().unwrap_or(false) {
+                    v[i].store(true, Ordering::Relaxed);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Atomic Min/Max; returns true if the proposed value won (the paper's
+    /// Min construct updates its extra targets only on improvement).
+    pub fn atomic_min_max(&self, i: usize, proposed: Val, kind: MinMax) -> bool {
+        match self {
+            PropData::I(v) => {
+                let p = proposed.as_i().unwrap_or(0);
+                let mut cur = v[i].load(Ordering::Relaxed);
+                loop {
+                    let better = match kind {
+                        MinMax::Min => p < cur,
+                        MinMax::Max => p > cur,
+                    };
+                    if !better {
+                        return false;
+                    }
+                    match v[i].compare_exchange_weak(cur, p, Ordering::Relaxed, Ordering::Relaxed) {
+                        Ok(_) => return true,
+                        Err(now) => cur = now,
+                    }
+                }
+            }
+            PropData::F(v) => {
+                let p = proposed.as_f().unwrap_or(0.0);
+                let prev = match kind {
+                    MinMax::Min => crate::util::atomics::atomic_min_f64(&v[i], p),
+                    MinMax::Max => crate::util::atomics::atomic_max_f64(&v[i], p),
+                };
+                match kind {
+                    MinMax::Min => p < prev,
+                    MinMax::Max => p > prev,
+                }
+            }
+            PropData::B(_) => false,
+        }
+    }
+
+    /// OR over a bool property (fixedPoint convergence check).
+    pub fn any_true(&self) -> bool {
+        match self {
+            PropData::B(v) => v.iter().any(|b| b.load(Ordering::Relaxed)),
+            _ => false,
+        }
+    }
+
+    pub fn to_f64_vec(&self) -> Vec<f64> {
+        (0..self.len()).map(|i| self.load(i).as_f().unwrap_or(f64::NAN)).collect()
+    }
+    pub fn to_i64_vec(&self) -> Vec<i64> {
+        (0..self.len())
+            .map(|i| match self.load(i) {
+                Val::B(b) => b as i64,
+                v => v.as_i().unwrap_or(0),
+            })
+            .collect()
+    }
+}
+
+/// Host scalar cell — atomics so device reductions (e.g. `triangle_count +=`)
+/// work from worker threads.
+#[derive(Debug)]
+pub enum ScalarCell {
+    I(AtomicI64),
+    F(AtomicU64),
+    B(AtomicBool),
+}
+
+impl ScalarCell {
+    fn new(v: Val) -> ScalarCell {
+        match v {
+            Val::I(x) => ScalarCell::I(AtomicI64::new(x)),
+            Val::F(x) => ScalarCell::F(AtomicU64::new(x.to_bits())),
+            Val::B(x) => ScalarCell::B(AtomicBool::new(x)),
+        }
+    }
+    fn load(&self) -> Val {
+        match self {
+            ScalarCell::I(c) => Val::I(c.load(Ordering::Relaxed)),
+            ScalarCell::F(c) => Val::F(f64::from_bits(c.load(Ordering::Relaxed))),
+            ScalarCell::B(c) => Val::B(c.load(Ordering::Relaxed)),
+        }
+    }
+    fn store(&self, v: Val) -> Result<()> {
+        match (self, v) {
+            (ScalarCell::I(c), v) => c.store(v.as_i()?, Ordering::Relaxed),
+            (ScalarCell::F(c), v) => c.store(v.as_f()?.to_bits(), Ordering::Relaxed),
+            (ScalarCell::B(c), Val::B(b)) => c.store(b, Ordering::Relaxed),
+            (ScalarCell::B(_), _) => bail!("type mismatch storing into bool scalar"),
+        }
+        Ok(())
+    }
+}
+
+pub struct Env<'g> {
+    pub g: &'g Graph,
+    pub threads: usize,
+    props: HashMap<String, PropData>,
+    scalars: HashMap<String, ScalarCell>,
+    sets: HashMap<String, Vec<Node>>,
+}
+
+impl<'g> Env<'g> {
+    pub fn new(g: &'g Graph, tf: &TypedFunction, threads: usize) -> Result<Env<'g>> {
+        let mut props = HashMap::new();
+        for p in &tf.func.params {
+            match &p.ty {
+                Type::PropNode(_) => {
+                    props.insert(p.name.clone(), PropData::alloc(&p.ty, g.num_nodes()));
+                }
+                Type::PropEdge(_) => {
+                    // edge property parameters bind to the graph's weights
+                    let data = PropData::I(
+                        g.weights.iter().map(|&w| AtomicI64::new(w as i64)).collect(),
+                    );
+                    props.insert(p.name.clone(), data);
+                }
+                _ => {}
+            }
+        }
+        Ok(Env { g, threads, props, scalars: HashMap::new(), sets: HashMap::new() })
+    }
+
+    pub fn alloc_prop(&mut self, name: &str, ty: &Type) -> Result<()> {
+        let len = match ty {
+            Type::PropEdge(_) => self.g.num_edges(),
+            _ => self.g.num_nodes(),
+        };
+        self.props.insert(name.to_string(), PropData::alloc(ty, len));
+        Ok(())
+    }
+
+    pub fn is_prop(&self, name: &str) -> bool {
+        self.props.contains_key(name)
+    }
+
+    pub fn prop(&self, name: &str) -> Result<&PropData> {
+        self.props.get(name).ok_or_else(|| anyhow!("unknown property `{name}`"))
+    }
+
+    pub fn copy_prop(&mut self, dst: &str, src: &str) -> Result<()> {
+        let n = self.prop(src)?.len();
+        for i in 0..n {
+            let v = self.prop(src)?.load(i);
+            self.prop(dst)?.store(i, v);
+        }
+        Ok(())
+    }
+
+    pub fn declare_scalar(&mut self, name: &str, v: Val) {
+        self.scalars.insert(name.to_string(), ScalarCell::new(v));
+    }
+
+    pub fn set_scalar(&mut self, name: &str, v: Val) {
+        match self.scalars.get(name) {
+            Some(cell) => {
+                if cell.store(v).is_err() {
+                    self.scalars.insert(name.to_string(), ScalarCell::new(v));
+                }
+            }
+            None => self.declare_scalar(name, v),
+        }
+    }
+
+    pub fn scalar(&self, name: &str) -> Result<Val> {
+        self.scalars
+            .get(name)
+            .map(|c| c.load())
+            .ok_or_else(|| anyhow!("unknown scalar `{name}`"))
+    }
+
+    /// Shared scalar store from a device thread.
+    pub fn scalar_store(&self, name: &str, v: Val) -> Result<()> {
+        self.scalars
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown scalar `{name}`"))?
+            .store(v)
+    }
+
+    /// Shared scalar reduction from a device thread (atomicAdd-style).
+    pub fn scalar_reduce(&self, name: &str, op: ReduceOp, rhs: Val) -> Result<()> {
+        let cell =
+            self.scalars.get(name).ok_or_else(|| anyhow!("unknown scalar `{name}`"))?;
+        match (cell, op) {
+            (ScalarCell::I(c), ReduceOp::Add | ReduceOp::Count) => {
+                c.fetch_add(rhs.as_i()?, Ordering::Relaxed);
+            }
+            (ScalarCell::F(c), ReduceOp::Add | ReduceOp::Count) => {
+                crate::util::atomics::atomic_add_f64(c, rhs.as_f()?);
+            }
+            (ScalarCell::I(c), ReduceOp::Mul) => {
+                let r = rhs.as_i()?;
+                let mut cur = c.load(Ordering::Relaxed);
+                loop {
+                    match c.compare_exchange_weak(
+                        cur,
+                        cur.wrapping_mul(r),
+                        Ordering::Relaxed,
+                        Ordering::Relaxed,
+                    ) {
+                        Ok(_) => break,
+                        Err(now) => cur = now,
+                    }
+                }
+            }
+            (ScalarCell::F(c), ReduceOp::Mul) => {
+                let r = rhs.as_f()?;
+                let mut cur = c.load(Ordering::Relaxed);
+                loop {
+                    let new = (f64::from_bits(cur) * r).to_bits();
+                    match c.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                        Ok(_) => break,
+                        Err(now) => cur = now,
+                    }
+                }
+            }
+            (ScalarCell::B(c), ReduceOp::Or) => {
+                if rhs.as_b()? {
+                    c.store(true, Ordering::Relaxed);
+                }
+            }
+            (ScalarCell::B(c), ReduceOp::And) => {
+                if !rhs.as_b()? {
+                    c.store(false, Ordering::Relaxed);
+                }
+            }
+            _ => bail!("unsupported scalar reduction {op:?}"),
+        }
+        Ok(())
+    }
+
+    pub fn bind_set(&mut self, name: &str, vs: Vec<Node>) {
+        self.sets.insert(name.to_string(), vs);
+    }
+
+    pub fn set_items(&self, name: &str) -> Result<Vec<Node>> {
+        self.sets.get(name).cloned().ok_or_else(|| anyhow!("unknown set `{name}`"))
+    }
+
+    pub fn take_props(&mut self) -> HashMap<String, PropData> {
+        std::mem::take(&mut self.props)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prop_reduce_and_minmax() {
+        let p = PropData::alloc(&Type::PropNode(Box::new(Type::Int)), 4);
+        p.store(0, Val::I(10));
+        p.atomic_reduce(0, ReduceOp::Add, Val::I(5));
+        assert_eq!(p.load(0), Val::I(15));
+        assert!(p.atomic_min_max(0, Val::I(3), MinMax::Min));
+        assert!(!p.atomic_min_max(0, Val::I(100), MinMax::Min));
+        assert_eq!(p.load(0), Val::I(3));
+    }
+
+    #[test]
+    fn bool_prop_or_flag() {
+        let p = PropData::alloc(&Type::PropNode(Box::new(Type::Bool)), 3);
+        assert!(!p.any_true());
+        p.store(2, Val::B(true));
+        assert!(p.any_true());
+    }
+
+    #[test]
+    fn float_prop_f64_roundtrip() {
+        let p = PropData::alloc(&Type::PropNode(Box::new(Type::Float)), 2);
+        p.store(1, Val::F(0.25));
+        assert_eq!(p.load(1), Val::F(0.25));
+        p.atomic_reduce(1, ReduceOp::Add, Val::F(0.5));
+        assert_eq!(p.load(1), Val::F(0.75));
+    }
+}

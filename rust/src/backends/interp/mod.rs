@@ -1,0 +1,536 @@
+//! CPU interpreter backend: executes the typed DSL AST directly over CSR.
+//!
+//! Plays two roles from the paper's evaluation:
+//! - **Seq** mode = the single-thread CPU rows (the OpenACC-on-Intel-CPU
+//!   analog in Table 4);
+//! - **Par** mode = the multicore rows (SYCL-on-Intel-CPU analog): vertex
+//!   loops fan out over the thread pool and all shared mutation goes through
+//!   the same atomic idioms the generated GPU code uses (`atomicMin`,
+//!   `atomicAdd`, OR-flags).
+//!
+//! Semantics notes (matching §2/§3 of the paper):
+//! - `x.p = x.p + e` inside a parallel region is executed as an atomic
+//!   reduction (StarPlat emits `atomicAdd` for this idiom);
+//! - inside `iterateInBFS` / `iterateInReverse`, `g.neighbors(v)` yields the
+//!   BFS-DAG children of `v` (level(w) == level(v)+1);
+//! - `fixedPoint until (fin : !prop)` loops until no vertex has `prop` set.
+
+pub mod env;
+pub mod eval;
+
+use crate::dsl::ast::*;
+use crate::graph::csr::{Graph, Node};
+use crate::sema::TypedFunction;
+use anyhow::{anyhow, bail, Result};
+use env::{Env, PropData, Val};
+use eval::{eval, EvalCtx};
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Mode {
+    Seq,
+    Par,
+}
+
+/// External argument bindings for a DSL function invocation.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub scalars: std::collections::HashMap<String, Val>,
+    pub sets: std::collections::HashMap<String, Vec<Node>>,
+}
+
+impl Args {
+    pub fn scalar(mut self, name: &str, v: Val) -> Self {
+        self.scalars.insert(name.to_string(), v);
+        self
+    }
+    pub fn node(self, name: &str, v: Node) -> Self {
+        self.scalar(name, Val::I(v as i64))
+    }
+    pub fn set(mut self, name: &str, vs: Vec<Node>) -> Self {
+        self.sets.insert(name.to_string(), vs);
+        self
+    }
+}
+
+/// Execution result: output properties + optional scalar return.
+#[derive(Debug)]
+pub struct Output {
+    pub props: std::collections::HashMap<String, PropData>,
+    pub ret: Option<Val>,
+}
+
+impl Output {
+    pub fn prop_f64(&self, name: &str) -> Vec<f64> {
+        self.props.get(name).map(|p| p.to_f64_vec()).unwrap_or_default()
+    }
+    pub fn prop_i64(&self, name: &str) -> Vec<i64> {
+        self.props.get(name).map(|p| p.to_i64_vec()).unwrap_or_default()
+    }
+}
+
+/// Run a type-checked DSL function on a graph.
+pub fn run(tf: &TypedFunction, g: &Graph, args: &Args, mode: Mode) -> Result<Output> {
+    let threads = match mode {
+        Mode::Seq => 1,
+        Mode::Par => crate::util::pool::default_threads(),
+    };
+    let mut env = Env::new(g, tf, threads)?;
+    // bind scalar / set params
+    for p in &tf.func.params {
+        match &p.ty {
+            Type::Graph => {}
+            Type::PropNode(_) | Type::PropEdge(_) => {} // allocated by Env::new
+            Type::SetN(_) => {
+                let vs = args
+                    .sets
+                    .get(&p.name)
+                    .ok_or_else(|| anyhow!("missing SetN argument `{}`", p.name))?;
+                env.bind_set(&p.name, vs.clone());
+            }
+            _ => {
+                let v = args
+                    .scalars
+                    .get(&p.name)
+                    .ok_or_else(|| anyhow!("missing scalar argument `{}`", p.name))?;
+                env.set_scalar(&p.name, coerce(*v, &p.ty)?);
+            }
+        }
+    }
+    let mut interp = Interp { env, ret: None };
+    interp.exec_block(&tf.func.body)?;
+    Ok(Output { props: interp.env.take_props(), ret: interp.ret })
+}
+
+/// Coerce a value to a declared scalar type (C-style): `float x = g.num_nodes()`
+/// must produce a float cell so later divisions stay floating-point.
+fn coerce(v: Val, ty: &Type) -> Result<Val> {
+    Ok(match crate::ir::ScalarTy::of(ty) {
+        crate::ir::ScalarTy::F32 | crate::ir::ScalarTy::F64 => Val::F(v.as_f()?),
+        crate::ir::ScalarTy::Bool => v, // type checker guarantees bool
+        _ => match v {
+            Val::B(_) => v,
+            _ => Val::I(v.as_i()?),
+        },
+    })
+}
+
+struct Interp<'g> {
+    env: Env<'g>,
+    ret: Option<Val>,
+}
+
+impl<'g> Interp<'g> {
+    /// Host-context (sequential) execution.
+    fn exec_block(&mut self, b: &[Stmt]) -> Result<()> {
+        for s in b {
+            if self.ret.is_some() {
+                return Ok(());
+            }
+            self.exec_stmt(s)?;
+        }
+        Ok(())
+    }
+
+    fn exec_stmt(&mut self, s: &Stmt) -> Result<()> {
+        match s {
+            Stmt::Decl { ty, name, init, .. } => {
+                if ty.is_prop() {
+                    self.env.alloc_prop(name, ty)?;
+                } else {
+                    let v = match init {
+                        Some(e) => coerce(self.host_eval(e)?, ty)?,
+                        None => Val::zero_of(ty),
+                    };
+                    self.env.declare_scalar(name, v);
+                }
+                Ok(())
+            }
+            Stmt::Assign { target, value, .. } => match target {
+                LValue::Var(v) if self.env.is_prop(v) => {
+                    // whole-property copy
+                    let Expr::Var(src) = value else { bail!("property copy needs a property rhs") };
+                    self.env.copy_prop(v, src)
+                }
+                LValue::Var(v) => {
+                    let val = self.host_eval(value)?;
+                    self.env.set_scalar(v, val);
+                    Ok(())
+                }
+                LValue::Prop { obj, prop } => {
+                    // e.g. `src.sigma = 1;` on the host
+                    let idx = self.env.scalar(obj)?.as_i()? as usize;
+                    let val = self.host_eval(value)?;
+                    self.env.prop(prop)?.store(idx, val);
+                    Ok(())
+                }
+            },
+            Stmt::Reduce { target, op, value, .. } => {
+                let LValue::Var(v) = target else { bail!("host reduction target must be scalar") };
+                let cur = self.env.scalar(v)?;
+                let rhs = self.host_eval(value)?;
+                self.env.set_scalar(v, eval::apply_reduce(*op, cur, rhs)?);
+                Ok(())
+            }
+            Stmt::AttachNodeProperty { inits, .. } => {
+                let n = self.env.g.num_nodes();
+                for (prop, e) in inits {
+                    let v = self.host_eval(e)?;
+                    let arr = self.env.prop(prop)?;
+                    let threads = self.env.threads;
+                    crate::util::pool::parallel_for(arr.len().max(n), threads, |i| {
+                        arr.store(i, v);
+                    });
+                }
+                Ok(())
+            }
+            Stmt::For { iter, body, parallel, .. } => self.exec_for(iter, body, *parallel),
+            Stmt::IterateBFS { var, from, body, reverse, .. } => {
+                self.exec_bfs(var, from, body, reverse.as_ref())
+            }
+            Stmt::FixedPoint { var, cond, body, .. } => {
+                let prop = crate::ir::or_flag_prop(cond)
+                    .ok_or_else(|| anyhow!("unsupported fixedPoint condition form"))?;
+                self.env.set_scalar(var, Val::B(false));
+                let max_iters = 4 * self.env.g.num_nodes() + 16;
+                for _ in 0..max_iters {
+                    self.exec_block(body)?;
+                    // finished when no vertex has `prop` set (logical-OR flag)
+                    if !self.env.prop(&prop)?.any_true() {
+                        self.env.set_scalar(var, Val::B(true));
+                        return Ok(());
+                    }
+                }
+                bail!("fixedPoint did not converge after {max_iters} iterations")
+            }
+            Stmt::DoWhile { body, cond, .. } => {
+                loop {
+                    self.exec_block(body)?;
+                    if self.ret.is_some() || !self.host_eval(cond)?.as_b()? {
+                        return Ok(());
+                    }
+                }
+            }
+            Stmt::While { cond, body, .. } => {
+                while self.host_eval(cond)?.as_b()? {
+                    self.exec_block(body)?;
+                    if self.ret.is_some() {
+                        return Ok(());
+                    }
+                }
+                Ok(())
+            }
+            Stmt::If { cond, then, els, .. } => {
+                if self.host_eval(cond)?.as_b()? {
+                    self.exec_block(then)
+                } else if let Some(e) = els {
+                    self.exec_block(e)
+                } else {
+                    Ok(())
+                }
+            }
+            Stmt::Return { value, .. } => {
+                self.ret = Some(self.host_eval(value)?);
+                Ok(())
+            }
+            Stmt::MinMaxAssign { .. } => bail!("Min/Max construct outside a parallel loop"),
+        }
+    }
+
+    fn host_eval(&self, e: &Expr) -> Result<Val> {
+        let ctx = EvalCtx::host(&self.env);
+        eval(e, &ctx)
+    }
+
+    /// Sequential `for` at host level iterates sets or nodes; parallel
+    /// `forall` becomes a vertex-parallel kernel.
+    fn exec_for(&mut self, iter: &Iterator_, body: &[Stmt], parallel: bool) -> Result<()> {
+        let domain: Vec<Node> = match &iter.source {
+            IterSource::Nodes { .. } => (0..self.env.g.num_nodes() as Node).collect(),
+            IterSource::Set { set } => self.env.set_items(set)?,
+            IterSource::Neighbors { of, .. } => {
+                let v = self.env.scalar(of)?.as_i()? as Node;
+                self.env.g.neighbors(v).to_vec()
+            }
+            IterSource::NodesTo { of, .. } => {
+                let v = self.env.scalar(of)?.as_i()? as Node;
+                self.env.g.in_neighbors(v).to_vec()
+            }
+        };
+        if !parallel {
+            // host-sequential loop (e.g. `for (src in sourceSet)`)
+            for v in domain {
+                self.env.declare_scalar(&iter.var, Val::I(v as i64));
+                if let Some(f) = &iter.filter {
+                    let ctx = EvalCtx::host(&self.env).with_element(&iter.var, v);
+                    if !eval(f, &ctx)?.as_b()? {
+                        continue;
+                    }
+                }
+                self.exec_block(body)?;
+            }
+            return Ok(());
+        }
+        // device kernel: vertex-parallel over the domain
+        let env = &self.env;
+        let threads = env.threads;
+        let err = std::sync::Mutex::new(None::<anyhow::Error>);
+        let filter = iter.filter.as_ref();
+        crate::util::pool::parallel_for_dynamic(domain.len(), threads, 64, |i| {
+            let v = domain[i];
+            let ctx = EvalCtx::device(env).with_element(&iter.var, v);
+            let r = (|| -> Result<()> {
+                if let Some(f) = filter {
+                    if !eval(f, &ctx)?.as_b()? {
+                        return Ok(());
+                    }
+                }
+                exec_device_block(env, body, &ctx)
+            })();
+            if let Err(e) = r {
+                *err.lock().unwrap() = Some(e);
+            }
+        });
+        match err.into_inner().unwrap() {
+            Some(e) => Err(e),
+            None => Ok(()),
+        }
+    }
+
+    /// `iterateInBFS … iterateInReverse` (paper §3.4): level-synchronous
+    /// sweeps with DAG-children neighbor semantics.
+    fn exec_bfs(
+        &mut self,
+        var: &str,
+        from: &str,
+        body: &[Stmt],
+        reverse: Option<&(Expr, Block)>,
+    ) -> Result<()> {
+        let src = self.env.scalar(from)?.as_i()? as Node;
+        let levels = crate::algorithms::reference::bfs_levels(self.env.g, src);
+        let maxl = levels
+            .iter()
+            .filter(|&&l| l != crate::algorithms::reference::INF)
+            .copied()
+            .max()
+            .unwrap_or(0);
+        // bucket vertices by level
+        let mut by_level: Vec<Vec<Node>> = vec![Vec::new(); (maxl + 1) as usize];
+        for (v, &l) in levels.iter().enumerate() {
+            if l != crate::algorithms::reference::INF {
+                by_level[l as usize].push(v as Node);
+            }
+        }
+        let env = &self.env;
+        let threads = env.threads;
+        // forward sweep
+        for frontier in &by_level {
+            let err = std::sync::Mutex::new(None::<anyhow::Error>);
+            crate::util::pool::parallel_for(frontier.len(), threads, |i| {
+                let v = frontier[i];
+                let ctx = EvalCtx::device(env).with_element(var, v).with_bfs(&levels, true);
+                if let Err(e) = exec_device_block(env, body, &ctx) {
+                    *err.lock().unwrap() = Some(e);
+                }
+            });
+            if let Some(e) = err.into_inner().unwrap() {
+                return Err(e);
+            }
+        }
+        // reverse sweep
+        if let Some((cond, rbody)) = reverse {
+            for frontier in by_level.iter().rev() {
+                let err = std::sync::Mutex::new(None::<anyhow::Error>);
+                crate::util::pool::parallel_for(frontier.len(), threads, |i| {
+                    let v = frontier[i];
+                    let ctx = EvalCtx::device(env).with_element(var, v).with_bfs(&levels, true);
+                    let r = (|| -> Result<()> {
+                        if !eval(cond, &ctx)?.as_b()? {
+                            return Ok(());
+                        }
+                        exec_device_block(env, rbody, &ctx)
+                    })();
+                    if let Err(e) = r {
+                        *err.lock().unwrap() = Some(e);
+                    }
+                });
+                if let Some(e) = err.into_inner().unwrap() {
+                    return Err(e);
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Execute a kernel body for one element (thread context). All shared
+/// mutation is atomic; local declarations live in the per-thread `ctx`.
+fn exec_device_block(env: &Env<'_>, body: &[Stmt], ctx: &EvalCtx<'_, '_>) -> Result<()> {
+    let mut ctx = ctx.child();
+    for s in body {
+        exec_device_stmt(env, s, &mut ctx)?;
+    }
+    Ok(())
+}
+
+fn exec_device_stmt(env: &Env<'_>, s: &Stmt, ctx: &mut EvalCtx<'_, '_>) -> Result<()> {
+    match s {
+        Stmt::Decl { ty, name, init, .. } => {
+            let v = match init {
+                Some(e) => coerce(eval(e, ctx)?, ty)?,
+                None => Val::zero_of(ty),
+            };
+            ctx.declare_local(name, v);
+            Ok(())
+        }
+        Stmt::Assign { target, value, .. } => {
+            // read-modify-write on shared state becomes an atomic reduction
+            if let Some((t, op, rhs)) = crate::ir::analyze::as_reduction(target, value) {
+                if matches!(&t, LValue::Prop { .. }) {
+                    return device_reduce(env, &t, op, &rhs, ctx);
+                }
+            }
+            match target {
+                LValue::Var(v) => {
+                    let val = eval(value, ctx)?;
+                    if ctx.has_local(v) {
+                        ctx.set_local(v, val);
+                    } else {
+                        // scalar shared write (rare; e.g. flags) — atomic store
+                        env.scalar_store(v, val)?;
+                    }
+                    Ok(())
+                }
+                LValue::Prop { obj, prop } => {
+                    let idx = ctx.element(obj)?;
+                    let val = eval(value, ctx)?;
+                    env.prop(prop)?.store(idx as usize, val);
+                    Ok(())
+                }
+            }
+        }
+        Stmt::Reduce { target, op, value, .. } => device_reduce(env, target, *op, value, ctx),
+        Stmt::MinMaxAssign { kind, target, compare, extra, .. } => {
+            let LValue::Prop { obj, prop } = target else {
+                bail!("Min/Max target must be a property")
+            };
+            let idx = ctx.element(obj)? as usize;
+            let proposed = eval(compare, ctx)?;
+            let improved = env.prop(prop)?.atomic_min_max(idx, proposed, *kind);
+            if improved {
+                for (t, v) in extra {
+                    let val = eval(v, ctx)?;
+                    match t {
+                        LValue::Prop { obj, prop } => {
+                            let i = ctx.element(obj)? as usize;
+                            env.prop(prop)?.store(i, val);
+                        }
+                        LValue::Var(name) => env.scalar_store(name, val)?,
+                    }
+                }
+            }
+            Ok(())
+        }
+        Stmt::For { iter, body, .. } => {
+            // nested loops run sequentially within the thread (same-kernel
+            // folding, as the paper's generated code does)
+            let (domain, edge_base): (Vec<Node>, Option<usize>) = match &iter.source {
+                IterSource::Neighbors { of, .. } => {
+                    let v = ctx.element(of)? as Node;
+                    if ctx.bfs_dag() {
+                        // BFS context: DAG children only
+                        let levels = ctx.levels().unwrap();
+                        let kids: Vec<Node> = env
+                            .g
+                            .neighbors(v)
+                            .iter()
+                            .copied()
+                            .filter(|&w| levels[w as usize] == levels[v as usize] + 1)
+                            .collect();
+                        (kids, None)
+                    } else {
+                        (env.g.neighbors(v).to_vec(), Some(env.g.offsets[v as usize] as usize))
+                    }
+                }
+                IterSource::NodesTo { of, .. } => {
+                    let v = ctx.element(of)? as Node;
+                    (env.g.in_neighbors(v).to_vec(), None)
+                }
+                IterSource::Nodes { .. } => ((0..env.g.num_nodes() as Node).collect(), None),
+                IterSource::Set { set } => (env.set_items(set)?, None),
+            };
+            // Mutate the context in place (save/restore the loop bindings)
+            // so writes to enclosing locals — e.g. PageRank's `sum`
+            // accumulator — are visible outside each iteration.
+            let saved = ctx.save_loop_state(&iter.var);
+            let mut result = Ok(());
+            for (k, w) in domain.iter().enumerate() {
+                ctx.bind_element(&iter.var, *w);
+                // current edge id for `g.get_edge(v, w)` in this iteration
+                if let Some(base) = edge_base {
+                    // adj is sorted; k-th neighbor = k-th out-edge
+                    ctx.set_current_edge(base + k);
+                }
+                if let Some(f) = &iter.filter {
+                    match eval(f, ctx) {
+                        Ok(v) if !v.as_b()? => continue,
+                        Ok(_) => {}
+                        Err(e) => {
+                            result = Err(e);
+                            break;
+                        }
+                    }
+                }
+                for st in body {
+                    if let Err(e) = exec_device_stmt(env, st, ctx) {
+                        result = Err(e);
+                        break;
+                    }
+                }
+                if result.is_err() {
+                    break;
+                }
+            }
+            ctx.restore_loop_state(&iter.var, saved);
+            result
+        }
+        Stmt::If { cond, then, els, .. } => {
+            if eval(cond, ctx)?.as_b()? {
+                for st in then {
+                    exec_device_stmt(env, st, ctx)?;
+                }
+            } else if let Some(e) = els {
+                for st in e {
+                    exec_device_stmt(env, st, ctx)?;
+                }
+            }
+            Ok(())
+        }
+        other => bail!("statement not allowed inside a parallel region: {other:?}"),
+    }
+}
+
+fn device_reduce(
+    env: &Env<'_>,
+    target: &LValue,
+    op: ReduceOp,
+    value: &Expr,
+    ctx: &mut EvalCtx<'_, '_>,
+) -> Result<()> {
+    let rhs = eval(value, ctx)?;
+    match target {
+        LValue::Var(v) => {
+            if ctx.has_local(v) {
+                let cur = ctx.local(v)?;
+                ctx.set_local(v, eval::apply_reduce(op, cur, rhs)?);
+            } else {
+                env.scalar_reduce(v, op, rhs)?;
+            }
+            Ok(())
+        }
+        LValue::Prop { obj, prop } => {
+            let idx = ctx.element(obj)? as usize;
+            env.prop(prop)?.atomic_reduce(idx, op, rhs);
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,5 @@
+//! Execution backends: the CPU interpreter (Seq/Par) and the XLA/PJRT
+//! accelerator driver.
+
+pub mod interp;
+pub mod xla;

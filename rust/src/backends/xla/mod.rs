@@ -1,0 +1,363 @@
+//! XLA backend: the accelerator execution path.
+//!
+//! Interprets the host plans the DSL compiler emits (fixedPoint / do-while /
+//! BFS loop skeletons — paper Figs 9 & 12) against AOT-compiled HLO step
+//! artifacts, with the graph packed into padded ELL tiles (DESIGN.md §2).
+//!
+//! Two execution strategies, toggled by [`Transfer`]:
+//! - `LiteralRoundtrip` — naive: state crosses host↔device every iteration
+//!   (the un-optimized strawman of the paper's §4);
+//! - `DeviceResident` — state stays in PJRT buffers across iterations, only
+//!   the finished/diff scalar is read back (the §4.1 optimization; default).
+
+use crate::graph::csr::{Graph, Node};
+use crate::graph::ell::EllGraph;
+use crate::runtime::{self, Runtime};
+use anyhow::{bail, Result};
+
+/// Row/width padding must match python/compile/aot.py's shape grid
+/// (BLOCK_ROWS in kernels/ell.py).
+pub const ROW_PAD: usize = 256;
+pub const WIDTH_PAD: usize = 8;
+
+/// INF matching `reference::INF` and kernels/ref.py.
+pub const INF: i32 = i32::MAX / 2;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Transfer {
+    LiteralRoundtrip,
+    DeviceResident,
+}
+
+pub struct XlaBackend {
+    pub rt: Runtime,
+    pub transfer: Transfer,
+}
+
+impl XlaBackend {
+    pub fn open(artifact_dir: &std::path::Path) -> Result<XlaBackend> {
+        Ok(XlaBackend { rt: Runtime::open(artifact_dir)?, transfer: Transfer::DeviceResident })
+    }
+
+    /// Pack the pull-direction ELL arrays as literals.
+    fn ell_in(&self, g: &Graph, n_pad: usize, width: usize) -> Result<[xla::Literal; 3]> {
+        let e = EllGraph::from_csr_in(g, ROW_PAD, WIDTH_PAD);
+        if e.n_pad != n_pad || e.width != width {
+            bail!(
+                "ELL shape mismatch: packed ({}, {}) vs artifact ({}, {}) — regenerate artifacts",
+                e.n_pad,
+                e.width,
+                n_pad,
+                width
+            );
+        }
+        let idx: Vec<i32> = e.idx.iter().map(|&x| x as i32).collect();
+        Ok([
+            runtime::lit_i32_2d(&idx, e.n_pad, e.width)?,
+            runtime::lit_i32_2d(&e.wgt, e.n_pad, e.width)?,
+            runtime::lit_f32_2d(&e.mask, e.n_pad, e.width)?,
+        ])
+    }
+
+    fn ell_out(&self, g: &Graph, n_pad: usize, width: usize) -> Result<[xla::Literal; 3]> {
+        let e = EllGraph::from_csr_out(g, ROW_PAD, WIDTH_PAD);
+        if e.n_pad != n_pad || e.width != width {
+            bail!("out-ELL shape mismatch ({}, {}) vs ({}, {})", e.n_pad, e.width, n_pad, width);
+        }
+        let idx: Vec<i32> = e.idx.iter().map(|&x| x as i32).collect();
+        Ok([
+            runtime::lit_i32_2d(&idx, e.n_pad, e.width)?,
+            runtime::lit_i32_2d(&e.wgt, e.n_pad, e.width)?,
+            runtime::lit_f32_2d(&e.mask, e.n_pad, e.width)?,
+        ])
+    }
+
+    /// fixedPoint-relax host plan (SSSP; also CC/BFS with derived inits).
+    pub fn run_sssp(&self, short: &str, g: &Graph, src: Node) -> Result<Vec<i32>> {
+        let info = self.rt.info("sssp", short)?;
+        let exe = self.rt.executable("sssp", short)?;
+        let [idx, wgt, mask] = self.ell_in(g, info.n_pad, info.width)?;
+        let mut dist = vec![INF; info.n_pad];
+        dist[src as usize] = 0;
+        let max_iters = g.num_nodes() + 2;
+        match self.transfer {
+            Transfer::LiteralRoundtrip => {
+                let mut dist_lit = runtime::lit_i32_1d(&dist);
+                for _ in 0..max_iters {
+                    let out =
+                        self.rt.execute(&exe, &[dist_lit, idx.clone(), wgt.clone(), mask.clone()])?;
+                    let finished = runtime::scalar_to_i32(&out[1])?;
+                    dist_lit = out.into_iter().next().unwrap();
+                    if finished == 1 {
+                        break;
+                    }
+                }
+                let mut v = runtime::to_vec_i32(&dist_lit)?;
+                v.truncate(g.num_nodes());
+                Ok(v)
+            }
+            Transfer::DeviceResident => {
+                // §4.1: the static graph tiles (the big arrays) are uploaded
+                // once and stay device-resident; only the small state vector
+                // and the OR-flag word cross per iteration (Fig 12). PJRT
+                // returns one tuple buffer per execution, so the state comes
+                // back through the tuple literal.
+                let idx_b = self.rt.buffer_from_literal(&idx)?;
+                let wgt_b = self.rt.buffer_from_literal(&wgt)?;
+                let mask_b = self.rt.buffer_from_literal(&mask)?;
+                let mut dist_lit = runtime::lit_i32_1d(&dist);
+                for _ in 0..max_iters {
+                    let dist_buf = self.rt.buffer_from_literal(&dist_lit)?;
+                    let out =
+                        self.rt.execute_buffers(&exe, &[&dist_buf, &idx_b, &wgt_b, &mask_b])?;
+                    let mut tuple = out
+                        .into_iter()
+                        .next()
+                        .ok_or_else(|| anyhow::anyhow!("no output buffer"))?
+                        .to_literal_sync()
+                        .map_err(|e| anyhow::anyhow!("{e:?}"))?
+                        .to_tuple()
+                        .map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                    let fin = tuple.pop().ok_or_else(|| anyhow::anyhow!("missing flag"))?;
+                    dist_lit = tuple.pop().ok_or_else(|| anyhow::anyhow!("missing state"))?;
+                    if runtime::scalar_to_i32(&fin)? == 1 {
+                        break;
+                    }
+                }
+                let mut v = runtime::to_vec_i32(&dist_lit)?;
+                v.truncate(g.num_nodes());
+                Ok(v)
+            }
+        }
+    }
+
+    /// do-while-rank host plan (PageRank).
+    pub fn run_pr(
+        &self,
+        short: &str,
+        g: &Graph,
+        beta: f32,
+        damping: f32,
+        max_iter: usize,
+    ) -> Result<Vec<f32>> {
+        let info = self.rt.info("pr", short)?;
+        let exe = self.rt.executable("pr", short)?;
+        let [idx, _wgt, mask] = self.ell_in(g, info.n_pad, info.width)?;
+        let outdeg = EllGraph::out_degrees(g, info.n_pad);
+        let n = g.num_nodes();
+        let mut pr = vec![0f32; info.n_pad];
+        pr[..n].fill(1.0 / n as f32);
+        let mut pr_lit = runtime::lit_f32_1d(&pr);
+        let outdeg_lit = runtime::lit_f32_1d(&outdeg);
+        let delta_lit = runtime::scalar_f32(damping);
+        let nn_lit = runtime::scalar_f32(n as f32);
+        for _ in 0..max_iter {
+            let out = self.rt.execute(
+                &exe,
+                &[
+                    pr_lit,
+                    idx.clone(),
+                    mask.clone(),
+                    outdeg_lit.clone_literal()?,
+                    delta_lit.clone_literal()?,
+                    nn_lit.clone_literal()?,
+                ],
+            )?;
+            let diff = runtime::scalar_to_f32(&out[1])?;
+            pr_lit = out.into_iter().next().unwrap();
+            if diff <= beta {
+                break;
+            }
+        }
+        let mut v = runtime::to_vec_f32(&pr_lit)?;
+        v.truncate(n);
+        Ok(v)
+    }
+
+    /// BFS-fwd-rev host plan (Brandes BC over a source set).
+    pub fn run_bc(&self, short: &str, g: &Graph, sources: &[Node]) -> Result<Vec<f32>> {
+        let fwd_info = self.rt.info("bc_fwd", short)?;
+        let fwd = self.rt.executable("bc_fwd", short)?;
+        let bwd = self.rt.executable("bc_bwd", short)?;
+        let [idx_in, _w1, mask_in] = self.ell_in(g, fwd_info.n_pad, fwd_info.width)?;
+        let [idx_out, _w2, mask_out] = self.ell_out(g, fwd_info.n_pad, fwd_info.width)?;
+        let n_pad = fwd_info.n_pad;
+        let n = g.num_nodes();
+        let mut bc = vec![0f32; n_pad];
+        for &src in sources {
+            // forward: host loop over levels (Fig 9)
+            let mut level = vec![-1i32; n_pad];
+            let mut sigma = vec![0f32; n_pad];
+            level[src as usize] = 0;
+            sigma[src as usize] = 1.0;
+            let mut level_lit = runtime::lit_i32_1d(&level);
+            let mut sigma_lit = runtime::lit_f32_1d(&sigma);
+            let mut depth = 0i32;
+            loop {
+                let out = self.rt.execute(
+                    &fwd,
+                    &[
+                        level_lit,
+                        sigma_lit,
+                        runtime::scalar_i32(depth),
+                        idx_in.clone(),
+                        mask_in.clone(),
+                    ],
+                )?;
+                let finished = runtime::scalar_to_i32(&out[2])?;
+                let mut it = out.into_iter();
+                level_lit = it.next().unwrap();
+                sigma_lit = it.next().unwrap();
+                if finished == 1 {
+                    break;
+                }
+                depth += 1;
+                if depth as usize > n + 1 {
+                    bail!("BC forward failed to terminate");
+                }
+            }
+            // backward: iterateInReverse — walk the levels backwards
+            let mut delta_lit = runtime::lit_f32_1d(&vec![0f32; n_pad]);
+            let mut bc_lit = runtime::lit_f32_1d(&bc);
+            for d in (0..=depth).rev() {
+                let out = self.rt.execute(
+                    &bwd,
+                    &[
+                        level_lit.clone_literal()?,
+                        sigma_lit.clone_literal()?,
+                        delta_lit,
+                        bc_lit,
+                        runtime::scalar_i32(d),
+                        runtime::scalar_i32(src as i32),
+                        idx_out.clone(),
+                        mask_out.clone(),
+                    ],
+                )?;
+                let mut it = out.into_iter();
+                delta_lit = it.next().unwrap();
+                bc_lit = it.next().unwrap();
+            }
+            bc = runtime::to_vec_f32(&bc_lit)?;
+        }
+        bc.truncate(n);
+        Ok(bc)
+    }
+
+    /// dense-matmul-count host plan (TC).
+    pub fn run_tc(&self, short: &str, g: &Graph) -> Result<u64> {
+        let info = self.rt.info("tc", short)?;
+        let exe = self.rt.executable("tc", short)?;
+        let nd = info.n_dense;
+        let mut adj = vec![0f32; nd * nd];
+        for u in 0..g.num_nodes() as Node {
+            for &w in g.neighbors(u) {
+                adj[u as usize * nd + w as usize] = 1.0;
+            }
+        }
+        let adj_lit = runtime::lit_f32_2d(&adj, nd, nd)?;
+        let out = self.rt.execute(&exe, &[adj_lit])?;
+        let t = runtime::scalar_to_f32(&out[0])?;
+        Ok(t.round() as u64)
+    }
+
+    /// bfs-levels host plan.
+    pub fn run_bfs(&self, short: &str, g: &Graph, src: Node) -> Result<Vec<i32>> {
+        let info = self.rt.info("bfs", short)?;
+        let exe = self.rt.executable("bfs", short)?;
+        let [idx, _wgt, mask] = self.ell_in(g, info.n_pad, info.width)?;
+        let mut level = vec![-1i32; info.n_pad];
+        level[src as usize] = 0;
+        let mut level_lit = runtime::lit_i32_1d(&level);
+        let mut depth = 0i32;
+        loop {
+            let out = self.rt.execute(
+                &exe,
+                &[level_lit, runtime::scalar_i32(depth), idx.clone(), mask.clone()],
+            )?;
+            let finished = runtime::scalar_to_i32(&out[1])?;
+            level_lit = out.into_iter().next().unwrap();
+            if finished == 1 {
+                break;
+            }
+            depth += 1;
+            if depth as usize > g.num_nodes() + 1 {
+                bail!("BFS failed to terminate");
+            }
+        }
+        let mut v = runtime::to_vec_i32(&level_lit)?;
+        v.truncate(g.num_nodes());
+        // unreached stay -1; map to INF for oracle comparisons
+        for x in v.iter_mut() {
+            if *x < 0 {
+                *x = INF;
+            }
+        }
+        Ok(v)
+    }
+
+    /// fixedPoint-relax with component-label init (CC).
+    pub fn run_cc(&self, short: &str, g: &Graph) -> Result<Vec<i32>> {
+        let info = self.rt.info("cc", short)?;
+        let exe = self.rt.executable("cc", short)?;
+        let e = EllGraph::from_csr_in(g, ROW_PAD, WIDTH_PAD);
+        if e.n_pad != info.n_pad || e.width != info.width {
+            bail!("CC ELL shape mismatch");
+        }
+        let idx: Vec<i32> = e.idx.iter().map(|&x| x as i32).collect();
+        let zeros = vec![0i32; e.n_pad * e.width];
+        let idx_lit = runtime::lit_i32_2d(&idx, e.n_pad, e.width)?;
+        let wgt_lit = runtime::lit_i32_2d(&zeros, e.n_pad, e.width)?; // weight-0 min-plus
+        let mask_lit = runtime::lit_f32_2d(&e.mask, e.n_pad, e.width)?;
+        let mut comp: Vec<i32> = (0..info.n_pad as i32).collect();
+        let mut comp_lit = runtime::lit_i32_1d(&comp);
+        for _ in 0..g.num_nodes() + 2 {
+            let out = self
+                .rt
+                .execute(&exe, &[comp_lit, idx_lit.clone(), wgt_lit.clone(), mask_lit.clone()])?;
+            let finished = runtime::scalar_to_i32(&out[1])?;
+            comp_lit = out.into_iter().next().unwrap();
+            if finished == 1 {
+                break;
+            }
+        }
+        comp = runtime::to_vec_i32(&comp_lit)?;
+        comp.truncate(g.num_nodes());
+        Ok(comp)
+    }
+}
+
+/// Helper: literals/buffers are not Clone in the xla crate — add cheap
+/// clone-through-host helpers where sharing is needed.
+trait CloneLiteral {
+    fn clone_literal(&self) -> Result<xla::Literal>;
+}
+impl CloneLiteral for xla::Literal {
+    fn clone_literal(&self) -> Result<xla::Literal> {
+        // round-trip through raw bytes
+        let shape = self.array_shape().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        let dims: Vec<i64> = shape.dims().to_vec();
+        let ty = self.ty().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+        match ty {
+            xla::ElementType::S32 => {
+                let v = self.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                reshape_if(xla::Literal::vec1(&v), &dims)
+            }
+            xla::ElementType::F32 => {
+                let v = self.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e:?}"))?;
+                reshape_if(xla::Literal::vec1(&v), &dims)
+            }
+            other => bail!("clone_literal: unsupported type {other:?}"),
+        }
+    }
+}
+
+fn reshape_if(l: xla::Literal, dims: &[i64]) -> Result<xla::Literal> {
+    if dims.len() <= 1 {
+        if dims.is_empty() {
+            // scalar: reshape to []
+            return l.reshape(&[]).map_err(|e| anyhow::anyhow!("{e:?}"));
+        }
+        return Ok(l);
+    }
+    l.reshape(dims).map_err(|e| anyhow::anyhow!("{e:?}"))
+}

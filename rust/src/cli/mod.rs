@@ -1,0 +1,224 @@
+//! `starplat` command-line interface (hand-rolled: no clap offline).
+//!
+//! Subcommands:
+//!   compile --backend <cuda|opencl|sycl|openacc|jax> --out DIR FILES...
+//!   export-graphs [--out DIR] [--scale N]     write shapes.json for aot.py
+//!   run --algo A --graph SHORT --backend B    run one cell of Table 3/4
+//!   stats [--scale N]                          print Table 2
+//!   graphgen --kind K --nodes N --edges M --out FILE
+//!   loc                                        paper §5 lines-of-code table
+
+use crate::codegen;
+use crate::dsl::parser::parse_file;
+use crate::ir::lower;
+use crate::sema::check_function;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+pub fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("starplat: error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// Tiny flag parser: `--key value` pairs + positionals.
+pub struct Flags {
+    pub flags: std::collections::HashMap<String, String>,
+    pub positional: Vec<String>,
+}
+
+impl Flags {
+    pub fn parse(args: &[String]) -> Flags {
+        let mut flags = std::collections::HashMap::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            if let Some(key) = args[i].strip_prefix("--") {
+                if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), args[i + 1].clone());
+                    i += 2;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                positional.push(args[i].clone());
+                i += 1;
+            }
+        }
+        Flags { flags, positional }
+    }
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+    pub fn get_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = Flags::parse(&args[1..]);
+    match cmd.as_str() {
+        "compile" => cmd_compile(&rest),
+        "export-graphs" => cmd_export_graphs(&rest),
+        "run" => cmd_run(&rest),
+        "stats" => cmd_stats(&rest),
+        "graphgen" => cmd_graphgen(&rest),
+        "loc" => cmd_loc(&rest),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => bail!("unknown subcommand `{other}` (try `starplat help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "starplat — StarPlat graph-DSL compiler for a variety of accelerators\n\
+         \n\
+         USAGE: starplat <COMMAND> [FLAGS]\n\
+         \n\
+         COMMANDS:\n\
+         \x20 compile --backend <cuda|opencl|sycl|openacc|jax> [--out DIR] FILE...\n\
+         \x20 export-graphs [--out artifacts/graphs] [--scale 800]\n\
+         \x20 run --algo <bc|pr|sssp|tc|bfs|cc> --graph <TW|..|UR> --backend <seq|par|xla|gunrock|lonestar>\n\
+         \x20 stats [--scale 4000]          print the Table-2 graph suite\n\
+         \x20 graphgen --kind <rmat|uniform|road|social> --nodes N --edges M --out FILE\n\
+         \x20 loc                           paper §5 DSL vs generated LoC table"
+    );
+}
+
+fn cmd_compile(f: &Flags) -> Result<()> {
+    let backend = f.get_or("backend", "cuda");
+    let out_dir = PathBuf::from(f.get_or("out", "generated"));
+    std::fs::create_dir_all(&out_dir)?;
+    if f.positional.is_empty() {
+        bail!("compile: no input .sp files");
+    }
+    for file in &f.positional {
+        let path = Path::new(file);
+        let fns = parse_file(path)?;
+        let tf = check_function(&fns[0]).map_err(|e| {
+            anyhow::anyhow!("{}", e.in_file(file).render(&std::fs::read_to_string(path).unwrap_or_default()))
+        })?;
+        let ir = lower(&tf);
+        let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("out");
+        match backend.as_str() {
+            "jax" => {
+                let prog = codegen::jax::generate(&ir)?;
+                let py_path = out_dir.join(format!("{}_step.py", prog.algo));
+                std::fs::write(&py_path, &prog.python)?;
+                let plan_path = out_dir.join(format!("{}.plan.json", prog.algo));
+                std::fs::write(&plan_path, prog.plan.to_string())?;
+                println!("compiled {file} -> {} + {}", py_path.display(), plan_path.display());
+            }
+            b => {
+                let src = codegen::generate(b, &ir)?;
+                let ext = match b {
+                    "cuda" => "cu",
+                    "opencl" => "cl.cpp",
+                    "sycl" => "sycl.cpp",
+                    _ => "acc.cpp",
+                };
+                let out = out_dir.join(format!("{stem}.{ext}"));
+                std::fs::write(&out, src)?;
+                println!("compiled {file} -> {}", out.display());
+            }
+        }
+    }
+    // ensure the generated dir is a package for python imports
+    if backend == "jax" {
+        let init = out_dir.join("__init__.py");
+        if !init.exists() {
+            std::fs::write(init, "# generated by starplat compile --backend jax\n")?;
+        }
+    }
+    Ok(())
+}
+
+fn cmd_export_graphs(f: &Flags) -> Result<()> {
+    let out_dir = PathBuf::from(f.get_or("out", "artifacts/graphs"));
+    let scale = f.usize_or(
+        "scale",
+        std::env::var("STARPLAT_XLA_SCALE").ok().and_then(|v| v.parse().ok()).unwrap_or(800),
+    );
+    std::fs::create_dir_all(&out_dir)?;
+    let json = crate::coordinator::export_shapes(scale);
+    let path = out_dir.join("shapes.json");
+    std::fs::write(&path, json.to_string()).context("write shapes.json")?;
+    println!("wrote {} (scale {scale})", path.display());
+    Ok(())
+}
+
+fn cmd_run(f: &Flags) -> Result<()> {
+    let algo = f.get_or("algo", "sssp");
+    let graph = f.get_or("graph", "RM");
+    let backend = f.get_or("backend", "par");
+    let scale = f.usize_or("scale", crate::graph::suite::default_scale());
+    let sources = f.usize_or("sources", 5);
+    let report = crate::coordinator::run_one(&algo, &graph, &backend, scale, sources)?;
+    println!("{report}");
+    Ok(())
+}
+
+fn cmd_stats(f: &Flags) -> Result<()> {
+    let scale = f.usize_or("scale", crate::graph::suite::default_scale());
+    println!("{}", crate::coordinator::table2(scale).render());
+    Ok(())
+}
+
+fn cmd_graphgen(f: &Flags) -> Result<()> {
+    let kind = f.get_or("kind", "rmat");
+    let n = f.usize_or("nodes", 1000);
+    let m = f.usize_or("edges", 4000);
+    let seed = f.usize_or("seed", 42) as u64;
+    let out = PathBuf::from(f.get_or("out", "graph.el"));
+    use crate::graph::generators::*;
+    let g = match kind.as_str() {
+        "rmat" => rmat("rmat", n, m, seed),
+        "uniform" => uniform_random("uniform", n, m, seed),
+        "road" => {
+            let side = (n as f64).sqrt().ceil() as usize;
+            road_grid("road", side, side, seed)
+        }
+        "social" => preferential_attachment("social", n, (m / n).max(1), seed),
+        other => bail!("unknown graph kind `{other}`"),
+    };
+    crate::graph::io::save_edge_list(&g, &out)?;
+    println!("wrote {} (|V|={}, |E|={})", out.display(), g.num_nodes(), g.num_edges());
+    Ok(())
+}
+
+fn cmd_loc(_f: &Flags) -> Result<()> {
+    println!("{}", crate::coordinator::loc_table()?.render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flags_parse() {
+        let args: Vec<String> =
+            ["--backend", "cuda", "file.sp", "--out", "dir", "x.sp", "--quick"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect();
+        let f = Flags::parse(&args);
+        assert_eq!(f.get("backend"), Some("cuda"));
+        assert_eq!(f.get("out"), Some("dir"));
+        assert_eq!(f.get("quick"), Some("true"));
+        assert_eq!(f.positional, vec!["file.sp", "x.sp"]);
+    }
+}

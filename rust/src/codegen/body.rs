@@ -1,0 +1,305 @@
+//! Kernel-body statement emitter shared by the C-family backends.
+//!
+//! One walker, four atomics dialects — the paper's observation that "the
+//! parallelism concepts remain the same [while] the syntax and the placement
+//! of constructs change significantly across the backends" (§3.2) maps to
+//! this module: structure comes from the AST, dialect from [`Target`].
+
+use super::buf::CodeBuf;
+use super::cexpr::{emit, Style};
+use crate::dsl::ast::*;
+use crate::ir::analyze::as_reduction;
+use crate::ir::ScalarTy;
+use crate::sema::TypedFunction;
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Target {
+    Cuda,
+    OpenCl,
+    Sycl,
+    OpenAcc,
+}
+
+pub struct BodyCtx<'a> {
+    pub tf: &'a TypedFunction,
+    pub style: Style,
+    pub target: Target,
+    /// inside iterateInBFS / iterateInReverse (affects neighbor iteration)
+    pub bfs: Option<BfsDir>,
+    /// OR-flag property of the enclosing fixedPoint, if any (§4.1)
+    pub or_flag: Option<String>,
+}
+
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BfsDir {
+    Forward,
+    Reverse,
+}
+
+impl<'a> BodyCtx<'a> {
+    fn prop_ty(&self, prop: &str) -> ScalarTy {
+        self.tf
+            .node_props
+            .get(prop)
+            .or_else(|| self.tf.edge_props.get(prop))
+            .map(ScalarTy::of)
+            .unwrap_or(ScalarTy::I32)
+    }
+
+    fn c_ty(&self, ty: &Type) -> String {
+        ScalarTy::of(ty).c_name().to_string()
+    }
+}
+
+/// Emit the statements of a kernel body, assuming the surrounding emitter
+/// already bound the vertex variable (e.g. `int v = ...;`).
+pub fn emit_block(b: &[Stmt], cx: &BodyCtx<'_>, buf: &mut CodeBuf) {
+    for s in b {
+        emit_stmt(s, cx, buf);
+    }
+}
+
+fn emit_stmt(s: &Stmt, cx: &BodyCtx<'_>, buf: &mut CodeBuf) {
+    let st = &cx.style;
+    match s {
+        Stmt::Decl { ty, name, init, .. } => {
+            match init {
+                Some(e) => buf.line(&format!("{} {} = {};", cx.c_ty(ty), name, emit(e, st))),
+                None => buf.line(&format!("{} {};", cx.c_ty(ty), name)),
+            }
+        }
+        Stmt::Assign { target, value, .. } => {
+            if let Some((t, op, rhs)) = as_reduction(target, value) {
+                if matches!(t, LValue::Prop { .. }) {
+                    emit_reduce(&t, op, &rhs, cx, buf);
+                    return;
+                }
+            }
+            match target {
+                LValue::Var(v) => buf.line(&format!("{} = {};", (st.scalar)(v), emit(value, st))),
+                LValue::Prop { obj, prop } => buf.line(&format!(
+                    "{}[{}] = {};",
+                    (st.prop_array)(prop),
+                    (st.scalar)(obj),
+                    emit(value, st)
+                )),
+            }
+        }
+        Stmt::Reduce { target, op, value, .. } => emit_reduce(target, *op, value, cx, buf),
+        Stmt::MinMaxAssign { kind, target, compare, extra, .. } => {
+            emit_min_max(*kind, target, compare, extra, cx, buf)
+        }
+        Stmt::For { iter, body, .. } => emit_neighbor_loop(iter, body, cx, buf),
+        Stmt::If { cond, then, els, .. } => {
+            buf.open(&format!("if ({}) {{", emit(cond, st)));
+            emit_block(then, cx, buf);
+            if let Some(e) = els {
+                buf.close("} else {");
+                buf.inc();
+                emit_block(e, cx, buf);
+            }
+            buf.close("}");
+        }
+        other => buf.line(&format!("/* unsupported in kernel: {:?} */", std::mem::discriminant(other))),
+    }
+}
+
+fn emit_neighbor_loop(iter: &Iterator_, body: &[Stmt], cx: &BodyCtx<'_>, buf: &mut CodeBuf) {
+    let st = &cx.style;
+    let var = &iter.var;
+    match &iter.source {
+        IterSource::Neighbors { of, .. } => {
+            buf.open(&format!(
+                "for (int edge = {off}[{v}]; edge < {off}[{v}+1]; edge++) {{",
+                off = st.offsets,
+                v = (st.scalar)(of)
+            ));
+            buf.line(&format!("int {var} = {}[edge];", st.edge_list));
+            if let Some(dir) = cx.bfs {
+                // BFS-DAG children only (paper §3.4 level filter)
+                let lvl = (st.prop_array)("level");
+                match dir {
+                    BfsDir::Forward => buf.open(&format!(
+                        "if ({lvl}[{var}] == {lvl}[{v}] + 1) {{",
+                        v = (st.scalar)(of)
+                    )),
+                    BfsDir::Reverse => buf.open(&format!(
+                        "if ({lvl}[{var}] == {lvl}[{v}] + 1) {{",
+                        v = (st.scalar)(of)
+                    )),
+                }
+            }
+            if let Some(f) = &iter.filter {
+                let fe = crate::codegen::simplify_bool_cmp(&crate::codegen::resolve_filter(
+                    f, var, cx.tf,
+                ));
+                buf.open(&format!("if ({}) {{", emit(&fe, st)));
+            }
+            emit_block(body, cx, buf);
+            if iter.filter.is_some() {
+                buf.close("}");
+            }
+            if cx.bfs.is_some() {
+                buf.close("}");
+            }
+            buf.close("}");
+        }
+        IterSource::NodesTo { of, .. } => {
+            buf.open(&format!(
+                "for (int edge = {off}[{v}]; edge < {off}[{v}+1]; edge++) {{",
+                off = st.rev_offsets,
+                v = (st.scalar)(of)
+            ));
+            buf.line(&format!("int {var} = {}[edge];", st.src_list));
+            if let Some(f) = &iter.filter {
+                let fe = crate::codegen::simplify_bool_cmp(&crate::codegen::resolve_filter(
+                    f, var, cx.tf,
+                ));
+                buf.open(&format!("if ({}) {{", emit(&fe, st)));
+            }
+            emit_block(body, cx, buf);
+            if iter.filter.is_some() {
+                buf.close("}");
+            }
+            buf.close("}");
+        }
+        IterSource::Nodes { .. } | IterSource::Set { .. } => {
+            buf.line("/* nested full-graph iteration not supported in kernels */");
+        }
+    }
+}
+
+fn emit_reduce(target: &LValue, op: ReduceOp, value: &Expr, cx: &BodyCtx<'_>, buf: &mut CodeBuf) {
+    let st = &cx.style;
+    let val = emit(value, st);
+    let (loc, ty) = match target {
+        LValue::Var(v) => {
+            if cx.target == Target::OpenAcc {
+                // handled by the loop's reduction(...) clause (Fig 7)
+                buf.line(&format!("{v} = {v} {} {val};", bin_sym(op)));
+                return;
+            }
+            let sty = cx.tf.vars.get(v).map(ScalarTy::of).unwrap_or(ScalarTy::I64);
+            (format!("d_{v}[0]", ), sty)
+        }
+        LValue::Prop { obj, prop } => (
+            format!("{}[{}]", (st.prop_array)(prop), (st.scalar)(obj)),
+            cx.prop_ty(prop),
+        ),
+    };
+    match cx.target {
+        Target::Cuda => match op {
+            ReduceOp::Add | ReduceOp::Count => buf.line(&format!("atomicAdd(&{loc}, {val});")),
+            ReduceOp::Mul => buf.line(&format!("atomicMul(&{loc}, {val}); // emulated via CAS")),
+            ReduceOp::And => buf.line(&format!("atomicAnd(&{loc}, {val});")),
+            ReduceOp::Or => buf.line(&format!("atomicOr(&{loc}, {val});")),
+        },
+        Target::OpenCl => match (op, ty) {
+            (ReduceOp::Add | ReduceOp::Count, ScalarTy::F32 | ScalarTy::F64) => {
+                // OpenCL has int/long atomics only: simulate via cmpxchg (§3.3)
+                buf.line(&format!("atomicAddFloat(&{loc}, {val}); // atomic_cmpxchg loop"));
+            }
+            (ReduceOp::Add | ReduceOp::Count, _) => {
+                buf.line(&format!("atomic_add(&{loc}, {val});"))
+            }
+            (ReduceOp::Mul, _) => buf.line(&format!("atomicMulCmpxchg(&{loc}, {val});")),
+            (ReduceOp::And, _) => buf.line(&format!("atomic_and(&{loc}, {val});")),
+            (ReduceOp::Or, _) => buf.line(&format!("atomic_or(&{loc}, {val});")),
+        },
+        Target::Sycl => {
+            // Fig 8's atomic_ref idiom
+            buf.line(&format!(
+                "atomic_ref<{t}, memory_order::relaxed, memory_scope::device, access::address_space::global_space> atomic_data({loc});",
+                t = ty.c_name()
+            ));
+            match op {
+                ReduceOp::Add | ReduceOp::Count => buf.line(&format!("atomic_data += {val};")),
+                ReduceOp::Mul => buf.line(&format!("atomic_data = atomic_data * {val}; // CAS loop")),
+                ReduceOp::And => buf.line(&format!("atomic_data &= {val};")),
+                ReduceOp::Or => buf.line(&format!("atomic_data |= {val};")),
+            }
+        }
+        Target::OpenAcc => {
+            buf.line("#pragma acc atomic update");
+            buf.line(&format!("{loc} = {loc} {} {val};", bin_sym(op)));
+        }
+    }
+}
+
+fn bin_sym(op: ReduceOp) -> &'static str {
+    match op {
+        ReduceOp::Add | ReduceOp::Count => "+",
+        ReduceOp::Mul => "*",
+        ReduceOp::And => "&&",
+        ReduceOp::Or => "||",
+    }
+}
+
+/// The Min/Max construct (paper §3.5; Figures 6, 10, 11).
+fn emit_min_max(
+    kind: MinMax,
+    target: &LValue,
+    compare: &Expr,
+    extra: &[(LValue, Expr)],
+    cx: &BodyCtx<'_>,
+    buf: &mut CodeBuf,
+) {
+    let st = &cx.style;
+    let LValue::Prop { obj, prop } = target else {
+        buf.line("/* Min/Max on scalars unsupported */");
+        return;
+    };
+    let loc = format!("{}[{}]", (st.prop_array)(prop), (st.scalar)(obj));
+    let ty = cx.prop_ty(prop).c_name();
+    let cmp = if kind == MinMax::Min { ">" } else { "<" };
+    buf.line(&format!("{ty} {prop}_new = {};", emit(compare, st)));
+    buf.open(&format!("if ({loc} {cmp} {prop}_new) {{"));
+    match cx.target {
+        Target::Cuda => buf.line(&format!(
+            "atomic{}(&{loc}, {prop}_new);",
+            if kind == MinMax::Min { "Min" } else { "Max" }
+        )),
+        Target::OpenCl => buf.line(&format!(
+            "atomic_{}(&{loc}, {prop}_new);",
+            if kind == MinMax::Min { "min" } else { "max" }
+        )),
+        Target::Sycl => {
+            buf.line(&format!(
+                "atomic_ref<{ty}, memory_order::relaxed, memory_scope::device, access::address_space::global_space> atomic_data({loc});"
+            ));
+            buf.line(&format!(
+                "atomic_data.fetch_{}({prop}_new);",
+                if kind == MinMax::Min { "min" } else { "max" }
+            ));
+        }
+        Target::OpenAcc => {
+            // Fig 10: guard + atomic write (OpenACC has no atomicMin)
+            buf.line(&format!("int oldValue = {loc};"));
+            buf.line("#pragma acc atomic write");
+            buf.line(&format!("{loc} = {prop}_new;"));
+        }
+    }
+    for (t, v) in extra {
+        match t {
+            LValue::Prop { obj, prop } => buf.line(&format!(
+                "{}[{}] = {};",
+                (st.prop_array)(prop),
+                (st.scalar)(obj),
+                emit(v, st)
+            )),
+            LValue::Var(name) => buf.line(&format!("{} = {};", (st.scalar)(name), emit(v, st))),
+        }
+    }
+    // OR-flag: any successful update un-finishes the fixed point (§4.1)
+    if cx.or_flag.is_some() {
+        match cx.target {
+            Target::Cuda | Target::OpenCl => buf.line("gpu_finished[0] = false;"),
+            Target::Sycl => buf.line("*d_finished = false;"),
+            Target::OpenAcc => {
+                buf.line("#pragma acc atomic write");
+                buf.line("finished = false;");
+            }
+        }
+    }
+    buf.close("}");
+}

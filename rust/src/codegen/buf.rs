@@ -1,0 +1,59 @@
+//! Indented code buffer shared by all emitters.
+
+#[derive(Default)]
+pub struct CodeBuf {
+    out: String,
+    indent: usize,
+}
+
+impl CodeBuf {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn line(&mut self, s: &str) {
+        if s.is_empty() {
+            self.out.push('\n');
+            return;
+        }
+        self.out.push_str(&"  ".repeat(self.indent));
+        self.out.push_str(s);
+        self.out.push('\n');
+    }
+    pub fn lines(&mut self, s: &str) {
+        for l in s.lines() {
+            self.line(l);
+        }
+    }
+    pub fn open(&mut self, s: &str) {
+        self.line(s);
+        self.indent += 1;
+    }
+    pub fn close(&mut self, s: &str) {
+        self.indent = self.indent.saturating_sub(1);
+        self.line(s);
+    }
+    /// Raw indent bump (for `} else {` re-opens).
+    pub fn inc(&mut self) {
+        self.indent += 1;
+    }
+    pub fn finish(self) -> String {
+        self.out
+    }
+    pub fn indent_level(&self) -> usize {
+        self.indent
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn indents() {
+        let mut b = CodeBuf::new();
+        b.open("if (x) {");
+        b.line("y();");
+        b.close("}");
+        assert_eq!(b.finish(), "if (x) {\n  y();\n}\n");
+    }
+}

@@ -1,0 +1,175 @@
+//! DSL-expression → C-family-expression translation, parameterized by a
+//! naming [`Style`] so CUDA (`gpu_dist[nbr]`), OpenCL (`gpu_dist`), SYCL
+//! (`g.gpu_dist`) and OpenACC (`dist[nbr]`) all share one walker.
+
+use crate::dsl::ast::*;
+
+/// Naming conventions for one backend / context.
+#[derive(Clone)]
+pub struct Style {
+    /// device array name for a property: e.g. "dist" -> "gpu_dist"
+    pub prop_array: fn(&str) -> String,
+    /// scalar variable reference (kernel parameter or local)
+    pub scalar: fn(&str) -> String,
+    /// graph CSR names: (offsets, edge_list, rev_offsets, src_list)
+    pub offsets: &'static str,
+    pub edge_list: &'static str,
+    pub rev_offsets: &'static str,
+    pub src_list: &'static str,
+    pub num_nodes: &'static str,
+    pub bool_true: &'static str,
+    pub bool_false: &'static str,
+}
+
+pub fn cuda_style() -> Style {
+    Style {
+        prop_array: |p| format!("gpu_{p}"),
+        scalar: |s| s.to_string(),
+        offsets: "gpu_OA",
+        edge_list: "gpu_edgeList",
+        rev_offsets: "gpu_rev_OA",
+        src_list: "gpu_srcList",
+        num_nodes: "V",
+        bool_true: "true",
+        bool_false: "false",
+    }
+}
+
+pub fn opencl_style() -> Style {
+    Style { bool_true: "1", bool_false: "0", ..cuda_style() }
+}
+
+pub fn sycl_style() -> Style {
+    Style {
+        prop_array: |p| format!("g.gpu_{p}"),
+        offsets: "g.gpu_indexOfNodes",
+        edge_list: "g.gpu_edgeList",
+        rev_offsets: "g.gpu_rev_indexOfNodes",
+        src_list: "g.gpu_srcList",
+        ..cuda_style()
+    }
+}
+
+pub fn openacc_style() -> Style {
+    Style {
+        prop_array: |p| p.to_string(),
+        offsets: "g.indexofNodes",
+        edge_list: "g.edgeList",
+        rev_offsets: "g.rev_indexofNodes",
+        src_list: "g.srcList",
+        num_nodes: "g.num_nodes()",
+        ..cuda_style()
+    }
+}
+
+/// Translate an expression in a kernel context. `elem` is unused today but
+/// kept for future contexts where bare property names need an element.
+pub fn emit(e: &Expr, st: &Style) -> String {
+    match e {
+        Expr::IntLit(n) => n.to_string(),
+        Expr::FloatLit(x) => {
+            if x.fract() == 0.0 {
+                format!("{x:.1}")
+            } else {
+                x.to_string()
+            }
+        }
+        Expr::BoolLit(true) => st.bool_true.to_string(),
+        Expr::BoolLit(false) => st.bool_false.to_string(),
+        Expr::Inf => "INT_MAX".to_string(),
+        Expr::Var(v) => (st.scalar)(v),
+        Expr::Prop { obj, prop } => format!("{}[{}]", (st.prop_array)(prop), (st.scalar)(obj)),
+        Expr::Call { recv, name, args } => emit_call(recv.as_deref(), name, args, st),
+        Expr::Unary { op, expr } => {
+            let inner = emit_atom(expr, st);
+            match op {
+                UnOp::Not => format!("!{inner}"),
+                UnOp::Neg => format!("-{inner}"),
+            }
+        }
+        Expr::Binary { op, lhs, rhs } => {
+            format!("{} {} {}", emit_atom(lhs, st), op.symbol(), emit_atom(rhs, st))
+        }
+    }
+}
+
+fn emit_atom(e: &Expr, st: &Style) -> String {
+    match e {
+        Expr::Binary { .. } => format!("({})", emit(e, st)),
+        _ => emit(e, st),
+    }
+}
+
+fn emit_call(recv: Option<&str>, name: &str, args: &[Expr], st: &Style) -> String {
+    match (recv, name) {
+        (Some(_), "num_nodes") => st.num_nodes.to_string(),
+        (Some(_), "num_edges") => "E".to_string(),
+        (Some(r), "outDegree") => {
+            let v = (st.scalar)(r);
+            format!("({off}[{v}+1] - {off}[{v}])", off = st.offsets)
+        }
+        (Some(r), "inDegree") => {
+            let v = (st.scalar)(r);
+            format!("({off}[{v}+1] - {off}[{v}])", off = st.rev_offsets)
+        }
+        (Some(_), "is_an_edge") => {
+            let a: Vec<String> = args.iter().map(|x| emit(x, st)).collect();
+            format!(
+                "findNeighborSorted({}, {}, {}, {})",
+                a[0], a[1], st.offsets, st.edge_list
+            )
+        }
+        (Some(_), "get_edge") => {
+            // neighbor iteration supplies the current edge id
+            "edge".to_string()
+        }
+        (None, "abs") => format!("fabs({})", emit(&args[0], st)),
+        _ => {
+            let a: Vec<String> = args.iter().map(|x| emit(x, st)).collect();
+            match recv {
+                Some(r) => format!("{}.{name}({})", (st.scalar)(r), a.join(", ")),
+                None => format!("{name}({})", a.join(", ")),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse;
+    use crate::dsl::ast::Stmt;
+
+    fn first_expr(src: &str) -> Expr {
+        let f = parse(src).unwrap().remove(0);
+        match f.body.into_iter().next().unwrap() {
+            Stmt::Decl { init: Some(e), .. } => e,
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn cuda_prop_naming() {
+        let e = first_expr("function f(Graph g, propNode<int> dist, node v) { int x = v.dist + 3; }");
+        assert_eq!(emit(&e, &cuda_style()), "gpu_dist[v] + 3");
+    }
+
+    #[test]
+    fn openacc_prop_naming() {
+        let e = first_expr("function f(Graph g, propNode<int> dist, node v) { int x = v.dist + 3; }");
+        assert_eq!(emit(&e, &openacc_style()), "dist[v] + 3");
+    }
+
+    #[test]
+    fn out_degree_uses_offsets() {
+        let e = first_expr("function f(Graph g, node v) { int d = v.outDegree(); }");
+        assert_eq!(emit(&e, &cuda_style()), "(gpu_OA[v+1] - gpu_OA[v])");
+        assert!(emit(&e, &sycl_style()).contains("g.gpu_indexOfNodes"));
+    }
+
+    #[test]
+    fn inf_is_int_max() {
+        let e = first_expr("function f(Graph g) { int x = INF; }");
+        assert_eq!(emit(&e, &cuda_style()), "INT_MAX");
+    }
+}

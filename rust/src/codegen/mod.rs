@@ -1,0 +1,103 @@
+//! Code generators: the paper's four accelerator backends (CUDA, OpenCL,
+//! SYCL, OpenACC — §3) plus the executable JAX backend (DESIGN.md §1).
+
+pub mod body;
+pub mod buf;
+pub mod cexpr;
+pub mod cuda;
+pub mod jax;
+pub mod openacc;
+pub mod opencl;
+pub mod sycl;
+
+use crate::dsl::ast::Expr;
+use crate::ir::IrProgram;
+use crate::sema::TypedFunction;
+
+/// Textual backends by name.
+pub fn generate(backend: &str, ir: &IrProgram) -> anyhow::Result<String> {
+    Ok(match backend {
+        "cuda" => cuda::generate(ir),
+        "opencl" => opencl::generate(ir),
+        "sycl" => sycl::generate(ir),
+        "openacc" => openacc::generate(ir),
+        "jax" => jax::generate(ir)?.python,
+        other => anyhow::bail!("unknown backend `{other}` (cuda|opencl|sycl|openacc|jax)"),
+    })
+}
+
+pub const TEXT_BACKENDS: [&str; 4] = ["cuda", "opencl", "sycl", "openacc"];
+
+/// Resolve bare property names in filter expressions to explicit
+/// `loopVar.prop` accesses (the StarPlat `filter(modified == True)` idiom).
+pub fn resolve_filter(e: &Expr, var: &str, tf: &TypedFunction) -> Expr {
+    match e {
+        Expr::Var(name) if tf.node_props.contains_key(name) => {
+            Expr::Prop { obj: var.to_string(), prop: name.clone() }
+        }
+        Expr::Unary { op, expr } => {
+            Expr::Unary { op: *op, expr: Box::new(resolve_filter(expr, var, tf)) }
+        }
+        Expr::Binary { op, lhs, rhs } => Expr::Binary {
+            op: *op,
+            lhs: Box::new(resolve_filter(lhs, var, tf)),
+            rhs: Box::new(resolve_filter(rhs, var, tf)),
+        },
+        Expr::Call { recv, name, args } => Expr::Call {
+            recv: recv.clone(),
+            name: name.clone(),
+            args: args.iter().map(|a| resolve_filter(a, var, tf)).collect(),
+        },
+        other => other.clone(),
+    }
+}
+
+/// Normalize boolean comparisons for C output: `x == True` → `x`,
+/// `x == False` → `!x` (cleaner generated code, as in the paper's figures).
+pub fn simplify_bool_cmp(e: &Expr) -> Expr {
+    use crate::dsl::ast::{BinOp, UnOp};
+    if let Expr::Binary { op, lhs, rhs } = e {
+        if let Expr::BoolLit(b) = **rhs {
+            let want = match op {
+                BinOp::Eq => Some(b),
+                BinOp::Ne => Some(!b),
+                _ => None,
+            };
+            if let Some(w) = want {
+                return if w {
+                    (**lhs).clone()
+                } else {
+                    Expr::Unary { op: UnOp::Not, expr: lhs.clone() }
+                };
+            }
+        }
+    }
+    e.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::ast::{BinOp, Expr};
+    use crate::dsl::parser::parse;
+    use crate::sema::check_function;
+
+    #[test]
+    fn filter_resolution() {
+        let fns = parse(
+            "function f(Graph g, propNode<bool> modified) {
+               forall (v in g.nodes().filter(modified == True)) { }
+             }",
+        )
+        .unwrap();
+        let tf = check_function(&fns[0]).unwrap();
+        let e = Expr::Binary {
+            op: BinOp::Eq,
+            lhs: Box::new(Expr::Var("modified".into())),
+            rhs: Box::new(Expr::BoolLit(true)),
+        };
+        let r = resolve_filter(&e, "v", &tf);
+        let s = simplify_bool_cmp(&r);
+        assert_eq!(s, Expr::Prop { obj: "v".into(), prop: "modified".into() });
+    }
+}

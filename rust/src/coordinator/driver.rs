@@ -1,0 +1,249 @@
+//! Unified driver: run (algorithm × graph × backend) cells.
+//!
+//! Backends map to the paper's columns:
+//! - `gunrock` / `lonestar`     — the Table-3 hand-crafted baselines;
+//! - `xla`                      — StarPlat's accelerator path (CUDA analog);
+//! - `par` (interpreter, MT)    — SYCL-on-CPU analog (Table 4);
+//! - `seq` (interpreter, 1T)    — OpenACC-on-CPU analog (Table 4).
+
+use crate::algorithms::{gunrock, lonestar, reference};
+use crate::backends::interp::{self, env::Val, Args, Mode};
+use crate::backends::xla::XlaBackend;
+use crate::dsl::parser::parse_file;
+use crate::graph::csr::{Graph, Node};
+use crate::graph::generators::sample_sources;
+use crate::graph::suite::build_suite;
+use crate::sema::{check_function, TypedFunction};
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::sync::OnceLock;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    Bc,
+    Pr,
+    Sssp,
+    Tc,
+    Bfs,
+    Cc,
+}
+
+impl Algo {
+    pub fn parse(s: &str) -> Result<Algo> {
+        Ok(match s {
+            "bc" => Algo::Bc,
+            "pr" => Algo::Pr,
+            "sssp" => Algo::Sssp,
+            "tc" => Algo::Tc,
+            "bfs" => Algo::Bfs,
+            "cc" => Algo::Cc,
+            other => bail!("unknown algorithm `{other}`"),
+        })
+    }
+    pub fn program(&self) -> &'static str {
+        match self {
+            Algo::Bc => "bc.sp",
+            Algo::Pr => "pr.sp",
+            Algo::Sssp => "sssp.sp",
+            Algo::Tc => "tc.sp",
+            Algo::Bfs => "bfs.sp",
+            Algo::Cc => "cc.sp",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Backend {
+    Seq,
+    Par,
+    Xla,
+    Gunrock,
+    Lonestar,
+}
+
+impl Backend {
+    pub fn parse(s: &str) -> Result<Backend> {
+        Ok(match s {
+            "seq" => Backend::Seq,
+            "par" => Backend::Par,
+            "xla" => Backend::Xla,
+            "gunrock" => Backend::Gunrock,
+            "lonestar" => Backend::Lonestar,
+            other => bail!("unknown backend `{other}`"),
+        })
+    }
+}
+
+/// Parsed + type-checked DSL programs, loaded once.
+pub fn load_program(algo: Algo) -> Result<TypedFunction> {
+    static CACHE: OnceLock<std::sync::Mutex<HashMap<&'static str, TypedFunction>>> =
+        OnceLock::new();
+    let cache = CACHE.get_or_init(Default::default);
+    let mut guard = cache.lock().unwrap();
+    if let Some(tf) = guard.get(algo.program()) {
+        return Ok(tf.clone());
+    }
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("dsl_programs").join(algo.program());
+    let fns = parse_file(&path)?;
+    let tf = check_function(&fns[0]).map_err(|e| anyhow!("{e}"))?;
+    guard.insert(algo.program(), tf.clone());
+    Ok(tf)
+}
+
+/// The result of one cell: elapsed seconds + a checksum for verification.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub secs: f64,
+    pub checksum: f64,
+}
+
+/// Standard parameters (match the interp/oracle tests).
+pub const PR_BETA: f64 = 1e-7;
+pub const PR_DAMPING: f64 = 0.85;
+pub const PR_MAX_ITER: usize = 100;
+
+/// Execute one (algo, graph, backend) cell; sources used by BC only.
+pub fn run_cell(
+    algo: Algo,
+    entry_short: &str,
+    g: &Graph,
+    backend: Backend,
+    sources: &[Node],
+    xla: Option<&XlaBackend>,
+) -> Result<CellResult> {
+    let threads = crate::util::pool::default_threads();
+    let src: Node = sources.first().copied().unwrap_or(0);
+    let t0 = std::time::Instant::now();
+    let checksum = match (backend, algo) {
+        // ---- hand-written baselines (Table 3) ----
+        (Backend::Gunrock, Algo::Sssp) => sum_i32(&gunrock::sssp(g, src, threads)),
+        (Backend::Gunrock, Algo::Bfs) => sum_i32(&gunrock::bfs(g, src, threads)),
+        (Backend::Gunrock, Algo::Pr) => {
+            gunrock::pagerank(g, PR_BETA, PR_DAMPING, PR_MAX_ITER, threads).iter().sum()
+        }
+        (Backend::Gunrock, Algo::Tc) => gunrock::triangle_count(g, threads) as f64,
+        (Backend::Gunrock, Algo::Bc) => gunrock::betweenness(g, sources, threads).iter().sum(),
+        (Backend::Gunrock, Algo::Cc) => bail!("gunrock baseline has no CC"),
+        (Backend::Lonestar, Algo::Sssp) => sum_i32(&lonestar::sssp(g, src, threads)),
+        (Backend::Lonestar, Algo::Bfs) => sum_i32(&lonestar::bfs(g, src, threads)),
+        (Backend::Lonestar, Algo::Pr) => {
+            lonestar::pagerank(g, PR_BETA, PR_DAMPING, PR_MAX_ITER, threads).iter().sum()
+        }
+        (Backend::Lonestar, Algo::Tc) => lonestar::triangle_count(g, threads) as f64,
+        // the paper's Table 3: LonestarGPU does not implement BC
+        (Backend::Lonestar, Algo::Bc) => bail!("lonestar has no BC (paper Table 3 `-`)"),
+        (Backend::Lonestar, Algo::Cc) => bail!("lonestar baseline has no CC"),
+        // ---- DSL via interpreter (CPU rows of Table 4) ----
+        (Backend::Seq, _) | (Backend::Par, _) => {
+            let tf = load_program(algo)?;
+            let mode = if backend == Backend::Seq { Mode::Seq } else { Mode::Par };
+            let out = run_dsl(&tf, algo, g, sources, mode)?;
+            out
+        }
+        // ---- DSL via XLA artifacts (accelerator rows) ----
+        (Backend::Xla, a) => {
+            let xla = xla.ok_or_else(|| anyhow!("XLA backend unavailable (no artifacts)"))?;
+            match a {
+                Algo::Sssp => sum_i32(&xla.run_sssp(entry_short, g, src)?),
+                Algo::Bfs => sum_i32(&xla.run_bfs(entry_short, g, src)?),
+                Algo::Cc => sum_i32(&xla.run_cc(entry_short, g)?),
+                Algo::Pr => xla
+                    .run_pr(entry_short, g, PR_BETA as f32, PR_DAMPING as f32, PR_MAX_ITER)?
+                    .iter()
+                    .map(|&x| x as f64)
+                    .sum(),
+                Algo::Bc => xla
+                    .run_bc(entry_short, g, sources)?
+                    .iter()
+                    .map(|&x| x as f64)
+                    .sum(),
+                Algo::Tc => xla.run_tc(entry_short, g)? as f64,
+            }
+        }
+    };
+    Ok(CellResult { secs: t0.elapsed().as_secs_f64(), checksum })
+}
+
+fn sum_i32(v: &[i32]) -> f64 {
+    v.iter().map(|&x| if x >= reference::INF { 0.0 } else { x as f64 }).sum()
+}
+
+fn run_dsl(
+    tf: &TypedFunction,
+    algo: Algo,
+    g: &Graph,
+    sources: &[Node],
+    mode: Mode,
+) -> Result<f64> {
+    let src: Node = sources.first().copied().unwrap_or(0);
+    Ok(match algo {
+        Algo::Sssp => {
+            let out = interp::run(tf, g, &Args::default().node("src", src), mode)?;
+            out.prop_i64("dist")
+                .iter()
+                .map(|&x| if x >= reference::INF as i64 { 0.0 } else { x as f64 })
+                .sum()
+        }
+        Algo::Bfs => {
+            let out = interp::run(tf, g, &Args::default().node("src", src), mode)?;
+            out.prop_i64("level")
+                .iter()
+                .map(|&x| if x >= reference::INF as i64 { 0.0 } else { x as f64 })
+                .sum()
+        }
+        Algo::Cc => {
+            let out = interp::run(tf, g, &Args::default(), mode)?;
+            out.prop_i64("comp").iter().map(|&x| x as f64).sum()
+        }
+        Algo::Pr => {
+            let args = Args::default()
+                .scalar("beta", Val::F(PR_BETA))
+                .scalar("delta", Val::F(PR_DAMPING))
+                .scalar("maxIter", Val::I(PR_MAX_ITER as i64));
+            let out = interp::run(tf, g, &args, mode)?;
+            out.prop_f64("pageRank").iter().sum()
+        }
+        Algo::Bc => {
+            let out =
+                interp::run(tf, g, &Args::default().set("sourceSet", sources.to_vec()), mode)?;
+            out.prop_f64("BC").iter().sum()
+        }
+        Algo::Tc => {
+            let out = interp::run(tf, g, &Args::default(), mode)?;
+            match out.ret {
+                Some(Val::I(n)) => n as f64,
+                _ => bail!("TC returned no count"),
+            }
+        }
+    })
+}
+
+/// CLI entry: run one cell and render a short report.
+pub fn run_one(
+    algo: &str,
+    graph_short: &str,
+    backend: &str,
+    scale: usize,
+    n_sources: usize,
+) -> Result<String> {
+    let algo = Algo::parse(algo)?;
+    let backend_e = Backend::parse(backend)?;
+    let suite = build_suite(scale);
+    let entry = super::find_graph(&suite, graph_short)
+        .ok_or_else(|| anyhow!("unknown graph `{graph_short}` (TW SW OK WK LJ PK US GR RM UR)"))?;
+    let sources = sample_sources(&entry.graph, n_sources, 7);
+    let xla = if backend_e == Backend::Xla {
+        Some(XlaBackend::open(std::path::Path::new("artifacts"))?)
+    } else {
+        None
+    };
+    let r = run_cell(algo, graph_short, &entry.graph, backend_e, &sources, xla.as_ref())?;
+    Ok(format!(
+        "{algo:?} on {graph_short} ({} nodes, {} edges) via {backend}: {:.4}s  checksum={:.4}",
+        entry.graph.num_nodes(),
+        entry.graph.num_edges(),
+        r.secs,
+        r.checksum
+    ))
+}

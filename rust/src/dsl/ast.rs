@@ -1,0 +1,270 @@
+//! Abstract syntax tree for the StarPlat DSL (paper §2.1).
+
+use super::token::Span;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Type {
+    Int,
+    Bool,
+    Long,
+    Float,
+    Double,
+    Node,
+    Edge,
+    Graph,
+    PropNode(Box<Type>),
+    PropEdge(Box<Type>),
+    /// `SetN<g>` — a set of nodes of graph `g`.
+    SetN(String),
+}
+
+impl Type {
+    pub fn is_numeric(&self) -> bool {
+        matches!(self, Type::Int | Type::Long | Type::Float | Type::Double | Type::Node)
+    }
+    pub fn is_prop(&self) -> bool {
+        matches!(self, Type::PropNode(_) | Type::PropEdge(_))
+    }
+    /// C-style display, used by error messages and code generators.
+    pub fn display(&self) -> String {
+        match self {
+            Type::Int => "int".into(),
+            Type::Bool => "bool".into(),
+            Type::Long => "long".into(),
+            Type::Float => "float".into(),
+            Type::Double => "double".into(),
+            Type::Node => "node".into(),
+            Type::Edge => "edge".into(),
+            Type::Graph => "Graph".into(),
+            Type::PropNode(t) => format!("propNode<{}>", t.display()),
+            Type::PropEdge(t) => format!("propEdge<{}>", t.display()),
+            Type::SetN(g) => format!("SetN<{g}>"),
+        }
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Param {
+    pub name: String,
+    pub ty: Type,
+    pub span: Span,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Function {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub body: Block,
+    pub span: Span,
+}
+
+pub type Block = Vec<Stmt>;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ReduceOp {
+    /// `+=` — Sum
+    Add,
+    /// `*=` — Product
+    Mul,
+    /// `++` — Count
+    Count,
+    /// `&&=` — All
+    And,
+    /// `||=` — Any
+    Or,
+}
+
+impl ReduceOp {
+    pub fn symbol(&self) -> &'static str {
+        match self {
+            ReduceOp::Add => "+=",
+            ReduceOp::Mul => "*=",
+            ReduceOp::Count => "++",
+            ReduceOp::And => "&&=",
+            ReduceOp::Or => "||=",
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MinMax {
+    Min,
+    Max,
+}
+
+/// Assignment targets: plain variables, property reads (`v.dist`), or whole
+/// properties (`modified = modified_nxt`).
+#[derive(Clone, Debug, PartialEq)]
+pub enum LValue {
+    Var(String),
+    /// `obj.prop` where obj is a node/edge-typed variable.
+    Prop { obj: String, prop: String },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum IterSource {
+    /// `g.nodes()`
+    Nodes { graph: String },
+    /// `g.neighbors(v)`
+    Neighbors { graph: String, of: String },
+    /// `g.nodes_to(v)` — in-neighbors
+    NodesTo { graph: String, of: String },
+    /// items of a `SetN` parameter
+    Set { set: String },
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Iterator_ {
+    pub var: String,
+    pub source: IterSource,
+    /// `.filter(<expr>)` — predicate over the loop variable.
+    pub filter: Option<Expr>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Stmt {
+    /// `int x;` / `propNode<float> sigma;` / `edge e = g.get_edge(v, nbr);`
+    Decl { ty: Type, name: String, init: Option<Expr>, span: Span },
+    /// `x = e;` `v.p = e;` (plain store)
+    Assign { target: LValue, value: Expr, span: Span },
+    /// Reduction: `x += e;`, `cnt++;`, `flag &&= e;` (Table 1)
+    Reduce { target: LValue, op: ReduceOp, value: Expr, span: Span },
+    /// `<a.p, b.q> = <Min(a.p, e), v>;` — atomic multi-assign (§3.5)
+    MinMaxAssign {
+        kind: MinMax,
+        /// first target and its proposed value (the Min/Max pair)
+        target: LValue,
+        compare: Expr,
+        /// extra (target, value) pairs updated only if the Min/Max won
+        extra: Vec<(LValue, Expr)>,
+        span: Span,
+    },
+    /// `g.attachNodeProperty(p1 = e1, p2 = e2, ...);`
+    AttachNodeProperty { graph: String, inits: Vec<(String, Expr)>, span: Span },
+    /// `for (v in ...) { }` (sequential) / `forall (v in ...) { }` (parallel)
+    For { iter: Iterator_, body: Block, parallel: bool, span: Span },
+    /// `iterateInBFS(v in g.nodes() from src) { .. }` with optional
+    /// `iterateInReverse(v != src) { .. }` tail (§3.4)
+    IterateBFS {
+        var: String,
+        graph: String,
+        from: String,
+        body: Block,
+        reverse: Option<(Expr, Block)>,
+        span: Span,
+    },
+    /// `fixedPoint until (var: !prop) { .. }` (§3.6)
+    FixedPoint { var: String, cond: Expr, body: Block, span: Span },
+    DoWhile { body: Block, cond: Expr, span: Span },
+    While { cond: Expr, body: Block, span: Span },
+    If { cond: Expr, then: Block, els: Option<Block>, span: Span },
+    Return { value: Expr, span: Span },
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Mod,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    Eq,
+    Ne,
+    And,
+    Or,
+}
+
+impl BinOp {
+    pub fn symbol(&self) -> &'static str {
+        match self {
+            BinOp::Add => "+",
+            BinOp::Sub => "-",
+            BinOp::Mul => "*",
+            BinOp::Div => "/",
+            BinOp::Mod => "%",
+            BinOp::Lt => "<",
+            BinOp::Gt => ">",
+            BinOp::Le => "<=",
+            BinOp::Ge => ">=",
+            BinOp::Eq => "==",
+            BinOp::Ne => "!=",
+            BinOp::And => "&&",
+            BinOp::Or => "||",
+        }
+    }
+    pub fn is_comparison(&self) -> bool {
+        matches!(self, BinOp::Lt | BinOp::Gt | BinOp::Le | BinOp::Ge | BinOp::Eq | BinOp::Ne)
+    }
+    pub fn is_logical(&self) -> bool {
+        matches!(self, BinOp::And | BinOp::Or)
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum UnOp {
+    Neg,
+    Not,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Expr {
+    IntLit(i64),
+    FloatLit(f64),
+    BoolLit(bool),
+    /// `INF`
+    Inf,
+    Var(String),
+    /// `v.sigma`, `e.weight`
+    Prop { obj: String, prop: String },
+    /// method / builtin calls: `g.num_nodes()`, `nbr.outDegree()`,
+    /// `g.is_an_edge(u, w)`, `g.get_edge(v, nbr)`, `abs(x)`, `g.minWt()`.
+    Call { recv: Option<String>, name: String, args: Vec<Expr> },
+    Unary { op: UnOp, expr: Box<Expr> },
+    Binary { op: BinOp, lhs: Box<Expr>, rhs: Box<Expr> },
+}
+
+impl Expr {
+    /// Free variables referenced (vars and property-bearing objects).
+    pub fn visit_vars(&self, f: &mut impl FnMut(&str)) {
+        match self {
+            Expr::Var(v) => f(v),
+            Expr::Prop { obj, .. } => f(obj),
+            Expr::Call { recv, args, .. } => {
+                if let Some(r) = recv {
+                    f(r);
+                }
+                for a in args {
+                    a.visit_vars(f);
+                }
+            }
+            Expr::Unary { expr, .. } => expr.visit_vars(f),
+            Expr::Binary { lhs, rhs, .. } => {
+                lhs.visit_vars(f);
+                rhs.visit_vars(f);
+            }
+            _ => {}
+        }
+    }
+
+    /// Property names referenced anywhere in the expression.
+    pub fn visit_props(&self, f: &mut impl FnMut(&str, &str)) {
+        match self {
+            Expr::Prop { obj, prop } => f(obj, prop),
+            Expr::Call { args, .. } => {
+                for a in args {
+                    a.visit_props(f);
+                }
+            }
+            Expr::Unary { expr, .. } => expr.visit_props(f),
+            Expr::Binary { lhs, rhs, .. } => {
+                lhs.visit_props(f);
+                rhs.visit_props(f);
+            }
+            _ => {}
+        }
+    }
+}

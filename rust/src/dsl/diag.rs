@@ -1,0 +1,48 @@
+//! Diagnostics for the DSL front-end.
+
+use super::token::Span;
+
+#[derive(Debug, thiserror::Error)]
+#[error("{file}:{line}:{col}: {msg}")]
+pub struct DslError {
+    pub file: String,
+    pub line: u32,
+    pub col: u32,
+    pub msg: String,
+}
+
+impl DslError {
+    pub fn at(span: Span, msg: &str) -> DslError {
+        DslError { file: "<dsl>".into(), line: span.line, col: span.col, msg: msg.to_string() }
+    }
+
+    pub fn in_file(mut self, file: &str) -> DslError {
+        self.file = file.to_string();
+        self
+    }
+
+    /// Render with a source snippet and caret, gcc-style.
+    pub fn render(&self, src: &str) -> String {
+        let mut out = format!("error: {}\n  --> {}:{}:{}\n", self.msg, self.file, self.line, self.col);
+        if self.line >= 1 {
+            if let Some(line_txt) = src.lines().nth(self.line as usize - 1) {
+                out.push_str(&format!("   | {}\n   | {}^\n", line_txt, " ".repeat(self.col.saturating_sub(1) as usize)));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::token::Span;
+
+    #[test]
+    fn renders_caret() {
+        let e = DslError::at(Span { lo: 4, hi: 5, line: 1, col: 5 }, "boom").in_file("x.sp");
+        let r = e.render("abc def");
+        assert!(r.contains("x.sp:1:5"));
+        assert!(r.contains("    ^"));
+    }
+}

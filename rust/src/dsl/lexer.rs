@@ -1,0 +1,367 @@
+//! Hand-written lexer for the StarPlat DSL.
+
+use super::diag::DslError;
+use super::token::{Span, Spanned, Tok};
+
+pub struct Lexer<'a> {
+    src: &'a [u8],
+    pos: usize,
+    line: u32,
+    col: u32,
+}
+
+impl<'a> Lexer<'a> {
+    pub fn new(src: &'a str) -> Self {
+        Lexer { src: src.as_bytes(), pos: 0, line: 1, col: 1 }
+    }
+
+    pub fn tokenize(src: &str) -> Result<Vec<Spanned>, DslError> {
+        let mut lx = Lexer::new(src);
+        let mut out = Vec::new();
+        loop {
+            let t = lx.next_token()?;
+            let eof = t.tok == Tok::Eof;
+            out.push(t);
+            if eof {
+                return Ok(out);
+            }
+        }
+    }
+
+    fn peek(&self) -> u8 {
+        self.src.get(self.pos).copied().unwrap_or(0)
+    }
+    fn peek2(&self) -> u8 {
+        self.src.get(self.pos + 1).copied().unwrap_or(0)
+    }
+
+    fn bump(&mut self) -> u8 {
+        let c = self.peek();
+        self.pos += 1;
+        if c == b'\n' {
+            self.line += 1;
+            self.col = 1;
+        } else {
+            self.col += 1;
+        }
+        c
+    }
+
+    fn skip_trivia(&mut self) -> Result<(), DslError> {
+        loop {
+            match self.peek() {
+                b' ' | b'\t' | b'\r' | b'\n' => {
+                    self.bump();
+                }
+                b'/' if self.peek2() == b'/' => {
+                    while self.peek() != b'\n' && self.peek() != 0 {
+                        self.bump();
+                    }
+                }
+                b'/' if self.peek2() == b'*' => {
+                    let start = self.span_here();
+                    self.bump();
+                    self.bump();
+                    loop {
+                        if self.peek() == 0 {
+                            return Err(DslError::at(start, "unterminated block comment"));
+                        }
+                        if self.peek() == b'*' && self.peek2() == b'/' {
+                            self.bump();
+                            self.bump();
+                            break;
+                        }
+                        self.bump();
+                    }
+                }
+                _ => return Ok(()),
+            }
+        }
+    }
+
+    fn span_here(&self) -> Span {
+        Span { lo: self.pos, hi: self.pos, line: self.line, col: self.col }
+    }
+
+    fn next_token(&mut self) -> Result<Spanned, DslError> {
+        self.skip_trivia()?;
+        let mut span = self.span_here();
+        let c = self.peek();
+        let tok = match c {
+            0 => Tok::Eof,
+            b'(' => {
+                self.bump();
+                Tok::LParen
+            }
+            b')' => {
+                self.bump();
+                Tok::RParen
+            }
+            b'{' => {
+                self.bump();
+                Tok::LBrace
+            }
+            b'}' => {
+                self.bump();
+                Tok::RBrace
+            }
+            b',' => {
+                self.bump();
+                Tok::Comma
+            }
+            b';' => {
+                self.bump();
+                Tok::Semi
+            }
+            b':' => {
+                self.bump();
+                Tok::Colon
+            }
+            b'.' => {
+                self.bump();
+                Tok::Dot
+            }
+            b'+' => {
+                self.bump();
+                match self.peek() {
+                    b'=' => {
+                        self.bump();
+                        Tok::PlusEq
+                    }
+                    b'+' => {
+                        self.bump();
+                        Tok::PlusPlus
+                    }
+                    _ => Tok::Plus,
+                }
+            }
+            b'-' => {
+                self.bump();
+                match self.peek() {
+                    b'-' => {
+                        self.bump();
+                        Tok::MinusMinus
+                    }
+                    _ => Tok::Minus,
+                }
+            }
+            b'*' => {
+                self.bump();
+                if self.peek() == b'=' {
+                    self.bump();
+                    Tok::StarEq
+                } else {
+                    Tok::Star
+                }
+            }
+            b'/' => {
+                self.bump();
+                Tok::Slash
+            }
+            b'%' => {
+                self.bump();
+                Tok::Percent
+            }
+            b'<' => {
+                self.bump();
+                if self.peek() == b'=' {
+                    self.bump();
+                    Tok::Le
+                } else {
+                    Tok::Lt
+                }
+            }
+            b'>' => {
+                self.bump();
+                if self.peek() == b'=' {
+                    self.bump();
+                    Tok::Ge
+                } else {
+                    Tok::Gt
+                }
+            }
+            b'=' => {
+                self.bump();
+                if self.peek() == b'=' {
+                    self.bump();
+                    Tok::EqEq
+                } else {
+                    Tok::Assign
+                }
+            }
+            b'!' => {
+                self.bump();
+                if self.peek() == b'=' {
+                    self.bump();
+                    Tok::NotEq
+                } else {
+                    Tok::Not
+                }
+            }
+            b'&' => {
+                self.bump();
+                if self.peek() != b'&' {
+                    return Err(DslError::at(span, "expected `&&`"));
+                }
+                self.bump();
+                if self.peek() == b'=' {
+                    self.bump();
+                    Tok::AndEq
+                } else {
+                    Tok::AndAnd
+                }
+            }
+            b'|' => {
+                self.bump();
+                if self.peek() != b'|' {
+                    return Err(DslError::at(span, "expected `||`"));
+                }
+                self.bump();
+                if self.peek() == b'=' {
+                    self.bump();
+                    Tok::OrEq
+                } else {
+                    Tok::OrOr
+                }
+            }
+            b'0'..=b'9' => self.number(&mut span)?,
+            c if c == b'_' || c.is_ascii_alphabetic() => {
+                let start = self.pos;
+                while self.peek() == b'_' || self.peek().is_ascii_alphanumeric() {
+                    self.bump();
+                }
+                let word = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
+                Tok::keyword(word).unwrap_or_else(|| Tok::Ident(word.to_string()))
+            }
+            other => {
+                return Err(DslError::at(
+                    span,
+                    &format!("unexpected character `{}`", other as char),
+                ))
+            }
+        };
+        span.hi = self.pos;
+        Ok(Spanned { tok, span })
+    }
+
+    fn number(&mut self, span: &mut Span) -> Result<Tok, DslError> {
+        let start = self.pos;
+        while self.peek().is_ascii_digit() {
+            self.bump();
+        }
+        let mut is_float = false;
+        if self.peek() == b'.' && self.peek2().is_ascii_digit() {
+            is_float = true;
+            self.bump();
+            while self.peek().is_ascii_digit() {
+                self.bump();
+            }
+        }
+        if matches!(self.peek(), b'e' | b'E') {
+            is_float = true;
+            self.bump();
+            if matches!(self.peek(), b'+' | b'-') {
+                self.bump();
+            }
+            while self.peek().is_ascii_digit() {
+                self.bump();
+            }
+        }
+        let text = std::str::from_utf8(&self.src[start..self.pos]).unwrap();
+        span.hi = self.pos;
+        if is_float {
+            text.parse::<f64>()
+                .map(Tok::FloatLit)
+                .map_err(|_| DslError::at(*span, "malformed float literal"))
+        } else {
+            text.parse::<i64>()
+                .map(Tok::IntLit)
+                .map_err(|_| DslError::at(*span, "malformed integer literal"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(src: &str) -> Vec<Tok> {
+        Lexer::tokenize(src).unwrap().into_iter().map(|s| s.tok).collect()
+    }
+
+    #[test]
+    fn lexes_keywords_and_idents() {
+        let t = toks("function foo forall INF sigma");
+        assert_eq!(
+            t,
+            vec![
+                Tok::Function,
+                Tok::Ident("foo".into()),
+                Tok::Forall,
+                Tok::Inf,
+                Tok::Ident("sigma".into()),
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_compound_operators() {
+        let t = toks("+= *= && &&= || ||= ++ == != <= >= < > ! =");
+        assert_eq!(
+            t,
+            vec![
+                Tok::PlusEq,
+                Tok::StarEq,
+                Tok::AndAnd,
+                Tok::AndEq,
+                Tok::OrOr,
+                Tok::OrEq,
+                Tok::PlusPlus,
+                Tok::EqEq,
+                Tok::NotEq,
+                Tok::Le,
+                Tok::Ge,
+                Tok::Lt,
+                Tok::Gt,
+                Tok::Not,
+                Tok::Assign,
+                Tok::Eof
+            ]
+        );
+    }
+
+    #[test]
+    fn lexes_numbers() {
+        assert_eq!(toks("42")[0], Tok::IntLit(42));
+        assert_eq!(toks("1.5")[0], Tok::FloatLit(1.5));
+        assert_eq!(toks("2e3")[0], Tok::FloatLit(2000.0));
+        // member access is not a float: v.sigma
+        let t = toks("v.sigma");
+        assert_eq!(t[1], Tok::Dot);
+    }
+
+    #[test]
+    fn comments_and_spans() {
+        let lexed = Lexer::tokenize("// line\nx /* block\n */ y").unwrap();
+        assert_eq!(lexed[0].tok, Tok::Ident("x".into()));
+        assert_eq!(lexed[0].span.line, 2);
+        assert_eq!(lexed[1].tok, Tok::Ident("y".into()));
+        assert_eq!(lexed[1].span.line, 3);
+    }
+
+    #[test]
+    fn errors_on_garbage() {
+        assert!(Lexer::tokenize("a $ b").is_err());
+        assert!(Lexer::tokenize("a & b").is_err());
+        assert!(Lexer::tokenize("/* unterminated").is_err());
+    }
+
+    #[test]
+    fn lexes_full_bc_header() {
+        let t = toks("function ComputeBC(Graph g, propNode<float> BC, SetN<g> sourceSet) {");
+        assert!(t.contains(&Tok::PropNode));
+        assert!(t.contains(&Tok::SetN));
+        assert!(t.contains(&Tok::Lt));
+    }
+}

@@ -1,0 +1,11 @@
+//! StarPlat DSL front-end: lexer, AST, parser, diagnostics, pretty-printer.
+
+pub mod ast;
+pub mod diag;
+pub mod lexer;
+pub mod parser;
+pub mod pretty;
+pub mod token;
+
+pub use ast::{Expr, Function, Stmt, Type};
+pub use parser::{parse, parse_file};

@@ -1,0 +1,803 @@
+//! Recursive-descent parser for the StarPlat DSL.
+
+use super::ast::*;
+use super::diag::DslError;
+use super::lexer::Lexer;
+use super::token::{Span, Spanned, Tok};
+
+pub struct Parser {
+    toks: Vec<Spanned>,
+    pos: usize,
+}
+
+/// Parse a whole source file into its functions.
+pub fn parse(src: &str) -> Result<Vec<Function>, DslError> {
+    let toks = Lexer::tokenize(src)?;
+    let mut p = Parser { toks, pos: 0 };
+    let mut fns = Vec::new();
+    while p.peek() != &Tok::Eof {
+        fns.push(p.function()?);
+    }
+    if fns.is_empty() {
+        return Err(DslError::at(Span::DUMMY, "no functions in source"));
+    }
+    Ok(fns)
+}
+
+/// Parse a file, attaching its path to errors.
+pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Vec<Function>> {
+    let src = std::fs::read_to_string(path)?;
+    parse(&src).map_err(|e| anyhow::anyhow!("{}", e.in_file(&path.display().to_string()).render(&src)))
+}
+
+impl Parser {
+    fn peek(&self) -> &Tok {
+        &self.toks[self.pos].tok
+    }
+    fn peek_at(&self, off: usize) -> &Tok {
+        &self.toks[(self.pos + off).min(self.toks.len() - 1)].tok
+    }
+    fn span(&self) -> Span {
+        self.toks[self.pos].span
+    }
+    fn bump(&mut self) -> Tok {
+        let t = self.toks[self.pos].tok.clone();
+        if self.pos + 1 < self.toks.len() {
+            self.pos += 1;
+        }
+        t
+    }
+    fn eat(&mut self, t: Tok) -> Result<(), DslError> {
+        if *self.peek() == t {
+            self.bump();
+            Ok(())
+        } else {
+            Err(DslError::at(
+                self.span(),
+                &format!("expected {}, found {}", t.describe(), self.peek().describe()),
+            ))
+        }
+    }
+    fn ident(&mut self) -> Result<String, DslError> {
+        match self.peek().clone() {
+            Tok::Ident(s) => {
+                self.bump();
+                Ok(s)
+            }
+            other => {
+                Err(DslError::at(self.span(), &format!("expected identifier, found {}", other.describe())))
+            }
+        }
+    }
+
+    // ---- declarations -------------------------------------------------
+
+    fn function(&mut self) -> Result<Function, DslError> {
+        let span = self.span();
+        self.eat(Tok::Function)?;
+        let name = self.ident()?;
+        self.eat(Tok::LParen)?;
+        let mut params = Vec::new();
+        if *self.peek() != Tok::RParen {
+            loop {
+                params.push(self.param()?);
+                if *self.peek() == Tok::Comma {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.eat(Tok::RParen)?;
+        let body = self.block()?;
+        Ok(Function { name, params, body, span })
+    }
+
+    fn param(&mut self) -> Result<Param, DslError> {
+        let span = self.span();
+        let ty = self.type_()?;
+        let name = self.ident()?;
+        Ok(Param { name, ty, span })
+    }
+
+    fn is_type_start(t: &Tok) -> bool {
+        matches!(
+            t,
+            Tok::Int
+                | Tok::Bool
+                | Tok::Long
+                | Tok::Float
+                | Tok::Double
+                | Tok::Node
+                | Tok::Edge
+                | Tok::Graph
+                | Tok::PropNode
+                | Tok::PropEdge
+                | Tok::SetN
+        )
+    }
+
+    fn type_(&mut self) -> Result<Type, DslError> {
+        let t = self.bump();
+        Ok(match t {
+            Tok::Int => Type::Int,
+            Tok::Bool => Type::Bool,
+            Tok::Long => Type::Long,
+            Tok::Float => Type::Float,
+            Tok::Double => Type::Double,
+            Tok::Node => Type::Node,
+            Tok::Edge => Type::Edge,
+            Tok::Graph => Type::Graph,
+            Tok::PropNode | Tok::PropEdge => {
+                let is_node = t == Tok::PropNode;
+                self.eat(Tok::Lt)?;
+                let inner = self.type_()?;
+                self.eat(Tok::Gt)?;
+                if is_node {
+                    Type::PropNode(Box::new(inner))
+                } else {
+                    Type::PropEdge(Box::new(inner))
+                }
+            }
+            Tok::SetN => {
+                self.eat(Tok::Lt)?;
+                let g = self.ident()?;
+                self.eat(Tok::Gt)?;
+                Type::SetN(g)
+            }
+            other => {
+                return Err(DslError::at(
+                    self.span(),
+                    &format!("expected a type, found {}", other.describe()),
+                ))
+            }
+        })
+    }
+
+    // ---- statements ---------------------------------------------------
+
+    fn block(&mut self) -> Result<Block, DslError> {
+        self.eat(Tok::LBrace)?;
+        let mut stmts = Vec::new();
+        while *self.peek() != Tok::RBrace {
+            if *self.peek() == Tok::Eof {
+                return Err(DslError::at(self.span(), "unexpected end of input inside block"));
+            }
+            stmts.push(self.stmt()?);
+        }
+        self.eat(Tok::RBrace)?;
+        Ok(stmts)
+    }
+
+    fn stmt(&mut self) -> Result<Stmt, DslError> {
+        let span = self.span();
+        match self.peek().clone() {
+            t if Self::is_type_start(&t) => self.decl(span),
+            Tok::Lt => self.minmax_assign(span),
+            Tok::Forall => {
+                self.bump();
+                self.for_loop(span, true)
+            }
+            Tok::For => {
+                self.bump();
+                self.for_loop(span, false)
+            }
+            Tok::IterateInBFS => self.iterate_bfs(span),
+            Tok::IterateInReverse => Err(DslError::at(
+                span,
+                "iterateInReverse must directly follow an iterateInBFS block (paper §2)",
+            )),
+            Tok::FixedPoint => self.fixed_point(span),
+            Tok::Do => self.do_while(span),
+            Tok::While => {
+                self.bump();
+                self.eat(Tok::LParen)?;
+                let cond = self.expr()?;
+                self.eat(Tok::RParen)?;
+                let body = self.block()?;
+                Ok(Stmt::While { cond, body, span })
+            }
+            Tok::If => {
+                self.bump();
+                self.eat(Tok::LParen)?;
+                let cond = self.expr()?;
+                self.eat(Tok::RParen)?;
+                let then = self.block()?;
+                let els = if *self.peek() == Tok::Else {
+                    self.bump();
+                    Some(self.block()?)
+                } else {
+                    None
+                };
+                Ok(Stmt::If { cond, then, els, span })
+            }
+            Tok::Return => {
+                self.bump();
+                let value = self.expr()?;
+                self.eat(Tok::Semi)?;
+                Ok(Stmt::Return { value, span })
+            }
+            Tok::Ident(_) => self.assign_or_call(span),
+            other => Err(DslError::at(span, &format!("unexpected {}", other.describe()))),
+        }
+    }
+
+    fn decl(&mut self, span: Span) -> Result<Stmt, DslError> {
+        let ty = self.type_()?;
+        let name = self.ident()?;
+        let init = if *self.peek() == Tok::Assign {
+            self.bump();
+            Some(self.expr()?)
+        } else {
+            None
+        };
+        self.eat(Tok::Semi)?;
+        Ok(Stmt::Decl { ty, name, init, span })
+    }
+
+    /// `<lv1, lv2, ...> = <Min(a, b), v2, ...>;`
+    fn minmax_assign(&mut self, span: Span) -> Result<Stmt, DslError> {
+        self.eat(Tok::Lt)?;
+        let mut targets = vec![self.lvalue()?];
+        while *self.peek() == Tok::Comma {
+            self.bump();
+            targets.push(self.lvalue()?);
+        }
+        self.eat(Tok::Gt)?;
+        self.eat(Tok::Assign)?;
+        self.eat(Tok::Lt)?;
+        let kind = match self.bump() {
+            Tok::Min => MinMax::Min,
+            Tok::Max => MinMax::Max,
+            other => {
+                return Err(DslError::at(
+                    self.span(),
+                    &format!("expected Min or Max in tuple assignment, found {}", other.describe()),
+                ))
+            }
+        };
+        self.eat(Tok::LParen)?;
+        let _current = self.expr()?; // first arg: the current value (by convention, == target)
+        self.eat(Tok::Comma)?;
+        let compare = self.expr()?;
+        self.eat(Tok::RParen)?;
+        let mut extras_vals = Vec::new();
+        while *self.peek() == Tok::Comma {
+            self.bump();
+            // Additive precedence: the tuple's closing `>` must not be
+            // swallowed as a comparison. Parenthesize comparisons if needed.
+            extras_vals.push(self.add_expr()?);
+        }
+        self.eat(Tok::Gt)?;
+        self.eat(Tok::Semi)?;
+        if extras_vals.len() != targets.len() - 1 {
+            return Err(DslError::at(
+                span,
+                &format!(
+                    "tuple assignment arity mismatch: {} targets but {} values",
+                    targets.len(),
+                    extras_vals.len() + 1
+                ),
+            ));
+        }
+        let mut it = targets.into_iter();
+        let target = it.next().unwrap();
+        let extra = it.zip(extras_vals).collect();
+        Ok(Stmt::MinMaxAssign { kind, target, compare, extra, span })
+    }
+
+    fn lvalue(&mut self) -> Result<LValue, DslError> {
+        let obj = self.ident()?;
+        if *self.peek() == Tok::Dot {
+            self.bump();
+            let prop = self.ident()?;
+            Ok(LValue::Prop { obj, prop })
+        } else {
+            Ok(LValue::Var(obj))
+        }
+    }
+
+    fn for_loop(&mut self, span: Span, parallel: bool) -> Result<Stmt, DslError> {
+        self.eat(Tok::LParen)?;
+        let var = self.ident()?;
+        self.eat(Tok::In)?;
+        let source_obj = self.ident()?;
+        let source = if *self.peek() == Tok::Dot {
+            self.bump();
+            let method = self.ident()?;
+            self.eat(Tok::LParen)?;
+            let arg = if *self.peek() != Tok::RParen { Some(self.ident()?) } else { None };
+            self.eat(Tok::RParen)?;
+            match (method.as_str(), arg) {
+                ("nodes", None) => IterSource::Nodes { graph: source_obj },
+                ("neighbors", Some(of)) => IterSource::Neighbors { graph: source_obj, of },
+                ("nodes_to", Some(of)) => IterSource::NodesTo { graph: source_obj, of },
+                (m, _) => {
+                    return Err(DslError::at(
+                        span,
+                        &format!("unknown iteration source `{source_obj}.{m}(..)` (expected nodes/neighbors/nodes_to)"),
+                    ))
+                }
+            }
+        } else {
+            IterSource::Set { set: source_obj }
+        };
+        // optional `.filter(expr)`
+        let filter = if *self.peek() == Tok::Dot && *self.peek_at(1) == Tok::Filter {
+            self.bump();
+            self.bump();
+            self.eat(Tok::LParen)?;
+            let e = self.expr()?;
+            self.eat(Tok::RParen)?;
+            Some(e)
+        } else {
+            None
+        };
+        self.eat(Tok::RParen)?;
+        let body = self.block()?;
+        Ok(Stmt::For { iter: Iterator_ { var, source, filter }, body, parallel, span })
+    }
+
+    fn iterate_bfs(&mut self, span: Span) -> Result<Stmt, DslError> {
+        self.eat(Tok::IterateInBFS)?;
+        self.eat(Tok::LParen)?;
+        let var = self.ident()?;
+        self.eat(Tok::In)?;
+        let graph = self.ident()?;
+        self.eat(Tok::Dot)?;
+        let m = self.ident()?;
+        if m != "nodes" {
+            return Err(DslError::at(span, "iterateInBFS expects `v in g.nodes() from src`"));
+        }
+        self.eat(Tok::LParen)?;
+        self.eat(Tok::RParen)?;
+        self.eat(Tok::From)?;
+        let from = self.ident()?;
+        self.eat(Tok::RParen)?;
+        let body = self.block()?;
+        let reverse = if *self.peek() == Tok::IterateInReverse {
+            self.bump();
+            self.eat(Tok::LParen)?;
+            let cond = self.expr()?;
+            self.eat(Tok::RParen)?;
+            let rbody = self.block()?;
+            Some((cond, rbody))
+        } else {
+            None
+        };
+        Ok(Stmt::IterateBFS { var, graph, from, body, reverse, span })
+    }
+
+    fn fixed_point(&mut self, span: Span) -> Result<Stmt, DslError> {
+        self.eat(Tok::FixedPoint)?;
+        self.eat(Tok::Until)?;
+        self.eat(Tok::LParen)?;
+        let var = self.ident()?;
+        self.eat(Tok::Colon)?;
+        let cond = self.expr()?;
+        self.eat(Tok::RParen)?;
+        let body = self.block()?;
+        Ok(Stmt::FixedPoint { var, cond, body, span })
+    }
+
+    fn do_while(&mut self, span: Span) -> Result<Stmt, DslError> {
+        self.eat(Tok::Do)?;
+        let body = self.block()?;
+        self.eat(Tok::While)?;
+        self.eat(Tok::LParen)?;
+        let cond = self.expr()?;
+        self.eat(Tok::RParen)?;
+        self.eat(Tok::Semi)?;
+        Ok(Stmt::DoWhile { body, cond, span })
+    }
+
+    /// Statements starting with an identifier: assignment, reduction,
+    /// increment, or a method-call statement like `g.attachNodeProperty(..)`.
+    fn assign_or_call(&mut self, span: Span) -> Result<Stmt, DslError> {
+        let obj = self.ident()?;
+        // method call statement?
+        if *self.peek() == Tok::Dot {
+            if let Tok::Ident(m) = self.peek_at(1).clone() {
+                if *self.peek_at(2) == Tok::LParen {
+                    self.bump(); // .
+                    self.bump(); // method
+                    return self.method_stmt(span, obj, m);
+                }
+            }
+        }
+        let target = if *self.peek() == Tok::Dot {
+            self.bump();
+            let prop = self.ident()?;
+            LValue::Prop { obj, prop }
+        } else {
+            LValue::Var(obj)
+        };
+        let t = self.bump();
+        let stmt = match t {
+            Tok::Assign => {
+                let value = self.expr()?;
+                Stmt::Assign { target, value, span }
+            }
+            Tok::PlusEq => {
+                let value = self.expr()?;
+                Stmt::Reduce { target, op: ReduceOp::Add, value, span }
+            }
+            Tok::StarEq => {
+                let value = self.expr()?;
+                Stmt::Reduce { target, op: ReduceOp::Mul, value, span }
+            }
+            Tok::AndEq => {
+                let value = self.expr()?;
+                Stmt::Reduce { target, op: ReduceOp::And, value, span }
+            }
+            Tok::OrEq => {
+                let value = self.expr()?;
+                Stmt::Reduce { target, op: ReduceOp::Or, value, span }
+            }
+            Tok::PlusPlus => Stmt::Reduce { target, op: ReduceOp::Count, value: Expr::IntLit(1), span },
+            other => {
+                return Err(DslError::at(
+                    span,
+                    &format!("expected assignment or reduction operator, found {}", other.describe()),
+                ))
+            }
+        };
+        self.eat(Tok::Semi)?;
+        Ok(stmt)
+    }
+
+    fn method_stmt(&mut self, span: Span, obj: String, method: String) -> Result<Stmt, DslError> {
+        match method.as_str() {
+            "attachNodeProperty" | "attachEdgeProperty" => {
+                self.eat(Tok::LParen)?;
+                let mut inits = Vec::new();
+                loop {
+                    let prop = self.ident()?;
+                    self.eat(Tok::Assign)?;
+                    let e = self.expr()?;
+                    inits.push((prop, e));
+                    if *self.peek() == Tok::Comma {
+                        self.bump();
+                    } else {
+                        break;
+                    }
+                }
+                self.eat(Tok::RParen)?;
+                self.eat(Tok::Semi)?;
+                Ok(Stmt::AttachNodeProperty { graph: obj, inits, span })
+            }
+            other => Err(DslError::at(
+                span,
+                &format!("unknown statement method `{obj}.{other}(..)`"),
+            )),
+        }
+    }
+
+    // ---- expressions (precedence climbing) -----------------------------
+
+    pub fn expr(&mut self) -> Result<Expr, DslError> {
+        self.or_expr()
+    }
+
+    fn or_expr(&mut self) -> Result<Expr, DslError> {
+        let mut lhs = self.and_expr()?;
+        while *self.peek() == Tok::OrOr {
+            self.bump();
+            let rhs = self.and_expr()?;
+            lhs = Expr::Binary { op: BinOp::Or, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    fn and_expr(&mut self) -> Result<Expr, DslError> {
+        let mut lhs = self.cmp_expr()?;
+        while *self.peek() == Tok::AndAnd {
+            self.bump();
+            let rhs = self.cmp_expr()?;
+            lhs = Expr::Binary { op: BinOp::And, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+        Ok(lhs)
+    }
+
+    fn cmp_expr(&mut self) -> Result<Expr, DslError> {
+        let lhs = self.add_expr()?;
+        let op = match self.peek() {
+            Tok::Lt => BinOp::Lt,
+            Tok::Gt => BinOp::Gt,
+            Tok::Le => BinOp::Le,
+            Tok::Ge => BinOp::Ge,
+            Tok::EqEq => BinOp::Eq,
+            Tok::NotEq => BinOp::Ne,
+            _ => return Ok(lhs),
+        };
+        self.bump();
+        let rhs = self.add_expr()?;
+        Ok(Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) })
+    }
+
+    fn add_expr(&mut self) -> Result<Expr, DslError> {
+        let mut lhs = self.mul_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Plus => BinOp::Add,
+                Tok::Minus => BinOp::Sub,
+                _ => return Ok(lhs),
+            };
+            self.bump();
+            let rhs = self.mul_expr()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+    }
+
+    fn mul_expr(&mut self) -> Result<Expr, DslError> {
+        let mut lhs = self.unary_expr()?;
+        loop {
+            let op = match self.peek() {
+                Tok::Star => BinOp::Mul,
+                Tok::Slash => BinOp::Div,
+                Tok::Percent => BinOp::Mod,
+                _ => return Ok(lhs),
+            };
+            self.bump();
+            let rhs = self.unary_expr()?;
+            lhs = Expr::Binary { op, lhs: Box::new(lhs), rhs: Box::new(rhs) };
+        }
+    }
+
+    fn unary_expr(&mut self) -> Result<Expr, DslError> {
+        match self.peek() {
+            Tok::Not => {
+                self.bump();
+                let e = self.unary_expr()?;
+                Ok(Expr::Unary { op: UnOp::Not, expr: Box::new(e) })
+            }
+            Tok::Minus => {
+                self.bump();
+                let e = self.unary_expr()?;
+                Ok(Expr::Unary { op: UnOp::Neg, expr: Box::new(e) })
+            }
+            _ => self.postfix_expr(),
+        }
+    }
+
+    fn postfix_expr(&mut self) -> Result<Expr, DslError> {
+        match self.peek().clone() {
+            Tok::IntLit(n) => {
+                self.bump();
+                Ok(Expr::IntLit(n))
+            }
+            Tok::FloatLit(x) => {
+                self.bump();
+                Ok(Expr::FloatLit(x))
+            }
+            Tok::True => {
+                self.bump();
+                Ok(Expr::BoolLit(true))
+            }
+            Tok::False => {
+                self.bump();
+                Ok(Expr::BoolLit(false))
+            }
+            Tok::Inf => {
+                self.bump();
+                Ok(Expr::Inf)
+            }
+            Tok::LParen => {
+                self.bump();
+                let e = self.expr()?;
+                self.eat(Tok::RParen)?;
+                Ok(e)
+            }
+            Tok::Ident(name) => {
+                self.bump();
+                // free function call: abs(x)
+                if *self.peek() == Tok::LParen {
+                    let args = self.call_args()?;
+                    return Ok(Expr::Call { recv: None, name, args });
+                }
+                // member: v.prop or g.method(..)
+                if *self.peek() == Tok::Dot {
+                    self.bump();
+                    let member = self.ident()?;
+                    if *self.peek() == Tok::LParen {
+                        let args = self.call_args()?;
+                        return Ok(Expr::Call { recv: Some(name), name: member, args });
+                    }
+                    return Ok(Expr::Prop { obj: name, prop: member });
+                }
+                Ok(Expr::Var(name))
+            }
+            other => Err(DslError::at(
+                self.span(),
+                &format!("expected an expression, found {}", other.describe()),
+            )),
+        }
+    }
+
+    fn call_args(&mut self) -> Result<Vec<Expr>, DslError> {
+        self.eat(Tok::LParen)?;
+        let mut args = Vec::new();
+        if *self.peek() != Tok::RParen {
+            loop {
+                args.push(self.expr()?);
+                if *self.peek() == Tok::Comma {
+                    self.bump();
+                } else {
+                    break;
+                }
+            }
+        }
+        self.eat(Tok::RParen)?;
+        Ok(args)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse1(src: &str) -> Function {
+        parse(src).unwrap().remove(0)
+    }
+
+    #[test]
+    fn parses_minimal_function() {
+        let f = parse1("function f(Graph g) { int x = 1; }");
+        assert_eq!(f.name, "f");
+        assert_eq!(f.params.len(), 1);
+        assert!(matches!(f.body[0], Stmt::Decl { .. }));
+    }
+
+    #[test]
+    fn parses_forall_with_filter() {
+        let f = parse1(
+            "function f(Graph g, propNode<bool> modified) {
+               forall (v in g.nodes().filter(modified == True)) { v.modified = False; }
+             }",
+        );
+        match &f.body[0] {
+            Stmt::For { iter, parallel, .. } => {
+                assert!(*parallel);
+                assert_eq!(iter.var, "v");
+                assert!(iter.filter.is_some());
+                assert_eq!(iter.source, IterSource::Nodes { graph: "g".into() });
+            }
+            s => panic!("expected forall, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_minmax_tuple_assign() {
+        let f = parse1(
+            "function f(Graph g, propNode<int> dist, propNode<bool> m) {
+               forall (v in g.nodes()) { forall (nbr in g.neighbors(v)) {
+                 <nbr.dist, nbr.m> = <Min(nbr.dist, v.dist + 3), True>;
+               } }
+             }",
+        );
+        let Stmt::For { body, .. } = &f.body[0] else { panic!() };
+        let Stmt::For { body, .. } = &body[0] else { panic!() };
+        match &body[0] {
+            Stmt::MinMaxAssign { kind, target, extra, .. } => {
+                assert_eq!(*kind, MinMax::Min);
+                assert_eq!(*target, LValue::Prop { obj: "nbr".into(), prop: "dist".into() });
+                assert_eq!(extra.len(), 1);
+            }
+            s => panic!("expected MinMaxAssign, got {s:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_fixed_point_and_attach() {
+        let f = parse1(
+            "function f(Graph g, propNode<bool> modified) {
+               bool fin = False;
+               g.attachNodeProperty(modified = False);
+               fixedPoint until (fin: !modified) { }
+             }",
+        );
+        assert!(matches!(f.body[1], Stmt::AttachNodeProperty { .. }));
+        match &f.body[2] {
+            Stmt::FixedPoint { var, cond, .. } => {
+                assert_eq!(var, "fin");
+                assert!(matches!(cond, Expr::Unary { op: UnOp::Not, .. }));
+            }
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn parses_bfs_with_reverse() {
+        let f = parse1(
+            "function f(Graph g, node src, propNode<float> sigma) {
+               iterateInBFS(v in g.nodes() from src) { }
+               iterateInReverse(v != src) { }
+             }",
+        );
+        match &f.body[0] {
+            Stmt::IterateBFS { var, from, reverse, .. } => {
+                assert_eq!(var, "v");
+                assert_eq!(from, "src");
+                assert!(reverse.is_some());
+            }
+            s => panic!("{s:?}"),
+        }
+    }
+
+    #[test]
+    fn orphan_reverse_is_error() {
+        assert!(parse("function f(Graph g) { iterateInReverse(v != s) { } }").is_err());
+    }
+
+    #[test]
+    fn parses_reductions() {
+        let f = parse1(
+            "function f(Graph g) {
+               long c = 0; float x = 1;
+               c += 1; x *= 2; c++;
+               bool a = True; bool o = False;
+               a &&= False; o ||= True;
+             }",
+        );
+        let ops: Vec<ReduceOp> = f
+            .body
+            .iter()
+            .filter_map(|s| match s {
+                Stmt::Reduce { op, .. } => Some(*op),
+                _ => None,
+            })
+            .collect();
+        assert_eq!(
+            ops,
+            vec![ReduceOp::Add, ReduceOp::Mul, ReduceOp::Count, ReduceOp::And, ReduceOp::Or]
+        );
+    }
+
+    #[test]
+    fn precedence() {
+        let f = parse1("function f(Graph g) { float x = 1 + 2 * 3; }");
+        let Stmt::Decl { init: Some(e), .. } = &f.body[0] else { panic!() };
+        // 1 + (2*3)
+        match e {
+            Expr::Binary { op: BinOp::Add, rhs, .. } => {
+                assert!(matches!(**rhs, Expr::Binary { op: BinOp::Mul, .. }))
+            }
+            _ => panic!("{e:?}"),
+        }
+    }
+
+    #[test]
+    fn arity_mismatch_in_tuple_assign() {
+        let r = parse(
+            "function f(Graph g, propNode<int> d) {
+               <v.d, v.d, v.d> = <Min(v.d, 1), True>;
+             }",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn parses_do_while_and_method_exprs() {
+        let f = parse1(
+            "function f(Graph g, propNode<float> pr) {
+               float n = g.num_nodes();
+               do {
+                 forall (v in g.nodes()) {
+                   float s = 0;
+                   for (nbr in g.nodes_to(v)) { s = s + nbr.pr / nbr.outDegree(); }
+                 }
+               } while (n > 0);
+             }",
+        );
+        assert!(matches!(f.body[1], Stmt::DoWhile { .. }));
+    }
+
+    #[test]
+    fn parses_all_shipped_programs() {
+        for p in ["bc.sp", "pr.sp", "sssp.sp", "tc.sp", "cc.sp", "bfs.sp"] {
+            let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("dsl_programs").join(p);
+            let fns = parse_file(&path).unwrap_or_else(|e| panic!("{p}: {e}"));
+            assert_eq!(fns.len(), 1, "{p}");
+        }
+    }
+}

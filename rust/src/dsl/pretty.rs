@@ -1,0 +1,191 @@
+//! Pretty-printer for the DSL AST.
+//!
+//! Produces parseable StarPlat source; `parse(pretty(ast)) == ast` is a
+//! property test in `rust/tests/`, and the LoC bench uses it to measure DSL
+//! program sizes uniformly.
+
+use super::ast::*;
+
+pub fn pretty_function(f: &Function) -> String {
+    let mut out = String::new();
+    let params: Vec<String> =
+        f.params.iter().map(|p| format!("{} {}", p.ty.display(), p.name)).collect();
+    out.push_str(&format!("function {}({}) {{\n", f.name, params.join(", ")));
+    for s in &f.body {
+        stmt(&mut out, s, 1);
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn ind(out: &mut String, level: usize) {
+    out.push_str(&"  ".repeat(level));
+}
+
+fn block(out: &mut String, b: &Block, level: usize) {
+    out.push_str("{\n");
+    for s in b {
+        stmt(out, s, level + 1);
+    }
+    ind(out, level);
+    out.push('}');
+}
+
+fn stmt(out: &mut String, s: &Stmt, level: usize) {
+    ind(out, level);
+    match s {
+        Stmt::Decl { ty, name, init, .. } => {
+            out.push_str(&format!("{} {}", ty.display(), name));
+            if let Some(e) = init {
+                out.push_str(&format!(" = {}", expr(e)));
+            }
+            out.push_str(";\n");
+        }
+        Stmt::Assign { target, value, .. } => {
+            out.push_str(&format!("{} = {};\n", lvalue(target), expr(value)));
+        }
+        Stmt::Reduce { target, op, value, .. } => match op {
+            ReduceOp::Count => out.push_str(&format!("{}++;\n", lvalue(target))),
+            _ => out.push_str(&format!("{} {} {};\n", lvalue(target), op.symbol(), expr(value))),
+        },
+        Stmt::MinMaxAssign { kind, target, compare, extra, .. } => {
+            let mut tgts = vec![lvalue(target)];
+            let mut vals = vec![format!(
+                "{}({}, {})",
+                if *kind == MinMax::Min { "Min" } else { "Max" },
+                lvalue(target),
+                expr(compare)
+            )];
+            for (t, v) in extra {
+                tgts.push(lvalue(t));
+                vals.push(expr(v));
+            }
+            out.push_str(&format!("<{}> = <{}>;\n", tgts.join(", "), vals.join(", ")));
+        }
+        Stmt::AttachNodeProperty { graph, inits, .. } => {
+            let args: Vec<String> =
+                inits.iter().map(|(p, e)| format!("{} = {}", p, expr(e))).collect();
+            out.push_str(&format!("{}.attachNodeProperty({});\n", graph, args.join(", ")));
+        }
+        Stmt::For { iter, body, parallel, .. } => {
+            let kw = if *parallel { "forall" } else { "for" };
+            let src = match &iter.source {
+                IterSource::Nodes { graph } => format!("{graph}.nodes()"),
+                IterSource::Neighbors { graph, of } => format!("{graph}.neighbors({of})"),
+                IterSource::NodesTo { graph, of } => format!("{graph}.nodes_to({of})"),
+                IterSource::Set { set } => set.clone(),
+            };
+            let filt = iter.filter.as_ref().map(|e| format!(".filter({})", expr(e))).unwrap_or_default();
+            out.push_str(&format!("{kw} ({} in {src}{filt}) ", iter.var));
+            block(out, body, level);
+            out.push('\n');
+        }
+        Stmt::IterateBFS { var, graph, from, body, reverse, .. } => {
+            out.push_str(&format!("iterateInBFS({var} in {graph}.nodes() from {from}) "));
+            block(out, body, level);
+            out.push('\n');
+            if let Some((cond, rbody)) = reverse {
+                ind(out, level);
+                out.push_str(&format!("iterateInReverse({}) ", expr(cond)));
+                block(out, rbody, level);
+                out.push('\n');
+            }
+        }
+        Stmt::FixedPoint { var, cond, body, .. } => {
+            out.push_str(&format!("fixedPoint until ({var}: {}) ", expr(cond)));
+            block(out, body, level);
+            out.push('\n');
+        }
+        Stmt::DoWhile { body, cond, .. } => {
+            out.push_str("do ");
+            block(out, body, level);
+            out.push_str(&format!(" while ({});\n", expr(cond)));
+        }
+        Stmt::While { cond, body, .. } => {
+            out.push_str(&format!("while ({}) ", expr(cond)));
+            block(out, body, level);
+            out.push('\n');
+        }
+        Stmt::If { cond, then, els, .. } => {
+            out.push_str(&format!("if ({}) ", expr(cond)));
+            block(out, then, level);
+            if let Some(e) = els {
+                out.push_str(" else ");
+                block(out, e, level);
+            }
+            out.push('\n');
+        }
+        Stmt::Return { value, .. } => {
+            out.push_str(&format!("return {};\n", expr(value)));
+        }
+    }
+}
+
+fn lvalue(lv: &LValue) -> String {
+    match lv {
+        LValue::Var(v) => v.clone(),
+        LValue::Prop { obj, prop } => format!("{obj}.{prop}"),
+    }
+}
+
+pub fn expr(e: &Expr) -> String {
+    match e {
+        Expr::IntLit(n) => n.to_string(),
+        Expr::FloatLit(x) => {
+            if x.fract() == 0.0 {
+                format!("{x:.1}")
+            } else {
+                x.to_string()
+            }
+        }
+        Expr::BoolLit(true) => "True".into(),
+        Expr::BoolLit(false) => "False".into(),
+        Expr::Inf => "INF".into(),
+        Expr::Var(v) => v.clone(),
+        Expr::Prop { obj, prop } => format!("{obj}.{prop}"),
+        Expr::Call { recv, name, args } => {
+            let a: Vec<String> = args.iter().map(expr).collect();
+            match recv {
+                Some(r) => format!("{r}.{name}({})", a.join(", ")),
+                None => format!("{name}({})", a.join(", ")),
+            }
+        }
+        Expr::Unary { op, expr: e } => {
+            let sym = match op {
+                UnOp::Neg => "-",
+                UnOp::Not => "!",
+            };
+            format!("{sym}{}", atom(e))
+        }
+        Expr::Binary { op, lhs, rhs } => {
+            format!("({} {} {})", expr(lhs), op.symbol(), expr(rhs))
+        }
+    }
+}
+
+fn atom(e: &Expr) -> String {
+    match e {
+        Expr::Binary { .. } => format!("({})", expr(e)),
+        _ => expr(e),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse;
+
+    #[test]
+    fn roundtrip_shipped_programs() {
+        for p in ["bc.sp", "pr.sp", "sssp.sp", "tc.sp", "cc.sp", "bfs.sp"] {
+            let path =
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("dsl_programs").join(p);
+            let src = std::fs::read_to_string(&path).unwrap();
+            let fns = parse(&src).unwrap_or_else(|e| panic!("{p}: {e}"));
+            let printed = pretty_function(&fns[0]);
+            let reparsed = parse(&printed).unwrap_or_else(|e| panic!("{p} reparse: {e}\n{printed}"));
+            // Compare structurally, ignoring spans, via re-printing.
+            assert_eq!(printed, pretty_function(&reparsed[0]), "{p} round-trip");
+        }
+    }
+}

@@ -1,0 +1,212 @@
+//! Token set for the StarPlat DSL (paper §2.1).
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tok {
+    // literals & identifiers
+    Ident(String),
+    IntLit(i64),
+    FloatLit(f64),
+
+    // keywords
+    Function,
+    Graph,
+    Node,
+    Edge,
+    Int,
+    Bool,
+    Long,
+    Float,
+    Double,
+    PropNode,
+    PropEdge,
+    SetN,
+    Forall,
+    For,
+    In,
+    If,
+    Else,
+    While,
+    Do,
+    Return,
+    FixedPoint,
+    Until,
+    IterateInBFS,
+    IterateInReverse,
+    From,
+    Filter,
+    Min,
+    Max,
+    True,
+    False,
+    Inf,
+
+    // punctuation / operators
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    Comma,
+    Semi,
+    Colon,
+    Dot,
+    Assign,     // =
+    PlusEq,     // +=
+    StarEq,     // *=
+    AndEq,      // &&=
+    OrEq,       // ||=
+    PlusPlus,   // ++
+    MinusMinus, // --
+    Plus,
+    Minus,
+    Star,
+    Slash,
+    Percent,
+    Lt,
+    Gt,
+    Le,
+    Ge,
+    EqEq,
+    NotEq,
+    AndAnd,
+    OrOr,
+    Not,
+
+    Eof,
+}
+
+impl Tok {
+    /// Keyword lookup for identifiers.
+    pub fn keyword(s: &str) -> Option<Tok> {
+        Some(match s {
+            "function" => Tok::Function,
+            "Graph" => Tok::Graph,
+            "node" => Tok::Node,
+            "edge" => Tok::Edge,
+            "int" => Tok::Int,
+            "bool" => Tok::Bool,
+            "long" => Tok::Long,
+            "float" => Tok::Float,
+            "double" => Tok::Double,
+            "propNode" => Tok::PropNode,
+            "propEdge" => Tok::PropEdge,
+            "SetN" => Tok::SetN,
+            "forall" => Tok::Forall,
+            "for" => Tok::For,
+            "in" => Tok::In,
+            "if" => Tok::If,
+            "else" => Tok::Else,
+            "while" => Tok::While,
+            "do" => Tok::Do,
+            "return" => Tok::Return,
+            "fixedPoint" => Tok::FixedPoint,
+            "until" => Tok::Until,
+            "iterateInBFS" => Tok::IterateInBFS,
+            "iterateInReverse" => Tok::IterateInReverse,
+            "from" => Tok::From,
+            "filter" => Tok::Filter,
+            "Min" => Tok::Min,
+            "Max" => Tok::Max,
+            "True" => Tok::True,
+            "False" => Tok::False,
+            "INF" => Tok::Inf,
+            _ => return None,
+        })
+    }
+
+    pub fn describe(&self) -> String {
+        match self {
+            Tok::Ident(s) => format!("identifier `{s}`"),
+            Tok::IntLit(n) => format!("integer `{n}`"),
+            Tok::FloatLit(x) => format!("float `{x}`"),
+            Tok::Eof => "end of input".to_string(),
+            other => format!("`{}`", other.text()),
+        }
+    }
+
+    /// Literal text for fixed tokens (used by diagnostics and the pretty
+    /// printer).
+    pub fn text(&self) -> &'static str {
+        match self {
+            Tok::Function => "function",
+            Tok::Graph => "Graph",
+            Tok::Node => "node",
+            Tok::Edge => "edge",
+            Tok::Int => "int",
+            Tok::Bool => "bool",
+            Tok::Long => "long",
+            Tok::Float => "float",
+            Tok::Double => "double",
+            Tok::PropNode => "propNode",
+            Tok::PropEdge => "propEdge",
+            Tok::SetN => "SetN",
+            Tok::Forall => "forall",
+            Tok::For => "for",
+            Tok::In => "in",
+            Tok::If => "if",
+            Tok::Else => "else",
+            Tok::While => "while",
+            Tok::Do => "do",
+            Tok::Return => "return",
+            Tok::FixedPoint => "fixedPoint",
+            Tok::Until => "until",
+            Tok::IterateInBFS => "iterateInBFS",
+            Tok::IterateInReverse => "iterateInReverse",
+            Tok::From => "from",
+            Tok::Filter => "filter",
+            Tok::Min => "Min",
+            Tok::Max => "Max",
+            Tok::True => "True",
+            Tok::False => "False",
+            Tok::Inf => "INF",
+            Tok::LParen => "(",
+            Tok::RParen => ")",
+            Tok::LBrace => "{",
+            Tok::RBrace => "}",
+            Tok::Comma => ",",
+            Tok::Semi => ";",
+            Tok::Colon => ":",
+            Tok::Dot => ".",
+            Tok::Assign => "=",
+            Tok::PlusEq => "+=",
+            Tok::StarEq => "*=",
+            Tok::AndEq => "&&=",
+            Tok::OrEq => "||=",
+            Tok::PlusPlus => "++",
+            Tok::MinusMinus => "--",
+            Tok::Plus => "+",
+            Tok::Minus => "-",
+            Tok::Star => "*",
+            Tok::Slash => "/",
+            Tok::Percent => "%",
+            Tok::Lt => "<",
+            Tok::Gt => ">",
+            Tok::Le => "<=",
+            Tok::Ge => ">=",
+            Tok::EqEq => "==",
+            Tok::NotEq => "!=",
+            Tok::AndAnd => "&&",
+            Tok::OrOr => "||",
+            Tok::Not => "!",
+            _ => "?",
+        }
+    }
+}
+
+/// Byte-offset source span for diagnostics.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    pub lo: usize,
+    pub hi: usize,
+    pub line: u32,
+    pub col: u32,
+}
+
+impl Span {
+    pub const DUMMY: Span = Span { lo: 0, hi: 0, line: 0, col: 0 };
+}
+
+#[derive(Clone, Debug)]
+pub struct Spanned {
+    pub tok: Tok,
+    pub span: Span,
+}

@@ -1,0 +1,262 @@
+//! Compressed Sparse Row graph storage.
+//!
+//! The paper (§3.1) settles on CSR because the same offset-based arrays work
+//! unchanged across every accelerator and the CPU. We keep exactly its
+//! layout: `index_of_nodes` (offsets, |V|+1), `edge_list` (destinations, |E|),
+//! `weight` (|E|), plus the reverse-CSR arrays (`rev_index_of_nodes`,
+//! `src_list`) that the generated PageRank / BC-backward code pulls from.
+
+pub type Node = u32;
+pub type Weight = i32;
+
+/// Immutable CSR graph with optional reverse adjacency and edge weights.
+#[derive(Clone, Debug)]
+pub struct Graph {
+    /// Forward offsets (`g.indexofNodes` in the paper's generated code).
+    pub offsets: Vec<u32>,
+    /// Forward destinations (`g.edgeList`).
+    pub adj: Vec<Node>,
+    /// Edge weights, parallel to `adj`.
+    pub weights: Vec<Weight>,
+    /// Reverse offsets (`g.rev_indexofNodes`).
+    pub rev_offsets: Vec<u32>,
+    /// Reverse sources (`g.srcList`).
+    pub rev_adj: Vec<Node>,
+    /// For reverse edge i, the index of the corresponding forward edge.
+    pub rev_edge_id: Vec<u32>,
+    /// Short display name (e.g. "RM", "US" in Table 2).
+    pub name: String,
+}
+
+impl Graph {
+    pub fn num_nodes(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    pub fn num_edges(&self) -> usize {
+        self.adj.len()
+    }
+
+    /// Out-neighbors of `v` (`g.neighbors(v)`).
+    #[inline]
+    pub fn neighbors(&self, v: Node) -> &[Node] {
+        &self.adj[self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize]
+    }
+
+    /// Edge ids of `v`'s out-edges.
+    #[inline]
+    pub fn edge_range(&self, v: Node) -> std::ops::Range<usize> {
+        self.offsets[v as usize] as usize..self.offsets[v as usize + 1] as usize
+    }
+
+    /// In-neighbors of `v` (`g.nodes_to(v)` in StarPlat).
+    #[inline]
+    pub fn in_neighbors(&self, v: Node) -> &[Node] {
+        &self.rev_adj
+            [self.rev_offsets[v as usize] as usize..self.rev_offsets[v as usize + 1] as usize]
+    }
+
+    #[inline]
+    pub fn out_degree(&self, v: Node) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    #[inline]
+    pub fn in_degree(&self, v: Node) -> usize {
+        (self.rev_offsets[v as usize + 1] - self.rev_offsets[v as usize]) as usize
+    }
+
+    /// `g.is_an_edge(u, w)` — binary search; the builder sorts adjacency.
+    pub fn is_an_edge(&self, u: Node, w: Node) -> bool {
+        self.neighbors(u).binary_search(&w).is_ok()
+    }
+
+    /// Weight of forward edge id `e`.
+    #[inline]
+    pub fn weight(&self, e: usize) -> Weight {
+        self.weights[e]
+    }
+
+    /// Total weight bounds, for the DSL's `minWt`/`maxWt` aggregates.
+    pub fn min_weight(&self) -> Weight {
+        self.weights.iter().copied().min().unwrap_or(0)
+    }
+    pub fn max_weight(&self) -> Weight {
+        self.weights.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Undirected view check helper (used by TC tests): every edge has its
+    /// reverse present.
+    pub fn is_symmetric(&self) -> bool {
+        (0..self.num_nodes() as Node)
+            .all(|u| self.neighbors(u).iter().all(|&w| self.is_an_edge(w, u)))
+    }
+}
+
+/// Mutable edge-list builder that produces a [`Graph`].
+#[derive(Default, Debug)]
+pub struct GraphBuilder {
+    pub num_nodes: usize,
+    pub edges: Vec<(Node, Node, Weight)>,
+    pub name: String,
+}
+
+impl GraphBuilder {
+    pub fn new(num_nodes: usize) -> Self {
+        GraphBuilder { num_nodes, edges: Vec::new(), name: String::new() }
+    }
+
+    pub fn named(mut self, name: &str) -> Self {
+        self.name = name.to_string();
+        self
+    }
+
+    pub fn add_edge(&mut self, u: Node, v: Node, w: Weight) {
+        debug_assert!((u as usize) < self.num_nodes && (v as usize) < self.num_nodes);
+        self.edges.push((u, v, w));
+    }
+
+    /// Add both (u,v) and (v,u).
+    pub fn add_undirected(&mut self, u: Node, v: Node, w: Weight) {
+        self.add_edge(u, v, w);
+        self.add_edge(v, u, w);
+    }
+
+    /// Deduplicate parallel edges (keeping the minimum weight) and drop
+    /// self-loops. The paper's inputs are simple graphs.
+    pub fn simplify(&mut self) {
+        self.edges.retain(|&(u, v, _)| u != v);
+        self.edges.sort_unstable();
+        self.edges.dedup_by(|a, b| {
+            if a.0 == b.0 && a.1 == b.1 {
+                b.2 = b.2.min(a.2);
+                true
+            } else {
+                false
+            }
+        });
+    }
+
+    /// Build CSR + reverse CSR. Adjacency is sorted per-vertex (required by
+    /// `is_an_edge` binary search and the sorted-CSR TC variants).
+    pub fn build(mut self) -> Graph {
+        let n = self.num_nodes;
+        self.edges.sort_unstable();
+        let m = self.edges.len();
+
+        let mut offsets = vec![0u32; n + 1];
+        for &(u, _, _) in &self.edges {
+            offsets[u as usize + 1] += 1;
+        }
+        for i in 0..n {
+            offsets[i + 1] += offsets[i];
+        }
+        let mut adj = Vec::with_capacity(m);
+        let mut weights = Vec::with_capacity(m);
+        for &(_, v, w) in &self.edges {
+            adj.push(v);
+            weights.push(w);
+        }
+
+        // Reverse CSR via counting sort on destination.
+        let mut rev_offsets = vec![0u32; n + 1];
+        for &(_, v, _) in &self.edges {
+            rev_offsets[v as usize + 1] += 1;
+        }
+        for i in 0..n {
+            rev_offsets[i + 1] += rev_offsets[i];
+        }
+        let mut cursor: Vec<u32> = rev_offsets[..n].to_vec();
+        let mut rev_adj = vec![0 as Node; m];
+        let mut rev_edge_id = vec![0u32; m];
+        for (e, &(u, v, _)) in self.edges.iter().enumerate() {
+            let slot = cursor[v as usize] as usize;
+            rev_adj[slot] = u;
+            rev_edge_id[slot] = e as u32;
+            cursor[v as usize] += 1;
+        }
+
+        Graph { offsets, adj, weights, rev_offsets, rev_adj, rev_edge_id, name: self.name }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // 0 -> 1 -> 3, 0 -> 2 -> 3
+        let mut b = GraphBuilder::new(4).named("diamond");
+        b.add_edge(0, 1, 5);
+        b.add_edge(0, 2, 2);
+        b.add_edge(1, 3, 1);
+        b.add_edge(2, 3, 7);
+        b.build()
+    }
+
+    #[test]
+    fn csr_shape() {
+        let g = diamond();
+        assert_eq!(g.num_nodes(), 4);
+        assert_eq!(g.num_edges(), 4);
+        assert_eq!(g.neighbors(0), &[1, 2]);
+        assert_eq!(g.neighbors(3), &[] as &[Node]);
+        assert_eq!(g.out_degree(0), 2);
+        assert_eq!(g.in_degree(3), 2);
+    }
+
+    #[test]
+    fn reverse_csr_matches_forward() {
+        let g = diamond();
+        assert_eq!(g.in_neighbors(3), &[1, 2]);
+        assert_eq!(g.in_neighbors(0), &[] as &[Node]);
+        // rev_edge_id points at the right forward edge (weights agree)
+        for v in 0..4u32 {
+            let lo = g.rev_offsets[v as usize] as usize;
+            let hi = g.rev_offsets[v as usize + 1] as usize;
+            for i in lo..hi {
+                let e = g.rev_edge_id[i] as usize;
+                assert_eq!(g.adj[e], v);
+            }
+        }
+    }
+
+    #[test]
+    fn is_an_edge_binary_search() {
+        let g = diamond();
+        assert!(g.is_an_edge(0, 2));
+        assert!(!g.is_an_edge(2, 0));
+        assert!(!g.is_an_edge(3, 3));
+    }
+
+    #[test]
+    fn simplify_dedups_and_drops_loops() {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1, 9);
+        b.add_edge(0, 1, 4);
+        b.add_edge(1, 1, 1);
+        b.add_edge(2, 0, 3);
+        b.simplify();
+        let g = b.build();
+        assert_eq!(g.num_edges(), 2);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.weight(0), 4); // min kept
+    }
+
+    #[test]
+    fn undirected_symmetry() {
+        let mut b = GraphBuilder::new(3);
+        b.add_undirected(0, 1, 1);
+        b.add_undirected(1, 2, 1);
+        let g = b.build();
+        assert!(g.is_symmetric());
+        assert_eq!(g.num_edges(), 4);
+    }
+
+    #[test]
+    fn weight_aggregates() {
+        let g = diamond();
+        assert_eq!(g.min_weight(), 1);
+        assert_eq!(g.max_weight(), 7);
+    }
+}

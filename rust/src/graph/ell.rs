@@ -1,0 +1,233 @@
+//! ELL (padded, "sliced-CSR") layout for the XLA accelerator backend.
+//!
+//! XLA wants dense rectangular arrays; we pad every vertex's neighbor list to
+//! a common width `width` with sentinel entries (self-index, masked weight).
+//! This is the TPU-flavoured analogue of the paper's warp-per-vertex CSR
+//! traversal: the `[N, width]` index/weight matrices tile cleanly into VMEM
+//! blocks via Pallas BlockSpec (see DESIGN.md §2).
+//!
+//! A pull-mode (in-edge) variant is also built, because the XLA kernels use
+//! pull formulations to avoid scatter atomics.
+
+use super::csr::{Graph, Node};
+
+#[derive(Clone, Debug)]
+pub struct EllGraph {
+    /// Number of real vertices.
+    pub n: usize,
+    /// Padded vertex count (rounded up to `row_pad` multiple for tiling).
+    pub n_pad: usize,
+    /// Neighbor-list width (max degree, rounded up to `width_pad` multiple).
+    pub width: usize,
+    /// `[n_pad * width]` row-major neighbor indices; sentinel = own row index.
+    pub idx: Vec<u32>,
+    /// `[n_pad * width]` weights; sentinel entries get 0.
+    pub wgt: Vec<i32>,
+    /// `[n_pad * width]` validity mask (1.0 real edge / 0.0 padding).
+    pub mask: Vec<f32>,
+    /// `[n_pad]` real out-degrees (0 for padding rows).
+    pub degree: Vec<i32>,
+}
+
+fn round_up(x: usize, m: usize) -> usize {
+    x.div_ceil(m.max(1)) * m.max(1)
+}
+
+impl EllGraph {
+    /// Pack the *out*-adjacency (push direction).
+    pub fn from_csr_out(g: &Graph, row_pad: usize, width_pad: usize) -> EllGraph {
+        Self::pack(g, false, row_pad, width_pad)
+    }
+
+    /// Pack the *in*-adjacency (pull direction; what the XLA kernels use).
+    pub fn from_csr_in(g: &Graph, row_pad: usize, width_pad: usize) -> EllGraph {
+        Self::pack(g, true, row_pad, width_pad)
+    }
+
+    fn pack(g: &Graph, pull: bool, row_pad: usize, width_pad: usize) -> EllGraph {
+        let n = g.num_nodes();
+        let n_pad = round_up(n.max(1), row_pad);
+        let max_deg = (0..n as Node)
+            .map(|v| if pull { g.in_degree(v) } else { g.out_degree(v) })
+            .max()
+            .unwrap_or(0);
+        let width = round_up(max_deg.max(1), width_pad);
+
+        let mut idx = vec![0u32; n_pad * width];
+        let mut wgt = vec![0i32; n_pad * width];
+        let mut mask = vec![0f32; n_pad * width];
+        let mut degree = vec![0i32; n_pad];
+
+        for v in 0..n {
+            let row = v * width;
+            // Sentinel: point at self so gathers stay in-bounds.
+            for k in 0..width {
+                idx[row + k] = v as u32;
+            }
+            if pull {
+                let lo = g.rev_offsets[v] as usize;
+                let hi = g.rev_offsets[v + 1] as usize;
+                degree[v] = (hi - lo) as i32;
+                for (k, i) in (lo..hi).enumerate() {
+                    idx[row + k] = g.rev_adj[i];
+                    wgt[row + k] = g.weights[g.rev_edge_id[i] as usize];
+                    mask[row + k] = 1.0;
+                }
+            } else {
+                let lo = g.offsets[v] as usize;
+                let hi = g.offsets[v + 1] as usize;
+                degree[v] = (hi - lo) as i32;
+                for (k, i) in (lo..hi).enumerate() {
+                    idx[row + k] = g.adj[i];
+                    wgt[row + k] = g.weights[i];
+                    mask[row + k] = 1.0;
+                }
+            }
+        }
+        // Padding rows: self-loops at index (n_pad-1 safe) — keep idx row = own
+        // index so gathers read the padding row itself.
+        for v in n..n_pad {
+            let row = v * width;
+            for k in 0..width {
+                idx[row + k] = v as u32;
+            }
+        }
+
+        EllGraph { n, n_pad, width, idx, wgt, mask, degree }
+    }
+
+    /// Out-degree vector for *forward* CSR regardless of pack direction —
+    /// needed by PageRank's `rank/outdeg` term.
+    pub fn out_degrees(g: &Graph, n_pad: usize) -> Vec<f32> {
+        let mut d = vec![0f32; n_pad];
+        for v in 0..g.num_nodes() {
+            d[v] = g.out_degree(v as Node) as f32;
+        }
+        d
+    }
+
+    /// Total padded element count (VMEM-footprint estimation input).
+    pub fn padded_elems(&self) -> usize {
+        self.n_pad * self.width
+    }
+
+    /// Fraction of padding (1 - fill ratio); reported in DESIGN.md §Perf.
+    pub fn padding_overhead(&self) -> f64 {
+        let real: i64 = self.degree.iter().map(|&d| d as i64).sum();
+        1.0 - real as f64 / self.padded_elems() as f64
+    }
+}
+
+/// Dense adjacency bitmap for the triangle-counting kernel: row `v` packs
+/// neighbor membership into `ceil(n_pad/32)` u32 words.
+pub struct BitmapAdjacency {
+    pub n: usize,
+    pub words: usize,
+    pub bits: Vec<u32>, // [n * words]
+}
+
+impl BitmapAdjacency {
+    pub fn from_csr(g: &Graph, row_pad: usize) -> BitmapAdjacency {
+        let n = round_up(g.num_nodes().max(1), row_pad);
+        let words = round_up(n.div_ceil(32), 1);
+        let mut bits = vec![0u32; n * words];
+        for u in 0..g.num_nodes() as Node {
+            for &w in g.neighbors(u) {
+                bits[u as usize * words + (w as usize) / 32] |= 1 << (w % 32);
+            }
+        }
+        BitmapAdjacency { n, words, bits }
+    }
+
+    pub fn has_edge(&self, u: usize, w: usize) -> bool {
+        self.bits[u * self.words + w / 32] & (1 << (w % 32)) != 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::GraphBuilder;
+
+    fn path3() -> Graph {
+        let mut b = GraphBuilder::new(3);
+        b.add_edge(0, 1, 10);
+        b.add_edge(1, 2, 20);
+        b.build()
+    }
+
+    #[test]
+    fn ell_out_preserves_edges() {
+        let g = path3();
+        let e = EllGraph::from_csr_out(&g, 4, 8);
+        assert_eq!(e.n, 3);
+        assert_eq!(e.n_pad, 4);
+        assert_eq!(e.width, 8);
+        assert_eq!(e.idx[0], 1);
+        assert_eq!(e.wgt[0], 10);
+        assert_eq!(e.mask[0], 1.0);
+        // sentinel slots point at self with zero mask
+        assert_eq!(e.idx[1], 0);
+        assert_eq!(e.mask[1], 0.0);
+        assert_eq!(e.degree, vec![1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn ell_in_is_pull_view() {
+        let g = path3();
+        let e = EllGraph::from_csr_in(&g, 1, 1);
+        assert_eq!(e.width, 1);
+        assert_eq!(e.idx[1], 0); // node 1 pulls from node 0
+        assert_eq!(e.wgt[1], 10);
+        assert_eq!(e.idx[2], 1);
+        assert_eq!(e.wgt[2], 20);
+        assert_eq!(e.mask[0], 0.0); // node 0 has no in-edges
+    }
+
+    #[test]
+    fn ell_edge_conservation_random() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        for _ in 0..10 {
+            let n = rng.range(2, 40);
+            let mut b = GraphBuilder::new(n);
+            for _ in 0..rng.range(0, 4 * n) {
+                let u = rng.range(0, n) as Node;
+                let v = rng.range(0, n) as Node;
+                if u != v {
+                    b.add_edge(u, v, rng.range(1, 100) as i32);
+                }
+            }
+            b.simplify();
+            let g = b.build();
+            let e = EllGraph::from_csr_out(&g, 8, 4);
+            let packed: usize = e.mask.iter().map(|&m| m as usize).sum();
+            assert_eq!(packed, g.num_edges());
+            // every masked entry corresponds to a real edge
+            for v in 0..e.n {
+                for k in 0..e.width {
+                    if e.mask[v * e.width + k] == 1.0 {
+                        assert!(g.is_an_edge(v as Node, e.idx[v * e.width + k]));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bitmap_matches_csr() {
+        let g = path3();
+        let bm = BitmapAdjacency::from_csr(&g, 8);
+        assert!(bm.has_edge(0, 1));
+        assert!(bm.has_edge(1, 2));
+        assert!(!bm.has_edge(1, 0));
+        assert!(!bm.has_edge(2, 2));
+    }
+
+    #[test]
+    fn padding_overhead_bounds() {
+        let g = path3();
+        let e = EllGraph::from_csr_out(&g, 1, 1);
+        let oh = e.padding_overhead();
+        assert!((0.0..1.0).contains(&oh));
+    }
+}

@@ -1,0 +1,84 @@
+//! Road-network generator: a 2-D grid with perturbations.
+//!
+//! Stand-in for the paper's `usaroad` / `germany-osm` inputs: average degree
+//! ≈ 2–4, tiny maximum degree (9 / 13), and a very large diameter — the
+//! combination that makes level-synchronous BFS/BC slow in Tables 3–4 (the
+//! paper's road-network rows dominate BC totals). A grid of side s has
+//! diameter Θ(s) = Θ(√V), reproducing that regime.
+
+use crate::graph::csr::{Graph, GraphBuilder, Node};
+use crate::util::rng::Rng;
+
+/// `rows × cols` 4-connected grid; `drop_p` randomly removes street segments
+/// (keeping connectivity via the component fix-up), `diag_p` adds a few
+/// diagonal shortcuts so max degree varies like real road data.
+pub fn road_grid(name: &str, rows: usize, cols: usize, seed: u64) -> Graph {
+    let n = rows * cols;
+    assert!(n >= 2);
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(n).named(name);
+    let id = |r: usize, c: usize| (r * cols + c) as Node;
+    let drop_p = 0.08;
+    let diag_p = 0.02;
+    for r in 0..rows {
+        for c in 0..cols {
+            if c + 1 < cols && !rng.chance(drop_p) {
+                b.add_undirected(id(r, c), id(r, c + 1), rng.range(1, 101) as i32);
+            }
+            if r + 1 < rows && !rng.chance(drop_p) {
+                b.add_undirected(id(r, c), id(r + 1, c), rng.range(1, 101) as i32);
+            }
+            if r + 1 < rows && c + 1 < cols && rng.chance(diag_p) {
+                b.add_undirected(id(r, c), id(r + 1, c + 1), rng.range(1, 101) as i32);
+            }
+        }
+    }
+    super::connect_components(&mut b, seed, true);
+    b.simplify();
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn bfs_ecc(g: &Graph, src: Node) -> usize {
+        let mut level = vec![usize::MAX; g.num_nodes()];
+        level[src as usize] = 0;
+        let mut frontier = vec![src];
+        let mut depth = 0;
+        while !frontier.is_empty() {
+            let mut next = Vec::new();
+            for &u in &frontier {
+                for &w in g.neighbors(u) {
+                    if level[w as usize] == usize::MAX {
+                        level[w as usize] = depth + 1;
+                        next.push(w);
+                    }
+                }
+            }
+            depth += 1;
+            frontier = next;
+        }
+        level.iter().filter(|&&l| l != usize::MAX).max().copied().unwrap_or(0)
+    }
+
+    #[test]
+    fn road_shape_low_degree_high_diameter() {
+        let g = road_grid("us", 40, 40, 42);
+        assert_eq!(g.num_nodes(), 1600);
+        let max_deg = (0..1600u32).map(|v| g.out_degree(v)).max().unwrap();
+        assert!(max_deg <= 10, "road max degree should be tiny, got {max_deg}");
+        let avg = g.num_edges() as f64 / 1600.0;
+        assert!(avg < 5.0);
+        // diameter ~ Θ(side): eccentricity from a corner ≥ side
+        assert!(bfs_ecc(&g, 0) >= 40, "grid should have large diameter");
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = road_grid("g", 10, 12, 5);
+        let b = road_grid("g", 10, 12, 5);
+        assert_eq!(a.adj, b.adj);
+    }
+}

@@ -1,0 +1,132 @@
+//! Synthetic graph generators standing in for the paper's Table-2 inputs.
+//!
+//! We cannot download twitter-2010 / orkut / usaroad here, so each generator
+//! reproduces the *shape class* that drives the paper's qualitative results:
+//! power-law degree + small diameter (social nets, RMAT), bounded degree +
+//! large diameter (road networks), and uniform-random.
+
+pub mod grid;
+pub mod rmat;
+pub mod smallworld;
+pub mod uniform;
+
+pub use grid::road_grid;
+pub use rmat::rmat;
+pub use smallworld::preferential_attachment;
+pub use uniform::uniform_random;
+
+use crate::graph::csr::{Graph, GraphBuilder, Node};
+use crate::util::rng::Rng;
+
+/// Assign uniform-random weights in [1, 100] — the paper's convention for
+/// unweighted inputs ("we assign edge-weights selected uniformly at random
+/// in the range [1,100]").
+pub fn assign_uniform_weights(b: &mut GraphBuilder, seed: u64) {
+    let mut rng = Rng::new(seed ^ 0x77ee77ee);
+    for e in &mut b.edges {
+        e.2 = rng.range(1, 101) as i32;
+    }
+}
+
+/// Make the edge set symmetric (undirected view) — TC and BC expect this.
+pub fn symmetrize(b: &mut GraphBuilder) {
+    let mut extra = Vec::with_capacity(b.edges.len());
+    for &(u, v, w) in &b.edges {
+        extra.push((v, u, w));
+    }
+    b.edges.extend(extra);
+    b.simplify();
+}
+
+/// Ensure weak connectivity by chaining components along a random spanning
+/// thread; keeps diameter behaviour intact while making SSSP/BFS reach all.
+pub fn connect_components(b: &mut GraphBuilder, seed: u64, undirected: bool) {
+    let n = b.num_nodes;
+    if n == 0 {
+        return;
+    }
+    // Union-find over current edges.
+    let mut parent: Vec<u32> = (0..n as u32).collect();
+    fn find(p: &mut [u32], x: u32) -> u32 {
+        let mut r = x;
+        while p[r as usize] != r {
+            p[r as usize] = p[p[r as usize] as usize];
+            r = p[r as usize];
+        }
+        r
+    }
+    for &(u, v, _) in &b.edges {
+        let (ru, rv) = (find(&mut parent, u), find(&mut parent, v));
+        if ru != rv {
+            parent[ru as usize] = rv;
+        }
+    }
+    let mut rng = Rng::new(seed ^ 0xc0ffee);
+    let mut reps: Vec<u32> = Vec::new();
+    for v in 0..n as u32 {
+        if find(&mut parent, v) == v {
+            reps.push(v);
+        }
+    }
+    rng.shuffle(&mut reps);
+    for w in reps.windows(2) {
+        let wgt = rng.range(1, 101) as i32;
+        b.add_edge(w[0], w[1], wgt);
+        if undirected {
+            b.add_edge(w[1], w[0], wgt);
+        }
+        let (r0, r1) = (find(&mut parent, w[0]), find(&mut parent, w[1]));
+        parent[r0 as usize] = r1;
+    }
+}
+
+/// Sample `k` distinct source vertices with non-zero out-degree — the
+/// `sourceSet` for BC (the paper runs 1 / 20 / 80 / 150 sources).
+pub fn sample_sources(g: &Graph, k: usize, seed: u64) -> Vec<Node> {
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let candidates: Vec<Node> =
+        (0..g.num_nodes() as Node).filter(|&v| g.out_degree(v) > 0).collect();
+    if candidates.is_empty() {
+        return vec![];
+    }
+    let k = k.min(candidates.len());
+    rng.sample_distinct(candidates.len(), k).into_iter().map(|i| candidates[i]).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn connect_makes_reachable() {
+        // two isolated cliques -> connected after fix-up
+        let mut b = GraphBuilder::new(6);
+        for &(u, v) in &[(0, 1), (1, 2), (3, 4), (4, 5)] {
+            b.add_undirected(u, v, 1);
+        }
+        connect_components(&mut b, 1, true);
+        let g = b.build();
+        // BFS from 0 reaches everything
+        let mut seen = vec![false; 6];
+        let mut q = vec![0u32];
+        seen[0] = true;
+        while let Some(u) = q.pop() {
+            for &w in g.neighbors(u) {
+                if !seen[w as usize] {
+                    seen[w as usize] = true;
+                    q.push(w);
+                }
+            }
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn sources_are_distinct_and_valid() {
+        let g = rmat("t", 64, 256, 42);
+        let s = sample_sources(&g, 10, 7);
+        let set: std::collections::HashSet<_> = s.iter().collect();
+        assert_eq!(set.len(), s.len());
+        assert!(s.iter().all(|&v| g.out_degree(v) > 0));
+    }
+}

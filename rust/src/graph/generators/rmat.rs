@@ -1,0 +1,107 @@
+//! Recursive-MATrix (R-MAT) generator.
+//!
+//! Matches the paper's synthetic rmat876 input: "generated using SNAP's RMAT
+//! generator with parameters a=0.57, b=0.19, c=0.19, d=0.05" — a skewed,
+//! power-law degree distribution with small diameter.
+
+use crate::graph::csr::{Graph, GraphBuilder, Node};
+use crate::util::rng::Rng;
+
+pub const A: f64 = 0.57;
+pub const B: f64 = 0.19;
+pub const C: f64 = 0.19;
+// d = 0.05 (implied remainder)
+
+/// Generate a directed R-MAT graph with ~`num_edges` edges over
+/// `num_nodes` (rounded up to a power of two internally, then mapped down).
+pub fn rmat(name: &str, num_nodes: usize, num_edges: usize, seed: u64) -> Graph {
+    rmat_with(name, num_nodes, num_edges, seed, A, B, C)
+}
+
+pub fn rmat_with(
+    name: &str,
+    num_nodes: usize,
+    num_edges: usize,
+    seed: u64,
+    a: f64,
+    b: f64,
+    c: f64,
+) -> Graph {
+    assert!(num_nodes >= 2);
+    let scale = usize::BITS - (num_nodes - 1).leading_zeros();
+    let side = 1usize << scale;
+    let mut rng = Rng::new(seed);
+    let mut builder = GraphBuilder::new(num_nodes).named(name);
+
+    let mut placed = 0usize;
+    let mut attempts = 0usize;
+    while placed < num_edges && attempts < num_edges * 20 {
+        attempts += 1;
+        let (mut u, mut v) = (0usize, 0usize);
+        let mut len = side;
+        while len > 1 {
+            len /= 2;
+            let r = rng.f64();
+            // noise keeps the distribution from being too deterministic,
+            // like SNAP's smoothed R-MAT.
+            let (pa, pb, pc) = (a, b, c);
+            if r < pa {
+                // top-left
+            } else if r < pa + pb {
+                v += len;
+            } else if r < pa + pb + pc {
+                u += len;
+            } else {
+                u += len;
+                v += len;
+            }
+        }
+        if u >= num_nodes || v >= num_nodes || u == v {
+            continue;
+        }
+        builder.add_edge(u as Node, v as Node, rng.range(1, 101) as i32);
+        placed += 1;
+    }
+    super::symmetrize(&mut builder);
+    super::connect_components(&mut builder, seed, true);
+    builder.simplify();
+    builder.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn skewed_degree_distribution() {
+        let g = rmat("rm", 1024, 8192, 123);
+        assert!(g.num_nodes() == 1024);
+        assert!(g.num_edges() > 4096);
+        let max_deg = (0..1024u32).map(|v| g.out_degree(v)).max().unwrap();
+        let avg = g.num_edges() as f64 / 1024.0;
+        // R-MAT with these params gives a heavy hub: max ≫ avg.
+        assert!(
+            (max_deg as f64) > 6.0 * avg,
+            "max degree {max_deg} not skewed vs avg {avg:.1}"
+        );
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = rmat("x", 256, 1024, 5);
+        let b = rmat("x", 256, 1024, 5);
+        assert_eq!(a.adj, b.adj);
+        assert_eq!(a.weights, b.weights);
+    }
+
+    #[test]
+    fn symmetric_and_simple() {
+        let g = rmat("x", 128, 512, 9);
+        assert!(g.is_symmetric());
+        for v in 0..g.num_nodes() as Node {
+            let nb = g.neighbors(v);
+            assert!(nb.windows(2).all(|w| w[0] < w[1]), "sorted, no dup");
+            assert!(!nb.contains(&v), "no self loop");
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Plain-text edge-list I/O.
+//!
+//! Format (compatible with SNAP-style lists plus an optional weight column):
+//!
+//! ```text
+//! # comment lines start with '#' or '%'
+//! <num_nodes>            (optional header; inferred from max id otherwise)
+//! u v [w]
+//! ```
+
+use super::csr::{Graph, GraphBuilder, Node, Weight};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+pub fn load_edge_list(path: &Path) -> Result<Graph> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let reader = std::io::BufReader::new(f);
+    let mut edges: Vec<(Node, Node, Weight)> = Vec::new();
+    let mut declared_nodes: Option<usize> = None;
+    let mut max_id: Node = 0;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let parts: Vec<&str> = t.split_whitespace().collect();
+        match parts.len() {
+            1 if declared_nodes.is_none() && edges.is_empty() => {
+                declared_nodes = Some(parts[0].parse().with_context(|| {
+                    format!("{}:{}: bad node count", path.display(), lineno + 1)
+                })?);
+            }
+            2 | 3 => {
+                let u: Node = parts[0]
+                    .parse()
+                    .with_context(|| format!("{}:{}: bad src", path.display(), lineno + 1))?;
+                let v: Node = parts[1]
+                    .parse()
+                    .with_context(|| format!("{}:{}: bad dst", path.display(), lineno + 1))?;
+                let w: Weight = if parts.len() == 3 { parts[2].parse()? } else { 1 };
+                max_id = max_id.max(u).max(v);
+                edges.push((u, v, w));
+            }
+            _ => bail!("{}:{}: expected 'u v [w]'", path.display(), lineno + 1),
+        }
+    }
+    let n = declared_nodes.unwrap_or(max_id as usize + 1);
+    if (max_id as usize) >= n {
+        bail!("edge endpoint {} out of range for {} nodes", max_id, n);
+    }
+    let mut b = GraphBuilder::new(n)
+        .named(path.file_stem().and_then(|s| s.to_str()).unwrap_or("graph"));
+    b.edges = edges;
+    Ok(b.build())
+}
+
+pub fn save_edge_list(g: &Graph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    writeln!(w, "# {} |V|={} |E|={}", g.name, g.num_nodes(), g.num_edges())?;
+    writeln!(w, "{}", g.num_nodes())?;
+    for u in 0..g.num_nodes() as Node {
+        for e in g.edge_range(u) {
+            writeln!(w, "{} {} {}", u, g.adj[e], g.weights[e])?;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::generators::rmat;
+
+    #[test]
+    fn roundtrip() {
+        let g = rmat("rt", 64, 256, 4);
+        let dir = std::env::temp_dir();
+        let path = dir.join("starplat_io_test.el");
+        save_edge_list(&g, &path).unwrap();
+        let g2 = load_edge_list(&path).unwrap();
+        assert_eq!(g.num_nodes(), g2.num_nodes());
+        assert_eq!(g.adj, g2.adj);
+        assert_eq!(g.weights, g2.weights);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn parses_comments_and_unweighted() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("starplat_io_test2.el");
+        std::fs::write(&path, "# hello\n% pct\n0 1\n1 2 9\n").unwrap();
+        let g = load_edge_list(&path).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.weight(0), 1);
+        assert_eq!(g.weight(1), 9);
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        let dir = std::env::temp_dir();
+        let path = dir.join("starplat_io_test3.el");
+        std::fs::write(&path, "0 1 2 3 4\n").unwrap();
+        assert!(load_edge_list(&path).is_err());
+        std::fs::remove_file(path).ok();
+    }
+}

@@ -1,0 +1,11 @@
+//! Graph storage, generators, statistics and I/O (paper §3.1 substrate).
+
+pub mod csr;
+pub mod ell;
+pub mod generators;
+pub mod io;
+pub mod stats;
+pub mod suite;
+
+pub use csr::{Graph, GraphBuilder, Node, Weight};
+pub use ell::{BitmapAdjacency, EllGraph};

@@ -1,0 +1,77 @@
+//! Graph statistics — the columns of the paper's Table 2.
+
+use super::csr::{Graph, Node};
+
+#[derive(Clone, Debug)]
+pub struct GraphStats {
+    pub name: String,
+    pub short: String,
+    pub num_nodes: usize,
+    pub num_edges: usize,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    /// BFS eccentricity from vertex 0 — a cheap diameter proxy separating
+    /// road-like (large) from social (small) inputs.
+    pub ecc_from_0: usize,
+}
+
+pub fn stats(g: &Graph, short: &str) -> GraphStats {
+    let n = g.num_nodes();
+    let degs: Vec<usize> = (0..n as Node).map(|v| g.out_degree(v)).collect();
+    let max_degree = degs.iter().copied().max().unwrap_or(0);
+    let avg_degree = if n > 0 { g.num_edges() as f64 / n as f64 } else { 0.0 };
+
+    // BFS from 0 for an eccentricity proxy.
+    let mut level = vec![u32::MAX; n];
+    let mut frontier = vec![0 as Node];
+    if n > 0 {
+        level[0] = 0;
+    }
+    let mut depth = 0u32;
+    while !frontier.is_empty() {
+        let mut next = Vec::new();
+        for &u in &frontier {
+            for &w in g.neighbors(u) {
+                if level[w as usize] == u32::MAX {
+                    level[w as usize] = depth + 1;
+                    next.push(w);
+                }
+            }
+        }
+        depth += 1;
+        frontier = next;
+    }
+    let ecc_from_0 =
+        level.iter().filter(|&&l| l != u32::MAX).map(|&l| l as usize).max().unwrap_or(0);
+
+    GraphStats {
+        name: g.name.clone(),
+        short: short.to_string(),
+        num_nodes: n,
+        num_edges: g.num_edges(),
+        avg_degree,
+        max_degree,
+        ecc_from_0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::GraphBuilder;
+
+    #[test]
+    fn stats_of_star() {
+        let mut b = GraphBuilder::new(5).named("star");
+        for v in 1..5 {
+            b.add_undirected(0, v, 1);
+        }
+        let g = b.build();
+        let s = stats(&g, "ST");
+        assert_eq!(s.num_nodes, 5);
+        assert_eq!(s.num_edges, 8);
+        assert_eq!(s.max_degree, 4);
+        assert!((s.avg_degree - 1.6).abs() < 1e-9);
+        assert_eq!(s.ecc_from_0, 1);
+    }
+}

@@ -1,0 +1,318 @@
+//! Variable-use analysis over DSL blocks.
+//!
+//! Feeds the paper's §4 optimizations: which properties/scalars a kernel
+//! reads (→ copy-in), writes (→ copy-out), and which scalar reductions it
+//! performs (→ atomics / reduction clauses).
+
+use crate::dsl::ast::*;
+use std::collections::BTreeSet;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct VarUse {
+    /// scalar (host) variables read inside the region
+    pub scalars_read: BTreeSet<String>,
+    /// scalar variables written by plain assignment (rare inside kernels;
+    /// usually forall-local temporaries)
+    pub scalars_written: BTreeSet<String>,
+    /// node/edge property names read
+    pub props_read: BTreeSet<String>,
+    /// node/edge property names written
+    pub props_written: BTreeSet<String>,
+    /// scalar reductions `(target, op)` — need atomics on the device
+    pub reductions: Vec<(String, ReduceOp)>,
+    /// variables declared locally inside the region (device-only, §4.1)
+    pub locals: BTreeSet<String>,
+    /// does the region call `g.is_an_edge` (TC) — needs the CSR on device
+    pub uses_is_an_edge: bool,
+    /// does the region iterate `g.nodes_to(..)` — needs reverse CSR
+    pub uses_in_edges: bool,
+    /// does the region use edge weights via `propEdge` access
+    pub uses_weights: bool,
+}
+
+impl VarUse {
+    fn expr(&mut self, e: &Expr) {
+        match e {
+            Expr::Var(v) => {
+                if !self.locals.contains(v) {
+                    self.scalars_read.insert(v.clone());
+                }
+            }
+            Expr::Prop { obj, prop } => {
+                self.props_read.insert(prop.clone());
+                if !self.locals.contains(obj) {
+                    self.scalars_read.insert(obj.clone());
+                }
+            }
+            Expr::Call { recv, name, args } => {
+                if name == "is_an_edge" {
+                    self.uses_is_an_edge = true;
+                }
+                if let Some(r) = recv {
+                    if !self.locals.contains(r) {
+                        self.scalars_read.insert(r.clone());
+                    }
+                }
+                for a in args {
+                    self.expr(a);
+                }
+            }
+            Expr::Unary { expr, .. } => self.expr(expr),
+            Expr::Binary { lhs, rhs, .. } => {
+                self.expr(lhs);
+                self.expr(rhs);
+            }
+            _ => {}
+        }
+    }
+
+    fn lvalue_write(&mut self, lv: &LValue) {
+        match lv {
+            LValue::Var(v) => {
+                if !self.locals.contains(v) {
+                    self.scalars_written.insert(v.clone());
+                }
+            }
+            LValue::Prop { obj, prop } => {
+                self.props_written.insert(prop.clone());
+                if !self.locals.contains(obj) {
+                    self.scalars_read.insert(obj.clone());
+                }
+            }
+        }
+    }
+
+    fn stmt(&mut self, s: &Stmt) {
+        match s {
+            Stmt::Decl { name, init, .. } => {
+                if let Some(e) = init {
+                    self.expr(e);
+                }
+                self.locals.insert(name.clone());
+            }
+            Stmt::Assign { target, value, .. } => {
+                self.expr(value);
+                self.lvalue_write(target);
+            }
+            Stmt::Reduce { target, op, value, .. } => {
+                self.expr(value);
+                match target {
+                    LValue::Var(v) if !self.locals.contains(v) => {
+                        self.reductions.push((v.clone(), *op));
+                        self.scalars_read.insert(v.clone());
+                    }
+                    _ => {
+                        // property reductions behave like read-modify-write
+                        if let LValue::Prop { prop, .. } = target {
+                            self.props_read.insert(prop.clone());
+                        }
+                        self.lvalue_write(target);
+                    }
+                }
+            }
+            Stmt::MinMaxAssign { target, compare, extra, .. } => {
+                self.expr(compare);
+                if let LValue::Prop { prop, .. } = target {
+                    self.props_read.insert(prop.clone());
+                }
+                self.lvalue_write(target);
+                for (t, v) in extra {
+                    self.expr(v);
+                    self.lvalue_write(t);
+                }
+            }
+            Stmt::AttachNodeProperty { inits, .. } => {
+                for (p, e) in inits {
+                    self.expr(e);
+                    self.props_written.insert(p.clone());
+                }
+            }
+            Stmt::For { iter, body, .. } => {
+                self.locals.insert(iter.var.clone());
+                match &iter.source {
+                    IterSource::Neighbors { of, .. } => {
+                        if !self.locals.contains(of) {
+                            self.scalars_read.insert(of.clone());
+                        }
+                    }
+                    IterSource::NodesTo { of, .. } => {
+                        self.uses_in_edges = true;
+                        if !self.locals.contains(of) {
+                            self.scalars_read.insert(of.clone());
+                        }
+                    }
+                    _ => {}
+                }
+                if let Some(f) = &iter.filter {
+                    self.filter_expr(f);
+                }
+                for st in body {
+                    self.stmt(st);
+                }
+            }
+            Stmt::IterateBFS { var, from, body, reverse, .. } => {
+                self.locals.insert(var.clone());
+                self.scalars_read.insert(from.clone());
+                for st in body {
+                    self.stmt(st);
+                }
+                if let Some((cond, rbody)) = reverse {
+                    self.filter_expr(cond);
+                    for st in rbody {
+                        self.stmt(st);
+                    }
+                }
+            }
+            Stmt::FixedPoint { body, cond, .. } => {
+                self.filter_expr(cond);
+                for st in body {
+                    self.stmt(st);
+                }
+            }
+            Stmt::DoWhile { body, cond, .. } | Stmt::While { cond, body, .. } => {
+                self.expr(cond);
+                for st in body {
+                    self.stmt(st);
+                }
+            }
+            Stmt::If { cond, then, els, .. } => {
+                self.expr(cond);
+                for st in then {
+                    self.stmt(st);
+                }
+                if let Some(e) = els {
+                    for st in e {
+                        self.stmt(st);
+                    }
+                }
+            }
+            Stmt::Return { value, .. } => self.expr(value),
+        }
+    }
+
+    /// Filter expressions reference properties by bare name (implicit loop
+    /// variable): record those as property *reads*, not scalar reads.
+    fn filter_expr(&mut self, e: &Expr) {
+        match e {
+            Expr::Var(v) => {
+                // conservatively record as both; `transfer::plan` reclassifies
+                // using the property registry.
+                self.props_read.insert(v.clone());
+            }
+            Expr::Unary { expr, .. } => self.filter_expr(expr),
+            Expr::Binary { lhs, rhs, .. } => {
+                self.filter_expr(lhs);
+                self.filter_expr(rhs);
+            }
+            other => self.expr(other),
+        }
+    }
+}
+
+/// Recognize the read-modify-write idiom `x.p = x.p + e` (or `*`, `&&`,
+/// `||`) as a reduction — StarPlat generates atomics for these (e.g. the
+/// sigma accumulation in BC's forward pass). Returns `(target, op, rhs)`.
+pub fn as_reduction(target: &LValue, value: &Expr) -> Option<(LValue, ReduceOp, Expr)> {
+    let Expr::Binary { op, lhs, rhs } = value else { return None };
+    let red = match op {
+        BinOp::Add => ReduceOp::Add,
+        BinOp::Mul => ReduceOp::Mul,
+        BinOp::And => ReduceOp::And,
+        BinOp::Or => ReduceOp::Or,
+        _ => return None,
+    };
+    let matches_target = |e: &Expr| match (e, target) {
+        (Expr::Var(v), LValue::Var(t)) => v == t,
+        (Expr::Prop { obj, prop }, LValue::Prop { obj: to, prop: tp }) => obj == to && prop == tp,
+        _ => false,
+    };
+    if matches_target(lhs) {
+        Some((target.clone(), red, (**rhs).clone()))
+    } else if matches_target(rhs) && matches!(red, ReduceOp::Add | ReduceOp::Mul) {
+        Some((target.clone(), red, (**lhs).clone()))
+    } else {
+        None
+    }
+}
+
+pub fn block_uses(b: &[Stmt]) -> VarUse {
+    let mut u = VarUse::default();
+    for s in b {
+        u.stmt(s);
+    }
+    u
+}
+
+pub fn stmt_uses(s: &Stmt) -> VarUse {
+    let mut u = VarUse::default();
+    u.stmt(s);
+    u
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse;
+
+    fn body_of(src: &str) -> Vec<Stmt> {
+        parse(src).unwrap().remove(0).body
+    }
+
+    #[test]
+    fn reads_writes_and_reductions() {
+        let body = body_of(
+            "function f(Graph g, propNode<int> dist, propEdge<int> weight) {
+               long c = 0;
+               forall (v in g.nodes()) {
+                 int local = 1;
+                 forall (nbr in g.neighbors(v)) {
+                   edge e = g.get_edge(v, nbr);
+                   nbr.dist = v.dist + e.weight;
+                   c += local;
+                 }
+               }
+             }",
+        );
+        let Stmt::For { body: fb, .. } = &body[1] else { panic!() };
+        let u = block_uses(fb);
+        assert!(u.props_read.contains("dist"));
+        assert!(u.props_read.contains("weight"));
+        assert!(u.props_written.contains("dist"));
+        assert!(!u.props_written.contains("weight"));
+        assert_eq!(u.reductions, vec![("c".to_string(), ReduceOp::Add)]);
+        assert!(u.locals.contains("local"));
+        assert!(u.locals.contains("nbr"));
+        // v is the outer kernel's loop var: here it's local to the analyzed
+        // block only if declared by it — the outer forall declares it.
+        assert!(!u.scalars_read.contains("local"));
+    }
+
+    #[test]
+    fn is_an_edge_and_in_edges_flags() {
+        let body = body_of(
+            "function f(Graph g, propNode<float> pr) {
+               forall (v in g.nodes()) {
+                 float s = 0;
+                 for (nbr in g.nodes_to(v)) { s = s + nbr.pr; }
+                 if (g.is_an_edge(v, v)) { s = s + 1; }
+               }
+             }",
+        );
+        let Stmt::For { body: fb, .. } = &body[0] else { panic!() };
+        let u = block_uses(fb);
+        assert!(u.uses_in_edges);
+        assert!(u.uses_is_an_edge);
+    }
+
+    #[test]
+    fn filter_props_are_prop_reads() {
+        let body = body_of(
+            "function f(Graph g, propNode<bool> modified) {
+               forall (v in g.nodes().filter(modified == True)) { }
+             }",
+        );
+        let u = stmt_uses(&body[0]);
+        assert!(u.props_read.contains("modified"));
+        assert!(!u.scalars_read.contains("modified"));
+    }
+}

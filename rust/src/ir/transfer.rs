@@ -1,0 +1,243 @@
+//! Host↔device transfer planning — the paper's §4 "Optimized Host-Device
+//! Data Transfer" analysis, shared by all backends:
+//!
+//! - the (static) graph CSR arrays are copied to the device **once** at
+//!   function entry, never back;
+//! - properties read by a kernel are copied in before it (unless already
+//!   device-resident), written properties are copied out only if the host
+//!   (or a later host phase) consumes them;
+//! - the fixedPoint `finished` flag ping-pongs host↔device each iteration
+//!   (Figure 12);
+//! - forall-local variables become device-only;
+//! - the OR-reduction optimization replaces per-vertex `modified` copies
+//!   with a single device flag word.
+
+use super::analyze::VarUse;
+use super::Kernel;
+use crate::sema::TypedFunction;
+use std::collections::BTreeSet;
+
+/// Direction-annotated buffer list for one kernel launch.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct KernelTransfers {
+    /// properties to cudaMemcpy H2D before launch
+    pub copy_in: Vec<String>,
+    /// properties to cudaMemcpy D2H after the launch (or after the enclosing
+    /// host loop finishes, see `defer_to_loop_exit`)
+    pub copy_out: Vec<String>,
+    /// scalar kernel parameters (passed by value)
+    pub scalar_params: Vec<String>,
+    /// scalar reduction cells living on the device (atomicAdd targets)
+    pub reduction_cells: Vec<String>,
+    /// copy-out may be deferred to the convergence-loop exit (§4.1): the
+    /// property stays device-resident between iterations
+    pub defer_to_loop_exit: bool,
+}
+
+/// Whole-function plan.
+#[derive(Clone, Debug, Default)]
+pub struct TransferPlan {
+    /// graph arrays needed on device at entry (offsets/edges always; weights
+    /// and reverse-CSR only when used)
+    pub graph_arrays: Vec<String>,
+    /// properties that live on the device for the whole function
+    pub device_resident_props: Vec<String>,
+    /// properties that must return to the host at function exit (outputs:
+    /// they are propNode parameters, not locals)
+    pub outputs: Vec<String>,
+    /// per-kernel transfer lists (indexed by kernel id)
+    pub per_kernel: Vec<KernelTransfers>,
+    /// bool props eligible for the single-flag OR-reduction (§4.1)
+    pub or_flag_props: Vec<String>,
+}
+
+pub fn plan(tf: &TypedFunction, kernels: &[Kernel]) -> TransferPlan {
+    let mut union = VarUse::default();
+    for k in kernels {
+        union.scalars_read.extend(k.uses.scalars_read.iter().cloned());
+        union.props_read.extend(k.uses.props_read.iter().cloned());
+        union.props_written.extend(k.uses.props_written.iter().cloned());
+        union.uses_is_an_edge |= k.uses.uses_is_an_edge;
+        union.uses_in_edges |= k.uses.uses_in_edges;
+    }
+
+    // --- graph arrays -------------------------------------------------
+    let mut graph_arrays = vec!["gpu_OA".to_string(), "gpu_edgeList".to_string()];
+    if union.uses_in_edges {
+        graph_arrays.push("gpu_rev_OA".to_string());
+        graph_arrays.push("gpu_srcList".to_string());
+    }
+    // edge weights are modelled as a propEdge (e.g. `weight`), detected below.
+
+    // --- device-resident properties ------------------------------------
+    let all_props: BTreeSet<String> = union
+        .props_read
+        .iter()
+        .chain(union.props_written.iter())
+        .filter(|p| tf.node_props.contains_key(*p) || tf.edge_props.contains_key(*p))
+        .cloned()
+        .collect();
+    let device_resident_props: Vec<String> = all_props.iter().cloned().collect();
+
+    // outputs = property *parameters* written by some kernel
+    let param_props: BTreeSet<String> = tf
+        .func
+        .params
+        .iter()
+        .filter(|p| p.ty.is_prop())
+        .map(|p| p.name.clone())
+        .collect();
+    let outputs: Vec<String> = union
+        .props_written
+        .iter()
+        .filter(|p| param_props.contains(*p))
+        .cloned()
+        .collect();
+
+    // --- OR-flag candidates ---------------------------------------------
+    let mut or_flag_props = Vec::new();
+    for s in &tf.func.body {
+        collect_or_flags(s, &mut or_flag_props);
+    }
+
+    // --- per-kernel lists -------------------------------------------------
+    let mut per_kernel = Vec::with_capacity(kernels.len());
+    let mut device_resident: BTreeSet<String> = BTreeSet::new();
+    for k in kernels {
+        let mut t = KernelTransfers::default();
+        for p in &k.uses.props_read {
+            if !tf.node_props.contains_key(p) && !tf.edge_props.contains_key(p) {
+                continue;
+            }
+            if !device_resident.contains(p) {
+                t.copy_in.push(p.clone());
+                device_resident.insert(p.clone());
+            }
+        }
+        for p in &k.uses.props_written {
+            if !tf.node_props.contains_key(p) && !tf.edge_props.contains_key(p) {
+                continue;
+            }
+            device_resident.insert(p.clone());
+            if param_props.contains(p) {
+                t.copy_out.push(p.clone());
+            }
+        }
+        // scalar params: anything read that is a declared scalar variable
+        t.scalar_params = k
+            .uses
+            .scalars_read
+            .iter()
+            .filter(|v| {
+                tf.vars.get(*v).map(|ty| !ty.is_prop() && *ty != crate::dsl::ast::Type::Graph)
+                    == Some(true)
+            })
+            .cloned()
+            .collect();
+        t.reduction_cells = k.uses.reductions.iter().map(|(v, _)| v.clone()).collect();
+        // Kernels inside convergence loops keep their state device-side and
+        // defer output copies until the loop exits (§4.1 / §4.3).
+        t.defer_to_loop_exit = k.in_host_loop;
+        per_kernel.push(t);
+    }
+
+    TransferPlan { graph_arrays, device_resident_props, outputs, per_kernel, or_flag_props }
+}
+
+fn collect_or_flags(s: &crate::dsl::ast::Stmt, out: &mut Vec<String>) {
+    use crate::dsl::ast::Stmt;
+    match s {
+        Stmt::FixedPoint { cond, body, .. } => {
+            if let Some(p) = super::or_flag_prop(cond) {
+                out.push(p);
+            }
+            for st in body {
+                collect_or_flags(st, out);
+            }
+        }
+        Stmt::For { body, .. }
+        | Stmt::DoWhile { body, .. }
+        | Stmt::While { body, .. } => {
+            for st in body {
+                collect_or_flags(st, out);
+            }
+        }
+        Stmt::If { then, els, .. } => {
+            for st in then {
+                collect_or_flags(st, out);
+            }
+            if let Some(e) = els {
+                for st in e {
+                    collect_or_flags(st, out);
+                }
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+
+    use crate::dsl::parser::parse;
+    use crate::ir::lower;
+    use crate::sema::check_function;
+
+    fn plan_program(p: &str) -> crate::ir::IrProgram {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("dsl_programs").join(p);
+        let src = std::fs::read_to_string(&path).unwrap();
+        let fns = parse(&src).unwrap();
+        lower(&check_function(&fns[0]).unwrap())
+    }
+
+    #[test]
+    fn sssp_plan_shapes() {
+        let ir = plan_program("sssp.sp");
+        let plan = &ir.transfer;
+        // dist is an output (propNode param, written)
+        assert!(plan.outputs.contains(&"dist".to_string()));
+        // modified is the OR-flag candidate
+        assert_eq!(plan.or_flag_props, vec!["modified".to_string()]);
+        // the relax kernel defers copy-out (device-resident across iterations)
+        assert!(plan.per_kernel[1].defer_to_loop_exit);
+        // graph arrays copied once
+        assert!(plan.graph_arrays.contains(&"gpu_OA".to_string()));
+    }
+
+    #[test]
+    fn pr_needs_reverse_csr() {
+        let ir = plan_program("pr.sp");
+        assert!(ir.transfer.graph_arrays.contains(&"gpu_rev_OA".to_string()));
+        assert!(ir.transfer.outputs.contains(&"pageRank".to_string()));
+    }
+
+    #[test]
+    fn tc_has_reduction_cell_and_no_prop_outputs() {
+        let ir = plan_program("tc.sp");
+        assert!(ir.transfer.outputs.is_empty());
+        assert_eq!(ir.transfer.per_kernel[0].reduction_cells, vec!["triangle_count".to_string()]);
+    }
+
+    #[test]
+    fn soundness_every_device_read_is_resident() {
+        // Property: for each kernel, every property it reads was either
+        // copied in by this kernel or made resident by an earlier one.
+        for p in ["bc.sp", "pr.sp", "sssp.sp", "tc.sp", "cc.sp", "bfs.sp"] {
+            let ir = plan_program(p);
+            let mut resident: std::collections::BTreeSet<String> = Default::default();
+            for (k, t) in ir.kernels.iter().zip(&ir.transfer.per_kernel) {
+                for c in &t.copy_in {
+                    resident.insert(c.clone());
+                }
+                for r in &k.uses.props_read {
+                    if ir.tf.node_props.contains_key(r) || ir.tf.edge_props.contains_key(r) {
+                        assert!(resident.contains(r), "{p}: kernel {} reads non-resident {r}", k.id);
+                    }
+                }
+                for w in &k.uses.props_written {
+                    resident.insert(w.clone());
+                }
+            }
+        }
+    }
+}

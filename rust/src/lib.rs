@@ -1,0 +1,30 @@
+//! # starplat-rs
+//!
+//! Reproduction of *"Code Generation for a Variety of Accelerators for a
+//! Graph DSL"* (StarPlat, CS.DC 2024) as a three-layer Rust + JAX + Pallas
+//! system:
+//!
+//! - **DSL front-end** ([`dsl`], [`sema`]) — the StarPlat language.
+//! - **IR + analyses** ([`ir`]) — the paper's §4 backend optimizations.
+//! - **Code generators** ([`codegen`]) — CUDA / OpenCL / SYCL / OpenACC text
+//!   emitters (validated against the paper's Figures 2–12) plus the JAX
+//!   backend that produces the executable accelerator path.
+//! - **Execution backends** ([`backends`]) — a parallel CPU interpreter and
+//!   an XLA/PJRT driver for AOT-compiled artifacts.
+//! - **Substrates** — graph storage and generators ([`graph`]), handwritten
+//!   Gunrock/Lonestar-style baselines ([`algorithms`]), the experiment
+//!   coordinator ([`coordinator`]) and dependency-free utilities ([`util`]).
+//!
+//! See `DESIGN.md` for the full inventory and `EXPERIMENTS.md` for results.
+
+pub mod algorithms;
+pub mod backends;
+pub mod cli;
+pub mod codegen;
+pub mod coordinator;
+pub mod dsl;
+pub mod graph;
+pub mod ir;
+pub mod runtime;
+pub mod sema;
+pub mod util;

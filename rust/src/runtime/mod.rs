@@ -1,0 +1,174 @@
+//! PJRT runtime: load AOT artifacts (HLO text) and execute them on the CPU
+//! client. Mirrors /opt/xla-example/load_hlo — text is the interchange
+//! format because xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// One manifest row (see python/compile/aot.py).
+#[derive(Clone, Debug)]
+pub struct ArtifactInfo {
+    pub algo: String,
+    pub graph: String,
+    pub file: String,
+    pub n: usize,
+    pub n_pad: usize,
+    pub width: usize,
+    pub n_dense: usize,
+}
+
+/// Runtime owning the PJRT client and a compile-once executable cache.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    dir: PathBuf,
+    pub artifacts: Vec<ArtifactInfo>,
+    pub scale: usize,
+    cache: std::cell::RefCell<HashMap<String, std::rc::Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+impl Runtime {
+    /// Open an artifact directory produced by `make artifacts`.
+    pub fn open(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("read {} — run `make artifacts` first", manifest_path.display()))?;
+        let manifest = Json::parse(&text).context("parse manifest.json")?;
+        let mut artifacts = Vec::new();
+        for a in manifest.get("artifacts").as_arr().unwrap_or(&[]) {
+            artifacts.push(ArtifactInfo {
+                algo: a.get("algo").as_str().unwrap_or_default().to_string(),
+                graph: a.get("graph").as_str().unwrap_or_default().to_string(),
+                file: a.get("file").as_str().unwrap_or_default().to_string(),
+                n: a.get("n").as_usize().unwrap_or(0),
+                n_pad: a.get("n_pad").as_usize().unwrap_or(0),
+                width: a.get("width").as_usize().unwrap_or(0),
+                n_dense: a.get("n_dense").as_usize().unwrap_or(0),
+            });
+        }
+        let scale = manifest.get("scale").as_usize().unwrap_or(0);
+        Ok(Runtime { client, dir: dir.to_path_buf(), artifacts, scale, cache: Default::default() })
+    }
+
+    pub fn info(&self, algo: &str, graph: &str) -> Result<ArtifactInfo> {
+        self.artifacts
+            .iter()
+            .find(|a| a.algo == algo && a.graph == graph)
+            .cloned()
+            .ok_or_else(|| anyhow!("no artifact for algo={algo} graph={graph} in manifest"))
+    }
+
+    /// Load + compile (cached) an artifact.
+    pub fn executable(&self, algo: &str, graph: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+        let key = format!("{algo}/{graph}");
+        if let Some(e) = self.cache.borrow().get(&key) {
+            return Ok(e.clone());
+        }
+        let info = self.info(algo, graph)?;
+        let path = self.dir.join(&info.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("bad path"))?,
+        )
+        .map_err(|e| anyhow!("parse HLO {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {key}: {e:?}"))?;
+        let rc = std::rc::Rc::new(exe);
+        self.cache.borrow_mut().insert(key, rc.clone());
+        Ok(rc)
+    }
+
+    /// Drop all compiled executables (bench hygiene: ~70 cached XLA CPU
+    /// executables can exhaust memory on small testbeds).
+    pub fn clear_cache(&self) {
+        self.cache.borrow_mut().clear();
+    }
+
+    /// Execute with literal inputs; returns the decomposed output tuple.
+    pub fn execute(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[xla::Literal],
+    ) -> Result<Vec<xla::Literal>> {
+        let result = exe.execute::<xla::Literal>(inputs).map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple: {e:?}"))
+    }
+
+    /// Execute with device-resident buffers (perf path — avoids the
+    /// host↔device literal round-trip the paper's §4 warns about).
+    pub fn execute_buffers(
+        &self,
+        exe: &xla::PjRtLoadedExecutable,
+        inputs: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        let mut result =
+            exe.execute_b::<&xla::PjRtBuffer>(inputs).map_err(|e| anyhow!("execute_b: {e:?}"))?;
+        Ok(std::mem::take(&mut result[0]))
+    }
+
+    pub fn buffer_from_literal(&self, lit: &xla::Literal) -> Result<xla::PjRtBuffer> {
+        self.client
+            .buffer_from_host_literal(None, lit)
+            .map_err(|e| anyhow!("buffer_from_host_literal: {e:?}"))
+    }
+}
+
+// ---- literal helpers ----------------------------------------------------
+
+pub fn lit_i32_1d(v: &[i32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+pub fn lit_f32_1d(v: &[f32]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+pub fn lit_i32_2d(v: &[i32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(v)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn lit_f32_2d(v: &[f32], rows: usize, cols: usize) -> Result<xla::Literal> {
+    xla::Literal::vec1(v)
+        .reshape(&[rows as i64, cols as i64])
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn scalar_f32(v: f32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+pub fn to_vec_i32(l: &xla::Literal) -> Result<Vec<i32>> {
+    l.to_vec::<i32>().map_err(|e| anyhow!("to_vec<i32>: {e:?}"))
+}
+
+pub fn to_vec_f32(l: &xla::Literal) -> Result<Vec<f32>> {
+    l.to_vec::<f32>().map_err(|e| anyhow!("to_vec<f32>: {e:?}"))
+}
+
+pub fn scalar_to_i32(l: &xla::Literal) -> Result<i32> {
+    l.get_first_element::<i32>().map_err(|e| anyhow!("first element: {e:?}"))
+}
+
+pub fn scalar_to_f32(l: &xla::Literal) -> Result<f32> {
+    l.get_first_element::<f32>().map_err(|e| anyhow!("first element: {e:?}"))
+}
+
+/// Check the manifest was built at a compatible suite scale.
+pub fn check_scale(rt: &Runtime, expected: usize) -> Result<()> {
+    if rt.scale != expected {
+        bail!(
+            "artifact scale {} != requested scale {expected}; re-run `make artifacts` \
+             with STARPLAT_XLA_SCALE={expected}",
+            rt.scale
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,6 @@
+//! Semantic analysis for the StarPlat DSL: scoped symbol table, property
+//! registry, and type checking (paper §2.1's data types and constructs).
+
+pub mod typeck;
+
+pub use typeck::{check_function, TypedFunction};

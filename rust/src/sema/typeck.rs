@@ -1,0 +1,660 @@
+//! Type checker.
+//!
+//! Responsibilities:
+//! - scoped variable typing (function params, decls, loop variables);
+//! - the property registry: `propNode<T> p` (decl or param) makes `v.p`
+//!   readable/writable at type T for any node-typed `v`; likewise propEdge;
+//! - construct rules: filters and conditions are boolean; reduction
+//!   operators (Table 1) match their operand types; `Min`/`Max` tuple
+//!   assignments update properties; `fixedPoint` conditions reference a
+//!   boolean node property.
+
+use crate::dsl::ast::*;
+use crate::dsl::diag::DslError;
+use crate::dsl::token::Span;
+use std::collections::HashMap;
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct TypedFunction {
+    pub func: Function,
+    /// node property name -> value type
+    pub node_props: HashMap<String, Type>,
+    /// edge property name -> value type
+    pub edge_props: HashMap<String, Type>,
+    /// variable name -> type (flattened over all scopes; names are unique
+    /// per function in well-formed StarPlat programs)
+    pub vars: HashMap<String, Type>,
+    /// name of the single Graph parameter
+    pub graph: String,
+    /// return type if the function returns a value
+    pub returns: Option<Type>,
+}
+
+struct Ctx {
+    scopes: Vec<HashMap<String, Type>>,
+    node_props: HashMap<String, Type>,
+    edge_props: HashMap<String, Type>,
+    all_vars: HashMap<String, Type>,
+    graph: Option<String>,
+    returns: Option<Type>,
+    /// true while inside a parallel (forall / BFS) region
+    in_parallel: bool,
+}
+
+impl Ctx {
+    fn lookup(&self, name: &str) -> Option<&Type> {
+        self.scopes.iter().rev().find_map(|s| s.get(name))
+    }
+    fn declare(&mut self, name: &str, ty: Type, span: Span) -> Result<(), DslError> {
+        if self.scopes.last().unwrap().contains_key(name) {
+            return Err(DslError::at(span, &format!("`{name}` redeclared in the same scope")));
+        }
+        self.scopes.last_mut().unwrap().insert(name.to_string(), ty.clone());
+        self.all_vars.insert(name.to_string(), ty);
+        Ok(())
+    }
+    fn push(&mut self) {
+        self.scopes.push(HashMap::new());
+    }
+    fn pop(&mut self) {
+        self.scopes.pop();
+    }
+}
+
+/// Widening order for numeric types.
+fn rank(t: &Type) -> Option<u8> {
+    Some(match t {
+        Type::Bool => 0,
+        Type::Node => 1, // nodes coerce to integers (vertex ids)
+        Type::Int => 1,
+        Type::Long => 2,
+        Type::Float => 3,
+        Type::Double => 4,
+        _ => return None,
+    })
+}
+
+/// Can a value of `from` be stored into `to`? (numeric widening/narrowing is
+/// allowed C-style; bools only into bools)
+fn assignable(to: &Type, from: &Type) -> bool {
+    if to == from {
+        return true;
+    }
+    match (rank(to), rank(from)) {
+        (Some(a), Some(b)) => {
+            // bool is not implicitly numeric in the DSL
+            !(a == 0) && !(b == 0) || (a == 0 && b == 0)
+        }
+        _ => false,
+    }
+}
+
+fn unify_numeric(a: &Type, b: &Type, span: Span, what: &str) -> Result<Type, DslError> {
+    match (rank(a), rank(b)) {
+        (Some(ra), Some(rb)) if ra > 0 && rb > 0 => {
+            Ok(if ra >= rb { a.clone() } else { b.clone() })
+        }
+        _ => Err(DslError::at(
+            span,
+            &format!("{what} requires numeric operands, got {} and {}", a.display(), b.display()),
+        )),
+    }
+}
+
+pub fn check_function(f: &Function) -> Result<TypedFunction, DslError> {
+    let mut cx = Ctx {
+        scopes: vec![HashMap::new()],
+        node_props: HashMap::new(),
+        edge_props: HashMap::new(),
+        all_vars: HashMap::new(),
+        graph: None,
+        returns: None,
+        in_parallel: false,
+    };
+    for p in &f.params {
+        match &p.ty {
+            Type::Graph => {
+                if cx.graph.is_some() {
+                    return Err(DslError::at(p.span, "multiple Graph parameters"));
+                }
+                cx.graph = Some(p.name.clone());
+            }
+            Type::PropNode(inner) => {
+                cx.node_props.insert(p.name.clone(), (**inner).clone());
+            }
+            Type::PropEdge(inner) => {
+                cx.edge_props.insert(p.name.clone(), (**inner).clone());
+            }
+            _ => {}
+        }
+        cx.declare(&p.name, p.ty.clone(), p.span)?;
+    }
+    let graph = cx
+        .graph
+        .clone()
+        .ok_or_else(|| DslError::at(f.span, "function needs a Graph parameter"))?;
+    check_block(&mut cx, &f.body)?;
+    Ok(TypedFunction {
+        func: f.clone(),
+        node_props: cx.node_props,
+        edge_props: cx.edge_props,
+        vars: cx.all_vars,
+        graph,
+        returns: cx.returns,
+    })
+}
+
+fn check_block(cx: &mut Ctx, b: &Block) -> Result<(), DslError> {
+    cx.push();
+    for s in b {
+        check_stmt(cx, s)?;
+    }
+    cx.pop();
+    Ok(())
+}
+
+fn check_stmt(cx: &mut Ctx, s: &Stmt) -> Result<(), DslError> {
+    match s {
+        Stmt::Decl { ty, name, init, span } => {
+            match ty {
+                Type::PropNode(inner) => {
+                    cx.node_props.insert(name.clone(), (**inner).clone());
+                }
+                Type::PropEdge(inner) => {
+                    cx.edge_props.insert(name.clone(), (**inner).clone());
+                }
+                _ => {}
+            }
+            if let Some(e) = init {
+                let et = type_expr(cx, e, *span)?;
+                if !ty.is_prop() && !assignable(ty, &et) {
+                    return Err(DslError::at(
+                        *span,
+                        &format!("cannot initialize {} `{}` from {}", ty.display(), name, et.display()),
+                    ));
+                }
+            }
+            cx.declare(name, ty.clone(), *span)
+        }
+        Stmt::Assign { target, value, span } => {
+            let tt = type_lvalue(cx, target, *span)?;
+            // whole-property copy: `modified = modified_nxt` (both sides must
+            // be properties of the same value type)
+            if tt.is_prop() {
+                if let Expr::Var(src) = value {
+                    match cx.lookup(src) {
+                        Some(st) if st == &tt => return Ok(()),
+                        Some(st) => {
+                            return Err(DslError::at(
+                                *span,
+                                &format!(
+                                    "property copy type mismatch: {} vs {}",
+                                    tt.display(),
+                                    st.display()
+                                ),
+                            ))
+                        }
+                        None => {
+                            return Err(DslError::at(*span, &format!("unknown variable `{src}`")))
+                        }
+                    }
+                }
+                return Err(DslError::at(*span, "property copy requires a property name on the right"));
+            }
+            let vt = type_expr(cx, value, *span)?;
+            if !assignable(&tt, &vt) {
+                return Err(DslError::at(
+                    *span,
+                    &format!("cannot assign {} to {}", vt.display(), tt.display()),
+                ));
+            }
+            Ok(())
+        }
+        Stmt::Reduce { target, op, value, span } => {
+            let tt = type_lvalue(cx, target, *span)?;
+            let vt = type_expr(cx, value, *span)?;
+            match op {
+                ReduceOp::Add | ReduceOp::Mul | ReduceOp::Count => {
+                    unify_numeric(&tt, &vt, *span, &format!("reduction `{}`", op.symbol()))?;
+                }
+                ReduceOp::And | ReduceOp::Or => {
+                    if tt != Type::Bool || vt != Type::Bool {
+                        return Err(DslError::at(
+                            *span,
+                            &format!("reduction `{}` requires bool operands", op.symbol()),
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        }
+        Stmt::MinMaxAssign { target, compare, extra, span, .. } => {
+            let tt = type_lvalue(cx, target, *span)?;
+            let ct = type_expr(cx, compare, *span)?;
+            unify_numeric(&tt, &ct, *span, "Min/Max construct")?;
+            for (t, v) in extra {
+                let et = type_lvalue(cx, t, *span)?;
+                let evt = type_expr(cx, v, *span)?;
+                if !assignable(&et, &evt) {
+                    return Err(DslError::at(
+                        *span,
+                        &format!("cannot assign {} to {}", evt.display(), et.display()),
+                    ));
+                }
+            }
+            Ok(())
+        }
+        Stmt::AttachNodeProperty { graph, inits, span } => {
+            if cx.lookup(graph) != Some(&Type::Graph) {
+                return Err(DslError::at(*span, &format!("`{graph}` is not a Graph")));
+            }
+            for (prop, e) in inits {
+                let pt = cx
+                    .node_props
+                    .get(prop)
+                    .or_else(|| cx.edge_props.get(prop))
+                    .cloned()
+                    .ok_or_else(|| {
+                        DslError::at(*span, &format!("unknown property `{prop}` in attachNodeProperty"))
+                    })?;
+                let et = type_expr(cx, e, *span)?;
+                if et != Type::Bool && pt == Type::Bool {
+                    return Err(DslError::at(*span, &format!("property `{prop}` is bool")));
+                }
+                if pt != Type::Bool && !assignable(&pt, &et) {
+                    return Err(DslError::at(
+                        *span,
+                        &format!("cannot initialize {} property `{prop}` from {}", pt.display(), et.display()),
+                    ));
+                }
+            }
+            Ok(())
+        }
+        Stmt::For { iter, body, parallel, span } => {
+            cx.push();
+            check_iter(cx, iter, *span)?;
+            let was = cx.in_parallel;
+            cx.in_parallel |= *parallel;
+            for st in body {
+                check_stmt(cx, st)?;
+            }
+            cx.in_parallel = was;
+            cx.pop();
+            Ok(())
+        }
+        Stmt::IterateBFS { var, graph, from, body, reverse, span } => {
+            if cx.lookup(graph) != Some(&Type::Graph) {
+                return Err(DslError::at(*span, &format!("`{graph}` is not a Graph")));
+            }
+            match cx.lookup(from) {
+                Some(Type::Node) => {}
+                _ => return Err(DslError::at(*span, &format!("BFS source `{from}` must be a node"))),
+            }
+            cx.push();
+            cx.declare(var, Type::Node, *span)?;
+            let was = cx.in_parallel;
+            cx.in_parallel = true;
+            for st in body {
+                check_stmt(cx, st)?;
+            }
+            if let Some((cond, rbody)) = reverse {
+                let ct = type_expr(cx, cond, *span)?;
+                if ct != Type::Bool {
+                    return Err(DslError::at(*span, "iterateInReverse filter must be boolean"));
+                }
+                for st in rbody {
+                    check_stmt(cx, st)?;
+                }
+            }
+            cx.in_parallel = was;
+            cx.pop();
+            Ok(())
+        }
+        Stmt::FixedPoint { var, cond, body, span } => {
+            match cx.lookup(var) {
+                Some(Type::Bool) => {}
+                _ => {
+                    return Err(DslError::at(
+                        *span,
+                        &format!("fixedPoint variable `{var}` must be a declared bool"),
+                    ))
+                }
+            }
+            // The convergence expression references a boolean node property
+            // (paper §2.1: "a boolean expression on node-properties").
+            let mut prop_ok = false;
+            let mut probe = |name: &str| {
+                if cx.node_props.get(name) == Some(&Type::Bool) {
+                    prop_ok = true;
+                }
+            };
+            cond.visit_vars(&mut probe);
+            if !prop_ok {
+                return Err(DslError::at(
+                    *span,
+                    "fixedPoint condition must reference a boolean node property",
+                ));
+            }
+            check_block(cx, body)
+        }
+        Stmt::DoWhile { body, cond, span } | Stmt::While { cond, body, span } => {
+            check_block(cx, body)?;
+            let ct = type_expr(cx, cond, *span)?;
+            if ct != Type::Bool {
+                return Err(DslError::at(*span, "loop condition must be boolean"));
+            }
+            Ok(())
+        }
+        Stmt::If { cond, then, els, span } => {
+            let ct = type_expr(cx, cond, *span)?;
+            if ct != Type::Bool {
+                return Err(DslError::at(*span, "if condition must be boolean"));
+            }
+            check_block(cx, then)?;
+            if let Some(e) = els {
+                check_block(cx, e)?;
+            }
+            Ok(())
+        }
+        Stmt::Return { value, span } => {
+            let t = type_expr(cx, value, *span)?;
+            cx.returns = Some(t);
+            Ok(())
+        }
+    }
+}
+
+fn check_iter(cx: &mut Ctx, iter: &Iterator_, span: Span) -> Result<(), DslError> {
+    match &iter.source {
+        IterSource::Nodes { graph }
+        | IterSource::Neighbors { graph, .. }
+        | IterSource::NodesTo { graph, .. } => {
+            if cx.lookup(graph) != Some(&Type::Graph) {
+                return Err(DslError::at(span, &format!("`{graph}` is not a Graph")));
+            }
+            if let IterSource::Neighbors { of, .. } | IterSource::NodesTo { of, .. } = &iter.source
+            {
+                match cx.lookup(of) {
+                    Some(Type::Node) => {}
+                    _ => {
+                        return Err(DslError::at(
+                            span,
+                            &format!("neighbor iteration over non-node `{of}`"),
+                        ))
+                    }
+                }
+            }
+        }
+        IterSource::Set { set } => match cx.lookup(set) {
+            Some(Type::SetN(_)) => {}
+            _ => return Err(DslError::at(span, &format!("`{set}` is not a SetN"))),
+        },
+    }
+    cx.declare(&iter.var, Type::Node, span)?;
+    if let Some(f) = &iter.filter {
+        let ft = type_expr(cx, f, span)?;
+        if ft != Type::Bool {
+            return Err(DslError::at(span, "filter expression must be boolean"));
+        }
+    }
+    Ok(())
+}
+
+fn type_lvalue(cx: &Ctx, lv: &LValue, span: Span) -> Result<Type, DslError> {
+    match lv {
+        LValue::Var(v) => {
+            let t = cx
+                .lookup(v)
+                .ok_or_else(|| DslError::at(span, &format!("unknown variable `{v}`")))?;
+            // Assigning to a propNode variable means whole-property copy.
+            match t {
+                Type::PropNode(_) | Type::PropEdge(_) => Ok(t.clone()),
+                _ => Ok(t.clone()),
+            }
+        }
+        LValue::Prop { obj, prop } => prop_type(cx, obj, prop, span),
+    }
+}
+
+fn prop_type(cx: &Ctx, obj: &str, prop: &str, span: Span) -> Result<Type, DslError> {
+    let ot = cx
+        .lookup(obj)
+        .ok_or_else(|| DslError::at(span, &format!("unknown variable `{obj}`")))?;
+    match ot {
+        Type::Node => cx.node_props.get(prop).cloned().ok_or_else(|| {
+            DslError::at(span, &format!("unknown node property `{prop}` on `{obj}`"))
+        }),
+        Type::Edge => cx.edge_props.get(prop).cloned().ok_or_else(|| {
+            DslError::at(span, &format!("unknown edge property `{prop}` on `{obj}`"))
+        }),
+        other => Err(DslError::at(
+            span,
+            &format!("`{obj}` has type {}, which has no properties", other.display()),
+        )),
+    }
+}
+
+fn type_expr(cx: &Ctx, e: &Expr, span: Span) -> Result<Type, DslError> {
+    Ok(match e {
+        Expr::IntLit(_) => Type::Int,
+        Expr::FloatLit(_) => Type::Float,
+        Expr::BoolLit(_) => Type::Bool,
+        Expr::Inf => Type::Int, // sentinel; assignable to any numeric
+        Expr::Var(v) => {
+            let t = cx
+                .lookup(v)
+                .cloned()
+                .ok_or_else(|| DslError::at(span, &format!("unknown variable `{v}`")))?;
+            // A property used as a value denotes the current element's value
+            // (StarPlat filter / fixedPoint idiom: `filter(modified == True)`).
+            match t {
+                Type::PropNode(inner) | Type::PropEdge(inner) => *inner,
+                other => other,
+            }
+        }
+        Expr::Prop { obj, prop } => prop_type(cx, obj, prop, span)?,
+        Expr::Call { recv, name, args } => {
+            return type_call(cx, recv.as_deref(), name, args, span)
+        }
+        Expr::Unary { op, expr } => {
+            let t = type_expr(cx, expr, span)?;
+            match op {
+                UnOp::Not => {
+                    // `!modified` over a bool node property is allowed in
+                    // fixedPoint conditions.
+                    if t == Type::Bool || t == Type::PropNode(Box::new(Type::Bool)) {
+                        Type::Bool
+                    } else {
+                        return Err(DslError::at(span, "`!` requires a boolean"));
+                    }
+                }
+                UnOp::Neg => unify_numeric(&t, &Type::Int, span, "negation")?,
+            }
+        }
+        Expr::Binary { op, lhs, rhs } => {
+            let lt = type_expr(cx, lhs, span)?;
+            let rt = type_expr(cx, rhs, span)?;
+            if op.is_logical() {
+                if lt != Type::Bool || rt != Type::Bool {
+                    return Err(DslError::at(
+                        span,
+                        &format!("`{}` requires boolean operands", op.symbol()),
+                    ));
+                }
+                Type::Bool
+            } else if op.is_comparison() {
+                // == / != also compare booleans (e.g. `modified == True`)
+                let bool_eq = matches!(op, BinOp::Eq | BinOp::Ne)
+                    && lt == Type::Bool
+                    && rt == Type::Bool;
+                if !bool_eq {
+                    unify_numeric(&lt, &rt, span, &format!("comparison `{}`", op.symbol()))?;
+                }
+                Type::Bool
+            } else {
+                unify_numeric(&lt, &rt, span, &format!("operator `{}`", op.symbol()))?
+            }
+        }
+    })
+}
+
+fn type_call(
+    cx: &Ctx,
+    recv: Option<&str>,
+    name: &str,
+    args: &[Expr],
+    span: Span,
+) -> Result<Type, DslError> {
+    let argc = args.len();
+    match (recv, name, argc) {
+        (None, "abs", 1) => type_expr(cx, &args[0], span),
+        (Some(r), "num_nodes", 0) | (Some(r), "num_edges", 0) => {
+            if cx.lookup(r) != Some(&Type::Graph) {
+                return Err(DslError::at(span, &format!("`{r}` is not a Graph")));
+            }
+            Ok(Type::Int)
+        }
+        (Some(r), "minWt", 0) | (Some(r), "maxWt", 0) => {
+            if cx.lookup(r) != Some(&Type::Graph) {
+                return Err(DslError::at(span, &format!("`{r}` is not a Graph")));
+            }
+            Ok(Type::Int)
+        }
+        (Some(r), "is_an_edge", 2) => {
+            if cx.lookup(r) != Some(&Type::Graph) {
+                return Err(DslError::at(span, &format!("`{r}` is not a Graph")));
+            }
+            Ok(Type::Bool)
+        }
+        (Some(r), "get_edge", 2) => {
+            if cx.lookup(r) != Some(&Type::Graph) {
+                return Err(DslError::at(span, &format!("`{r}` is not a Graph")));
+            }
+            Ok(Type::Edge)
+        }
+        (Some(r), "outDegree", 0) | (Some(r), "inDegree", 0) => {
+            match cx.lookup(r) {
+                Some(Type::Node) => Ok(Type::Int),
+                _ => Err(DslError::at(span, &format!("`{r}.{name}()` requires a node"))),
+            }
+        }
+        _ => Err(DslError::at(
+            span,
+            &format!(
+                "unknown builtin `{}{name}/{argc}`",
+                recv.map(|r| format!("{r}.")).unwrap_or_default()
+            ),
+        )),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse;
+
+    fn check(src: &str) -> Result<TypedFunction, DslError> {
+        let fns = parse(src).unwrap();
+        check_function(&fns[0])
+    }
+
+    #[test]
+    fn shipped_programs_typecheck() {
+        for p in ["bc.sp", "pr.sp", "sssp.sp", "tc.sp", "cc.sp", "bfs.sp"] {
+            let path =
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("dsl_programs").join(p);
+            let src = std::fs::read_to_string(&path).unwrap();
+            let fns = parse(&src).unwrap();
+            check_function(&fns[0]).unwrap_or_else(|e| panic!("{p}: {e}"));
+        }
+    }
+
+    #[test]
+    fn registers_props_from_params_and_decls() {
+        let tf = check(
+            "function f(Graph g, propNode<float> BC) {
+               propNode<int> lvl;
+               g.attachNodeProperty(BC = 0, lvl = 0);
+             }",
+        )
+        .unwrap();
+        assert_eq!(tf.node_props.get("BC"), Some(&Type::Float));
+        assert_eq!(tf.node_props.get("lvl"), Some(&Type::Int));
+        assert_eq!(tf.graph, "g");
+    }
+
+    #[test]
+    fn rejects_unknown_property() {
+        let r = check("function f(Graph g) { g.attachNodeProperty(nope = 0); }");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_bool_arith() {
+        let r = check("function f(Graph g) { bool b = True; float x = b + 1; }");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_nonbool_filter() {
+        let r = check(
+            "function f(Graph g) { forall (v in g.nodes().filter(v + 1)) { } }",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_bad_fixedpoint_var() {
+        let r = check(
+            "function f(Graph g, propNode<bool> m) {
+               fixedPoint until (nothere: !m) { }
+             }",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn fixedpoint_needs_bool_prop() {
+        let r = check(
+            "function f(Graph g, propNode<int> m) {
+               bool fin = False;
+               fixedPoint until (fin: !m) { }
+             }",
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn rejects_and_reduce_on_numeric() {
+        let r = check("function f(Graph g) { int x = 1; x &&= True; }");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn node_coerces_to_int() {
+        let tf = check(
+            "function f(Graph g, propNode<int> comp) {
+               forall (v in g.nodes()) { v.comp = v; }
+             }",
+        );
+        assert!(tf.is_ok());
+    }
+
+    #[test]
+    fn redeclaration_rejected() {
+        let r = check("function f(Graph g) { int x = 1; int x = 2; }");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn unknown_builtin_rejected() {
+        let r = check("function f(Graph g) { int x = g.frobnicate(); }");
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn return_type_captured() {
+        let tf = check("function f(Graph g) { long c = 0; return c; }").unwrap();
+        assert_eq!(tf.returns, Some(Type::Long));
+    }
+}

@@ -1,0 +1,148 @@
+//! Atomic helpers mirroring the GPU intrinsics the paper's generated code
+//! relies on (`atomicMin`, `atomicAdd` on float), built from CAS loops —
+//! exactly how OpenCL simulates float atomics via `atomic_cmpxchg` (§3.3).
+
+use std::sync::atomic::{AtomicI32, AtomicI64, AtomicU32, AtomicU64, Ordering};
+
+/// `atomicMin(&x, v)` for i32. Returns the previous value.
+#[inline]
+pub fn atomic_min_i32(cell: &AtomicI32, v: i32) -> i32 {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while v < cur {
+        match cell.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(prev) => return prev,
+            Err(now) => cur = now,
+        }
+    }
+    cur
+}
+
+/// `atomicMax(&x, v)` for i32. Returns the previous value.
+#[inline]
+pub fn atomic_max_i32(cell: &AtomicI32, v: i32) -> i32 {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while v > cur {
+        match cell.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(prev) => return prev,
+            Err(now) => cur = now,
+        }
+    }
+    cur
+}
+
+/// `atomicAdd` on f32 via CAS on the bit pattern.
+#[inline]
+pub fn atomic_add_f32(cell: &AtomicU32, v: f32) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let new = (f32::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// `atomicAdd` on f64 via CAS on the bit pattern.
+#[inline]
+pub fn atomic_add_f64(cell: &AtomicU64, v: f64) {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let new = (f64::from_bits(cur) + v).to_bits();
+        match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return,
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// `atomicMin` on f64 (used by Min constructs on float properties).
+#[inline]
+pub fn atomic_min_f64(cell: &AtomicU64, v: f64) -> f64 {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let cur_f = f64::from_bits(cur);
+        if !(v < cur_f) {
+            return cur_f;
+        }
+        match cell.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(prev) => return f64::from_bits(prev),
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// `atomicMax` on f64.
+#[inline]
+pub fn atomic_max_f64(cell: &AtomicU64, v: f64) -> f64 {
+    let mut cur = cell.load(Ordering::Relaxed);
+    loop {
+        let cur_f = f64::from_bits(cur);
+        if !(v > cur_f) {
+            return cur_f;
+        }
+        match cell.compare_exchange_weak(cur, v.to_bits(), Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(prev) => return f64::from_bits(prev),
+            Err(now) => cur = now,
+        }
+    }
+}
+
+/// `atomicMin` for i64 cells.
+#[inline]
+pub fn atomic_min_i64(cell: &AtomicI64, v: i64) -> i64 {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while v < cur {
+        match cell.compare_exchange_weak(cur, v, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(prev) => return prev,
+            Err(now) => cur = now,
+        }
+    }
+    cur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::pool::parallel_for;
+
+    #[test]
+    fn min_i32_concurrent() {
+        let cell = AtomicI32::new(i32::MAX);
+        parallel_for(1000, 4, |i| {
+            atomic_min_i32(&cell, 1000 - i as i32);
+        });
+        assert_eq!(cell.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn add_f64_concurrent_sums() {
+        let cell = AtomicU64::new(0f64.to_bits());
+        parallel_for(10_000, 4, |_| {
+            atomic_add_f64(&cell, 0.5);
+        });
+        assert_eq!(f64::from_bits(cell.load(Ordering::Relaxed)), 5000.0);
+    }
+
+    #[test]
+    fn min_max_f64() {
+        let cell = AtomicU64::new(10f64.to_bits());
+        atomic_min_f64(&cell, 3.5);
+        assert_eq!(f64::from_bits(cell.load(Ordering::Relaxed)), 3.5);
+        atomic_max_f64(&cell, 99.0);
+        assert_eq!(f64::from_bits(cell.load(Ordering::Relaxed)), 99.0);
+        // no-ops
+        atomic_min_f64(&cell, 100.0);
+        atomic_max_f64(&cell, 0.0);
+        assert_eq!(f64::from_bits(cell.load(Ordering::Relaxed)), 99.0);
+    }
+
+    #[test]
+    fn max_i32() {
+        let cell = AtomicI32::new(0);
+        parallel_for(100, 4, |i| {
+            atomic_max_i32(&cell, i as i32);
+        });
+        assert_eq!(cell.load(Ordering::Relaxed), 99);
+    }
+}

@@ -1,0 +1,160 @@
+//! Criterion-lite: a dependency-free measurement harness for `cargo bench`.
+//!
+//! The registry's criterion crate is unavailable offline, so the bench
+//! binaries (declared `harness = false`) use this module: warmup, repeated
+//! timed runs, robust statistics, and optional wall-clock budgets (the
+//! paper's one-hour OOT cells are reproduced with a scaled timeout).
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct Measurement {
+    pub name: String,
+    pub samples: Vec<f64>, // seconds per run
+}
+
+impl Measurement {
+    pub fn mean(&self) -> f64 {
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+    pub fn median(&self) -> f64 {
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = s.len();
+        if n % 2 == 1 {
+            s[n / 2]
+        } else {
+            0.5 * (s[n / 2 - 1] + s[n / 2])
+        }
+    }
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean();
+        let var = self.samples.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / self.samples.len().max(1) as f64;
+        var.sqrt()
+    }
+    pub fn min(&self) -> f64 {
+        self.samples.iter().cloned().fold(f64::INFINITY, f64::min)
+    }
+}
+
+/// Outcome of a bench cell: a time, or the paper's OOT/OOM markers.
+#[derive(Clone, Debug)]
+pub enum Cell {
+    Secs(f64),
+    OutOfTime,
+    OutOfMemory,
+    Unsupported, // the paper's "-" cells
+}
+
+impl Cell {
+    pub fn display(&self) -> String {
+        match self {
+            Cell::Secs(s) => crate::util::table::fmt_secs(*s),
+            Cell::OutOfTime => "OOT".into(),
+            Cell::OutOfMemory => "OOM".into(),
+            Cell::Unsupported => "-".into(),
+        }
+    }
+    pub fn secs(&self) -> Option<f64> {
+        match self {
+            Cell::Secs(s) => Some(*s),
+            _ => None,
+        }
+    }
+}
+
+/// Bench configuration.
+#[derive(Clone, Debug)]
+pub struct BenchConfig {
+    pub warmup: usize,
+    pub runs: usize,
+    /// Per-cell budget; a run exceeding it marks the cell OOT (scaled stand-in
+    /// for the paper's one-hour timeout).
+    pub timeout: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        // Quick mode (STARPLAT_BENCH_QUICK=1) keeps CI fast on 1 CPU.
+        let quick = std::env::var("STARPLAT_BENCH_QUICK").map(|v| v == "1").unwrap_or(false);
+        BenchConfig {
+            warmup: if quick { 0 } else { 1 },
+            runs: if quick { 1 } else { 3 },
+            timeout: Duration::from_secs(
+                std::env::var("STARPLAT_BENCH_TIMEOUT_S")
+                    .ok()
+                    .and_then(|v| v.parse().ok())
+                    .unwrap_or(30),
+            ),
+        }
+    }
+}
+
+/// Time a closure under the config. Returns OOT if the *first* run exceeds
+/// the budget (subsequent runs are then skipped).
+pub fn bench_cell<F: FnMut()>(cfg: &BenchConfig, mut f: F) -> Cell {
+    for _ in 0..cfg.warmup {
+        let t = Instant::now();
+        f();
+        if t.elapsed() > cfg.timeout {
+            return Cell::OutOfTime;
+        }
+    }
+    let mut samples = Vec::with_capacity(cfg.runs);
+    for i in 0..cfg.runs {
+        let t = Instant::now();
+        f();
+        let el = t.elapsed();
+        if el > cfg.timeout && i == 0 {
+            return Cell::OutOfTime;
+        }
+        samples.push(el.as_secs_f64());
+    }
+    let m = Measurement { name: String::new(), samples };
+    Cell::Secs(m.median())
+}
+
+/// Convenience: time one invocation.
+pub fn time_once<F: FnOnce() -> T, T>(f: F) -> (f64, T) {
+    let t = Instant::now();
+    let out = f();
+    (t.elapsed().as_secs_f64(), out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let m = Measurement { name: "x".into(), samples: vec![1.0, 2.0, 3.0, 4.0] };
+        assert!((m.mean() - 2.5).abs() < 1e-12);
+        assert!((m.median() - 2.5).abs() < 1e-12);
+        assert!((m.min() - 1.0).abs() < 1e-12);
+        assert!(m.stddev() > 1.0 && m.stddev() < 1.2);
+    }
+
+    #[test]
+    fn bench_returns_secs() {
+        let cfg = BenchConfig { warmup: 0, runs: 2, timeout: Duration::from_secs(5) };
+        let c = bench_cell(&cfg, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(c.secs().unwrap() < 1.0);
+    }
+
+    #[test]
+    fn bench_oot() {
+        let cfg = BenchConfig { warmup: 0, runs: 1, timeout: Duration::from_millis(1) };
+        let c = bench_cell(&cfg, || std::thread::sleep(Duration::from_millis(10)));
+        assert!(matches!(c, Cell::OutOfTime));
+    }
+
+    #[test]
+    fn cell_display() {
+        assert_eq!(Cell::OutOfMemory.display(), "OOM");
+        assert_eq!(Cell::Unsupported.display(), "-");
+        assert_eq!(Cell::Secs(1.5).display(), "1.500");
+    }
+}

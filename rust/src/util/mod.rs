@@ -1,0 +1,30 @@
+//! Dependency-free substrates: PRNG, JSON, tables, parallel loops, benching.
+
+pub mod atomics;
+pub mod bench;
+pub mod json;
+pub mod pool;
+pub mod rng;
+pub mod table;
+
+/// Count non-blank, non-comment-only lines in a source string — used for the
+/// paper's §5 lines-of-code comparison across backends.
+pub fn count_loc(src: &str) -> usize {
+    src.lines()
+        .map(str::trim)
+        .filter(|l| {
+            let code = !l.is_empty() && !l.starts_with("//") && !l.starts_with('#');
+            // #pragma / #include are real code even though they start with '#'.
+            code || l.starts_with("#pragma") || l.starts_with("#include") || l.starts_with("#define")
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn loc_counts_pragmas_not_comments() {
+        let src = "// c\n\nint x;\n#pragma acc parallel loop\n# plain comment\n";
+        assert_eq!(super::count_loc(src), 2);
+    }
+}

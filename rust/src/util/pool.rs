@@ -1,0 +1,150 @@
+//! A small scoped data-parallel executor.
+//!
+//! rayon is unavailable; the interpreter backend and the handwritten
+//! baselines need `parallel_for`-style vertex loops. We implement static
+//! chunking over `std::thread::scope`, which is enough for the regular,
+//! balanced loops generated from the DSL (the paper's backends likewise use
+//! static thread/block decompositions).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: respects STARPLAT_THREADS, defaults to
+/// available parallelism.
+pub fn default_threads() -> usize {
+    if let Ok(v) = std::env::var("STARPLAT_THREADS") {
+        if let Ok(n) = v.parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `f(i)` for every `i in 0..n`, statically chunked over `threads`
+/// workers. `f` must be `Sync` — all mutation must go through atomics or
+/// interior-mutable cells, exactly like a GPU kernel body.
+pub fn parallel_for<F>(n: usize, threads: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || {
+                for i in lo..hi {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Dynamic (work-stealing-ish) variant: workers grab fixed-size blocks from a
+/// shared counter. Better for skewed per-item cost (e.g. triangle counting on
+/// power-law graphs, the paper's TC blow-up case).
+pub fn parallel_for_dynamic<F>(n: usize, threads: usize, block: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let threads = threads.clamp(1, n);
+    if threads == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let block = block.max(1);
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            let f = &f;
+            let next = &next;
+            s.spawn(move || loop {
+                let lo = next.fetch_add(block, Ordering::Relaxed);
+                if lo >= n {
+                    break;
+                }
+                let hi = (lo + block).min(n);
+                for i in lo..hi {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Parallel map: collects `f(i)` into a Vec, preserving order.
+pub fn parallel_map<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let mut out = vec![T::default(); n];
+    {
+        let slots: Vec<std::sync::Mutex<&mut T>> =
+            out.iter_mut().map(std::sync::Mutex::new).collect();
+        parallel_for(n, threads, |i| {
+            **slots[i].lock().unwrap() = f(i);
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices() {
+        let hits: Vec<AtomicU64> = (0..1000).map(|_| AtomicU64::new(0)).collect();
+        parallel_for(1000, 4, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn dynamic_covers_all_indices() {
+        let hits: Vec<AtomicU64> = (0..777).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_dynamic(777, 3, 16, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn empty_and_single() {
+        parallel_for(0, 4, |_| panic!("must not run"));
+        let c = AtomicU64::new(0);
+        parallel_for(1, 8, |_| {
+            c.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(c.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = parallel_map(100, 4, |i| i * i);
+        assert_eq!(v[7], 49);
+        assert_eq!(v[99], 9801);
+    }
+}

@@ -1,0 +1,104 @@
+//! ASCII table rendering for benchmark reports (paper-style tables).
+
+/// A simple column-aligned table with a header row.
+#[derive(Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(
+            cells.len(),
+            self.header.len(),
+            "row width {} != header width {}",
+            cells.len(),
+            self.header.len()
+        );
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for r in &self.rows {
+            for (i, c) in r.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        let sep: String = widths
+            .iter()
+            .map(|w| format!("+{}", "-".repeat(w + 2)))
+            .chain(std::iter::once("+\n".to_string()))
+            .collect();
+        let fmt_row = |cells: &[String]| -> String {
+            let mut line = String::new();
+            for i in 0..ncols {
+                line.push_str(&format!("| {:<width$} ", cells[i], width = widths[i]));
+            }
+            line.push_str("|\n");
+            line
+        };
+        out.push_str(&sep);
+        out.push_str(&fmt_row(&self.header));
+        out.push_str(&sep);
+        for r in &self.rows {
+            out.push_str(&fmt_row(r));
+        }
+        out.push_str(&sep);
+        out
+    }
+}
+
+/// Format a duration in seconds the way the paper's tables do (3 decimals,
+/// with OOT/OOM markers passed through).
+pub fn fmt_secs(s: f64) -> String {
+    if s < 0.0005 {
+        format!("{:.5}", s)
+    } else {
+        format!("{:.3}", s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["graph", "time"]);
+        t.row(vec!["RM".into(), "1.234".into()]);
+        t.row(vec!["longer-name".into(), "0.5".into()]);
+        let s = t.render();
+        assert!(s.contains("## demo"));
+        assert!(s.contains("| graph       | time  |"));
+        assert!(s.lines().all(|l| l.is_empty() || l.starts_with('+') || l.starts_with('|') || l.starts_with('#')));
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_width_panics() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(1.2345), "1.234");
+        assert_eq!(fmt_secs(0.0001), "0.00010");
+    }
+}
