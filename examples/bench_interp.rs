@@ -1,0 +1,85 @@
+//! Interpreter perf harness: runs the four Table-4 algorithms through the
+//! slot-resolved interpreter in Seq and Par mode and writes a
+//! machine-readable `BENCH_interp.json` (per-algorithm seconds and
+//! nodes/sec) so successive PRs have a perf trajectory to compare against.
+//!
+//! Run: cargo run --release --example bench_interp
+//! Env: STARPLAT_BENCH_N (graph size knob, default 20000),
+//!      STARPLAT_THREADS (Par worker count)
+
+use starplat::backends::interp::{self, env::Val, Args, Mode};
+use starplat::coordinator::driver::{load_program, Algo};
+use starplat::graph::csr::Graph;
+use starplat::util::json::Json;
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn bench_args(algo: Algo) -> Args {
+    match algo {
+        Algo::Pr => Args::default()
+            .scalar("beta", Val::F(1e-7))
+            .scalar("delta", Val::F(0.85))
+            .scalar("maxIter", Val::I(50)),
+        Algo::Bfs | Algo::Sssp => Args::default().node("src", 0),
+        _ => Args::default(),
+    }
+}
+
+/// Best-of-3 wall-clock seconds for one (algo, graph, mode) cell.
+fn time_cell(algo: Algo, g: &Graph, mode: Mode) -> anyhow::Result<f64> {
+    let tf = load_program(algo)?;
+    let args = bench_args(algo);
+    interp::run(&tf, g, &args, mode)?; // warmup (also surfaces errors once)
+    let mut best = f64::INFINITY;
+    for _ in 0..3 {
+        let t0 = std::time::Instant::now();
+        interp::run(&tf, g, &args, mode)?;
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    Ok(best)
+}
+
+fn main() -> anyhow::Result<()> {
+    let n = env_usize("STARPLAT_BENCH_N", 20_000);
+    let side = (n as f64).sqrt().ceil() as usize;
+    let graphs = vec![
+        starplat::graph::generators::road_grid("road", side, side, 0x11),
+        starplat::graph::generators::rmat("rmat", n, 5 * n, 0x22),
+    ];
+    let algos = [Algo::Bfs, Algo::Sssp, Algo::Cc, Algo::Pr];
+
+    let mut cells = Vec::new();
+    for g in &graphs {
+        for &algo in &algos {
+            for (mode, label) in [(Mode::Seq, "seq"), (Mode::Par, "par")] {
+                let secs = time_cell(algo, g, mode)?;
+                let nps = g.num_nodes() as f64 / secs;
+                println!(
+                    "{:>4?} on {:<5} [{label}]  {secs:>9.4}s  {nps:>12.0} nodes/s",
+                    algo, g.name
+                );
+                cells.push(Json::obj(vec![
+                    ("algorithm", Json::Str(format!("{algo:?}").to_lowercase())),
+                    ("graph", Json::Str(g.name.clone())),
+                    ("mode", Json::Str(label.to_string())),
+                    ("nodes", Json::Num(g.num_nodes() as f64)),
+                    ("edges", Json::Num(g.num_edges() as f64)),
+                    ("secs", Json::Num(secs)),
+                    ("nodes_per_sec", Json::Num(nps)),
+                ]));
+            }
+        }
+    }
+
+    let report = Json::obj(vec![
+        ("engine", Json::Str("slot-resolved-v1".into())),
+        ("threads_par", Json::Num(starplat::util::pool::default_threads() as f64)),
+        ("bench_n", Json::Num(n as f64)),
+        ("cells", Json::Arr(cells)),
+    ]);
+    std::fs::write("BENCH_interp.json", format!("{report}\n"))?;
+    println!("\nwrote BENCH_interp.json");
+    Ok(())
+}

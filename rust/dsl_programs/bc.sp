@@ -1,0 +1,23 @@
+// Betweenness centrality (Brandes over a source set, paper Fig 1 / §3.4):
+// forward BFS accumulates sigma along BFS-DAG edges, the reverse sweep
+// accumulates delta and folds it into BC.
+function Compute_BC(Graph g, propNode<float> BC, SetN<g> sourceSet) {
+  g.attachNodeProperty(BC = 0);
+  for (src in sourceSet) {
+    propNode<float> sigma;
+    propNode<float> delta;
+    g.attachNodeProperty(delta = 0, sigma = 0);
+    src.sigma = 1;
+    iterateInBFS(v in g.nodes() from src) {
+      forall (w in g.neighbors(v)) {
+        w.sigma += v.sigma;
+      }
+    }
+    iterateInReverse(v != src) {
+      forall (w in g.neighbors(v)) {
+        v.delta += (v.sigma / w.sigma) * (1 + w.delta);
+      }
+      v.BC += v.delta;
+    }
+  }
+}

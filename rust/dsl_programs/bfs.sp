@@ -1,0 +1,12 @@
+// BFS levels via iterateInBFS (paper §3.4): inside the construct,
+// g.neighbors(v) yields only the BFS-DAG children of v, so every reachable
+// vertex receives level(parent) + 1; unreachable vertices keep INF.
+function Compute_BFS(Graph g, propNode<int> level, node src) {
+  g.attachNodeProperty(level = INF);
+  src.level = 0;
+  iterateInBFS(v in g.nodes() from src) {
+    forall (w in g.neighbors(v)) {
+      w.level = v.level + 1;
+    }
+  }
+}

@@ -1,0 +1,21 @@
+// Connected components by min-label propagation: the SSSP relaxation shape
+// without edge weights — every vertex converges to the smallest vertex id in
+// its (weakly) connected component.
+function Compute_CC(Graph g, propNode<int> comp) {
+  propNode<bool> modified;
+  propNode<bool> modified_nxt;
+  bool finished = False;
+  forall (v in g.nodes()) {
+    v.comp = v;
+  }
+  g.attachNodeProperty(modified = True, modified_nxt = False);
+  fixedPoint until (finished: !modified) {
+    forall (v in g.nodes().filter(modified == True)) {
+      forall (nbr in g.neighbors(v)) {
+        <nbr.comp, nbr.modified_nxt> = <Min(nbr.comp, v.comp), True>;
+      }
+    }
+    modified = modified_nxt;
+    g.attachNodeProperty(modified_nxt = False);
+  }
+}

@@ -1,0 +1,23 @@
+// Double-buffered PageRank (paper Fig 7): pull over in-edges, L1-delta
+// convergence against beta, capped at maxIter host iterations.
+function Compute_PR(Graph g, float beta, float delta, int maxIter, propNode<float> pageRank) {
+  float num_nodes = g.num_nodes();
+  propNode<float> pageRank_nxt;
+  int iterCount = 0;
+  float diff = 0.0;
+  g.attachNodeProperty(pageRank = 1 / num_nodes);
+  do {
+    diff = 0.0;
+    forall (v in g.nodes()) {
+      float sum = 0.0;
+      for (nbr in g.nodes_to(v)) {
+        sum = sum + nbr.pageRank / nbr.outDegree();
+      }
+      float val = (1 - delta) / num_nodes + delta * sum;
+      diff += abs(val - v.pageRank);
+      v.pageRank_nxt = val;
+    }
+    pageRank = pageRank_nxt;
+    iterCount++;
+  } while ((diff > beta) && (iterCount < maxIter));
+}

@@ -1,0 +1,21 @@
+// Single-source shortest paths (paper Fig 1 / §3.5): fixedPoint relaxation
+// with the Min construct; `modified` / `modified_nxt` ping-pong drives the
+// OR-flag convergence test (§4.1).
+function Compute_SSSP(Graph g, propNode<int> dist, propEdge<int> weight, node src) {
+  propNode<bool> modified;
+  propNode<bool> modified_nxt;
+  bool finished = False;
+  g.attachNodeProperty(dist = INF, modified = False, modified_nxt = False);
+  src.modified = True;
+  src.dist = 0;
+  fixedPoint until (finished: !modified) {
+    forall (v in g.nodes().filter(modified == True)) {
+      forall (nbr in g.neighbors(v)) {
+        edge e = g.get_edge(v, nbr);
+        <nbr.dist, nbr.modified_nxt> = <Min(nbr.dist, v.dist + e.weight), True>;
+      }
+    }
+    modified = modified_nxt;
+    g.attachNodeProperty(modified_nxt = False);
+  }
+}

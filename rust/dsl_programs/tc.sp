@@ -1,0 +1,16 @@
+// Triangle counting (paper §5.1): for each vertex v, count neighbor pairs
+// (u, w) with u < v < w that close a triangle — each triangle is counted
+// exactly once, at its middle vertex.
+function Compute_TC(Graph g) {
+  long triangle_count = 0;
+  forall (v in g.nodes()) {
+    forall (u in g.neighbors(v).filter(u < v)) {
+      forall (w in g.neighbors(v).filter(w > v)) {
+        if (g.is_an_edge(u, w)) {
+          triangle_count += 1;
+        }
+      }
+    }
+  }
+  return triangle_count;
+}

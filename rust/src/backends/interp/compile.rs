@@ -1,0 +1,1065 @@
+//! Lowering pass: typed AST → slot-resolved executable form.
+//!
+//! The paper's thesis is that the *compiler* owns the parallel hot path; for
+//! the CPU backend that means name resolution happens here, once, and never
+//! inside the per-vertex / per-edge loop. This pass walks the typed AST a
+//! single time and produces a compact op tree whose operands are dense
+//! indices:
+//!
+//! - **properties** → `u32` slots into `Env`'s `Vec<PropData>`;
+//! - **shared scalars** (params, host locals, reduction cells) → `u32` slots
+//!   into `Vec<ScalarCell>`;
+//! - **kernel locals and loop elements** → register numbers into a small
+//!   per-worker frame (`[Val]`), sized at compile time;
+//! - **node sets** → slots into `Vec<Vec<Node>>`.
+//!
+//! No `String` survives into execution ([`super::eval`] and the drivers in
+//! [`super`] consume only this form); names are kept solely in the
+//! [`Program`] tables so results can be handed back by name at the API
+//! boundary.
+//!
+//! The pass also recognizes the frontier-eligible `fixedPoint` shape (kernel
+//! filtered on a bool flag + flag ping-pong) so the executor can run a
+//! sparse worklist instead of dense sweeps — see [`FrontierInfo`].
+
+use crate::dsl::ast::*;
+use crate::ir::slots::Interner;
+use crate::ir::ScalarTy;
+use crate::sema::TypedFunction;
+use anyhow::{anyhow, bail, Result};
+
+// ---------------------------------------------------------------------------
+// Slot-resolved form
+// ---------------------------------------------------------------------------
+
+/// Where a node/edge id comes from when indexing a property.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Idx {
+    /// a register of the current kernel frame (loop elements, locals)
+    Reg(u32),
+    /// a shared scalar cell (host-side element references like `src`)
+    Scalar(u32),
+}
+
+/// Slot-resolved expression. Every operand is a dense index; evaluation
+/// performs no name lookup of any kind.
+#[derive(Clone, Debug)]
+pub enum CExpr {
+    ConstI(i64),
+    ConstF(f64),
+    ConstB(bool),
+    LoadReg(u32),
+    LoadScalar(u32),
+    LoadProp { prop: u32, idx: Idx },
+    Unary { op: UnOp, expr: Box<CExpr> },
+    Binary { op: BinOp, lhs: Box<CExpr>, rhs: Box<CExpr> },
+    Abs(Box<CExpr>),
+    NumNodes,
+    NumEdges,
+    MinWt,
+    MaxWt,
+    OutDegree(Idx),
+    InDegree(Idx),
+    IsAnEdge(Box<CExpr>, Box<CExpr>),
+    /// `g.get_edge(v, nbr)` where `nbr` is the innermost tracked neighbor
+    /// loop element: the edge id the loop is currently standing on.
+    CurrentEdge,
+    /// general `g.get_edge(u, w)`: binary search over sorted adjacency
+    /// (still tries the tracked edge first at run time).
+    EdgeLookup { u: Box<CExpr>, w: Box<CExpr> },
+}
+
+/// An extra update performed when a Min/Max construct wins.
+#[derive(Clone, Debug)]
+pub enum CUpdate {
+    Prop { prop: u32, idx: Idx, value: CExpr },
+    Scalar { slot: u32, value: CExpr },
+}
+
+/// Domain of a device-side loop.
+#[derive(Clone, Debug)]
+pub enum DevIter {
+    /// out-neighbors; `dag` = restrict to BFS-DAG children (inside
+    /// iterateInBFS/iterateInReverse). Non-DAG neighbor loops track the
+    /// current edge id for `get_edge`.
+    Neighbors { of: Idx, dag: bool },
+    InNeighbors { of: Idx },
+    AllNodes,
+    Set(u32),
+}
+
+/// Statement inside a parallel region — executed per element by worker
+/// threads; all shared mutation is atomic.
+#[derive(Clone, Debug)]
+pub enum DevStmt {
+    /// local declaration / assignment; `coerce` is the declared type for
+    /// C-style initialization narrowing
+    SetReg { reg: u32, coerce: Option<ScalarTy>, value: CExpr },
+    RegReduce { reg: u32, op: ReduceOp, value: CExpr },
+    ScalarStore { slot: u32, value: CExpr },
+    ScalarReduce { slot: u32, op: ReduceOp, value: CExpr },
+    PropStore { prop: u32, idx: Idx, value: CExpr },
+    PropReduce { prop: u32, idx: Idx, op: ReduceOp, value: CExpr },
+    MinMax { kind: MinMax, prop: u32, idx: Idx, compare: CExpr, extra: Vec<CUpdate> },
+    For { reg: u32, source: DevIter, filter: Option<CExpr>, body: Vec<DevStmt> },
+    If { cond: CExpr, then: Vec<DevStmt>, els: Vec<DevStmt> },
+}
+
+/// A vertex-parallel kernel (top-level `forall` or attach body).
+#[derive(Clone, Debug)]
+pub struct CKernel {
+    /// register holding the loop element
+    pub reg: u32,
+    pub source: DevIter,
+    pub filter: Option<CExpr>,
+    /// `filter` is exactly "bool node property `slot` is set at the loop
+    /// element" — the frontier-eligibility marker
+    pub filter_flag: Option<u32>,
+    pub body: Vec<DevStmt>,
+    /// registers needed per worker frame
+    pub frame_size: usize,
+}
+
+/// Host-side iteration domain for sequential `for` loops.
+#[derive(Clone, Debug)]
+pub enum HostIter {
+    AllNodes,
+    Set(u32),
+    Neighbors { of: u32 },
+    InNeighbors { of: u32 },
+}
+
+/// Frontier fast path for a `fixedPoint` whose body is
+/// `forall(filter(flag)) { ... }; flag = nxt; attach(nxt = False);`
+/// and whose writes to `nxt` only touch the loop element or its
+/// out-neighbors. The executor then processes only flagged vertices and
+/// gathers the next worklist from the updated neighborhood instead of
+/// sweeping all |V| vertices per iteration.
+#[derive(Clone, Copy, Debug)]
+pub struct FrontierInfo {
+    /// the filter flag property (`modified`)
+    pub flag: u32,
+    /// the ping-pong buffer written by the kernel (`modified_nxt`)
+    pub nxt: u32,
+}
+
+/// Host-level statement.
+#[derive(Clone, Debug)]
+pub enum HostStmt {
+    /// (re-)materialize a declared property array
+    AllocProp { prop: u32, ty: ScalarTy, edge: bool },
+    DeclScalar { slot: u32, ty: ScalarTy, init: Option<CExpr> },
+    SetScalar { slot: u32, value: CExpr },
+    ScalarReduce { slot: u32, op: ReduceOp, value: CExpr },
+    /// `src.dist = 0;` — single-element store through a host scalar
+    PropElemStore { prop: u32, obj: u32, value: CExpr },
+    /// whole-property copy `modified = modified_nxt;`
+    PropCopy { dst: u32, src: u32 },
+    /// `g.attachNodeProperty(p = e, ...)` — N-wide parallel fill
+    Attach { inits: Vec<(u32, CExpr)> },
+    Kernel(CKernel),
+    SeqFor { var: u32, source: HostIter, filter: Option<CExpr>, body: Vec<HostStmt> },
+    IterateBFS {
+        reg: u32,
+        from: u32,
+        body: Vec<DevStmt>,
+        reverse: Option<(CExpr, Vec<DevStmt>)>,
+        frame_size: usize,
+    },
+    FixedPoint { var: u32, flag: u32, body: Vec<HostStmt>, frontier: Option<FrontierInfo> },
+    DoWhile { body: Vec<HostStmt>, cond: CExpr },
+    While { cond: CExpr, body: Vec<HostStmt> },
+    If { cond: CExpr, then: Vec<HostStmt>, els: Vec<HostStmt> },
+    Return { value: CExpr },
+}
+
+/// Property slot metadata (drives `Env` allocation).
+#[derive(Clone, Debug)]
+pub struct PropMeta {
+    pub name: String,
+    pub ty: ScalarTy,
+    pub edge: bool,
+    pub param: bool,
+}
+
+/// Shared scalar slot metadata.
+#[derive(Clone, Debug)]
+pub struct ScalarMeta {
+    pub name: String,
+    pub ty: ScalarTy,
+}
+
+/// Function parameters that must be bound from [`super::Args`].
+#[derive(Clone, Debug)]
+pub enum ParamBind {
+    Scalar { name: String, slot: u32, ty: ScalarTy },
+    Set { name: String, slot: u32 },
+}
+
+/// A compiled, slot-resolved DSL function.
+#[derive(Clone, Debug)]
+pub struct Program {
+    pub props: Vec<PropMeta>,
+    pub scalars: Vec<ScalarMeta>,
+    pub sets: Vec<String>,
+    pub params: Vec<ParamBind>,
+    pub body: Vec<HostStmt>,
+}
+
+// ---------------------------------------------------------------------------
+// Compiler
+// ---------------------------------------------------------------------------
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Binding {
+    Prop(u32),
+    Scalar(u32),
+    Reg(u32),
+    Set(u32),
+    Graph,
+}
+
+/// Register allocator for one kernel's frame.
+#[derive(Default)]
+struct Frame {
+    next: u32,
+    max: u32,
+}
+
+impl Frame {
+    fn alloc(&mut self) -> u32 {
+        let r = self.next;
+        self.next += 1;
+        self.max = self.max.max(self.next);
+        r
+    }
+}
+
+struct Compiler {
+    props: Interner,
+    prop_metas: Vec<PropMeta>,
+    scalars: Interner,
+    scalar_metas: Vec<ScalarMeta>,
+    sets: Interner,
+    scopes: Vec<std::collections::HashMap<String, Binding>>,
+    /// register allocator while compiling a parallel region
+    frame: Option<Frame>,
+    /// innermost loop element, for bare-property reads in filters
+    primary: Option<Idx>,
+    /// innermost edge-tracked neighbor loop: (loop var, iteration source)
+    edge_loop: Option<(String, String)>,
+    /// inside iterateInBFS / iterateInReverse
+    in_bfs: bool,
+}
+
+/// Compile a type-checked function to its slot-resolved form.
+pub fn compile(tf: &TypedFunction) -> Result<Program> {
+    let mut cc = Compiler {
+        props: Interner::new(),
+        prop_metas: Vec::new(),
+        scalars: Interner::new(),
+        scalar_metas: Vec::new(),
+        sets: Interner::new(),
+        scopes: vec![Default::default()],
+        frame: None,
+        primary: None,
+        edge_loop: None,
+        in_bfs: false,
+    };
+
+    // Property slots in declaration order (sema's prop_order), so slot
+    // numbering is deterministic across runs.
+    let param_names: std::collections::HashSet<&str> =
+        tf.func.params.iter().map(|p| p.name.as_str()).collect();
+    for name in &tf.prop_order {
+        let (inner, edge) = match (tf.node_props.get(name), tf.edge_props.get(name)) {
+            (Some(t), _) => (t, false),
+            (None, Some(t)) => (t, true),
+            (None, None) => continue,
+        };
+        let slot = cc.props.intern(name);
+        debug_assert_eq!(slot as usize, cc.prop_metas.len());
+        cc.prop_metas.push(PropMeta {
+            name: name.clone(),
+            ty: ScalarTy::of(inner),
+            edge,
+            param: param_names.contains(name.as_str()),
+        });
+    }
+
+    // Parameter bindings.
+    let mut params = Vec::new();
+    for p in &tf.func.params {
+        match &p.ty {
+            Type::Graph => {
+                cc.bind(&p.name, Binding::Graph);
+            }
+            Type::PropNode(_) | Type::PropEdge(_) => {
+                let slot = cc
+                    .props
+                    .get(&p.name)
+                    .ok_or_else(|| anyhow!("property parameter `{}` not registered", p.name))?;
+                cc.bind(&p.name, Binding::Prop(slot));
+            }
+            Type::SetN(_) => {
+                let slot = cc.sets.intern(&p.name);
+                cc.bind(&p.name, Binding::Set(slot));
+                params.push(ParamBind::Set { name: p.name.clone(), slot });
+            }
+            other => {
+                let ty = ScalarTy::of(other);
+                let slot = cc.alloc_scalar(&p.name, ty);
+                cc.bind(&p.name, Binding::Scalar(slot));
+                params.push(ParamBind::Scalar { name: p.name.clone(), slot, ty });
+            }
+        }
+    }
+
+    let body = cc.host_block(&tf.func.body)?;
+    Ok(Program {
+        props: cc.prop_metas,
+        scalars: cc.scalar_metas,
+        sets: cc.sets.names().to_vec(),
+        params,
+        body,
+    })
+}
+
+impl Compiler {
+    fn bind(&mut self, name: &str, b: Binding) {
+        self.scopes.last_mut().unwrap().insert(name.to_string(), b);
+    }
+
+    fn lookup(&self, name: &str) -> Option<Binding> {
+        self.scopes.iter().rev().find_map(|s| s.get(name)).copied()
+    }
+
+    fn alloc_scalar(&mut self, name: &str, ty: ScalarTy) -> u32 {
+        let slot = self.scalars.intern(name);
+        if slot as usize == self.scalar_metas.len() {
+            self.scalar_metas.push(ScalarMeta { name: name.to_string(), ty });
+        }
+        slot
+    }
+
+    fn alloc_reg(&mut self) -> Result<u32> {
+        self.frame
+            .as_mut()
+            .map(|f| f.alloc())
+            .ok_or_else(|| anyhow!("internal: register allocation outside a parallel region"))
+    }
+
+    fn prop_slot(&self, name: &str) -> Result<u32> {
+        self.props.get(name).ok_or_else(|| anyhow!("unknown property `{name}`"))
+    }
+
+    /// Node/edge id source for `obj` in `obj.prop`.
+    fn idx_of(&self, obj: &str) -> Result<Idx> {
+        match self.lookup(obj) {
+            Some(Binding::Reg(r)) => Ok(Idx::Reg(r)),
+            Some(Binding::Scalar(s)) => Ok(Idx::Scalar(s)),
+            _ => bail!("`{obj}` is not an element-valued variable"),
+        }
+    }
+
+    // ---- expressions ---------------------------------------------------
+
+    fn expr(&mut self, e: &Expr) -> Result<CExpr> {
+        Ok(match e {
+            Expr::IntLit(n) => CExpr::ConstI(*n),
+            Expr::FloatLit(x) => CExpr::ConstF(*x),
+            Expr::BoolLit(b) => CExpr::ConstB(*b),
+            Expr::Inf => CExpr::ConstI(super::env::INF_I),
+            Expr::Var(name) => match self.lookup(name) {
+                Some(Binding::Reg(r)) => CExpr::LoadReg(r),
+                Some(Binding::Scalar(s)) => CExpr::LoadScalar(s),
+                Some(Binding::Prop(p)) => {
+                    // bare property name: the current element's value
+                    let idx = self.primary.ok_or_else(|| {
+                        anyhow!("property `{name}` used without a loop element")
+                    })?;
+                    CExpr::LoadProp { prop: p, idx }
+                }
+                Some(Binding::Set(_)) | Some(Binding::Graph) => {
+                    bail!("`{name}` cannot appear in an expression")
+                }
+                None => bail!("unknown variable `{name}`"),
+            },
+            Expr::Prop { obj, prop } => {
+                CExpr::LoadProp { prop: self.prop_slot(prop)?, idx: self.idx_of(obj)? }
+            }
+            Expr::Call { recv, name, args } => return self.call(recv.as_deref(), name, args),
+            Expr::Unary { op, expr } => {
+                CExpr::Unary { op: *op, expr: Box::new(self.expr(expr)?) }
+            }
+            Expr::Binary { op, lhs, rhs } => CExpr::Binary {
+                op: *op,
+                lhs: Box::new(self.expr(lhs)?),
+                rhs: Box::new(self.expr(rhs)?),
+            },
+        })
+    }
+
+    fn call(&mut self, recv: Option<&str>, name: &str, args: &[Expr]) -> Result<CExpr> {
+        Ok(match (recv, name, args.len()) {
+            (None, "abs", 1) => CExpr::Abs(Box::new(self.expr(&args[0])?)),
+            (Some(_), "num_nodes", 0) => CExpr::NumNodes,
+            (Some(_), "num_edges", 0) => CExpr::NumEdges,
+            (Some(_), "minWt", 0) => CExpr::MinWt,
+            (Some(_), "maxWt", 0) => CExpr::MaxWt,
+            (Some(_), "is_an_edge", 2) => CExpr::IsAnEdge(
+                Box::new(self.expr(&args[0])?),
+                Box::new(self.expr(&args[1])?),
+            ),
+            (Some(_), "get_edge", 2) => {
+                // `g.get_edge(v, nbr)` inside `forall (nbr in g.neighbors(v))`
+                // is the edge the loop currently stands on: resolve at
+                // compile time, no search at run time.
+                if let (Some((var, of)), Expr::Var(u), Expr::Var(w)) =
+                    (self.edge_loop.as_ref(), &args[0], &args[1])
+                {
+                    if w == var && u == of {
+                        return Ok(CExpr::CurrentEdge);
+                    }
+                }
+                CExpr::EdgeLookup {
+                    u: Box::new(self.expr(&args[0])?),
+                    w: Box::new(self.expr(&args[1])?),
+                }
+            }
+            (Some(r), "outDegree", 0) => CExpr::OutDegree(self.idx_of(r)?),
+            (Some(r), "inDegree", 0) => CExpr::InDegree(self.idx_of(r)?),
+            _ => bail!(
+                "unknown builtin `{}{name}/{}`",
+                recv.map(|r| format!("{r}.")).unwrap_or_default(),
+                args.len()
+            ),
+        })
+    }
+
+    // ---- host statements ----------------------------------------------
+
+    fn host_block(&mut self, b: &[Stmt]) -> Result<Vec<HostStmt>> {
+        self.scopes.push(Default::default());
+        let out = self.host_block_flat(b);
+        self.scopes.pop();
+        out
+    }
+
+    fn host_block_flat(&mut self, b: &[Stmt]) -> Result<Vec<HostStmt>> {
+        let mut out = Vec::with_capacity(b.len());
+        for s in b {
+            out.push(self.host_stmt(s)?);
+        }
+        Ok(out)
+    }
+
+    fn host_stmt(&mut self, s: &Stmt) -> Result<HostStmt> {
+        Ok(match s {
+            Stmt::Decl { ty, name, init, .. } => {
+                if ty.is_prop() {
+                    let prop = self.prop_slot(name)?;
+                    self.bind(name, Binding::Prop(prop));
+                    let m = &self.prop_metas[prop as usize];
+                    HostStmt::AllocProp { prop, ty: m.ty, edge: m.edge }
+                } else {
+                    let st = ScalarTy::of(ty);
+                    let init = match init {
+                        Some(e) => Some(self.expr(e)?),
+                        None => None,
+                    };
+                    let slot = self.alloc_scalar(name, st);
+                    self.bind(name, Binding::Scalar(slot));
+                    HostStmt::DeclScalar { slot, ty: st, init }
+                }
+            }
+            Stmt::Assign { target, value, .. } => match target {
+                LValue::Var(v) if matches!(self.lookup(v), Some(Binding::Prop(_))) => {
+                    let Some(Binding::Prop(dst)) = self.lookup(v) else { unreachable!() };
+                    let Expr::Var(srcname) = value else {
+                        bail!("property copy needs a property on the right-hand side")
+                    };
+                    let Some(Binding::Prop(src)) = self.lookup(srcname) else {
+                        bail!("property copy needs a property on the right-hand side")
+                    };
+                    HostStmt::PropCopy { dst, src }
+                }
+                LValue::Var(v) => {
+                    let Some(Binding::Scalar(slot)) = self.lookup(v) else {
+                        bail!("unknown scalar `{v}`")
+                    };
+                    HostStmt::SetScalar { slot, value: self.expr(value)? }
+                }
+                LValue::Prop { obj, prop } => {
+                    let Some(Binding::Scalar(objslot)) = self.lookup(obj) else {
+                        bail!("`{obj}` is not a host element variable")
+                    };
+                    HostStmt::PropElemStore {
+                        prop: self.prop_slot(prop)?,
+                        obj: objslot,
+                        value: self.expr(value)?,
+                    }
+                }
+            },
+            Stmt::Reduce { target, op, value, .. } => {
+                let LValue::Var(v) = target else { bail!("host reduction target must be scalar") };
+                let Some(Binding::Scalar(slot)) = self.lookup(v) else {
+                    bail!("unknown scalar `{v}`")
+                };
+                HostStmt::ScalarReduce { slot, op: *op, value: self.expr(value)? }
+            }
+            Stmt::AttachNodeProperty { inits, .. } => {
+                let mut cinits = Vec::with_capacity(inits.len());
+                for (p, e) in inits {
+                    cinits.push((self.prop_slot(p)?, self.expr(e)?));
+                }
+                HostStmt::Attach { inits: cinits }
+            }
+            Stmt::For { iter, body, parallel: true, .. } => {
+                HostStmt::Kernel(self.kernel(iter, body)?)
+            }
+            Stmt::For { iter, body, parallel: false, .. } => {
+                let source = match &iter.source {
+                    IterSource::Nodes { .. } => HostIter::AllNodes,
+                    IterSource::Set { set } => match self.lookup(set) {
+                        Some(Binding::Set(s)) => HostIter::Set(s),
+                        _ => bail!("`{set}` is not a SetN parameter"),
+                    },
+                    IterSource::Neighbors { of, .. } => match self.lookup(of) {
+                        Some(Binding::Scalar(s)) => HostIter::Neighbors { of: s },
+                        _ => bail!("`{of}` is not a host node variable"),
+                    },
+                    IterSource::NodesTo { of, .. } => match self.lookup(of) {
+                        Some(Binding::Scalar(s)) => HostIter::InNeighbors { of: s },
+                        _ => bail!("`{of}` is not a host node variable"),
+                    },
+                };
+                self.scopes.push(Default::default());
+                let var = self.alloc_scalar(&iter.var, ScalarTy::I32);
+                self.bind(&iter.var, Binding::Scalar(var));
+                let saved_primary = self.primary;
+                self.primary = Some(Idx::Scalar(var));
+                let filter = match &iter.filter {
+                    Some(f) => Some(self.expr(f)?),
+                    None => None,
+                };
+                self.primary = saved_primary;
+                let body = self.host_block_flat(body);
+                self.scopes.pop();
+                HostStmt::SeqFor { var, source, filter, body: body? }
+            }
+            Stmt::IterateBFS { var, from, body, reverse, .. } => {
+                let Some(Binding::Scalar(from_slot)) = self.lookup(from) else {
+                    bail!("BFS source `{from}` is not a host node variable")
+                };
+                let saved_frame = self.frame.replace(Frame::default());
+                let saved_primary = self.primary;
+                let saved_bfs = self.in_bfs;
+                self.scopes.push(Default::default());
+                self.in_bfs = true;
+                let result = (|| {
+                    let reg = self.alloc_reg()?;
+                    self.bind(var, Binding::Reg(reg));
+                    self.primary = Some(Idx::Reg(reg));
+                    let cbody = self.dev_block(body)?;
+                    let crev = match reverse {
+                        Some((cond, rbody)) => Some((self.expr(cond)?, self.dev_block(rbody)?)),
+                        None => None,
+                    };
+                    Ok::<_, anyhow::Error>((reg, cbody, crev))
+                })();
+                self.scopes.pop();
+                self.in_bfs = saved_bfs;
+                self.primary = saved_primary;
+                let frame = std::mem::replace(&mut self.frame, saved_frame).unwrap();
+                let (reg, body, reverse) = result?;
+                HostStmt::IterateBFS {
+                    reg,
+                    from: from_slot,
+                    body,
+                    reverse,
+                    frame_size: frame.max as usize,
+                }
+            }
+            Stmt::FixedPoint { var, cond, body, .. } => {
+                let Some(Binding::Scalar(var_slot)) = self.lookup(var) else {
+                    bail!("fixedPoint variable `{var}` is not a declared scalar")
+                };
+                let flag_name = crate::ir::or_flag_prop(cond)
+                    .ok_or_else(|| anyhow!("unsupported fixedPoint condition form"))?;
+                let flag = self.prop_slot(&flag_name)?;
+                let cbody = self.host_block(body)?;
+                let frontier = self.detect_frontier(&cbody, flag);
+                HostStmt::FixedPoint { var: var_slot, flag, body: cbody, frontier }
+            }
+            Stmt::DoWhile { body, cond, .. } => {
+                let body = self.host_block(body)?;
+                HostStmt::DoWhile { body, cond: self.expr(cond)? }
+            }
+            Stmt::While { cond, body, .. } => {
+                let cond = self.expr(cond)?;
+                HostStmt::While { cond, body: self.host_block(body)? }
+            }
+            Stmt::If { cond, then, els, .. } => {
+                let cond = self.expr(cond)?;
+                let then = self.host_block(then)?;
+                let els = match els {
+                    Some(e) => self.host_block(e)?,
+                    None => Vec::new(),
+                };
+                HostStmt::If { cond, then, els }
+            }
+            Stmt::Return { value, .. } => HostStmt::Return { value: self.expr(value)? },
+            Stmt::MinMaxAssign { .. } => bail!("Min/Max construct outside a parallel loop"),
+        })
+    }
+
+    // ---- device statements ---------------------------------------------
+
+    fn kernel(&mut self, iter: &Iterator_, body: &[Stmt]) -> Result<CKernel> {
+        let source = match &iter.source {
+            IterSource::Nodes { .. } => DevIter::AllNodes,
+            IterSource::Set { set } => match self.lookup(set) {
+                Some(Binding::Set(s)) => DevIter::Set(s),
+                _ => bail!("`{set}` is not a SetN parameter"),
+            },
+            IterSource::Neighbors { of, .. } => {
+                DevIter::Neighbors { of: self.idx_of(of)?, dag: false }
+            }
+            IterSource::NodesTo { of, .. } => DevIter::InNeighbors { of: self.idx_of(of)? },
+        };
+        let saved_frame = self.frame.replace(Frame::default());
+        let saved_primary = self.primary;
+        self.scopes.push(Default::default());
+        let result = (|| {
+            let reg = self.alloc_reg()?;
+            self.bind(&iter.var, Binding::Reg(reg));
+            self.primary = Some(Idx::Reg(reg));
+            let filter = match &iter.filter {
+                Some(f) => Some(self.expr(f)?),
+                None => None,
+            };
+            let cbody = self.dev_block(body)?;
+            Ok::<_, anyhow::Error>((reg, filter, cbody))
+        })();
+        self.scopes.pop();
+        self.primary = saved_primary;
+        let frame = std::mem::replace(&mut self.frame, saved_frame).unwrap();
+        let (reg, filter, body) = result?;
+        let filter_flag = self.filter_flag_of(&filter, reg);
+        Ok(CKernel { reg, source, filter, filter_flag, body, frame_size: frame.max as usize })
+    }
+
+    fn dev_block(&mut self, b: &[Stmt]) -> Result<Vec<DevStmt>> {
+        self.scopes.push(Default::default());
+        let out = (|| {
+            let mut out = Vec::with_capacity(b.len());
+            for s in b {
+                out.push(self.dev_stmt(s)?);
+            }
+            Ok(out)
+        })();
+        self.scopes.pop();
+        out
+    }
+
+    fn dev_stmt(&mut self, s: &Stmt) -> Result<DevStmt> {
+        Ok(match s {
+            Stmt::Decl { ty, name, init, .. } => {
+                if ty.is_prop() {
+                    bail!("property declaration inside a parallel region");
+                }
+                let st = ScalarTy::of(ty);
+                let value = match init {
+                    Some(e) => self.expr(e)?,
+                    None => zero_expr(st),
+                };
+                let reg = self.alloc_reg()?;
+                self.bind(name, Binding::Reg(reg));
+                DevStmt::SetReg { reg, coerce: Some(st), value }
+            }
+            Stmt::Assign { target, value, .. } => {
+                // read-modify-write on shared properties becomes an atomic
+                // reduction, as in the generated GPU code
+                if let Some((t, op, rhs)) = crate::ir::analyze::as_reduction(target, value) {
+                    if let LValue::Prop { obj, prop } = &t {
+                        return Ok(DevStmt::PropReduce {
+                            prop: self.prop_slot(prop)?,
+                            idx: self.idx_of(obj)?,
+                            op,
+                            value: self.expr(&rhs)?,
+                        });
+                    }
+                }
+                match target {
+                    LValue::Var(v) => match self.lookup(v) {
+                        Some(Binding::Reg(r)) => {
+                            DevStmt::SetReg { reg: r, coerce: None, value: self.expr(value)? }
+                        }
+                        Some(Binding::Scalar(slot)) => {
+                            // shared scalar write (rare; e.g. flags) — atomic
+                            DevStmt::ScalarStore { slot, value: self.expr(value)? }
+                        }
+                        _ => bail!("cannot assign to `{v}` inside a parallel region"),
+                    },
+                    LValue::Prop { obj, prop } => DevStmt::PropStore {
+                        prop: self.prop_slot(prop)?,
+                        idx: self.idx_of(obj)?,
+                        value: self.expr(value)?,
+                    },
+                }
+            }
+            Stmt::Reduce { target, op, value, .. } => match target {
+                LValue::Var(v) => match self.lookup(v) {
+                    Some(Binding::Reg(r)) => {
+                        DevStmt::RegReduce { reg: r, op: *op, value: self.expr(value)? }
+                    }
+                    Some(Binding::Scalar(slot)) => {
+                        DevStmt::ScalarReduce { slot, op: *op, value: self.expr(value)? }
+                    }
+                    _ => bail!("cannot reduce into `{v}` inside a parallel region"),
+                },
+                LValue::Prop { obj, prop } => DevStmt::PropReduce {
+                    prop: self.prop_slot(prop)?,
+                    idx: self.idx_of(obj)?,
+                    op: *op,
+                    value: self.expr(value)?,
+                },
+            },
+            Stmt::MinMaxAssign { kind, target, compare, extra, .. } => {
+                let LValue::Prop { obj, prop } = target else {
+                    bail!("Min/Max target must be a property")
+                };
+                let prop = self.prop_slot(prop)?;
+                let idx = self.idx_of(obj)?;
+                let compare = self.expr(compare)?;
+                let mut cextra = Vec::with_capacity(extra.len());
+                for (t, v) in extra {
+                    let value = self.expr(v)?;
+                    cextra.push(match t {
+                        LValue::Prop { obj, prop } => CUpdate::Prop {
+                            prop: self.prop_slot(prop)?,
+                            idx: self.idx_of(obj)?,
+                            value,
+                        },
+                        LValue::Var(name) => match self.lookup(name) {
+                            Some(Binding::Scalar(slot)) => CUpdate::Scalar { slot, value },
+                            _ => bail!("Min/Max extra target `{name}` must be a shared scalar"),
+                        },
+                    });
+                }
+                DevStmt::MinMax { kind: *kind, prop, idx, compare, extra: cextra }
+            }
+            Stmt::For { iter, body, .. } => {
+                // nested loops run sequentially within the worker thread
+                // (same-kernel folding, as the paper's generated code does)
+                let (source, tracks_edge) = match &iter.source {
+                    IterSource::Neighbors { of, .. } => {
+                        let dag = self.in_bfs;
+                        (DevIter::Neighbors { of: self.idx_of(of)?, dag }, !dag)
+                    }
+                    IterSource::NodesTo { of, .. } => {
+                        (DevIter::InNeighbors { of: self.idx_of(of)? }, false)
+                    }
+                    IterSource::Nodes { .. } => (DevIter::AllNodes, false),
+                    IterSource::Set { set } => match self.lookup(set) {
+                        Some(Binding::Set(s)) => (DevIter::Set(s), false),
+                        _ => bail!("`{set}` is not a SetN parameter"),
+                    },
+                };
+                self.scopes.push(Default::default());
+                let saved_primary = self.primary;
+                let saved_edge_loop = self.edge_loop.clone();
+                let result = (|| {
+                    let reg = self.alloc_reg()?;
+                    self.bind(&iter.var, Binding::Reg(reg));
+                    self.primary = Some(Idx::Reg(reg));
+                    if tracks_edge {
+                        if let IterSource::Neighbors { of, .. } = &iter.source {
+                            self.edge_loop = Some((iter.var.clone(), of.clone()));
+                        }
+                    } else if matches!(source, DevIter::Neighbors { dag: true, .. }) {
+                        self.edge_loop = None;
+                    }
+                    let filter = match &iter.filter {
+                        Some(f) => Some(self.expr(f)?),
+                        None => None,
+                    };
+                    let mut cbody = Vec::with_capacity(body.len());
+                    for st in body {
+                        cbody.push(self.dev_stmt(st)?);
+                    }
+                    Ok::<_, anyhow::Error>((reg, filter, cbody))
+                })();
+                self.scopes.pop();
+                self.primary = saved_primary;
+                self.edge_loop = saved_edge_loop;
+                let (reg, filter, body) = result?;
+                DevStmt::For { reg, source, filter, body }
+            }
+            Stmt::If { cond, then, els, .. } => {
+                let cond = self.expr(cond)?;
+                let then = self.dev_block(then)?;
+                let els = match els {
+                    Some(e) => self.dev_block(e)?,
+                    None => Vec::new(),
+                };
+                DevStmt::If { cond, then, els }
+            }
+            other => bail!("statement not allowed inside a parallel region: {other:?}"),
+        })
+    }
+
+    // ---- frontier pattern recognition ----------------------------------
+
+    /// Is the kernel filter exactly "bool node property at the loop element"?
+    fn filter_flag_of(&self, filter: &Option<CExpr>, reg: u32) -> Option<u32> {
+        let prop = match filter.as_ref()? {
+            CExpr::LoadProp { prop, idx: Idx::Reg(r) } if *r == reg => *prop,
+            CExpr::Binary { op: BinOp::Eq, lhs, rhs } => match (&**lhs, &**rhs) {
+                (CExpr::LoadProp { prop, idx: Idx::Reg(r) }, CExpr::ConstB(true))
+                    if *r == reg =>
+                {
+                    *prop
+                }
+                _ => return None,
+            },
+            _ => return None,
+        };
+        let m = &self.prop_metas[prop as usize];
+        (m.ty == ScalarTy::Bool && !m.edge).then_some(prop)
+    }
+
+    /// Recognize the frontier-eligible fixedPoint body shape.
+    fn detect_frontier(&self, body: &[HostStmt], flag: u32) -> Option<FrontierInfo> {
+        let [HostStmt::Kernel(k), HostStmt::PropCopy { dst, src }, HostStmt::Attach { inits }] =
+            body
+        else {
+            return None;
+        };
+        if *dst != flag || k.filter_flag != Some(flag) {
+            return None;
+        }
+        if !matches!(k.source, DevIter::AllNodes) {
+            return None;
+        }
+        let nxt = *src;
+        // the reset must clear exactly the ping-pong buffer
+        let [(reset_prop, CExpr::ConstB(false))] = inits.as_slice() else { return None };
+        if *reset_prop != nxt {
+            return None;
+        }
+        // the kernel must not touch the flag itself, and all its writes to
+        // `nxt` must target the loop element or its out-neighbors — that is
+        // the neighborhood the sparse gather scans
+        if writes_prop(&k.body, flag) {
+            return None;
+        }
+        let mut allowed = vec![k.reg];
+        if !writes_only_near(&k.body, nxt, k.reg, &mut allowed) {
+            return None;
+        }
+        Some(FrontierInfo { flag, nxt })
+    }
+}
+
+fn zero_expr(st: ScalarTy) -> CExpr {
+    match st {
+        ScalarTy::F32 | ScalarTy::F64 => CExpr::ConstF(0.0),
+        ScalarTy::Bool => CExpr::ConstB(false),
+        _ => CExpr::ConstI(0),
+    }
+}
+
+/// Does the block write property `prop` anywhere?
+fn writes_prop(body: &[DevStmt], prop: u32) -> bool {
+    body.iter().any(|s| match s {
+        DevStmt::PropStore { prop: p, .. } | DevStmt::PropReduce { prop: p, .. } => *p == prop,
+        DevStmt::MinMax { prop: p, extra, .. } => {
+            *p == prop
+                || extra.iter().any(|u| matches!(u, CUpdate::Prop { prop: q, .. } if *q == prop))
+        }
+        DevStmt::For { body, .. } => writes_prop(body, prop),
+        DevStmt::If { then, els, .. } => writes_prop(then, prop) || writes_prop(els, prop),
+        _ => false,
+    })
+}
+
+/// Are all writes to `prop` indexed by the kernel element or by loop
+/// variables ranging over its *direct* out-neighbors? (`allowed` holds the
+/// eligible registers; neighbor loops of the root element extend it for
+/// their body only.)
+fn writes_only_near(body: &[DevStmt], prop: u32, root: u32, allowed: &mut Vec<u32>) -> bool {
+    let idx_ok = |idx: &Idx, allowed: &[u32]| matches!(idx, Idx::Reg(r) if allowed.contains(r));
+    body.iter().all(|s| match s {
+        DevStmt::PropStore { prop: p, idx, .. } | DevStmt::PropReduce { prop: p, idx, .. } => {
+            *p != prop || idx_ok(idx, allowed)
+        }
+        DevStmt::MinMax { prop: p, idx, extra, .. } => {
+            (*p != prop || idx_ok(idx, allowed))
+                && extra.iter().all(|u| match u {
+                    CUpdate::Prop { prop: q, idx, .. } => *q != prop || idx_ok(idx, allowed),
+                    CUpdate::Scalar { .. } => true,
+                })
+        }
+        DevStmt::For { reg, source, body, .. } => {
+            let direct = matches!(
+                source,
+                DevIter::Neighbors { of: Idx::Reg(r), dag: false } if *r == root
+            );
+            if direct {
+                allowed.push(*reg);
+            }
+            let ok = writes_only_near(body, prop, root, allowed);
+            if direct {
+                allowed.pop();
+            }
+            ok
+        }
+        DevStmt::If { then, els, .. } => {
+            writes_only_near(then, prop, root, allowed)
+                && writes_only_near(els, prop, root, allowed)
+        }
+        _ => true,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse;
+    use crate::sema::check_function;
+
+    fn compile_src(src: &str) -> Program {
+        let fns = parse(src).unwrap();
+        let tf = check_function(&fns[0]).unwrap();
+        compile(&tf).unwrap()
+    }
+
+    fn compile_program(p: &str) -> Program {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("dsl_programs").join(p);
+        let src = std::fs::read_to_string(&path).unwrap();
+        compile_src(&src)
+    }
+
+    #[test]
+    fn all_shipped_programs_compile() {
+        for p in ["bc.sp", "pr.sp", "sssp.sp", "tc.sp", "cc.sp", "bfs.sp"] {
+            let prog = compile_program(p);
+            assert!(!prog.body.is_empty(), "{p}");
+        }
+    }
+
+    #[test]
+    fn sssp_slots_and_frontier() {
+        let prog = compile_program("sssp.sp");
+        // props in declaration order: params first, then body declarations
+        let names: Vec<&str> = prog.props.iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, vec!["dist", "weight", "modified", "modified_nxt"]);
+        assert!(prog.props[1].edge && prog.props[1].param);
+        assert!(!prog.props[2].param);
+        // the fixedPoint is frontier-eligible: filter on `modified`,
+        // ping-pong into `modified_nxt`
+        let fp = prog
+            .body
+            .iter()
+            .find_map(|s| match s {
+                HostStmt::FixedPoint { frontier, .. } => Some(*frontier),
+                _ => None,
+            })
+            .expect("sssp has a fixedPoint");
+        let f = fp.expect("sssp fixedPoint is frontier-eligible");
+        assert_eq!(prog.props[f.flag as usize].name, "modified");
+        assert_eq!(prog.props[f.nxt as usize].name, "modified_nxt");
+    }
+
+    #[test]
+    fn cc_frontier_eligible() {
+        let prog = compile_program("cc.sp");
+        let fp = prog
+            .body
+            .iter()
+            .find_map(|s| match s {
+                HostStmt::FixedPoint { frontier, .. } => Some(*frontier),
+                _ => None,
+            })
+            .expect("cc has a fixedPoint");
+        assert!(fp.is_some(), "cc fixedPoint should be frontier-eligible");
+    }
+
+    #[test]
+    fn get_edge_resolves_to_current_edge() {
+        let prog = compile_src(
+            "function f(Graph g, propNode<int> dist, propEdge<int> weight) {
+               forall (v in g.nodes()) {
+                 forall (nbr in g.neighbors(v)) {
+                   edge e = g.get_edge(v, nbr);
+                   nbr.dist = e.weight;
+                 }
+               }
+             }",
+        );
+        let HostStmt::Kernel(k) = &prog.body[0] else { panic!("expected kernel") };
+        let DevStmt::For { body, .. } = &k.body[0] else { panic!("expected nested loop") };
+        assert!(
+            matches!(&body[0], DevStmt::SetReg { value: CExpr::CurrentEdge, .. }),
+            "get_edge on the loop edge should compile to CurrentEdge, got {:?}",
+            body[0]
+        );
+    }
+
+    #[test]
+    fn kernel_frames_are_small_and_sized() {
+        let prog = compile_program("sssp.sp");
+        let k = prog
+            .body
+            .iter()
+            .find_map(|s| match s {
+                HostStmt::FixedPoint { body, .. } => body.iter().find_map(|s| match s {
+                    HostStmt::Kernel(k) => Some(k),
+                    _ => None,
+                }),
+                _ => None,
+            })
+            .expect("relax kernel");
+        // v, nbr, e
+        assert_eq!(k.frame_size, 3);
+        assert!(k.filter_flag.is_some());
+    }
+
+    #[test]
+    fn non_pingpong_fixedpoint_is_not_frontier() {
+        // kernel writes the filter flag itself -> no fast path
+        let prog = compile_src(
+            "function f(Graph g, propNode<int> dist) {
+               propNode<bool> modified;
+               bool fin = False;
+               g.attachNodeProperty(modified = True);
+               fixedPoint until (fin: !modified) {
+                 forall (v in g.nodes().filter(modified == True)) {
+                   v.modified = False;
+                 }
+               }
+             }",
+        );
+        let fp = prog
+            .body
+            .iter()
+            .find_map(|s| match s {
+                HostStmt::FixedPoint { frontier, .. } => Some(*frontier),
+                _ => None,
+            })
+            .unwrap();
+        assert!(fp.is_none());
+    }
+
+    #[test]
+    fn bare_scalar_names_resolve_to_slots() {
+        let prog = compile_program("pr.sp");
+        // every scalar has a unique slot; diff and iterCount are shared cells
+        let names: Vec<&str> = prog.scalars.iter().map(|m| m.name.as_str()).collect();
+        assert!(names.contains(&"diff"));
+        assert!(names.contains(&"iterCount"));
+        assert!(names.contains(&"beta"));
+    }
+}

@@ -1,10 +1,16 @@
 //! Runtime state for the interpreter: property arrays (atomic, shared across
-//! worker threads) and host scalars.
+//! worker threads), shared scalar cells, and node sets — all indexed by the
+//! dense `u32` slots assigned by the lowering pass ([`super::compile`]).
+//!
+//! No string-keyed container is touched during execution: the only
+//! `HashMap<String, _>` left in this module is produced by [`Env::take_props`]
+//! at the API boundary, when execution results are handed back as an
+//! [`super::Output`].
 
 use crate::dsl::ast::{MinMax, ReduceOp, Type};
 use crate::graph::csr::{Graph, Node};
-use crate::sema::TypedFunction;
-use anyhow::{anyhow, bail, Result};
+use crate::ir::ScalarTy;
+use anyhow::{bail, Result};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
 
@@ -41,9 +47,13 @@ impl Val {
         }
     }
     pub fn zero_of(ty: &Type) -> Val {
-        match crate::ir::ScalarTy::of(ty) {
-            crate::ir::ScalarTy::F32 | crate::ir::ScalarTy::F64 => Val::F(0.0),
-            crate::ir::ScalarTy::Bool => Val::B(false),
+        Val::zero_st(ScalarTy::of(ty))
+    }
+    /// Zero value for a machine scalar type.
+    pub fn zero_st(st: ScalarTy) -> Val {
+        match st {
+            ScalarTy::F32 | ScalarTy::F64 => Val::F(0.0),
+            ScalarTy::Bool => Val::B(false),
             _ => Val::I(0),
         }
     }
@@ -60,15 +70,23 @@ pub enum PropData {
 
 impl PropData {
     pub fn alloc(ty: &Type, len: usize) -> PropData {
-        match crate::ir::ScalarTy::of(ty) {
-            crate::ir::ScalarTy::F32 | crate::ir::ScalarTy::F64 => {
+        PropData::alloc_st(ScalarTy::of(ty), len)
+    }
+
+    /// Allocate zero-initialized storage for a machine scalar type.
+    pub fn alloc_st(st: ScalarTy, len: usize) -> PropData {
+        match st {
+            ScalarTy::F32 | ScalarTy::F64 => {
                 PropData::F((0..len).map(|_| AtomicU64::new(0f64.to_bits())).collect())
             }
-            crate::ir::ScalarTy::Bool => {
-                PropData::B((0..len).map(|_| AtomicBool::new(false)).collect())
-            }
+            ScalarTy::Bool => PropData::B((0..len).map(|_| AtomicBool::new(false)).collect()),
             _ => PropData::I((0..len).map(|_| AtomicI64::new(0)).collect()),
         }
+    }
+
+    /// Wrap the graph's edge weights (propEdge parameters bind to these).
+    pub fn from_weights(g: &Graph) -> PropData {
+        PropData::I(g.weights.iter().map(|&w| AtomicI64::new(w as i64)).collect())
     }
 
     pub fn len(&self) -> usize {
@@ -82,6 +100,7 @@ impl PropData {
         self.len() == 0
     }
 
+    #[inline]
     pub fn load(&self, i: usize) -> Val {
         match self {
             PropData::I(v) => Val::I(v[i].load(Ordering::Relaxed)),
@@ -90,6 +109,16 @@ impl PropData {
         }
     }
 
+    /// Fast path for bool properties (frontier scans).
+    #[inline]
+    pub fn load_bool(&self, i: usize) -> bool {
+        match self {
+            PropData::B(v) => v[i].load(Ordering::Relaxed),
+            other => matches!(other.load(i), Val::I(x) if x != 0),
+        }
+    }
+
+    #[inline]
     pub fn store(&self, i: usize, val: Val) {
         match self {
             PropData::I(v) => v[i].store(val.as_i().unwrap_or(0), Ordering::Relaxed),
@@ -99,14 +128,17 @@ impl PropData {
     }
 
     /// Atomic reduction at index `i` (device semantics: atomicAdd & co).
-    pub fn atomic_reduce(&self, i: usize, op: ReduceOp, rhs: Val) {
+    /// Unsupported (storage, operator) combinations are an error: the old
+    /// silent fall-through dropped reductions on the floor, which hid type
+    /// bugs in lowered programs.
+    pub fn atomic_reduce(&self, i: usize, op: ReduceOp, rhs: Val) -> Result<()> {
         match (self, op) {
             (PropData::I(v), ReduceOp::Add | ReduceOp::Count) => {
-                v[i].fetch_add(rhs.as_i().unwrap_or(0), Ordering::Relaxed);
+                v[i].fetch_add(rhs.as_i()?, Ordering::Relaxed);
             }
             (PropData::I(v), ReduceOp::Mul) => {
                 // CAS loop (no fetch_mul)
-                let rhs = rhs.as_i().unwrap_or(1);
+                let rhs = rhs.as_i()?;
                 let mut cur = v[i].load(Ordering::Relaxed);
                 loop {
                     match v[i].compare_exchange_weak(
@@ -121,10 +153,10 @@ impl PropData {
                 }
             }
             (PropData::F(v), ReduceOp::Add | ReduceOp::Count) => {
-                crate::util::atomics::atomic_add_f64(&v[i], rhs.as_f().unwrap_or(0.0));
+                crate::util::atomics::atomic_add_f64(&v[i], rhs.as_f()?);
             }
             (PropData::F(v), ReduceOp::Mul) => {
-                let rhs = rhs.as_f().unwrap_or(1.0);
+                let rhs = rhs.as_f()?;
                 let mut cur = v[i].load(Ordering::Relaxed);
                 loop {
                     let new = (f64::from_bits(cur) * rhs).to_bits();
@@ -136,17 +168,25 @@ impl PropData {
                 }
             }
             (PropData::B(v), ReduceOp::And) => {
-                if !rhs.as_b().unwrap_or(true) {
+                if !rhs.as_b()? {
                     v[i].store(false, Ordering::Relaxed);
                 }
             }
             (PropData::B(v), ReduceOp::Or) => {
-                if rhs.as_b().unwrap_or(false) {
+                if rhs.as_b()? {
                     v[i].store(true, Ordering::Relaxed);
                 }
             }
-            _ => {}
+            (data, op) => {
+                let kind = match data {
+                    PropData::I(_) => "int",
+                    PropData::F(_) => "float",
+                    PropData::B(_) => "bool",
+                };
+                bail!("unsupported property reduction `{}` on {kind} storage", op.symbol());
+            }
         }
+        Ok(())
     }
 
     /// Atomic Min/Max; returns true if the proposed value won (the paper's
@@ -206,7 +246,7 @@ impl PropData {
     }
 }
 
-/// Host scalar cell — atomics so device reductions (e.g. `triangle_count +=`)
+/// Shared scalar cell — atomics so device reductions (e.g. `triangle_count +=`)
 /// work from worker threads.
 #[derive(Debug)]
 pub enum ScalarCell {
@@ -223,6 +263,7 @@ impl ScalarCell {
             Val::B(x) => ScalarCell::B(AtomicBool::new(x)),
         }
     }
+    #[inline]
     fn load(&self) -> Val {
         match self {
             ScalarCell::I(c) => Val::I(c.load(Ordering::Relaxed)),
@@ -241,95 +282,93 @@ impl ScalarCell {
     }
 }
 
+/// Slot-indexed runtime state. Constructed once per [`super::run`] from the
+/// compiled program's slot tables; every access during execution is a plain
+/// vector index.
 pub struct Env<'g> {
     pub g: &'g Graph,
     pub threads: usize,
-    props: HashMap<String, PropData>,
-    scalars: HashMap<String, ScalarCell>,
-    sets: HashMap<String, Vec<Node>>,
+    props: Vec<PropData>,
+    prop_names: Vec<String>,
+    scalars: Vec<ScalarCell>,
+    sets: Vec<Vec<Node>>,
 }
 
 impl<'g> Env<'g> {
-    pub fn new(g: &'g Graph, tf: &TypedFunction, threads: usize) -> Result<Env<'g>> {
-        let mut props = HashMap::new();
-        for p in &tf.func.params {
-            match &p.ty {
-                Type::PropNode(_) => {
-                    props.insert(p.name.clone(), PropData::alloc(&p.ty, g.num_nodes()));
+    pub fn new(g: &'g Graph, prog: &super::compile::Program, threads: usize) -> Env<'g> {
+        let props = prog
+            .props
+            .iter()
+            .map(|m| {
+                if m.param {
+                    if m.edge {
+                        // edge property parameters bind to the graph's weights
+                        PropData::from_weights(g)
+                    } else {
+                        PropData::alloc_st(m.ty, g.num_nodes())
+                    }
+                } else {
+                    // declared properties are materialized by AllocProp
+                    PropData::alloc_st(m.ty, 0)
                 }
-                Type::PropEdge(_) => {
-                    // edge property parameters bind to the graph's weights
-                    let data = PropData::I(
-                        g.weights.iter().map(|&w| AtomicI64::new(w as i64)).collect(),
-                    );
-                    props.insert(p.name.clone(), data);
-                }
-                _ => {}
-            }
-        }
-        Ok(Env { g, threads, props, scalars: HashMap::new(), sets: HashMap::new() })
+            })
+            .collect();
+        let prop_names = prog.props.iter().map(|m| m.name.clone()).collect();
+        let scalars = prog.scalars.iter().map(|m| ScalarCell::new(Val::zero_st(m.ty))).collect();
+        let sets = vec![Vec::new(); prog.sets.len()];
+        Env { g, threads, props, prop_names, scalars, sets }
     }
 
-    pub fn alloc_prop(&mut self, name: &str, ty: &Type) -> Result<()> {
-        let len = match ty {
-            Type::PropEdge(_) => self.g.num_edges(),
-            _ => self.g.num_nodes(),
-        };
-        self.props.insert(name.to_string(), PropData::alloc(ty, len));
-        Ok(())
+    /// (Re-)allocate a declared property. Re-executing a declaration (e.g. a
+    /// propNode declared inside a sequential source loop, as in BC) resets
+    /// the array, matching the scoped-declaration semantics of the DSL.
+    pub fn alloc_prop(&mut self, slot: u32, ty: ScalarTy, edge: bool) {
+        let len = if edge { self.g.num_edges() } else { self.g.num_nodes() };
+        self.props[slot as usize] = PropData::alloc_st(ty, len);
     }
 
-    pub fn is_prop(&self, name: &str) -> bool {
-        self.props.contains_key(name)
+    #[inline]
+    pub fn prop(&self, slot: u32) -> &PropData {
+        &self.props[slot as usize]
     }
 
-    pub fn prop(&self, name: &str) -> Result<&PropData> {
-        self.props.get(name).ok_or_else(|| anyhow!("unknown property `{name}`"))
+    /// Whole-property copy (`modified = modified_nxt`). Atomic element-wise
+    /// stores, so it is safe from the host while no kernel is running; runs
+    /// on the pool because it sits inside every dense fixedPoint / do-while
+    /// iteration (e.g. PageRank's double-buffer swap).
+    pub fn copy_prop(&self, dst: u32, src: u32) {
+        let (d, s) = (&self.props[dst as usize], &self.props[src as usize]);
+        crate::util::pool::parallel_for(s.len(), self.threads, |i| {
+            d.store(i, s.load(i));
+        });
     }
 
-    pub fn copy_prop(&mut self, dst: &str, src: &str) -> Result<()> {
-        let n = self.prop(src)?.len();
-        for i in 0..n {
-            let v = self.prop(src)?.load(i);
-            self.prop(dst)?.store(i, v);
-        }
-        Ok(())
-    }
-
-    pub fn declare_scalar(&mut self, name: &str, v: Val) {
-        self.scalars.insert(name.to_string(), ScalarCell::new(v));
-    }
-
-    pub fn set_scalar(&mut self, name: &str, v: Val) {
-        match self.scalars.get(name) {
-            Some(cell) => {
-                if cell.store(v).is_err() {
-                    self.scalars.insert(name.to_string(), ScalarCell::new(v));
-                }
-            }
-            None => self.declare_scalar(name, v),
+    /// Host scalar write: stores in place, re-typing the cell when the value
+    /// family changes (C-style declarations can re-bind, e.g. in loops).
+    pub fn set_scalar(&mut self, slot: u32, v: Val) {
+        if self.scalars[slot as usize].store(v).is_err() {
+            self.scalars[slot as usize] = ScalarCell::new(v);
         }
     }
 
-    pub fn scalar(&self, name: &str) -> Result<Val> {
-        self.scalars
-            .get(name)
-            .map(|c| c.load())
-            .ok_or_else(|| anyhow!("unknown scalar `{name}`"))
+    /// Host declaration: always installs a fresh, correctly-typed cell.
+    pub fn declare_scalar(&mut self, slot: u32, v: Val) {
+        self.scalars[slot as usize] = ScalarCell::new(v);
     }
 
-    /// Shared scalar store from a device thread.
-    pub fn scalar_store(&self, name: &str, v: Val) -> Result<()> {
-        self.scalars
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown scalar `{name}`"))?
-            .store(v)
+    #[inline]
+    pub fn scalar(&self, slot: u32) -> Val {
+        self.scalars[slot as usize].load()
+    }
+
+    /// Shared scalar store from a device thread (atomic).
+    pub fn scalar_store(&self, slot: u32, v: Val) -> Result<()> {
+        self.scalars[slot as usize].store(v)
     }
 
     /// Shared scalar reduction from a device thread (atomicAdd-style).
-    pub fn scalar_reduce(&self, name: &str, op: ReduceOp, rhs: Val) -> Result<()> {
-        let cell =
-            self.scalars.get(name).ok_or_else(|| anyhow!("unknown scalar `{name}`"))?;
+    pub fn scalar_reduce(&self, slot: u32, op: ReduceOp, rhs: Val) -> Result<()> {
+        let cell = &self.scalars[slot as usize];
         match (cell, op) {
             (ScalarCell::I(c), ReduceOp::Add | ReduceOp::Count) => {
                 c.fetch_add(rhs.as_i()?, Ordering::Relaxed);
@@ -378,16 +417,20 @@ impl<'g> Env<'g> {
         Ok(())
     }
 
-    pub fn bind_set(&mut self, name: &str, vs: Vec<Node>) {
-        self.sets.insert(name.to_string(), vs);
+    pub fn bind_set(&mut self, slot: u32, vs: Vec<Node>) {
+        self.sets[slot as usize] = vs;
     }
 
-    pub fn set_items(&self, name: &str) -> Result<Vec<Node>> {
-        self.sets.get(name).cloned().ok_or_else(|| anyhow!("unknown set `{name}`"))
+    #[inline]
+    pub fn set_items(&self, slot: u32) -> &[Node] {
+        &self.sets[slot as usize]
     }
 
+    /// Hand results back by name — the only point where names re-enter.
     pub fn take_props(&mut self) -> HashMap<String, PropData> {
-        std::mem::take(&mut self.props)
+        let names = std::mem::take(&mut self.prop_names);
+        let props = std::mem::take(&mut self.props);
+        names.into_iter().zip(props).collect()
     }
 }
 
@@ -399,7 +442,7 @@ mod tests {
     fn prop_reduce_and_minmax() {
         let p = PropData::alloc(&Type::PropNode(Box::new(Type::Int)), 4);
         p.store(0, Val::I(10));
-        p.atomic_reduce(0, ReduceOp::Add, Val::I(5));
+        p.atomic_reduce(0, ReduceOp::Add, Val::I(5)).unwrap();
         assert_eq!(p.load(0), Val::I(15));
         assert!(p.atomic_min_max(0, Val::I(3), MinMax::Min));
         assert!(!p.atomic_min_max(0, Val::I(100), MinMax::Min));
@@ -412,6 +455,8 @@ mod tests {
         assert!(!p.any_true());
         p.store(2, Val::B(true));
         assert!(p.any_true());
+        assert!(p.load_bool(2));
+        assert!(!p.load_bool(0));
     }
 
     #[test]
@@ -419,7 +464,44 @@ mod tests {
         let p = PropData::alloc(&Type::PropNode(Box::new(Type::Float)), 2);
         p.store(1, Val::F(0.25));
         assert_eq!(p.load(1), Val::F(0.25));
-        p.atomic_reduce(1, ReduceOp::Add, Val::F(0.5));
+        p.atomic_reduce(1, ReduceOp::Add, Val::F(0.5)).unwrap();
         assert_eq!(p.load(1), Val::F(0.75));
+    }
+
+    #[test]
+    fn atomic_reduce_every_supported_arm() {
+        let i = PropData::alloc_st(ScalarTy::I64, 1);
+        i.store(0, Val::I(6));
+        i.atomic_reduce(0, ReduceOp::Add, Val::I(4)).unwrap();
+        i.atomic_reduce(0, ReduceOp::Count, Val::I(1)).unwrap();
+        i.atomic_reduce(0, ReduceOp::Mul, Val::I(3)).unwrap();
+        assert_eq!(i.load(0), Val::I(33));
+
+        let f = PropData::alloc_st(ScalarTy::F64, 1);
+        f.store(0, Val::F(2.0));
+        f.atomic_reduce(0, ReduceOp::Add, Val::F(1.5)).unwrap();
+        f.atomic_reduce(0, ReduceOp::Count, Val::I(1)).unwrap();
+        f.atomic_reduce(0, ReduceOp::Mul, Val::F(2.0)).unwrap();
+        assert_eq!(f.load(0), Val::F(9.0));
+
+        let b = PropData::alloc_st(ScalarTy::Bool, 1);
+        b.atomic_reduce(0, ReduceOp::Or, Val::B(true)).unwrap();
+        assert_eq!(b.load(0), Val::B(true));
+        b.atomic_reduce(0, ReduceOp::And, Val::B(false)).unwrap();
+        assert_eq!(b.load(0), Val::B(false));
+    }
+
+    #[test]
+    fn atomic_reduce_rejects_unsupported_combinations() {
+        let i = PropData::alloc_st(ScalarTy::I32, 1);
+        assert!(i.atomic_reduce(0, ReduceOp::And, Val::B(true)).is_err());
+        assert!(i.atomic_reduce(0, ReduceOp::Or, Val::B(false)).is_err());
+        let b = PropData::alloc_st(ScalarTy::Bool, 1);
+        assert!(b.atomic_reduce(0, ReduceOp::Add, Val::I(1)).is_err());
+        assert!(b.atomic_reduce(0, ReduceOp::Mul, Val::I(2)).is_err());
+        assert!(b.atomic_reduce(0, ReduceOp::Count, Val::I(1)).is_err());
+        // type-mismatched right-hand sides surface instead of defaulting
+        let f = PropData::alloc_st(ScalarTy::F32, 1);
+        assert!(f.atomic_reduce(0, ReduceOp::Add, Val::B(true)).is_err());
     }
 }

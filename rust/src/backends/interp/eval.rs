@@ -1,168 +1,61 @@
-//! Expression evaluation for the interpreter.
+//! Expression evaluation over the slot-resolved form.
+//!
+//! The evaluation context is a small `Copy` struct (environment pointer,
+//! current edge id, optional BFS levels); locals and loop elements live in a
+//! flat register `frame` owned by the worker thread. There are no maps to
+//! clone per scope and no string lookups of any kind on this path — every
+//! operand of [`CExpr`] is a dense index resolved at compile time
+//! ([`super::compile`]).
 
-use super::env::{Env, Val, INF_I};
-use crate::dsl::ast::*;
+use super::compile::{CExpr, Idx};
+use super::env::{Env, Val};
+use crate::dsl::ast::{BinOp, ReduceOp, UnOp};
 use crate::graph::csr::Node;
 use anyhow::{anyhow, bail, Result};
-use std::collections::HashMap;
 
-/// Per-thread evaluation context: loop-element bindings, local scalars,
-/// current edge id, and BFS level info.
+/// Sentinel for "no current edge" (outside a tracked neighbor loop).
+pub const NO_EDGE: usize = usize::MAX;
+
+/// Per-element evaluation context. Cheap to construct and copy: nested
+/// scopes mutate the worker's register frame in place instead of cloning
+/// binding maps.
+#[derive(Clone, Copy)]
 pub struct EvalCtx<'e, 'g> {
-    env: &'e Env<'g>,
-    elements: HashMap<String, Node>,
-    locals: HashMap<String, Val>,
-    /// innermost loop element — bare property names in filters resolve here
-    primary: Option<Node>,
-    current_edge: Option<usize>,
-    levels: Option<&'e [i32]>,
-    bfs_dag: bool,
-    #[allow(dead_code)]
-    device: bool,
+    pub env: &'e Env<'g>,
+    /// edge id of the innermost tracked neighbor iteration
+    pub current_edge: usize,
+    /// BFS level array while inside iterateInBFS / iterateInReverse
+    pub levels: Option<&'e [i32]>,
 }
 
 impl<'e, 'g> EvalCtx<'e, 'g> {
-    pub fn host(env: &'e Env<'g>) -> Self {
-        EvalCtx {
-            env,
-            elements: HashMap::new(),
-            locals: HashMap::new(),
-            primary: None,
-            current_edge: None,
-            levels: None,
-            bfs_dag: false,
-            device: false,
-        }
-    }
-    pub fn device(env: &'e Env<'g>) -> Self {
-        EvalCtx { device: true, ..Self::host(env) }
-    }
-
-    pub fn with_element(mut self, name: &str, v: Node) -> Self {
-        self.elements.insert(name.to_string(), v);
-        self.primary = Some(v);
-        self
-    }
-
-    pub fn with_bfs(mut self, levels: &'e [i32], dag: bool) -> Self {
-        self.levels = Some(levels);
-        self.bfs_dag = dag;
-        self
-    }
-
-    /// Clone bindings for a nested scope (cheap: small maps).
-    pub fn child(&self) -> EvalCtx<'e, 'g> {
-        EvalCtx {
-            env: self.env,
-            elements: self.elements.clone(),
-            locals: self.locals.clone(),
-            primary: self.primary,
-            current_edge: self.current_edge,
-            levels: self.levels,
-            bfs_dag: self.bfs_dag,
-            device: self.device,
-        }
-    }
-
-    pub fn declare_local(&mut self, name: &str, v: Val) {
-        // Hot path: re-declaring the same local each loop iteration must not
-        // re-allocate the key (§Perf in EXPERIMENTS.md).
-        if let Some(slot) = self.locals.get_mut(name) {
-            *slot = v;
-        } else {
-            self.locals.insert(name.to_string(), v);
-        }
-    }
-    pub fn has_local(&self, name: &str) -> bool {
-        self.locals.contains_key(name)
-    }
-    pub fn set_local(&mut self, name: &str, v: Val) {
-        self.declare_local(name, v);
-    }
-    pub fn local(&self, name: &str) -> Result<Val> {
-        self.locals.get(name).copied().ok_or_else(|| anyhow!("unknown local `{name}`"))
-    }
-    pub fn set_current_edge(&mut self, e: usize) {
-        self.current_edge = e.into();
-    }
-
-    /// Saved loop bindings for in-place nested iteration.
-    pub fn save_loop_state(&self, var: &str) -> (Option<Node>, Option<Node>, Option<usize>) {
-        (self.elements.get(var).copied(), self.primary, self.current_edge)
-    }
-    pub fn bind_element(&mut self, name: &str, v: Node) {
-        // allocation-free on the per-edge re-bind path
-        if let Some(slot) = self.elements.get_mut(name) {
-            *slot = v;
-        } else {
-            self.elements.insert(name.to_string(), v);
-        }
-        self.primary = Some(v);
-    }
-    pub fn restore_loop_state(
-        &mut self,
-        var: &str,
-        saved: (Option<Node>, Option<Node>, Option<usize>),
-    ) {
-        match saved.0 {
-            Some(v) => {
-                self.elements.insert(var.to_string(), v);
-            }
-            None => {
-                self.elements.remove(var);
-            }
-        }
-        self.primary = saved.1;
-        self.current_edge = saved.2;
-    }
-    pub fn levels(&self) -> Option<&'e [i32]> {
-        self.levels
-    }
-    pub fn bfs_dag(&self) -> bool {
-        self.bfs_dag
-    }
-
-    /// Resolve a node/edge-typed name to its element index.
-    pub fn element(&self, name: &str) -> Result<Node> {
-        if let Some(v) = self.elements.get(name) {
-            return Ok(*v);
-        }
-        if let Some(Val::I(v)) = self.locals.get(name) {
-            return Ok(*v as Node);
-        }
-        // host scalars can hold node ids (e.g. `src`)
-        Ok(self.env.scalar(name)?.as_i()? as Node)
+    pub fn new(env: &'e Env<'g>) -> Self {
+        EvalCtx { env, current_edge: NO_EDGE, levels: None }
     }
 }
 
-pub fn eval(e: &Expr, ctx: &EvalCtx<'_, '_>) -> Result<Val> {
+/// Resolve a property-index operand to a node/edge id.
+#[inline]
+pub fn node_of(idx: Idx, ctx: &EvalCtx<'_, '_>, frame: &[Val]) -> Result<Node> {
+    match idx {
+        Idx::Reg(r) => Ok(frame[r as usize].as_i()? as Node),
+        Idx::Scalar(s) => Ok(ctx.env.scalar(s).as_i()? as Node),
+    }
+}
+
+pub fn eval(e: &CExpr, ctx: &EvalCtx<'_, '_>, frame: &[Val]) -> Result<Val> {
+    let g = ctx.env.g;
     Ok(match e {
-        Expr::IntLit(n) => Val::I(*n),
-        Expr::FloatLit(x) => Val::F(*x),
-        Expr::BoolLit(b) => Val::B(*b),
-        Expr::Inf => Val::I(INF_I),
-        Expr::Var(name) => {
-            if let Some(v) = ctx.locals.get(name) {
-                *v
-            } else if let Some(v) = ctx.elements.get(name) {
-                Val::I(*v as i64)
-            } else if ctx.env.is_prop(name) {
-                // bare property name: current element's value (filter idiom)
-                let idx = ctx
-                    .primary
-                    .ok_or_else(|| anyhow!("property `{name}` used without an element"))?;
-                ctx.env.prop(name)?.load(idx as usize)
-            } else {
-                ctx.env.scalar(name)?
-            }
+        CExpr::ConstI(n) => Val::I(*n),
+        CExpr::ConstF(x) => Val::F(*x),
+        CExpr::ConstB(b) => Val::B(*b),
+        CExpr::LoadReg(r) => frame[*r as usize],
+        CExpr::LoadScalar(s) => ctx.env.scalar(*s),
+        CExpr::LoadProp { prop, idx } => {
+            ctx.env.prop(*prop).load(node_of(*idx, ctx, frame)? as usize)
         }
-        Expr::Prop { obj, prop } => {
-            let idx = ctx.element(obj)?;
-            ctx.env.prop(prop)?.load(idx as usize)
-        }
-        Expr::Call { recv, name, args } => return eval_call(recv.as_deref(), name, args, ctx),
-        Expr::Unary { op, expr } => {
-            let v = eval(expr, ctx)?;
+        CExpr::Unary { op, expr } => {
+            let v = eval(expr, ctx, frame)?;
             match op {
                 UnOp::Not => Val::B(!v.as_b()?),
                 UnOp::Neg => match v {
@@ -172,21 +65,61 @@ pub fn eval(e: &Expr, ctx: &EvalCtx<'_, '_>) -> Result<Val> {
                 },
             }
         }
-        Expr::Binary { op, lhs, rhs } => {
-            let l = eval(lhs, ctx)?;
+        CExpr::Binary { op, lhs, rhs } => {
+            let l = eval(lhs, ctx, frame)?;
             if *op == BinOp::And {
-                return Ok(Val::B(l.as_b()? && eval(rhs, ctx)?.as_b()?));
+                return Ok(Val::B(l.as_b()? && eval(rhs, ctx, frame)?.as_b()?));
             }
             if *op == BinOp::Or {
-                return Ok(Val::B(l.as_b()? || eval(rhs, ctx)?.as_b()?));
+                return Ok(Val::B(l.as_b()? || eval(rhs, ctx, frame)?.as_b()?));
             }
-            let r = eval(rhs, ctx)?;
+            let r = eval(rhs, ctx, frame)?;
             binop(*op, l, r)?
+        }
+        CExpr::Abs(inner) => match eval(inner, ctx, frame)? {
+            Val::I(x) => Val::I(x.abs()),
+            Val::F(x) => Val::F(x.abs()),
+            Val::B(_) => bail!("abs of bool"),
+        },
+        CExpr::NumNodes => Val::I(g.num_nodes() as i64),
+        CExpr::NumEdges => Val::I(g.num_edges() as i64),
+        CExpr::MinWt => Val::I(g.min_weight() as i64),
+        CExpr::MaxWt => Val::I(g.max_weight() as i64),
+        CExpr::OutDegree(idx) => Val::I(g.out_degree(node_of(*idx, ctx, frame)?) as i64),
+        CExpr::InDegree(idx) => Val::I(g.in_degree(node_of(*idx, ctx, frame)?) as i64),
+        CExpr::IsAnEdge(a, b) => {
+            let u = eval(a, ctx, frame)?.as_i()? as Node;
+            let w = eval(b, ctx, frame)?.as_i()? as Node;
+            Val::B(g.is_an_edge(u, w))
+        }
+        CExpr::CurrentEdge => {
+            if ctx.current_edge == NO_EDGE {
+                return Err(anyhow!("get_edge outside a neighbor iteration"));
+            }
+            Val::I(ctx.current_edge as i64)
+        }
+        CExpr::EdgeLookup { u, w } => {
+            let u = eval(u, ctx, frame)?.as_i()? as Node;
+            let w = eval(w, ctx, frame)?.as_i()? as Node;
+            // fast path: the edge of the current neighbor iteration — valid
+            // only if that edge actually originates at `u` (the tracked loop
+            // may be iterating a different source vertex)
+            let range = g.edge_range(u);
+            if ctx.current_edge != NO_EDGE
+                && range.contains(&ctx.current_edge)
+                && g.adj[ctx.current_edge] == w
+            {
+                return Ok(Val::I(ctx.current_edge as i64));
+            }
+            match g.neighbors(u).binary_search(&w) {
+                Ok(k) => Val::I((range.start + k) as i64),
+                Err(_) => bail!("get_edge({u},{w}): no such edge"),
+            }
         }
     })
 }
 
-fn binop(op: BinOp, l: Val, r: Val) -> Result<Val> {
+pub fn binop(op: BinOp, l: Val, r: Val) -> Result<Val> {
     // bool equality
     if let (Val::B(a), Val::B(b)) = (l, r) {
         return Ok(match op {
@@ -241,55 +174,6 @@ fn binop(op: BinOp, l: Val, r: Val) -> Result<Val> {
     }
 }
 
-fn eval_call(recv: Option<&str>, name: &str, args: &[Expr], ctx: &EvalCtx<'_, '_>) -> Result<Val> {
-    let g = ctx.env.g;
-    match (recv, name, args.len()) {
-        (None, "abs", 1) => match eval(&args[0], ctx)? {
-            Val::I(x) => Ok(Val::I(x.abs())),
-            Val::F(x) => Ok(Val::F(x.abs())),
-            Val::B(_) => bail!("abs of bool"),
-        },
-        (Some(_), "num_nodes", 0) => Ok(Val::I(g.num_nodes() as i64)),
-        (Some(_), "num_edges", 0) => Ok(Val::I(g.num_edges() as i64)),
-        (Some(_), "minWt", 0) => Ok(Val::I(g.min_weight() as i64)),
-        (Some(_), "maxWt", 0) => Ok(Val::I(g.max_weight() as i64)),
-        (Some(_), "is_an_edge", 2) => {
-            let u = eval(&args[0], ctx)?.as_i()? as Node;
-            let w = eval(&args[1], ctx)?.as_i()? as Node;
-            Ok(Val::B(g.is_an_edge(u, w)))
-        }
-        (Some(_), "get_edge", 2) => {
-            let u = eval(&args[0], ctx)?.as_i()? as Node;
-            let w = eval(&args[1], ctx)?.as_i()? as Node;
-            // fast path: the edge of the current neighbor iteration
-            if let Some(e) = ctx.current_edge {
-                if g.adj[e] == w {
-                    return Ok(Val::I(e as i64));
-                }
-            }
-            let lo = g.offsets[u as usize] as usize;
-            let nb = g.neighbors(u);
-            match nb.binary_search(&w) {
-                Ok(k) => Ok(Val::I((lo + k) as i64)),
-                Err(_) => bail!("get_edge({u},{w}): no such edge"),
-            }
-        }
-        (Some(r), "outDegree", 0) => {
-            let v = ctx.element(r)?;
-            Ok(Val::I(g.out_degree(v) as i64))
-        }
-        (Some(r), "inDegree", 0) => {
-            let v = ctx.element(r)?;
-            Ok(Val::I(g.in_degree(v) as i64))
-        }
-        _ => bail!(
-            "unknown builtin `{}{name}/{}`",
-            recv.map(|r| format!("{r}.")).unwrap_or_default(),
-            args.len()
-        ),
-    }
-}
-
 /// Combine for reduction operators (host + per-thread locals).
 pub fn apply_reduce(op: ReduceOp, cur: Val, rhs: Val) -> Result<Val> {
     Ok(match op {
@@ -298,4 +182,33 @@ pub fn apply_reduce(op: ReduceOp, cur: Val, rhs: Val) -> Result<Val> {
         ReduceOp::And => Val::B(cur.as_b()? && rhs.as_b()?),
         ReduceOp::Or => Val::B(cur.as_b()? || rhs.as_b()?),
     })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binop_families() {
+        assert_eq!(binop(BinOp::Add, Val::I(2), Val::I(3)).unwrap(), Val::I(5));
+        assert_eq!(binop(BinOp::Add, Val::I(2), Val::F(0.5)).unwrap(), Val::F(2.5));
+        assert_eq!(binop(BinOp::Eq, Val::B(true), Val::B(true)).unwrap(), Val::B(true));
+        assert!(binop(BinOp::Add, Val::B(true), Val::I(1)).is_err());
+        assert!(binop(BinOp::Div, Val::I(1), Val::I(0)).is_err());
+    }
+
+    #[test]
+    fn reduce_ops() {
+        assert_eq!(apply_reduce(ReduceOp::Add, Val::I(1), Val::I(2)).unwrap(), Val::I(3));
+        assert_eq!(apply_reduce(ReduceOp::Mul, Val::F(2.0), Val::F(3.0)).unwrap(), Val::F(6.0));
+        assert_eq!(
+            apply_reduce(ReduceOp::Or, Val::B(false), Val::B(true)).unwrap(),
+            Val::B(true)
+        );
+        assert_eq!(
+            apply_reduce(ReduceOp::And, Val::B(true), Val::B(false)).unwrap(),
+            Val::B(false)
+        );
+        assert_eq!(apply_reduce(ReduceOp::Count, Val::I(7), Val::I(1)).unwrap(), Val::I(8));
+    }
 }

@@ -1,4 +1,5 @@
-//! CPU interpreter backend: executes the typed DSL AST directly over CSR.
+//! CPU interpreter backend: executes DSL programs over CSR through a
+//! **compile → execute** pipeline.
 //!
 //! Plays two roles from the paper's evaluation:
 //! - **Seq** mode = the single-thread CPU rows (the OpenACC-on-Intel-CPU
@@ -8,6 +9,37 @@
 //!   the same atomic idioms the generated GPU code uses (`atomicMin`,
 //!   `atomicAdd`, OR-flags).
 //!
+//! # Pipeline
+//!
+//! [`run`] first lowers the typed AST to a slot-resolved program
+//! ([`compile`]): every property, scalar, local, and loop element is interned
+//! into a dense `u32` index, so the execution loop below performs **zero
+//! string lookups** — property access is `Vec` indexing, locals live in a
+//! flat per-worker register frame, and the per-element context
+//! ([`eval::EvalCtx`]) is a small `Copy` struct (nested scopes no longer
+//! clone any maps).
+//!
+//! # Threads
+//!
+//! Par mode uses `STARPLAT_THREADS` workers when set, otherwise the machine's
+//! available parallelism (see [`crate::util::pool::default_threads`]).
+//! [`run_with_threads`] pins an explicit worker count — the Seq/Par parity
+//! suite uses it to check determinism across 1/2/8 workers.
+//!
+//! # Frontier fast path
+//!
+//! `fixedPoint` loops whose body is the canonical relaxation shape
+//! (`forall` filtered on a bool flag, then `flag = flag_nxt`, then
+//! `attach(flag_nxt = False)`, with all flag-nxt writes landing on the loop
+//! element or its out-neighbors) are executed as a sparse worklist: only
+//! flagged vertices are processed, and the next worklist is gathered from
+//! the updated neighborhood. When the frontier exceeds |V| / 4 the executor
+//! falls back to a dense filtered sweep, so mesh-like graphs (road networks)
+//! get the asymptotic win while dense frontiers keep the streaming sweep.
+//! Results are bit-identical to the dense schedule: the kernel body itself
+//! is unchanged, only the set of vertices known to fail the filter is
+//! skipped.
+//!
 //! Semantics notes (matching §2/§3 of the paper):
 //! - `x.p = x.p + e` inside a parallel region is executed as an atomic
 //!   reduction (StarPlat emits `atomicAdd` for this idiom);
@@ -15,15 +47,19 @@
 //!   BFS-DAG children of `v` (level(w) == level(v)+1);
 //! - `fixedPoint until (fin : !prop)` loops until no vertex has `prop` set.
 
+pub mod compile;
 pub mod env;
 pub mod eval;
 
-use crate::dsl::ast::*;
 use crate::graph::csr::{Graph, Node};
+use crate::ir::ScalarTy;
 use crate::sema::TypedFunction;
 use anyhow::{anyhow, bail, Result};
+use compile::{
+    CExpr, CKernel, CUpdate, DevIter, DevStmt, FrontierInfo, HostIter, HostStmt, Idx, ParamBind,
+};
 use env::{Env, PropData, Val};
-use eval::{eval, EvalCtx};
+use eval::{apply_reduce, eval, node_of, EvalCtx, NO_EDGE};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
@@ -74,39 +110,49 @@ pub fn run(tf: &TypedFunction, g: &Graph, args: &Args, mode: Mode) -> Result<Out
         Mode::Seq => 1,
         Mode::Par => crate::util::pool::default_threads(),
     };
-    let mut env = Env::new(g, tf, threads)?;
+    run_with_threads(tf, g, args, threads)
+}
+
+/// [`run`] with an explicit worker count (1 = sequential). The parity test
+/// suite sweeps thread counts to check scheduling-independence of results.
+pub fn run_with_threads(
+    tf: &TypedFunction,
+    g: &Graph,
+    args: &Args,
+    threads: usize,
+) -> Result<Output> {
+    let prog = compile::compile(tf)?;
+    let mut env = Env::new(g, &prog, threads.max(1));
     // bind scalar / set params
-    for p in &tf.func.params {
-        match &p.ty {
-            Type::Graph => {}
-            Type::PropNode(_) | Type::PropEdge(_) => {} // allocated by Env::new
-            Type::SetN(_) => {
-                let vs = args
-                    .sets
-                    .get(&p.name)
-                    .ok_or_else(|| anyhow!("missing SetN argument `{}`", p.name))?;
-                env.bind_set(&p.name, vs.clone());
-            }
-            _ => {
+    for pb in &prog.params {
+        match pb {
+            ParamBind::Scalar { name, slot, ty } => {
                 let v = args
                     .scalars
-                    .get(&p.name)
-                    .ok_or_else(|| anyhow!("missing scalar argument `{}`", p.name))?;
-                env.set_scalar(&p.name, coerce(*v, &p.ty)?);
+                    .get(name)
+                    .ok_or_else(|| anyhow!("missing scalar argument `{name}`"))?;
+                env.declare_scalar(*slot, coerce_st(*v, *ty)?);
+            }
+            ParamBind::Set { name, slot } => {
+                let vs = args
+                    .sets
+                    .get(name)
+                    .ok_or_else(|| anyhow!("missing SetN argument `{name}`"))?;
+                env.bind_set(*slot, vs.clone());
             }
         }
     }
-    let mut interp = Interp { env, ret: None };
-    interp.exec_block(&tf.func.body)?;
-    Ok(Output { props: interp.env.take_props(), ret: interp.ret })
+    let mut ex = Exec { env, ret: None };
+    ex.block(&prog.body)?;
+    Ok(Output { props: ex.env.take_props(), ret: ex.ret })
 }
 
 /// Coerce a value to a declared scalar type (C-style): `float x = g.num_nodes()`
 /// must produce a float cell so later divisions stay floating-point.
-fn coerce(v: Val, ty: &Type) -> Result<Val> {
-    Ok(match crate::ir::ScalarTy::of(ty) {
-        crate::ir::ScalarTy::F32 | crate::ir::ScalarTy::F64 => Val::F(v.as_f()?),
-        crate::ir::ScalarTy::Bool => v, // type checker guarantees bool
+fn coerce_st(v: Val, st: ScalarTy) -> Result<Val> {
+    Ok(match st {
+        ScalarTy::F32 | ScalarTy::F64 => Val::F(v.as_f()?),
+        ScalarTy::Bool => v, // type checker guarantees bool
         _ => match v {
             Val::B(_) => v,
             _ => Val::I(v.as_i()?),
@@ -114,199 +160,203 @@ fn coerce(v: Val, ty: &Type) -> Result<Val> {
     })
 }
 
-struct Interp<'g> {
+// ---------------------------------------------------------------------------
+// Host executor
+// ---------------------------------------------------------------------------
+
+struct Exec<'g> {
     env: Env<'g>,
     ret: Option<Val>,
 }
 
-impl<'g> Interp<'g> {
+impl<'g> Exec<'g> {
     /// Host-context (sequential) execution.
-    fn exec_block(&mut self, b: &[Stmt]) -> Result<()> {
+    fn block(&mut self, b: &[HostStmt]) -> Result<()> {
         for s in b {
             if self.ret.is_some() {
                 return Ok(());
             }
-            self.exec_stmt(s)?;
+            self.stmt(s)?;
         }
         Ok(())
     }
 
-    fn exec_stmt(&mut self, s: &Stmt) -> Result<()> {
+    fn host_eval(&self, e: &CExpr) -> Result<Val> {
+        eval(e, &EvalCtx::new(&self.env), &[])
+    }
+
+    fn stmt(&mut self, s: &HostStmt) -> Result<()> {
         match s {
-            Stmt::Decl { ty, name, init, .. } => {
-                if ty.is_prop() {
-                    self.env.alloc_prop(name, ty)?;
-                } else {
-                    let v = match init {
-                        Some(e) => coerce(self.host_eval(e)?, ty)?,
-                        None => Val::zero_of(ty),
-                    };
-                    self.env.declare_scalar(name, v);
-                }
+            HostStmt::AllocProp { prop, ty, edge } => {
+                self.env.alloc_prop(*prop, *ty, *edge);
                 Ok(())
             }
-            Stmt::Assign { target, value, .. } => match target {
-                LValue::Var(v) if self.env.is_prop(v) => {
-                    // whole-property copy
-                    let Expr::Var(src) = value else { bail!("property copy needs a property rhs") };
-                    self.env.copy_prop(v, src)
-                }
-                LValue::Var(v) => {
-                    let val = self.host_eval(value)?;
-                    self.env.set_scalar(v, val);
-                    Ok(())
-                }
-                LValue::Prop { obj, prop } => {
-                    // e.g. `src.sigma = 1;` on the host
-                    let idx = self.env.scalar(obj)?.as_i()? as usize;
-                    let val = self.host_eval(value)?;
-                    self.env.prop(prop)?.store(idx, val);
-                    Ok(())
-                }
-            },
-            Stmt::Reduce { target, op, value, .. } => {
-                let LValue::Var(v) = target else { bail!("host reduction target must be scalar") };
-                let cur = self.env.scalar(v)?;
+            HostStmt::DeclScalar { slot, ty, init } => {
+                let v = match init {
+                    Some(e) => coerce_st(self.host_eval(e)?, *ty)?,
+                    None => Val::zero_st(*ty),
+                };
+                self.env.declare_scalar(*slot, v);
+                Ok(())
+            }
+            HostStmt::SetScalar { slot, value } => {
+                let v = self.host_eval(value)?;
+                self.env.set_scalar(*slot, v);
+                Ok(())
+            }
+            HostStmt::ScalarReduce { slot, op, value } => {
+                let cur = self.env.scalar(*slot);
                 let rhs = self.host_eval(value)?;
-                self.env.set_scalar(v, eval::apply_reduce(*op, cur, rhs)?);
+                let v = apply_reduce(*op, cur, rhs)?;
+                self.env.set_scalar(*slot, v);
                 Ok(())
             }
-            Stmt::AttachNodeProperty { inits, .. } => {
-                let n = self.env.g.num_nodes();
-                for (prop, e) in inits {
+            HostStmt::PropElemStore { prop, obj, value } => {
+                let i = self.env.scalar(*obj).as_i()? as usize;
+                let v = self.host_eval(value)?;
+                self.env.prop(*prop).store(i, v);
+                Ok(())
+            }
+            HostStmt::PropCopy { dst, src } => {
+                self.env.copy_prop(*dst, *src);
+                Ok(())
+            }
+            HostStmt::Attach { inits } => {
+                for (p, e) in inits {
                     let v = self.host_eval(e)?;
-                    let arr = self.env.prop(prop)?;
-                    let threads = self.env.threads;
-                    crate::util::pool::parallel_for(arr.len().max(n), threads, |i| {
+                    let arr = self.env.prop(*p);
+                    crate::util::pool::parallel_for(arr.len(), self.env.threads, |i| {
                         arr.store(i, v);
                     });
                 }
                 Ok(())
             }
-            Stmt::For { iter, body, parallel, .. } => self.exec_for(iter, body, *parallel),
-            Stmt::IterateBFS { var, from, body, reverse, .. } => {
-                self.exec_bfs(var, from, body, reverse.as_ref())
-            }
-            Stmt::FixedPoint { var, cond, body, .. } => {
-                let prop = crate::ir::or_flag_prop(cond)
-                    .ok_or_else(|| anyhow!("unsupported fixedPoint condition form"))?;
-                self.env.set_scalar(var, Val::B(false));
-                let max_iters = 4 * self.env.g.num_nodes() + 16;
-                for _ in 0..max_iters {
-                    self.exec_block(body)?;
-                    // finished when no vertex has `prop` set (logical-OR flag)
-                    if !self.env.prop(&prop)?.any_true() {
-                        self.env.set_scalar(var, Val::B(true));
-                        return Ok(());
+            HostStmt::Kernel(k) => self.launch(k),
+            HostStmt::SeqFor { var, source, filter, body } => {
+                // host-sequential loop (e.g. `for (src in sourceSet)`)
+                let domain: Vec<Node> = match source {
+                    HostIter::AllNodes => (0..self.env.g.num_nodes() as Node).collect(),
+                    HostIter::Set(s) => self.env.set_items(*s).to_vec(),
+                    HostIter::Neighbors { of } => {
+                        let v = self.env.scalar(*of).as_i()? as Node;
+                        self.env.g.neighbors(v).to_vec()
                     }
-                }
-                bail!("fixedPoint did not converge after {max_iters} iterations")
-            }
-            Stmt::DoWhile { body, cond, .. } => {
-                loop {
-                    self.exec_block(body)?;
-                    if self.ret.is_some() || !self.host_eval(cond)?.as_b()? {
-                        return Ok(());
+                    HostIter::InNeighbors { of } => {
+                        let v = self.env.scalar(*of).as_i()? as Node;
+                        self.env.g.in_neighbors(v).to_vec()
                     }
-                }
-            }
-            Stmt::While { cond, body, .. } => {
-                while self.host_eval(cond)?.as_b()? {
-                    self.exec_block(body)?;
+                };
+                for v in domain {
+                    self.env.set_scalar(*var, Val::I(v as i64));
+                    if let Some(f) = filter {
+                        if !self.host_eval(f)?.as_b()? {
+                            continue;
+                        }
+                    }
+                    self.block(body)?;
                     if self.ret.is_some() {
                         return Ok(());
                     }
                 }
                 Ok(())
             }
-            Stmt::If { cond, then, els, .. } => {
-                if self.host_eval(cond)?.as_b()? {
-                    self.exec_block(then)
-                } else if let Some(e) = els {
-                    self.exec_block(e)
-                } else {
-                    Ok(())
+            HostStmt::IterateBFS { reg, from, body, reverse, frame_size } => {
+                self.exec_bfs(*reg, *from, body, reverse.as_ref(), *frame_size)
+            }
+            HostStmt::FixedPoint { var, flag, body, frontier } => {
+                self.exec_fixed_point(*var, *flag, body, *frontier)
+            }
+            HostStmt::DoWhile { body, cond } => loop {
+                self.block(body)?;
+                if self.ret.is_some() || !self.host_eval(cond)?.as_b()? {
+                    return Ok(());
                 }
-            }
-            Stmt::Return { value, .. } => {
-                self.ret = Some(self.host_eval(value)?);
-                Ok(())
-            }
-            Stmt::MinMaxAssign { .. } => bail!("Min/Max construct outside a parallel loop"),
-        }
-    }
-
-    fn host_eval(&self, e: &Expr) -> Result<Val> {
-        let ctx = EvalCtx::host(&self.env);
-        eval(e, &ctx)
-    }
-
-    /// Sequential `for` at host level iterates sets or nodes; parallel
-    /// `forall` becomes a vertex-parallel kernel.
-    fn exec_for(&mut self, iter: &Iterator_, body: &[Stmt], parallel: bool) -> Result<()> {
-        let domain: Vec<Node> = match &iter.source {
-            IterSource::Nodes { .. } => (0..self.env.g.num_nodes() as Node).collect(),
-            IterSource::Set { set } => self.env.set_items(set)?,
-            IterSource::Neighbors { of, .. } => {
-                let v = self.env.scalar(of)?.as_i()? as Node;
-                self.env.g.neighbors(v).to_vec()
-            }
-            IterSource::NodesTo { of, .. } => {
-                let v = self.env.scalar(of)?.as_i()? as Node;
-                self.env.g.in_neighbors(v).to_vec()
-            }
-        };
-        if !parallel {
-            // host-sequential loop (e.g. `for (src in sourceSet)`)
-            for v in domain {
-                self.env.declare_scalar(&iter.var, Val::I(v as i64));
-                if let Some(f) = &iter.filter {
-                    let ctx = EvalCtx::host(&self.env).with_element(&iter.var, v);
-                    if !eval(f, &ctx)?.as_b()? {
-                        continue;
-                    }
-                }
-                self.exec_block(body)?;
-            }
-            return Ok(());
-        }
-        // device kernel: vertex-parallel over the domain
-        let env = &self.env;
-        let threads = env.threads;
-        let err = std::sync::Mutex::new(None::<anyhow::Error>);
-        let filter = iter.filter.as_ref();
-        crate::util::pool::parallel_for_dynamic(domain.len(), threads, 64, |i| {
-            let v = domain[i];
-            let ctx = EvalCtx::device(env).with_element(&iter.var, v);
-            let r = (|| -> Result<()> {
-                if let Some(f) = filter {
-                    if !eval(f, &ctx)?.as_b()? {
+            },
+            HostStmt::While { cond, body } => {
+                while self.host_eval(cond)?.as_b()? {
+                    self.block(body)?;
+                    if self.ret.is_some() {
                         return Ok(());
                     }
                 }
-                exec_device_block(env, body, &ctx)
-            })();
-            if let Err(e) = r {
-                *err.lock().unwrap() = Some(e);
+                Ok(())
             }
-        });
-        match err.into_inner().unwrap() {
-            Some(e) => Err(e),
-            None => Ok(()),
+            HostStmt::If { cond, then, els } => {
+                if self.host_eval(cond)?.as_b()? {
+                    self.block(then)
+                } else {
+                    self.block(els)
+                }
+            }
+            HostStmt::Return { value } => {
+                self.ret = Some(self.host_eval(value)?);
+                Ok(())
+            }
+        }
+    }
+
+    /// Launch a vertex-parallel kernel over its compiled domain.
+    fn launch(&self, k: &CKernel) -> Result<()> {
+        let env = &self.env;
+        match &k.source {
+            DevIter::AllNodes => {
+                sweep(env, Domain::Range(env.g.num_nodes()), k.reg, k.filter.as_ref(), &k.body, k.frame_size, None)
+            }
+            DevIter::Set(s) => sweep(
+                env,
+                Domain::List(env.set_items(*s)),
+                k.reg,
+                k.filter.as_ref(),
+                &k.body,
+                k.frame_size,
+                None,
+            ),
+            DevIter::Neighbors { of, .. } => {
+                let Idx::Scalar(slot) = of else {
+                    bail!("top-level forall over neighbors needs a host node variable")
+                };
+                let v = env.scalar(*slot).as_i()? as Node;
+                sweep(
+                    env,
+                    Domain::List(env.g.neighbors(v)),
+                    k.reg,
+                    k.filter.as_ref(),
+                    &k.body,
+                    k.frame_size,
+                    None,
+                )
+            }
+            DevIter::InNeighbors { of } => {
+                let Idx::Scalar(slot) = of else {
+                    bail!("top-level forall over in-neighbors needs a host node variable")
+                };
+                let v = env.scalar(*slot).as_i()? as Node;
+                sweep(
+                    env,
+                    Domain::List(env.g.in_neighbors(v)),
+                    k.reg,
+                    k.filter.as_ref(),
+                    &k.body,
+                    k.frame_size,
+                    None,
+                )
+            }
         }
     }
 
     /// `iterateInBFS … iterateInReverse` (paper §3.4): level-synchronous
     /// sweeps with DAG-children neighbor semantics.
     fn exec_bfs(
-        &mut self,
-        var: &str,
-        from: &str,
-        body: &[Stmt],
-        reverse: Option<&(Expr, Block)>,
+        &self,
+        reg: u32,
+        from: u32,
+        body: &[DevStmt],
+        reverse: Option<&(CExpr, Vec<DevStmt>)>,
+        frame_size: usize,
     ) -> Result<()> {
-        let src = self.env.scalar(from)?.as_i()? as Node;
-        let levels = crate::algorithms::reference::bfs_levels(self.env.g, src);
+        let env = &self.env;
+        let src = env.scalar(from).as_i()? as Node;
+        let levels = crate::algorithms::reference::bfs_levels(env.g, src);
         let maxl = levels
             .iter()
             .filter(|&&l| l != crate::algorithms::reference::INF)
@@ -320,217 +370,382 @@ impl<'g> Interp<'g> {
                 by_level[l as usize].push(v as Node);
             }
         }
-        let env = &self.env;
-        let threads = env.threads;
         // forward sweep
         for frontier in &by_level {
-            let err = std::sync::Mutex::new(None::<anyhow::Error>);
-            crate::util::pool::parallel_for(frontier.len(), threads, |i| {
-                let v = frontier[i];
-                let ctx = EvalCtx::device(env).with_element(var, v).with_bfs(&levels, true);
-                if let Err(e) = exec_device_block(env, body, &ctx) {
-                    *err.lock().unwrap() = Some(e);
-                }
-            });
-            if let Some(e) = err.into_inner().unwrap() {
-                return Err(e);
-            }
+            sweep(env, Domain::List(frontier), reg, None, body, frame_size, Some(&levels))?;
         }
         // reverse sweep
         if let Some((cond, rbody)) = reverse {
             for frontier in by_level.iter().rev() {
-                let err = std::sync::Mutex::new(None::<anyhow::Error>);
-                crate::util::pool::parallel_for(frontier.len(), threads, |i| {
-                    let v = frontier[i];
-                    let ctx = EvalCtx::device(env).with_element(var, v).with_bfs(&levels, true);
-                    let r = (|| -> Result<()> {
-                        if !eval(cond, &ctx)?.as_b()? {
-                            return Ok(());
-                        }
-                        exec_device_block(env, rbody, &ctx)
-                    })();
-                    if let Err(e) = r {
-                        *err.lock().unwrap() = Some(e);
-                    }
-                });
-                if let Some(e) = err.into_inner().unwrap() {
-                    return Err(e);
-                }
+                sweep(
+                    env,
+                    Domain::List(frontier),
+                    reg,
+                    Some(cond),
+                    rbody,
+                    frame_size,
+                    Some(&levels),
+                )?;
             }
         }
         Ok(())
     }
-}
 
-/// Execute a kernel body for one element (thread context). All shared
-/// mutation is atomic; local declarations live in the per-thread `ctx`.
-fn exec_device_block(env: &Env<'_>, body: &[Stmt], ctx: &EvalCtx<'_, '_>) -> Result<()> {
-    let mut ctx = ctx.child();
-    for s in body {
-        exec_device_stmt(env, s, &mut ctx)?;
+    fn exec_fixed_point(
+        &mut self,
+        var: u32,
+        flag: u32,
+        body: &[HostStmt],
+        frontier: Option<FrontierInfo>,
+    ) -> Result<()> {
+        self.env.set_scalar(var, Val::B(false));
+        let max_iters = 4 * self.env.g.num_nodes() + 16;
+        if let Some(fi) = frontier {
+            // The sparse schedule assumes the ping-pong buffer starts clear
+            // (the compiler proved the kernel only sets bits reachable from
+            // the frontier). A program that pre-seeds `nxt` before the loop
+            // gets the dense schedule instead.
+            if !self.env.prop(fi.nxt).any_true() {
+                let HostStmt::Kernel(k) = &body[0] else {
+                    bail!("internal: frontier plan without a leading kernel")
+                };
+                return self.frontier_loop(var, fi, k, max_iters);
+            }
+        }
+        for _ in 0..max_iters {
+            self.block(body)?;
+            if self.ret.is_some() {
+                return Ok(());
+            }
+            // finished when no vertex has the flag set (logical-OR flag)
+            if !self.env.prop(flag).any_true() {
+                self.env.set_scalar(var, Val::B(true));
+                return Ok(());
+            }
+        }
+        bail!("fixedPoint did not converge after {max_iters} iterations")
     }
-    Ok(())
+
+    /// Sparse-worklist execution of a frontier-eligible fixedPoint: process
+    /// only flagged vertices, gather the next worklist from the updated
+    /// neighborhood (the compiler proved all flag-nxt writes land there),
+    /// and fall back to dense filtered sweeps while the frontier is > |V|/4.
+    fn frontier_loop(
+        &self,
+        var: u32,
+        fi: FrontierInfo,
+        k: &CKernel,
+        max_iters: usize,
+    ) -> Result<()> {
+        let env = &self.env;
+        let n = env.g.num_nodes();
+        let flag = env.prop(fi.flag);
+        let nxt = env.prop(fi.nxt);
+        if flag.len() != n || nxt.len() != n {
+            bail!("fixedPoint flag properties are not initialized");
+        }
+        let mut frontier: Vec<Node> =
+            (0..n as Node).filter(|&v| flag.load_bool(v as usize)).collect();
+        let mut next: Vec<Node> = Vec::new();
+        for _ in 0..max_iters {
+            if frontier.is_empty() {
+                // dense-equivalent exit state: both flag arrays all-false
+                return env.scalar_store(var, Val::B(true));
+            }
+            let dense = frontier.len() * 4 >= n;
+            if dense {
+                sweep(env, Domain::Range(n), k.reg, k.filter.as_ref(), &k.body, k.frame_size, None)?;
+            } else {
+                // every frontier vertex passes the flag filter by
+                // construction — skip evaluating it
+                sweep(env, Domain::List(&frontier), k.reg, None, &k.body, k.frame_size, None)?;
+            }
+            // emulate `flag = nxt; attach(nxt = False);` sparsely:
+            // clear the old frontier's flags, then claim every vertex whose
+            // nxt bit the kernel set
+            for &v in &frontier {
+                flag.store(v as usize, Val::B(false));
+            }
+            next.clear();
+            let claim = |w: Node, next: &mut Vec<Node>| {
+                if nxt.load_bool(w as usize) {
+                    nxt.store(w as usize, Val::B(false));
+                    flag.store(w as usize, Val::B(true));
+                    next.push(w);
+                }
+            };
+            if dense {
+                for v in 0..n as Node {
+                    claim(v, &mut next);
+                }
+            } else {
+                for &v in &frontier {
+                    claim(v, &mut next);
+                    for &w in env.g.neighbors(v) {
+                        claim(w, &mut next);
+                    }
+                }
+            }
+            std::mem::swap(&mut frontier, &mut next);
+        }
+        bail!("fixedPoint did not converge after {max_iters} iterations")
+    }
 }
 
-fn exec_device_stmt(env: &Env<'_>, s: &Stmt, ctx: &mut EvalCtx<'_, '_>) -> Result<()> {
+// ---------------------------------------------------------------------------
+// Device execution
+// ---------------------------------------------------------------------------
+
+/// Iteration domain of one kernel launch.
+#[derive(Clone, Copy)]
+enum Domain<'a> {
+    Range(usize),
+    List(&'a [Node]),
+}
+
+impl Domain<'_> {
+    #[inline]
+    fn len(&self) -> usize {
+        match self {
+            Domain::Range(n) => *n,
+            Domain::List(l) => l.len(),
+        }
+    }
+    #[inline]
+    fn get(&self, i: usize) -> Node {
+        match self {
+            Domain::Range(_) => i as Node,
+            Domain::List(l) => l[i],
+        }
+    }
+}
+
+/// Run a kernel body over `domain`, one element per worker-claimed index.
+/// Each worker allocates one register frame up front and reuses it for every
+/// element it processes.
+fn sweep(
+    env: &Env<'_>,
+    domain: Domain<'_>,
+    reg: u32,
+    filter: Option<&CExpr>,
+    body: &[DevStmt],
+    frame_size: usize,
+    levels: Option<&[i32]>,
+) -> Result<()> {
+    let err = std::sync::Mutex::new(None::<anyhow::Error>);
+    let failed = std::sync::atomic::AtomicBool::new(false);
+    let frame_len = frame_size.max(1);
+    crate::util::pool::parallel_for_dynamic_scoped(
+        domain.len(),
+        env.threads,
+        64,
+        || vec![Val::I(0); frame_len],
+        |frame, i| {
+            // once any element errors, skip the rest of the sweep
+            if failed.load(std::sync::atomic::Ordering::Relaxed) {
+                return;
+            }
+            let v = domain.get(i);
+            let r = (|| -> Result<()> {
+                let mut ctx = EvalCtx { env, current_edge: NO_EDGE, levels };
+                frame[reg as usize] = Val::I(v as i64);
+                if let Some(f) = filter {
+                    if !eval(f, &ctx, frame)?.as_b()? {
+                        return Ok(());
+                    }
+                }
+                for s in body {
+                    exec_dev(env, s, &mut ctx, frame)?;
+                }
+                Ok(())
+            })();
+            if let Err(e) = r {
+                failed.store(true, std::sync::atomic::Ordering::Relaxed);
+                let mut slot = err.lock().unwrap();
+                // keep the first error, not the last
+                if slot.is_none() {
+                    *slot = Some(e);
+                }
+            }
+        },
+    );
+    match err.into_inner().unwrap() {
+        Some(e) => Err(e),
+        None => Ok(()),
+    }
+}
+
+/// Execute one device statement for the current element. All shared mutation
+/// is atomic; locals live in the worker's register `frame`.
+fn exec_dev(
+    env: &Env<'_>,
+    s: &DevStmt,
+    ctx: &mut EvalCtx<'_, '_>,
+    frame: &mut [Val],
+) -> Result<()> {
     match s {
-        Stmt::Decl { ty, name, init, .. } => {
-            let v = match init {
-                Some(e) => coerce(eval(e, ctx)?, ty)?,
-                None => Val::zero_of(ty),
-            };
-            ctx.declare_local(name, v);
+        DevStmt::SetReg { reg, coerce, value } => {
+            let mut v = eval(value, ctx, frame)?;
+            if let Some(st) = coerce {
+                v = coerce_st(v, *st)?;
+            }
+            frame[*reg as usize] = v;
             Ok(())
         }
-        Stmt::Assign { target, value, .. } => {
-            // read-modify-write on shared state becomes an atomic reduction
-            if let Some((t, op, rhs)) = crate::ir::analyze::as_reduction(target, value) {
-                if matches!(&t, LValue::Prop { .. }) {
-                    return device_reduce(env, &t, op, &rhs, ctx);
-                }
-            }
-            match target {
-                LValue::Var(v) => {
-                    let val = eval(value, ctx)?;
-                    if ctx.has_local(v) {
-                        ctx.set_local(v, val);
-                    } else {
-                        // scalar shared write (rare; e.g. flags) — atomic store
-                        env.scalar_store(v, val)?;
-                    }
-                    Ok(())
-                }
-                LValue::Prop { obj, prop } => {
-                    let idx = ctx.element(obj)?;
-                    let val = eval(value, ctx)?;
-                    env.prop(prop)?.store(idx as usize, val);
-                    Ok(())
-                }
-            }
+        DevStmt::RegReduce { reg, op, value } => {
+            let rhs = eval(value, ctx, frame)?;
+            let cur = frame[*reg as usize];
+            frame[*reg as usize] = apply_reduce(*op, cur, rhs)?;
+            Ok(())
         }
-        Stmt::Reduce { target, op, value, .. } => device_reduce(env, target, *op, value, ctx),
-        Stmt::MinMaxAssign { kind, target, compare, extra, .. } => {
-            let LValue::Prop { obj, prop } = target else {
-                bail!("Min/Max target must be a property")
-            };
-            let idx = ctx.element(obj)? as usize;
-            let proposed = eval(compare, ctx)?;
-            let improved = env.prop(prop)?.atomic_min_max(idx, proposed, *kind);
+        DevStmt::ScalarStore { slot, value } => {
+            let v = eval(value, ctx, frame)?;
+            env.scalar_store(*slot, v)
+        }
+        DevStmt::ScalarReduce { slot, op, value } => {
+            let v = eval(value, ctx, frame)?;
+            env.scalar_reduce(*slot, *op, v)
+        }
+        DevStmt::PropStore { prop, idx, value } => {
+            let i = node_of(*idx, ctx, frame)? as usize;
+            let v = eval(value, ctx, frame)?;
+            env.prop(*prop).store(i, v);
+            Ok(())
+        }
+        DevStmt::PropReduce { prop, idx, op, value } => {
+            let i = node_of(*idx, ctx, frame)? as usize;
+            let v = eval(value, ctx, frame)?;
+            env.prop(*prop).atomic_reduce(i, *op, v)
+        }
+        DevStmt::MinMax { kind, prop, idx, compare, extra } => {
+            let i = node_of(*idx, ctx, frame)? as usize;
+            let proposed = eval(compare, ctx, frame)?;
+            let improved = env.prop(*prop).atomic_min_max(i, proposed, *kind);
             if improved {
-                for (t, v) in extra {
-                    let val = eval(v, ctx)?;
-                    match t {
-                        LValue::Prop { obj, prop } => {
-                            let i = ctx.element(obj)? as usize;
-                            env.prop(prop)?.store(i, val);
+                for u in extra {
+                    match u {
+                        CUpdate::Prop { prop, idx, value } => {
+                            let j = node_of(*idx, ctx, frame)? as usize;
+                            let v = eval(value, ctx, frame)?;
+                            env.prop(*prop).store(j, v);
                         }
-                        LValue::Var(name) => env.scalar_store(name, val)?,
+                        CUpdate::Scalar { slot, value } => {
+                            let v = eval(value, ctx, frame)?;
+                            env.scalar_store(*slot, v)?;
+                        }
                     }
                 }
             }
             Ok(())
         }
-        Stmt::For { iter, body, .. } => {
-            // nested loops run sequentially within the thread (same-kernel
-            // folding, as the paper's generated code does)
-            let (domain, edge_base): (Vec<Node>, Option<usize>) = match &iter.source {
-                IterSource::Neighbors { of, .. } => {
-                    let v = ctx.element(of)? as Node;
-                    if ctx.bfs_dag() {
-                        // BFS context: DAG children only
-                        let levels = ctx.levels().unwrap();
-                        let kids: Vec<Node> = env
-                            .g
-                            .neighbors(v)
-                            .iter()
-                            .copied()
-                            .filter(|&w| levels[w as usize] == levels[v as usize] + 1)
-                            .collect();
-                        (kids, None)
-                    } else {
-                        (env.g.neighbors(v).to_vec(), Some(env.g.offsets[v as usize] as usize))
-                    }
+        DevStmt::For { reg, source, filter, body } => {
+            exec_dev_for(env, *reg, source, filter.as_ref(), body, ctx, frame)
+        }
+        DevStmt::If { cond, then, els } => {
+            let branch = if eval(cond, ctx, frame)?.as_b()? { then } else { els };
+            for st in branch {
+                exec_dev(env, st, ctx, frame)?;
+            }
+            Ok(())
+        }
+    }
+}
+
+/// Nested loops run sequentially within the worker thread (same-kernel
+/// folding, as the paper's generated code does). The loop element register
+/// is rebound in place; no per-iteration state is allocated.
+fn exec_dev_for(
+    env: &Env<'_>,
+    reg: u32,
+    source: &DevIter,
+    filter: Option<&CExpr>,
+    body: &[DevStmt],
+    ctx: &mut EvalCtx<'_, '_>,
+    frame: &mut [Val],
+) -> Result<()> {
+    match source {
+        DevIter::Neighbors { of, dag: false } => {
+            let v = node_of(*of, ctx, frame)?;
+            let base = env.g.offsets[v as usize] as usize;
+            run_list(env, reg, filter, body, env.g.neighbors(v), Some(base), ctx, frame)
+        }
+        DevIter::Neighbors { of, dag: true } => {
+            // BFS context: DAG children only
+            let v = node_of(*of, ctx, frame)?;
+            let levels =
+                ctx.levels.ok_or_else(|| anyhow!("BFS-DAG iteration outside iterateInBFS"))?;
+            let lv = levels[v as usize];
+            let saved_edge = ctx.current_edge;
+            ctx.current_edge = NO_EDGE;
+            for &w in env.g.neighbors(v) {
+                if levels[w as usize] != lv + 1 {
+                    continue;
                 }
-                IterSource::NodesTo { of, .. } => {
-                    let v = ctx.element(of)? as Node;
-                    (env.g.in_neighbors(v).to_vec(), None)
-                }
-                IterSource::Nodes { .. } => ((0..env.g.num_nodes() as Node).collect(), None),
-                IterSource::Set { set } => (env.set_items(set)?, None),
-            };
-            // Mutate the context in place (save/restore the loop bindings)
-            // so writes to enclosing locals — e.g. PageRank's `sum`
-            // accumulator — are visible outside each iteration.
-            let saved = ctx.save_loop_state(&iter.var);
-            let mut result = Ok(());
-            for (k, w) in domain.iter().enumerate() {
-                ctx.bind_element(&iter.var, *w);
-                // current edge id for `g.get_edge(v, w)` in this iteration
-                if let Some(base) = edge_base {
-                    // adj is sorted; k-th neighbor = k-th out-edge
-                    ctx.set_current_edge(base + k);
-                }
-                if let Some(f) = &iter.filter {
-                    match eval(f, ctx) {
-                        Ok(v) if !v.as_b()? => continue,
-                        Ok(_) => {}
-                        Err(e) => {
-                            result = Err(e);
-                            break;
-                        }
+                frame[reg as usize] = Val::I(w as i64);
+                if let Some(f) = filter {
+                    if !eval(f, ctx, frame)?.as_b()? {
+                        continue;
                     }
                 }
                 for st in body {
-                    if let Err(e) = exec_device_stmt(env, st, ctx) {
-                        result = Err(e);
-                        break;
-                    }
-                }
-                if result.is_err() {
-                    break;
+                    exec_dev(env, st, ctx, frame)?;
                 }
             }
-            ctx.restore_loop_state(&iter.var, saved);
-            result
+            ctx.current_edge = saved_edge;
+            Ok(())
         }
-        Stmt::If { cond, then, els, .. } => {
-            if eval(cond, ctx)?.as_b()? {
-                for st in then {
-                    exec_device_stmt(env, st, ctx)?;
+        DevIter::InNeighbors { of } => {
+            let v = node_of(*of, ctx, frame)?;
+            run_list(env, reg, filter, body, env.g.in_neighbors(v), None, ctx, frame)
+        }
+        DevIter::AllNodes => {
+            let n = env.g.num_nodes();
+            for w in 0..n as Node {
+                frame[reg as usize] = Val::I(w as i64);
+                if let Some(f) = filter {
+                    if !eval(f, ctx, frame)?.as_b()? {
+                        continue;
+                    }
                 }
-            } else if let Some(e) = els {
-                for st in e {
-                    exec_device_stmt(env, st, ctx)?;
+                for st in body {
+                    exec_dev(env, st, ctx, frame)?;
                 }
             }
             Ok(())
         }
-        other => bail!("statement not allowed inside a parallel region: {other:?}"),
+        DevIter::Set(s) => run_list(env, reg, filter, body, env.set_items(*s), None, ctx, frame),
     }
 }
 
-fn device_reduce(
+/// Iterate a node list, rebinding the loop register in place. `edge_base`
+/// supplies edge-id tracking for sorted neighbor iterations (the k-th
+/// neighbor of `v` is the k-th out-edge of `v`).
+#[allow(clippy::too_many_arguments)]
+fn run_list(
     env: &Env<'_>,
-    target: &LValue,
-    op: ReduceOp,
-    value: &Expr,
+    reg: u32,
+    filter: Option<&CExpr>,
+    body: &[DevStmt],
+    list: &[Node],
+    edge_base: Option<usize>,
     ctx: &mut EvalCtx<'_, '_>,
+    frame: &mut [Val],
 ) -> Result<()> {
-    let rhs = eval(value, ctx)?;
-    match target {
-        LValue::Var(v) => {
-            if ctx.has_local(v) {
-                let cur = ctx.local(v)?;
-                ctx.set_local(v, eval::apply_reduce(op, cur, rhs)?);
-            } else {
-                env.scalar_reduce(v, op, rhs)?;
-            }
-            Ok(())
+    let saved_edge = ctx.current_edge;
+    for (k, &w) in list.iter().enumerate() {
+        frame[reg as usize] = Val::I(w as i64);
+        if let Some(base) = edge_base {
+            ctx.current_edge = base + k;
         }
-        LValue::Prop { obj, prop } => {
-            let idx = ctx.element(obj)? as usize;
-            env.prop(prop)?.atomic_reduce(idx, op, rhs);
-            Ok(())
+        if let Some(f) = filter {
+            if !eval(f, ctx, frame)?.as_b()? {
+                continue;
+            }
+        }
+        for st in body {
+            exec_dev(env, st, ctx, frame)?;
         }
     }
+    ctx.current_edge = saved_edge;
+    Ok(())
 }

@@ -13,6 +13,7 @@
 use crate::graph::csr::{Graph, Node};
 use crate::graph::ell::EllGraph;
 use crate::runtime::{self, Runtime};
+use crate::xla_stub as xla;
 use anyhow::{bail, Result};
 
 /// Row/width padding must match python/compile/aot.py's shape grid

@@ -8,6 +8,7 @@
 //! this structure.
 
 pub mod analyze;
+pub mod slots;
 pub mod transfer;
 
 use crate::dsl::ast::{Stmt, Type};

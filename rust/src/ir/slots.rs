@@ -1,0 +1,77 @@
+//! Dense slot interning for name → index resolution.
+//!
+//! The paper's generated accelerator code never touches a symbol table at
+//! run time: every property is an array, every scalar a kernel parameter.
+//! The execution backends get the same treatment by interning names into
+//! dense `u32` slots once, at lowering time. The interpreter's lowering pass
+//! (`backends::interp::compile`) is the first consumer; the codegen backends
+//! can reuse the same tables for buffer numbering (see ROADMAP open items).
+
+use std::collections::HashMap;
+
+/// An append-only name → dense-index table. Slots are handed out in
+/// first-intern order, so interning in a deterministic walk order (params
+/// first, then declaration order) yields stable slot numbering.
+#[derive(Clone, Debug, Default)]
+pub struct Interner {
+    names: Vec<String>,
+    index: HashMap<String, u32>,
+}
+
+impl Interner {
+    pub fn new() -> Interner {
+        Interner::default()
+    }
+
+    /// Intern `name`, returning its slot (existing or freshly assigned).
+    pub fn intern(&mut self, name: &str) -> u32 {
+        if let Some(&i) = self.index.get(name) {
+            return i;
+        }
+        let i = self.names.len() as u32;
+        self.names.push(name.to_string());
+        self.index.insert(name.to_string(), i);
+        i
+    }
+
+    /// Slot of an already-interned name.
+    pub fn get(&self, name: &str) -> Option<u32> {
+        self.index.get(name).copied()
+    }
+
+    /// Name for a slot (panics on out-of-range — slots are compiler-issued).
+    pub fn name(&self, slot: u32) -> &str {
+        &self.names[slot as usize]
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// All interned names in slot order.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slots_are_dense_and_stable() {
+        let mut t = Interner::new();
+        assert_eq!(t.intern("dist"), 0);
+        assert_eq!(t.intern("weight"), 1);
+        assert_eq!(t.intern("dist"), 0); // re-intern is idempotent
+        assert_eq!(t.len(), 2);
+        assert_eq!(t.name(1), "weight");
+        assert_eq!(t.get("weight"), Some(1));
+        assert_eq!(t.get("nope"), None);
+        assert_eq!(t.names(), &["dist".to_string(), "weight".to_string()]);
+    }
+}

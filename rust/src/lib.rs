@@ -28,3 +28,4 @@ pub mod ir;
 pub mod runtime;
 pub mod sema;
 pub mod util;
+pub mod xla_stub;

@@ -3,6 +3,7 @@
 //! format because xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos.
 
 use crate::util::json::Json;
+use crate::xla_stub as xla;
 use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};

@@ -21,6 +21,10 @@ pub struct TypedFunction {
     pub node_props: HashMap<String, Type>,
     /// edge property name -> value type
     pub edge_props: HashMap<String, Type>,
+    /// property names in declaration order (parameters first, then body
+    /// declarations) — slot-assigning backends need a deterministic order,
+    /// which the registry HashMaps cannot provide
+    pub prop_order: Vec<String>,
     /// variable name -> type (flattened over all scopes; names are unique
     /// per function in well-formed StarPlat programs)
     pub vars: HashMap<String, Type>,
@@ -34,6 +38,7 @@ struct Ctx {
     scopes: Vec<HashMap<String, Type>>,
     node_props: HashMap<String, Type>,
     edge_props: HashMap<String, Type>,
+    prop_order: Vec<String>,
     all_vars: HashMap<String, Type>,
     graph: Option<String>,
     returns: Option<Type>,
@@ -55,6 +60,11 @@ impl Ctx {
     }
     fn push(&mut self) {
         self.scopes.push(HashMap::new());
+    }
+    fn register_prop(&mut self, name: &str) {
+        if !self.prop_order.iter().any(|p| p == name) {
+            self.prop_order.push(name.to_string());
+        }
     }
     fn pop(&mut self) {
         self.scopes.pop();
@@ -106,6 +116,7 @@ pub fn check_function(f: &Function) -> Result<TypedFunction, DslError> {
         scopes: vec![HashMap::new()],
         node_props: HashMap::new(),
         edge_props: HashMap::new(),
+        prop_order: Vec::new(),
         all_vars: HashMap::new(),
         graph: None,
         returns: None,
@@ -121,9 +132,11 @@ pub fn check_function(f: &Function) -> Result<TypedFunction, DslError> {
             }
             Type::PropNode(inner) => {
                 cx.node_props.insert(p.name.clone(), (**inner).clone());
+                cx.register_prop(&p.name);
             }
             Type::PropEdge(inner) => {
                 cx.edge_props.insert(p.name.clone(), (**inner).clone());
+                cx.register_prop(&p.name);
             }
             _ => {}
         }
@@ -138,6 +151,7 @@ pub fn check_function(f: &Function) -> Result<TypedFunction, DslError> {
         func: f.clone(),
         node_props: cx.node_props,
         edge_props: cx.edge_props,
+        prop_order: cx.prop_order,
         vars: cx.all_vars,
         graph,
         returns: cx.returns,
@@ -159,9 +173,11 @@ fn check_stmt(cx: &mut Ctx, s: &Stmt) -> Result<(), DslError> {
             match ty {
                 Type::PropNode(inner) => {
                     cx.node_props.insert(name.clone(), (**inner).clone());
+                    cx.register_prop(name);
                 }
                 Type::PropEdge(inner) => {
                     cx.edge_props.insert(name.clone(), (**inner).clone());
+                    cx.register_prop(name);
                 }
                 _ => {}
             }
@@ -581,6 +597,19 @@ mod tests {
         assert_eq!(tf.node_props.get("BC"), Some(&Type::Float));
         assert_eq!(tf.node_props.get("lvl"), Some(&Type::Int));
         assert_eq!(tf.graph, "g");
+    }
+
+    #[test]
+    fn prop_order_is_declaration_order() {
+        let tf = check(
+            "function f(Graph g, propNode<float> BC, propEdge<int> w) {
+               propNode<int> lvl;
+               propNode<bool> seen;
+               g.attachNodeProperty(BC = 0, lvl = 0, seen = False);
+             }",
+        )
+        .unwrap();
+        assert_eq!(tf.prop_order, vec!["BC", "w", "lvl", "seen"]);
     }
 
     #[test]

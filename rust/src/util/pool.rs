@@ -61,13 +61,27 @@ pub fn parallel_for_dynamic<F>(n: usize, threads: usize, block: usize, f: F)
 where
     F: Fn(usize) + Sync,
 {
+    parallel_for_dynamic_scoped(n, threads, block, || (), |_, i| f(i));
+}
+
+/// Dynamic variant with per-worker scratch state: each worker calls `init`
+/// once and reuses the resulting value across all blocks it claims. The
+/// slot-resolved interpreter uses this to allocate one register frame per
+/// worker instead of one per element (zero allocations on the per-vertex
+/// path).
+pub fn parallel_for_dynamic_scoped<T, I, F>(n: usize, threads: usize, block: usize, init: I, f: F)
+where
+    I: Fn() -> T + Sync,
+    F: Fn(&mut T, usize) + Sync,
+{
     if n == 0 {
         return;
     }
     let threads = threads.clamp(1, n);
     if threads == 1 {
+        let mut state = init();
         for i in 0..n {
-            f(i);
+            f(&mut state, i);
         }
         return;
     }
@@ -76,15 +90,19 @@ where
     std::thread::scope(|s| {
         for _ in 0..threads {
             let f = &f;
+            let init = &init;
             let next = &next;
-            s.spawn(move || loop {
-                let lo = next.fetch_add(block, Ordering::Relaxed);
-                if lo >= n {
-                    break;
-                }
-                let hi = (lo + block).min(n);
-                for i in lo..hi {
-                    f(i);
+            s.spawn(move || {
+                let mut state = init();
+                loop {
+                    let lo = next.fetch_add(block, Ordering::Relaxed);
+                    if lo >= n {
+                        break;
+                    }
+                    let hi = (lo + block).min(n);
+                    for i in lo..hi {
+                        f(&mut state, i);
+                    }
                 }
             });
         }
@@ -139,6 +157,28 @@ mod tests {
             c.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(c.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn scoped_covers_all_indices_and_reuses_state() {
+        let hits: Vec<AtomicU64> = (0..513).map(|_| AtomicU64::new(0)).collect();
+        let inits = AtomicU64::new(0);
+        parallel_for_dynamic_scoped(
+            513,
+            4,
+            8,
+            || {
+                inits.fetch_add(1, Ordering::Relaxed);
+                vec![0u8; 4]
+            },
+            |scratch, i| {
+                scratch[0] = scratch[0].wrapping_add(1);
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            },
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        // one frame per worker, not per element
+        assert!(inits.load(Ordering::Relaxed) <= 4);
     }
 
     #[test]

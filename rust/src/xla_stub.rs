@@ -1,0 +1,154 @@
+//! In-tree stand-in for the `xla` (PJRT) bindings.
+//!
+//! The XLA execution path (`runtime` + `backends::xla`) was written against
+//! the `xla-rs` API, which needs the native `xla_extension` C++ library —
+//! not something a plain `cargo build` can fetch. This module mirrors the
+//! small API surface those modules use so the crate builds everywhere:
+//! [`PjRtClient::cpu`] returns an error, which surfaces through
+//! `XlaBackend::open` as the "artifacts unavailable" condition every test,
+//! bench, and example already handles by skipping the XLA column.
+//!
+//! To run the real accelerator path, replace the `use crate::xla_stub as
+//! xla;` aliases in `runtime/mod.rs` and `backends/xla/mod.rs` with the real
+//! `xla` crate (and install `xla_extension`); the call sites compile
+//! unchanged against either.
+
+#[derive(Debug, thiserror::Error)]
+#[error("{0}")]
+pub struct Error(pub String);
+
+fn unavailable<T>() -> Result<T, Error> {
+    Err(Error(
+        "PJRT bindings unavailable: built with the in-tree stub (no xla_extension); \
+         the XLA backend is disabled"
+            .to_string(),
+    ))
+}
+
+/// Element types the artifact pipeline produces.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ElementType {
+    S32,
+    S64,
+    F32,
+    F64,
+    Pred,
+}
+
+/// Host-side tensor value (stub: carries no data).
+#[derive(Clone, Debug, Default)]
+pub struct Literal;
+
+impl Literal {
+    pub fn vec1<T>(_v: &[T]) -> Literal {
+        Literal
+    }
+    pub fn scalar<T>(_v: T) -> Literal {
+        Literal
+    }
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal, Error> {
+        unavailable()
+    }
+    pub fn to_vec<T>(&self) -> Result<Vec<T>, Error> {
+        unavailable()
+    }
+    pub fn to_tuple(&self) -> Result<Vec<Literal>, Error> {
+        unavailable()
+    }
+    pub fn get_first_element<T>(&self) -> Result<T, Error> {
+        unavailable()
+    }
+    pub fn array_shape(&self) -> Result<ArrayShape, Error> {
+        unavailable()
+    }
+    pub fn ty(&self) -> Result<ElementType, Error> {
+        unavailable()
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+#[derive(Debug)]
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto, Error> {
+        unavailable()
+    }
+}
+
+#[derive(Debug)]
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal, Error> {
+        unavailable()
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _inputs: &[Literal]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+    pub fn execute_b<T>(&self, _inputs: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>, Error> {
+        unavailable()
+    }
+}
+
+#[derive(Debug)]
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient, Error> {
+        unavailable()
+    }
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable, Error> {
+        unavailable()
+    }
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<usize>,
+        _lit: &Literal,
+    ) -> Result<PjRtBuffer, Error> {
+        unavailable()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_open_reports_stub() {
+        let e = PjRtClient::cpu().unwrap_err();
+        assert!(e.to_string().contains("stub"));
+    }
+
+    #[test]
+    fn literal_constructors_are_infallible() {
+        let l = Literal::vec1(&[1i32, 2, 3]);
+        assert!(l.clone().to_vec::<i32>().is_err());
+        let _s = Literal::scalar(4f32);
+    }
+}

@@ -1,0 +1,115 @@
+//! Seq-vs-Par parity: the slot-resolved interpreter must produce identical
+//! results (tolerance-equal for PageRank's floating-point reductions) across
+//! execution modes and worker counts. This pins down two properties at once:
+//! the atomic idioms are schedule-independent, and the fixedPoint frontier
+//! fast path (SSSP/CC) computes exactly what the dense sweeps compute.
+
+use starplat::backends::interp::{self, env::Val, Args};
+use starplat::coordinator::driver::{load_program, Algo};
+use starplat::graph::csr::Graph;
+use starplat::graph::generators::{rmat, road_grid, uniform_random};
+use starplat::util::rng::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 8];
+
+fn test_graphs() -> Vec<Graph> {
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut gs = Vec::new();
+    for i in 0..3 {
+        let n = rng.range(60, 280);
+        let m = rng.range(n, 5 * n);
+        gs.push(rmat(&format!("rmat{i}"), n, m, rng.next_u64()));
+    }
+    gs.push(uniform_random("ur", 150, 600, rng.next_u64()));
+    // mesh-shaped graph: exercises the sparse-frontier path for many rounds
+    gs.push(road_grid("grid", 15, 14, 9));
+    gs
+}
+
+/// Run one algorithm across all worker counts and hand results to `check`.
+fn sweep_threads(algo: Algo, g: &Graph, args: &Args, check: impl Fn(&interp::Output, usize)) {
+    let tf = load_program(algo).unwrap();
+    for t in THREADS {
+        let out = interp::run_with_threads(&tf, g, args, t).unwrap();
+        check(&out, t);
+    }
+}
+
+#[test]
+fn bfs_parity() {
+    for g in test_graphs() {
+        let tf = load_program(Algo::Bfs).unwrap();
+        let args = Args::default().node("src", 0);
+        let want = interp::run_with_threads(&tf, &g, &args, 1).unwrap().prop_i64("level");
+        sweep_threads(Algo::Bfs, &g, &args, |out, t| {
+            assert_eq!(out.prop_i64("level"), want, "{} with {t} threads", g.name);
+        });
+    }
+}
+
+#[test]
+fn sssp_parity() {
+    let mut rng = Rng::new(7);
+    for g in test_graphs() {
+        let src = rng.range(0, g.num_nodes()) as u32;
+        let tf = load_program(Algo::Sssp).unwrap();
+        let args = Args::default().node("src", src);
+        let want = interp::run_with_threads(&tf, &g, &args, 1).unwrap().prop_i64("dist");
+        sweep_threads(Algo::Sssp, &g, &args, |out, t| {
+            assert_eq!(out.prop_i64("dist"), want, "{} src {src} with {t} threads", g.name);
+        });
+    }
+}
+
+#[test]
+fn cc_parity() {
+    for g in test_graphs() {
+        let tf = load_program(Algo::Cc).unwrap();
+        let args = Args::default();
+        let want = interp::run_with_threads(&tf, &g, &args, 1).unwrap().prop_i64("comp");
+        sweep_threads(Algo::Cc, &g, &args, |out, t| {
+            assert_eq!(out.prop_i64("comp"), want, "{} with {t} threads", g.name);
+        });
+    }
+}
+
+#[test]
+fn pr_parity_within_tolerance() {
+    for g in test_graphs() {
+        let args = Args::default()
+            .scalar("beta", Val::F(1e-12))
+            .scalar("delta", Val::F(0.85))
+            .scalar("maxIter", Val::I(50));
+        let tf = load_program(Algo::Pr).unwrap();
+        let want = interp::run_with_threads(&tf, &g, &args, 1).unwrap().prop_f64("pageRank");
+        sweep_threads(Algo::Pr, &g, &args, |out, t| {
+            let got = out.prop_f64("pageRank");
+            assert_eq!(got.len(), want.len());
+            for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-7,
+                    "{} v{i} with {t} threads: {a} vs {b}",
+                    g.name
+                );
+            }
+        });
+    }
+}
+
+/// The frontier fast path must agree with the oracles, not just with itself.
+#[test]
+fn frontier_path_matches_oracles() {
+    use starplat::algorithms::reference;
+    for g in test_graphs() {
+        let tf = load_program(Algo::Sssp).unwrap();
+        let out = interp::run_with_threads(&tf, &g, &Args::default().node("src", 0), 8).unwrap();
+        let want: Vec<i64> = reference::dijkstra(&g, 0).into_iter().map(|d| d as i64).collect();
+        assert_eq!(out.prop_i64("dist"), want, "{}", g.name);
+
+        let tf = load_program(Algo::Cc).unwrap();
+        let out = interp::run_with_threads(&tf, &g, &Args::default(), 8).unwrap();
+        let want: Vec<i64> =
+            reference::connected_components(&g).into_iter().map(|c| c as i64).collect();
+        assert_eq!(out.prop_i64("comp"), want, "{}", g.name);
+    }
+}
