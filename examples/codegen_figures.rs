@@ -61,17 +61,42 @@ fn main() -> anyhow::Result<()> {
         return Ok(());
     }
 
-    excerpt("Fig 2 — CUDA neighborhood iteration", &sssp_cuda, "__global__ void", "gpu_edgeList[edge]");
-    excerpt("Fig 3 — OpenACC promoted data clauses", &sssp_acc, "#pragma acc data copyin(g)", "copy(");
+    excerpt(
+        "Fig 2 — CUDA neighborhood iteration",
+        &sssp_cuda,
+        "__global__ void",
+        "gpu_edgeList[edge]",
+    );
+    excerpt(
+        "Fig 3 — OpenACC promoted data clauses",
+        &sssp_acc,
+        "#pragma acc data copyin(g)",
+        "copy(",
+    );
     excerpt("Fig 4 — SYCL parallel_for", &sssp_sycl, "Q.submit", "v += NUM_THREADS");
     excerpt("Fig 5 — OpenCL kernel", &sssp_ocl, "__kernel void", "get_global_id");
-    excerpt("Fig 6 — CUDA Min construct (atomicMin + flag)", &sssp_cuda, "dist_new =", "gpu_finished[0] = false");
-    excerpt("Fig 7 — OpenACC reduction clause (PageRank)", &pr_acc, "reduction(+: diff)", "pageRank_nxt[v] = val");
+    excerpt(
+        "Fig 6 — CUDA Min construct (atomicMin + flag)",
+        &sssp_cuda,
+        "dist_new =",
+        "gpu_finished[0] = false",
+    );
+    excerpt(
+        "Fig 7 — OpenACC reduction clause (PageRank)",
+        &pr_acc,
+        "reduction(+: diff)",
+        "pageRank_nxt[v] = val",
+    );
     excerpt("Fig 8 — SYCL atomic_ref reduction (TC)", &tc_sycl, "atomic_ref<", "atomic_data += 1");
     excerpt("Fig 9 — CUDA iterateInBFS host loop", &bc_cuda, "do {", "} while (!finished);");
     excerpt("Fig 10 — OpenACC Min construct", &sssp_acc, "dist_new =", "finished = false");
     excerpt("Fig 11 — SYCL fetch_min", &sssp_sycl, "dist_new =", "fetch_min");
-    excerpt("Fig 12 — fixedPoint host loop", &sssp_cuda, "while (!finished) {", "cudaMemcpyDeviceToHost);");
+    excerpt(
+        "Fig 12 — fixedPoint host loop",
+        &sssp_cuda,
+        "while (!finished) {",
+        "cudaMemcpyDeviceToHost);",
+    );
     println!("(run with --full to dump the complete generated sources)");
     Ok(())
 }

@@ -23,8 +23,9 @@ where
     let claimed: Vec<AtomicBool> = (0..n).map(|_| AtomicBool::new(false)).collect();
     // per-thread local buffers, merged afterwards (no Mutex on the hot path)
     let nthreads = threads.max(1);
-    let buckets: Vec<std::sync::Mutex<Vec<Node>>> =
-        (0..frontier.len().min(nthreads).max(1)).map(|_| std::sync::Mutex::new(Vec::new())).collect();
+    let buckets: Vec<std::sync::Mutex<Vec<Node>>> = (0..frontier.len().min(nthreads).max(1))
+        .map(|_| std::sync::Mutex::new(Vec::new()))
+        .collect();
     parallel_for(frontier.len(), nthreads, |i| {
         let u = frontier[i];
         let mut local = Vec::new();
@@ -139,8 +140,9 @@ pub fn betweenness(g: &Graph, sources: &[Node], threads: usize) -> Vec<f64> {
             }
             let next = advance(g, cur, threads, |u, _, w| {
                 let lw = &level[w as usize];
-                let fresh =
-                    lw.compare_exchange(-1, depth + 1, Ordering::Relaxed, Ordering::Relaxed).is_ok();
+                let fresh = lw
+                    .compare_exchange(-1, depth + 1, Ordering::Relaxed, Ordering::Relaxed)
+                    .is_ok();
                 if level[w as usize].load(Ordering::Relaxed) == depth + 1 {
                     atomic_add_f64(
                         &sigma[w as usize],

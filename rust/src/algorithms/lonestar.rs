@@ -125,9 +125,10 @@ mod tests {
 
     #[test]
     fn sssp_matches_dijkstra() {
-        for (i, g) in [rmat("r", 200, 800, 1), road_grid("g", 12, 12, 2), uniform_random("u", 150, 600, 3)]
-            .iter()
-            .enumerate()
+        for (i, g) in
+            [rmat("r", 200, 800, 1), road_grid("g", 12, 12, 2), uniform_random("u", 150, 600, 3)]
+                .iter()
+                .enumerate()
         {
             assert_eq!(sssp(g, 0, 3), reference::dijkstra(g, 0), "graph {i}");
         }

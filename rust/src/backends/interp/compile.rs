@@ -173,14 +173,10 @@ pub enum HostStmt {
     Return { value: CExpr },
 }
 
-/// Property slot metadata (drives `Env` allocation).
-#[derive(Clone, Debug)]
-pub struct PropMeta {
-    pub name: String,
-    pub ty: ScalarTy,
-    pub edge: bool,
-    pub param: bool,
-}
+/// Property slot metadata (drives `Env` allocation) — the shared lowering's
+/// table entry, re-exported so interpreter and codegen numbering agree by
+/// construction (see [`crate::ir::plan::PropTable`]).
+pub use crate::ir::plan::PropMeta;
 
 /// Shared scalar slot metadata.
 #[derive(Clone, Debug)]
@@ -236,8 +232,7 @@ impl Frame {
 }
 
 struct Compiler {
-    props: Interner,
-    prop_metas: Vec<PropMeta>,
+    props: crate::ir::plan::PropTable,
     scalars: Interner,
     scalar_metas: Vec<ScalarMeta>,
     sets: Interner,
@@ -255,8 +250,10 @@ struct Compiler {
 /// Compile a type-checked function to its slot-resolved form.
 pub fn compile(tf: &TypedFunction) -> Result<Program> {
     let mut cc = Compiler {
-        props: Interner::new(),
-        prop_metas: Vec::new(),
+        // Property slots come from the shared lowering table (declaration
+        // order: params first) — the same table `DevicePlan::build` uses, so
+        // interpreter and codegen numbering cannot drift.
+        props: crate::ir::plan::PropTable::build(tf),
         scalars: Interner::new(),
         scalar_metas: Vec::new(),
         sets: Interner::new(),
@@ -266,26 +263,6 @@ pub fn compile(tf: &TypedFunction) -> Result<Program> {
         edge_loop: None,
         in_bfs: false,
     };
-
-    // Property slots in declaration order (sema's prop_order), so slot
-    // numbering is deterministic across runs.
-    let param_names: std::collections::HashSet<&str> =
-        tf.func.params.iter().map(|p| p.name.as_str()).collect();
-    for name in &tf.prop_order {
-        let (inner, edge) = match (tf.node_props.get(name), tf.edge_props.get(name)) {
-            (Some(t), _) => (t, false),
-            (None, Some(t)) => (t, true),
-            (None, None) => continue,
-        };
-        let slot = cc.props.intern(name);
-        debug_assert_eq!(slot as usize, cc.prop_metas.len());
-        cc.prop_metas.push(PropMeta {
-            name: name.clone(),
-            ty: ScalarTy::of(inner),
-            edge,
-            param: param_names.contains(name.as_str()),
-        });
-    }
 
     // Parameter bindings.
     let mut params = Vec::new();
@@ -297,7 +274,7 @@ pub fn compile(tf: &TypedFunction) -> Result<Program> {
             Type::PropNode(_) | Type::PropEdge(_) => {
                 let slot = cc
                     .props
-                    .get(&p.name)
+                    .slot(&p.name)
                     .ok_or_else(|| anyhow!("property parameter `{}` not registered", p.name))?;
                 cc.bind(&p.name, Binding::Prop(slot));
             }
@@ -317,7 +294,7 @@ pub fn compile(tf: &TypedFunction) -> Result<Program> {
 
     let body = cc.host_block(&tf.func.body)?;
     Ok(Program {
-        props: cc.prop_metas,
+        props: cc.props.into_metas(),
         scalars: cc.scalar_metas,
         sets: cc.sets.names().to_vec(),
         params,
@@ -350,7 +327,7 @@ impl Compiler {
     }
 
     fn prop_slot(&self, name: &str) -> Result<u32> {
-        self.props.get(name).ok_or_else(|| anyhow!("unknown property `{name}`"))
+        self.props.slot(name).ok_or_else(|| anyhow!("unknown property `{name}`"))
     }
 
     /// Node/edge id source for `obj` in `obj.prop`.
@@ -460,7 +437,7 @@ impl Compiler {
                 if ty.is_prop() {
                     let prop = self.prop_slot(name)?;
                     self.bind(name, Binding::Prop(prop));
-                    let m = &self.prop_metas[prop as usize];
+                    let m = self.props.meta(prop);
                     HostStmt::AllocProp { prop, ty: m.ty, edge: m.edge }
                 } else {
                     let st = ScalarTy::of(ty);
@@ -826,7 +803,7 @@ impl Compiler {
             },
             _ => return None,
         };
-        let m = &self.prop_metas[prop as usize];
+        let m = self.props.meta(prop);
         (m.ty == ScalarTy::Bool && !m.edge).then_some(prop)
     }
 

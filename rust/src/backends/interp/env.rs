@@ -248,7 +248,15 @@ impl PropData {
 
 /// Shared scalar cell — atomics so device reductions (e.g. `triangle_count +=`)
 /// work from worker threads.
+///
+/// Padded to a cache line (`repr(align(64))`): hot reduction cells live next
+/// to each other in `Env`'s `Vec<ScalarCell>` (e.g. PageRank's `diff` beside
+/// `iterCount`), and without padding every atomic RMW from one worker would
+/// invalidate the line under all other workers' unrelated cells (false
+/// sharing). The scalar table is tiny — a handful of cells per program — so
+/// the memory cost is nil while Par-mode reductions stop bouncing lines.
 #[derive(Debug)]
+#[repr(align(64))]
 pub enum ScalarCell {
     I(AtomicI64),
     F(AtomicU64),
@@ -489,6 +497,13 @@ mod tests {
         assert_eq!(b.load(0), Val::B(true));
         b.atomic_reduce(0, ReduceOp::And, Val::B(false)).unwrap();
         assert_eq!(b.load(0), Val::B(false));
+    }
+
+    #[test]
+    fn scalar_cells_are_cache_line_padded() {
+        // adjacent cells in Env's scalar table must not share a cache line
+        assert_eq!(std::mem::align_of::<ScalarCell>(), 64);
+        assert_eq!(std::mem::size_of::<ScalarCell>(), 64);
     }
 
     #[test]

@@ -299,9 +299,15 @@ impl<'g> Exec<'g> {
     fn launch(&self, k: &CKernel) -> Result<()> {
         let env = &self.env;
         match &k.source {
-            DevIter::AllNodes => {
-                sweep(env, Domain::Range(env.g.num_nodes()), k.reg, k.filter.as_ref(), &k.body, k.frame_size, None)
-            }
+            DevIter::AllNodes => sweep(
+                env,
+                Domain::Range(env.g.num_nodes()),
+                k.reg,
+                k.filter.as_ref(),
+                &k.body,
+                k.frame_size,
+                None,
+            ),
             DevIter::Set(s) => sweep(
                 env,
                 Domain::List(env.set_items(*s)),
@@ -454,7 +460,15 @@ impl<'g> Exec<'g> {
             }
             let dense = frontier.len() * 4 >= n;
             if dense {
-                sweep(env, Domain::Range(n), k.reg, k.filter.as_ref(), &k.body, k.frame_size, None)?;
+                sweep(
+                    env,
+                    Domain::Range(n),
+                    k.reg,
+                    k.filter.as_ref(),
+                    &k.body,
+                    k.frame_size,
+                    None,
+                )?;
             } else {
                 // every frontier vertex passes the flag filter by
                 // construction — skip evaluating it

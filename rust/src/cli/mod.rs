@@ -109,7 +109,8 @@ fn cmd_compile(f: &Flags) -> Result<()> {
         let path = Path::new(file);
         let fns = parse_file(path)?;
         let tf = check_function(&fns[0]).map_err(|e| {
-            anyhow::anyhow!("{}", e.in_file(file).render(&std::fs::read_to_string(path).unwrap_or_default()))
+            let src = std::fs::read_to_string(path).unwrap_or_default();
+            anyhow::anyhow!("{}", e.in_file(file).render(&src))
         })?;
         let ir = lower(&tf);
         let stem = path.file_stem().and_then(|s| s.to_str()).unwrap_or("out");

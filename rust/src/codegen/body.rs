@@ -7,8 +7,10 @@
 
 use super::buf::CodeBuf;
 use super::cexpr::{emit, Style};
+use super::red_sym;
 use crate::dsl::ast::*;
 use crate::ir::analyze::as_reduction;
+use crate::ir::plan::{DevicePlan, TypeMap};
 use crate::ir::ScalarTy;
 use crate::sema::TypedFunction;
 
@@ -21,7 +23,12 @@ pub enum Target {
 }
 
 pub struct BodyCtx<'a> {
+    /// typed AST, for expression syntax (filter resolution)
     pub tf: &'a TypedFunction,
+    /// device plan: the single source of property/buffer types
+    pub plan: &'a DevicePlan,
+    /// this backend's scalar-type spelling
+    pub types: &'a TypeMap,
     pub style: Style,
     pub target: Target,
     /// inside iterateInBFS / iterateInReverse (affects neighbor iteration)
@@ -38,16 +45,11 @@ pub enum BfsDir {
 
 impl<'a> BodyCtx<'a> {
     fn prop_ty(&self, prop: &str) -> ScalarTy {
-        self.tf
-            .node_props
-            .get(prop)
-            .or_else(|| self.tf.edge_props.get(prop))
-            .map(ScalarTy::of)
-            .unwrap_or(ScalarTy::I32)
+        self.plan.prop_ty_of(prop)
     }
 
     fn c_ty(&self, ty: &Type) -> String {
-        ScalarTy::of(ty).c_name().to_string()
+        self.types.name(ScalarTy::of(ty)).to_string()
     }
 }
 
@@ -100,7 +102,9 @@ fn emit_stmt(s: &Stmt, cx: &BodyCtx<'_>, buf: &mut CodeBuf) {
             }
             buf.close("}");
         }
-        other => buf.line(&format!("/* unsupported in kernel: {:?} */", std::mem::discriminant(other))),
+        other => {
+            buf.line(&format!("/* unsupported in kernel: {:?} */", std::mem::discriminant(other)))
+        }
     }
 }
 
@@ -176,7 +180,7 @@ fn emit_reduce(target: &LValue, op: ReduceOp, value: &Expr, cx: &BodyCtx<'_>, bu
         LValue::Var(v) => {
             if cx.target == Target::OpenAcc {
                 // handled by the loop's reduction(...) clause (Fig 7)
-                buf.line(&format!("{v} = {v} {} {val};", bin_sym(op)));
+                buf.line(&format!("{v} = {v} {} {val};", red_sym(op)));
                 return;
             }
             let sty = cx.tf.vars.get(v).map(ScalarTy::of).unwrap_or(ScalarTy::I64);
@@ -210,28 +214,21 @@ fn emit_reduce(target: &LValue, op: ReduceOp, value: &Expr, cx: &BodyCtx<'_>, bu
             // Fig 8's atomic_ref idiom
             buf.line(&format!(
                 "atomic_ref<{t}, memory_order::relaxed, memory_scope::device, access::address_space::global_space> atomic_data({loc});",
-                t = ty.c_name()
+                t = cx.types.name(ty)
             ));
             match op {
                 ReduceOp::Add | ReduceOp::Count => buf.line(&format!("atomic_data += {val};")),
-                ReduceOp::Mul => buf.line(&format!("atomic_data = atomic_data * {val}; // CAS loop")),
+                ReduceOp::Mul => {
+                    buf.line(&format!("atomic_data = atomic_data * {val}; // CAS loop"))
+                }
                 ReduceOp::And => buf.line(&format!("atomic_data &= {val};")),
                 ReduceOp::Or => buf.line(&format!("atomic_data |= {val};")),
             }
         }
         Target::OpenAcc => {
             buf.line("#pragma acc atomic update");
-            buf.line(&format!("{loc} = {loc} {} {val};", bin_sym(op)));
+            buf.line(&format!("{loc} = {loc} {} {val};", red_sym(op)));
         }
-    }
-}
-
-fn bin_sym(op: ReduceOp) -> &'static str {
-    match op {
-        ReduceOp::Add | ReduceOp::Count => "+",
-        ReduceOp::Mul => "*",
-        ReduceOp::And => "&&",
-        ReduceOp::Or => "||",
     }
 }
 
@@ -250,7 +247,7 @@ fn emit_min_max(
         return;
     };
     let loc = format!("{}[{}]", (st.prop_array)(prop), (st.scalar)(obj));
-    let ty = cx.prop_ty(prop).c_name();
+    let ty = cx.types.name(cx.prop_ty(prop));
     let cmp = if kind == MinMax::Min { ">" } else { "<" };
     buf.line(&format!("{ty} {prop}_new = {};", emit(compare, st)));
     buf.open(&format!("if ({loc} {cmp} {prop}_new) {{"));

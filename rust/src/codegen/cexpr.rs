@@ -150,13 +150,15 @@ mod tests {
 
     #[test]
     fn cuda_prop_naming() {
-        let e = first_expr("function f(Graph g, propNode<int> dist, node v) { int x = v.dist + 3; }");
+        let e =
+            first_expr("function f(Graph g, propNode<int> dist, node v) { int x = v.dist + 3; }");
         assert_eq!(emit(&e, &cuda_style()), "gpu_dist[v] + 3");
     }
 
     #[test]
     fn openacc_prop_naming() {
-        let e = first_expr("function f(Graph g, propNode<int> dist, node v) { int x = v.dist + 3; }");
+        let e =
+            first_expr("function f(Graph g, propNode<int> dist, node v) { int x = v.dist + 3; }");
         assert_eq!(emit(&e, &openacc_style()), "dist[v] + 3");
     }
 

@@ -16,7 +16,8 @@
 //! the honest limitation documented in DESIGN.md.
 
 use crate::dsl::ast::*;
-use crate::ir::{IrProgram, KernelKind};
+use crate::ir::plan::{DevicePlan, TypeMap};
+use crate::ir::IrProgram;
 use crate::util::json::Json;
 use anyhow::{bail, Result};
 
@@ -29,14 +30,32 @@ pub struct JaxProgram {
 }
 
 pub fn generate(ir: &IrProgram) -> Result<JaxProgram> {
-    let shape = recognize(ir)?;
+    generate_with(ir, &DevicePlan::build(ir))
+}
+
+/// Generate with a pre-built plan ([`super::generate`] lowers once for all
+/// backends). Buffer bindings (state names, dtypes, outputs) come from the
+/// same slot tables the text backends render — see `ir/plan.rs`.
+pub(crate) fn generate_with(ir: &IrProgram, plan: &DevicePlan) -> Result<JaxProgram> {
+    let shape = recognize(ir, plan)?;
     Ok(match shape {
-        Shape::Relax { dist, modified, weighted } => relax_program(ir, &dist, &modified, weighted),
-        Shape::Rank { rank, diff } => rank_program(ir, &rank, &diff),
-        Shape::Brandes { bc, sigma, delta } => brandes_program(ir, &bc, &sigma, &delta),
+        Shape::Relax { dist, modified, weighted } => {
+            relax_program(ir, plan, &dist, &modified, weighted)
+        }
+        Shape::Rank { rank, diff } => rank_program(ir, plan, &rank, &diff),
+        Shape::Brandes { bc, sigma, delta } => brandes_program(ir, plan, &bc, &sigma, &delta),
         Shape::Triangles { counter } => triangles_program(ir, &counter),
-        Shape::BfsLevels { level } => bfs_program(ir, &level),
+        Shape::BfsLevels { level } => bfs_program(ir, plan, &level),
     })
+}
+
+/// numpy dtype of a plan buffer, with a fallback for implicit buffers (e.g.
+/// BC's `level`, which no DSL property declares).
+fn np_ty(plan: &DevicePlan, name: &str, default: &'static str) -> &'static str {
+    match plan.props.slot(name) {
+        Some(s) => TypeMap::NUMPY.name(plan.props.meta(s).ty),
+        None => default,
+    }
 }
 
 enum Shape {
@@ -52,35 +71,31 @@ enum Shape {
     BfsLevels { level: String },
 }
 
-fn recognize(ir: &IrProgram) -> Result<Shape> {
+fn recognize(ir: &IrProgram, plan: &DevicePlan) -> Result<Shape> {
     let tf = &ir.tf;
-    let has_bfs = ir.kernels.iter().any(|k| k.kind == KernelKind::BfsForward);
-    let has_rev = ir.kernels.iter().any(|k| k.kind == KernelKind::BfsReverse);
-    if has_bfs && has_rev {
-        // Brandes: float props sigma/delta + an output prop
-        let out = ir.transfer.outputs.first().cloned().unwrap_or_else(|| "BC".into());
-        return Ok(Shape::Brandes { bc: out, sigma: "sigma".into(), delta: "delta".into() });
-    }
-    if has_bfs {
-        let out = ir.transfer.outputs.first().cloned().unwrap_or_else(|| "level".into());
-        return Ok(Shape::BfsLevels { level: out });
+    if let Some(b) = plan.bfs_loops.first() {
+        let out = plan.output_names().first().map(|s| s.to_string());
+        if b.rev.is_some() {
+            // Brandes: float props sigma/delta + an output prop
+            return Ok(Shape::Brandes {
+                bc: out.unwrap_or_else(|| "BC".into()),
+                sigma: "sigma".into(),
+                delta: "delta".into(),
+            });
+        }
+        return Ok(Shape::BfsLevels { level: out.unwrap_or_else(|| "level".into()) });
     }
     // fixedPoint + MinMax ⇒ relaxation
-    let has_fp = !ir.transfer.or_flag_props.is_empty();
+    let or_flag = plan.fixed_points.iter().find(|f| f.flag.is_some());
     let has_min = contains_minmax(&tf.func.body);
-    if has_fp && has_min {
-        let dist = ir
-            .transfer
-            .outputs
+    if let (Some(fp), true) = (or_flag, has_min) {
+        let dist = plan
+            .output_names()
             .first()
-            .cloned()
+            .map(|s| s.to_string())
             .unwrap_or_else(|| "dist".into());
         let weighted = !tf.edge_props.is_empty();
-        return Ok(Shape::Relax {
-            dist,
-            modified: ir.transfer.or_flag_props[0].clone(),
-            weighted,
-        });
+        return Ok(Shape::Relax { dist, modified: fp.flag_name.clone(), weighted });
     }
     // do-while + pull + scalar float reduction ⇒ rank iteration
     let pulls = ir.kernels.iter().any(|k| k.uses.uses_in_edges);
@@ -93,9 +108,13 @@ fn recognize(ir: &IrProgram) -> Result<Shape> {
                 && matches!(tf.vars.get(r), Some(Type::Float) | Some(Type::Double))
         })
         .map(|(r, _)| r.clone());
-    if pulls && float_red.is_some() {
-        let rank = ir.transfer.outputs.first().cloned().unwrap_or_else(|| "pageRank".into());
-        return Ok(Shape::Rank { rank, diff: float_red.unwrap() });
+    if let (true, Some(diff)) = (pulls, float_red) {
+        let rank = plan
+            .output_names()
+            .first()
+            .map(|s| s.to_string())
+            .unwrap_or_else(|| "pageRank".into());
+        return Ok(Shape::Rank { rank, diff });
     }
     // count reduction + is_an_edge ⇒ triangles
     let counter = ir
@@ -139,7 +158,13 @@ fn header(ir: &IrProgram, algo: &str) -> String {
     )
 }
 
-fn relax_program(ir: &IrProgram, dist: &str, modified: &str, weighted: bool) -> JaxProgram {
+fn relax_program(
+    ir: &IrProgram,
+    plan: &DevicePlan,
+    dist: &str,
+    modified: &str,
+    weighted: bool,
+) -> JaxProgram {
     let algo = if weighted { "sssp" } else { "cc" };
     let init = if weighted { "INF" } else { "iota" };
     let mut py = header(ir, algo);
@@ -165,7 +190,7 @@ def {algo}_step({dist}, idx, wgt, mask):
         ("function", Json::Str(ir.tf.func.name.clone())),
         ("template", Json::Str("fixedpoint-relax".into())),
         ("artifact", Json::Str(format!("{algo}_step"))),
-        ("state", Json::obj(vec![(dist, Json::Str("int32".into()))])),
+        ("state", Json::obj(vec![(dist, Json::Str(np_ty(plan, dist, "int32").into()))])),
         ("init", Json::Str(init.into())),
         ("weighted", Json::Bool(weighted)),
         ("outputs", Json::Arr(vec![Json::Str(dist.into())])),
@@ -175,7 +200,7 @@ def {algo}_step({dist}, idx, wgt, mask):
     JaxProgram { algo: algo.into(), python: py, plan }
 }
 
-fn rank_program(ir: &IrProgram, rank: &str, diff: &str) -> JaxProgram {
+fn rank_program(ir: &IrProgram, plan: &DevicePlan, rank: &str, diff: &str) -> JaxProgram {
     let mut py = header(ir, "pr");
     py.push_str(&format!(
         r#"
@@ -197,7 +222,7 @@ def pr_step({rank}, idx, mask, outdeg, delta, num_nodes):
         ("function", Json::Str(ir.tf.func.name.clone())),
         ("template", Json::Str("dowhile-rank".into())),
         ("artifact", Json::Str("pr_step".into())),
-        ("state", Json::obj(vec![(rank, Json::Str("float32".into()))])),
+        ("state", Json::obj(vec![(rank, Json::Str(np_ty(plan, rank, "float32").into()))])),
         ("outputs", Json::Arr(vec![Json::Str(rank.into())])),
         ("ell", Json::Str("in".into())),
         ("scalars", Json::Arr(vec![Json::Str("delta".into()), Json::Str("num_nodes".into())])),
@@ -206,7 +231,13 @@ def pr_step({rank}, idx, mask, outdeg, delta, num_nodes):
     JaxProgram { algo: "pr".into(), python: py, plan }
 }
 
-fn brandes_program(ir: &IrProgram, bc: &str, sigma: &str, delta: &str) -> JaxProgram {
+fn brandes_program(
+    ir: &IrProgram,
+    plan: &DevicePlan,
+    bc: &str,
+    sigma: &str,
+    delta: &str,
+) -> JaxProgram {
     let mut py = header(ir, "bc");
     py.push_str(&format!(
         r#"
@@ -232,10 +263,10 @@ def bc_bwd_step(level, {sigma}, {delta}, {bc}, depth, src, idx, mask):
         (
             "state",
             Json::obj(vec![
-                ("level", Json::Str("int32".into())),
-                (sigma, Json::Str("float32".into())),
-                (delta, Json::Str("float32".into())),
-                (bc, Json::Str("float32".into())),
+                ("level", Json::Str(np_ty(plan, "level", "int32").into())),
+                (sigma, Json::Str(np_ty(plan, sigma, "float32").into())),
+                (delta, Json::Str(np_ty(plan, delta, "float32").into())),
+                (bc, Json::Str(np_ty(plan, bc, "float32").into())),
             ]),
         ),
         ("outputs", Json::Arr(vec![Json::Str(bc.into())])),
@@ -270,7 +301,7 @@ def tc_step(adj):
     JaxProgram { algo: "tc".into(), python: py, plan }
 }
 
-fn bfs_program(ir: &IrProgram, level: &str) -> JaxProgram {
+fn bfs_program(ir: &IrProgram, plan: &DevicePlan, level: &str) -> JaxProgram {
     let mut py = header(ir, "bfs");
     py.push_str(&format!(
         r#"
@@ -289,7 +320,7 @@ def bfs_step({level}, depth, idx, mask):
         ("function", Json::Str(ir.tf.func.name.clone())),
         ("template", Json::Str("bfs-levels".into())),
         ("artifact", Json::Str("bfs_step".into())),
-        ("state", Json::obj(vec![(level, Json::Str("int32".into()))])),
+        ("state", Json::obj(vec![(level, Json::Str(np_ty(plan, level, "int32").into()))])),
         ("outputs", Json::Arr(vec![Json::Str(level.into())])),
         ("ell", Json::Str("in".into())),
     ]);

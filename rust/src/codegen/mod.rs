@@ -1,5 +1,10 @@
 //! Code generators: the paper's four accelerator backends (CUDA, OpenCL,
 //! SYCL, OpenACC — §3) plus the executable JAX backend (DESIGN.md §1).
+//!
+//! All five are renderers over the backend-neutral device plan
+//! ([`crate::ir::plan::DevicePlan`]): buffers, kernel parameter lists,
+//! transfer steps, and host-loop skeletons are resolved once there; these
+//! modules contribute syntax only.
 
 pub mod body;
 pub mod buf;
@@ -10,23 +15,35 @@ pub mod openacc;
 pub mod opencl;
 pub mod sycl;
 
-use crate::dsl::ast::Expr;
+use crate::dsl::ast::{Expr, ReduceOp};
 use crate::ir::IrProgram;
 use crate::sema::TypedFunction;
 
-/// Textual backends by name.
+/// Textual backends by name. The device plan is lowered once and shared by
+/// whichever renderer is selected.
 pub fn generate(backend: &str, ir: &IrProgram) -> anyhow::Result<String> {
+    let plan = crate::ir::plan::DevicePlan::build(ir);
     Ok(match backend {
-        "cuda" => cuda::generate(ir),
-        "opencl" => opencl::generate(ir),
-        "sycl" => sycl::generate(ir),
-        "openacc" => openacc::generate(ir),
-        "jax" => jax::generate(ir)?.python,
+        "cuda" => cuda::generate_with(ir, &plan),
+        "opencl" => opencl::generate_with(ir, &plan),
+        "sycl" => sycl::generate_with(ir, &plan),
+        "openacc" => openacc::generate_with(ir, &plan),
+        "jax" => jax::generate_with(ir, &plan)?.python,
         other => anyhow::bail!("unknown backend `{other}` (cuda|opencl|sycl|openacc|jax)"),
     })
 }
 
 pub const TEXT_BACKENDS: [&str; 4] = ["cuda", "opencl", "sycl", "openacc"];
+
+/// C operator for a host-side scalar reduction (shared by all renderers).
+pub(crate) fn red_sym(op: ReduceOp) -> &'static str {
+    match op {
+        ReduceOp::Add | ReduceOp::Count => "+",
+        ReduceOp::Mul => "*",
+        ReduceOp::And => "&&",
+        ReduceOp::Or => "||",
+    }
+}
 
 /// Resolve bare property names in filter expressions to explicit
 /// `loopVar.prop` accesses (the StarPlat `filter(modified == True)` idiom).
@@ -52,24 +69,28 @@ pub fn resolve_filter(e: &Expr, var: &str, tf: &TypedFunction) -> Expr {
     }
 }
 
-/// Normalize boolean comparisons for C output: `x == True` → `x`,
-/// `x == False` → `!x` (cleaner generated code, as in the paper's figures).
+/// Normalize boolean comparisons for C output, with the literal on either
+/// side: `x == True` / `True == x` → `x`, `x == False` / `False == x` → `!x`
+/// (cleaner generated code, as in the paper's figures). `!=` flips the sense.
 pub fn simplify_bool_cmp(e: &Expr) -> Expr {
     use crate::dsl::ast::{BinOp, UnOp};
     if let Expr::Binary { op, lhs, rhs } = e {
-        if let Expr::BoolLit(b) = **rhs {
-            let want = match op {
-                BinOp::Eq => Some(b),
-                BinOp::Ne => Some(!b),
-                _ => None,
+        let (lit, other) = match (&**lhs, &**rhs) {
+            (_, Expr::BoolLit(b)) => (Some(*b), lhs),
+            (Expr::BoolLit(b), _) => (Some(*b), rhs),
+            _ => (None, lhs),
+        };
+        let want = match (op, lit) {
+            (BinOp::Eq, Some(b)) => Some(b),
+            (BinOp::Ne, Some(b)) => Some(!b),
+            _ => None,
+        };
+        if let Some(w) = want {
+            return if w {
+                (**other).clone()
+            } else {
+                Expr::Unary { op: UnOp::Not, expr: other.clone() }
             };
-            if let Some(w) = want {
-                return if w {
-                    (**lhs).clone()
-                } else {
-                    Expr::Unary { op: UnOp::Not, expr: lhs.clone() }
-                };
-            }
         }
     }
     e.clone()
@@ -99,5 +120,46 @@ mod tests {
         let r = resolve_filter(&e, "v", &tf);
         let s = simplify_bool_cmp(&r);
         assert_eq!(s, Expr::Prop { obj: "v".into(), prop: "modified".into() });
+    }
+
+    fn var(name: &str) -> Box<Expr> {
+        Box::new(Expr::Var(name.into()))
+    }
+
+    fn lit(b: bool) -> Box<Expr> {
+        Box::new(Expr::BoolLit(b))
+    }
+
+    fn cmp(op: BinOp, lhs: Box<Expr>, rhs: Box<Expr>) -> Expr {
+        Expr::Binary { op, lhs, rhs }
+    }
+
+    fn not(e: Box<Expr>) -> Expr {
+        Expr::Unary { op: crate::dsl::ast::UnOp::Not, expr: e }
+    }
+
+    #[test]
+    fn bool_cmp_literal_on_the_right() {
+        assert_eq!(simplify_bool_cmp(&cmp(BinOp::Eq, var("x"), lit(true))), *var("x"));
+        assert_eq!(simplify_bool_cmp(&cmp(BinOp::Eq, var("x"), lit(false))), not(var("x")));
+        assert_eq!(simplify_bool_cmp(&cmp(BinOp::Ne, var("x"), lit(false))), *var("x"));
+        assert_eq!(simplify_bool_cmp(&cmp(BinOp::Ne, var("x"), lit(true))), not(var("x")));
+    }
+
+    #[test]
+    fn bool_cmp_literal_on_the_left() {
+        assert_eq!(simplify_bool_cmp(&cmp(BinOp::Eq, lit(true), var("x"))), *var("x"));
+        assert_eq!(simplify_bool_cmp(&cmp(BinOp::Eq, lit(false), var("x"))), not(var("x")));
+        assert_eq!(simplify_bool_cmp(&cmp(BinOp::Ne, lit(false), var("x"))), *var("x"));
+        assert_eq!(simplify_bool_cmp(&cmp(BinOp::Ne, lit(true), var("x"))), not(var("x")));
+    }
+
+    #[test]
+    fn non_bool_comparisons_are_untouched() {
+        let e = cmp(BinOp::Lt, var("x"), Box::new(Expr::IntLit(3)));
+        assert_eq!(simplify_bool_cmp(&e), e);
+        // Eq without a bool literal on either side stays as written
+        let e = cmp(BinOp::Eq, var("x"), var("y"));
+        assert_eq!(simplify_bool_cmp(&e), e);
     }
 }

@@ -3,58 +3,88 @@
 //! Like CUDA, a split generation — `__kernel` functions plus host
 //! boilerplate (`clCreateBuffer` / `clSetKernelArg` / NDRange launches).
 //! Float/double atomics are simulated with `atomic_cmpxchg` (§3.3), and
-//! booleans are `int` (OpenCL C has no device-side bool arrays).
+//! booleans are `int` — resolved by [`TypeMap::OPENCL`] in the device plan,
+//! not here. A thin renderer over [`DevicePlan`]: buffers, parameter lists,
+//! kernel numbering, and host-loop skeletons all come from the plan.
 
 use super::body::{emit_block, BfsDir, BodyCtx, Target};
 use super::buf::CodeBuf;
 use super::cexpr::{emit, opencl_style};
+use super::red_sym;
 use crate::dsl::ast::*;
-use crate::ir::{IrProgram, Kernel, ScalarTy};
+use crate::ir::plan::{DevicePlan, KernelParam, KernelPlan, PlanCursor, TypeMap};
+use crate::ir::{IrProgram, ScalarTy};
+use crate::sema::TypedFunction;
+
+/// Device-side types (bool → int, 64-bit → `long`).
+const DEV: &TypeMap = &TypeMap::OPENCL;
+/// Host halves are C++: plain C types.
+const HOST: &TypeMap = &TypeMap::C;
 
 pub fn generate(ir: &IrProgram) -> String {
-    let mut g = Gen { ir, kernels: CodeBuf::new(), host: CodeBuf::new(), kidx: 0 };
+    generate_with(ir, &DevicePlan::build(ir))
+}
+
+/// Render with a pre-built plan ([`super::generate`] lowers once for all
+/// backends).
+pub(crate) fn generate_with(ir: &IrProgram, plan: &DevicePlan) -> String {
+    let mut g = Gen {
+        tf: &ir.tf,
+        plan,
+        cursor: PlanCursor::default(),
+        kernels: CodeBuf::new(),
+        host: CodeBuf::new(),
+    };
     g.run()
 }
 
 struct Gen<'a> {
-    ir: &'a IrProgram,
+    tf: &'a TypedFunction,
+    plan: &'a DevicePlan,
+    cursor: PlanCursor,
     kernels: CodeBuf,
     host: CodeBuf,
-    kidx: usize,
 }
 
 impl<'a> Gen<'a> {
     fn prop_c_ty(&self, p: &str) -> &'static str {
-        let t = self
-            .ir
-            .tf
-            .node_props
-            .get(p)
-            .or_else(|| self.ir.tf.edge_props.get(p))
-            .map(ScalarTy::of)
-            .unwrap_or(ScalarTy::I32);
-        match t {
-            ScalarTy::Bool => "int", // OpenCL device bools are ints
-            other => other.c_name(),
+        self.plan.c_ty_of(p, DEV)
+    }
+
+    /// `__kernel` signature entry for one plan-ordered parameter.
+    fn param_decl(&self, p: &KernelParam) -> String {
+        match p {
+            KernelParam::NumNodes => "int V".to_string(),
+            KernelParam::Graph(a) => format!("__global int* {}", a.device_name()),
+            KernelParam::Prop(s) => {
+                let m = self.plan.meta(*s);
+                format!("__global {}* gpu_{}", DEV.name(m.ty), m.name)
+            }
+            KernelParam::ReductionCell { name, ty } => {
+                format!("__global {}* d_{name}", DEV.name(*ty))
+            }
+            KernelParam::Scalar { name, ty } => format!("{} {name}", DEV.name(*ty)),
+            KernelParam::OrFlag => "__global int* gpu_finished".to_string(),
+        }
+    }
+
+    fn body_ctx(&self, bfs: Option<BfsDir>, or_flag: Option<&str>) -> BodyCtx<'a> {
+        BodyCtx {
+            tf: self.tf,
+            plan: self.plan,
+            types: DEV,
+            style: opencl_style(),
+            target: Target::OpenCl,
+            bfs,
+            or_flag: or_flag.map(str::to_string),
         }
     }
 
     fn run(&mut self) -> String {
-        let f = self.ir.tf.func.clone();
+        let f = self.tf.func.clone(); // detach from `self` for the &mut walk
         self.kernels.line("// ---- kernels.cl ----");
         self.kernels.line("");
-        let params: Vec<String> = f
-            .params
-            .iter()
-            .map(|p| match &p.ty {
-                Type::Graph => format!("graph& {}", p.name),
-                Type::PropNode(t) | Type::PropEdge(t) => {
-                    format!("{}* {}", ScalarTy::of(t).c_name(), p.name)
-                }
-                Type::SetN(_) => format!("std::set<int>& {}", p.name),
-                t => format!("{} {}", ScalarTy::of(t).c_name(), p.name),
-            })
-            .collect();
+        let params = self.plan.host_signature(HOST);
         self.host.line("// ---- host.cpp ----");
         self.host.line("#include <CL/cl.h>");
         self.host.line("#include \"libstarplat_ocl.h\"");
@@ -76,10 +106,13 @@ impl<'a> Gen<'a> {
         self.host.line(
             "clEnqueueWriteBuffer(command_queue, gpu_edgeList, CL_TRUE, 0, sizeof(int)*E, g.edgeList, 0, NULL, NULL);",
         );
-        for p in &self.ir.transfer.device_resident_props.clone() {
-            let ty = self.prop_c_ty(p);
+        for &slot in &self.plan.device_resident {
+            let m = self.plan.meta(slot);
+            let ty = DEV.name(m.ty);
+            let len = m.len_sym();
             self.host.line(&format!(
-                "cl_mem gpu_{p} = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof({ty})*V, NULL, &status);"
+                "cl_mem gpu_{} = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof({ty})*{len}, NULL, &status);",
+                m.name
             ));
         }
         self.host.line(
@@ -90,14 +123,23 @@ impl<'a> Gen<'a> {
         self.host.line("");
         self.host_block(&f.body, None);
         self.host.line("");
-        for out in &self.ir.transfer.outputs.clone() {
-            let ty = self.prop_c_ty(out);
+        for &slot in &self.plan.outputs {
+            let m = self.plan.meta(slot);
+            let ty = DEV.name(m.ty);
+            let len = m.len_sym();
             self.host.line(&format!(
-                "clEnqueueReadBuffer(command_queue, gpu_{out}, CL_TRUE, 0, sizeof({ty})*V, {out}, 0, NULL, NULL);"
+                "clEnqueueReadBuffer(command_queue, gpu_{n}, CL_TRUE, 0, sizeof({ty})*{len}, {n}, 0, NULL, NULL);",
+                n = m.name
             ));
         }
         self.host.close("}");
-        let mut out = String::from("// Generated by starplat-rs — OpenCL backend\n\n");
+        let mut out = String::from("// Generated by starplat-rs — OpenCL backend\n");
+        for l in self.plan.manifest() {
+            out.push_str("// ");
+            out.push_str(&l);
+            out.push('\n');
+        }
+        out.push('\n');
         out.push_str(&std::mem::take(&mut self.kernels).finish());
         out.push('\n');
         out.push_str(&std::mem::take(&mut self.host).finish());
@@ -115,9 +157,8 @@ impl<'a> Gen<'a> {
             "cl_kernel {kernel_name}_k = clCreateKernel(program, \"{kernel_name}\", &status);"
         ));
         for (i, a) in args.iter().enumerate() {
-            self.host.line(&format!(
-                "clSetKernelArg({kernel_name}_k, {i}, sizeof({a}), (void*)&{a});"
-            ));
+            self.host
+                .line(&format!("clSetKernelArg({kernel_name}_k, {i}, sizeof({a}), (void*)&{a});"));
         }
         self.host.line(&format!(
             "clEnqueueNDRangeKernel(command_queue, {kernel_name}_k, 1, NULL, &global_size, &local_size, 0, NULL, NULL);"
@@ -125,40 +166,12 @@ impl<'a> Gen<'a> {
         self.host.line("clFinish(command_queue);");
     }
 
-    fn kernel_header(&mut self, name: &str, k: &Kernel, or_flag: bool) -> Vec<String> {
-        let mut sig: Vec<String> =
-            vec!["int V".into(), "__global int* gpu_OA".into(), "__global int* gpu_edgeList".into()];
-        let mut args: Vec<String> = vec!["V".into(), "gpu_OA".into(), "gpu_edgeList".into()];
-        if k.uses.uses_in_edges {
-            sig.push("__global int* gpu_rev_OA".into());
-            sig.push("__global int* gpu_srcList".into());
-            args.push("gpu_rev_OA".into());
-            args.push("gpu_srcList".into());
-        }
-        let mut props: Vec<String> = k
-            .uses
-            .props_read
-            .union(&k.uses.props_written)
-            .filter(|p| {
-                self.ir.tf.node_props.contains_key(*p) || self.ir.tf.edge_props.contains_key(*p)
-            })
-            .cloned()
-            .collect();
-        props.sort();
-        props.dedup();
-        for p in &props {
-            sig.push(format!("__global {}* gpu_{p}", self.prop_c_ty(p)));
-            args.push(format!("gpu_{p}"));
-        }
-        for (r, _) in &k.uses.reductions {
-            sig.push(format!("__global long* d_{r}"));
-            args.push(format!("d_{r}"));
-        }
-        if or_flag {
-            sig.push("__global int* gpu_finished".into());
-            args.push("gpu_finished".into());
-        }
-        self.kernels.open(&format!("__kernel void {name}({}) {{", sig.join(", ")));
+    /// Open the `__kernel` header from the plan's parameter list; returns the
+    /// launch-site argument names.
+    fn kernel_header(&mut self, k: &KernelPlan, params: &[KernelParam]) -> Vec<String> {
+        let sig: Vec<String> = params.iter().map(|p| self.param_decl(p)).collect();
+        let args: Vec<String> = params.iter().map(|p| self.plan.launch_arg(p)).collect();
+        self.kernels.open(&format!("__kernel void {}({}) {{", k.name, sig.join(", ")));
         args
     }
 
@@ -172,15 +185,17 @@ impl<'a> Gen<'a> {
                 match init {
                     Some(e) => self.host.line(&format!(
                         "{} {} = {};",
-                        ScalarTy::of(ty).c_name(),
+                        HOST.name(ScalarTy::of(ty)),
                         name,
                         emit(e, &st)
                     )),
-                    None => self.host.line(&format!("{} {};", ScalarTy::of(ty).c_name(), name)),
+                    None => {
+                        self.host.line(&format!("{} {};", HOST.name(ScalarTy::of(ty)), name))
+                    }
                 }
             }
             Stmt::AttachNodeProperty { inits, .. } => {
-                self.kidx += 1;
+                self.cursor.next_kernel(self.plan);
                 for (p, e) in inits {
                     self.host.line(&format!(
                         "initKernelCL(command_queue, program, gpu_{p}, V, ({}){});",
@@ -190,31 +205,40 @@ impl<'a> Gen<'a> {
                 }
             }
             Stmt::For { parallel: true, iter, body, .. } => {
-                let k = self.ir.kernels[self.kidx].clone();
-                self.kidx += 1;
-                let name = format!("{}_kernel_{}", self.ir.tf.func.name, k.id);
-                let args = self.kernel_header(&name, &k, or_flag.is_some());
+                let k = self.cursor.next_kernel(self.plan);
+                for (r, _, ty) in &k.reductions {
+                    let t = DEV.name(*ty);
+                    self.host.line(&format!(
+                        "cl_mem d_{r} = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof({t}), NULL, &status);"
+                    ));
+                    self.host.line(&format!(
+                        "clEnqueueWriteBuffer(command_queue, d_{r}, CL_TRUE, 0, sizeof({t}), &{r}, 0, NULL, NULL);"
+                    ));
+                }
+                let params = k.params(or_flag.is_some());
+                let args = self.kernel_header(k, &params);
                 self.kernels.line(&format!("unsigned {v} = get_global_id(0);", v = iter.var));
                 self.kernels.line(&format!("if ({} >= V) return;", iter.var));
                 if let Some(f) = &iter.filter {
                     let fe = super::simplify_bool_cmp(&super::resolve_filter(
                         f,
                         &iter.var,
-                        &self.ir.tf,
+                        self.tf,
                     ));
                     self.kernels.line(&format!("if (!({})) return;", emit(&fe, &st)));
                 }
-                let cx = BodyCtx {
-                    tf: &self.ir.tf,
-                    style: opencl_style(),
-                    target: Target::OpenCl,
-                    bfs: None,
-                    or_flag: or_flag.map(String::from),
-                };
+                let cx = self.body_ctx(None, or_flag);
                 emit_block(body, &cx, &mut self.kernels);
                 self.kernels.close("}");
                 self.kernels.line("");
-                self.launch(&name, &args);
+                self.launch(&k.name, &args);
+                for (r, _, ty) in &k.reductions {
+                    let t = DEV.name(*ty);
+                    self.host.line(&format!(
+                        "clEnqueueReadBuffer(command_queue, d_{r}, CL_TRUE, 0, sizeof({t}), &{r}, 0, NULL, NULL);"
+                    ));
+                    self.host.line(&format!("clReleaseMemObject(d_{r});"));
+                }
             }
             Stmt::For { parallel: false, iter, body, .. } => {
                 let set = match &iter.source {
@@ -228,80 +252,104 @@ impl<'a> Gen<'a> {
             Stmt::IterateBFS { var, from, body, reverse, .. } => {
                 // same structure as CUDA (§3.4: "The OpenCL backend code is
                 // similar to CUDA"), kernel emitted with OpenCL decorations.
-                let fwd = self.ir.kernels[self.kidx].clone();
-                self.kidx += 1;
-                if reverse.is_some() {
-                    self.kidx += 1;
+                let (b, fwd, rev) = self.cursor.next_bfs(self.plan);
+                // the BFS skeleton binds level, depth, and the finished flag;
+                // the rest of the signature is the plan's parameter list. A
+                // declared level property keeps its plan type.
+                let lt = b.level.map(|s| self.plan.c_ty(s, DEV)).unwrap_or("int");
+                let params = fwd.bfs_params(b.level);
+                let mut sig: Vec<String> = params.iter().map(|p| self.param_decl(p)).collect();
+                let mut args: Vec<String> =
+                    params.iter().map(|p| self.plan.launch_arg(p)).collect();
+                for (decl, arg) in [
+                    (format!("__global {lt}* gpu_level"), "gpu_level"),
+                    ("__global int* d_hops_from_source".to_string(), "d_hops_from_source"),
+                    ("__global int* gpu_finished".to_string(), "gpu_finished"),
+                ] {
+                    sig.push(decl);
+                    args.push(arg.to_string());
                 }
-                let name = format!("{}_bfs_kernel_{}", self.ir.tf.func.name, fwd.id);
-                let mut args = self.kernel_header(&name, &fwd, true);
-                self.kernels.line("// d_hops_from_source passed as an extra arg");
+                self.kernels
+                    .open(&format!("__kernel void {}({}) {{", fwd.name, sig.join(", ")));
                 self.kernels.line(&format!("unsigned {var} = get_global_id(0);"));
                 self.kernels.line(&format!("if ({var} >= V) return;"));
+                self.kernels.open(&format!("if (gpu_level[{var}] == *d_hops_from_source) {{"));
                 self.kernels
-                    .open(&format!("if (gpu_level[{var}] == *d_hops_from_source) {{"));
-                self.kernels.open(&format!(
-                    "for (int i = gpu_OA[{var}]; i < gpu_OA[{var}+1]; ++i) {{"
-                ));
+                    .open(&format!("for (int i = gpu_OA[{var}]; i < gpu_OA[{var}+1]; ++i) {{"));
                 self.kernels.line("int nbr = gpu_edgeList[i];");
                 self.kernels.open("if (gpu_level[nbr] == -1) {");
                 self.kernels.line("gpu_level[nbr] = *d_hops_from_source + 1;");
                 self.kernels.line("gpu_finished[0] = 0;");
                 self.kernels.close("}");
                 self.kernels.close("}");
-                let cx = BodyCtx {
-                    tf: &self.ir.tf,
-                    style: opencl_style(),
-                    target: Target::OpenCl,
-                    bfs: Some(BfsDir::Forward),
-                    or_flag: None,
-                };
+                let cx = self.body_ctx(Some(BfsDir::Forward), None);
                 emit_block(body, &cx, &mut self.kernels);
                 self.kernels.close("}");
                 self.kernels.close("}");
                 self.kernels.line("");
                 self.host.line("// iterateInBFS host loop (similar to CUDA, §3.4)");
+                if b.level.is_none() {
+                    self.host.line(
+                        "cl_mem gpu_level = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof(int)*V, NULL, &status);",
+                    );
+                }
+                self.host.line(
+                    "cl_mem d_hops_from_source = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof(int), NULL, &status);",
+                );
+                self.host.line("initKernelCL(command_queue, program, gpu_level, V, -1);");
                 self.host.line(&format!("setIndexCL(command_queue, gpu_level, {from}, 0);"));
                 self.host.line("int hops_from_source = 0; int finished;");
+                self.host.line(
+                    "clEnqueueWriteBuffer(command_queue, d_hops_from_source, CL_TRUE, 0, sizeof(int), &hops_from_source, 0, NULL, NULL);",
+                );
                 self.host.open("do {");
                 self.host.line("finished = 1;");
                 self.host.line(
                     "clEnqueueWriteBuffer(command_queue, gpu_finished, CL_TRUE, 0, sizeof(int), &finished, 0, NULL, NULL);",
                 );
-                args.push("d_hops_from_source".into());
-                self.launch(&name, &args);
+                self.launch(&fwd.name, &args);
                 self.host.line("++hops_from_source;");
+                self.host.line(
+                    "clEnqueueWriteBuffer(command_queue, d_hops_from_source, CL_TRUE, 0, sizeof(int), &hops_from_source, 0, NULL, NULL);",
+                );
                 self.host.line(
                     "clEnqueueReadBuffer(command_queue, gpu_finished, CL_TRUE, 0, sizeof(int), &finished, 0, NULL, NULL);",
                 );
                 self.host.close("} while (!finished);");
-                if let Some((_, rbody)) = reverse {
+                if let (Some(rk), Some((_, rbody))) = (rev, reverse) {
                     self.host.line("// iterateInReverse host loop");
                     self.host.open("while (--hops_from_source >= 0) {");
-                    let rname = format!("{}_bfs_rev_kernel", self.ir.tf.func.name);
-                    self.host.line(&format!("/* launch {rname}: see kernels.cl */"));
+                    self.host.line(&format!("/* launch {}: see kernels.cl */", rk.name));
                     self.host.close("}");
-                    let cx = BodyCtx {
-                        tf: &self.ir.tf,
-                        style: opencl_style(),
-                        target: Target::OpenCl,
-                        bfs: Some(BfsDir::Reverse),
-                        or_flag: None,
-                    };
-                    self.kernels.open(&format!(
-                        "__kernel void {rname}(int V, __global int* gpu_OA, __global int* gpu_edgeList, __global int* gpu_level, __global int* d_hops_from_source, ...) {{"
-                    ));
+                    let rsig: Vec<String> = rk
+                        .bfs_params(b.level)
+                        .iter()
+                        .map(|p| self.param_decl(p))
+                        .chain([
+                            format!("__global {lt}* gpu_level"),
+                            "__global int* d_hops_from_source".to_string(),
+                        ])
+                        .collect();
+                    self.kernels
+                        .open(&format!("__kernel void {}({}) {{", rk.name, rsig.join(", ")));
                     self.kernels.line(&format!("unsigned {var} = get_global_id(0);"));
                     self.kernels.line(&format!(
                         "if ({var} >= V || gpu_level[{var}] != *d_hops_from_source) return;"
                     ));
+                    let cx = self.body_ctx(Some(BfsDir::Reverse), None);
                     emit_block(rbody, &cx, &mut self.kernels);
                     self.kernels.close("}");
                     self.kernels.line("");
                 }
+                // skeleton-owned buffers were created at the BFS site (which
+                // may sit inside a host loop): release them here
+                self.host.line("clReleaseMemObject(d_hops_from_source);");
+                if b.level.is_none() {
+                    self.host.line("clReleaseMemObject(gpu_level);");
+                }
             }
-            Stmt::FixedPoint { var, cond, body, .. } => {
-                let flag = crate::ir::or_flag_prop(cond).unwrap_or_default();
+            Stmt::FixedPoint { var, body, .. } => {
+                let flag = self.cursor.next_fixed_point(self.plan).flag_name.clone();
                 self.host.line(&format!("// fixedPoint on `{flag}` (single int flag, §4.1)"));
                 self.host.line(&format!("int {var} = 0;"));
                 self.host.open(&format!("while (!{var}) {{"));
@@ -316,7 +364,7 @@ impl<'a> Gen<'a> {
                 self.host.close("}");
             }
             Stmt::Assign { target, value, .. } => match target {
-                LValue::Var(v) if self.ir.tf.node_props.contains_key(v) => {
+                LValue::Var(v) if self.plan.is_node_prop(v) => {
                     let Expr::Var(src) = value else { return };
                     let ty = self.prop_c_ty(v);
                     self.host.line(&format!(
@@ -331,13 +379,7 @@ impl<'a> Gen<'a> {
             },
             Stmt::Reduce { target, op, value, .. } => {
                 if let LValue::Var(v) = target {
-                    let sym = match op {
-                        ReduceOp::Add | ReduceOp::Count => "+",
-                        ReduceOp::Mul => "*",
-                        ReduceOp::And => "&&",
-                        ReduceOp::Or => "||",
-                    };
-                    self.host.line(&format!("{v} = {v} {sym} {};", emit(value, &st)));
+                    self.host.line(&format!("{v} = {v} {} {};", red_sym(*op), emit(value, &st)));
                 }
             }
             Stmt::DoWhile { body, cond, .. } => {

@@ -23,10 +23,15 @@ impl DslError {
 
     /// Render with a source snippet and caret, gcc-style.
     pub fn render(&self, src: &str) -> String {
-        let mut out = format!("error: {}\n  --> {}:{}:{}\n", self.msg, self.file, self.line, self.col);
+        let mut out =
+            format!("error: {}\n  --> {}:{}:{}\n", self.msg, self.file, self.line, self.col);
         if self.line >= 1 {
             if let Some(line_txt) = src.lines().nth(self.line as usize - 1) {
-                out.push_str(&format!("   | {}\n   | {}^\n", line_txt, " ".repeat(self.col.saturating_sub(1) as usize)));
+                out.push_str(&format!(
+                    "   | {}\n   | {}^\n",
+                    line_txt,
+                    " ".repeat(self.col.saturating_sub(1) as usize)
+                ));
             }
         }
         out

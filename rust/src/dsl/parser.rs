@@ -27,7 +27,8 @@ pub fn parse(src: &str) -> Result<Vec<Function>, DslError> {
 /// Parse a file, attaching its path to errors.
 pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Vec<Function>> {
     let src = std::fs::read_to_string(path)?;
-    parse(&src).map_err(|e| anyhow::anyhow!("{}", e.in_file(&path.display().to_string()).render(&src)))
+    parse(&src)
+        .map_err(|e| anyhow::anyhow!("{}", e.in_file(&path.display().to_string()).render(&src)))
 }
 
 impl Parser {
@@ -64,9 +65,10 @@ impl Parser {
                 self.bump();
                 Ok(s)
             }
-            other => {
-                Err(DslError::at(self.span(), &format!("expected identifier, found {}", other.describe())))
-            }
+            other => Err(DslError::at(
+                self.span(),
+                &format!("expected identifier, found {}", other.describe()),
+            )),
         }
     }
 
@@ -434,11 +436,16 @@ impl Parser {
                 let value = self.expr()?;
                 Stmt::Reduce { target, op: ReduceOp::Or, value, span }
             }
-            Tok::PlusPlus => Stmt::Reduce { target, op: ReduceOp::Count, value: Expr::IntLit(1), span },
+            Tok::PlusPlus => {
+                Stmt::Reduce { target, op: ReduceOp::Count, value: Expr::IntLit(1), span }
+            }
             other => {
                 return Err(DslError::at(
                     span,
-                    &format!("expected assignment or reduction operator, found {}", other.describe()),
+                    &format!(
+                        "expected assignment or reduction operator, found {}",
+                        other.describe()
+                    ),
                 ))
             }
         };
@@ -795,7 +802,8 @@ mod tests {
     #[test]
     fn parses_all_shipped_programs() {
         for p in ["bc.sp", "pr.sp", "sssp.sp", "tc.sp", "cc.sp", "bfs.sp"] {
-            let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("dsl_programs").join(p);
+            let path =
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("dsl_programs").join(p);
             let fns = parse_file(&path).unwrap_or_else(|e| panic!("{p}: {e}"));
             assert_eq!(fns.len(), 1, "{p}");
         }

@@ -75,7 +75,8 @@ fn stmt(out: &mut String, s: &Stmt, level: usize) {
                 IterSource::NodesTo { graph, of } => format!("{graph}.nodes_to({of})"),
                 IterSource::Set { set } => set.clone(),
             };
-            let filt = iter.filter.as_ref().map(|e| format!(".filter({})", expr(e))).unwrap_or_default();
+            let filt =
+                iter.filter.as_ref().map(|e| format!(".filter({})", expr(e))).unwrap_or_default();
             out.push_str(&format!("{kw} ({} in {src}{filt}) ", iter.var));
             block(out, body, level);
             out.push('\n');
@@ -183,7 +184,8 @@ mod tests {
             let src = std::fs::read_to_string(&path).unwrap();
             let fns = parse(&src).unwrap_or_else(|e| panic!("{p}: {e}"));
             let printed = pretty_function(&fns[0]);
-            let reparsed = parse(&printed).unwrap_or_else(|e| panic!("{p} reparse: {e}\n{printed}"));
+            let reparsed =
+                parse(&printed).unwrap_or_else(|e| panic!("{p} reparse: {e}\n{printed}"));
             // Compare structurally, ignoring spans, via re-printing.
             assert_eq!(printed, pretty_function(&reparsed[0]), "{p} round-trip");
         }

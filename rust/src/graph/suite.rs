@@ -39,16 +39,46 @@ pub fn build_suite(scale: usize) -> Vec<SuiteEntry> {
     // ordering: TW δ̄=12, SW δ̄=4, OK δ̄=76 (densest), WK δ̄=55, LJ δ̄=28,
     // PK δ̄=37 — and the road/synthetic rows.
     vec![
-        e("TW", "twitter-2010", Category::Social, preferential_attachment("twitter-2010", s, 6, 0x7b17)),
-        e("SW", "soc-sinaweibo", Category::Social, preferential_attachment("soc-sinaweibo", s * 2, 2, 0x5757)),
+        e(
+            "TW",
+            "twitter-2010",
+            Category::Social,
+            preferential_attachment("twitter-2010", s, 6, 0x7b17),
+        ),
+        e(
+            "SW",
+            "soc-sinaweibo",
+            Category::Social,
+            preferential_attachment("soc-sinaweibo", s * 2, 2, 0x5757),
+        ),
         e("OK", "orkut", Category::Social, preferential_attachment("orkut", s / 2, 19, 0x0b0b)),
-        e("WK", "wikipedia-ru", Category::Social, preferential_attachment("wikipedia-ru", s / 2, 14, 0x3c3c)),
-        e("LJ", "livejournal", Category::Social, preferential_attachment("livejournal", (s * 3) / 4, 7, 0x1111)),
-        e("PK", "soc-pokec", Category::Social, preferential_attachment("soc-pokec", s / 3, 9, 0x2222)),
+        e(
+            "WK",
+            "wikipedia-ru",
+            Category::Social,
+            preferential_attachment("wikipedia-ru", s / 2, 14, 0x3c3c),
+        ),
+        e(
+            "LJ",
+            "livejournal",
+            Category::Social,
+            preferential_attachment("livejournal", (s * 3) / 4, 7, 0x1111),
+        ),
+        e(
+            "PK",
+            "soc-pokec",
+            Category::Social,
+            preferential_attachment("soc-pokec", s / 3, 9, 0x2222),
+        ),
         e("US", "usaroad", Category::Road, road_grid("usaroad", side(s * 2), side(s * 2), 0x4444)),
         e("GR", "germany-osm", Category::Road, road_grid("germany-osm", side(s), side(s), 0x5555)),
         e("RM", "rmat876", Category::Synthetic, rmat("rmat876", s, s * 5, 0x6666)),
-        e("UR", "uniform-random", Category::Synthetic, uniform_random("uniform-random", s, s * 4, 0x7777)),
+        e(
+            "UR",
+            "uniform-random",
+            Category::Synthetic,
+            uniform_random("uniform-random", s, s * 4, 0x7777),
+        ),
     ]
 }
 

@@ -3,11 +3,13 @@
 //! Rather than duplicating the AST, the IR is a *kernel schedule* layered on
 //! the typed AST: every parallel construct (forall, attachNodeProperty,
 //! iterateInBFS, the body of a fixedPoint) becomes a [`Kernel`] with
-//! read/write/reduction sets and a host↔device transfer plan. The code
-//! generators (CUDA/OpenCL/SYCL/OpenACC/JAX) and the interpreter all consume
-//! this structure.
+//! read/write/reduction sets and a host↔device transfer plan. The IR is then
+//! lowered once more into the backend-neutral [`plan::DevicePlan`], which the
+//! code generators (CUDA/OpenCL/SYCL/OpenACC/JAX) render and whose slot
+//! tables the interpreter shares.
 
 pub mod analyze;
+pub mod plan;
 pub mod slots;
 pub mod transfer;
 

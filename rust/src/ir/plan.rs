@@ -1,0 +1,816 @@
+//! Backend-neutral device plan: the single lowering layer between the IR and
+//! every accelerator renderer.
+//!
+//! # Pipeline
+//!
+//! ```text
+//! AST (dsl::ast) ──sema──▶ TypedFunction ──ir::lower──▶ IrProgram
+//!                                                          │
+//!                                          DevicePlan::build (this module)
+//!                                                          │
+//!                    ┌───────────────┬────────────┬────────┴───┬───────────┐
+//!                    ▼               ▼            ▼            ▼           ▼
+//!              codegen::cuda  codegen::opencl codegen::sycl codegen::openacc
+//!                    └───────────────┴────────────┴────────────┘      codegen::jax
+//!                                 (thin renderers: syntax only)
+//! ```
+//!
+//! The paper's core claim (§3) is one algorithmic specification feeding CUDA,
+//! OpenCL, SYCL, and OpenACC generators. Before this layer existed, each of
+//! the four text emitters re-derived function parameters, device-buffer sets,
+//! property C types, and kernel numbering independently from the AST — four
+//! copies of the same analysis. The [`DevicePlan`] resolves all of that once:
+//!
+//! - **buffers**: every node/edge property gets a stable slot from the same
+//!   [`PropTable`] the interpreter's lowering uses ([`crate::backends::interp::compile`]
+//!   calls [`PropTable::build`] too), so interpreter and codegen agree on
+//!   numbering *by construction*;
+//! - **types**: scalar machine types are mapped per backend through a
+//!   [`TypeMap`] hook (e.g. OpenCL has no device-side `bool` arrays, so its
+//!   map sends `Bool` to `int`) — resolved here, not in emitters;
+//! - **kernel schedule**: one [`KernelPlan`] per IR kernel, carrying its name,
+//!   its parameter list in interner (slot) order, and the bound §4 transfer
+//!   steps (graph CSR H2D once; property copy-ins owed before first launch;
+//!   outputs-only D2H, deferred past convergence loops);
+//! - **host-loop skeletons**: [`FixedPointPlan`] (Fig 12's device-flag
+//!   ping-pong) and [`BfsPlan`] (Fig 9's level-synchronous do-while) in
+//!   program order, consumed by renderers through a [`PlanCursor`].
+//!
+//! A renderer walks the AST only for *statement syntax* (expressions, loop
+//! shapes); everything that is an analysis result comes from the plan. Every
+//! renderer also embeds [`DevicePlan::manifest`] as a comment block, which is
+//! byte-identical across backends — `tests/plan_numbering.rs` snapshots it to
+//! pin the cross-backend numbering guarantee.
+
+use crate::dsl::ast::{ReduceOp, Stmt, Type};
+use crate::ir::slots::Interner;
+use crate::ir::{IrProgram, Kernel, KernelKind, ScalarTy};
+use crate::sema::TypedFunction;
+
+// ---------------------------------------------------------------------------
+// Per-backend type mapping
+// ---------------------------------------------------------------------------
+
+/// Scalar-type spelling for one backend. The hooks live here so a backend's
+/// quirks (OpenCL's missing device `bool`, numpy dtype names) are resolved in
+/// one place instead of inside each emitter.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TypeMap {
+    pub int: &'static str,
+    pub long: &'static str,
+    pub float: &'static str,
+    pub double: &'static str,
+    pub boolean: &'static str,
+}
+
+impl TypeMap {
+    /// C / C++ family (CUDA, SYCL, OpenACC, and every host half).
+    pub const C: TypeMap = TypeMap {
+        int: "int",
+        long: "long long",
+        float: "float",
+        double: "double",
+        boolean: "bool",
+    };
+    /// OpenCL C device code: no `bool` arrays (§3), 64-bit int is `long`.
+    pub const OPENCL: TypeMap = TypeMap {
+        int: "int",
+        long: "long",
+        float: "float",
+        double: "double",
+        boolean: "int",
+    };
+    /// numpy dtype names, for the JAX backend's buffer bindings.
+    pub const NUMPY: TypeMap = TypeMap {
+        int: "int32",
+        long: "int64",
+        float: "float32",
+        double: "float64",
+        boolean: "bool_",
+    };
+
+    pub fn name(&self, t: ScalarTy) -> &'static str {
+        match t {
+            ScalarTy::I32 => self.int,
+            ScalarTy::I64 => self.long,
+            ScalarTy::F32 => self.float,
+            ScalarTy::F64 => self.double,
+            ScalarTy::Bool => self.boolean,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property slot table (shared with the interpreter's lowering)
+// ---------------------------------------------------------------------------
+
+/// Property slot metadata: drives `Env` allocation in the interpreter and
+/// device-buffer declarations in the text backends.
+#[derive(Clone, Debug)]
+pub struct PropMeta {
+    pub name: String,
+    pub ty: ScalarTy,
+    pub edge: bool,
+    pub param: bool,
+}
+
+impl PropMeta {
+    /// Host symbol for this buffer's element count in generated code
+    /// (`V` node-sized, `E` edge-sized) — one definition for every renderer.
+    pub fn len_sym(&self) -> &'static str {
+        if self.edge {
+            "E"
+        } else {
+            "V"
+        }
+    }
+}
+
+/// The canonical property-slot assignment: name → dense `u32`, parameters
+/// first, then body declarations (sema's `prop_order`). Both the interpreter
+/// ([`crate::backends::interp::compile`]) and [`DevicePlan::build`] construct
+/// their numbering through this table, so all backends agree by construction.
+#[derive(Clone, Debug, Default)]
+pub struct PropTable {
+    interner: Interner,
+    metas: Vec<PropMeta>,
+}
+
+impl PropTable {
+    pub fn build(tf: &TypedFunction) -> PropTable {
+        let mut table = PropTable::default();
+        let param_names: std::collections::HashSet<&str> =
+            tf.func.params.iter().map(|p| p.name.as_str()).collect();
+        for name in &tf.prop_order {
+            let (inner, edge) = match (tf.node_props.get(name), tf.edge_props.get(name)) {
+                (Some(t), _) => (t, false),
+                (None, Some(t)) => (t, true),
+                (None, None) => continue,
+            };
+            let slot = table.interner.intern(name);
+            debug_assert_eq!(slot as usize, table.metas.len());
+            table.metas.push(PropMeta {
+                name: name.clone(),
+                ty: ScalarTy::of(inner),
+                edge,
+                param: param_names.contains(name.as_str()),
+            });
+        }
+        table
+    }
+
+    /// Slot of a registered property.
+    pub fn slot(&self, name: &str) -> Option<u32> {
+        self.interner.get(name)
+    }
+
+    pub fn meta(&self, slot: u32) -> &PropMeta {
+        &self.metas[slot as usize]
+    }
+
+    pub fn metas(&self) -> &[PropMeta] {
+        &self.metas
+    }
+
+    pub fn len(&self) -> usize {
+        self.metas.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.metas.is_empty()
+    }
+
+    pub fn into_metas(self) -> Vec<PropMeta> {
+        self.metas
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Buffers and kernel parameters
+// ---------------------------------------------------------------------------
+
+/// Graph CSR arrays (§4.1: copied to the device once, never back).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GraphArray {
+    Offsets,
+    EdgeList,
+    RevOffsets,
+    SrcList,
+}
+
+impl GraphArray {
+    /// Device pointer name used by the CUDA and OpenCL renderers.
+    pub fn device_name(self) -> &'static str {
+        match self {
+            GraphArray::Offsets => "gpu_OA",
+            GraphArray::EdgeList => "gpu_edgeList",
+            GraphArray::RevOffsets => "gpu_rev_OA",
+            GraphArray::SrcList => "gpu_srcList",
+        }
+    }
+}
+
+/// One DSL-function parameter, backend-neutral. All C-family backends render
+/// the same host signature from this list.
+#[derive(Clone, Debug)]
+pub enum HostParam {
+    Graph { name: String },
+    Prop { slot: u32 },
+    Set { name: String },
+    Scalar { name: String, ty: ScalarTy },
+}
+
+/// One kernel parameter, in the plan's canonical order: `V`, graph arrays,
+/// property buffers in slot order, reduction cells, scalar params, and the
+/// fixedPoint OR-flag last.
+#[derive(Clone, Debug)]
+pub enum KernelParam {
+    NumNodes,
+    Graph(GraphArray),
+    Prop(u32),
+    ReductionCell { name: String, ty: ScalarTy },
+    Scalar { name: String, ty: ScalarTy },
+    OrFlag,
+}
+
+/// Launch schedule entry for one device kernel: everything a renderer needs
+/// that is not plain statement syntax.
+#[derive(Clone, Debug)]
+pub struct KernelPlan {
+    pub id: usize,
+    pub kind: KernelKind,
+    /// stable kernel symbol, shared by all backends that name kernels
+    pub name: String,
+    pub in_host_loop: bool,
+    /// property slots the kernel touches, in interner (slot) order
+    pub props: Vec<u32>,
+    pub uses_in_edges: bool,
+    /// deduplicated scalar reductions `(name, op, machine type)`
+    pub reductions: Vec<(String, ReduceOp, ScalarTy)>,
+    /// by-value scalar parameters `(name, machine type)`
+    pub scalar_params: Vec<(String, ScalarTy)>,
+    /// §4.1: property slots owed an H2D copy before this launch
+    pub copy_in: Vec<u32>,
+    /// §4.1: property slots copied back after the launch…
+    pub copy_out: Vec<u32>,
+    /// …unless deferred to the enclosing convergence loop's exit
+    pub defer_to_loop_exit: bool,
+}
+
+impl KernelPlan {
+    /// Canonical parameter list. `with_flag` appends the fixedPoint OR-flag
+    /// cell when the launch site sits inside a convergence loop.
+    pub fn params(&self, with_flag: bool) -> Vec<KernelParam> {
+        let mut out = vec![
+            KernelParam::NumNodes,
+            KernelParam::Graph(GraphArray::Offsets),
+            KernelParam::Graph(GraphArray::EdgeList),
+        ];
+        if self.uses_in_edges {
+            out.push(KernelParam::Graph(GraphArray::RevOffsets));
+            out.push(KernelParam::Graph(GraphArray::SrcList));
+        }
+        for &p in &self.props {
+            out.push(KernelParam::Prop(p));
+        }
+        for (name, _, ty) in &self.reductions {
+            out.push(KernelParam::ReductionCell { name: name.clone(), ty: *ty });
+        }
+        for (name, ty) in &self.scalar_params {
+            out.push(KernelParam::Scalar { name: name.clone(), ty: *ty });
+        }
+        if with_flag {
+            out.push(KernelParam::OrFlag);
+        }
+        out
+    }
+
+    /// Parameter list for a BFS-loop kernel. The BFS skeleton binds the
+    /// level buffer, depth cell, and finished flag itself; `level` is the
+    /// enclosing [`BfsPlan`]'s declared level slot, excluded here because
+    /// the skeleton passes that buffer explicitly.
+    pub fn bfs_params(&self, level: Option<u32>) -> Vec<KernelParam> {
+        self.params(false)
+            .into_iter()
+            .filter(|p| !matches!(p, KernelParam::Prop(s) if Some(*s) == level))
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host-loop skeletons
+// ---------------------------------------------------------------------------
+
+/// `fixedPoint` skeleton (Fig 12): convergence is OR-reduced into a single
+/// device flag word that ping-pongs host↔device each iteration (§4.1).
+#[derive(Clone, Debug)]
+pub struct FixedPointPlan {
+    /// slot of the bool property whose OR drives convergence, when the
+    /// condition has the supported `!prop` shape
+    pub flag: Option<u32>,
+    /// its name (empty when unsupported) — renderers quote it in comments
+    pub flag_name: String,
+}
+
+/// `iterateInBFS` skeleton (Fig 9): a level-synchronous host do-while over
+/// the forward kernel, plus an optional reverse sweep walking levels back.
+#[derive(Clone, Debug)]
+pub struct BfsPlan {
+    /// kernel id of the forward sweep
+    pub fwd: usize,
+    /// kernel id of the `iterateInReverse` sweep, if present
+    pub rev: Option<usize>,
+    /// slot of a *declared* `level` property (BFS over an implicit level
+    /// buffer, as in BC, leaves this `None`). The StarPlat construct never
+    /// names its level storage, so binding is by the conventional property
+    /// name `level` — the same convention the kernel-body emitter uses for
+    /// the §3.4 BFS-DAG filter.
+    pub level: Option<u32>,
+}
+
+// ---------------------------------------------------------------------------
+// The device plan
+// ---------------------------------------------------------------------------
+
+/// The complete backend-neutral lowering of one DSL function. See the module
+/// docs for what each piece replaces in the old per-backend emitters.
+#[derive(Clone, Debug)]
+pub struct DevicePlan {
+    /// DSL function name (kernel names derive from it)
+    pub func: String,
+    /// canonical property slot table (shared with the interpreter)
+    pub props: PropTable,
+    pub host_params: Vec<HostParam>,
+    /// CSR arrays needed on the device (reverse CSR only when some kernel
+    /// pulls over in-edges)
+    pub graph_arrays: Vec<GraphArray>,
+    /// property slots device-resident for the whole function, slot order
+    pub device_resident: Vec<u32>,
+    /// property slots returning to the host at exit (outputs-only D2H)
+    pub outputs: Vec<u32>,
+    pub kernels: Vec<KernelPlan>,
+    /// fixedPoint skeletons in program order
+    pub fixed_points: Vec<FixedPointPlan>,
+    /// iterateInBFS skeletons in program order
+    pub bfs_loops: Vec<BfsPlan>,
+}
+
+impl DevicePlan {
+    pub fn build(ir: &IrProgram) -> DevicePlan {
+        let tf = &ir.tf;
+        let props = PropTable::build(tf);
+
+        let host_params = tf
+            .func
+            .params
+            .iter()
+            .map(|p| match &p.ty {
+                Type::Graph => HostParam::Graph { name: p.name.clone() },
+                Type::PropNode(_) | Type::PropEdge(_) => HostParam::Prop {
+                    slot: props.slot(&p.name).expect("property parameter registered"),
+                },
+                Type::SetN(_) => HostParam::Set { name: p.name.clone() },
+                t => HostParam::Scalar { name: p.name.clone(), ty: ScalarTy::of(t) },
+            })
+            .collect();
+
+        let mut graph_arrays = vec![GraphArray::Offsets, GraphArray::EdgeList];
+        if ir.kernels.iter().any(|k| k.uses.uses_in_edges) {
+            graph_arrays.push(GraphArray::RevOffsets);
+            graph_arrays.push(GraphArray::SrcList);
+        }
+
+        let mut device_resident: Vec<u32> = ir
+            .transfer
+            .device_resident_props
+            .iter()
+            .filter_map(|n| props.slot(n))
+            .collect();
+        device_resident.sort_unstable();
+        device_resident.dedup();
+
+        let mut outputs: Vec<u32> =
+            ir.transfer.outputs.iter().filter_map(|n| props.slot(n)).collect();
+        outputs.sort_unstable();
+        outputs.dedup();
+
+        let kernels = ir.kernels.iter().map(|k| kernel_plan(ir, &props, k)).collect();
+
+        let mut fixed_points = Vec::new();
+        let mut bfs_loops = Vec::new();
+        let mut next_kernel = 0usize;
+        collect_host_loops(
+            &tf.func.body,
+            &props,
+            &mut next_kernel,
+            &mut fixed_points,
+            &mut bfs_loops,
+        );
+        // hard assert (one usize compare per build): the host-loop walk must
+        // mirror `ir::collect_kernels` exactly, or every downstream kernel id
+        // would be silently shifted
+        assert_eq!(next_kernel, ir.kernels.len(), "host-loop walk drifted from schedule");
+
+        DevicePlan {
+            func: tf.func.name.clone(),
+            props,
+            host_params,
+            graph_arrays,
+            device_resident,
+            outputs,
+            kernels,
+            fixed_points,
+            bfs_loops,
+        }
+    }
+
+    pub fn meta(&self, slot: u32) -> &PropMeta {
+        self.props.meta(slot)
+    }
+
+    pub fn prop_name(&self, slot: u32) -> &str {
+        &self.props.meta(slot).name
+    }
+
+    /// Machine type of a property by name (I32 when unknown, matching the
+    /// old emitters' fallback).
+    pub fn prop_ty_of(&self, name: &str) -> ScalarTy {
+        self.props.slot(name).map(|s| self.props.meta(s).ty).unwrap_or(ScalarTy::I32)
+    }
+
+    /// Rendered type of a property by name, through a backend's map.
+    pub fn c_ty_of(&self, name: &str, map: &TypeMap) -> &'static str {
+        map.name(self.prop_ty_of(name))
+    }
+
+    /// Rendered type of a property slot, through a backend's map.
+    pub fn c_ty(&self, slot: u32, map: &TypeMap) -> &'static str {
+        map.name(self.props.meta(slot).ty)
+    }
+
+    /// Output property names in slot order (JAX buffer bindings).
+    pub fn output_names(&self) -> Vec<&str> {
+        self.outputs.iter().map(|&s| self.props.meta(s).name.as_str()).collect()
+    }
+
+    /// Is `name` a declared *node* property? Renderers use this to classify
+    /// whole-property assignment targets (`modified = modified_nxt`).
+    pub fn is_node_prop(&self, name: &str) -> bool {
+        matches!(self.props.slot(name), Some(s) if !self.props.meta(s).edge)
+    }
+
+    /// Launch-site argument name for a kernel parameter — identical across
+    /// the pointer-passing backends (CUDA, OpenCL), so it lives here.
+    pub fn launch_arg(&self, p: &KernelParam) -> String {
+        match p {
+            KernelParam::NumNodes => "V".to_string(),
+            KernelParam::Graph(a) => a.device_name().to_string(),
+            KernelParam::Prop(s) => format!("gpu_{}", self.prop_name(*s)),
+            KernelParam::ReductionCell { name, .. } => format!("d_{name}"),
+            KernelParam::Scalar { name, .. } => name.clone(),
+            KernelParam::OrFlag => "gpu_finished".to_string(),
+        }
+    }
+
+    /// The host function signature shared by the C-family backends.
+    pub fn host_signature(&self, map: &TypeMap) -> Vec<String> {
+        self.host_params
+            .iter()
+            .map(|p| match p {
+                HostParam::Graph { name } => format!("graph& {name}"),
+                HostParam::Prop { slot } => {
+                    let m = self.props.meta(*slot);
+                    format!("{}* {}", map.name(m.ty), m.name)
+                }
+                HostParam::Set { name } => format!("std::set<int>& {name}"),
+                HostParam::Scalar { name, ty } => format!("{} {name}", map.name(*ty)),
+            })
+            .collect()
+    }
+
+    /// Stable, backend-neutral description of the plan. Every text renderer
+    /// embeds this as a comment block; `tests/plan_numbering.rs` asserts it
+    /// is byte-identical across the four backends.
+    pub fn manifest(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        out.push(format!(
+            "==== device plan: {} ({} buffers, {} kernels) ====",
+            self.func,
+            self.props.len(),
+            self.kernels.len()
+        ));
+        for (i, m) in self.props.metas().iter().enumerate() {
+            let mut tags = vec![if m.edge { "edge" } else { "node" }];
+            if m.param {
+                tags.push("param");
+            }
+            if self.outputs.contains(&(i as u32)) {
+                tags.push("output");
+            }
+            out.push(format!(
+                "buffer[{i}] {} : {} ({})",
+                m.name,
+                TypeMap::C.name(m.ty),
+                tags.join(", ")
+            ));
+        }
+        for k in &self.kernels {
+            out.push(format!(
+                "kernel[{}] {} {}{}",
+                k.id,
+                kind_token(&k.kind),
+                k.name,
+                if k.in_host_loop { " [host-loop]" } else { "" }
+            ));
+        }
+        for (i, f) in self.fixed_points.iter().enumerate() {
+            out.push(format!("fixedPoint[{i}] flag=`{}`", f.flag_name));
+        }
+        for (i, b) in self.bfs_loops.iter().enumerate() {
+            match b.rev {
+                Some(r) => out.push(format!("bfs[{i}] fwd=kernel[{}] rev=kernel[{}]", b.fwd, r)),
+                None => out.push(format!("bfs[{i}] fwd=kernel[{}]", b.fwd)),
+            }
+        }
+        out.push("==== end device plan ====".to_string());
+        out
+    }
+}
+
+fn kind_token(k: &KernelKind) -> &'static str {
+    match k {
+        KernelKind::InitProps => "init",
+        KernelKind::VertexParallel => "vertex",
+        KernelKind::BfsForward => "bfs-fwd",
+        KernelKind::BfsReverse => "bfs-rev",
+    }
+}
+
+fn kernel_name(func: &str, k: &Kernel) -> String {
+    match k.kind {
+        KernelKind::InitProps => format!("{func}_init_{}", k.id),
+        KernelKind::VertexParallel => format!("{func}_kernel_{}", k.id),
+        KernelKind::BfsForward => format!("{func}_bfs_kernel_{}", k.id),
+        KernelKind::BfsReverse => format!("{func}_bfs_rev_kernel_{}", k.id),
+    }
+}
+
+fn kernel_plan(ir: &IrProgram, props: &PropTable, k: &Kernel) -> KernelPlan {
+    let tf = &ir.tf;
+    let transfers = &ir.transfer.per_kernel[k.id];
+
+    let mut pslots: Vec<u32> = k
+        .uses
+        .props_read
+        .union(&k.uses.props_written)
+        .filter_map(|n| props.slot(n))
+        .collect();
+    pslots.sort_unstable();
+    pslots.dedup();
+
+    let mut reductions: Vec<(String, ReduceOp, ScalarTy)> = Vec::new();
+    for (r, op) in &k.uses.reductions {
+        if reductions.iter().any(|(n, _, _)| n == r) {
+            continue;
+        }
+        let ty = tf.vars.get(r).map(ScalarTy::of).unwrap_or(ScalarTy::I64);
+        reductions.push((r.clone(), *op, ty));
+    }
+
+    // Scalars passed by value: declared non-prop, non-graph, non-set
+    // variables the kernel reads — minus reduction targets, which already
+    // travel as device cells.
+    let scalar_params: Vec<(String, ScalarTy)> = transfers
+        .scalar_params
+        .iter()
+        .filter(|s| !reductions.iter().any(|(n, _, _)| n == *s))
+        .filter_map(|s| match tf.vars.get(s) {
+            Some(ty) if !ty.is_prop() && !matches!(ty, Type::Graph | Type::SetN(_)) => {
+                Some((s.clone(), ScalarTy::of(ty)))
+            }
+            _ => None,
+        })
+        .collect();
+
+    KernelPlan {
+        id: k.id,
+        kind: k.kind.clone(),
+        name: kernel_name(&tf.func.name, k),
+        in_host_loop: k.in_host_loop,
+        props: pslots,
+        uses_in_edges: k.uses.uses_in_edges,
+        reductions,
+        scalar_params,
+        copy_in: transfers.copy_in.iter().filter_map(|n| props.slot(n)).collect(),
+        copy_out: transfers.copy_out.iter().filter_map(|n| props.slot(n)).collect(),
+        defer_to_loop_exit: transfers.defer_to_loop_exit,
+    }
+}
+
+/// Walk the function body in the exact order of `ir::collect_kernels`,
+/// recording fixedPoint / BFS skeletons against the kernel schedule.
+fn collect_host_loops(
+    block: &[Stmt],
+    props: &PropTable,
+    next_kernel: &mut usize,
+    fixed_points: &mut Vec<FixedPointPlan>,
+    bfs_loops: &mut Vec<BfsPlan>,
+) {
+    for s in block {
+        match s {
+            Stmt::AttachNodeProperty { .. } => *next_kernel += 1,
+            Stmt::For { parallel: true, .. } => *next_kernel += 1,
+            Stmt::For { parallel: false, body, .. } => {
+                collect_host_loops(body, props, next_kernel, fixed_points, bfs_loops);
+            }
+            Stmt::IterateBFS { reverse, .. } => {
+                let fwd = *next_kernel;
+                *next_kernel += 1;
+                let rev = reverse.as_ref().map(|_| {
+                    let r = *next_kernel;
+                    *next_kernel += 1;
+                    r
+                });
+                bfs_loops.push(BfsPlan { fwd, rev, level: props.slot("level") });
+            }
+            Stmt::FixedPoint { cond, body, .. } => {
+                let flag_name = crate::ir::or_flag_prop(cond).unwrap_or_default();
+                fixed_points.push(FixedPointPlan { flag: props.slot(&flag_name), flag_name });
+                collect_host_loops(body, props, next_kernel, fixed_points, bfs_loops);
+            }
+            Stmt::DoWhile { body, .. } | Stmt::While { body, .. } => {
+                collect_host_loops(body, props, next_kernel, fixed_points, bfs_loops);
+            }
+            Stmt::If { then, els, .. } => {
+                collect_host_loops(then, props, next_kernel, fixed_points, bfs_loops);
+                if let Some(e) = els {
+                    collect_host_loops(e, props, next_kernel, fixed_points, bfs_loops);
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Schedule cursor
+// ---------------------------------------------------------------------------
+
+/// Walks the plan's schedules in program order, mirroring a renderer's AST
+/// walk: kernel-site statements consume entries instead of re-deriving ids.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlanCursor {
+    kernel: usize,
+    fixed_point: usize,
+    bfs: usize,
+}
+
+impl PlanCursor {
+    /// Next kernel at an `attachNodeProperty` or parallel-`forall` site.
+    pub fn next_kernel<'p>(&mut self, plan: &'p DevicePlan) -> &'p KernelPlan {
+        let k = &plan.kernels[self.kernel];
+        self.kernel += 1;
+        k
+    }
+
+    /// Next `fixedPoint` skeleton.
+    pub fn next_fixed_point<'p>(&mut self, plan: &'p DevicePlan) -> &'p FixedPointPlan {
+        let f = &plan.fixed_points[self.fixed_point];
+        self.fixed_point += 1;
+        f
+    }
+
+    /// Next `iterateInBFS` skeleton: the loop plan, its forward kernel and,
+    /// when the construct has an `iterateInReverse` arm, the reverse kernel.
+    /// Advances the kernel cursor past both.
+    pub fn next_bfs<'p>(
+        &mut self,
+        plan: &'p DevicePlan,
+    ) -> (&'p BfsPlan, &'p KernelPlan, Option<&'p KernelPlan>) {
+        let b = &plan.bfs_loops[self.bfs];
+        self.bfs += 1;
+        let fwd = &plan.kernels[b.fwd];
+        let rev = b.rev.map(|i| &plan.kernels[i]);
+        self.kernel = b.fwd + 1 + usize::from(b.rev.is_some());
+        (b, fwd, rev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse;
+    use crate::ir::lower;
+    use crate::sema::check_function;
+
+    fn plan_of(p: &str) -> DevicePlan {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("dsl_programs").join(p);
+        let src = std::fs::read_to_string(&path).unwrap();
+        let fns = parse(&src).unwrap();
+        let tf = check_function(&fns[0]).unwrap();
+        DevicePlan::build(&lower(&tf))
+    }
+
+    #[test]
+    fn sssp_buffers_in_declaration_order() {
+        let plan = plan_of("sssp.sp");
+        let names: Vec<&str> = plan.props.metas().iter().map(|m| m.name.as_str()).collect();
+        assert_eq!(names, vec!["dist", "weight", "modified", "modified_nxt"]);
+        assert!(plan.props.meta(1).edge && plan.props.meta(1).param);
+        assert_eq!(plan.outputs, vec![0]); // dist
+        assert_eq!(plan.graph_arrays, vec![GraphArray::Offsets, GraphArray::EdgeList]);
+    }
+
+    #[test]
+    fn sssp_relax_kernel_params_in_slot_order() {
+        let plan = plan_of("sssp.sp");
+        let relax = &plan.kernels[1];
+        assert_eq!(relax.kind, KernelKind::VertexParallel);
+        assert!(relax.in_host_loop && relax.defer_to_loop_exit);
+        // props in interner order: dist(0), weight(1), modified(2), modified_nxt(3)
+        assert_eq!(relax.props, vec![0, 1, 2, 3]);
+        let params = relax.params(true);
+        assert!(matches!(params[0], KernelParam::NumNodes));
+        assert!(matches!(params.last(), Some(KernelParam::OrFlag)));
+        // weight is owed an H2D copy before the first launch (§4.1)
+        assert_eq!(relax.copy_in, vec![1]);
+    }
+
+    #[test]
+    fn fixed_point_skeletons_carry_the_flag() {
+        for p in ["sssp.sp", "cc.sp"] {
+            let plan = plan_of(p);
+            assert_eq!(plan.fixed_points.len(), 1, "{p}");
+            let fp = &plan.fixed_points[0];
+            assert_eq!(fp.flag_name, "modified", "{p}");
+            assert_eq!(fp.flag, plan.props.slot("modified"), "{p}");
+        }
+    }
+
+    #[test]
+    fn bc_bfs_skeleton_binds_both_sweeps() {
+        let plan = plan_of("bc.sp");
+        assert_eq!(plan.bfs_loops.len(), 1);
+        let b = &plan.bfs_loops[0];
+        assert_eq!(plan.kernels[b.fwd].kind, KernelKind::BfsForward);
+        assert_eq!(plan.kernels[b.rev.unwrap()].kind, KernelKind::BfsReverse);
+        assert!(b.level.is_none(), "bc's level buffer is implicit");
+        // bfs.sp declares `level`, so its skeleton binds the slot
+        let bfs = plan_of("bfs.sp");
+        assert_eq!(bfs.bfs_loops[0].level, bfs.props.slot("level"));
+    }
+
+    #[test]
+    fn cursor_walks_the_schedule_in_order() {
+        let plan = plan_of("bc.sp");
+        let mut cur = PlanCursor::default();
+        let k0 = cur.next_kernel(&plan);
+        assert_eq!(k0.id, 0);
+        // bc: attach(BC), then per-source attach(delta,sigma), then BFS fwd+rev
+        let k1 = cur.next_kernel(&plan);
+        assert_eq!(k1.kind, KernelKind::InitProps);
+        let (b, fwd, rev) = cur.next_bfs(&plan);
+        assert_eq!(fwd.kind, KernelKind::BfsForward);
+        assert!(rev.is_some());
+        assert_eq!(b.fwd, fwd.id);
+    }
+
+    #[test]
+    fn opencl_type_map_demotes_bool() {
+        assert_eq!(TypeMap::OPENCL.name(ScalarTy::Bool), "int");
+        assert_eq!(TypeMap::C.name(ScalarTy::Bool), "bool");
+        assert_eq!(TypeMap::NUMPY.name(ScalarTy::F32), "float32");
+        let plan = plan_of("sssp.sp");
+        assert_eq!(plan.c_ty_of("modified", &TypeMap::OPENCL), "int");
+        assert_eq!(plan.c_ty_of("modified", &TypeMap::C), "bool");
+    }
+
+    #[test]
+    fn manifest_is_deterministic_and_complete() {
+        let a = plan_of("sssp.sp").manifest();
+        let b = plan_of("sssp.sp").manifest();
+        assert_eq!(a, b);
+        assert!(a[0].contains("device plan: Compute_SSSP"));
+        assert!(a.iter().any(|l| l.contains("buffer[0] dist")));
+        assert!(a.iter().any(|l| l.contains("fixedPoint[0] flag=`modified`")));
+        assert_eq!(a.last().unwrap(), "==== end device plan ====");
+    }
+
+    #[test]
+    fn kernel_ids_match_ir_schedule_positions() {
+        for p in ["bc.sp", "pr.sp", "sssp.sp", "tc.sp", "cc.sp", "bfs.sp"] {
+            let plan = plan_of(p);
+            for (i, k) in plan.kernels.iter().enumerate() {
+                assert_eq!(k.id, i, "{p}");
+                // slot-order invariant on every parameter list
+                let mut prev = None;
+                for s in &k.props {
+                    if let Some(q) = prev {
+                        assert!(q < *s, "{p}: kernel {i} props unsorted");
+                    }
+                    prev = Some(*s);
+                }
+            }
+        }
+    }
+}

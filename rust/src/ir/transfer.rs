@@ -231,7 +231,11 @@ mod tests {
                 }
                 for r in &k.uses.props_read {
                     if ir.tf.node_props.contains_key(r) || ir.tf.edge_props.contains_key(r) {
-                        assert!(resident.contains(r), "{p}: kernel {} reads non-resident {r}", k.id);
+                        assert!(
+                            resident.contains(r),
+                            "{p}: kernel {} reads non-resident {r}",
+                            k.id
+                        );
                     }
                 }
                 for w in &k.uses.props_written {

@@ -34,8 +34,9 @@ impl Runtime {
     pub fn open(dir: &Path) -> Result<Runtime> {
         let client = xla::PjRtClient::cpu().context("create PJRT CPU client")?;
         let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("read {} — run `make artifacts` first", manifest_path.display()))?;
+        let text = std::fs::read_to_string(&manifest_path).with_context(|| {
+            format!("read {} — run `make artifacts` first", manifest_path.display())
+        })?;
         let manifest = Json::parse(&text).context("parse manifest.json")?;
         let mut artifacts = Vec::new();
         for a in manifest.get("artifacts").as_arr().unwrap_or(&[]) {
@@ -62,7 +63,11 @@ impl Runtime {
     }
 
     /// Load + compile (cached) an artifact.
-    pub fn executable(&self, algo: &str, graph: &str) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
+    pub fn executable(
+        &self,
+        algo: &str,
+        graph: &str,
+    ) -> Result<std::rc::Rc<xla::PjRtLoadedExecutable>> {
         let key = format!("{algo}/{graph}");
         if let Some(e) = self.cache.borrow().get(&key) {
             return Ok(e.clone());

@@ -186,7 +186,12 @@ fn check_stmt(cx: &mut Ctx, s: &Stmt) -> Result<(), DslError> {
                 if !ty.is_prop() && !assignable(ty, &et) {
                     return Err(DslError::at(
                         *span,
-                        &format!("cannot initialize {} `{}` from {}", ty.display(), name, et.display()),
+                        &format!(
+                            "cannot initialize {} `{}` from {}",
+                            ty.display(),
+                            name,
+                            et.display()
+                        ),
                     ));
                 }
             }
@@ -215,7 +220,10 @@ fn check_stmt(cx: &mut Ctx, s: &Stmt) -> Result<(), DslError> {
                         }
                     }
                 }
-                return Err(DslError::at(*span, "property copy requires a property name on the right"));
+                return Err(DslError::at(
+                    *span,
+                    "property copy requires a property name on the right",
+                ));
             }
             let vt = type_expr(cx, value, *span)?;
             if !assignable(&tt, &vt) {
@@ -271,7 +279,10 @@ fn check_stmt(cx: &mut Ctx, s: &Stmt) -> Result<(), DslError> {
                     .or_else(|| cx.edge_props.get(prop))
                     .cloned()
                     .ok_or_else(|| {
-                        DslError::at(*span, &format!("unknown property `{prop}` in attachNodeProperty"))
+                        DslError::at(
+                            *span,
+                            &format!("unknown property `{prop}` in attachNodeProperty"),
+                        )
                     })?;
                 let et = type_expr(cx, e, *span)?;
                 if et != Type::Bool && pt == Type::Bool {
@@ -280,7 +291,11 @@ fn check_stmt(cx: &mut Ctx, s: &Stmt) -> Result<(), DslError> {
                 if pt != Type::Bool && !assignable(&pt, &et) {
                     return Err(DslError::at(
                         *span,
-                        &format!("cannot initialize {} property `{prop}` from {}", pt.display(), et.display()),
+                        &format!(
+                            "cannot initialize {} property `{prop}` from {}",
+                            pt.display(),
+                            et.display()
+                        ),
                     ));
                 }
             }
@@ -304,7 +319,12 @@ fn check_stmt(cx: &mut Ctx, s: &Stmt) -> Result<(), DslError> {
             }
             match cx.lookup(from) {
                 Some(Type::Node) => {}
-                _ => return Err(DslError::at(*span, &format!("BFS source `{from}` must be a node"))),
+                _ => {
+                    return Err(DslError::at(
+                        *span,
+                        &format!("BFS source `{from}` must be a node"),
+                    ))
+                }
             }
             cx.push();
             cx.declare(var, Type::Node, *span)?;

@@ -15,7 +15,9 @@ pub fn count_loc(src: &str) -> usize {
         .filter(|l| {
             let code = !l.is_empty() && !l.starts_with("//") && !l.starts_with('#');
             // #pragma / #include are real code even though they start with '#'.
-            code || l.starts_with("#pragma") || l.starts_with("#include") || l.starts_with("#define")
+            code || l.starts_with("#pragma")
+                || l.starts_with("#include")
+                || l.starts_with("#define")
         })
         .count()
 }

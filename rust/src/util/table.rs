@@ -86,7 +86,9 @@ mod tests {
         let s = t.render();
         assert!(s.contains("## demo"));
         assert!(s.contains("| graph       | time  |"));
-        assert!(s.lines().all(|l| l.is_empty() || l.starts_with('+') || l.starts_with('|') || l.starts_with('#')));
+        assert!(s.lines().all(|l| {
+            l.is_empty() || l.starts_with('+') || l.starts_with('|') || l.starts_with('#')
+        }));
     }
 
     #[test]

@@ -1,0 +1,126 @@
+//! Cross-backend numbering snapshots: the property the `ir/plan.rs` device
+//! plan guarantees is that every backend sees the *same* buffer slots and
+//! kernel schedule. Each text backend embeds the plan manifest as a comment
+//! block; these tests assert the block is byte-identical across CUDA, OpenCL,
+//! SYCL, and OpenACC for all six shipped programs, and that the interpreter's
+//! slot assignment (which consumes the same `PropTable`) matches too.
+
+use starplat::backends::interp;
+use starplat::codegen;
+use starplat::dsl::parser::parse_file;
+use starplat::ir::plan::DevicePlan;
+use starplat::ir::{lower, IrProgram};
+use starplat::sema::{check_function, TypedFunction};
+
+const PROGRAMS: [&str; 6] = ["bc.sp", "pr.sp", "sssp.sp", "tc.sp", "cc.sp", "bfs.sp"];
+
+fn typed(program: &str) -> TypedFunction {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("dsl_programs").join(program);
+    let fns = parse_file(&path).unwrap();
+    check_function(&fns[0]).unwrap()
+}
+
+fn ir_of(program: &str) -> IrProgram {
+    lower(&typed(program))
+}
+
+/// Extract the `// ==== device plan ... ====` comment block from generated
+/// source (inclusive of both markers).
+fn manifest_block(src: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut inside = false;
+    for l in src.lines() {
+        if l.starts_with("// ==== device plan:") {
+            inside = true;
+        }
+        if inside {
+            out.push(l.trim_end().to_string());
+        }
+        if l.starts_with("// ==== end device plan") {
+            break;
+        }
+    }
+    out
+}
+
+#[test]
+fn manifest_identical_across_all_text_backends() {
+    for p in PROGRAMS {
+        let ir = ir_of(p);
+        let expected: Vec<String> =
+            DevicePlan::build(&ir).manifest().iter().map(|l| format!("// {l}")).collect();
+        assert!(expected.len() > 3, "{p}: manifest suspiciously small");
+        for b in codegen::TEXT_BACKENDS {
+            let src = codegen::generate(b, &ir).unwrap();
+            let block = manifest_block(&src);
+            assert_eq!(
+                block, expected,
+                "{p}/{b}: embedded plan manifest diverged from the device plan"
+            );
+        }
+    }
+}
+
+#[test]
+fn interpreter_and_codegen_agree_on_buffer_numbering() {
+    for p in PROGRAMS {
+        let tf = typed(p);
+        let prog = interp::compile::compile(&tf).unwrap();
+        let plan = DevicePlan::build(&lower(&tf));
+        let interp_slots: Vec<(String, bool, bool)> =
+            prog.props.iter().map(|m| (m.name.clone(), m.edge, m.param)).collect();
+        let plan_slots: Vec<(String, bool, bool)> = plan
+            .props
+            .metas()
+            .iter()
+            .map(|m| (m.name.clone(), m.edge, m.param))
+            .collect();
+        assert_eq!(interp_slots, plan_slots, "{p}: slot tables diverged");
+    }
+}
+
+#[test]
+fn kernel_schedule_matches_ir_and_names_appear_in_named_backends() {
+    for p in PROGRAMS {
+        let ir = ir_of(p);
+        let plan = DevicePlan::build(&ir);
+        assert_eq!(plan.kernels.len(), ir.kernels.len(), "{p}");
+        for (kp, ki) in plan.kernels.iter().zip(&ir.kernels) {
+            assert_eq!(kp.id, ki.id, "{p}");
+            assert_eq!(kp.kind, ki.kind, "{p}");
+            assert_eq!(kp.in_host_loop, ki.in_host_loop, "{p}");
+        }
+        // CUDA and OpenCL name their kernels after the plan schedule
+        let cuda = codegen::generate("cuda", &ir).unwrap();
+        let ocl = codegen::generate("opencl", &ir).unwrap();
+        for k in &plan.kernels {
+            if k.kind == starplat::ir::KernelKind::InitProps {
+                continue; // rendered through the init template helpers
+            }
+            assert!(cuda.contains(&k.name), "{p}/cuda: kernel `{}` not emitted", k.name);
+            assert!(ocl.contains(&k.name), "{p}/opencl: kernel `{}` not emitted", k.name);
+        }
+    }
+}
+
+#[test]
+fn kernel_parameter_lists_follow_slot_order() {
+    use starplat::ir::plan::KernelParam;
+    for p in PROGRAMS {
+        let plan = DevicePlan::build(&ir_of(p));
+        for k in &plan.kernels {
+            let slots: Vec<u32> = k
+                .params(false)
+                .iter()
+                .filter_map(|pm| match pm {
+                    KernelParam::Prop(s) => Some(*s),
+                    _ => None,
+                })
+                .collect();
+            let mut sorted = slots.clone();
+            sorted.sort_unstable();
+            assert_eq!(slots, sorted, "{p}: kernel {} props out of slot order", k.id);
+        }
+    }
+}
