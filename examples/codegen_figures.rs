@@ -42,6 +42,7 @@ fn excerpt(title: &str, src: &str, from: &str, to: &str) {
 fn main() -> anyhow::Result<()> {
     let full = std::env::args().any(|a| a == "--full");
     let sssp_cuda = gen("sssp.sp", "cuda")?;
+    let sssp_hip = gen("sssp.sp", "hip")?;
     let sssp_acc = gen("sssp.sp", "openacc")?;
     let sssp_sycl = gen("sssp.sp", "sycl")?;
     let sssp_ocl = gen("sssp.sp", "opencl")?;
@@ -52,6 +53,7 @@ fn main() -> anyhow::Result<()> {
     if full {
         for (name, src) in [
             ("sssp.cu", &sssp_cuda),
+            ("sssp.hip.cpp", &sssp_hip),
             ("sssp.acc.cpp", &sssp_acc),
             ("sssp.sycl.cpp", &sssp_sycl),
             ("sssp.cl", &sssp_ocl),
@@ -96,6 +98,12 @@ fn main() -> anyhow::Result<()> {
         &sssp_cuda,
         "while (!finished) {",
         "cudaMemcpyDeviceToHost);",
+    );
+    excerpt(
+        "HIP — Fig 2's launch through hipLaunchKernelGGL (same plan, new spellings)",
+        &sssp_hip,
+        "hipLaunchKernelGGL(Compute_SSSP_kernel",
+        "hipDeviceSynchronize();",
     );
     println!("(run with --full to dump the complete generated sources)");
     Ok(())

@@ -1,7 +1,7 @@
 //! `starplat` command-line interface (hand-rolled: no clap offline).
 //!
 //! Subcommands:
-//!   compile --backend <cuda|opencl|sycl|openacc|jax> --out DIR FILES...
+//!   compile --backend <cuda|hip|opencl|sycl|openacc|jax> --out DIR FILES...
 //!   export-graphs [--out DIR] [--scale N]     write shapes.json for aot.py
 //!   run --algo A --graph SHORT --backend B    run one cell of Table 3/4
 //!   stats [--scale N]                          print Table 2
@@ -89,7 +89,7 @@ fn print_help() {
          USAGE: starplat <COMMAND> [FLAGS]\n\
          \n\
          COMMANDS:\n\
-         \x20 compile --backend <cuda|opencl|sycl|openacc|jax> [--out DIR] FILE...\n\
+         \x20 compile --backend <cuda|hip|opencl|sycl|openacc|jax> [--out DIR] FILE...\n\
          \x20 export-graphs [--out artifacts/graphs] [--scale 800]\n\
          \x20 run --algo <bc|pr|sssp|tc|bfs|cc> --graph <TW|..|UR> --backend <seq|par|xla|gunrock|lonestar>\n\
          \x20 stats [--scale 4000]          print the Table-2 graph suite\n\
@@ -127,6 +127,7 @@ fn cmd_compile(f: &Flags) -> Result<()> {
                 let src = codegen::generate(b, &ir)?;
                 let ext = match b {
                     "cuda" => "cu",
+                    "hip" => "hip.cpp",
                     "opencl" => "cl.cpp",
                     "sycl" => "sycl.cpp",
                     _ => "acc.cpp",

@@ -1,23 +1,63 @@
-//! CUDA backend (paper §3, Figures 2, 6, 9, 12).
+//! CUDA-family backends (paper §3, Figures 2, 6, 9, 12).
 //!
 //! Split code generation: `__global__` kernels + a host driver that owns
 //! allocation, H2D/D2H transfers (per the §4 transfer plan), kernel
 //! launches, and the fixedPoint / BFS host loops.
 //!
 //! This is a thin renderer over [`DevicePlan`]: buffer names, kernel
-//! parameter lists, transfer steps, and host-loop skeletons all come from
-//! the plan; this module contributes CUDA syntax only.
+//! parameter lists, transfer steps, and the complete host-statement
+//! schedule come from the plan ([`crate::ir::plan::HostOp`]); the host half
+//! is rendered by the shared [`super::render_host_schedule`] driver through
+//! the [`HostDialect`] hooks below. Everything CUDA-specific is a
+//! [`Spellings`] table, which is exactly what lets `hip.rs` reuse this whole
+//! module: HIP is the same renderer with `hipMalloc` / `hipMemcpy` /
+//! `hipLaunchKernelGGL` spellings and zero lowering of its own.
 
 use super::body::{emit_block, BfsDir, BodyCtx, Target};
 use super::buf::CodeBuf;
-use super::cexpr::{cuda_style, emit};
-use super::red_sym;
-use crate::dsl::ast::*;
-use crate::ir::plan::{BfsPlan, DevicePlan, KernelParam, KernelPlan, PlanCursor, TypeMap};
-use crate::ir::{IrProgram, ScalarTy};
+use super::cexpr::{cuda_style, emit, Style};
+use super::{render_host_schedule, HostDialect};
+use crate::dsl::ast::{Block, Expr, Iterator_, Stmt};
+use crate::ir::plan::{DevicePlan, KernelParam, KernelPlan, TypeMap};
+use crate::ir::IrProgram;
 use crate::sema::TypedFunction;
 
 const TYPES: &TypeMap = &TypeMap::C;
+
+/// Everything that differs between CUDA and HIP: API entry points and the
+/// kernel-launch statement. The renderer below is shared verbatim.
+pub(crate) struct Spellings {
+    /// banner label ("CUDA", "HIP")
+    pub label: &'static str,
+    pub includes: &'static [&'static str],
+    pub malloc: &'static str,
+    pub memcpy: &'static str,
+    pub h2d: &'static str,
+    pub d2h: &'static str,
+    pub d2d: &'static str,
+    pub free: &'static str,
+    /// full synchronization statement, e.g. `cudaDeviceSynchronize();`
+    pub sync: &'static str,
+    /// render one kernel-launch statement from (kernel, grid, block, args)
+    pub launch: fn(&str, &str, &str, &str) -> String,
+}
+
+fn cuda_launch(kernel: &str, grid: &str, block: &str, args: &str) -> String {
+    format!("{kernel}<<<{grid}, {block}>>>({args});")
+}
+
+pub(crate) const CUDA_SPELLINGS: Spellings = Spellings {
+    label: "CUDA",
+    includes: &["#include <cuda.h>", "#include <climits>", "#include \"libstarplat_cuda.h\""],
+    malloc: "cudaMalloc",
+    memcpy: "cudaMemcpy",
+    h2d: "cudaMemcpyHostToDevice",
+    d2h: "cudaMemcpyDeviceToHost",
+    d2d: "cudaMemcpyDeviceToDevice",
+    free: "cudaFree",
+    sync: "cudaDeviceSynchronize();",
+    launch: cuda_launch,
+};
 
 pub fn generate(ir: &IrProgram) -> String {
     generate_with(ir, &DevicePlan::build(ir))
@@ -26,90 +66,48 @@ pub fn generate(ir: &IrProgram) -> String {
 /// Render with a pre-built plan ([`super::generate`] lowers once for all
 /// backends).
 pub(crate) fn generate_with(ir: &IrProgram, plan: &DevicePlan) -> String {
-    let mut g = Gen {
-        tf: &ir.tf,
-        plan,
-        cursor: PlanCursor::default(),
-        kernels: CodeBuf::new(),
-        host: CodeBuf::new(),
-    };
+    generate_family(ir, plan, &CUDA_SPELLINGS)
+}
+
+/// Shared CUDA-family entry point: CUDA and HIP differ only in `sp`.
+pub(crate) fn generate_family(
+    ir: &IrProgram,
+    plan: &DevicePlan,
+    sp: &'static Spellings,
+) -> String {
+    let mut g = Gen { tf: &ir.tf, plan, sp, kernels: CodeBuf::new(), host: CodeBuf::new() };
     g.run()
 }
 
 struct Gen<'a> {
     tf: &'a TypedFunction,
     plan: &'a DevicePlan,
-    cursor: PlanCursor,
+    sp: &'static Spellings,
     kernels: CodeBuf,
     host: CodeBuf,
 }
 
 impl<'a> Gen<'a> {
     fn run(&mut self) -> String {
-        let f = self.tf.func.clone(); // detach from `self` for the &mut walk
+        let plan = self.plan;
         self.host.line("");
-        let params = self.plan.host_signature(TYPES);
-        self.host.open(&format!("void {}({}) {{", f.name, params.join(", ")));
-        self.host.line("int V = g.num_nodes();");
-        self.host.line("int E = g.num_edges();");
-        self.host.line("");
-        self.host.line("// §4.1: the static graph is copied to the device once, never back");
-        for arr in &self.plan.graph_arrays {
-            self.host.line(&format!("int* {}; // cudaMalloc'd CSR array", arr.device_name()));
-        }
-        self.host.line("cudaMalloc(&gpu_OA, sizeof(int) * (1 + V));");
-        self.host.line("cudaMalloc(&gpu_edgeList, sizeof(int) * E);");
-        self.host.line(
-            "cudaMemcpy(gpu_OA, g.indexofNodes, sizeof(int) * (1 + V), cudaMemcpyHostToDevice);",
-        );
-        self.host.line(
-            "cudaMemcpy(gpu_edgeList, g.edgeList, sizeof(int) * E, cudaMemcpyHostToDevice);",
-        );
-        for &slot in &self.plan.device_resident {
-            let m = self.plan.meta(slot);
-            let ty = TYPES.name(m.ty);
-            let len = m.len_sym();
-            self.host.line(&format!("{ty}* gpu_{};", m.name));
-            self.host.line(&format!("cudaMalloc(&gpu_{}, sizeof({ty}) * {len});", m.name));
-        }
-        self.host.line("bool* gpu_finished;");
-        self.host.line("cudaMalloc(&gpu_finished, sizeof(bool) * 1);");
-        self.host.line("");
-        self.host.line("unsigned threadsPerBlock = 512;");
-        self.host.line("unsigned numBlocks = (V + threadsPerBlock - 1) / threadsPerBlock;");
-        self.host.line("");
-        self.host_block(&f.body, None);
-        self.host.line("");
-        self.host.line("// §4.1: only updated vertex attributes return to the host");
-        for &slot in &self.plan.outputs {
-            let m = self.plan.meta(slot);
-            let ty = TYPES.name(m.ty);
-            let len = m.len_sym();
-            self.host.line(&format!(
-                "cudaMemcpy({n}, gpu_{n}, sizeof({ty}) * {len}, cudaMemcpyDeviceToHost);",
-                n = m.name
-            ));
-        }
+        let params = plan.host_signature(TYPES);
+        self.host.open(&format!("void {}({}) {{", plan.func, params.join(", ")));
+        render_host_schedule(self, &plan.host_ops, None);
         self.host.close("}");
 
-        let mut out = String::new();
-        out.push_str("// Generated by starplat-rs — CUDA backend\n");
-        for l in self.plan.manifest() {
-            out.push_str("// ");
-            out.push_str(&l);
+        let mut out = super::manifest_header(self.sp.label, plan);
+        for inc in self.sp.includes {
+            out.push_str(inc);
             out.push('\n');
         }
-        out.push_str("#include <cuda.h>\n#include <climits>\n#include \"libstarplat_cuda.h\"\n\n");
+        out.push('\n');
         out.push_str(&std::mem::take(&mut self.kernels).finish());
         out.push_str(&std::mem::take(&mut self.host).finish());
         out
     }
 
-    fn prop_c_ty(&self, p: &str) -> &'static str {
-        self.plan.c_ty_of(p, TYPES)
-    }
-
-    /// CUDA declaration for one plan-ordered kernel parameter.
+    /// Declaration for one plan-ordered kernel parameter.
     fn param_decl(&self, p: &KernelParam) -> String {
         match p {
             KernelParam::NumNodes => "int V".to_string(),
@@ -136,136 +134,102 @@ impl<'a> Gen<'a> {
         }
     }
 
-    /// Emit host-side statements; kernel-site statements launch kernels.
-    fn host_block(&mut self, b: &[Stmt], or_flag: Option<&str>) {
-        for s in b {
-            self.host_stmt(s, or_flag);
+    fn launch_line(&mut self, kernel: &str, grid: &str, block: &str, args: &str) {
+        let line = (self.sp.launch)(kernel, grid, block, args);
+        self.host.line(&line);
+    }
+}
+
+impl<'a> HostDialect for Gen<'a> {
+    fn expr_style(&self) -> Style {
+        cuda_style()
+    }
+
+    fn buf(&mut self) -> &mut CodeBuf {
+        &mut self.host
+    }
+
+    fn decl_dims(&mut self) {
+        self.host.line("int V = g.num_nodes();");
+        self.host.line("int E = g.num_edges();");
+        self.host.line("");
+    }
+
+    fn graph_to_device(&mut self) {
+        self.host.line("// §4.1: the static graph is copied to the device once, never back");
+        for &arr in &self.plan.graph_arrays {
+            let (dev, host, len) = (arr.device_name(), arr.host_name(), arr.len_sym());
+            self.host.line(&format!("int* {dev};"));
+            self.host
+                .line(&format!("{}(&{dev}, sizeof(int) * {len});", self.sp.malloc));
+            self.host.line(&format!(
+                "{}({dev}, {host}, sizeof(int) * {len}, {});",
+                self.sp.memcpy, self.sp.h2d
+            ));
         }
     }
 
-    fn host_stmt(&mut self, s: &Stmt, or_flag: Option<&str>) {
-        let st = cuda_style();
-        match s {
-            Stmt::Decl { ty, name, init, .. } => {
-                if ty.is_prop() {
-                    return; // device-prop declarations were allocated up front
-                }
-                match init {
-                    Some(e) => self.host.line(&format!(
-                        "{} {} = {};",
-                        TYPES.name(ScalarTy::of(ty)),
-                        name,
-                        emit(e, &st)
-                    )),
-                    None => {
-                        self.host.line(&format!("{} {};", TYPES.name(ScalarTy::of(ty)), name))
-                    }
-                }
-            }
-            Stmt::Assign { target, value, .. } => match target {
-                LValue::Var(v) if self.plan.is_node_prop(v) => {
-                    // whole-property device-side copy
-                    let Expr::Var(src) = value else { return };
-                    let ty = self.prop_c_ty(v);
-                    self.host.line(&format!(
-                        "cudaMemcpy(gpu_{v}, gpu_{src}, sizeof({ty}) * V, cudaMemcpyDeviceToDevice);"
-                    ));
-                }
-                LValue::Var(v) => {
-                    self.host.line(&format!("{v} = {};", emit(value, &st)));
-                }
-                LValue::Prop { obj, prop } => {
-                    // single-element device store, e.g. src.sigma = 1
-                    self.host.line(&format!(
-                        "initIndex<{ty}><<<1,1>>>(V, gpu_{prop}, {obj}, ({ty}){val});",
-                        ty = self.prop_c_ty(prop),
-                        val = emit(value, &st)
-                    ));
-                }
-            },
-            Stmt::Reduce { target, op, value, .. } => {
-                if let LValue::Var(v) = target {
-                    self.host.line(&format!("{v} = {v} {} {};", red_sym(*op), emit(value, &st)));
-                }
-            }
-            Stmt::AttachNodeProperty { inits, .. } => {
-                self.cursor.next_kernel(self.plan);
-                for (p, e) in inits {
-                    self.host.line(&format!(
-                        "initKernel<{ty}><<<numBlocks, threadsPerBlock>>>(V, gpu_{p}, ({ty}){v});",
-                        ty = self.prop_c_ty(p),
-                        v = emit(e, &st)
-                    ));
-                }
-            }
-            Stmt::For { parallel: true, iter, body, .. } => {
-                let k = self.cursor.next_kernel(self.plan);
-                self.emit_kernel(k, iter, body, or_flag);
-            }
-            Stmt::For { parallel: false, iter, body, .. } => {
-                self.host.open(&format!("for (int {} : {}) {{", iter.var, set_name(&iter.source)));
-                self.host_block(body, or_flag);
-                self.host.close("}");
-            }
-            Stmt::IterateBFS { var, from, body, reverse, .. } => {
-                let (b, fwd, rev) = self.cursor.next_bfs(self.plan);
-                self.emit_bfs(b, fwd, rev, var, from, body, reverse.as_ref());
-            }
-            Stmt::FixedPoint { var, body, .. } => {
-                // Fig 12's host loop, skeleton from the plan
-                let flag = self.cursor.next_fixed_point(self.plan).flag_name.clone();
-                self.host
-                    .line(&format!("// fixedPoint on `{flag}` via a single device flag (§4.1)"));
-                self.host.line(&format!("bool {var} = false;"));
-                self.host.open(&format!("while (!{var}) {{"));
-                self.host.line(&format!("{var} = true;"));
-                self.host.line(&format!(
-                    "cudaMemcpy(gpu_finished, &{var}, sizeof(bool) * 1, cudaMemcpyHostToDevice);"
-                ));
-                self.host_block(body, Some(&flag));
-                self.host.line(&format!(
-                    "cudaMemcpy(&{var}, gpu_finished, sizeof(bool) * 1, cudaMemcpyDeviceToHost);"
-                ));
-                self.host.close("}");
-            }
-            Stmt::DoWhile { body, cond, .. } => {
-                self.host.open("do {");
-                self.host_block(body, or_flag);
-                self.host.close(&format!("}} while ({});", emit(cond, &cuda_style())));
-            }
-            Stmt::While { cond, body, .. } => {
-                self.host.open(&format!("while ({}) {{", emit(cond, &cuda_style())));
-                self.host_block(body, or_flag);
-                self.host.close("}");
-            }
-            Stmt::If { cond, then, els, .. } => {
-                self.host.open(&format!("if ({}) {{", emit(cond, &cuda_style())));
-                self.host_block(then, or_flag);
-                if let Some(e) = els {
-                    self.host.close("} else {");
-                    self.host.inc();
-                    self.host_block(e, or_flag);
-                }
-                self.host.close("}");
-            }
-            Stmt::Return { value, .. } => {
-                self.host.line(&format!("return {};", emit(value, &cuda_style())));
-            }
-            Stmt::MinMaxAssign { .. } => {
-                self.host.line("/* Min/Max outside parallel context unsupported */");
-            }
+    fn alloc_prop(&mut self, slot: u32) {
+        let m = self.plan.meta(slot);
+        let ty = TYPES.name(m.ty);
+        let len = m.len_sym();
+        self.host.line(&format!("{ty}* gpu_{};", m.name));
+        self.host
+            .line(&format!("{}(&gpu_{}, sizeof({ty}) * {len});", self.sp.malloc, m.name));
+    }
+
+    fn alloc_flag(&mut self) {
+        self.host.line("bool* gpu_finished;");
+        self.host.line(&format!("{}(&gpu_finished, sizeof(bool) * 1);", self.sp.malloc));
+    }
+
+    fn launch_setup(&mut self) {
+        self.host.line("");
+        self.host.line("unsigned threadsPerBlock = 512;");
+        self.host.line("unsigned numBlocks = (V + threadsPerBlock - 1) / threadsPerBlock;");
+        self.host.line("");
+    }
+
+    fn copy_prop(&mut self, dst: u32, src: u32) {
+        let ty = TYPES.name(self.plan.meta(dst).ty);
+        self.host.line(&format!(
+            "{}(gpu_{}, gpu_{}, sizeof({ty}) * V, {});",
+            self.sp.memcpy,
+            self.plan.prop_name(dst),
+            self.plan.prop_name(src),
+            self.sp.d2d
+        ));
+    }
+
+    fn set_element(&mut self, slot: u32, index: &str, value: &Expr) {
+        // single-element device store, e.g. src.sigma = 1
+        let m = self.plan.meta(slot);
+        let ty = TYPES.name(m.ty);
+        let val = emit(value, &cuda_style());
+        let args = format!("V, gpu_{}, {index}, ({ty}){val}", m.name);
+        self.launch_line(&format!("initIndex<{ty}>"), "1", "1", &args);
+    }
+
+    fn init_props(&mut self, _kernel: usize, inits: &[(u32, Expr)]) {
+        for (slot, e) in inits {
+            let m = self.plan.meta(*slot);
+            let ty = TYPES.name(m.ty);
+            let v = emit(e, &cuda_style());
+            let args = format!("V, gpu_{}, ({ty}){v}", m.name);
+            self.launch_line(
+                &format!("initKernel<{ty}>"),
+                "numBlocks",
+                "threadsPerBlock",
+                &args,
+            );
         }
     }
 
     /// Fig 2 / Fig 6 kernel: one thread per vertex + the launch site. The
     /// signature and argument list are the plan's canonical parameter order.
-    fn emit_kernel(
-        &mut self,
-        k: &KernelPlan,
-        iter: &Iterator_,
-        body: &[Stmt],
-        or_flag: Option<&str>,
-    ) {
+    fn launch(&mut self, kernel: usize, iter: &Iterator_, body: &[Stmt], or_flag: Option<&str>) {
+        let plan = self.plan;
+        let k: &KernelPlan = &plan.kernels[kernel];
         let params = k.params(or_flag.is_some());
         let sig: Vec<String> = params.iter().map(|p| self.param_decl(p)).collect();
         self.kernels.open(&format!("__global__ void {}({}) {{", k.name, sig.join(", ")));
@@ -290,7 +254,9 @@ impl<'a> Gen<'a> {
                 m.name
             ));
             self.host.line(&format!(
-                "cudaMemcpy(gpu_{n}, {n}, sizeof({ty}) * {len}, cudaMemcpyHostToDevice);",
+                "{}(gpu_{n}, {n}, sizeof({ty}) * {len}, {});",
+                self.sp.memcpy,
+                self.sp.h2d,
                 n = m.name
             ));
         }
@@ -298,21 +264,19 @@ impl<'a> Gen<'a> {
             let t = TYPES.name(*ty);
             self.host.line(&format!("// device reduction cell for `{r}` (thrust-free, §3.3)"));
             self.host.line(&format!("{t}* d_{r};"));
-            self.host.line(&format!("cudaMalloc(&d_{r}, sizeof({t}));"));
-            self.host.line(&format!(
-                "cudaMemcpy(d_{r}, &{r}, sizeof({t}), cudaMemcpyHostToDevice);"
-            ));
+            self.host.line(&format!("{}(&d_{r}, sizeof({t}));", self.sp.malloc));
+            self.host
+                .line(&format!("{}(d_{r}, &{r}, sizeof({t}), {});", self.sp.memcpy, self.sp.h2d));
         }
         let args: Vec<String> = params.iter().map(|p| self.plan.launch_arg(p)).collect();
-        self.host
-            .line(&format!("{}<<<numBlocks, threadsPerBlock>>>({});", k.name, args.join(", ")));
-        self.host.line("cudaDeviceSynchronize();");
+        let name = k.name.clone();
+        self.launch_line(&name, "numBlocks", "threadsPerBlock", &args.join(", "));
+        self.host.line(self.sp.sync);
         for (r, _, ty) in &k.reductions {
             let t = TYPES.name(*ty);
-            self.host.line(&format!(
-                "cudaMemcpy(&{r}, d_{r}, sizeof({t}), cudaMemcpyDeviceToHost);"
-            ));
-            self.host.line(&format!("cudaFree(d_{r});"));
+            self.host
+                .line(&format!("{}(&{r}, d_{r}, sizeof({t}), {});", self.sp.memcpy, self.sp.d2h));
+            self.host.line(&format!("{}(d_{r});", self.sp.free));
         }
         if !k.defer_to_loop_exit {
             for &c in &k.copy_out {
@@ -320,7 +284,9 @@ impl<'a> Gen<'a> {
                 let ty = TYPES.name(m.ty);
                 let len = m.len_sym();
                 self.host.line(&format!(
-                    "cudaMemcpy({n}, gpu_{n}, sizeof({ty}) * {len}, cudaMemcpyDeviceToHost);",
+                    "{}({n}, gpu_{n}, sizeof({ty}) * {len}, {});",
+                    self.sp.memcpy,
+                    self.sp.d2h,
                     n = m.name
                 ));
             }
@@ -329,16 +295,18 @@ impl<'a> Gen<'a> {
 
     /// Fig 9: host do-while over levels + BFS kernel(s), skeleton from the
     /// plan's [`crate::ir::plan::BfsPlan`].
-    fn emit_bfs(
+    fn bfs(
         &mut self,
-        b: &BfsPlan,
-        fwd: &KernelPlan,
-        rev: Option<&KernelPlan>,
+        index: usize,
         var: &str,
         from: &str,
         body: &[Stmt],
         reverse: Option<&(Expr, Block)>,
     ) {
+        let plan = self.plan;
+        let b = &plan.bfs_loops[index];
+        let fwd = &plan.kernels[b.fwd];
+        let rev = b.rev.map(|i| &plan.kernels[i]);
         // the skeleton binds level/depth/finished itself; remaining buffers
         // come from the plan's parameter list. A declared level property
         // keeps its plan type; the implicit buffer (e.g. BC) is int.
@@ -362,8 +330,7 @@ impl<'a> Gen<'a> {
         self.kernels.line(&format!("if ({var} >= V) return;"));
         self.kernels.open(&format!("if (gpu_level[{var}] == *d_hops_from_source) {{"));
         // wavefront expansion
-        self.kernels
-            .open(&format!("for (int i = gpu_OA[{var}]; i < gpu_OA[{var}+1]; ++i) {{"));
+        self.kernels.open(&format!("for (int i = gpu_OA[{var}]; i < gpu_OA[{var}+1]; ++i) {{"));
         self.kernels.line("int nbr = gpu_edgeList[i];");
         self.kernels.open("if (gpu_level[nbr] == -1) {");
         self.kernels.line("gpu_level[nbr] = *d_hops_from_source + 1;");
@@ -380,35 +347,43 @@ impl<'a> Gen<'a> {
         if b.level.is_none() {
             // implicit level buffer (e.g. BC): allocated by the skeleton
             self.host.line("int* gpu_level;");
-            self.host.line("cudaMalloc(&gpu_level, sizeof(int) * V);");
+            self.host.line(&format!("{}(&gpu_level, sizeof(int) * V);", self.sp.malloc));
         }
         self.host.line("int* d_hops_from_source;");
-        self.host.line("cudaMalloc(&d_hops_from_source, sizeof(int) * 1);");
+        self.host.line(&format!("{}(&d_hops_from_source, sizeof(int) * 1);", self.sp.malloc));
         self.host.line("bool* d_finished;");
-        self.host.line("cudaMalloc(&d_finished, sizeof(bool) * 1);");
-        self.host.line(&format!(
-            "initKernel<{lt}><<<numBlocks, threadsPerBlock>>>(V, gpu_level, -1);"
-        ));
-        self.host.line(&format!("initIndex<{lt}><<<1,1>>>(V, gpu_level, {from}, 0);"));
-        self.host.line("int hops_from_source = 0;");
-        self.host.line(
-            "cudaMemcpy(d_hops_from_source, &hops_from_source, sizeof(int), cudaMemcpyHostToDevice);",
+        self.host.line(&format!("{}(&d_finished, sizeof(bool) * 1);", self.sp.malloc));
+        self.launch_line(
+            &format!("initKernel<{lt}>"),
+            "numBlocks",
+            "threadsPerBlock",
+            "V, gpu_level, -1",
         );
+        self.launch_line(&format!("initIndex<{lt}>"), "1", "1", &format!("V, gpu_level, {from}, 0"));
+        self.host.line("int hops_from_source = 0;");
+        self.host.line(&format!(
+            "{}(d_hops_from_source, &hops_from_source, sizeof(int), {});",
+            self.sp.memcpy, self.sp.h2d
+        ));
         self.host.line("bool finished;");
         self.host.open("do {");
         self.host.line("finished = true;");
-        self.host.line("cudaMemcpy(d_finished, &finished, sizeof(bool), cudaMemcpyHostToDevice);");
         self.host.line(&format!(
-            "{}<<<numBlocks, threadsPerBlock>>>({});",
-            fwd.name,
-            args.join(", ")
+            "{}(d_finished, &finished, sizeof(bool), {});",
+            self.sp.memcpy, self.sp.h2d
         ));
-        self.host.line("cudaDeviceSynchronize();");
+        let name = fwd.name.clone();
+        self.launch_line(&name, "numBlocks", "threadsPerBlock", &args.join(", "));
+        self.host.line(self.sp.sync);
         self.host.line("++hops_from_source;");
-        self.host.line(
-            "cudaMemcpy(d_hops_from_source, &hops_from_source, sizeof(int), cudaMemcpyHostToDevice);",
-        );
-        self.host.line("cudaMemcpy(&finished, d_finished, sizeof(bool), cudaMemcpyDeviceToHost);");
+        self.host.line(&format!(
+            "{}(d_hops_from_source, &hops_from_source, sizeof(int), {});",
+            self.sp.memcpy, self.sp.h2d
+        ));
+        self.host.line(&format!(
+            "{}(&finished, d_finished, sizeof(bool), {});",
+            self.sp.memcpy, self.sp.d2h
+        ));
         self.host.close("} while (!finished);");
         // reverse pass
         if let (Some(rk), Some((cond, rbody))) = (rev, reverse) {
@@ -437,31 +412,75 @@ impl<'a> Gen<'a> {
             self.kernels.line("");
             self.host.line("// iterateInReverse: walk the BFS levels backwards");
             self.host.open("while (hops_from_source >= 0) {");
-            self.host.line(
-                "cudaMemcpy(d_hops_from_source, &hops_from_source, sizeof(int), cudaMemcpyHostToDevice);",
-            );
             self.host.line(&format!(
-                "{}<<<numBlocks, threadsPerBlock>>>({});",
-                rk.name,
-                rargs.join(", ")
+                "{}(d_hops_from_source, &hops_from_source, sizeof(int), {});",
+                self.sp.memcpy, self.sp.h2d
             ));
-            self.host.line("cudaDeviceSynchronize();");
+            let rname = rk.name.clone();
+            self.launch_line(&rname, "numBlocks", "threadsPerBlock", &rargs.join(", "));
+            self.host.line(self.sp.sync);
             self.host.line("--hops_from_source;");
             self.host.close("}");
         }
         // skeleton-owned buffers are allocated at the BFS site (which may sit
         // inside a host loop, e.g. BC's per-source sweep), so free them here
-        self.host.line("cudaFree(d_hops_from_source);");
-        self.host.line("cudaFree(d_finished);");
+        self.host.line(&format!("{}(d_hops_from_source);", self.sp.free));
+        self.host.line(&format!("{}(d_finished);", self.sp.free));
         if b.level.is_none() {
-            self.host.line("cudaFree(gpu_level);");
+            self.host.line(&format!("{}(gpu_level);", self.sp.free));
         }
     }
-}
 
-fn set_name(src: &IterSource) -> String {
-    match src {
-        IterSource::Set { set } => set.clone(),
-        _ => "/*nodes*/".to_string(),
+    fn fixed_point_enter(&mut self, index: usize, var: &str) -> String {
+        // Fig 12's host loop, skeleton from the plan
+        let flag = self.plan.fixed_points[index].flag_name.clone();
+        self.host.line(&format!("// fixedPoint on `{flag}` via a single device flag (§4.1)"));
+        self.host.line(&format!("bool {var} = false;"));
+        self.host.open(&format!("while (!{var}) {{"));
+        self.host.line(&format!("{var} = true;"));
+        self.host.line(&format!(
+            "{}(gpu_finished, &{var}, sizeof(bool) * 1, {});",
+            self.sp.memcpy, self.sp.h2d
+        ));
+        flag
+    }
+
+    fn fixed_point_exit(&mut self, var: &str) {
+        self.host.line(&format!(
+            "{}(&{var}, gpu_finished, sizeof(bool) * 1, {});",
+            self.sp.memcpy, self.sp.d2h
+        ));
+        self.host.close("}");
+    }
+
+    fn epilogue_begin(&mut self) {
+        self.host.line("");
+        self.host.line("// §4.1: only updated vertex attributes return to the host");
+    }
+
+    fn copy_out(&mut self, slot: u32) {
+        let m = self.plan.meta(slot);
+        let ty = TYPES.name(m.ty);
+        let len = m.len_sym();
+        self.host.line(&format!(
+            "{}({n}, gpu_{n}, sizeof({ty}) * {len}, {});",
+            self.sp.memcpy,
+            self.sp.d2h,
+            n = m.name
+        ));
+    }
+
+    fn free_prop(&mut self, slot: u32) {
+        self.host.line(&format!("{}(gpu_{});", self.sp.free, self.plan.prop_name(slot)));
+    }
+
+    fn free_flag(&mut self) {
+        self.host.line(&format!("{}(gpu_finished);", self.sp.free));
+    }
+
+    fn free_graph(&mut self) {
+        for &arr in &self.plan.graph_arrays {
+            self.host.line(&format!("{}({});", self.sp.free, arr.device_name()));
+        }
     }
 }

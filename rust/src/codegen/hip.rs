@@ -1,0 +1,75 @@
+//! HIP backend — the fifth text renderer, and the proof of the plan-carried
+//! host lowering: HIP contributes *spellings only* (hipMalloc / hipMemcpy /
+//! `hipLaunchKernelGGL`), reusing the CUDA-family renderer in
+//! [`super::cuda`] verbatim. There is zero lowering in this module — the
+//! buffer slots, kernel parameter lists, §4 transfer steps, and the whole
+//! host-statement schedule come from [`DevicePlan`], exactly as they do for
+//! CUDA, which is why `tests/host_schedule_conformance.rs` can pin
+//! HIP↔CUDA launch-argument agreement byte for byte.
+//!
+//! Spelling notes (ROCm):
+//! - device code keeps the `__global__` qualifier and `blockIdx`/`blockDim`
+//!   builtins — HIP compiles the CUDA kernel dialect as-is;
+//! - launches use the portable `hipLaunchKernelGGL(kernel, dim3(grid),
+//!   dim3(block), sharedMem, stream, args...)` macro instead of the
+//!   `<<<>>>` chevron syntax, with template instantiations wrapped in
+//!   `HIP_KERNEL_NAME(...)` as the HIP porting guide requires;
+//! - the runtime API is the CUDA API with the `hip` prefix
+//!   (`hipMemcpyHostToDevice`, `hipDeviceSynchronize`, …).
+
+use super::cuda::{generate_family, Spellings};
+use crate::ir::plan::DevicePlan;
+use crate::ir::IrProgram;
+
+fn hip_launch(kernel: &str, grid: &str, block: &str, args: &str) -> String {
+    // template instantiations (initKernel<int>, …) need HIP_KERNEL_NAME
+    let kref = if kernel.contains('<') {
+        format!("HIP_KERNEL_NAME({kernel})")
+    } else {
+        kernel.to_string()
+    };
+    format!("hipLaunchKernelGGL({kref}, dim3({grid}), dim3({block}), 0, 0, {args});")
+}
+
+pub(crate) const HIP_SPELLINGS: Spellings = Spellings {
+    label: "HIP",
+    includes: &[
+        "#include <hip/hip_runtime.h>",
+        "#include <climits>",
+        "#include \"libstarplat_hip.h\"",
+    ],
+    malloc: "hipMalloc",
+    memcpy: "hipMemcpy",
+    h2d: "hipMemcpyHostToDevice",
+    d2h: "hipMemcpyDeviceToHost",
+    d2d: "hipMemcpyDeviceToDevice",
+    free: "hipFree",
+    sync: "hipDeviceSynchronize();",
+    launch: hip_launch,
+};
+
+pub fn generate(ir: &IrProgram) -> String {
+    generate_with(ir, &DevicePlan::build(ir))
+}
+
+/// Render with a pre-built plan ([`super::generate`] lowers once for all
+/// backends).
+pub(crate) fn generate_with(ir: &IrProgram, plan: &DevicePlan) -> String {
+    generate_family(ir, plan, &HIP_SPELLINGS)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn launch_spelling_wraps_templates_only() {
+        let plain = hip_launch("Compute_SSSP_kernel_1", "numBlocks", "threadsPerBlock", "V, x");
+        assert_eq!(
+            plain,
+            "hipLaunchKernelGGL(Compute_SSSP_kernel_1, dim3(numBlocks), dim3(threadsPerBlock), 0, 0, V, x);"
+        );
+        let templated = hip_launch("initKernel<int>", "numBlocks", "threadsPerBlock", "V, p, 0");
+        assert!(templated.starts_with("hipLaunchKernelGGL(HIP_KERNEL_NAME(initKernel<int>),"));
+    }
+}

@@ -6,16 +6,21 @@
 //! clauses on the loop pragma (Fig 7).
 //!
 //! A thin renderer over [`DevicePlan`]: the data-clause buffer sets, local
-//! property arrays, reduction clauses, and host-loop skeletons come from the
-//! plan; this module contributes pragma syntax only.
+//! property arrays, reduction clauses, and the entire host-statement
+//! schedule come from the plan — this module is the OpenACC
+//! [`HostDialect`], driven by [`super::render_host_schedule`]. Because the
+//! data region owns all transfers, most transfer-shaped [`HostOp`]s
+//! (graph H2D, flag allocation, copy-outs) render to nothing here; the
+//! promoted region opens at the `LaunchSetup` op (after the local `new[]`
+//! allocations) and closes at `EpilogueBegin`.
 
 use super::body::{emit_block, BfsDir, BodyCtx, Target};
 use super::buf::CodeBuf;
-use super::cexpr::{emit, openacc_style};
-use super::red_sym;
-use crate::dsl::ast::*;
-use crate::ir::plan::{DevicePlan, GraphArray, PlanCursor, TypeMap};
-use crate::ir::{IrProgram, ScalarTy};
+use super::cexpr::{emit, openacc_style, Style};
+use super::{red_sym, render_host_schedule, HostDialect};
+use crate::dsl::ast::{Block, Expr, Iterator_, Stmt};
+use crate::ir::plan::{DevicePlan, GraphArray, PropMeta, TypeMap};
+use crate::ir::IrProgram;
 use crate::sema::TypedFunction;
 
 const TYPES: &TypeMap = &TypeMap::C;
@@ -27,14 +32,13 @@ pub fn generate(ir: &IrProgram) -> String {
 /// Render with a pre-built plan ([`super::generate`] lowers once for all
 /// backends).
 pub(crate) fn generate_with(ir: &IrProgram, plan: &DevicePlan) -> String {
-    let mut g = Gen { tf: &ir.tf, plan, cursor: PlanCursor::default(), buf: CodeBuf::new() };
+    let mut g = Gen { tf: &ir.tf, plan, buf: CodeBuf::new() };
     g.run()
 }
 
 struct Gen<'a> {
     tf: &'a TypedFunction,
     plan: &'a DevicePlan,
-    cursor: PlanCursor,
     buf: CodeBuf,
 }
 
@@ -52,26 +56,58 @@ impl<'a> Gen<'a> {
     }
 
     fn run(&mut self) -> String {
-        let f = self.tf.func.clone(); // detach from `self` for the &mut walk
-        self.buf.line("// Generated by starplat-rs — OpenACC backend");
-        for l in self.plan.manifest() {
-            self.buf.line(&format!("// {l}"));
-        }
+        let plan = self.plan;
+        let mut out = super::manifest_header("OpenACC", plan);
         self.buf.line("#include <climits>");
         self.buf.line("#include \"libstarplat_acc.h\"");
         self.buf.line("");
-        let params = self.plan.host_signature(TYPES);
-        self.buf.open(&format!("void {}({}) {{", f.name, params.join(", ")));
+        let params = plan.host_signature(TYPES);
+        self.buf.open(&format!("void {}({}) {{", plan.func, params.join(", ")));
+        render_host_schedule(self, &plan.host_ops, None);
+        self.buf.close("}");
+        out.push_str(&std::mem::take(&mut self.buf).finish());
+        out
+    }
+
+    /// Is this buffer a locally-`new[]`ed property array (declared in the
+    /// body, node-sized)?
+    fn is_local(m: &PropMeta) -> bool {
+        !m.param && !m.edge
+    }
+}
+
+impl<'a> HostDialect for Gen<'a> {
+    fn expr_style(&self) -> Style {
+        openacc_style()
+    }
+
+    fn buf(&mut self) -> &mut CodeBuf {
+        &mut self.buf
+    }
+
+    fn decl_dims(&mut self) {
         self.buf.line("int num_nodes = g.num_nodes();");
-        // locally-declared property arrays (non-parameter buffers in the plan)
-        for m in self.local_props() {
-            self.buf.line(&format!(
-                "{ty}* {p} = new {ty}[g.num_nodes()];",
-                ty = TYPES.name(m.1),
-                p = m.0
-            ));
+    }
+
+    fn graph_to_device(&mut self) {
+        // the promoted data region (opened at launch_setup) owns the graph
+    }
+
+    fn alloc_prop(&mut self, slot: u32) {
+        let m = self.plan.meta(slot);
+        if Self::is_local(m) {
+            let ty = TYPES.name(m.ty);
+            self.buf.line(&format!("{ty}* {} = new {ty}[g.num_nodes()];", m.name));
         }
-        // §4.2: one promoted data region for the whole function (Fig 3)
+    }
+
+    fn alloc_flag(&mut self) {
+        // fixedPoint convergence is a plain host flag word under OpenACC
+    }
+
+    /// §4.2: open the one promoted data region for the whole function
+    /// (Fig 3) — after the local `new[]` allocations, before the body.
+    fn launch_setup(&mut self) {
         self.buf.line("");
         self.buf.line("// §4.2: data clauses promoted out of the loops — graph arrays and");
         self.buf.line("// all device-resident properties transfer once");
@@ -108,202 +144,157 @@ impl<'a> Gen<'a> {
             self.buf.line(&format!("  copy({})", copies.join(", ")));
         }
         self.buf.open("{");
-        self.host_block(&f.body, None);
-        self.buf.close("}");
-        self.buf.close("}");
-        for m in self.local_props() {
-            self.buf.line(&format!("delete[] {};", m.0));
-        }
-        self.buf.close("}");
-        std::mem::take(&mut self.buf).finish()
     }
 
-    /// Properties declared in the body (plan buffers that are not
-    /// parameters), in slot order.
-    fn local_props(&self) -> Vec<(String, ScalarTy)> {
-        self.plan
-            .props
-            .metas()
+    fn copy_prop(&mut self, dst: u32, src: u32) {
+        self.buf.line("#pragma acc parallel loop");
+        self.buf.open("for (int i = 0; i < g.num_nodes(); i++) {");
+        self.buf.line(&format!(
+            "{}[i] = {}[i];",
+            self.plan.prop_name(dst),
+            self.plan.prop_name(src)
+        ));
+        self.buf.close("}");
+    }
+
+    fn set_element(&mut self, slot: u32, index: &str, value: &Expr) {
+        self.buf.line(&format!(
+            "{}[{index}] = {};",
+            self.plan.prop_name(slot),
+            emit(value, &openacc_style())
+        ));
+    }
+
+    fn init_props(&mut self, _kernel: usize, inits: &[(u32, Expr)]) {
+        self.buf.line("#pragma acc parallel loop");
+        self.buf.open("for (int v = 0; v < g.num_nodes(); v++) {");
+        for (slot, e) in inits {
+            self.buf.line(&format!(
+                "{}[v] = {};",
+                self.plan.prop_name(*slot),
+                emit(e, &openacc_style())
+            ));
+        }
+        self.buf.close("}");
+    }
+
+    fn launch(&mut self, kernel: usize, iter: &Iterator_, body: &[Stmt], or_flag: Option<&str>) {
+        let plan = self.plan;
+        let k = &plan.kernels[kernel];
+        // Fig 7: reduction clause for scalar reductions, from the plan
+        let mut pragma = "#pragma acc parallel loop".to_string();
+        let reds: Vec<String> = k
+            .reductions
             .iter()
-            .filter(|m| !m.param && !m.edge)
-            .map(|m| (m.name.clone(), m.ty))
-            .collect()
+            .map(|(r, op, _)| format!("reduction({}: {r})", red_sym(*op)))
+            .collect();
+        if !reds.is_empty() {
+            pragma = format!("{pragma} {}", reds.join(" "));
+        }
+        self.buf.line(&pragma);
+        self.buf
+            .open(&format!("for (int {v} = 0; {v} < g.num_nodes(); {v}++) {{", v = iter.var));
+        if let Some(f) = &iter.filter {
+            let fe = super::simplify_bool_cmp(&super::resolve_filter(f, &iter.var, self.tf));
+            self.buf.line(&format!("if (!({})) continue;", emit(&fe, &openacc_style())));
+        }
+        let cx = self.body_ctx(None, or_flag);
+        emit_block(body, &cx, &mut self.buf);
+        self.buf.close("}");
     }
 
-    fn host_block(&mut self, b: &[Stmt], or_flag: Option<&str>) {
-        for s in b {
-            self.host_stmt(s, or_flag);
+    fn bfs(
+        &mut self,
+        index: usize,
+        var: &str,
+        from: &str,
+        body: &[Stmt],
+        reverse: Option<&(Expr, Block)>,
+    ) {
+        let implicit_level = self.plan.bfs_loops[index].level.is_none();
+        self.buf.line("// iterateInBFS (§3.4): do-while over levels on the host");
+        if implicit_level {
+            // implicit level buffer (e.g. BC): owned by the skeleton
+            self.buf.line("int* level = new int[g.num_nodes()];");
+        }
+        self.buf.line("#pragma acc parallel loop");
+        self.buf.open("for (int i = 0; i < g.num_nodes(); i++) { level[i] = -1; }");
+        self.buf.close("");
+        self.buf.line(&format!("level[{from}] = 0;"));
+        self.buf.line("int hops_from_source = 0;");
+        self.buf.line("bool finished;");
+        self.buf.open("do {");
+        self.buf.line("finished = true;");
+        self.buf.line("#pragma acc parallel loop");
+        self.buf.open(&format!("for (int {var} = 0; {var} < g.num_nodes(); {var}++) {{"));
+        self.buf.open(&format!("if (level[{var}] == hops_from_source) {{"));
+        self.buf.open(&format!(
+            "for (int ee = g.indexofNodes[{var}]; ee < g.indexofNodes[{var}+1]; ee++) {{"
+        ));
+        self.buf.line("int nbr = g.edgeList[ee];");
+        self.buf.open("if (level[nbr] == -1) {");
+        self.buf.line("level[nbr] = hops_from_source + 1;");
+        self.buf.line("finished = false;");
+        self.buf.close("}");
+        self.buf.close("}");
+        let cx = self.body_ctx(Some(BfsDir::Forward), None);
+        emit_block(body, &cx, &mut self.buf);
+        self.buf.close("}");
+        self.buf.close("}");
+        self.buf.line("++hops_from_source;");
+        self.buf.close("} while (!finished);");
+        if let Some((cond, rbody)) = reverse {
+            self.buf.line("// iterateInReverse: walk levels backwards");
+            self.buf.open("while (--hops_from_source >= 0) {");
+            self.buf.line("#pragma acc parallel loop");
+            self.buf.open(&format!("for (int {var} = 0; {var} < g.num_nodes(); {var}++) {{"));
+            self.buf.line(&format!("if (level[{var}] != hops_from_source) continue;"));
+            let ce = super::simplify_bool_cmp(&super::resolve_filter(cond, var, self.tf));
+            self.buf.line(&format!("if (!({})) continue;", emit(&ce, &openacc_style())));
+            let cx = self.body_ctx(Some(BfsDir::Reverse), None);
+            emit_block(rbody, &cx, &mut self.buf);
+            self.buf.close("}");
+            self.buf.close("}");
+        }
+        if implicit_level {
+            self.buf.line("delete[] level;");
         }
     }
 
-    fn host_stmt(&mut self, s: &Stmt, or_flag: Option<&str>) {
-        let st = openacc_style();
-        match s {
-            Stmt::Decl { ty, name, init, .. } => {
-                if ty.is_prop() {
-                    return; // hoisted
-                }
-                match init {
-                    Some(e) => self.buf.line(&format!(
-                        "{} {} = {};",
-                        TYPES.name(ScalarTy::of(ty)),
-                        name,
-                        emit(e, &st)
-                    )),
-                    None => {
-                        self.buf.line(&format!("{} {};", TYPES.name(ScalarTy::of(ty)), name))
-                    }
-                }
-            }
-            Stmt::AttachNodeProperty { inits, .. } => {
-                self.cursor.next_kernel(self.plan);
-                self.buf.line("#pragma acc parallel loop");
-                self.buf.open("for (int v = 0; v < g.num_nodes(); v++) {");
-                for (p, e) in inits {
-                    self.buf.line(&format!("{p}[v] = {};", emit(e, &st)));
-                }
-                self.buf.close("}");
-            }
-            Stmt::For { parallel: true, iter, body, .. } => {
-                let k = self.cursor.next_kernel(self.plan);
-                // Fig 7: reduction clause for scalar reductions, from the plan
-                let mut pragma = "#pragma acc parallel loop".to_string();
-                let reds: Vec<String> = k
-                    .reductions
-                    .iter()
-                    .map(|(r, op, _)| format!("reduction({}: {r})", red_sym(*op)))
-                    .collect();
-                if !reds.is_empty() {
-                    pragma = format!("{pragma} {}", reds.join(" "));
-                }
-                self.buf.line(&pragma);
-                self.buf.open(&format!(
-                    "for (int {v} = 0; {v} < g.num_nodes(); {v}++) {{",
-                    v = iter.var
-                ));
-                if let Some(f) = &iter.filter {
-                    let fe = super::simplify_bool_cmp(&super::resolve_filter(
-                        f,
-                        &iter.var,
-                        self.tf,
-                    ));
-                    self.buf.line(&format!("if (!({})) continue;", emit(&fe, &st)));
-                }
-                let cx = self.body_ctx(None, or_flag);
-                emit_block(body, &cx, &mut self.buf);
-                self.buf.close("}");
-            }
-            Stmt::For { parallel: false, iter, body, .. } => {
-                let set = match &iter.source {
-                    IterSource::Set { set } => set.clone(),
-                    _ => "g.nodes()".into(),
-                };
-                self.buf.open(&format!("for (int {} : {set}) {{", iter.var));
-                self.host_block(body, or_flag);
-                self.buf.close("}");
-            }
-            Stmt::IterateBFS { var, from, body, reverse, .. } => {
-                let _ = self.cursor.next_bfs(self.plan);
-                self.buf.line("// iterateInBFS (§3.4): do-while over levels on the host");
-                self.buf.line("#pragma acc parallel loop");
-                self.buf.open("for (int i = 0; i < g.num_nodes(); i++) { level[i] = -1; }");
-                self.buf.close("");
-                self.buf.line(&format!("level[{from}] = 0;"));
-                self.buf.line("int hops_from_source = 0;");
-                self.buf.line("bool finished;");
-                self.buf.open("do {");
-                self.buf.line("finished = true;");
-                self.buf.line("#pragma acc parallel loop");
-                self.buf
-                    .open(&format!("for (int {var} = 0; {var} < g.num_nodes(); {var}++) {{"));
-                self.buf.open(&format!("if (level[{var}] == hops_from_source) {{"));
-                self.buf.open(&format!(
-                    "for (int ee = g.indexofNodes[{var}]; ee < g.indexofNodes[{var}+1]; ee++) {{"
-                ));
-                self.buf.line("int nbr = g.edgeList[ee];");
-                self.buf.open("if (level[nbr] == -1) {");
-                self.buf.line("level[nbr] = hops_from_source + 1;");
-                self.buf.line("finished = false;");
-                self.buf.close("}");
-                self.buf.close("}");
-                let cx = self.body_ctx(Some(BfsDir::Forward), None);
-                emit_block(body, &cx, &mut self.buf);
-                self.buf.close("}");
-                self.buf.close("}");
-                self.buf.line("++hops_from_source;");
-                self.buf.close("} while (!finished);");
-                if let Some((cond, rbody)) = reverse {
-                    self.buf.line("// iterateInReverse: walk levels backwards");
-                    self.buf.open("while (--hops_from_source >= 0) {");
-                    self.buf.line("#pragma acc parallel loop");
-                    self.buf.open(&format!(
-                        "for (int {var} = 0; {var} < g.num_nodes(); {var}++) {{"
-                    ));
-                    self.buf.line(&format!("if (level[{var}] != hops_from_source) continue;"));
-                    let ce =
-                        super::simplify_bool_cmp(&super::resolve_filter(cond, var, self.tf));
-                    self.buf.line(&format!("if (!({})) continue;", emit(&ce, &st)));
-                    let cx = self.body_ctx(Some(BfsDir::Reverse), None);
-                    emit_block(rbody, &cx, &mut self.buf);
-                    self.buf.close("}");
-                    self.buf.close("}");
-                }
-            }
-            Stmt::FixedPoint { var, body, .. } => {
-                let flag = self.cursor.next_fixed_point(self.plan).flag_name.clone();
-                self.buf.line(&format!("// fixedPoint on `{flag}` (§4.2: host flag word)"));
-                self.buf.line(&format!("bool {var} = false;"));
-                self.buf.open(&format!("while (!{var}) {{"));
-                self.buf.line(&format!("{var} = true;"));
-                self.buf.line("bool finished = true;");
-                self.host_block(body, Some(&flag));
-                self.buf.line(&format!("{var} = finished;"));
-                self.buf.close("}");
-            }
-            Stmt::Assign { target, value, .. } => match target {
-                LValue::Var(v) if self.plan.is_node_prop(v) => {
-                    let Expr::Var(src) = value else { return };
-                    self.buf.line("#pragma acc parallel loop");
-                    self.buf.open("for (int i = 0; i < g.num_nodes(); i++) {");
-                    self.buf.line(&format!("{v}[i] = {src}[i];"));
-                    self.buf.close("}");
-                }
-                LValue::Var(v) => self.buf.line(&format!("{v} = {};", emit(value, &st))),
-                LValue::Prop { obj, prop } => {
-                    self.buf.line(&format!("{prop}[{obj}] = {};", emit(value, &st)))
-                }
-            },
-            Stmt::Reduce { target, op, value, .. } => {
-                if let LValue::Var(v) = target {
-                    self.buf.line(&format!("{v} = {v} {} {};", red_sym(*op), emit(value, &st)));
-                }
-            }
-            Stmt::DoWhile { body, cond, .. } => {
-                self.buf.open("do {");
-                self.host_block(body, or_flag);
-                self.buf.close(&format!("}} while ({});", emit(cond, &st)));
-            }
-            Stmt::While { cond, body, .. } => {
-                self.buf.open(&format!("while ({}) {{", emit(cond, &st)));
-                self.host_block(body, or_flag);
-                self.buf.close("}");
-            }
-            Stmt::If { cond, then, els, .. } => {
-                self.buf.open(&format!("if ({}) {{", emit(cond, &st)));
-                self.host_block(then, or_flag);
-                if let Some(e) = els {
-                    self.buf.close("} else {");
-                    self.buf.inc();
-                    self.host_block(e, or_flag);
-                }
-                self.buf.close("}");
-            }
-            Stmt::Return { value, .. } => {
-                self.buf.line(&format!("return {};", emit(value, &st)));
-            }
-            Stmt::MinMaxAssign { .. } => {
-                self.buf.line("/* Min/Max outside a parallel loop unsupported */");
-            }
+    fn fixed_point_enter(&mut self, index: usize, var: &str) -> String {
+        let flag = self.plan.fixed_points[index].flag_name.clone();
+        self.buf.line(&format!("// fixedPoint on `{flag}` (§4.2: host flag word)"));
+        self.buf.line(&format!("bool {var} = false;"));
+        self.buf.open(&format!("while (!{var}) {{"));
+        self.buf.line(&format!("{var} = true;"));
+        self.buf.line("bool finished = true;");
+        flag
+    }
+
+    fn fixed_point_exit(&mut self, var: &str) {
+        self.buf.line(&format!("{var} = finished;"));
+        self.buf.close("}");
+    }
+
+    /// Close the promoted data regions: the `copy(...)` clause returns the
+    /// outputs here, so the CopyOut ops render to nothing.
+    fn epilogue_begin(&mut self) {
+        self.buf.close("}");
+        self.buf.close("}");
+    }
+
+    fn copy_out(&mut self, _slot: u32) {
+        // handled by the data region's copy(...) clause
+    }
+
+    fn free_prop(&mut self, slot: u32) {
+        let m = self.plan.meta(slot);
+        if Self::is_local(m) {
+            self.buf.line(&format!("delete[] {};", m.name));
         }
     }
+
+    fn free_flag(&mut self) {}
+
+    fn free_graph(&mut self) {}
 }

@@ -5,21 +5,21 @@
 //! Float/double atomics are simulated with `atomic_cmpxchg` (§3.3), and
 //! booleans are `int` — resolved by [`TypeMap::OPENCL`] in the device plan,
 //! not here. A thin renderer over [`DevicePlan`]: buffers, parameter lists,
-//! kernel numbering, and host-loop skeletons all come from the plan.
+//! kernel numbering, and the entire host-statement schedule come from the
+//! plan; this module is the OpenCL [`HostDialect`] — spellings only, driven
+//! by [`super::render_host_schedule`].
 
 use super::body::{emit_block, BfsDir, BodyCtx, Target};
 use super::buf::CodeBuf;
-use super::cexpr::{emit, opencl_style};
-use super::red_sym;
-use crate::dsl::ast::*;
-use crate::ir::plan::{DevicePlan, KernelParam, KernelPlan, PlanCursor, TypeMap};
-use crate::ir::{IrProgram, ScalarTy};
+use super::cexpr::{emit, opencl_style, Style};
+use super::{render_host_schedule, HostDialect};
+use crate::dsl::ast::{Block, Expr, Iterator_, Stmt};
+use crate::ir::plan::{DevicePlan, KernelParam, KernelPlan, TypeMap};
+use crate::ir::IrProgram;
 use crate::sema::TypedFunction;
 
 /// Device-side types (bool → int, 64-bit → `long`).
 const DEV: &TypeMap = &TypeMap::OPENCL;
-/// Host halves are C++: plain C types.
-const HOST: &TypeMap = &TypeMap::C;
 
 pub fn generate(ir: &IrProgram) -> String {
     generate_with(ir, &DevicePlan::build(ir))
@@ -28,29 +28,18 @@ pub fn generate(ir: &IrProgram) -> String {
 /// Render with a pre-built plan ([`super::generate`] lowers once for all
 /// backends).
 pub(crate) fn generate_with(ir: &IrProgram, plan: &DevicePlan) -> String {
-    let mut g = Gen {
-        tf: &ir.tf,
-        plan,
-        cursor: PlanCursor::default(),
-        kernels: CodeBuf::new(),
-        host: CodeBuf::new(),
-    };
+    let mut g = Gen { tf: &ir.tf, plan, kernels: CodeBuf::new(), host: CodeBuf::new() };
     g.run()
 }
 
 struct Gen<'a> {
     tf: &'a TypedFunction,
     plan: &'a DevicePlan,
-    cursor: PlanCursor,
     kernels: CodeBuf,
     host: CodeBuf,
 }
 
 impl<'a> Gen<'a> {
-    fn prop_c_ty(&self, p: &str) -> &'static str {
-        self.plan.c_ty_of(p, DEV)
-    }
-
     /// `__kernel` signature entry for one plan-ordered parameter.
     fn param_decl(&self, p: &KernelParam) -> String {
         match p {
@@ -81,64 +70,19 @@ impl<'a> Gen<'a> {
     }
 
     fn run(&mut self) -> String {
-        let f = self.tf.func.clone(); // detach from `self` for the &mut walk
+        let plan = self.plan;
         self.kernels.line("// ---- kernels.cl ----");
         self.kernels.line("");
-        let params = self.plan.host_signature(HOST);
+        let params = plan.host_signature(&TypeMap::C);
         self.host.line("// ---- host.cpp ----");
         self.host.line("#include <CL/cl.h>");
         self.host.line("#include \"libstarplat_ocl.h\"");
         self.host.line("");
-        self.host.open(&format!("void {}({}) {{", f.name, params.join(", ")));
-        self.host.line("cl_int status;");
-        self.host.line("int V = g.num_nodes();");
-        self.host.line("int E = g.num_edges();");
-        self.host.line("// context/queue/program setup elided to libstarplat_ocl.h helpers");
-        self.host.line(
-            "cl_mem gpu_OA = clCreateBuffer(context, CL_MEM_READ_ONLY, sizeof(int)*(1+V), NULL, &status);",
-        );
-        self.host.line(
-            "cl_mem gpu_edgeList = clCreateBuffer(context, CL_MEM_READ_ONLY, sizeof(int)*E, NULL, &status);",
-        );
-        self.host.line(
-            "clEnqueueWriteBuffer(command_queue, gpu_OA, CL_TRUE, 0, sizeof(int)*(1+V), g.indexofNodes, 0, NULL, NULL);",
-        );
-        self.host.line(
-            "clEnqueueWriteBuffer(command_queue, gpu_edgeList, CL_TRUE, 0, sizeof(int)*E, g.edgeList, 0, NULL, NULL);",
-        );
-        for &slot in &self.plan.device_resident {
-            let m = self.plan.meta(slot);
-            let ty = DEV.name(m.ty);
-            let len = m.len_sym();
-            self.host.line(&format!(
-                "cl_mem gpu_{} = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof({ty})*{len}, NULL, &status);",
-                m.name
-            ));
-        }
-        self.host.line(
-            "cl_mem gpu_finished = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof(int), NULL, &status);",
-        );
-        self.host.line("size_t global_size = ((V + 127) / 128) * 128;");
-        self.host.line("size_t local_size = 128;");
-        self.host.line("");
-        self.host_block(&f.body, None);
-        self.host.line("");
-        for &slot in &self.plan.outputs {
-            let m = self.plan.meta(slot);
-            let ty = DEV.name(m.ty);
-            let len = m.len_sym();
-            self.host.line(&format!(
-                "clEnqueueReadBuffer(command_queue, gpu_{n}, CL_TRUE, 0, sizeof({ty})*{len}, {n}, 0, NULL, NULL);",
-                n = m.name
-            ));
-        }
+        self.host.open(&format!("void {}({}) {{", plan.func, params.join(", ")));
+        render_host_schedule(self, &plan.host_ops, None);
         self.host.close("}");
-        let mut out = String::from("// Generated by starplat-rs — OpenCL backend\n");
-        for l in self.plan.manifest() {
-            out.push_str("// ");
-            out.push_str(&l);
-            out.push('\n');
-        }
+
+        let mut out = super::manifest_header("OpenCL", plan);
         out.push('\n');
         out.push_str(&std::mem::take(&mut self.kernels).finish());
         out.push('\n');
@@ -146,13 +90,7 @@ impl<'a> Gen<'a> {
         out
     }
 
-    fn host_block(&mut self, b: &[Stmt], or_flag: Option<&str>) {
-        for s in b {
-            self.host_stmt(s, or_flag);
-        }
-    }
-
-    fn launch(&mut self, kernel_name: &str, args: &[String]) {
+    fn enqueue_launch(&mut self, kernel_name: &str, args: &[String]) {
         self.host.line(&format!(
             "cl_kernel {kernel_name}_k = clCreateKernel(program, \"{kernel_name}\", &status);"
         ));
@@ -165,249 +103,284 @@ impl<'a> Gen<'a> {
         ));
         self.host.line("clFinish(command_queue);");
     }
+}
 
-    /// Open the `__kernel` header from the plan's parameter list; returns the
-    /// launch-site argument names.
-    fn kernel_header(&mut self, k: &KernelPlan, params: &[KernelParam]) -> Vec<String> {
+impl<'a> HostDialect for Gen<'a> {
+    fn expr_style(&self) -> Style {
+        opencl_style()
+    }
+
+    fn buf(&mut self) -> &mut CodeBuf {
+        &mut self.host
+    }
+
+    fn decl_dims(&mut self) {
+        self.host.line("cl_int status;");
+        self.host.line("int V = g.num_nodes();");
+        self.host.line("int E = g.num_edges();");
+        self.host.line("// context/queue/program setup elided to libstarplat_ocl.h helpers");
+    }
+
+    fn graph_to_device(&mut self) {
+        for &arr in &self.plan.graph_arrays {
+            let (dev, host, len) = (arr.device_name(), arr.host_name(), arr.len_sym());
+            self.host.line(&format!(
+                "cl_mem {dev} = clCreateBuffer(context, CL_MEM_READ_ONLY, sizeof(int) * {len}, NULL, &status);"
+            ));
+            self.host.line(&format!(
+                "clEnqueueWriteBuffer(command_queue, {dev}, CL_TRUE, 0, sizeof(int) * {len}, {host}, 0, NULL, NULL);"
+            ));
+        }
+    }
+
+    fn alloc_prop(&mut self, slot: u32) {
+        let m = self.plan.meta(slot);
+        let ty = DEV.name(m.ty);
+        let len = m.len_sym();
+        self.host.line(&format!(
+            "cl_mem gpu_{} = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof({ty}) * {len}, NULL, &status);",
+            m.name
+        ));
+    }
+
+    fn alloc_flag(&mut self) {
+        self.host.line(
+            "cl_mem gpu_finished = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof(int), NULL, &status);",
+        );
+    }
+
+    fn launch_setup(&mut self) {
+        self.host.line("size_t global_size = ((V + 127) / 128) * 128;");
+        self.host.line("size_t local_size = 128;");
+        self.host.line("");
+    }
+
+    fn copy_prop(&mut self, dst: u32, src: u32) {
+        let ty = DEV.name(self.plan.meta(dst).ty);
+        self.host.line(&format!(
+            "clEnqueueCopyBuffer(command_queue, gpu_{}, gpu_{}, 0, 0, sizeof({ty}) * V, 0, NULL, NULL);",
+            self.plan.prop_name(src),
+            self.plan.prop_name(dst)
+        ));
+    }
+
+    fn set_element(&mut self, slot: u32, index: &str, value: &Expr) {
+        self.host.line(&format!(
+            "setIndexCL(command_queue, gpu_{}, {index}, {});",
+            self.plan.prop_name(slot),
+            emit(value, &opencl_style())
+        ));
+    }
+
+    fn init_props(&mut self, _kernel: usize, inits: &[(u32, Expr)]) {
+        for (slot, e) in inits {
+            let m = self.plan.meta(*slot);
+            self.host.line(&format!(
+                "initKernelCL(command_queue, program, gpu_{}, V, ({}){});",
+                m.name,
+                DEV.name(m.ty),
+                emit(e, &opencl_style())
+            ));
+        }
+    }
+
+    fn launch(&mut self, kernel: usize, iter: &Iterator_, body: &[Stmt], or_flag: Option<&str>) {
+        let plan = self.plan;
+        let k: &KernelPlan = &plan.kernels[kernel];
+        for (r, _, ty) in &k.reductions {
+            let t = DEV.name(*ty);
+            self.host.line(&format!(
+                "cl_mem d_{r} = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof({t}), NULL, &status);"
+            ));
+            self.host.line(&format!(
+                "clEnqueueWriteBuffer(command_queue, d_{r}, CL_TRUE, 0, sizeof({t}), &{r}, 0, NULL, NULL);"
+            ));
+        }
+        let params = k.params(or_flag.is_some());
         let sig: Vec<String> = params.iter().map(|p| self.param_decl(p)).collect();
         let args: Vec<String> = params.iter().map(|p| self.plan.launch_arg(p)).collect();
         self.kernels.open(&format!("__kernel void {}({}) {{", k.name, sig.join(", ")));
-        args
+        self.kernels.line(&format!("unsigned {v} = get_global_id(0);", v = iter.var));
+        self.kernels.line(&format!("if ({} >= V) return;", iter.var));
+        if let Some(f) = &iter.filter {
+            let fe = super::simplify_bool_cmp(&super::resolve_filter(f, &iter.var, self.tf));
+            self.kernels.line(&format!("if (!({})) return;", emit(&fe, &opencl_style())));
+        }
+        let cx = self.body_ctx(None, or_flag);
+        emit_block(body, &cx, &mut self.kernels);
+        self.kernels.close("}");
+        self.kernels.line("");
+        let name = k.name.clone();
+        self.enqueue_launch(&name, &args);
+        for (r, _, ty) in &k.reductions {
+            let t = DEV.name(*ty);
+            self.host.line(&format!(
+                "clEnqueueReadBuffer(command_queue, d_{r}, CL_TRUE, 0, sizeof({t}), &{r}, 0, NULL, NULL);"
+            ));
+            self.host.line(&format!("clReleaseMemObject(d_{r});"));
+        }
     }
 
-    fn host_stmt(&mut self, s: &Stmt, or_flag: Option<&str>) {
-        let st = opencl_style();
-        match s {
-            Stmt::Decl { ty, name, init, .. } => {
-                if ty.is_prop() {
-                    return;
-                }
-                match init {
-                    Some(e) => self.host.line(&format!(
-                        "{} {} = {};",
-                        HOST.name(ScalarTy::of(ty)),
-                        name,
-                        emit(e, &st)
-                    )),
-                    None => {
-                        self.host.line(&format!("{} {};", HOST.name(ScalarTy::of(ty)), name))
-                    }
-                }
-            }
-            Stmt::AttachNodeProperty { inits, .. } => {
-                self.cursor.next_kernel(self.plan);
-                for (p, e) in inits {
-                    self.host.line(&format!(
-                        "initKernelCL(command_queue, program, gpu_{p}, V, ({}){});",
-                        self.prop_c_ty(p),
-                        emit(e, &st)
-                    ));
-                }
-            }
-            Stmt::For { parallel: true, iter, body, .. } => {
-                let k = self.cursor.next_kernel(self.plan);
-                for (r, _, ty) in &k.reductions {
-                    let t = DEV.name(*ty);
-                    self.host.line(&format!(
-                        "cl_mem d_{r} = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof({t}), NULL, &status);"
-                    ));
-                    self.host.line(&format!(
-                        "clEnqueueWriteBuffer(command_queue, d_{r}, CL_TRUE, 0, sizeof({t}), &{r}, 0, NULL, NULL);"
-                    ));
-                }
-                let params = k.params(or_flag.is_some());
-                let args = self.kernel_header(k, &params);
-                self.kernels.line(&format!("unsigned {v} = get_global_id(0);", v = iter.var));
-                self.kernels.line(&format!("if ({} >= V) return;", iter.var));
-                if let Some(f) = &iter.filter {
-                    let fe = super::simplify_bool_cmp(&super::resolve_filter(
-                        f,
-                        &iter.var,
-                        self.tf,
-                    ));
-                    self.kernels.line(&format!("if (!({})) return;", emit(&fe, &st)));
-                }
-                let cx = self.body_ctx(None, or_flag);
-                emit_block(body, &cx, &mut self.kernels);
-                self.kernels.close("}");
-                self.kernels.line("");
-                self.launch(&k.name, &args);
-                for (r, _, ty) in &k.reductions {
-                    let t = DEV.name(*ty);
-                    self.host.line(&format!(
-                        "clEnqueueReadBuffer(command_queue, d_{r}, CL_TRUE, 0, sizeof({t}), &{r}, 0, NULL, NULL);"
-                    ));
-                    self.host.line(&format!("clReleaseMemObject(d_{r});"));
-                }
-            }
-            Stmt::For { parallel: false, iter, body, .. } => {
-                let set = match &iter.source {
-                    IterSource::Set { set } => set.clone(),
-                    _ => "g.nodes()".into(),
-                };
-                self.host.open(&format!("for (int {} : {set}) {{", iter.var));
-                self.host_block(body, or_flag);
-                self.host.close("}");
-            }
-            Stmt::IterateBFS { var, from, body, reverse, .. } => {
-                // same structure as CUDA (§3.4: "The OpenCL backend code is
-                // similar to CUDA"), kernel emitted with OpenCL decorations.
-                let (b, fwd, rev) = self.cursor.next_bfs(self.plan);
-                // the BFS skeleton binds level, depth, and the finished flag;
-                // the rest of the signature is the plan's parameter list. A
-                // declared level property keeps its plan type.
-                let lt = b.level.map(|s| self.plan.c_ty(s, DEV)).unwrap_or("int");
-                let params = fwd.bfs_params(b.level);
-                let mut sig: Vec<String> = params.iter().map(|p| self.param_decl(p)).collect();
-                let mut args: Vec<String> =
-                    params.iter().map(|p| self.plan.launch_arg(p)).collect();
-                for (decl, arg) in [
-                    (format!("__global {lt}* gpu_level"), "gpu_level"),
-                    ("__global int* d_hops_from_source".to_string(), "d_hops_from_source"),
-                    ("__global int* gpu_finished".to_string(), "gpu_finished"),
-                ] {
-                    sig.push(decl);
-                    args.push(arg.to_string());
-                }
-                self.kernels
-                    .open(&format!("__kernel void {}({}) {{", fwd.name, sig.join(", ")));
-                self.kernels.line(&format!("unsigned {var} = get_global_id(0);"));
-                self.kernels.line(&format!("if ({var} >= V) return;"));
-                self.kernels.open(&format!("if (gpu_level[{var}] == *d_hops_from_source) {{"));
-                self.kernels
-                    .open(&format!("for (int i = gpu_OA[{var}]; i < gpu_OA[{var}+1]; ++i) {{"));
-                self.kernels.line("int nbr = gpu_edgeList[i];");
-                self.kernels.open("if (gpu_level[nbr] == -1) {");
-                self.kernels.line("gpu_level[nbr] = *d_hops_from_source + 1;");
-                self.kernels.line("gpu_finished[0] = 0;");
-                self.kernels.close("}");
-                self.kernels.close("}");
-                let cx = self.body_ctx(Some(BfsDir::Forward), None);
-                emit_block(body, &cx, &mut self.kernels);
-                self.kernels.close("}");
-                self.kernels.close("}");
-                self.kernels.line("");
-                self.host.line("// iterateInBFS host loop (similar to CUDA, §3.4)");
-                if b.level.is_none() {
-                    self.host.line(
-                        "cl_mem gpu_level = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof(int)*V, NULL, &status);",
-                    );
-                }
-                self.host.line(
-                    "cl_mem d_hops_from_source = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof(int), NULL, &status);",
-                );
-                self.host.line("initKernelCL(command_queue, program, gpu_level, V, -1);");
-                self.host.line(&format!("setIndexCL(command_queue, gpu_level, {from}, 0);"));
-                self.host.line("int hops_from_source = 0; int finished;");
-                self.host.line(
-                    "clEnqueueWriteBuffer(command_queue, d_hops_from_source, CL_TRUE, 0, sizeof(int), &hops_from_source, 0, NULL, NULL);",
-                );
-                self.host.open("do {");
-                self.host.line("finished = 1;");
-                self.host.line(
-                    "clEnqueueWriteBuffer(command_queue, gpu_finished, CL_TRUE, 0, sizeof(int), &finished, 0, NULL, NULL);",
-                );
-                self.launch(&fwd.name, &args);
-                self.host.line("++hops_from_source;");
-                self.host.line(
-                    "clEnqueueWriteBuffer(command_queue, d_hops_from_source, CL_TRUE, 0, sizeof(int), &hops_from_source, 0, NULL, NULL);",
-                );
-                self.host.line(
-                    "clEnqueueReadBuffer(command_queue, gpu_finished, CL_TRUE, 0, sizeof(int), &finished, 0, NULL, NULL);",
-                );
-                self.host.close("} while (!finished);");
-                if let (Some(rk), Some((_, rbody))) = (rev, reverse) {
-                    self.host.line("// iterateInReverse host loop");
-                    self.host.open("while (--hops_from_source >= 0) {");
-                    self.host.line(&format!("/* launch {}: see kernels.cl */", rk.name));
-                    self.host.close("}");
-                    let rsig: Vec<String> = rk
-                        .bfs_params(b.level)
-                        .iter()
-                        .map(|p| self.param_decl(p))
-                        .chain([
-                            format!("__global {lt}* gpu_level"),
-                            "__global int* d_hops_from_source".to_string(),
-                        ])
-                        .collect();
-                    self.kernels
-                        .open(&format!("__kernel void {}({}) {{", rk.name, rsig.join(", ")));
-                    self.kernels.line(&format!("unsigned {var} = get_global_id(0);"));
-                    self.kernels.line(&format!(
-                        "if ({var} >= V || gpu_level[{var}] != *d_hops_from_source) return;"
-                    ));
-                    let cx = self.body_ctx(Some(BfsDir::Reverse), None);
-                    emit_block(rbody, &cx, &mut self.kernels);
-                    self.kernels.close("}");
-                    self.kernels.line("");
-                }
-                // skeleton-owned buffers were created at the BFS site (which
-                // may sit inside a host loop): release them here
-                self.host.line("clReleaseMemObject(d_hops_from_source);");
-                if b.level.is_none() {
-                    self.host.line("clReleaseMemObject(gpu_level);");
-                }
-            }
-            Stmt::FixedPoint { var, body, .. } => {
-                let flag = self.cursor.next_fixed_point(self.plan).flag_name.clone();
-                self.host.line(&format!("// fixedPoint on `{flag}` (single int flag, §4.1)"));
-                self.host.line(&format!("int {var} = 0;"));
-                self.host.open(&format!("while (!{var}) {{"));
-                self.host.line(&format!("{var} = 1;"));
-                self.host.line(&format!(
-                    "clEnqueueWriteBuffer(command_queue, gpu_finished, CL_TRUE, 0, sizeof(int), &{var}, 0, NULL, NULL);"
-                ));
-                self.host_block(body, Some(&flag));
-                self.host.line(&format!(
-                    "clEnqueueReadBuffer(command_queue, gpu_finished, CL_TRUE, 0, sizeof(int), &{var}, 0, NULL, NULL);"
-                ));
-                self.host.close("}");
-            }
-            Stmt::Assign { target, value, .. } => match target {
-                LValue::Var(v) if self.plan.is_node_prop(v) => {
-                    let Expr::Var(src) = value else { return };
-                    let ty = self.prop_c_ty(v);
-                    self.host.line(&format!(
-                        "clEnqueueCopyBuffer(command_queue, gpu_{src}, gpu_{v}, 0, 0, sizeof({ty})*V, 0, NULL, NULL);"
-                    ));
-                }
-                LValue::Var(v) => self.host.line(&format!("{v} = {};", emit(value, &st))),
-                LValue::Prop { obj, prop } => self.host.line(&format!(
-                    "setIndexCL(command_queue, gpu_{prop}, {obj}, {});",
-                    emit(value, &st)
-                )),
-            },
-            Stmt::Reduce { target, op, value, .. } => {
-                if let LValue::Var(v) = target {
-                    self.host.line(&format!("{v} = {v} {} {};", red_sym(*op), emit(value, &st)));
-                }
-            }
-            Stmt::DoWhile { body, cond, .. } => {
-                self.host.open("do {");
-                self.host_block(body, or_flag);
-                self.host.close(&format!("}} while ({});", emit(cond, &st)));
-            }
-            Stmt::While { cond, body, .. } => {
-                self.host.open(&format!("while ({}) {{", emit(cond, &st)));
-                self.host_block(body, or_flag);
-                self.host.close("}");
-            }
-            Stmt::If { cond, then, els, .. } => {
-                self.host.open(&format!("if ({}) {{", emit(cond, &st)));
-                self.host_block(then, or_flag);
-                if let Some(e) = els {
-                    self.host.close("} else {");
-                    self.host.inc();
-                    self.host_block(e, or_flag);
-                }
-                self.host.close("}");
-            }
-            Stmt::Return { value, .. } => {
-                self.host.line(&format!("return {};", emit(value, &st)));
-            }
-            Stmt::MinMaxAssign { .. } => {
-                self.host.line("/* Min/Max outside a parallel loop unsupported */");
-            }
+    fn bfs(
+        &mut self,
+        index: usize,
+        var: &str,
+        from: &str,
+        body: &[Stmt],
+        reverse: Option<&(Expr, Block)>,
+    ) {
+        // same structure as CUDA (§3.4: "The OpenCL backend code is similar
+        // to CUDA"), kernel emitted with OpenCL decorations.
+        let plan = self.plan;
+        let b = &plan.bfs_loops[index];
+        let fwd = &plan.kernels[b.fwd];
+        let rev = b.rev.map(|i| &plan.kernels[i]);
+        // the BFS skeleton binds level, depth, and the finished flag; the
+        // rest of the signature is the plan's parameter list. A declared
+        // level property keeps its plan type.
+        let lt = b.level.map(|s| self.plan.c_ty(s, DEV)).unwrap_or("int");
+        let params = fwd.bfs_params(b.level);
+        let mut sig: Vec<String> = params.iter().map(|p| self.param_decl(p)).collect();
+        let mut args: Vec<String> = params.iter().map(|p| self.plan.launch_arg(p)).collect();
+        for (decl, arg) in [
+            (format!("__global {lt}* gpu_level"), "gpu_level"),
+            ("__global int* d_hops_from_source".to_string(), "d_hops_from_source"),
+            ("__global int* gpu_finished".to_string(), "gpu_finished"),
+        ] {
+            sig.push(decl);
+            args.push(arg.to_string());
+        }
+        self.kernels.open(&format!("__kernel void {}({}) {{", fwd.name, sig.join(", ")));
+        self.kernels.line(&format!("unsigned {var} = get_global_id(0);"));
+        self.kernels.line(&format!("if ({var} >= V) return;"));
+        self.kernels.open(&format!("if (gpu_level[{var}] == *d_hops_from_source) {{"));
+        self.kernels.open(&format!("for (int i = gpu_OA[{var}]; i < gpu_OA[{var}+1]; ++i) {{"));
+        self.kernels.line("int nbr = gpu_edgeList[i];");
+        self.kernels.open("if (gpu_level[nbr] == -1) {");
+        self.kernels.line("gpu_level[nbr] = *d_hops_from_source + 1;");
+        self.kernels.line("gpu_finished[0] = 0;");
+        self.kernels.close("}");
+        self.kernels.close("}");
+        let cx = self.body_ctx(Some(BfsDir::Forward), None);
+        emit_block(body, &cx, &mut self.kernels);
+        self.kernels.close("}");
+        self.kernels.close("}");
+        self.kernels.line("");
+        self.host.line("// iterateInBFS host loop (similar to CUDA, §3.4)");
+        if b.level.is_none() {
+            self.host.line(
+                "cl_mem gpu_level = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof(int) * V, NULL, &status);",
+            );
+        }
+        self.host.line(
+            "cl_mem d_hops_from_source = clCreateBuffer(context, CL_MEM_READ_WRITE, sizeof(int), NULL, &status);",
+        );
+        self.host.line("initKernelCL(command_queue, program, gpu_level, V, -1);");
+        self.host.line(&format!("setIndexCL(command_queue, gpu_level, {from}, 0);"));
+        self.host.line("int hops_from_source = 0; int finished;");
+        self.host.line(
+            "clEnqueueWriteBuffer(command_queue, d_hops_from_source, CL_TRUE, 0, sizeof(int), &hops_from_source, 0, NULL, NULL);",
+        );
+        self.host.open("do {");
+        self.host.line("finished = 1;");
+        self.host.line(
+            "clEnqueueWriteBuffer(command_queue, gpu_finished, CL_TRUE, 0, sizeof(int), &finished, 0, NULL, NULL);",
+        );
+        let fname = fwd.name.clone();
+        self.enqueue_launch(&fname, &args);
+        self.host.line("++hops_from_source;");
+        self.host.line(
+            "clEnqueueWriteBuffer(command_queue, d_hops_from_source, CL_TRUE, 0, sizeof(int), &hops_from_source, 0, NULL, NULL);",
+        );
+        self.host.line(
+            "clEnqueueReadBuffer(command_queue, gpu_finished, CL_TRUE, 0, sizeof(int), &finished, 0, NULL, NULL);",
+        );
+        self.host.close("} while (!finished);");
+        if let (Some(rk), Some((_, rbody))) = (rev, reverse) {
+            let rparams = rk.bfs_params(b.level);
+            let rsig: Vec<String> = rparams
+                .iter()
+                .map(|p| self.param_decl(p))
+                .chain([
+                    format!("__global {lt}* gpu_level"),
+                    "__global int* d_hops_from_source".to_string(),
+                ])
+                .collect();
+            let rargs: Vec<String> = rparams
+                .iter()
+                .map(|p| self.plan.launch_arg(p))
+                .chain(["gpu_level".to_string(), "d_hops_from_source".to_string()])
+                .collect();
+            self.kernels.open(&format!("__kernel void {}({}) {{", rk.name, rsig.join(", ")));
+            self.kernels.line(&format!("unsigned {var} = get_global_id(0);"));
+            self.kernels.line(&format!(
+                "if ({var} >= V || gpu_level[{var}] != *d_hops_from_source) return;"
+            ));
+            let cx = self.body_ctx(Some(BfsDir::Reverse), None);
+            emit_block(rbody, &cx, &mut self.kernels);
+            self.kernels.close("}");
+            self.kernels.line("");
+            self.host.line("// iterateInReverse host loop");
+            self.host.open("while (--hops_from_source >= 0) {");
+            self.host.line(
+                "clEnqueueWriteBuffer(command_queue, d_hops_from_source, CL_TRUE, 0, sizeof(int), &hops_from_source, 0, NULL, NULL);",
+            );
+            let rname = rk.name.clone();
+            self.enqueue_launch(&rname, &rargs);
+            self.host.close("}");
+        }
+        // skeleton-owned buffers were created at the BFS site (which may sit
+        // inside a host loop): release them here
+        self.host.line("clReleaseMemObject(d_hops_from_source);");
+        if b.level.is_none() {
+            self.host.line("clReleaseMemObject(gpu_level);");
+        }
+    }
+
+    fn fixed_point_enter(&mut self, index: usize, var: &str) -> String {
+        let flag = self.plan.fixed_points[index].flag_name.clone();
+        self.host.line(&format!("// fixedPoint on `{flag}` (single int flag, §4.1)"));
+        self.host.line(&format!("int {var} = 0;"));
+        self.host.open(&format!("while (!{var}) {{"));
+        self.host.line(&format!("{var} = 1;"));
+        self.host.line(&format!(
+            "clEnqueueWriteBuffer(command_queue, gpu_finished, CL_TRUE, 0, sizeof(int), &{var}, 0, NULL, NULL);"
+        ));
+        flag
+    }
+
+    fn fixed_point_exit(&mut self, var: &str) {
+        self.host.line(&format!(
+            "clEnqueueReadBuffer(command_queue, gpu_finished, CL_TRUE, 0, sizeof(int), &{var}, 0, NULL, NULL);"
+        ));
+        self.host.close("}");
+    }
+
+    fn epilogue_begin(&mut self) {
+        self.host.line("");
+    }
+
+    fn copy_out(&mut self, slot: u32) {
+        let m = self.plan.meta(slot);
+        let ty = DEV.name(m.ty);
+        let len = m.len_sym();
+        self.host.line(&format!(
+            "clEnqueueReadBuffer(command_queue, gpu_{n}, CL_TRUE, 0, sizeof({ty}) * {len}, {n}, 0, NULL, NULL);",
+            n = m.name
+        ));
+    }
+
+    fn free_prop(&mut self, slot: u32) {
+        self.host.line(&format!("clReleaseMemObject(gpu_{});", self.plan.prop_name(slot)));
+    }
+
+    fn free_flag(&mut self) {
+        self.host.line("clReleaseMemObject(gpu_finished);");
+    }
+
+    fn free_graph(&mut self) {
+        for &arr in &self.plan.graph_arrays {
+            self.host.line(&format!("clReleaseMemObject({});", arr.device_name()));
         }
     }
 }

@@ -6,19 +6,31 @@
 //! `malloc_device` (§4.3), and the fixedPoint flag is a single device word.
 //!
 //! A thin renderer over [`DevicePlan`]: buffer set, property types, kernel
-//! numbering, and host-loop skeletons come from the plan; lambdas capture
-//! buffers, so no parameter lists are rendered here.
+//! numbering, and the entire host-statement schedule come from the plan —
+//! this module is the SYCL [`HostDialect`], driven by
+//! [`super::render_host_schedule`]. Lambdas capture buffers, so no
+//! parameter lists are rendered here.
 
 use super::body::{emit_block, BfsDir, BodyCtx, Target};
 use super::buf::CodeBuf;
-use super::cexpr::{emit, sycl_style};
-use super::red_sym;
-use crate::dsl::ast::*;
-use crate::ir::plan::{DevicePlan, PlanCursor, TypeMap};
-use crate::ir::{IrProgram, ScalarTy};
+use super::cexpr::{emit, sycl_style, Style};
+use super::{render_host_schedule, HostDialect};
+use crate::dsl::ast::{Block, Expr, Iterator_, Stmt};
+use crate::ir::plan::{DevicePlan, GraphArray, TypeMap};
+use crate::ir::IrProgram;
 use crate::sema::TypedFunction;
 
 const TYPES: &TypeMap = &TypeMap::C;
+
+/// Device member for one CSR array (the SYCL graph wrapper owns them).
+fn dev_arr(a: GraphArray) -> &'static str {
+    match a {
+        GraphArray::Offsets => "g.gpu_indexOfNodes",
+        GraphArray::EdgeList => "g.gpu_edgeList",
+        GraphArray::RevOffsets => "g.gpu_rev_indexOfNodes",
+        GraphArray::SrcList => "g.gpu_srcList",
+    }
+}
 
 pub fn generate(ir: &IrProgram) -> String {
     generate_with(ir, &DevicePlan::build(ir))
@@ -27,22 +39,17 @@ pub fn generate(ir: &IrProgram) -> String {
 /// Render with a pre-built plan ([`super::generate`] lowers once for all
 /// backends).
 pub(crate) fn generate_with(ir: &IrProgram, plan: &DevicePlan) -> String {
-    let mut g = Gen { tf: &ir.tf, plan, cursor: PlanCursor::default(), buf: CodeBuf::new() };
+    let mut g = Gen { tf: &ir.tf, plan, buf: CodeBuf::new() };
     g.run()
 }
 
 struct Gen<'a> {
     tf: &'a TypedFunction,
     plan: &'a DevicePlan,
-    cursor: PlanCursor,
     buf: CodeBuf,
 }
 
 impl<'a> Gen<'a> {
-    fn prop_c_ty(&self, p: &str) -> &'static str {
-        self.plan.c_ty_of(p, TYPES)
-    }
-
     fn body_ctx(&self, bfs: Option<BfsDir>, or_flag: Option<&str>) -> BodyCtx<'a> {
         BodyCtx {
             tf: self.tf,
@@ -56,55 +63,18 @@ impl<'a> Gen<'a> {
     }
 
     fn run(&mut self) -> String {
-        let f = self.tf.func.clone(); // detach from `self` for the &mut walk
-        self.buf.line("// Generated by starplat-rs — SYCL backend");
-        for l in self.plan.manifest() {
-            self.buf.line(&format!("// {l}"));
-        }
+        let plan = self.plan;
+        let mut out = super::manifest_header("SYCL", plan);
         self.buf.line("#include <CL/sycl.hpp>");
         self.buf.line("#include \"libstarplat_sycl.h\"");
         self.buf.line("using namespace sycl;");
         self.buf.line("");
-        let params = self.plan.host_signature(TYPES);
-        self.buf.open(&format!("void {}({}) {{", f.name, params.join(", ")));
-        self.buf.line("queue Q(default_selector_v);");
-        self.buf.line("int V = g.num_nodes();");
-        self.buf.line("int E = g.num_edges();");
-        self.buf.line("");
-        self.buf.line("// §4.3: graph transferred once with malloc_device, never copied back");
-        self.buf.line("g.gpu_indexOfNodes = malloc_device<int>(1 + V, Q);");
-        self.buf.line("g.gpu_edgeList = malloc_device<int>(E, Q);");
-        self.buf
-            .line("Q.memcpy(g.gpu_indexOfNodes, g.indexofNodes, sizeof(int) * (1 + V)).wait();");
-        self.buf.line("Q.memcpy(g.gpu_edgeList, g.edgeList, sizeof(int) * E).wait();");
-        for &slot in &self.plan.device_resident {
-            let m = self.plan.meta(slot);
-            let len = m.len_sym();
-            let ty = TYPES.name(m.ty);
-            self.buf.line(&format!("g.gpu_{} = malloc_device<{ty}>({len}, Q);", m.name));
-        }
-        self.buf.line("bool* d_finished = malloc_device<bool>(1, Q);");
-        self.buf.line("");
-        self.host_block(&f.body, None);
-        self.buf.line("");
-        self.buf.line("// §4.3: updated properties return to the host once");
-        for &slot in &self.plan.outputs {
-            let m = self.plan.meta(slot);
-            let len = m.len_sym();
-            self.buf.line(&format!(
-                "Q.memcpy({n}, g.gpu_{n}, sizeof({ty}) * {len}).wait();",
-                n = m.name,
-                ty = TYPES.name(m.ty)
-            ));
-        }
+        let params = plan.host_signature(TYPES);
+        self.buf.open(&format!("void {}({}) {{", plan.func, params.join(", ")));
+        render_host_schedule(self, &plan.host_ops, None);
         self.buf.close("}");
-        std::mem::take(&mut self.buf).finish()
-    }
-
-    fn host_block(&mut self, b: &[Stmt], or_flag: Option<&str>) {
-        for s in b {
-            self.host_stmt(s, or_flag);
-        }
+        out.push_str(&std::mem::take(&mut self.buf).finish());
+        out
     }
 
     /// Fig 4's submit + strided parallel_for wrapper.
@@ -118,165 +88,194 @@ impl<'a> Gen<'a> {
         self.buf.close("});");
         self.buf.close("}).wait();");
     }
+}
 
-    fn host_stmt(&mut self, s: &Stmt, or_flag: Option<&str>) {
-        let st = sycl_style();
-        match s {
-            Stmt::Decl { ty, name, init, .. } => {
-                if ty.is_prop() {
-                    return;
-                }
-                match init {
-                    Some(e) => self.buf.line(&format!(
-                        "{} {} = {};",
-                        TYPES.name(ScalarTy::of(ty)),
-                        name,
-                        emit(e, &st)
-                    )),
-                    None => {
-                        self.buf.line(&format!("{} {};", TYPES.name(ScalarTy::of(ty)), name))
-                    }
-                }
-            }
-            Stmt::AttachNodeProperty { inits, .. } => {
-                self.cursor.next_kernel(self.plan);
-                self.open_parallel("v");
-                for (p, e) in inits {
-                    self.buf.line(&format!("g.gpu_{p}[v] = {};", emit(e, &st)));
-                }
-                self.close_parallel();
-            }
-            Stmt::For { parallel: true, iter, body, .. } => {
-                let k = self.cursor.next_kernel(self.plan);
-                for (r, _, _) in &k.reductions {
-                    self.buf
-                        .line(&format!("// device reduction cell for `{r}` (atomic_ref, Fig 8)"));
-                }
-                self.open_parallel(&iter.var);
-                if let Some(f) = &iter.filter {
-                    let fe = super::simplify_bool_cmp(&super::resolve_filter(
-                        f,
-                        &iter.var,
-                        self.tf,
-                    ));
-                    self.buf.line(&format!("if (!({})) continue;", emit(&fe, &st)));
-                }
-                let cx = self.body_ctx(None, or_flag);
-                emit_block(body, &cx, &mut self.buf);
-                self.close_parallel();
-            }
-            Stmt::For { parallel: false, iter, body, .. } => {
-                let set = match &iter.source {
-                    IterSource::Set { set } => set.clone(),
-                    _ => "g.nodes()".into(),
-                };
-                self.buf.open(&format!("for (int {} : {set}) {{", iter.var));
-                self.host_block(body, or_flag);
-                self.buf.close("}");
-            }
-            Stmt::IterateBFS { var, from, body, reverse, .. } => {
-                let _ = self.cursor.next_bfs(self.plan);
-                self.buf.line("// iterateInBFS: host do-while, level kernel per hop (§3.4)");
-                self.open_parallel("i");
-                self.buf.line("g.gpu_level[i] = -1;");
-                self.close_parallel();
-                self.buf.line(&format!("setIndexDevice(Q, g.gpu_level, {from}, 0);"));
-                self.buf.line("int hops_from_source = 0;");
-                self.buf.line("bool finished;");
-                self.buf.open("do {");
-                self.buf.line("finished = true;");
-                self.buf.line("Q.memcpy(d_finished, &finished, sizeof(bool)).wait();");
-                self.open_parallel(var);
-                self.buf.open(&format!("if (g.gpu_level[{var}] == hops_from_source) {{"));
-                self.buf.open(&format!(
-                    "for (int ee = g.gpu_indexOfNodes[{var}]; ee < g.gpu_indexOfNodes[{var}+1]; ee++) {{"
-                ));
-                self.buf.line("int nbr = g.gpu_edgeList[ee];");
-                self.buf.open("if (g.gpu_level[nbr] == -1) {");
-                self.buf.line("g.gpu_level[nbr] = hops_from_source + 1;");
-                self.buf.line("*d_finished = false;");
-                self.buf.close("}");
-                self.buf.close("}");
-                let cx = self.body_ctx(Some(BfsDir::Forward), None);
-                emit_block(body, &cx, &mut self.buf);
-                self.buf.close("}");
-                self.close_parallel();
-                self.buf.line("++hops_from_source;");
-                self.buf.line("Q.memcpy(&finished, d_finished, sizeof(bool)).wait();");
-                self.buf.close("} while (!finished);");
-                if let Some((cond, rbody)) = reverse {
-                    self.buf.line("// iterateInReverse: no grid.sync needed — one submit per");
-                    self.buf.line("// level, which is why SYCL wins on road networks (§5.2)");
-                    self.buf.open("while (--hops_from_source >= 0) {");
-                    self.open_parallel(var);
-                    self.buf
-                        .line(&format!("if (g.gpu_level[{var}] != hops_from_source) continue;"));
-                    let ce =
-                        super::simplify_bool_cmp(&super::resolve_filter(cond, var, self.tf));
-                    self.buf.line(&format!("if (!({})) continue;", emit(&ce, &st)));
-                    let cx = self.body_ctx(Some(BfsDir::Reverse), None);
-                    emit_block(rbody, &cx, &mut self.buf);
-                    self.close_parallel();
-                    self.buf.close("}");
-                }
-            }
-            Stmt::FixedPoint { var, body, .. } => {
-                let flag = self.cursor.next_fixed_point(self.plan).flag_name.clone();
-                self.buf
-                    .line(&format!("// fixedPoint on `{flag}`: single device flag word (§4.3)"));
-                self.buf.line(&format!("bool {var} = false;"));
-                self.buf.open(&format!("while (!{var}) {{"));
-                self.buf.line(&format!("{var} = true;"));
-                self.buf.line(&format!("Q.memcpy(d_finished, &{var}, sizeof(bool)).wait();"));
-                self.host_block(body, Some(&flag));
-                self.buf.line(&format!("Q.memcpy(&{var}, d_finished, sizeof(bool)).wait();"));
-                self.buf.close("}");
-            }
-            Stmt::Assign { target, value, .. } => match target {
-                LValue::Var(v) if self.plan.is_node_prop(v) => {
-                    let Expr::Var(src) = value else { return };
-                    let ty = self.prop_c_ty(v);
-                    self.buf.line(&format!(
-                        "Q.memcpy(g.gpu_{v}, g.gpu_{src}, sizeof({ty}) * V).wait();"
-                    ));
-                }
-                LValue::Var(v) => self.buf.line(&format!("{v} = {};", emit(value, &st))),
-                LValue::Prop { obj, prop } => self.buf.line(&format!(
-                    "setIndexDevice(Q, g.gpu_{prop}, {obj}, {});",
-                    emit(value, &st)
-                )),
-            },
-            Stmt::Reduce { target, op, value, .. } => {
-                if let LValue::Var(v) = target {
-                    self.buf.line(&format!("{v} = {v} {} {};", red_sym(*op), emit(value, &st)));
-                }
-            }
-            Stmt::DoWhile { body, cond, .. } => {
-                self.buf.open("do {");
-                self.host_block(body, or_flag);
-                self.buf.close(&format!("}} while ({});", emit(cond, &st)));
-            }
-            Stmt::While { cond, body, .. } => {
-                self.buf.open(&format!("while ({}) {{", emit(cond, &st)));
-                self.host_block(body, or_flag);
-                self.buf.close("}");
-            }
-            Stmt::If { cond, then, els, .. } => {
-                self.buf.open(&format!("if ({}) {{", emit(cond, &st)));
-                self.host_block(then, or_flag);
-                if let Some(e) = els {
-                    self.buf.close("} else {");
-                    self.buf.inc();
-                    self.host_block(e, or_flag);
-                }
-                self.buf.close("}");
-            }
-            Stmt::Return { value, .. } => {
-                self.buf.line(&format!("return {};", emit(value, &st)));
-            }
-            Stmt::MinMaxAssign { .. } => {
-                self.buf.line("/* Min/Max outside a parallel loop unsupported */");
-            }
+impl<'a> HostDialect for Gen<'a> {
+    fn expr_style(&self) -> Style {
+        sycl_style()
+    }
+
+    fn buf(&mut self) -> &mut CodeBuf {
+        &mut self.buf
+    }
+
+    fn decl_dims(&mut self) {
+        self.buf.line("queue Q(default_selector_v);");
+        self.buf.line("int V = g.num_nodes();");
+        self.buf.line("int E = g.num_edges();");
+        self.buf.line("");
+    }
+
+    fn graph_to_device(&mut self) {
+        self.buf.line("// §4.3: graph transferred once with malloc_device, never copied back");
+        for &arr in &self.plan.graph_arrays {
+            let (dev, host, len) = (dev_arr(arr), arr.host_name(), arr.len_sym());
+            self.buf.line(&format!("{dev} = malloc_device<int>({len}, Q);"));
+            self.buf.line(&format!("Q.memcpy({dev}, {host}, sizeof(int) * {len}).wait();"));
+        }
+    }
+
+    fn alloc_prop(&mut self, slot: u32) {
+        let m = self.plan.meta(slot);
+        let len = m.len_sym();
+        let ty = TYPES.name(m.ty);
+        self.buf.line(&format!("g.gpu_{} = malloc_device<{ty}>({len}, Q);", m.name));
+    }
+
+    fn alloc_flag(&mut self) {
+        self.buf.line("bool* d_finished = malloc_device<bool>(1, Q);");
+    }
+
+    fn launch_setup(&mut self) {
+        self.buf.line("");
+    }
+
+    fn copy_prop(&mut self, dst: u32, src: u32) {
+        let ty = TYPES.name(self.plan.meta(dst).ty);
+        self.buf.line(&format!(
+            "Q.memcpy(g.gpu_{}, g.gpu_{}, sizeof({ty}) * V).wait();",
+            self.plan.prop_name(dst),
+            self.plan.prop_name(src)
+        ));
+    }
+
+    fn set_element(&mut self, slot: u32, index: &str, value: &Expr) {
+        self.buf.line(&format!(
+            "setIndexDevice(Q, g.gpu_{}, {index}, {});",
+            self.plan.prop_name(slot),
+            emit(value, &sycl_style())
+        ));
+    }
+
+    fn init_props(&mut self, _kernel: usize, inits: &[(u32, Expr)]) {
+        self.open_parallel("v");
+        for (slot, e) in inits {
+            self.buf.line(&format!(
+                "g.gpu_{}[v] = {};",
+                self.plan.prop_name(*slot),
+                emit(e, &sycl_style())
+            ));
+        }
+        self.close_parallel();
+    }
+
+    fn launch(&mut self, kernel: usize, iter: &Iterator_, body: &[Stmt], or_flag: Option<&str>) {
+        let plan = self.plan;
+        let k = &plan.kernels[kernel];
+        for (r, _, _) in &k.reductions {
+            self.buf.line(&format!("// device reduction cell for `{r}` (atomic_ref, Fig 8)"));
+        }
+        self.open_parallel(&iter.var);
+        if let Some(f) = &iter.filter {
+            let fe = super::simplify_bool_cmp(&super::resolve_filter(f, &iter.var, self.tf));
+            self.buf.line(&format!("if (!({})) continue;", emit(&fe, &sycl_style())));
+        }
+        let cx = self.body_ctx(None, or_flag);
+        emit_block(body, &cx, &mut self.buf);
+        self.close_parallel();
+    }
+
+    fn bfs(
+        &mut self,
+        index: usize,
+        var: &str,
+        from: &str,
+        body: &[Stmt],
+        reverse: Option<&(Expr, Block)>,
+    ) {
+        let plan = self.plan;
+        let b = &plan.bfs_loops[index];
+        self.buf.line("// iterateInBFS: host do-while, level kernel per hop (§3.4)");
+        if b.level.is_none() {
+            // implicit level buffer (e.g. BC): owned by the skeleton
+            self.buf.line("g.gpu_level = malloc_device<int>(V, Q);");
+        }
+        self.open_parallel("i");
+        self.buf.line("g.gpu_level[i] = -1;");
+        self.close_parallel();
+        self.buf.line(&format!("setIndexDevice(Q, g.gpu_level, {from}, 0);"));
+        self.buf.line("int hops_from_source = 0;");
+        self.buf.line("bool finished;");
+        self.buf.open("do {");
+        self.buf.line("finished = true;");
+        self.buf.line("Q.memcpy(d_finished, &finished, sizeof(bool)).wait();");
+        self.open_parallel(var);
+        self.buf.open(&format!("if (g.gpu_level[{var}] == hops_from_source) {{"));
+        self.buf.open(&format!(
+            "for (int ee = g.gpu_indexOfNodes[{var}]; ee < g.gpu_indexOfNodes[{var}+1]; ee++) {{"
+        ));
+        self.buf.line("int nbr = g.gpu_edgeList[ee];");
+        self.buf.open("if (g.gpu_level[nbr] == -1) {");
+        self.buf.line("g.gpu_level[nbr] = hops_from_source + 1;");
+        self.buf.line("*d_finished = false;");
+        self.buf.close("}");
+        self.buf.close("}");
+        let cx = self.body_ctx(Some(BfsDir::Forward), None);
+        emit_block(body, &cx, &mut self.buf);
+        self.buf.close("}");
+        self.close_parallel();
+        self.buf.line("++hops_from_source;");
+        self.buf.line("Q.memcpy(&finished, d_finished, sizeof(bool)).wait();");
+        self.buf.close("} while (!finished);");
+        if let Some((cond, rbody)) = reverse {
+            self.buf.line("// iterateInReverse: no grid.sync needed — one submit per");
+            self.buf.line("// level, which is why SYCL wins on road networks (§5.2)");
+            self.buf.open("while (--hops_from_source >= 0) {");
+            self.open_parallel(var);
+            self.buf.line(&format!("if (g.gpu_level[{var}] != hops_from_source) continue;"));
+            let ce = super::simplify_bool_cmp(&super::resolve_filter(cond, var, self.tf));
+            self.buf.line(&format!("if (!({})) continue;", emit(&ce, &sycl_style())));
+            let cx = self.body_ctx(Some(BfsDir::Reverse), None);
+            emit_block(rbody, &cx, &mut self.buf);
+            self.close_parallel();
+            self.buf.close("}");
+        }
+        if b.level.is_none() {
+            self.buf.line("sycl::free(g.gpu_level, Q);");
+        }
+    }
+
+    fn fixed_point_enter(&mut self, index: usize, var: &str) -> String {
+        let flag = self.plan.fixed_points[index].flag_name.clone();
+        self.buf.line(&format!("// fixedPoint on `{flag}`: single device flag word (§4.3)"));
+        self.buf.line(&format!("bool {var} = false;"));
+        self.buf.open(&format!("while (!{var}) {{"));
+        self.buf.line(&format!("{var} = true;"));
+        self.buf.line(&format!("Q.memcpy(d_finished, &{var}, sizeof(bool)).wait();"));
+        flag
+    }
+
+    fn fixed_point_exit(&mut self, var: &str) {
+        self.buf.line(&format!("Q.memcpy(&{var}, d_finished, sizeof(bool)).wait();"));
+        self.buf.close("}");
+    }
+
+    fn epilogue_begin(&mut self) {
+        self.buf.line("");
+        self.buf.line("// §4.3: updated properties return to the host once");
+    }
+
+    fn copy_out(&mut self, slot: u32) {
+        let m = self.plan.meta(slot);
+        let len = m.len_sym();
+        self.buf.line(&format!(
+            "Q.memcpy({n}, g.gpu_{n}, sizeof({ty}) * {len}).wait();",
+            n = m.name,
+            ty = TYPES.name(m.ty)
+        ));
+    }
+
+    fn free_prop(&mut self, slot: u32) {
+        self.buf.line(&format!("sycl::free(g.gpu_{}, Q);", self.plan.prop_name(slot)));
+    }
+
+    fn free_flag(&mut self) {
+        self.buf.line("sycl::free(d_finished, Q);");
+    }
+
+    fn free_graph(&mut self) {
+        for &arr in &self.plan.graph_arrays {
+            self.buf.line(&format!("sycl::free({}, Q);", dev_arr(arr)));
         }
     }
 }

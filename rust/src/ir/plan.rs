@@ -34,15 +34,22 @@
 //!   outputs-only D2H, deferred past convergence loops);
 //! - **host-loop skeletons**: [`FixedPointPlan`] (Fig 12's device-flag
 //!   ping-pong) and [`BfsPlan`] (Fig 9's level-synchronous do-while) in
-//!   program order, consumed by renderers through a [`PlanCursor`].
+//!   program order;
+//! - **host-statement schedule**: the complete host half of the function as
+//!   a [`HostOp`] tree ([`DevicePlan::host_ops`]) — declarations, scalar
+//!   init, transfers, launches, loop/branch structure, epilogue frees —
+//!   rendered by the one `codegen::render_host_schedule` driver. Renderers
+//!   never walk the AST for host syntax; a new backend is a spelling table.
 //!
-//! A renderer walks the AST only for *statement syntax* (expressions, loop
-//! shapes); everything that is an analysis result comes from the plan. Every
-//! renderer also embeds [`DevicePlan::manifest`] as a comment block, which is
-//! byte-identical across backends — `tests/plan_numbering.rs` snapshots it to
-//! pin the cross-backend numbering guarantee.
+//! A renderer walks the AST only for *kernel-body syntax* (expressions, loop
+//! shapes inside device code); everything else comes from the plan. Every
+//! renderer also embeds [`DevicePlan::manifest`] and
+//! [`DevicePlan::host_manifest`] as comment blocks, which are byte-identical
+//! across backends — `tests/plan_numbering.rs` and
+//! `tests/host_schedule_conformance.rs` snapshot them to pin the
+//! cross-backend guarantee.
 
-use crate::dsl::ast::{ReduceOp, Stmt, Type};
+use crate::dsl::ast::{Block, Expr, IterSource, Iterator_, LValue, ReduceOp, Stmt, Type, UnOp};
 use crate::ir::slots::Interner;
 use crate::ir::{IrProgram, Kernel, KernelKind, ScalarTy};
 use crate::sema::TypedFunction;
@@ -199,13 +206,31 @@ pub enum GraphArray {
 }
 
 impl GraphArray {
-    /// Device pointer name used by the CUDA and OpenCL renderers.
+    /// Device pointer name used by the CUDA-family and OpenCL renderers.
     pub fn device_name(self) -> &'static str {
         match self {
             GraphArray::Offsets => "gpu_OA",
             GraphArray::EdgeList => "gpu_edgeList",
             GraphArray::RevOffsets => "gpu_rev_OA",
             GraphArray::SrcList => "gpu_srcList",
+        }
+    }
+
+    /// Host-side CSR member the array is copied from.
+    pub fn host_name(self) -> &'static str {
+        match self {
+            GraphArray::Offsets => "g.indexofNodes",
+            GraphArray::EdgeList => "g.edgeList",
+            GraphArray::RevOffsets => "g.rev_indexofNodes",
+            GraphArray::SrcList => "g.srcList",
+        }
+    }
+
+    /// Element count expression (in terms of the generated `V` / `E` locals).
+    pub fn len_sym(self) -> &'static str {
+        match self {
+            GraphArray::Offsets | GraphArray::RevOffsets => "(1 + V)",
+            GraphArray::EdgeList | GraphArray::SrcList => "E",
         }
     }
 }
@@ -329,6 +354,201 @@ pub struct BfsPlan {
 }
 
 // ---------------------------------------------------------------------------
+// Host-statement schedule
+// ---------------------------------------------------------------------------
+
+/// One backend-neutral host-side operation. The complete host half of a
+/// generated program — declarations, transfers, launches, loop and branch
+/// structure, epilogue frees — is lowered once into a `Vec<HostOp>` tree by
+/// [`DevicePlan::build`]; a backend renders it through
+/// `codegen::render_host_schedule`, supplying only its spellings
+/// (`cudaMemcpy` vs `clEnqueueWriteBuffer` vs SYCL queue ops vs OpenACC
+/// pragmas). Renderers never walk the AST for host syntax; device-kernel
+/// *bodies* (the [`HostOp::Launch`] / [`HostOp::Bfs`] payloads) are the only
+/// AST that reaches them.
+#[derive(Clone, Debug)]
+pub enum HostOp {
+    /// `V` / `E` locals (and per-backend context setup: queue, cl status)
+    DeclDims,
+    /// §4.1: graph CSR arrays alloc'd + copied host→device, once
+    GraphToDevice,
+    /// device allocation of one plan buffer
+    AllocProp { slot: u32 },
+    /// the single fixedPoint OR-flag word (§4.1)
+    AllocFlag,
+    /// launch-dimension setup (`threadsPerBlock`, ND-range sizes, …)
+    LaunchSetup,
+    /// host scalar declaration
+    DeclScalar { name: String, ty: ScalarTy, init: Option<Expr> },
+    /// host scalar assignment
+    AssignScalar { name: String, value: Expr },
+    /// whole-property device-to-device copy (`modified = modified_nxt`)
+    CopyProp { dst: u32, src: u32 },
+    /// single-element device store (`src.dist = 0`)
+    SetElement { slot: u32, index: String, value: Expr },
+    /// host-side scalar reduction statement
+    ReduceScalar { name: String, op: ReduceOp, value: Expr },
+    /// `attachNodeProperty`: N-wide initialization launch
+    InitProps { kernel: usize, inits: Vec<(u32, Expr)> },
+    /// parallel `forall`: kernel emission + launch + bound §4 transfers.
+    /// The iterator/body AST is carried for the device half only.
+    Launch { kernel: usize, iter: Iterator_, body: Block },
+    /// sequential host loop over a node set
+    SeqFor { var: String, set: String, body: Vec<HostOp> },
+    /// Fig 12 fixedPoint skeleton; body launches see the OR-flag
+    FixedPoint { index: usize, var: String, body: Vec<HostOp> },
+    /// Fig 9 iterateInBFS skeleton (forward + optional reverse sweep)
+    Bfs { index: usize, var: String, from: String, body: Block, reverse: Option<(Expr, Block)> },
+    DoWhile { body: Vec<HostOp>, cond: Expr },
+    While { cond: Expr, body: Vec<HostOp> },
+    If { cond: Expr, then: Vec<HostOp>, els: Option<Vec<HostOp>> },
+    Return { value: Expr },
+    /// host-level construct no backend supports (rendered as a comment)
+    Unsupported { what: &'static str },
+    /// boundary marker: outputs-only D2H + frees begin here
+    EpilogueBegin,
+    /// §4.1: one updated property returns to the host
+    CopyOut { slot: u32 },
+    FreeProp { slot: u32 },
+    FreeFlag,
+    FreeGraph,
+}
+
+/// Walks the function body in the exact order of `ir::collect_kernels`,
+/// producing the [`HostOp`] tree plus the fixedPoint / BFS skeleton lists
+/// (kernel ids are assigned positionally, so the walk must mirror the IR
+/// kernel schedule statement for statement).
+struct HostLower<'a> {
+    props: &'a PropTable,
+    next_kernel: usize,
+    fixed_points: Vec<FixedPointPlan>,
+    bfs_loops: Vec<BfsPlan>,
+}
+
+impl HostLower<'_> {
+    fn take_kernel(&mut self) -> usize {
+        let k = self.next_kernel;
+        self.next_kernel += 1;
+        k
+    }
+
+    fn block(&mut self, b: &[Stmt]) -> Vec<HostOp> {
+        let mut out = Vec::new();
+        for s in b {
+            self.stmt(s, &mut out);
+        }
+        out
+    }
+
+    fn stmt(&mut self, s: &Stmt, out: &mut Vec<HostOp>) {
+        match s {
+            // device-prop declarations become AllocProp ops in the prologue
+            Stmt::Decl { ty, .. } if ty.is_prop() => {}
+            Stmt::Decl { ty, name, init, .. } => out.push(HostOp::DeclScalar {
+                name: name.clone(),
+                ty: ScalarTy::of(ty),
+                init: init.clone(),
+            }),
+            Stmt::Assign { target, value, .. } => match target {
+                LValue::Var(v) => match self.props.slot(v) {
+                    Some(dst) if !self.props.meta(dst).edge => {
+                        // whole-property assignment: device-side copy when the
+                        // source is a property too; anything else is dropped,
+                        // matching the old emitters
+                        let src = match value {
+                            Expr::Var(s) => self.props.slot(s),
+                            _ => None,
+                        };
+                        if let Some(src) = src {
+                            out.push(HostOp::CopyProp { dst, src });
+                        }
+                    }
+                    _ => out.push(HostOp::AssignScalar {
+                        name: v.clone(),
+                        value: value.clone(),
+                    }),
+                },
+                LValue::Prop { obj, prop } => {
+                    if let Some(slot) = self.props.slot(prop) {
+                        out.push(HostOp::SetElement {
+                            slot,
+                            index: obj.clone(),
+                            value: value.clone(),
+                        });
+                    }
+                }
+            },
+            Stmt::Reduce { target, op, value, .. } => {
+                if let LValue::Var(v) = target {
+                    out.push(HostOp::ReduceScalar {
+                        name: v.clone(),
+                        op: *op,
+                        value: value.clone(),
+                    });
+                }
+            }
+            Stmt::AttachNodeProperty { inits, .. } => {
+                let kernel = self.take_kernel();
+                let inits = inits
+                    .iter()
+                    .filter_map(|(p, e)| self.props.slot(p).map(|s| (s, e.clone())))
+                    .collect();
+                out.push(HostOp::InitProps { kernel, inits });
+            }
+            Stmt::For { parallel: true, iter, body, .. } => out.push(HostOp::Launch {
+                kernel: self.take_kernel(),
+                iter: iter.clone(),
+                body: body.clone(),
+            }),
+            Stmt::For { parallel: false, iter, body, .. } => {
+                let set = match &iter.source {
+                    IterSource::Set { set } => set.clone(),
+                    _ => "g.nodes()".to_string(),
+                };
+                let body = self.block(body);
+                out.push(HostOp::SeqFor { var: iter.var.clone(), set, body });
+            }
+            Stmt::IterateBFS { var, from, body, reverse, .. } => {
+                let fwd = self.take_kernel();
+                let rev = reverse.as_ref().map(|_| self.take_kernel());
+                let index = self.bfs_loops.len();
+                self.bfs_loops.push(BfsPlan { fwd, rev, level: self.props.slot("level") });
+                out.push(HostOp::Bfs {
+                    index,
+                    var: var.clone(),
+                    from: from.clone(),
+                    body: body.clone(),
+                    reverse: reverse.clone(),
+                });
+            }
+            Stmt::FixedPoint { var, cond, body, .. } => {
+                let flag_name = crate::ir::or_flag_prop(cond).unwrap_or_default();
+                let index = self.fixed_points.len();
+                self.fixed_points
+                    .push(FixedPointPlan { flag: self.props.slot(&flag_name), flag_name });
+                let body = self.block(body);
+                out.push(HostOp::FixedPoint { index, var: var.clone(), body });
+            }
+            Stmt::DoWhile { body, cond, .. } => {
+                out.push(HostOp::DoWhile { body: self.block(body), cond: cond.clone() })
+            }
+            Stmt::While { cond, body, .. } => {
+                out.push(HostOp::While { cond: cond.clone(), body: self.block(body) })
+            }
+            Stmt::If { cond, then, els, .. } => out.push(HostOp::If {
+                cond: cond.clone(),
+                then: self.block(then),
+                els: els.as_ref().map(|e| self.block(e)),
+            }),
+            Stmt::Return { value, .. } => out.push(HostOp::Return { value: value.clone() }),
+            Stmt::MinMaxAssign { .. } => {
+                out.push(HostOp::Unsupported { what: "Min/Max outside a parallel loop" })
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // The device plan
 // ---------------------------------------------------------------------------
 
@@ -353,6 +573,9 @@ pub struct DevicePlan {
     pub fixed_points: Vec<FixedPointPlan>,
     /// iterateInBFS skeletons in program order
     pub bfs_loops: Vec<BfsPlan>,
+    /// the complete host-statement schedule (prologue, body, epilogue);
+    /// renderers consume this instead of walking the AST for host syntax
+    pub host_ops: Vec<HostOp>,
 }
 
 impl DevicePlan {
@@ -396,20 +619,39 @@ impl DevicePlan {
 
         let kernels = ir.kernels.iter().map(|k| kernel_plan(ir, &props, k)).collect();
 
-        let mut fixed_points = Vec::new();
-        let mut bfs_loops = Vec::new();
-        let mut next_kernel = 0usize;
-        collect_host_loops(
-            &tf.func.body,
-            &props,
-            &mut next_kernel,
-            &mut fixed_points,
-            &mut bfs_loops,
-        );
-        // hard assert (one usize compare per build): the host-loop walk must
+        let mut hl = HostLower {
+            props: &props,
+            next_kernel: 0,
+            fixed_points: Vec::new(),
+            bfs_loops: Vec::new(),
+        };
+        let mut body_ops = hl.block(&tf.func.body);
+        // hard assert (one usize compare per build): the host walk must
         // mirror `ir::collect_kernels` exactly, or every downstream kernel id
         // would be silently shifted
-        assert_eq!(next_kernel, ir.kernels.len(), "host-loop walk drifted from schedule");
+        assert_eq!(hl.next_kernel, ir.kernels.len(), "host walk drifted from kernel schedule");
+        let HostLower { fixed_points, bfs_loops, .. } = hl;
+
+        // a body ending in `return <scalar>` (e.g. TC) must run the epilogue
+        // first, or every free would be emitted as unreachable code
+        let trailing_return = match body_ops.last() {
+            Some(HostOp::Return { .. }) => body_ops.pop(),
+            _ => None,
+        };
+
+        // prologue: dims, graph H2D, buffer + flag allocation, launch dims
+        let mut host_ops = vec![HostOp::DeclDims, HostOp::GraphToDevice];
+        host_ops.extend(device_resident.iter().map(|&slot| HostOp::AllocProp { slot }));
+        host_ops.push(HostOp::AllocFlag);
+        host_ops.push(HostOp::LaunchSetup);
+        host_ops.extend(body_ops);
+        // epilogue: outputs-only D2H (§4.1), then every alloc's matching free
+        host_ops.push(HostOp::EpilogueBegin);
+        host_ops.extend(outputs.iter().map(|&slot| HostOp::CopyOut { slot }));
+        host_ops.extend(device_resident.iter().map(|&slot| HostOp::FreeProp { slot }));
+        host_ops.push(HostOp::FreeFlag);
+        host_ops.push(HostOp::FreeGraph);
+        host_ops.extend(trailing_return);
 
         DevicePlan {
             func: tf.func.name.clone(),
@@ -421,6 +663,7 @@ impl DevicePlan {
             kernels,
             fixed_points,
             bfs_loops,
+            host_ops,
         }
     }
 
@@ -535,6 +778,165 @@ impl DevicePlan {
         out.push("==== end device plan ====".to_string());
         out
     }
+
+    /// Stable, backend-neutral description of the host-statement schedule.
+    /// Every text renderer embeds this as a comment block right after the
+    /// device-plan manifest; `tests/host_schedule_conformance.rs` asserts it
+    /// is byte-identical across all five backends — the proof that every
+    /// backend's host section is derived from the same [`HostOp`] sequence.
+    pub fn host_manifest(&self) -> Vec<String> {
+        let mut out = vec![format!("==== host schedule: {} ====", self.func)];
+        self.host_manifest_block(&self.host_ops, 0, false, &mut out);
+        out.push("==== end host schedule ====".to_string());
+        out
+    }
+
+    fn host_manifest_block(
+        &self,
+        ops: &[HostOp],
+        depth: usize,
+        in_fixed_point: bool,
+        out: &mut Vec<String>,
+    ) {
+        let pad = "  ".repeat(depth);
+        let buf = |s: u32| format!("buffer[{s}] {}", self.prop_name(s));
+        for op in ops {
+            match op {
+                HostOp::DeclDims => out.push(format!("{pad}decl-dims")),
+                HostOp::GraphToDevice => {
+                    out.push(format!("{pad}graph-h2d ({} arrays)", self.graph_arrays.len()))
+                }
+                HostOp::AllocProp { slot } => out.push(format!("{pad}alloc {}", buf(*slot))),
+                HostOp::AllocFlag => out.push(format!("{pad}alloc or-flag")),
+                HostOp::LaunchSetup => out.push(format!("{pad}launch-setup")),
+                HostOp::DeclScalar { name, ty, init } => {
+                    let t = TypeMap::C.name(*ty);
+                    match init {
+                        Some(e) => out.push(format!(
+                            "{pad}decl {name} : {t} = {}",
+                            neutral_expr(e)
+                        )),
+                        None => out.push(format!("{pad}decl {name} : {t}")),
+                    }
+                }
+                HostOp::AssignScalar { name, value } => {
+                    out.push(format!("{pad}assign {name} = {}", neutral_expr(value)))
+                }
+                HostOp::CopyProp { dst, src } => {
+                    out.push(format!("{pad}copy-prop {} <- {}", buf(*dst), buf(*src)))
+                }
+                HostOp::SetElement { slot, index, value } => out.push(format!(
+                    "{pad}set {}[{index}] = {}",
+                    buf(*slot),
+                    neutral_expr(value)
+                )),
+                HostOp::ReduceScalar { name, op, value } => out.push(format!(
+                    "{pad}reduce {name} {} {}",
+                    op.symbol(),
+                    neutral_expr(value)
+                )),
+                HostOp::InitProps { kernel, inits } => {
+                    let names: Vec<&str> =
+                        inits.iter().map(|(s, _)| self.prop_name(*s)).collect();
+                    out.push(format!("{pad}init kernel[{kernel}] {{{}}}", names.join(", ")))
+                }
+                HostOp::Launch { kernel, .. } => out.push(format!(
+                    "{pad}launch kernel[{kernel}] {}{}",
+                    self.kernels[*kernel].name,
+                    if in_fixed_point { " [+or-flag]" } else { "" }
+                )),
+                HostOp::SeqFor { var, set, body } => {
+                    out.push(format!("{pad}for {var} in {set} {{"));
+                    self.host_manifest_block(body, depth + 1, in_fixed_point, out);
+                    out.push(format!("{pad}}}"));
+                }
+                HostOp::FixedPoint { index, var, body } => {
+                    out.push(format!(
+                        "{pad}fixedPoint[{index}] ({var}) flag=`{}` {{",
+                        self.fixed_points[*index].flag_name
+                    ));
+                    self.host_manifest_block(body, depth + 1, true, out);
+                    out.push(format!("{pad}}}"));
+                }
+                HostOp::Bfs { index, var, from, reverse, .. } => {
+                    let b = &self.bfs_loops[*index];
+                    let rev = match (b.rev, reverse) {
+                        (Some(r), Some(_)) => format!(" rev=kernel[{r}]"),
+                        _ => String::new(),
+                    };
+                    out.push(format!(
+                        "{pad}bfs[{index}] fwd=kernel[{}]{rev} ({var} from {from})",
+                        b.fwd
+                    ));
+                }
+                HostOp::DoWhile { body, cond } => {
+                    out.push(format!("{pad}do {{"));
+                    self.host_manifest_block(body, depth + 1, in_fixed_point, out);
+                    out.push(format!("{pad}}} while {}", neutral_expr(cond)));
+                }
+                HostOp::While { cond, body } => {
+                    out.push(format!("{pad}while {} {{", neutral_expr(cond)));
+                    self.host_manifest_block(body, depth + 1, in_fixed_point, out);
+                    out.push(format!("{pad}}}"));
+                }
+                HostOp::If { cond, then, els } => {
+                    out.push(format!("{pad}if {} {{", neutral_expr(cond)));
+                    self.host_manifest_block(then, depth + 1, in_fixed_point, out);
+                    if let Some(e) = els {
+                        out.push(format!("{pad}}} else {{"));
+                        self.host_manifest_block(e, depth + 1, in_fixed_point, out);
+                    }
+                    out.push(format!("{pad}}}"));
+                }
+                HostOp::Return { value } => {
+                    out.push(format!("{pad}return {}", neutral_expr(value)))
+                }
+                HostOp::Unsupported { what } => out.push(format!("{pad}unsupported: {what}")),
+                HostOp::EpilogueBegin => out.push(format!("{pad}epilogue")),
+                HostOp::CopyOut { slot } => out.push(format!("{pad}copy-out {}", buf(*slot))),
+                HostOp::FreeProp { slot } => out.push(format!("{pad}free {}", buf(*slot))),
+                HostOp::FreeFlag => out.push(format!("{pad}free or-flag")),
+                HostOp::FreeGraph => out.push(format!("{pad}free graph")),
+            }
+        }
+    }
+}
+
+/// C-flavored expression rendering for the host manifest: backend-neutral
+/// (no buffer-name styles) and with C spellings for literals, so the block
+/// never leaks DSL tokens like `True` into generated files.
+fn neutral_expr(e: &Expr) -> String {
+    match e {
+        Expr::IntLit(n) => n.to_string(),
+        Expr::FloatLit(x) => {
+            if x.fract() == 0.0 {
+                format!("{x:.1}")
+            } else {
+                x.to_string()
+            }
+        }
+        Expr::BoolLit(b) => b.to_string(),
+        Expr::Inf => "INT_MAX".to_string(),
+        Expr::Var(v) => v.clone(),
+        Expr::Prop { obj, prop } => format!("{prop}[{obj}]"),
+        Expr::Call { recv, name, args } => {
+            let a: Vec<String> = args.iter().map(neutral_expr).collect();
+            match recv {
+                Some(r) => format!("{r}.{name}({})", a.join(", ")),
+                None => format!("{name}({})", a.join(", ")),
+            }
+        }
+        Expr::Unary { op, expr } => {
+            let sym = match op {
+                UnOp::Neg => "-",
+                UnOp::Not => "!",
+            };
+            format!("{sym}{}", neutral_expr(expr))
+        }
+        Expr::Binary { op, lhs, rhs } => {
+            format!("({} {} {})", neutral_expr(lhs), op.symbol(), neutral_expr(rhs))
+        }
+    }
 }
 
 fn kind_token(k: &KernelKind) -> &'static str {
@@ -607,95 +1009,6 @@ fn kernel_plan(ir: &IrProgram, props: &PropTable, k: &Kernel) -> KernelPlan {
     }
 }
 
-/// Walk the function body in the exact order of `ir::collect_kernels`,
-/// recording fixedPoint / BFS skeletons against the kernel schedule.
-fn collect_host_loops(
-    block: &[Stmt],
-    props: &PropTable,
-    next_kernel: &mut usize,
-    fixed_points: &mut Vec<FixedPointPlan>,
-    bfs_loops: &mut Vec<BfsPlan>,
-) {
-    for s in block {
-        match s {
-            Stmt::AttachNodeProperty { .. } => *next_kernel += 1,
-            Stmt::For { parallel: true, .. } => *next_kernel += 1,
-            Stmt::For { parallel: false, body, .. } => {
-                collect_host_loops(body, props, next_kernel, fixed_points, bfs_loops);
-            }
-            Stmt::IterateBFS { reverse, .. } => {
-                let fwd = *next_kernel;
-                *next_kernel += 1;
-                let rev = reverse.as_ref().map(|_| {
-                    let r = *next_kernel;
-                    *next_kernel += 1;
-                    r
-                });
-                bfs_loops.push(BfsPlan { fwd, rev, level: props.slot("level") });
-            }
-            Stmt::FixedPoint { cond, body, .. } => {
-                let flag_name = crate::ir::or_flag_prop(cond).unwrap_or_default();
-                fixed_points.push(FixedPointPlan { flag: props.slot(&flag_name), flag_name });
-                collect_host_loops(body, props, next_kernel, fixed_points, bfs_loops);
-            }
-            Stmt::DoWhile { body, .. } | Stmt::While { body, .. } => {
-                collect_host_loops(body, props, next_kernel, fixed_points, bfs_loops);
-            }
-            Stmt::If { then, els, .. } => {
-                collect_host_loops(then, props, next_kernel, fixed_points, bfs_loops);
-                if let Some(e) = els {
-                    collect_host_loops(e, props, next_kernel, fixed_points, bfs_loops);
-                }
-            }
-            _ => {}
-        }
-    }
-}
-
-// ---------------------------------------------------------------------------
-// Schedule cursor
-// ---------------------------------------------------------------------------
-
-/// Walks the plan's schedules in program order, mirroring a renderer's AST
-/// walk: kernel-site statements consume entries instead of re-deriving ids.
-#[derive(Clone, Copy, Debug, Default)]
-pub struct PlanCursor {
-    kernel: usize,
-    fixed_point: usize,
-    bfs: usize,
-}
-
-impl PlanCursor {
-    /// Next kernel at an `attachNodeProperty` or parallel-`forall` site.
-    pub fn next_kernel<'p>(&mut self, plan: &'p DevicePlan) -> &'p KernelPlan {
-        let k = &plan.kernels[self.kernel];
-        self.kernel += 1;
-        k
-    }
-
-    /// Next `fixedPoint` skeleton.
-    pub fn next_fixed_point<'p>(&mut self, plan: &'p DevicePlan) -> &'p FixedPointPlan {
-        let f = &plan.fixed_points[self.fixed_point];
-        self.fixed_point += 1;
-        f
-    }
-
-    /// Next `iterateInBFS` skeleton: the loop plan, its forward kernel and,
-    /// when the construct has an `iterateInReverse` arm, the reverse kernel.
-    /// Advances the kernel cursor past both.
-    pub fn next_bfs<'p>(
-        &mut self,
-        plan: &'p DevicePlan,
-    ) -> (&'p BfsPlan, &'p KernelPlan, Option<&'p KernelPlan>) {
-        let b = &plan.bfs_loops[self.bfs];
-        self.bfs += 1;
-        let fwd = &plan.kernels[b.fwd];
-        let rev = b.rev.map(|i| &plan.kernels[i]);
-        self.kernel = b.fwd + 1 + usize::from(b.rev.is_some());
-        (b, fwd, rev)
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -760,19 +1073,93 @@ mod tests {
         assert_eq!(bfs.bfs_loops[0].level, bfs.props.slot("level"));
     }
 
+    // (host-schedule ↔ kernel-schedule agreement across all programs and
+    // backends is pinned by tests/host_schedule_conformance.rs)
+
     #[test]
-    fn cursor_walks_the_schedule_in_order() {
+    fn sssp_host_schedule_shape() {
+        let plan = plan_of("sssp.sp");
+        let ops = &plan.host_ops;
+        // prologue: dims, graph, one alloc per device-resident buffer, flag
+        assert!(matches!(ops[0], HostOp::DeclDims));
+        assert!(matches!(ops[1], HostOp::GraphToDevice));
+        let allocs = ops
+            .iter()
+            .filter(|o| matches!(o, HostOp::AllocProp { .. }))
+            .count();
+        assert_eq!(allocs, plan.device_resident.len());
+        // the fixedPoint body: relax launch, modified <- modified_nxt copy,
+        // modified_nxt re-init
+        let fp = ops
+            .iter()
+            .find_map(|o| match o {
+                HostOp::FixedPoint { index, body, .. } => Some((index, body)),
+                _ => None,
+            })
+            .expect("sssp has a fixedPoint op");
+        assert_eq!(*fp.0, 0);
+        assert!(fp.1.iter().any(|o| matches!(o, HostOp::Launch { kernel: 1, .. })));
+        let (m, mn) =
+            (plan.props.slot("modified").unwrap(), plan.props.slot("modified_nxt").unwrap());
+        assert!(fp
+            .1
+            .iter()
+            .any(|o| matches!(o, HostOp::CopyProp { dst, src } if *dst == m && *src == mn)));
+        // epilogue: dist copy-out, every alloc freed, flag + graph freed
+        let dist = plan.props.slot("dist").unwrap();
+        assert!(ops.iter().any(|o| matches!(o, HostOp::CopyOut { slot } if *slot == dist)));
+        let frees =
+            ops.iter().filter(|o| matches!(o, HostOp::FreeProp { .. })).count();
+        assert_eq!(frees, allocs);
+        assert!(ops.iter().any(|o| matches!(o, HostOp::FreeFlag)));
+        assert!(matches!(ops.last(), Some(HostOp::FreeGraph)));
+    }
+
+    #[test]
+    fn tc_trailing_return_comes_after_the_epilogue_frees() {
+        // tc.sp ends `return triangle_count;` — the schedule must run the
+        // epilogue first or every backend would emit unreachable frees
+        let plan = plan_of("tc.sp");
+        let ops = &plan.host_ops;
+        assert!(matches!(ops.last(), Some(HostOp::Return { .. })));
+        let ret = ops.len() - 1;
+        let free_graph = ops
+            .iter()
+            .position(|o| matches!(o, HostOp::FreeGraph))
+            .expect("graph freed");
+        assert!(free_graph < ret, "frees must precede the trailing return");
+    }
+
+    #[test]
+    fn bc_host_schedule_nests_bfs_inside_source_loop() {
         let plan = plan_of("bc.sp");
-        let mut cur = PlanCursor::default();
-        let k0 = cur.next_kernel(&plan);
-        assert_eq!(k0.id, 0);
-        // bc: attach(BC), then per-source attach(delta,sigma), then BFS fwd+rev
-        let k1 = cur.next_kernel(&plan);
-        assert_eq!(k1.kind, KernelKind::InitProps);
-        let (b, fwd, rev) = cur.next_bfs(&plan);
-        assert_eq!(fwd.kind, KernelKind::BfsForward);
-        assert!(rev.is_some());
-        assert_eq!(b.fwd, fwd.id);
+        let seq = plan
+            .host_ops
+            .iter()
+            .find_map(|o| match o {
+                HostOp::SeqFor { set, body, .. } => Some((set, body)),
+                _ => None,
+            })
+            .expect("bc iterates a source set");
+        assert_eq!(seq.0, "sourceSet");
+        assert!(seq.1.iter().any(|o| matches!(o, HostOp::SetElement { .. })));
+        assert!(seq
+            .1
+            .iter()
+            .any(|o| matches!(o, HostOp::Bfs { index: 0, reverse: Some(_), .. })));
+    }
+
+    #[test]
+    fn host_manifest_is_deterministic_and_marks_or_flag_launches() {
+        let a = plan_of("sssp.sp").host_manifest();
+        let b = plan_of("sssp.sp").host_manifest();
+        assert_eq!(a, b);
+        assert!(a[0].contains("host schedule: Compute_SSSP"));
+        assert!(a.iter().any(|l| l.contains("launch kernel[1]") && l.contains("[+or-flag]")));
+        assert!(a.iter().any(|l| l.trim() == "epilogue"));
+        // no DSL literal leaks into generated comment blocks
+        assert!(a.iter().all(|l| !l.contains("True") && !l.contains("False")));
+        assert_eq!(a.last().unwrap(), "==== end host schedule ====");
     }
 
     #[test]

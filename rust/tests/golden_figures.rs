@@ -221,3 +221,209 @@ fn all_programs_generate_on_all_text_backends() {
         }
     }
 }
+
+// ---------------------------------------------------------------------------
+// HIP variants of the Fig 2 / 9 / 12 idiom tests: the fifth backend renders
+// the same plan as CUDA with HIP spellings.
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hip_fig2_neighborhood_iteration_and_launch() {
+    let hip = gen("sssp.sp", "hip");
+    assert_has(
+        &hip,
+        &[
+            "#include <hip/hip_runtime.h>",
+            "__global__ void",
+            "blockIdx.x * blockDim.x + threadIdx.x",
+            "for (int edge = gpu_OA[v]; edge < gpu_OA[v+1]; edge++) {",
+            "int nbr = gpu_edgeList[edge];",
+            "hipLaunchKernelGGL(Compute_SSSP_kernel_1, dim3(numBlocks), dim3(threadsPerBlock), 0, 0, ",
+            "hipMemcpy(gpu_edgeList, g.edgeList, sizeof(int) * E, hipMemcpyHostToDevice);",
+            "hipDeviceSynchronize();",
+        ],
+        "HIP Fig 2 (neighbor iteration + hipLaunchKernelGGL)",
+    );
+}
+
+#[test]
+fn hip_fig9_level_sync_bfs_do_while() {
+    let hip = gen("bc.sp", "hip");
+    assert_has(
+        &hip,
+        &[
+            "do {",
+            "} while (!finished);",
+            "++hops_from_source;",
+            "if (gpu_level[v] == *d_hops_from_source) {",
+            "if (gpu_level[nbr] == -1) {",
+            "gpu_level[nbr] = *d_hops_from_source + 1;",
+            "*d_finished = false;",
+            "hipLaunchKernelGGL(Compute_BC_bfs_kernel_",
+            "hipLaunchKernelGGL(HIP_KERNEL_NAME(initKernel<int>),",
+        ],
+        "HIP Fig 9 (iterateInBFS do-while)",
+    );
+}
+
+#[test]
+fn hip_fig12_fixed_point_host_loop() {
+    let hip = gen("sssp.sp", "hip");
+    assert_has(
+        &hip,
+        &[
+            "while (!finished) {",
+            "finished = true;",
+            "hipMemcpy(gpu_finished, &finished, sizeof(bool) * 1, hipMemcpyHostToDevice);",
+            "hipMemcpy(&finished, gpu_finished, sizeof(bool) * 1, hipMemcpyDeviceToHost);",
+        ],
+        "HIP Fig 12 (fixedPoint host loop)",
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Negative assertions on all five backends: no placeholder params, no buffer
+// used before its alloc line, every alloc has a matching free/release.
+// ---------------------------------------------------------------------------
+
+const ALL_PROGRAMS: [&str; 6] = ["bc.sp", "pr.sp", "sssp.sp", "tc.sp", "cc.sp", "bfs.sp"];
+
+#[test]
+fn no_placeholder_params_on_any_backend() {
+    for p in ALL_PROGRAMS {
+        for b in codegen::TEXT_BACKENDS {
+            let out = gen(p, b);
+            assert!(!out.contains("..."), "{p}/{b}: `...` placeholder left in generated code");
+            assert!(
+                !out.contains("/* launch"),
+                "{p}/{b}: placeholder launch comment left in generated code"
+            );
+        }
+    }
+}
+
+/// The host section of a generated file (kernel text precedes it in the
+/// split backends and may legally name buffers in parameter lists).
+fn host_section(src: &str, backend: &str) -> String {
+    let marker = match backend {
+        "opencl" => "// ---- host.cpp ----",
+        _ => "\nvoid ",
+    };
+    match src.find(marker) {
+        Some(i) => src[i..].to_string(),
+        None => src.to_string(),
+    }
+}
+
+/// `needle` appears in `hay` bounded by non-identifier characters.
+fn mentions(hay: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(i) = hay[from..].find(needle) {
+        let start = from + i;
+        let end = start + needle.len();
+        let pre_ok = start == 0
+            || !hay.as_bytes()[start - 1].is_ascii_alphanumeric()
+                && hay.as_bytes()[start - 1] != b'_'
+                && hay.as_bytes()[start - 1] != b'.';
+        let post_ok = end == hay.len()
+            || !hay.as_bytes()[end].is_ascii_alphanumeric() && hay.as_bytes()[end] != b'_';
+        if pre_ok && post_ok {
+            return true;
+        }
+        from = end;
+    }
+    false
+}
+
+/// Extract (buffer name, alloc line index) pairs and free-site names from
+/// one backend's host section.
+fn alloc_free_events(host: &str, backend: &str) -> (Vec<(String, usize)>, Vec<String>) {
+    let mut allocs = Vec::new();
+    let mut frees = Vec::new();
+    for (i, l) in host.lines().enumerate() {
+        let t = l.trim();
+        match backend {
+            "cuda" | "hip" => {
+                let m = if backend == "cuda" { "cudaMalloc(&" } else { "hipMalloc(&" };
+                if let Some(rest) = t.split(m).nth(1) {
+                    let name = rest.split(',').next().unwrap().to_string();
+                    allocs.push((name, i));
+                }
+                let f = if backend == "cuda" { "cudaFree(" } else { "hipFree(" };
+                if let Some(rest) = t.strip_prefix(f) {
+                    frees.push(rest.trim_end_matches(");").to_string());
+                }
+            }
+            "opencl" => {
+                if t.starts_with("cl_mem ") && t.contains("= clCreateBuffer") {
+                    let name = t["cl_mem ".len()..].split(' ').next().unwrap().to_string();
+                    allocs.push((name, i));
+                }
+                if let Some(rest) = t.strip_prefix("clReleaseMemObject(") {
+                    frees.push(rest.trim_end_matches(");").to_string());
+                }
+            }
+            "sycl" => {
+                if t.contains("= malloc_device<") {
+                    let lhs = t.split(" = malloc_device").next().unwrap();
+                    let name = lhs.split(' ').next_back().unwrap().to_string();
+                    allocs.push((name, i));
+                }
+                if let Some(rest) = t.strip_prefix("sycl::free(") {
+                    frees.push(rest.split(',').next().unwrap().to_string());
+                }
+            }
+            "openacc" => {
+                if t.contains("= new ") && t.contains('[') {
+                    let lhs = t.split(" = new ").next().unwrap();
+                    let name = lhs.split(' ').next_back().unwrap().to_string();
+                    allocs.push((name, i));
+                }
+                if let Some(rest) = t.strip_prefix("delete[] ") {
+                    frees.push(rest.trim_end_matches(';').to_string());
+                }
+            }
+            other => panic!("unknown backend {other}"),
+        }
+    }
+    (allocs, frees)
+}
+
+#[test]
+fn every_alloc_is_freed_and_no_buffer_is_used_before_alloc() {
+    for p in ALL_PROGRAMS {
+        for b in codegen::TEXT_BACKENDS {
+            let out = gen(p, b);
+            let host = host_section(&out, b);
+            let (allocs, frees) = alloc_free_events(&host, b);
+            assert!(!allocs.is_empty() || b == "openacc", "{p}/{b}: no allocations found");
+            // (1) alloc/free multisets match
+            let mut a: Vec<&str> = allocs.iter().map(|(n, _)| n.as_str()).collect();
+            let mut f: Vec<&str> = frees.iter().map(String::as_str).collect();
+            a.sort_unstable();
+            f.sort_unstable();
+            assert_eq!(a, f, "{p}/{b}: allocs and frees don't pair up");
+            // (2) every mention of an allocated buffer before its alloc
+            // line must be a declaration — never a use
+            let lines: Vec<&str> = host.lines().collect();
+            for (name, alloc_line) in &allocs {
+                for (i, l) in lines.iter().enumerate().take(*alloc_line) {
+                    if mentions(l, name) {
+                        assert!(
+                            is_decl_of(l, name),
+                            "{p}/{b}: `{name}` used on line {i} before its alloc on {alloc_line}:\n{l}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Is this line a declaration of `name` (e.g. `int* gpu_OA;`,
+/// `bool* d_finished;`)?
+fn is_decl_of(line: &str, name: &str) -> bool {
+    let t = line.trim();
+    t.ends_with(&format!("* {name};")) || t.ends_with(&format!(" {name};"))
+}
+

@@ -1,0 +1,93 @@
+//! Full-file snapshot tests: the generated output for the paper's four
+//! algorithms × all five text backends is pinned under `tests/snapshots/`,
+//! so host-lowering refactors show up as reviewable snapshot diffs instead
+//! of silent drift.
+//!
+//! Workflow:
+//! - `cargo test` compares regeneration against the committed snapshots;
+//! - `UPDATE_SNAPSHOTS=1 cargo test --test snapshots` rewrites them (commit
+//!   the diff with the change that caused it);
+//! - a missing snapshot (e.g. a freshly added backend) is bootstrapped:
+//!   written on first run after a determinism self-check, compared on every
+//!   run thereafter.
+
+use starplat::codegen;
+use starplat::dsl::parser::parse_file;
+use starplat::ir::lower;
+use starplat::sema::check_function;
+use std::path::PathBuf;
+
+/// The paper's four evaluated algorithms (Table 3).
+const ALGOS: [&str; 4] = ["bc.sp", "pr.sp", "sssp.sp", "tc.sp"];
+
+fn snapshot_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("tests").join("snapshots")
+}
+
+fn gen(program: &str, backend: &str) -> String {
+    let path =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("dsl_programs").join(program);
+    let fns = parse_file(&path).unwrap();
+    let tf = check_function(&fns[0]).unwrap();
+    codegen::generate(backend, &lower(&tf)).unwrap()
+}
+
+/// First differing line, for a reviewable failure message.
+fn first_diff(expected: &str, actual: &str) -> String {
+    for (i, (e, a)) in expected.lines().zip(actual.lines()).enumerate() {
+        if e != a {
+            return format!("first diff at line {}:\n  snapshot: {e}\n  actual:   {a}", i + 1);
+        }
+    }
+    format!(
+        "line counts differ: snapshot {} vs actual {}",
+        expected.lines().count(),
+        actual.lines().count()
+    )
+}
+
+#[test]
+fn generated_output_matches_snapshots() {
+    let dir = snapshot_dir();
+    std::fs::create_dir_all(&dir).unwrap();
+    let update = std::env::var("UPDATE_SNAPSHOTS").map(|v| v == "1").unwrap_or(false);
+    let mut bootstrapped = Vec::new();
+    for p in ALGOS {
+        let stem = p.trim_end_matches(".sp");
+        for b in codegen::TEXT_BACKENDS {
+            let actual = gen(p, b);
+            // determinism self-check: a snapshot is only meaningful if
+            // regeneration is stable within one build
+            assert_eq!(actual, gen(p, b), "{p}/{b}: generation is nondeterministic");
+            let path = dir.join(format!("{stem}.{b}.snap"));
+            if update || !path.exists() {
+                std::fs::write(&path, &actual).unwrap();
+                bootstrapped.push(format!("{stem}.{b}.snap"));
+                continue;
+            }
+            let expected = std::fs::read_to_string(&path).unwrap();
+            assert_eq!(
+                expected,
+                actual,
+                "{p}/{b}: generated output drifted from tests/snapshots/{stem}.{b}.snap \
+                 (run with UPDATE_SNAPSHOTS=1 to rewrite after reviewing the diff)\n{}",
+                first_diff(&expected, &actual)
+            );
+        }
+    }
+    if !bootstrapped.is_empty() {
+        eprintln!(
+            "snapshots: wrote {} file(s): {} — commit them to pin generation",
+            bootstrapped.len(),
+            bootstrapped.join(", ")
+        );
+    }
+    // the matrix is complete after one run: 4 algorithms × 5 backends
+    for p in ALGOS {
+        let stem = p.trim_end_matches(".sp");
+        for b in codegen::TEXT_BACKENDS {
+            let path = dir.join(format!("{stem}.{b}.snap"));
+            assert!(path.exists(), "missing snapshot {}", path.display());
+        }
+    }
+}

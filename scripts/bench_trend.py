@@ -1,0 +1,80 @@
+#!/usr/bin/env python3
+"""Compare two BENCH_interp.json files and emit a Markdown trend report.
+
+Usage: bench_trend.py PREVIOUS.json CURRENT.json [--threshold 0.20]
+
+Cells are keyed by (algorithm, graph, mode); a cell whose `secs` grew by
+more than the threshold relative to the previous run is flagged. The report
+is advisory — the script always exits 0 (runner timing variance is not yet
+characterized well enough to gate on; see ROADMAP) — so CI pipes the output
+into $GITHUB_STEP_SUMMARY instead of failing the job.
+"""
+
+import json
+import sys
+
+
+def cells_by_key(path):
+    with open(path) as f:
+        report = json.load(f)
+    return {
+        (c["algorithm"], c["graph"], c["mode"]): c
+        for c in report.get("cells", [])
+    }, report
+
+
+def main(argv):
+    if len(argv) < 3:
+        print("usage: bench_trend.py PREVIOUS.json CURRENT.json [--threshold 0.20]")
+        return 0
+    threshold = 0.20
+    if "--threshold" in argv:
+        threshold = float(argv[argv.index("--threshold") + 1])
+    try:
+        prev, prev_report = cells_by_key(argv[1])
+        cur, cur_report = cells_by_key(argv[2])
+    except (OSError, json.JSONDecodeError, KeyError) as e:
+        print(f"### Interpreter bench trend\n\n_not comparable: {e}_")
+        return 0
+
+    print("### Interpreter bench trend (advisory)")
+    print()
+    print(
+        f"previous bench_n={prev_report.get('bench_n')} "
+        f"threads={prev_report.get('threads_par')} · "
+        f"current bench_n={cur_report.get('bench_n')} "
+        f"threads={cur_report.get('threads_par')}"
+    )
+    print()
+    print("| algorithm | graph | mode | prev s | cur s | Δ |")
+    print("|---|---|---|---:|---:|---:|")
+    regressions = []
+    for key in sorted(cur):
+        c = cur[key]
+        p = prev.get(key)
+        if p is None or not p.get("secs"):
+            print(f"| {key[0]} | {key[1]} | {key[2]} | — | {c['secs']:.4f} | new |")
+            continue
+        delta = (c["secs"] - p["secs"]) / p["secs"]
+        flag = " ⚠️" if delta > threshold else ""
+        print(
+            f"| {key[0]} | {key[1]} | {key[2]} | {p['secs']:.4f} "
+            f"| {c['secs']:.4f} | {delta:+.1%}{flag} |"
+        )
+        if delta > threshold:
+            regressions.append((key, delta))
+    print()
+    if regressions:
+        worst = ", ".join(f"{a}/{g}/{m} {d:+.1%}" for (a, g, m), d in regressions)
+        print(
+            f"**{len(regressions)} cell(s) regressed more than "
+            f"{threshold:.0%}**: {worst}. Advisory only — runner variance is "
+            "not yet characterized (ROADMAP)."
+        )
+    else:
+        print(f"No cell regressed more than {threshold:.0%}.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))
