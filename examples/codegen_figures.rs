@@ -46,6 +46,8 @@ fn main() -> anyhow::Result<()> {
     let sssp_acc = gen("sssp.sp", "openacc")?;
     let sssp_sycl = gen("sssp.sp", "sycl")?;
     let sssp_ocl = gen("sssp.sp", "opencl")?;
+    let sssp_metal = gen("sssp.sp", "metal")?;
+    let sssp_wgsl = gen("sssp.sp", "wgsl")?;
     let pr_acc = gen("pr.sp", "openacc")?;
     let tc_sycl = gen("tc.sp", "sycl")?;
     let bc_cuda = gen("bc.sp", "cuda")?;
@@ -57,6 +59,8 @@ fn main() -> anyhow::Result<()> {
             ("sssp.acc.cpp", &sssp_acc),
             ("sssp.sycl.cpp", &sssp_sycl),
             ("sssp.cl", &sssp_ocl),
+            ("sssp.metal", &sssp_metal),
+            ("sssp.wgsl", &sssp_wgsl),
         ] {
             println!("================ {name} ================\n{src}");
         }
@@ -104,6 +108,18 @@ fn main() -> anyhow::Result<()> {
         &sssp_hip,
         "hipLaunchKernelGGL(Compute_SSSP_kernel",
         "hipDeviceSynchronize();",
+    );
+    excerpt(
+        "Metal — Fig 6's Min construct via atomic_fetch_min_explicit (same KernelOps)",
+        &sssp_metal,
+        "kernel void Compute_SSSP_kernel",
+        "atomic_fetch_min_explicit",
+    );
+    excerpt(
+        "WGSL — the same Min construct in a non-C dialect (@binding storage, atomicMin)",
+        &sssp_wgsl,
+        "// shader module: Compute_SSSP_kernel",
+        "atomicMin(",
     );
     println!("(run with --full to dump the complete generated sources)");
     Ok(())

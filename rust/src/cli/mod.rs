@@ -1,7 +1,7 @@
 //! `starplat` command-line interface (hand-rolled: no clap offline).
 //!
 //! Subcommands:
-//!   compile --backend <cuda|hip|opencl|sycl|openacc|jax> --out DIR FILES...
+//!   compile --backend <cuda|hip|opencl|sycl|openacc|metal|wgsl|jax|all> --out DIR FILES...
 //!   export-graphs [--out DIR] [--scale N]     write shapes.json for aot.py
 //!   run --algo A --graph SHORT --backend B    run one cell of Table 3/4
 //!   stats [--scale N]                          print Table 2
@@ -89,13 +89,27 @@ fn print_help() {
          USAGE: starplat <COMMAND> [FLAGS]\n\
          \n\
          COMMANDS:\n\
-         \x20 compile --backend <cuda|hip|opencl|sycl|openacc|jax> [--out DIR] FILE...\n\
+         \x20 compile --backend <cuda|hip|opencl|sycl|openacc|metal|wgsl|jax|all> [--out DIR] FILE...\n\
+         \x20         (--backend all emits every text backend for each file)\n\
          \x20 export-graphs [--out artifacts/graphs] [--scale 800]\n\
          \x20 run --algo <bc|pr|sssp|tc|bfs|cc> --graph <TW|..|UR> --backend <seq|par|xla|gunrock|lonestar>\n\
          \x20 stats [--scale 4000]          print the Table-2 graph suite\n\
          \x20 graphgen --kind <rmat|uniform|road|social> --nodes N --edges M --out FILE\n\
          \x20 loc                           paper §5 DSL vs generated LoC table"
     );
+}
+
+/// Output extension for one text backend.
+pub fn backend_ext(b: &str) -> &'static str {
+    match b {
+        "cuda" => "cu",
+        "hip" => "hip.cpp",
+        "opencl" => "cl.cpp",
+        "sycl" => "sycl.cpp",
+        "metal" => "metal",
+        "wgsl" => "wgsl",
+        _ => "acc.cpp",
+    }
 }
 
 fn cmd_compile(f: &Flags) -> Result<()> {
@@ -123,16 +137,19 @@ fn cmd_compile(f: &Flags) -> Result<()> {
                 std::fs::write(&plan_path, prog.plan.to_string())?;
                 println!("compiled {file} -> {} + {}", py_path.display(), plan_path.display());
             }
+            // every text backend in one invocation (snapshot regeneration,
+            // cross-backend diffing); one lowering feeds all seven renders
+            "all" => {
+                for b in codegen::TEXT_BACKENDS {
+                    let src = codegen::generate(b, &ir)?;
+                    let out = out_dir.join(format!("{stem}.{}", backend_ext(b)));
+                    std::fs::write(&out, src)?;
+                    println!("compiled {file} [{b}] -> {}", out.display());
+                }
+            }
             b => {
                 let src = codegen::generate(b, &ir)?;
-                let ext = match b {
-                    "cuda" => "cu",
-                    "hip" => "hip.cpp",
-                    "opencl" => "cl.cpp",
-                    "sycl" => "sycl.cpp",
-                    _ => "acc.cpp",
-                };
-                let out = out_dir.join(format!("{stem}.{ext}"));
+                let out = out_dir.join(format!("{stem}.{}", backend_ext(b)));
                 std::fs::write(&out, src)?;
                 println!("compiled {file} -> {}", out.display());
             }

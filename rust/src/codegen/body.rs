@@ -1,302 +1,209 @@
-//! Kernel-body statement emitter shared by the C-family backends.
+//! Kernel-body rendering: one structural driver over the plan-carried
+//! [`KernelOp`] tree, with every backend-specific spelling behind the
+//! [`KernelDialect`] trait — the device-side twin of the host half's
+//! `HostDialect` / `render_host_schedule` pair.
 //!
-//! One walker, four atomics dialects — the paper's observation that "the
-//! parallelism concepts remain the same [while] the syntax and the placement
-//! of constructs change significantly across the backends" (§3.2) maps to
-//! this module: structure comes from the AST, dialect from [`Target`].
+//! The paper's observation that "the parallelism concepts remain the same
+//! [while] the syntax and the placement of constructs change significantly
+//! across the backends" (§3.2) maps to this module: *structure* (loop
+//! nesting, guards, the Min/Max compare-and-update shape, OR-flag clears)
+//! comes from the [`crate::ir::kernel`] lowering and is rendered once by
+//! [`render_kernel_ops`]; *dialect* (atomics idioms, declaration syntax,
+//! loop spelling) is a trait impl per backend. There are no per-target
+//! match arms here — which is exactly what lets non-C-family targets (WGSL,
+//! Metal) plug in without teaching the walker their syntax.
 
 use super::buf::CodeBuf;
 use super::cexpr::{emit, Style};
-use super::red_sym;
-use crate::dsl::ast::*;
-use crate::ir::analyze::as_reduction;
+use crate::dsl::ast::{MinMax, ReduceOp};
+use crate::ir::kernel::{KCell, KTarget, KernelOp};
 use crate::ir::plan::{DevicePlan, TypeMap};
 use crate::ir::ScalarTy;
-use crate::sema::TypedFunction;
 
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
-pub enum Target {
-    Cuda,
-    OpenCl,
-    Sycl,
-    OpenAcc,
-}
+/// Per-backend spellings for device-kernel statements. Defaults cover the
+/// C-family syntax shared by CUDA/HIP/OpenCL/SYCL/OpenACC/Metal; backends
+/// override what differs (atomics, or-flag, declarations for WGSL).
+pub(crate) trait KernelDialect {
+    /// Scalar-type spelling inside device code.
+    fn types(&self) -> &'static TypeMap;
+    /// Expression naming style (buffer prefixes, literals, atomic loads).
+    fn style(&self) -> Style;
 
-pub struct BodyCtx<'a> {
-    /// typed AST, for expression syntax (filter resolution)
-    pub tf: &'a TypedFunction,
-    /// device plan: the single source of property/buffer types
-    pub plan: &'a DevicePlan,
-    /// this backend's scalar-type spelling
-    pub types: &'a TypeMap,
-    pub style: Style,
-    pub target: Target,
-    /// inside iterateInBFS / iterateInReverse (affects neighbor iteration)
-    pub bfs: Option<BfsDir>,
-    /// OR-flag property of the enclosing fixedPoint, if any (§4.1)
-    pub or_flag: Option<String>,
-}
-
-#[derive(Clone, Copy, PartialEq, Eq, Debug)]
-pub enum BfsDir {
-    Forward,
-    Reverse,
-}
-
-impl<'a> BodyCtx<'a> {
-    fn prop_ty(&self, prop: &str) -> ScalarTy {
-        self.plan.prop_ty_of(prop)
+    /// Kernel-local declaration.
+    fn decl(&self, buf: &mut CodeBuf, ty: ScalarTy, name: &str, init: Option<&str>) {
+        let t = self.types().name(ty);
+        match init {
+            Some(e) => buf.line(&format!("{t} {name} = {e};")),
+            None => buf.line(&format!("{t} {name};")),
+        }
     }
 
-    fn c_ty(&self, ty: &Type) -> String {
-        self.types.name(ScalarTy::of(ty)).to_string()
+    /// Plain store. `atomic` marks a target whose buffer has an atomic
+    /// element type in this dialect (Metal / WGSL); the C family ignores it.
+    fn store(&self, buf: &mut CodeBuf, loc: &str, value: &str, _atomic: bool) {
+        buf.line(&format!("{loc} = {value};"));
     }
-}
 
-/// Emit the statements of a kernel body, assuming the surrounding emitter
-/// already bound the vertex variable (e.g. `int v = ...;`).
-pub fn emit_block(b: &[Stmt], cx: &BodyCtx<'_>, buf: &mut CodeBuf) {
-    for s in b {
-        emit_stmt(s, cx, buf);
+    /// Device cell a scalar reduction lands in (matches the launch sites'
+    /// `d_<name>` allocations).
+    fn cell_ref(&self, name: &str) -> String {
+        format!("d_{name}[0]")
     }
-}
 
-fn emit_stmt(s: &Stmt, cx: &BodyCtx<'_>, buf: &mut CodeBuf) {
-    let st = &cx.style;
-    match s {
-        Stmt::Decl { ty, name, init, .. } => {
-            match init {
-                Some(e) => buf.line(&format!("{} {} = {};", cx.c_ty(ty), name, emit(e, st))),
-                None => buf.line(&format!("{} {};", cx.c_ty(ty), name)),
-            }
-        }
-        Stmt::Assign { target, value, .. } => {
-            if let Some((t, op, rhs)) = as_reduction(target, value) {
-                if matches!(t, LValue::Prop { .. }) {
-                    emit_reduce(&t, op, &rhs, cx, buf);
-                    return;
-                }
-            }
-            match target {
-                LValue::Var(v) => buf.line(&format!("{} = {};", (st.scalar)(v), emit(value, st))),
-                LValue::Prop { obj, prop } => buf.line(&format!(
-                    "{}[{}] = {};",
-                    (st.prop_array)(prop),
-                    (st.scalar)(obj),
-                    emit(value, st)
-                )),
-            }
-        }
-        Stmt::Reduce { target, op, value, .. } => emit_reduce(target, *op, value, cx, buf),
-        Stmt::MinMaxAssign { kind, target, compare, extra, .. } => {
-            emit_min_max(*kind, target, compare, extra, cx, buf)
-        }
-        Stmt::For { iter, body, .. } => emit_neighbor_loop(iter, body, cx, buf),
-        Stmt::If { cond, then, els, .. } => {
-            buf.open(&format!("if ({}) {{", emit(cond, st)));
-            emit_block(then, cx, buf);
-            if let Some(e) = els {
-                buf.close("} else {");
-                buf.inc();
-                emit_block(e, cx, buf);
-            }
-            buf.close("}");
-        }
-        other => {
-            buf.line(&format!("/* unsupported in kernel: {:?} */", std::mem::discriminant(other)))
-        }
+    /// Atomic reduction into one device location.
+    fn reduce(&self, buf: &mut CodeBuf, loc: &str, op: ReduceOp, ty: ScalarTy, val: &str);
+
+    /// Scalar-cell reduction. Default routes through [`Self::reduce`] on the
+    /// cell; OpenACC overrides it (Fig 7's `reduction(op: var)` clause makes
+    /// the plain statement atomic).
+    fn reduce_scalar(&self, buf: &mut CodeBuf, name: &str, op: ReduceOp, ty: ScalarTy, val: &str) {
+        self.reduce(buf, &self.cell_ref(name), op, ty, val);
+    }
+
+    /// The winning §3.5 Min/Max update (the compare guard is already open).
+    fn min_max_update(&self, buf: &mut CodeBuf, kind: MinMax, loc: &str, tmp: &str, ty: ScalarTy);
+
+    /// Clear the fixedPoint OR-flag after a winning Min/Max (§4.1).
+    fn set_or_flag(&self, buf: &mut CodeBuf);
+
+    fn if_open(&self, buf: &mut CodeBuf, cond: &str) {
+        buf.open(&format!("if ({cond}) {{"));
+    }
+    fn if_else(&self, buf: &mut CodeBuf) {
+        buf.close("} else {");
+        buf.inc();
+    }
+    fn if_close(&self, buf: &mut CodeBuf) {
+        buf.close("}");
+    }
+
+    /// Open a CSR (`reverse: false`) or reverse-CSR (`reverse: true`)
+    /// neighbor scan and bind the neighbor variable.
+    fn neighbor_loop_open(&self, buf: &mut CodeBuf, var: &str, of: &str, reverse: bool) {
+        let st = self.style();
+        let (off, list) =
+            if reverse { (st.rev_offsets, st.src_list) } else { (st.offsets, st.edge_list) };
+        let v = (st.scalar)(of);
+        buf.open(&format!("for (int edge = {off}[{v}]; edge < {off}[{v}+1]; edge++) {{"));
+        buf.line(&format!("int {var} = {list}[edge];"));
+    }
+    fn loop_close(&self, buf: &mut CodeBuf) {
+        buf.close("}");
     }
 }
 
-fn emit_neighbor_loop(iter: &Iterator_, body: &[Stmt], cx: &BodyCtx<'_>, buf: &mut CodeBuf) {
-    let st = &cx.style;
-    let var = &iter.var;
-    match &iter.source {
-        IterSource::Neighbors { of, .. } => {
-            buf.open(&format!(
-                "for (int edge = {off}[{v}]; edge < {off}[{v}+1]; edge++) {{",
-                off = st.offsets,
-                v = (st.scalar)(of)
-            ));
-            buf.line(&format!("int {var} = {}[edge];", st.edge_list));
-            if let Some(dir) = cx.bfs {
-                // BFS-DAG children only (paper §3.4 level filter)
-                let lvl = (st.prop_array)("level");
-                match dir {
-                    BfsDir::Forward => buf.open(&format!(
-                        "if ({lvl}[{var}] == {lvl}[{v}] + 1) {{",
-                        v = (st.scalar)(of)
-                    )),
-                    BfsDir::Reverse => buf.open(&format!(
-                        "if ({lvl}[{var}] == {lvl}[{v}] + 1) {{",
-                        v = (st.scalar)(of)
-                    )),
-                }
-            }
-            if let Some(f) = &iter.filter {
-                let fe = crate::codegen::simplify_bool_cmp(&crate::codegen::resolve_filter(
-                    f, var, cx.tf,
-                ));
-                buf.open(&format!("if ({}) {{", emit(&fe, st)));
-            }
-            emit_block(body, cx, buf);
-            if iter.filter.is_some() {
-                buf.close("}");
-            }
-            if cx.bfs.is_some() {
-                buf.close("}");
-            }
-            buf.close("}");
-        }
-        IterSource::NodesTo { of, .. } => {
-            buf.open(&format!(
-                "for (int edge = {off}[{v}]; edge < {off}[{v}+1]; edge++) {{",
-                off = st.rev_offsets,
-                v = (st.scalar)(of)
-            ));
-            buf.line(&format!("int {var} = {}[edge];", st.src_list));
-            if let Some(f) = &iter.filter {
-                let fe = crate::codegen::simplify_bool_cmp(&crate::codegen::resolve_filter(
-                    f, var, cx.tf,
-                ));
-                buf.open(&format!("if ({}) {{", emit(&fe, st)));
-            }
-            emit_block(body, cx, buf);
-            if iter.filter.is_some() {
-                buf.close("}");
-            }
-            buf.close("}");
-        }
-        IterSource::Nodes { .. } | IterSource::Set { .. } => {
-            buf.line("/* nested full-graph iteration not supported in kernels */");
-        }
+/// Raw reference to one property element (no atomic-load wrapping — use as a
+/// store / atomic-op target).
+fn prop_ref(st: &Style, plan: &DevicePlan, slot: u32, obj: &str) -> String {
+    format!("{}[{}]", (st.prop_array)(plan.prop_name(slot)), (st.scalar)(obj))
+}
+
+/// Read of one property element, wrapped in the dialect's atomic load when
+/// the buffer is atomic in this kernel.
+fn prop_read(st: &Style, plan: &DevicePlan, slot: u32, obj: &str) -> String {
+    let cell = prop_ref(st, plan, slot, obj);
+    if st.atomic_props.contains(plan.prop_name(slot)) {
+        (st.atomic_load)(&cell)
+    } else {
+        cell
     }
 }
 
-fn emit_reduce(target: &LValue, op: ReduceOp, value: &Expr, cx: &BodyCtx<'_>, buf: &mut CodeBuf) {
-    let st = &cx.style;
-    let val = emit(value, st);
-    let (loc, ty) = match target {
-        LValue::Var(v) => {
-            if cx.target == Target::OpenAcc {
-                // handled by the loop's reduction(...) clause (Fig 7)
-                buf.line(&format!("{v} = {v} {} {val};", red_sym(op)));
-                return;
-            }
-            let sty = cx.tf.vars.get(v).map(ScalarTy::of).unwrap_or(ScalarTy::I64);
-            (format!("d_{v}[0]", ), sty)
-        }
-        LValue::Prop { obj, prop } => (
-            format!("{}[{}]", (st.prop_array)(prop), (st.scalar)(obj)),
-            cx.prop_ty(prop),
-        ),
-    };
-    match cx.target {
-        Target::Cuda => match op {
-            ReduceOp::Add | ReduceOp::Count => buf.line(&format!("atomicAdd(&{loc}, {val});")),
-            ReduceOp::Mul => buf.line(&format!("atomicMul(&{loc}, {val}); // emulated via CAS")),
-            ReduceOp::And => buf.line(&format!("atomicAnd(&{loc}, {val});")),
-            ReduceOp::Or => buf.line(&format!("atomicOr(&{loc}, {val});")),
-        },
-        Target::OpenCl => match (op, ty) {
-            (ReduceOp::Add | ReduceOp::Count, ScalarTy::F32 | ScalarTy::F64) => {
-                // OpenCL has int/long atomics only: simulate via cmpxchg (§3.3)
-                buf.line(&format!("atomicAddFloat(&{loc}, {val}); // atomic_cmpxchg loop"));
-            }
-            (ReduceOp::Add | ReduceOp::Count, _) => {
-                buf.line(&format!("atomic_add(&{loc}, {val});"))
-            }
-            (ReduceOp::Mul, _) => buf.line(&format!("atomicMulCmpxchg(&{loc}, {val});")),
-            (ReduceOp::And, _) => buf.line(&format!("atomic_and(&{loc}, {val});")),
-            (ReduceOp::Or, _) => buf.line(&format!("atomic_or(&{loc}, {val});")),
-        },
-        Target::Sycl => {
-            // Fig 8's atomic_ref idiom
-            buf.line(&format!(
-                "atomic_ref<{t}, memory_order::relaxed, memory_scope::device, access::address_space::global_space> atomic_data({loc});",
-                t = cx.types.name(ty)
-            ));
-            match op {
-                ReduceOp::Add | ReduceOp::Count => buf.line(&format!("atomic_data += {val};")),
-                ReduceOp::Mul => {
-                    buf.line(&format!("atomic_data = atomic_data * {val}; // CAS loop"))
-                }
-                ReduceOp::And => buf.line(&format!("atomic_data &= {val};")),
-                ReduceOp::Or => buf.line(&format!("atomic_data |= {val};")),
-            }
-        }
-        Target::OpenAcc => {
-            buf.line("#pragma acc atomic update");
-            buf.line(&format!("{loc} = {loc} {} {val};", red_sym(op)));
-        }
-    }
-}
-
-/// The Min/Max construct (paper §3.5; Figures 6, 10, 11).
-fn emit_min_max(
-    kind: MinMax,
-    target: &LValue,
-    compare: &Expr,
-    extra: &[(LValue, Expr)],
-    cx: &BodyCtx<'_>,
+/// The one kernel-statement driver shared by every text backend: walks a
+/// [`KernelOp`] tree, rendering structure directly and delegating every
+/// backend-specific spelling to the [`KernelDialect`].
+pub(crate) fn render_kernel_ops<D: KernelDialect + ?Sized>(
+    d: &D,
+    plan: &DevicePlan,
+    ops: &[KernelOp],
     buf: &mut CodeBuf,
 ) {
-    let st = &cx.style;
-    let LValue::Prop { obj, prop } = target else {
-        buf.line("/* Min/Max on scalars unsupported */");
-        return;
-    };
-    let loc = format!("{}[{}]", (st.prop_array)(prop), (st.scalar)(obj));
-    let ty = cx.types.name(cx.prop_ty(prop));
-    let cmp = if kind == MinMax::Min { ">" } else { "<" };
-    buf.line(&format!("{ty} {prop}_new = {};", emit(compare, st)));
-    buf.open(&format!("if ({loc} {cmp} {prop}_new) {{"));
-    match cx.target {
-        Target::Cuda => buf.line(&format!(
-            "atomic{}(&{loc}, {prop}_new);",
-            if kind == MinMax::Min { "Min" } else { "Max" }
-        )),
-        Target::OpenCl => buf.line(&format!(
-            "atomic_{}(&{loc}, {prop}_new);",
-            if kind == MinMax::Min { "min" } else { "max" }
-        )),
-        Target::Sycl => {
-            buf.line(&format!(
-                "atomic_ref<{ty}, memory_order::relaxed, memory_scope::device, access::address_space::global_space> atomic_data({loc});"
-            ));
-            buf.line(&format!(
-                "atomic_data.fetch_{}({prop}_new);",
-                if kind == MinMax::Min { "min" } else { "max" }
-            ));
-        }
-        Target::OpenAcc => {
-            // Fig 10: guard + atomic write (OpenACC has no atomicMin)
-            buf.line(&format!("int oldValue = {loc};"));
-            buf.line("#pragma acc atomic write");
-            buf.line(&format!("{loc} = {prop}_new;"));
-        }
-    }
-    for (t, v) in extra {
-        match t {
-            LValue::Prop { obj, prop } => buf.line(&format!(
-                "{}[{}] = {};",
-                (st.prop_array)(prop),
-                (st.scalar)(obj),
-                emit(v, st)
-            )),
-            LValue::Var(name) => buf.line(&format!("{} = {};", (st.scalar)(name), emit(v, st))),
-        }
-    }
-    // OR-flag: any successful update un-finishes the fixed point (§4.1)
-    if cx.or_flag.is_some() {
-        match cx.target {
-            Target::Cuda | Target::OpenCl => buf.line("gpu_finished[0] = false;"),
-            Target::Sycl => buf.line("*d_finished = false;"),
-            Target::OpenAcc => {
-                buf.line("#pragma acc atomic write");
-                buf.line("finished = false;");
+    let st = d.style();
+    for op in ops {
+        match op {
+            KernelOp::Decl { name, ty, init } => {
+                let init = init.as_ref().map(|e| emit(e, &st));
+                d.decl(buf, *ty, name, init.as_deref());
+            }
+            KernelOp::AssignVar { name, value } => {
+                d.store(buf, &(st.scalar)(name), &emit(value, &st), false);
+            }
+            KernelOp::AssignProp { slot, obj, value } => {
+                let atomic = st.atomic_props.contains(plan.prop_name(*slot));
+                let loc = prop_ref(&st, plan, *slot, obj);
+                d.store(buf, &loc, &emit(value, &st), atomic);
+            }
+            KernelOp::Reduce { cell, op, ty, value } => {
+                let val = emit(value, &st);
+                match cell {
+                    KCell::Cell { name } => d.reduce_scalar(buf, name, *op, *ty, &val),
+                    KCell::Prop { slot, obj } => {
+                        let loc = prop_ref(&st, plan, *slot, obj);
+                        d.reduce(buf, &loc, *op, *ty, &val);
+                    }
+                }
+            }
+            KernelOp::MinMax { kind, slot, obj, ty, compare, extra, or_flag } => {
+                let loc = prop_ref(&st, plan, *slot, obj);
+                let read = prop_read(&st, plan, *slot, obj);
+                let tmp = format!("{}_new", plan.prop_name(*slot));
+                d.decl(buf, *ty, &tmp, Some(&emit(compare, &st)));
+                let cmp = if *kind == MinMax::Min { ">" } else { "<" };
+                d.if_open(buf, &format!("{read} {cmp} {tmp}"));
+                d.min_max_update(buf, *kind, &loc, &tmp, *ty);
+                for (t, v) in extra {
+                    let (tloc, atomic) = match t {
+                        KTarget::Var(n) => ((st.scalar)(n), false),
+                        KTarget::Prop { slot, obj } => (
+                            prop_ref(&st, plan, *slot, obj),
+                            st.atomic_props.contains(plan.prop_name(*slot)),
+                        ),
+                    };
+                    d.store(buf, &tloc, &emit(v, &st), atomic);
+                }
+                if *or_flag {
+                    // any successful update un-finishes the fixed point (§4.1)
+                    d.set_or_flag(buf);
+                }
+                d.if_close(buf);
+            }
+            KernelOp::NeighborLoop { var, of, reverse, bfs, filter, body } => {
+                d.neighbor_loop_open(buf, var, of, *reverse);
+                // §3.4 BFS-DAG filter — both sweeps walk the same DAG, so
+                // one structured condition serves forward and reverse
+                // sweeps alike: a CSR scan keeps the children
+                // (level(parent) + 1); a reverse-CSR pull keeps the
+                // parents (level(child) - 1)
+                if bfs.is_some() {
+                    let lvl = (st.prop_array)("level");
+                    let v = (st.scalar)(of);
+                    let rel = if *reverse { "- 1" } else { "+ 1" };
+                    d.if_open(buf, &format!("{lvl}[{var}] == {lvl}[{v}] {rel}"));
+                }
+                if let Some(f) = filter {
+                    d.if_open(buf, &emit(f, &st));
+                }
+                render_kernel_ops(d, plan, body, buf);
+                if filter.is_some() {
+                    d.if_close(buf);
+                }
+                if bfs.is_some() {
+                    d.if_close(buf);
+                }
+                d.loop_close(buf);
+            }
+            KernelOp::If { cond, then, els } => {
+                d.if_open(buf, &emit(cond, &st));
+                render_kernel_ops(d, plan, then, buf);
+                if let Some(e) = els {
+                    d.if_else(buf);
+                    render_kernel_ops(d, plan, e, buf);
+                }
+                d.if_close(buf);
+            }
+            KernelOp::Unsupported { what } => {
+                buf.line(&format!("/* {what} not supported in kernels */"));
             }
         }
     }
-    buf.close("}");
 }

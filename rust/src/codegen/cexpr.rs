@@ -1,8 +1,10 @@
-//! DSL-expression → C-family-expression translation, parameterized by a
+//! DSL-expression → target-expression translation, parameterized by a
 //! naming [`Style`] so CUDA (`gpu_dist[nbr]`), OpenCL (`gpu_dist`), SYCL
-//! (`g.gpu_dist`) and OpenACC (`dist[nbr]`) all share one walker.
+//! (`g.gpu_dist`), OpenACC (`dist[nbr]`), Metal, and WGSL all share one
+//! walker.
 
 use crate::dsl::ast::*;
+use std::collections::HashSet;
 
 /// Naming conventions for one backend / context.
 #[derive(Clone)]
@@ -19,6 +21,22 @@ pub struct Style {
     pub num_nodes: &'static str,
     pub bool_true: &'static str,
     pub bool_false: &'static str,
+    /// spelling of the DSL's `INF` ("INT_MAX"; WGSL has no such macro)
+    pub inf: &'static str,
+    /// spelling of `abs(x)` ("fabs" for the C family, "abs" in WGSL)
+    pub abs_fn: &'static str,
+    /// does `is_an_edge`'s lookup helper take the CSR arrays as trailing
+    /// arguments? (true for the C family; WGSL helpers read the module-scope
+    /// bindings directly)
+    pub edge_fn_passes_graph: bool,
+    /// properties whose device buffer has an *atomic* element type in this
+    /// kernel (Metal `atomic_int`, WGSL `atomic<i32>`): plain reads must go
+    /// through `atomic_load` below. Empty for the C-family backends, whose
+    /// atomics operate on plain cells.
+    pub atomic_props: HashSet<String>,
+    /// wrap a read of an atomic cell, e.g. `gpu_dist[v]` →
+    /// `atomicLoad(&gpu_dist[v])`
+    pub atomic_load: fn(&str) -> String,
 }
 
 pub fn cuda_style() -> Style {
@@ -32,6 +50,11 @@ pub fn cuda_style() -> Style {
         num_nodes: "V",
         bool_true: "true",
         bool_false: "false",
+        inf: "INT_MAX",
+        abs_fn: "fabs",
+        edge_fn_passes_graph: true,
+        atomic_props: HashSet::new(),
+        atomic_load: |r| r.to_string(),
     }
 }
 
@@ -62,6 +85,33 @@ pub fn openacc_style() -> Style {
     }
 }
 
+/// MSL device code: CUDA naming, but buffers the kernel updates atomically
+/// are `device atomic_*` and their plain reads need `atomic_load_explicit`.
+pub fn metal_style(atomic_props: HashSet<String>) -> Style {
+    Style {
+        atomic_props,
+        atomic_load: |r| format!("atomic_load_explicit(&{r}, memory_order_relaxed)"),
+        ..cuda_style()
+    }
+}
+
+/// WGSL device code: storage-buffer names keep the CUDA `gpu_` convention,
+/// booleans are `i32` words (bool is not host-shareable), `INF` is the i32
+/// max literal, and atomically-updated buffers are `array<atomic<i32>>`
+/// whose reads go through `atomicLoad`.
+pub fn wgsl_style(atomic_props: HashSet<String>) -> Style {
+    Style {
+        bool_true: "1",
+        bool_false: "0",
+        inf: "2147483647",
+        abs_fn: "abs",
+        edge_fn_passes_graph: false,
+        atomic_props,
+        atomic_load: |r| format!("atomicLoad(&{r})"),
+        ..cuda_style()
+    }
+}
+
 /// Translate an expression in a kernel context. `elem` is unused today but
 /// kept for future contexts where bare property names need an element.
 pub fn emit(e: &Expr, st: &Style) -> String {
@@ -76,9 +126,16 @@ pub fn emit(e: &Expr, st: &Style) -> String {
         }
         Expr::BoolLit(true) => st.bool_true.to_string(),
         Expr::BoolLit(false) => st.bool_false.to_string(),
-        Expr::Inf => "INT_MAX".to_string(),
+        Expr::Inf => st.inf.to_string(),
         Expr::Var(v) => (st.scalar)(v),
-        Expr::Prop { obj, prop } => format!("{}[{}]", (st.prop_array)(prop), (st.scalar)(obj)),
+        Expr::Prop { obj, prop } => {
+            let cell = format!("{}[{}]", (st.prop_array)(prop), (st.scalar)(obj));
+            if st.atomic_props.contains(prop) {
+                (st.atomic_load)(&cell)
+            } else {
+                cell
+            }
+        }
         Expr::Call { recv, name, args } => emit_call(recv.as_deref(), name, args, st),
         Expr::Unary { op, expr } => {
             let inner = emit_atom(expr, st);
@@ -114,16 +171,17 @@ fn emit_call(recv: Option<&str>, name: &str, args: &[Expr], st: &Style) -> Strin
         }
         (Some(_), "is_an_edge") => {
             let a: Vec<String> = args.iter().map(|x| emit(x, st)).collect();
-            format!(
-                "findNeighborSorted({}, {}, {}, {})",
-                a[0], a[1], st.offsets, st.edge_list
-            )
+            if st.edge_fn_passes_graph {
+                format!("findNeighborSorted({}, {}, {}, {})", a[0], a[1], st.offsets, st.edge_list)
+            } else {
+                format!("findNeighborSorted({}, {})", a[0], a[1])
+            }
         }
         (Some(_), "get_edge") => {
             // neighbor iteration supplies the current edge id
             "edge".to_string()
         }
-        (None, "abs") => format!("fabs({})", emit(&args[0], st)),
+        (None, "abs") => format!("{}({})", st.abs_fn, emit(&args[0], st)),
         _ => {
             let a: Vec<String> = args.iter().map(|x| emit(x, st)).collect();
             match recv {
@@ -173,5 +231,25 @@ mod tests {
     fn inf_is_int_max() {
         let e = first_expr("function f(Graph g) { int x = INF; }");
         assert_eq!(emit(&e, &cuda_style()), "INT_MAX");
+    }
+
+    #[test]
+    fn wgsl_style_spellings() {
+        let e = first_expr("function f(Graph g) { int x = INF; }");
+        assert_eq!(emit(&e, &wgsl_style(HashSet::new())), "2147483647");
+        let e =
+            first_expr("function f(Graph g, propNode<int> dist, node v) { int x = v.dist + 3; }");
+        let mut st = wgsl_style(["dist".to_string()].into_iter().collect());
+        assert_eq!(emit(&e, &st), "atomicLoad(&gpu_dist[v]) + 3");
+        st.atomic_props.clear();
+        assert_eq!(emit(&e, &st), "gpu_dist[v] + 3");
+    }
+
+    #[test]
+    fn metal_style_wraps_atomic_reads() {
+        let e =
+            first_expr("function f(Graph g, propNode<int> dist, node v) { int x = v.dist + 3; }");
+        let st = metal_style(["dist".to_string()].into_iter().collect());
+        assert_eq!(emit(&e, &st), "atomic_load_explicit(&gpu_dist[v], memory_order_relaxed) + 3");
     }
 }

@@ -5,24 +5,67 @@
 //! launches, and the fixedPoint / BFS host loops.
 //!
 //! This is a thin renderer over [`DevicePlan`]: buffer names, kernel
-//! parameter lists, transfer steps, and the complete host-statement
-//! schedule come from the plan ([`crate::ir::plan::HostOp`]); the host half
-//! is rendered by the shared [`super::render_host_schedule`] driver through
-//! the [`HostDialect`] hooks below. Everything CUDA-specific is a
-//! [`Spellings`] table, which is exactly what lets `hip.rs` reuse this whole
-//! module: HIP is the same renderer with `hipMalloc` / `hipMemcpy` /
+//! parameter lists, transfer steps, the complete host-statement schedule
+//! ([`crate::ir::plan::HostOp`]), and every kernel body
+//! ([`crate::ir::kernel::KernelOp`], carried on the plan) come from the
+//! plan. The host half is rendered by the shared
+//! [`super::render_host_schedule`] driver through the [`HostDialect`] hooks
+//! below; kernel bodies by `super::body::render_kernel_ops` through the
+//! [`CudaKernel`] dialect. Everything CUDA-specific is a [`Spellings`]
+//! table, which is exactly what lets `hip.rs` reuse this whole module: HIP
+//! is the same renderer with `hipMalloc` / `hipMemcpy` /
 //! `hipLaunchKernelGGL` spellings and zero lowering of its own.
 
-use super::body::{emit_block, BfsDir, BodyCtx, Target};
+use super::body::{render_kernel_ops, KernelDialect};
 use super::buf::CodeBuf;
 use super::cexpr::{cuda_style, emit, Style};
 use super::{render_host_schedule, HostDialect};
-use crate::dsl::ast::{Block, Expr, Iterator_, Stmt};
+use crate::dsl::ast::{Expr, MinMax, ReduceOp};
 use crate::ir::plan::{DevicePlan, KernelParam, KernelPlan, TypeMap};
-use crate::ir::IrProgram;
-use crate::sema::TypedFunction;
+use crate::ir::{IrProgram, ScalarTy};
 
 const TYPES: &TypeMap = &TypeMap::C;
+
+/// The CUDA device dialect (also HIP's: ROCm compiles the CUDA kernel
+/// idioms — `atomicMin`, `blockIdx` — as-is).
+pub(crate) struct CudaKernel;
+
+impl KernelDialect for CudaKernel {
+    fn types(&self) -> &'static TypeMap {
+        TYPES
+    }
+
+    fn style(&self) -> Style {
+        cuda_style()
+    }
+
+    fn reduce(&self, buf: &mut CodeBuf, loc: &str, op: ReduceOp, _ty: ScalarTy, val: &str) {
+        match op {
+            ReduceOp::Add | ReduceOp::Count => buf.line(&format!("atomicAdd(&{loc}, {val});")),
+            ReduceOp::Mul => buf.line(&format!("atomicMul(&{loc}, {val}); // emulated via CAS")),
+            ReduceOp::And => buf.line(&format!("atomicAnd(&{loc}, {val});")),
+            ReduceOp::Or => buf.line(&format!("atomicOr(&{loc}, {val});")),
+        }
+    }
+
+    fn min_max_update(
+        &self,
+        buf: &mut CodeBuf,
+        kind: MinMax,
+        loc: &str,
+        tmp: &str,
+        _ty: ScalarTy,
+    ) {
+        buf.line(&format!(
+            "atomic{}(&{loc}, {tmp});",
+            if kind == MinMax::Min { "Min" } else { "Max" }
+        ));
+    }
+
+    fn set_or_flag(&self, buf: &mut CodeBuf) {
+        buf.line("gpu_finished[0] = false;");
+    }
+}
 
 /// Everything that differs between CUDA and HIP: API entry points and the
 /// kernel-launch statement. The renderer below is shared verbatim.
@@ -71,16 +114,15 @@ pub(crate) fn generate_with(ir: &IrProgram, plan: &DevicePlan) -> String {
 
 /// Shared CUDA-family entry point: CUDA and HIP differ only in `sp`.
 pub(crate) fn generate_family(
-    ir: &IrProgram,
+    _ir: &IrProgram,
     plan: &DevicePlan,
     sp: &'static Spellings,
 ) -> String {
-    let mut g = Gen { tf: &ir.tf, plan, sp, kernels: CodeBuf::new(), host: CodeBuf::new() };
+    let mut g = Gen { plan, sp, kernels: CodeBuf::new(), host: CodeBuf::new() };
     g.run()
 }
 
 struct Gen<'a> {
-    tf: &'a TypedFunction,
     plan: &'a DevicePlan,
     sp: &'static Spellings,
     kernels: CodeBuf,
@@ -119,18 +161,6 @@ impl<'a> Gen<'a> {
             KernelParam::ReductionCell { name, ty } => format!("{}* d_{name}", TYPES.name(*ty)),
             KernelParam::Scalar { name, ty } => format!("{} {name}", TYPES.name(*ty)),
             KernelParam::OrFlag => "bool* gpu_finished".to_string(),
-        }
-    }
-
-    fn body_ctx(&self, bfs: Option<BfsDir>, or_flag: Option<&str>) -> BodyCtx<'a> {
-        BodyCtx {
-            tf: self.tf,
-            plan: self.plan,
-            types: TYPES,
-            style: cuda_style(),
-            target: Target::Cuda,
-            bfs,
-            or_flag: or_flag.map(str::to_string),
         }
     }
 
@@ -226,22 +256,24 @@ impl<'a> HostDialect for Gen<'a> {
     }
 
     /// Fig 2 / Fig 6 kernel: one thread per vertex + the launch site. The
-    /// signature and argument list are the plan's canonical parameter order.
-    fn launch(&mut self, kernel: usize, iter: &Iterator_, body: &[Stmt], or_flag: Option<&str>) {
+    /// signature and argument list are the plan's canonical parameter order;
+    /// the body is the plan-carried [`crate::ir::kernel::KernelOp`] tree.
+    fn launch(&mut self, kernel: usize, or_flag: Option<&str>) {
         let plan = self.plan;
         let k: &KernelPlan = &plan.kernels[kernel];
+        let body = k.body.as_ref().expect("forall kernel carries a lowered body");
         let params = k.params(or_flag.is_some());
         let sig: Vec<String> = params.iter().map(|p| self.param_decl(p)).collect();
         self.kernels.open(&format!("__global__ void {}({}) {{", k.name, sig.join(", ")));
-        self.kernels
-            .line(&format!("unsigned {v} = blockIdx.x * blockDim.x + threadIdx.x;", v = iter.var));
-        self.kernels.line(&format!("if ({} >= V) return;", iter.var));
-        if let Some(f) = &iter.filter {
-            let fe = super::simplify_bool_cmp(&super::resolve_filter(f, &iter.var, self.tf));
-            self.kernels.line(&format!("if (!({})) return;", emit(&fe, &cuda_style())));
+        self.kernels.line(&format!(
+            "unsigned {v} = blockIdx.x * blockDim.x + threadIdx.x;",
+            v = body.thread_var
+        ));
+        self.kernels.line(&format!("if ({} >= V) return;", body.thread_var));
+        if let Some(g) = &body.guard {
+            self.kernels.line(&format!("if (!({})) return;", emit(g, &cuda_style())));
         }
-        let cx = self.body_ctx(None, or_flag);
-        emit_block(body, &cx, &mut self.kernels);
+        render_kernel_ops(&CudaKernel, plan, &body.ops, &mut self.kernels);
         self.kernels.close("}");
         self.kernels.line("");
         // ---- launch site (Fig 2's host half): plan-bound transfer steps ----
@@ -294,19 +326,13 @@ impl<'a> HostDialect for Gen<'a> {
     }
 
     /// Fig 9: host do-while over levels + BFS kernel(s), skeleton from the
-    /// plan's [`crate::ir::plan::BfsPlan`].
-    fn bfs(
-        &mut self,
-        index: usize,
-        var: &str,
-        from: &str,
-        body: &[Stmt],
-        reverse: Option<&(Expr, Block)>,
-    ) {
+    /// plan's [`crate::ir::plan::BfsPlan`], sweep bodies from the plan's
+    /// kernels.
+    fn bfs(&mut self, index: usize, var: &str, from: &str) {
         let plan = self.plan;
         let b = &plan.bfs_loops[index];
         let fwd = &plan.kernels[b.fwd];
-        let rev = b.rev.map(|i| &plan.kernels[i]);
+        let fbody = fwd.body.as_ref().expect("BFS forward sweep carries a lowered body");
         // the skeleton binds level/depth/finished itself; remaining buffers
         // come from the plan's parameter list. A declared level property
         // keeps its plan type; the implicit buffer (e.g. BC) is int.
@@ -337,8 +363,7 @@ impl<'a> HostDialect for Gen<'a> {
         self.kernels.line("*d_finished = false;");
         self.kernels.close("}");
         self.kernels.close("}");
-        let cx = self.body_ctx(Some(BfsDir::Forward), None);
-        emit_block(body, &cx, &mut self.kernels);
+        render_kernel_ops(&CudaKernel, plan, &fbody.ops, &mut self.kernels);
         self.kernels.close("}");
         self.kernels.close("}");
         self.kernels.line("");
@@ -386,7 +411,9 @@ impl<'a> HostDialect for Gen<'a> {
         ));
         self.host.close("} while (!finished);");
         // reverse pass
-        if let (Some(rk), Some((cond, rbody))) = (rev, reverse) {
+        if let Some(ri) = b.rev {
+            let rk = &plan.kernels[ri];
+            let rbody = rk.body.as_ref().expect("BFS reverse sweep carries a lowered body");
             let mut rsig: Vec<String> = Vec::new();
             let mut rargs: Vec<String> = Vec::new();
             for p in rk.bfs_params(b.level) {
@@ -404,10 +431,10 @@ impl<'a> HostDialect for Gen<'a> {
             self.kernels.line(&format!("unsigned {var} = blockIdx.x * blockDim.x + threadIdx.x;"));
             self.kernels.line(&format!("if ({var} >= V) return;"));
             self.kernels.line(&format!("if (gpu_level[{var}] != *d_hops_from_source) return;"));
-            let ce = super::simplify_bool_cmp(&super::resolve_filter(cond, var, self.tf));
-            self.kernels.line(&format!("if (!({})) return;", emit(&ce, &cuda_style())));
-            let cx = self.body_ctx(Some(BfsDir::Reverse), None);
-            emit_block(rbody, &cx, &mut self.kernels);
+            if let Some(g) = &rbody.guard {
+                self.kernels.line(&format!("if (!({})) return;", emit(g, &cuda_style())));
+            }
+            render_kernel_ops(&CudaKernel, plan, &rbody.ops, &mut self.kernels);
             self.kernels.close("}");
             self.kernels.line("");
             self.host.line("// iterateInReverse: walk the BFS levels backwards");

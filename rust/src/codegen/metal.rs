@@ -1,0 +1,526 @@
+//! Metal backend — the sixth text renderer, and the first that the old
+//! AST-walking kernel emitter could not express: MSL spells its atomics as
+//! typed `device atomic_*` buffers updated through
+//! `atomic_fetch_*_explicit(..., memory_order_relaxed)`, so a buffer's
+//! *declaration* and every *plain read* of it change once any kernel updates
+//! it atomically. That per-kernel knowledge ([`KernelPlan::atomic_props`])
+//! is resolved by the plan's kernel-op lowering, not here.
+//!
+//! Layout mirrors the OpenCL split: an MSL `kernels.metal` section (one
+//! `kernel void` per plan kernel, parameters carrying `[[buffer(i)]]`
+//! indices in the plan's canonical order, thread index bound from
+//! `[[thread_position_in_grid]]`) followed by a metal-cpp host section
+//! (`MTL::Device` / `MTL::Buffer` with shared storage, command-buffer
+//! dispatches; `pipelineFor` pipeline lookup lives in
+//! `libstarplat_metal.h`). Shared-storage buffers make §4 transfers plain
+//! `memcpy`/`contents()` accesses — the Metal twist on the paper's
+//! "graph copied once, outputs only" transfer rules.
+//!
+//! Spelling notes (MSL):
+//! - 64-bit ints spell `long`, `double` demotes to `float`
+//!   ([`TypeMap::METAL`]);
+//! - `atomic_float` cells assume Metal 3 atomics; MSL has no 64-bit
+//!   fetch-ops, so 64-bit reduction cells demote to `atomic_int` (staged
+//!   through a matching 32-bit host word); products fall back to a
+//!   CAS-loop helper, as OpenCL's float adds do (§3.3).
+
+use super::body::{render_kernel_ops, KernelDialect};
+use super::buf::CodeBuf;
+use super::cexpr::{emit, metal_style, Style};
+use super::{render_host_schedule, HostDialect};
+use crate::dsl::ast::{Expr, MinMax, ReduceOp};
+use crate::ir::plan::{DevicePlan, KernelParam, KernelPlan, TypeMap};
+use crate::ir::{IrProgram, ScalarTy};
+use std::collections::HashSet;
+
+/// Host-side C++ types (metal-cpp host code is plain C++).
+const HOST: &TypeMap = &TypeMap::C;
+/// Device-side MSL types.
+const DEV: &TypeMap = &TypeMap::METAL;
+
+/// MSL atomic element type for one scalar type. MSL has no 64-bit atomic
+/// fetch-ops at all, so I64 cells demote to `atomic_int` — the host side
+/// stages them through a matching 32-bit word ([`cell_host_ty`]).
+fn atomic_ty(ty: ScalarTy) -> &'static str {
+    match ty {
+        ScalarTy::Bool => "atomic_bool",
+        ScalarTy::F32 | ScalarTy::F64 => "atomic_float",
+        ScalarTy::I32 | ScalarTy::I64 => "atomic_int",
+    }
+}
+
+/// Host-side C type matching one reduction cell's device atomic width.
+fn cell_host_ty(ty: ScalarTy) -> &'static str {
+    match ty {
+        ScalarTy::Bool => "bool",
+        ScalarTy::F32 | ScalarTy::F64 => "float",
+        ScalarTy::I32 | ScalarTy::I64 => "int",
+    }
+}
+
+/// Metal device dialect: explicit-memory-order atomic intrinsics.
+struct MetalKernel {
+    /// names of the props this kernel updates atomically
+    atomic: HashSet<String>,
+}
+
+impl MetalKernel {
+    fn for_kernel(plan: &DevicePlan, k: &KernelPlan) -> MetalKernel {
+        MetalKernel {
+            atomic: k.atomic_props.iter().map(|&s| plan.prop_name(s).to_string()).collect(),
+        }
+    }
+}
+
+impl KernelDialect for MetalKernel {
+    fn types(&self) -> &'static TypeMap {
+        DEV
+    }
+
+    fn style(&self) -> Style {
+        metal_style(self.atomic.clone())
+    }
+
+    fn store(&self, buf: &mut CodeBuf, loc: &str, value: &str, atomic: bool) {
+        if atomic {
+            buf.line(&format!("atomic_store_explicit(&{loc}, {value}, memory_order_relaxed);"));
+        } else {
+            buf.line(&format!("{loc} = {value};"));
+        }
+    }
+
+    fn reduce(&self, buf: &mut CodeBuf, loc: &str, op: ReduceOp, _ty: ScalarTy, val: &str) {
+        match op {
+            ReduceOp::Add | ReduceOp::Count => buf.line(&format!(
+                "atomic_fetch_add_explicit(&{loc}, {val}, memory_order_relaxed);"
+            )),
+            ReduceOp::Mul => buf.line(&format!(
+                "atomicMulCAS(&{loc}, {val}); // no fetch_mul in MSL: CAS-loop helper"
+            )),
+            ReduceOp::And => buf.line(&format!(
+                "atomic_fetch_and_explicit(&{loc}, {val}, memory_order_relaxed);"
+            )),
+            ReduceOp::Or => buf.line(&format!(
+                "atomic_fetch_or_explicit(&{loc}, {val}, memory_order_relaxed);"
+            )),
+        }
+    }
+
+    fn min_max_update(
+        &self,
+        buf: &mut CodeBuf,
+        kind: MinMax,
+        loc: &str,
+        tmp: &str,
+        _ty: ScalarTy,
+    ) {
+        buf.line(&format!(
+            "atomic_fetch_{}_explicit(&{loc}, {tmp}, memory_order_relaxed);",
+            if kind == MinMax::Min { "min" } else { "max" }
+        ));
+    }
+
+    fn set_or_flag(&self, buf: &mut CodeBuf) {
+        buf.line("atomic_store_explicit(gpu_finished, false, memory_order_relaxed);");
+    }
+}
+
+pub fn generate(ir: &IrProgram) -> String {
+    generate_with(ir, &DevicePlan::build(ir))
+}
+
+/// Render with a pre-built plan ([`super::generate`] lowers once for all
+/// backends).
+pub(crate) fn generate_with(_ir: &IrProgram, plan: &DevicePlan) -> String {
+    let mut g = Gen { plan, kernels: CodeBuf::new(), host: CodeBuf::new() };
+    g.run()
+}
+
+struct Gen<'a> {
+    plan: &'a DevicePlan,
+    kernels: CodeBuf,
+    host: CodeBuf,
+}
+
+impl<'a> Gen<'a> {
+    fn run(&mut self) -> String {
+        let plan = self.plan;
+        self.kernels.line("// ---- kernels.metal ----");
+        self.kernels.line("#include <metal_stdlib>");
+        self.kernels.line("#include \"libstarplat_metal.h\"");
+        self.kernels.line("using namespace metal;");
+        self.kernels.line("");
+        self.host.line("// ---- host.mm (metal-cpp) ----");
+        self.host.line("#include <Metal/Metal.hpp>");
+        self.host.line("#include <climits>");
+        self.host.line("#include <cstring>");
+        self.host.line("#include \"libstarplat_metal.h\"");
+        self.host.line("");
+        let params = plan.host_signature(HOST);
+        self.host.open(&format!("void {}({}) {{", plan.func, params.join(", ")));
+        render_host_schedule(self, &plan.host_ops, None);
+        self.host.close("}");
+
+        let mut out = super::manifest_header("Metal", plan);
+        out.push('\n');
+        out.push_str(&std::mem::take(&mut self.kernels).finish());
+        out.push('\n');
+        out.push_str(&std::mem::take(&mut self.host).finish());
+        out
+    }
+
+    /// MSL signature entry for one plan-ordered parameter; `i` is its
+    /// `[[buffer(i)]]` index (the plan's canonical order is the binding
+    /// order).
+    fn param_decl(&self, p: &KernelParam, i: usize, atomic: &[u32]) -> String {
+        match p {
+            KernelParam::NumNodes => format!("constant int& V [[buffer({i})]]"),
+            KernelParam::Graph(a) => {
+                format!("device const int* {} [[buffer({i})]]", a.device_name())
+            }
+            KernelParam::Prop(s) => {
+                let m = self.plan.meta(*s);
+                let ty = if atomic.contains(s) { atomic_ty(m.ty) } else { DEV.name(m.ty) };
+                format!("device {ty}* gpu_{} [[buffer({i})]]", m.name)
+            }
+            KernelParam::ReductionCell { name, ty } => {
+                format!("device {}* d_{name} [[buffer({i})]]", atomic_ty(*ty))
+            }
+            KernelParam::Scalar { name, ty } => {
+                format!("constant {}& {name} [[buffer({i})]]", DEV.name(*ty))
+            }
+            KernelParam::OrFlag => format!("device atomic_bool* gpu_finished [[buffer({i})]]"),
+        }
+    }
+
+    /// One `enc->set…` host line per canonical parameter.
+    fn bind_lines(&self, params: &[KernelParam]) -> Vec<String> {
+        params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| match p {
+                KernelParam::NumNodes => format!("enc->setBytes(&V, sizeof(int), {i});"),
+                KernelParam::Graph(a) => format!("enc->setBuffer({}, 0, {i});", a.device_name()),
+                KernelParam::Prop(s) => {
+                    format!("enc->setBuffer(gpu_{}, 0, {i});", self.plan.prop_name(*s))
+                }
+                KernelParam::ReductionCell { name, .. } => {
+                    format!("enc->setBuffer(d_{name}, 0, {i});")
+                }
+                KernelParam::Scalar { name, ty } => {
+                    format!("enc->setBytes(&{name}, sizeof({}), {i});", HOST.name(*ty))
+                }
+                KernelParam::OrFlag => format!("enc->setBuffer(gpu_finished, 0, {i});"),
+            })
+            .collect()
+    }
+
+    /// One command-buffer dispatch, scoped so repeated launch sites (loop
+    /// bodies) don't redeclare `cmd`/`enc`.
+    fn dispatch(&mut self, kernel_name: &str, binds: Vec<String>) {
+        self.host.open("{");
+        self.host.line("MTL::CommandBuffer* cmd = queue->commandBuffer();");
+        self.host.line("MTL::ComputeCommandEncoder* enc = cmd->computeCommandEncoder();");
+        self.host.line(&format!(
+            "enc->setComputePipelineState(pipelineFor(dev, \"{kernel_name}\"));"
+        ));
+        for b in binds {
+            self.host.line(&b);
+        }
+        self.host.line("enc->dispatchThreads(gridSize, threadsPerGroup);");
+        self.host.line("enc->endEncoding();");
+        self.host.line("cmd->commit();");
+        self.host.line("cmd->waitUntilCompleted();");
+        self.host.close("}");
+    }
+
+    /// Open a kernel: signature, thread index, bounds guard.
+    fn open_kernel(&mut self, name: &str, sig: &[String], thread_var: &str) {
+        self.kernels.open(&format!("kernel void {name}({}) {{", sig.join(", ")));
+        self.kernels.line(&format!("int {thread_var} = int(tid);"));
+        self.kernels.line(&format!("if ({thread_var} >= V) return;"));
+    }
+}
+
+impl<'a> HostDialect for Gen<'a> {
+    fn expr_style(&self) -> Style {
+        metal_style(HashSet::new())
+    }
+
+    fn buf(&mut self) -> &mut CodeBuf {
+        &mut self.host
+    }
+
+    fn decl_dims(&mut self) {
+        self.host.line("MTL::Device* dev = MTL::CreateSystemDefaultDevice();");
+        self.host.line("MTL::CommandQueue* queue = dev->newCommandQueue();");
+        self.host.line("int V = g.num_nodes();");
+        self.host.line("int E = g.num_edges();");
+        self.host.line("");
+    }
+
+    fn graph_to_device(&mut self) {
+        self.host.line("// §4.1: the static graph is copied to the device once, never back");
+        for &arr in &self.plan.graph_arrays {
+            let (dev, host, len) = (arr.device_name(), arr.host_name(), arr.len_sym());
+            self.host.line(&format!(
+                "MTL::Buffer* {dev} = dev->newBuffer({host}, sizeof(int) * {len}, MTL::ResourceStorageModeShared);"
+            ));
+        }
+    }
+
+    fn alloc_prop(&mut self, slot: u32) {
+        let m = self.plan.meta(slot);
+        let ty = HOST.name(m.ty);
+        let len = m.len_sym();
+        self.host.line(&format!(
+            "MTL::Buffer* gpu_{} = dev->newBuffer(sizeof({ty}) * {len}, MTL::ResourceStorageModeShared);",
+            m.name
+        ));
+    }
+
+    fn alloc_flag(&mut self) {
+        self.host.line(
+            "MTL::Buffer* gpu_finished = dev->newBuffer(sizeof(bool) * 1, MTL::ResourceStorageModeShared);",
+        );
+    }
+
+    fn launch_setup(&mut self) {
+        self.host.line("");
+        self.host.line("MTL::Size threadsPerGroup = MTL::Size(512, 1, 1);");
+        self.host.line("MTL::Size gridSize = MTL::Size(V, 1, 1);");
+        self.host.line("");
+    }
+
+    fn copy_prop(&mut self, dst: u32, src: u32) {
+        // shared storage: device-to-device copies are host memcpys
+        let ty = HOST.name(self.plan.meta(dst).ty);
+        self.host.line(&format!(
+            "memcpy(gpu_{}->contents(), gpu_{}->contents(), sizeof({ty}) * V);",
+            self.plan.prop_name(dst),
+            self.plan.prop_name(src)
+        ));
+    }
+
+    fn set_element(&mut self, slot: u32, index: &str, value: &Expr) {
+        let m = self.plan.meta(slot);
+        let ty = HOST.name(m.ty);
+        let val = emit(value, &self.expr_style());
+        self.host.line(&format!(
+            "(({ty}*)gpu_{}->contents())[{index}] = ({ty}){val};",
+            m.name
+        ));
+    }
+
+    fn init_props(&mut self, _kernel: usize, inits: &[(u32, Expr)]) {
+        for (slot, e) in inits {
+            let m = self.plan.meta(*slot);
+            let ty = HOST.name(m.ty);
+            let v = emit(e, &self.expr_style());
+            self.host.line(&format!(
+                "for (int i = 0; i < V; i++) (({ty}*)gpu_{}->contents())[i] = ({ty}){v};",
+                m.name
+            ));
+        }
+    }
+
+    fn launch(&mut self, kernel: usize, or_flag: Option<&str>) {
+        let plan = self.plan;
+        let k: &KernelPlan = &plan.kernels[kernel];
+        let body = k.body.as_ref().expect("forall kernel carries a lowered body");
+        let params = k.params(or_flag.is_some());
+        let mut sig: Vec<String> = params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| self.param_decl(p, i, &k.atomic_props))
+            .collect();
+        sig.push("uint tid [[thread_position_in_grid]]".to_string());
+        let dialect = MetalKernel::for_kernel(plan, k);
+        self.open_kernel(&k.name, &sig, &body.thread_var);
+        if let Some(g) = &body.guard {
+            self.kernels.line(&format!("if (!({})) return;", emit(g, &dialect.style())));
+        }
+        render_kernel_ops(&dialect, plan, &body.ops, &mut self.kernels);
+        self.kernels.close("}");
+        self.kernels.line("");
+        // ---- launch site: §4-bound transfers are shared-memory memcpys ----
+        for &c in &k.copy_in {
+            let m = self.plan.meta(c);
+            let ty = HOST.name(m.ty);
+            let len = m.len_sym();
+            self.host.line(&format!(
+                "// copy-in (§4.1 analysis): {} is read before first device write",
+                m.name
+            ));
+            self.host
+                .line(&format!("memcpy(gpu_{n}->contents(), {n}, sizeof({ty}) * {len});", n = m.name));
+        }
+        for (r, _, ty) in &k.reductions {
+            let t = cell_host_ty(*ty);
+            self.host.line(&format!("// device reduction cell for `{r}` (§3.3)"));
+            self.host.line(&format!(
+                "MTL::Buffer* d_{r} = dev->newBuffer(sizeof({t}) * 1, MTL::ResourceStorageModeShared);"
+            ));
+            self.host.line(&format!("*({t}*)d_{r}->contents() = ({t}){r};"));
+        }
+        let binds = self.bind_lines(&params);
+        let name = k.name.clone();
+        self.dispatch(&name, binds);
+        for (r, _, ty) in &k.reductions {
+            let t = cell_host_ty(*ty);
+            self.host.line(&format!("{r} = *({t}*)d_{r}->contents();"));
+            self.host.line(&format!("d_{r}->release();"));
+        }
+        if !k.defer_to_loop_exit {
+            for &c in &k.copy_out {
+                let m = self.plan.meta(c);
+                let ty = HOST.name(m.ty);
+                let len = m.len_sym();
+                self.host.line(&format!(
+                    "memcpy({n}, gpu_{n}->contents(), sizeof({ty}) * {len});",
+                    n = m.name
+                ));
+            }
+        }
+    }
+
+    fn bfs(&mut self, index: usize, var: &str, from: &str) {
+        let plan = self.plan;
+        let b = &plan.bfs_loops[index];
+        let fwd = &plan.kernels[b.fwd];
+        let fbody = fwd.body.as_ref().expect("BFS forward sweep carries a lowered body");
+        let lt = b.level.map(|s| self.plan.c_ty(s, HOST)).unwrap_or("int");
+        let params = fwd.bfs_params(b.level);
+        let mut sig: Vec<String> = params
+            .iter()
+            .enumerate()
+            .map(|(i, p)| self.param_decl(p, i, &fwd.atomic_props))
+            .collect();
+        let base = sig.len();
+        sig.push(format!("device {lt}* gpu_level [[buffer({base})]]"));
+        sig.push(format!("constant int& hops_from_source [[buffer({})]]", base + 1));
+        sig.push(format!("device bool* d_finished [[buffer({})]]", base + 2));
+        sig.push("uint tid [[thread_position_in_grid]]".to_string());
+        let dialect = MetalKernel::for_kernel(plan, fwd);
+        self.open_kernel(&fwd.name, &sig, var);
+        self.kernels.open(&format!("if (gpu_level[{var}] == hops_from_source) {{"));
+        self.kernels.open(&format!("for (int i = gpu_OA[{var}]; i < gpu_OA[{var}+1]; ++i) {{"));
+        self.kernels.line("int nbr = gpu_edgeList[i];");
+        self.kernels.open("if (gpu_level[nbr] == -1) {");
+        self.kernels.line("gpu_level[nbr] = hops_from_source + 1;");
+        self.kernels.line("*d_finished = false;");
+        self.kernels.close("}");
+        self.kernels.close("}");
+        render_kernel_ops(&dialect, plan, &fbody.ops, &mut self.kernels);
+        self.kernels.close("}");
+        self.kernels.close("}");
+        self.kernels.line("");
+        // host loop (Fig 9), shared-storage flavor
+        self.host.line("// iterateInBFS: level-synchronous host loop (Fig 9)");
+        if b.level.is_none() {
+            self.host.line(&format!(
+                "MTL::Buffer* gpu_level = dev->newBuffer(sizeof({lt}) * V, MTL::ResourceStorageModeShared);"
+            ));
+        }
+        self.host.line(
+            "MTL::Buffer* d_finished = dev->newBuffer(sizeof(bool) * 1, MTL::ResourceStorageModeShared);",
+        );
+        self.host
+            .line(&format!("for (int i = 0; i < V; i++) (({lt}*)gpu_level->contents())[i] = -1;"));
+        self.host.line(&format!("(({lt}*)gpu_level->contents())[{from}] = 0;"));
+        self.host.line("int hops_from_source = 0;");
+        self.host.line("bool finished;");
+        self.host.open("do {");
+        self.host.line("finished = true;");
+        self.host.line("*(bool*)d_finished->contents() = finished;");
+        let mut binds = self.bind_lines(&params);
+        let base = binds.len();
+        binds.push(format!("enc->setBuffer(gpu_level, 0, {base});"));
+        binds.push(format!("enc->setBytes(&hops_from_source, sizeof(int), {});", base + 1));
+        binds.push(format!("enc->setBuffer(d_finished, 0, {});", base + 2));
+        let fname = fwd.name.clone();
+        self.dispatch(&fname, binds);
+        self.host.line("++hops_from_source;");
+        self.host.line("finished = *(bool*)d_finished->contents();");
+        self.host.close("} while (!finished);");
+        if let Some(ri) = b.rev {
+            let rk = &plan.kernels[ri];
+            let rbody = rk.body.as_ref().expect("BFS reverse sweep carries a lowered body");
+            let rparams = rk.bfs_params(b.level);
+            let mut rsig: Vec<String> = rparams
+                .iter()
+                .enumerate()
+                .map(|(i, p)| self.param_decl(p, i, &rk.atomic_props))
+                .collect();
+            let rbase = rsig.len();
+            rsig.push(format!("device {lt}* gpu_level [[buffer({rbase})]]"));
+            rsig.push(format!("constant int& hops_from_source [[buffer({})]]", rbase + 1));
+            rsig.push("uint tid [[thread_position_in_grid]]".to_string());
+            let rdialect = MetalKernel::for_kernel(plan, rk);
+            self.open_kernel(&rk.name, &rsig, var);
+            self.kernels.line(&format!("if (gpu_level[{var}] != hops_from_source) return;"));
+            if let Some(g) = &rbody.guard {
+                self.kernels.line(&format!("if (!({})) return;", emit(g, &rdialect.style())));
+            }
+            render_kernel_ops(&rdialect, plan, &rbody.ops, &mut self.kernels);
+            self.kernels.close("}");
+            self.kernels.line("");
+            self.host.line("// iterateInReverse: walk the BFS levels backwards");
+            self.host.open("while (--hops_from_source >= 0) {");
+            let mut rbinds = self.bind_lines(&rparams);
+            let rb = rbinds.len();
+            rbinds.push(format!("enc->setBuffer(gpu_level, 0, {rb});"));
+            rbinds.push(format!("enc->setBytes(&hops_from_source, sizeof(int), {});", rb + 1));
+            let rname = rk.name.clone();
+            self.dispatch(&rname, rbinds);
+            self.host.close("}");
+        }
+        // skeleton-owned buffers are allocated at the BFS site: release here
+        self.host.line("d_finished->release();");
+        if b.level.is_none() {
+            self.host.line("gpu_level->release();");
+        }
+    }
+
+    fn fixed_point_enter(&mut self, index: usize, var: &str) -> String {
+        let flag = self.plan.fixed_points[index].flag_name.clone();
+        self.host.line(&format!("// fixedPoint on `{flag}` via a single device flag (§4.1)"));
+        self.host.line(&format!("bool {var} = false;"));
+        self.host.open(&format!("while (!{var}) {{"));
+        self.host.line(&format!("{var} = true;"));
+        self.host.line(&format!("*(bool*)gpu_finished->contents() = {var};"));
+        flag
+    }
+
+    fn fixed_point_exit(&mut self, var: &str) {
+        self.host.line(&format!("{var} = *(bool*)gpu_finished->contents();"));
+        self.host.close("}");
+    }
+
+    fn epilogue_begin(&mut self) {
+        self.host.line("");
+        self.host.line("// §4.1: only updated vertex attributes return to the host");
+    }
+
+    fn copy_out(&mut self, slot: u32) {
+        let m = self.plan.meta(slot);
+        let ty = HOST.name(m.ty);
+        let len = m.len_sym();
+        self.host
+            .line(&format!("memcpy({n}, gpu_{n}->contents(), sizeof({ty}) * {len});", n = m.name));
+    }
+
+    fn free_prop(&mut self, slot: u32) {
+        self.host.line(&format!("gpu_{}->release();", self.plan.prop_name(slot)));
+    }
+
+    fn free_flag(&mut self) {
+        self.host.line("gpu_finished->release();");
+    }
+
+    fn free_graph(&mut self) {
+        for &arr in &self.plan.graph_arrays {
+            self.host.line(&format!("{}->release();", arr.device_name()));
+        }
+    }
+}

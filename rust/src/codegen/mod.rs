@@ -1,39 +1,44 @@
 //! Code generators: the paper's four accelerator backends (CUDA, OpenCL,
-//! SYCL, OpenACC — §3), the HIP backend, and the executable JAX backend
-//! (DESIGN.md §1).
+//! SYCL, OpenACC — §3), the HIP, Metal, and WebGPU/WGSL backends, and the
+//! executable JAX backend (DESIGN.md §1).
 //!
-//! # The plan → HostOp → render pipeline
+//! # The plan → {HostOp, KernelOp} → render pipeline
 //!
 //! ```text
 //! AST ──sema──▶ TypedFunction ──ir::lower──▶ IrProgram
 //!                                               │
 //!                              DevicePlan::build (ir/plan.rs)
-//!                      buffers · kernel schedule · HostOp schedule
+//!          buffers · kernel schedule · HostOp schedule · KernelOp bodies
 //!                                               │
-//!                         render_host_schedule (this module)
-//!              one driver walks the HostOp tree, calling a backend's
-//!              HostDialect hooks for each operation's spelling
-//!                                               │
-//!        ┌──────────┬──────────┬──────────┬─────┴────┬──────────┐
-//!        ▼          ▼          ▼          ▼          ▼          ▼
-//!      cuda        hip       opencl     sycl      openacc     jax
+//!                      ┌────────────────────────┴─────────────────────┐
+//!         render_host_schedule (host half)        render_kernel_ops (device half)
+//!         one driver walks the HostOp tree,       one driver walks each kernel's
+//!         calling a backend's HostDialect         KernelOp tree, calling its
+//!         hooks for each op's spelling            KernelDialect spelling hooks
+//!                      └────────────────────────┬─────────────────────┘
+//!        ┌───────┬───────┬────────┬───────┬─────┴───┬────────┬────────┬──────┐
+//!        ▼       ▼       ▼        ▼       ▼         ▼        ▼        ▼      ▼
+//!      cuda     hip    opencl    sycl   openacc   metal     wgsl          jax
 //! ```
 //!
 //! Lowering happens exactly once, in [`crate::ir::plan`]: buffer slots,
-//! kernel parameter lists, §4 transfer steps, and — since the HostOp
-//! refactor — every *host statement* (declarations, scalar assignments,
-//! device transfers, kernel launches, fixedPoint / BFS / sequential loop
-//! structure, epilogue frees) live in [`DevicePlan::host_ops`]. A text
-//! backend is a [`HostDialect`]: a table of spellings (`cudaMemcpy` vs
-//! `clEnqueueWriteBuffer` vs `Q.memcpy` vs `#pragma acc`) invoked by
-//! [`render_host_schedule`], plus a kernel-body emitter ([`body`]) for the
-//! device half. No renderer walks the AST for host syntax, which is what
-//! makes a new backend cheap: `hip.rs` is a spelling table over the shared
-//! CUDA-family renderer — roughly 150 lines, zero lowering.
+//! kernel parameter lists, §4 transfer steps, every *host statement*
+//! ([`DevicePlan::host_ops`]), and — since the KernelOp refactor — every
+//! *kernel body* ([`crate::ir::plan::KernelPlan::body`], a typed
+//! [`crate::ir::kernel::KernelOp`] tree with slots, scalar types, structured
+//! BFS/filter guards, and OR-flag context resolved). A text backend is two
+//! spelling tables: a [`HostDialect`] (`cudaMemcpy` vs `clEnqueueWriteBuffer`
+//! vs `Q.memcpy` vs `queue.WriteBuffer`) driven by [`render_host_schedule`],
+//! and a `KernelDialect` (`atomicMin` vs `atomic_fetch_min_explicit` vs
+//! WGSL's `atomicMin(&…)`; `int x = e;` vs `var x : i32 = e;`) driven by
+//! `body::render_kernel_ops`. No renderer walks the AST at all — which is
+//! what makes a non-C-family backend possible: `wgsl.rs` spells the same op
+//! tree into `var<storage>` bindings and `@compute` entry points.
 //!
-//! Each generated file embeds two comment blocks — the device-plan manifest
-//! and the host-schedule manifest — that are byte-identical across all text
-//! backends (`tests/plan_numbering.rs`, `tests/host_schedule_conformance.rs`).
+//! Each generated file embeds three comment blocks — the device-plan,
+//! host-schedule, and kernel-op manifests — that are byte-identical across
+//! all text backends (`tests/plan_numbering.rs`,
+//! `tests/host_schedule_conformance.rs`).
 
 pub mod body;
 pub mod buf;
@@ -41,16 +46,19 @@ pub mod cexpr;
 pub mod cuda;
 pub mod hip;
 pub mod jax;
+pub mod metal;
 pub mod openacc;
 pub mod opencl;
 pub mod sycl;
+pub mod wgsl;
 
-use crate::dsl::ast::{Block, Expr, Iterator_, ReduceOp, Stmt};
+use crate::dsl::ast::{Expr, ReduceOp};
 use crate::ir::plan::{DevicePlan, HostOp, TypeMap};
 use crate::ir::IrProgram;
-use crate::sema::TypedFunction;
 use buf::CodeBuf;
 use cexpr::{emit, Style};
+
+pub use crate::ir::kernel::{resolve_filter, simplify_bool_cmp};
 
 /// Textual backends by name. The device plan is lowered once and shared by
 /// whichever renderer is selected.
@@ -62,12 +70,18 @@ pub fn generate(backend: &str, ir: &IrProgram) -> anyhow::Result<String> {
         "opencl" => opencl::generate_with(ir, &plan),
         "sycl" => sycl::generate_with(ir, &plan),
         "openacc" => openacc::generate_with(ir, &plan),
+        "metal" => metal::generate_with(ir, &plan),
+        "wgsl" => wgsl::generate_with(ir, &plan),
         "jax" => jax::generate_with(ir, &plan)?.python,
-        other => anyhow::bail!("unknown backend `{other}` (cuda|hip|opencl|sycl|openacc|jax)"),
+        other => anyhow::bail!(
+            "unknown backend `{other}` (cuda|hip|opencl|sycl|openacc|metal|wgsl|jax)"
+        ),
     })
 }
 
-pub const TEXT_BACKENDS: [&str; 5] = ["cuda", "opencl", "sycl", "openacc", "hip"];
+/// Every text backend, in the order the snapshot matrix pins them.
+pub const TEXT_BACKENDS: [&str; 7] =
+    ["cuda", "opencl", "sycl", "openacc", "hip", "metal", "wgsl"];
 
 /// Per-backend spellings for the host half of a generated program. The
 /// driver ([`render_host_schedule`]) owns all host *structure* — statement
@@ -95,15 +109,13 @@ pub(crate) trait HostDialect {
     fn copy_prop(&mut self, dst: u32, src: u32);
     fn set_element(&mut self, slot: u32, index: &str, value: &Expr);
     fn init_props(&mut self, kernel: usize, inits: &[(u32, Expr)]);
-    fn launch(&mut self, kernel: usize, iter: &Iterator_, body: &[Stmt], or_flag: Option<&str>);
-    fn bfs(
-        &mut self,
-        index: usize,
-        var: &str,
-        from: &str,
-        body: &[Stmt],
-        reverse: Option<&(Expr, Block)>,
-    );
+    /// Emit kernel + launch site for one `forall`. The device body is
+    /// plan-carried (`plan.kernels[kernel].body`); `or_flag` is the
+    /// enclosing fixedPoint's flag property, when any (§4.1).
+    fn launch(&mut self, kernel: usize, or_flag: Option<&str>);
+    /// Emit the Fig 9 BFS skeleton; sweep bodies come from the plan's
+    /// forward / reverse kernels.
+    fn bfs(&mut self, index: usize, var: &str, from: &str);
     /// Open the fixedPoint host loop; returns the OR-flag property name the
     /// enclosed launches bind (§4.1).
     fn fixed_point_enter(&mut self, index: usize, var: &str) -> String;
@@ -154,7 +166,7 @@ pub(crate) fn render_host_schedule<D: HostDialect + ?Sized>(
                 d.buf().line(&line);
             }
             HostOp::InitProps { kernel, inits } => d.init_props(*kernel, inits),
-            HostOp::Launch { kernel, iter, body } => d.launch(*kernel, iter, body, or_flag),
+            HostOp::Launch { kernel } => d.launch(*kernel, or_flag),
             HostOp::SeqFor { var, set, body } => {
                 d.buf().open(&format!("for (int {var} : {set}) {{"));
                 render_host_schedule(d, body, or_flag);
@@ -165,9 +177,7 @@ pub(crate) fn render_host_schedule<D: HostDialect + ?Sized>(
                 render_host_schedule(d, body, Some(&flag));
                 d.fixed_point_exit(var);
             }
-            HostOp::Bfs { index, var, from, body, reverse } => {
-                d.bfs(*index, var, from, body, reverse.as_ref())
-            }
+            HostOp::Bfs { index, var, from } => d.bfs(*index, var, from),
             HostOp::DoWhile { body, cond } => {
                 d.buf().open("do {");
                 render_host_schedule(d, body, or_flag);
@@ -208,11 +218,17 @@ pub(crate) fn render_host_schedule<D: HostDialect + ?Sized>(
     }
 }
 
-/// Standard file header: generator banner + the two manifest comment blocks
-/// (device plan, host schedule) every text backend embeds.
+/// Standard file header: generator banner + the three manifest comment
+/// blocks (device plan, host schedule, kernel ops) every text backend
+/// embeds.
 pub(crate) fn manifest_header(label: &str, plan: &DevicePlan) -> String {
     let mut out = format!("// Generated by starplat-rs — {label} backend\n");
-    for l in plan.manifest().iter().chain(plan.host_manifest().iter()) {
+    for l in plan
+        .manifest()
+        .iter()
+        .chain(plan.host_manifest().iter())
+        .chain(plan.kernel_manifest().iter())
+    {
         out.push_str("// ");
         out.push_str(l);
         out.push('\n');
@@ -228,57 +244,6 @@ pub(crate) fn red_sym(op: ReduceOp) -> &'static str {
         ReduceOp::And => "&&",
         ReduceOp::Or => "||",
     }
-}
-
-/// Resolve bare property names in filter expressions to explicit
-/// `loopVar.prop` accesses (the StarPlat `filter(modified == True)` idiom).
-pub fn resolve_filter(e: &Expr, var: &str, tf: &TypedFunction) -> Expr {
-    match e {
-        Expr::Var(name) if tf.node_props.contains_key(name) => {
-            Expr::Prop { obj: var.to_string(), prop: name.clone() }
-        }
-        Expr::Unary { op, expr } => {
-            Expr::Unary { op: *op, expr: Box::new(resolve_filter(expr, var, tf)) }
-        }
-        Expr::Binary { op, lhs, rhs } => Expr::Binary {
-            op: *op,
-            lhs: Box::new(resolve_filter(lhs, var, tf)),
-            rhs: Box::new(resolve_filter(rhs, var, tf)),
-        },
-        Expr::Call { recv, name, args } => Expr::Call {
-            recv: recv.clone(),
-            name: name.clone(),
-            args: args.iter().map(|a| resolve_filter(a, var, tf)).collect(),
-        },
-        other => other.clone(),
-    }
-}
-
-/// Normalize boolean comparisons for C output, with the literal on either
-/// side: `x == True` / `True == x` → `x`, `x == False` / `False == x` → `!x`
-/// (cleaner generated code, as in the paper's figures). `!=` flips the sense.
-pub fn simplify_bool_cmp(e: &Expr) -> Expr {
-    use crate::dsl::ast::{BinOp, UnOp};
-    if let Expr::Binary { op, lhs, rhs } = e {
-        let (lit, other) = match (&**lhs, &**rhs) {
-            (_, Expr::BoolLit(b)) => (Some(*b), lhs),
-            (Expr::BoolLit(b), _) => (Some(*b), rhs),
-            _ => (None, lhs),
-        };
-        let want = match (op, lit) {
-            (BinOp::Eq, Some(b)) => Some(b),
-            (BinOp::Ne, Some(b)) => Some(!b),
-            _ => None,
-        };
-        if let Some(w) = want {
-            return if w {
-                (**other).clone()
-            } else {
-                Expr::Unary { op: UnOp::Not, expr: other.clone() }
-            };
-        }
-    }
-    e.clone()
 }
 
 #[cfg(test)]

@@ -6,24 +6,75 @@
 //! clauses on the loop pragma (Fig 7).
 //!
 //! A thin renderer over [`DevicePlan`]: the data-clause buffer sets, local
-//! property arrays, reduction clauses, and the entire host-statement
-//! schedule come from the plan — this module is the OpenACC
-//! [`HostDialect`], driven by [`super::render_host_schedule`]. Because the
-//! data region owns all transfers, most transfer-shaped [`HostOp`]s
-//! (graph H2D, flag allocation, copy-outs) render to nothing here; the
-//! promoted region opens at the `LaunchSetup` op (after the local `new[]`
-//! allocations) and closes at `EpilogueBegin`.
+//! property arrays, reduction clauses, the entire host-statement schedule,
+//! and every kernel body come from the plan — this module is the OpenACC
+//! [`HostDialect`] + [`AccKernel`] dialect, driven by
+//! [`super::render_host_schedule`] and `super::body::render_kernel_ops`.
+//! Because the data region owns all transfers, most transfer-shaped
+//! [`HostOp`](crate::ir::plan::HostOp)s (graph H2D, flag allocation,
+//! copy-outs) render to nothing here; the promoted region opens at the
+//! `LaunchSetup` op (after the local `new[]` allocations) and closes at
+//! `EpilogueBegin`.
 
-use super::body::{emit_block, BfsDir, BodyCtx, Target};
+use super::body::{render_kernel_ops, KernelDialect};
 use super::buf::CodeBuf;
 use super::cexpr::{emit, openacc_style, Style};
 use super::{red_sym, render_host_schedule, HostDialect};
-use crate::dsl::ast::{Block, Expr, Iterator_, Stmt};
+use crate::dsl::ast::{Expr, MinMax, ReduceOp};
 use crate::ir::plan::{DevicePlan, GraphArray, PropMeta, TypeMap};
-use crate::ir::IrProgram;
-use crate::sema::TypedFunction;
+use crate::ir::{IrProgram, ScalarTy};
 
 const TYPES: &TypeMap = &TypeMap::C;
+
+/// OpenACC device dialect: atomic pragmas instead of atomic intrinsics.
+struct AccKernel;
+
+impl KernelDialect for AccKernel {
+    fn types(&self) -> &'static TypeMap {
+        TYPES
+    }
+
+    fn style(&self) -> Style {
+        openacc_style()
+    }
+
+    fn reduce(&self, buf: &mut CodeBuf, loc: &str, op: ReduceOp, _ty: ScalarTy, val: &str) {
+        buf.line("#pragma acc atomic update");
+        buf.line(&format!("{loc} = {loc} {} {val};", red_sym(op)));
+    }
+
+    fn reduce_scalar(
+        &self,
+        buf: &mut CodeBuf,
+        name: &str,
+        op: ReduceOp,
+        _ty: ScalarTy,
+        val: &str,
+    ) {
+        // handled by the loop's reduction(...) clause (Fig 7)
+        buf.line(&format!("{name} = {name} {} {val};", red_sym(op)));
+    }
+
+    fn min_max_update(
+        &self,
+        buf: &mut CodeBuf,
+        _kind: MinMax,
+        loc: &str,
+        tmp: &str,
+        _ty: ScalarTy,
+    ) {
+        // Fig 10: guard + atomic write (OpenACC has no atomicMin). The
+        // compare temporary is typed from the plan by the driver; the old
+        // walker's untyped, never-read `int oldValue` is gone.
+        buf.line("#pragma acc atomic write");
+        buf.line(&format!("{loc} = {tmp};"));
+    }
+
+    fn set_or_flag(&self, buf: &mut CodeBuf) {
+        buf.line("#pragma acc atomic write");
+        buf.line("finished = false;");
+    }
+}
 
 pub fn generate(ir: &IrProgram) -> String {
     generate_with(ir, &DevicePlan::build(ir))
@@ -31,30 +82,17 @@ pub fn generate(ir: &IrProgram) -> String {
 
 /// Render with a pre-built plan ([`super::generate`] lowers once for all
 /// backends).
-pub(crate) fn generate_with(ir: &IrProgram, plan: &DevicePlan) -> String {
-    let mut g = Gen { tf: &ir.tf, plan, buf: CodeBuf::new() };
+pub(crate) fn generate_with(_ir: &IrProgram, plan: &DevicePlan) -> String {
+    let mut g = Gen { plan, buf: CodeBuf::new() };
     g.run()
 }
 
 struct Gen<'a> {
-    tf: &'a TypedFunction,
     plan: &'a DevicePlan,
     buf: CodeBuf,
 }
 
 impl<'a> Gen<'a> {
-    fn body_ctx(&self, bfs: Option<BfsDir>, or_flag: Option<&str>) -> BodyCtx<'a> {
-        BodyCtx {
-            tf: self.tf,
-            plan: self.plan,
-            types: TYPES,
-            style: openacc_style(),
-            target: Target::OpenAcc,
-            bfs,
-            or_flag: or_flag.map(str::to_string),
-        }
-    }
-
     fn run(&mut self) -> String {
         let plan = self.plan;
         let mut out = super::manifest_header("OpenACC", plan);
@@ -178,9 +216,10 @@ impl<'a> HostDialect for Gen<'a> {
         self.buf.close("}");
     }
 
-    fn launch(&mut self, kernel: usize, iter: &Iterator_, body: &[Stmt], or_flag: Option<&str>) {
+    fn launch(&mut self, kernel: usize, _or_flag: Option<&str>) {
         let plan = self.plan;
         let k = &plan.kernels[kernel];
+        let body = k.body.as_ref().expect("forall kernel carries a lowered body");
         // Fig 7: reduction clause for scalar reductions, from the plan
         let mut pragma = "#pragma acc parallel loop".to_string();
         let reds: Vec<String> = k
@@ -192,26 +231,23 @@ impl<'a> HostDialect for Gen<'a> {
             pragma = format!("{pragma} {}", reds.join(" "));
         }
         self.buf.line(&pragma);
-        self.buf
-            .open(&format!("for (int {v} = 0; {v} < g.num_nodes(); {v}++) {{", v = iter.var));
-        if let Some(f) = &iter.filter {
-            let fe = super::simplify_bool_cmp(&super::resolve_filter(f, &iter.var, self.tf));
-            self.buf.line(&format!("if (!({})) continue;", emit(&fe, &openacc_style())));
+        self.buf.open(&format!(
+            "for (int {v} = 0; {v} < g.num_nodes(); {v}++) {{",
+            v = body.thread_var
+        ));
+        if let Some(g) = &body.guard {
+            self.buf.line(&format!("if (!({})) continue;", emit(g, &openacc_style())));
         }
-        let cx = self.body_ctx(None, or_flag);
-        emit_block(body, &cx, &mut self.buf);
+        render_kernel_ops(&AccKernel, plan, &body.ops, &mut self.buf);
         self.buf.close("}");
     }
 
-    fn bfs(
-        &mut self,
-        index: usize,
-        var: &str,
-        from: &str,
-        body: &[Stmt],
-        reverse: Option<&(Expr, Block)>,
-    ) {
-        let implicit_level = self.plan.bfs_loops[index].level.is_none();
+    fn bfs(&mut self, index: usize, var: &str, from: &str) {
+        let plan = self.plan;
+        let b = &plan.bfs_loops[index];
+        let fbody =
+            plan.kernels[b.fwd].body.as_ref().expect("BFS forward sweep carries a lowered body");
+        let implicit_level = b.level.is_none();
         self.buf.line("// iterateInBFS (§3.4): do-while over levels on the host");
         if implicit_level {
             // implicit level buffer (e.g. BC): owned by the skeleton
@@ -237,22 +273,23 @@ impl<'a> HostDialect for Gen<'a> {
         self.buf.line("finished = false;");
         self.buf.close("}");
         self.buf.close("}");
-        let cx = self.body_ctx(Some(BfsDir::Forward), None);
-        emit_block(body, &cx, &mut self.buf);
+        render_kernel_ops(&AccKernel, plan, &fbody.ops, &mut self.buf);
         self.buf.close("}");
         self.buf.close("}");
         self.buf.line("++hops_from_source;");
         self.buf.close("} while (!finished);");
-        if let Some((cond, rbody)) = reverse {
+        if let Some(ri) = b.rev {
+            let rbody =
+                plan.kernels[ri].body.as_ref().expect("BFS reverse sweep carries a lowered body");
             self.buf.line("// iterateInReverse: walk levels backwards");
             self.buf.open("while (--hops_from_source >= 0) {");
             self.buf.line("#pragma acc parallel loop");
             self.buf.open(&format!("for (int {var} = 0; {var} < g.num_nodes(); {var}++) {{"));
             self.buf.line(&format!("if (level[{var}] != hops_from_source) continue;"));
-            let ce = super::simplify_bool_cmp(&super::resolve_filter(cond, var, self.tf));
-            self.buf.line(&format!("if (!({})) continue;", emit(&ce, &openacc_style())));
-            let cx = self.body_ctx(Some(BfsDir::Reverse), None);
-            emit_block(rbody, &cx, &mut self.buf);
+            if let Some(g) = &rbody.guard {
+                self.buf.line(&format!("if (!({})) continue;", emit(g, &openacc_style())));
+            }
+            render_kernel_ops(&AccKernel, plan, &rbody.ops, &mut self.buf);
             self.buf.close("}");
             self.buf.close("}");
         }

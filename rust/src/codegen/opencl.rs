@@ -5,21 +5,68 @@
 //! Float/double atomics are simulated with `atomic_cmpxchg` (§3.3), and
 //! booleans are `int` — resolved by [`TypeMap::OPENCL`] in the device plan,
 //! not here. A thin renderer over [`DevicePlan`]: buffers, parameter lists,
-//! kernel numbering, and the entire host-statement schedule come from the
-//! plan; this module is the OpenCL [`HostDialect`] — spellings only, driven
-//! by [`super::render_host_schedule`].
+//! kernel numbering, the entire host-statement schedule, and every kernel
+//! body come from the plan; this module is the OpenCL [`HostDialect`] +
+//! [`OclKernel`] dialect — spellings only, driven by
+//! [`super::render_host_schedule`] and `super::body::render_kernel_ops`.
 
-use super::body::{emit_block, BfsDir, BodyCtx, Target};
+use super::body::{render_kernel_ops, KernelDialect};
 use super::buf::CodeBuf;
 use super::cexpr::{emit, opencl_style, Style};
 use super::{render_host_schedule, HostDialect};
-use crate::dsl::ast::{Block, Expr, Iterator_, Stmt};
+use crate::dsl::ast::{Expr, MinMax, ReduceOp};
 use crate::ir::plan::{DevicePlan, KernelParam, KernelPlan, TypeMap};
-use crate::ir::IrProgram;
-use crate::sema::TypedFunction;
+use crate::ir::{IrProgram, ScalarTy};
 
 /// Device-side types (bool → int, 64-bit → `long`).
 const DEV: &TypeMap = &TypeMap::OPENCL;
+
+/// OpenCL C device dialect: `atomic_*` builtins on int/long cells, cmpxchg
+/// emulation for float adds (§3.3).
+struct OclKernel;
+
+impl KernelDialect for OclKernel {
+    fn types(&self) -> &'static TypeMap {
+        DEV
+    }
+
+    fn style(&self) -> Style {
+        opencl_style()
+    }
+
+    fn reduce(&self, buf: &mut CodeBuf, loc: &str, op: ReduceOp, ty: ScalarTy, val: &str) {
+        match (op, ty) {
+            (ReduceOp::Add | ReduceOp::Count, ScalarTy::F32 | ScalarTy::F64) => {
+                // OpenCL has int/long atomics only: simulate via cmpxchg (§3.3)
+                buf.line(&format!("atomicAddFloat(&{loc}, {val}); // atomic_cmpxchg loop"));
+            }
+            (ReduceOp::Add | ReduceOp::Count, _) => {
+                buf.line(&format!("atomic_add(&{loc}, {val});"))
+            }
+            (ReduceOp::Mul, _) => buf.line(&format!("atomicMulCmpxchg(&{loc}, {val});")),
+            (ReduceOp::And, _) => buf.line(&format!("atomic_and(&{loc}, {val});")),
+            (ReduceOp::Or, _) => buf.line(&format!("atomic_or(&{loc}, {val});")),
+        }
+    }
+
+    fn min_max_update(
+        &self,
+        buf: &mut CodeBuf,
+        kind: MinMax,
+        loc: &str,
+        tmp: &str,
+        _ty: ScalarTy,
+    ) {
+        buf.line(&format!(
+            "atomic_{}(&{loc}, {tmp});",
+            if kind == MinMax::Min { "min" } else { "max" }
+        ));
+    }
+
+    fn set_or_flag(&self, buf: &mut CodeBuf) {
+        buf.line("gpu_finished[0] = false;");
+    }
+}
 
 pub fn generate(ir: &IrProgram) -> String {
     generate_with(ir, &DevicePlan::build(ir))
@@ -27,13 +74,12 @@ pub fn generate(ir: &IrProgram) -> String {
 
 /// Render with a pre-built plan ([`super::generate`] lowers once for all
 /// backends).
-pub(crate) fn generate_with(ir: &IrProgram, plan: &DevicePlan) -> String {
-    let mut g = Gen { tf: &ir.tf, plan, kernels: CodeBuf::new(), host: CodeBuf::new() };
+pub(crate) fn generate_with(_ir: &IrProgram, plan: &DevicePlan) -> String {
+    let mut g = Gen { plan, kernels: CodeBuf::new(), host: CodeBuf::new() };
     g.run()
 }
 
 struct Gen<'a> {
-    tf: &'a TypedFunction,
     plan: &'a DevicePlan,
     kernels: CodeBuf,
     host: CodeBuf,
@@ -54,18 +100,6 @@ impl<'a> Gen<'a> {
             }
             KernelParam::Scalar { name, ty } => format!("{} {name}", DEV.name(*ty)),
             KernelParam::OrFlag => "__global int* gpu_finished".to_string(),
-        }
-    }
-
-    fn body_ctx(&self, bfs: Option<BfsDir>, or_flag: Option<&str>) -> BodyCtx<'a> {
-        BodyCtx {
-            tf: self.tf,
-            plan: self.plan,
-            types: DEV,
-            style: opencl_style(),
-            target: Target::OpenCl,
-            bfs,
-            or_flag: or_flag.map(str::to_string),
         }
     }
 
@@ -184,9 +218,10 @@ impl<'a> HostDialect for Gen<'a> {
         }
     }
 
-    fn launch(&mut self, kernel: usize, iter: &Iterator_, body: &[Stmt], or_flag: Option<&str>) {
+    fn launch(&mut self, kernel: usize, or_flag: Option<&str>) {
         let plan = self.plan;
         let k: &KernelPlan = &plan.kernels[kernel];
+        let body = k.body.as_ref().expect("forall kernel carries a lowered body");
         for (r, _, ty) in &k.reductions {
             let t = DEV.name(*ty);
             self.host.line(&format!(
@@ -200,14 +235,12 @@ impl<'a> HostDialect for Gen<'a> {
         let sig: Vec<String> = params.iter().map(|p| self.param_decl(p)).collect();
         let args: Vec<String> = params.iter().map(|p| self.plan.launch_arg(p)).collect();
         self.kernels.open(&format!("__kernel void {}({}) {{", k.name, sig.join(", ")));
-        self.kernels.line(&format!("unsigned {v} = get_global_id(0);", v = iter.var));
-        self.kernels.line(&format!("if ({} >= V) return;", iter.var));
-        if let Some(f) = &iter.filter {
-            let fe = super::simplify_bool_cmp(&super::resolve_filter(f, &iter.var, self.tf));
-            self.kernels.line(&format!("if (!({})) return;", emit(&fe, &opencl_style())));
+        self.kernels.line(&format!("unsigned {v} = get_global_id(0);", v = body.thread_var));
+        self.kernels.line(&format!("if ({} >= V) return;", body.thread_var));
+        if let Some(g) = &body.guard {
+            self.kernels.line(&format!("if (!({})) return;", emit(g, &opencl_style())));
         }
-        let cx = self.body_ctx(None, or_flag);
-        emit_block(body, &cx, &mut self.kernels);
+        render_kernel_ops(&OclKernel, plan, &body.ops, &mut self.kernels);
         self.kernels.close("}");
         self.kernels.line("");
         let name = k.name.clone();
@@ -221,20 +254,13 @@ impl<'a> HostDialect for Gen<'a> {
         }
     }
 
-    fn bfs(
-        &mut self,
-        index: usize,
-        var: &str,
-        from: &str,
-        body: &[Stmt],
-        reverse: Option<&(Expr, Block)>,
-    ) {
+    fn bfs(&mut self, index: usize, var: &str, from: &str) {
         // same structure as CUDA (§3.4: "The OpenCL backend code is similar
         // to CUDA"), kernel emitted with OpenCL decorations.
         let plan = self.plan;
         let b = &plan.bfs_loops[index];
         let fwd = &plan.kernels[b.fwd];
-        let rev = b.rev.map(|i| &plan.kernels[i]);
+        let fbody = fwd.body.as_ref().expect("BFS forward sweep carries a lowered body");
         // the BFS skeleton binds level, depth, and the finished flag; the
         // rest of the signature is the plan's parameter list. A declared
         // level property keeps its plan type.
@@ -261,8 +287,7 @@ impl<'a> HostDialect for Gen<'a> {
         self.kernels.line("gpu_finished[0] = 0;");
         self.kernels.close("}");
         self.kernels.close("}");
-        let cx = self.body_ctx(Some(BfsDir::Forward), None);
-        emit_block(body, &cx, &mut self.kernels);
+        render_kernel_ops(&OclKernel, plan, &fbody.ops, &mut self.kernels);
         self.kernels.close("}");
         self.kernels.close("}");
         self.kernels.line("");
@@ -296,7 +321,9 @@ impl<'a> HostDialect for Gen<'a> {
             "clEnqueueReadBuffer(command_queue, gpu_finished, CL_TRUE, 0, sizeof(int), &finished, 0, NULL, NULL);",
         );
         self.host.close("} while (!finished);");
-        if let (Some(rk), Some((_, rbody))) = (rev, reverse) {
+        if let Some(ri) = b.rev {
+            let rk = &plan.kernels[ri];
+            let rbody = rk.body.as_ref().expect("BFS reverse sweep carries a lowered body");
             let rparams = rk.bfs_params(b.level);
             let rsig: Vec<String> = rparams
                 .iter()
@@ -316,8 +343,10 @@ impl<'a> HostDialect for Gen<'a> {
             self.kernels.line(&format!(
                 "if ({var} >= V || gpu_level[{var}] != *d_hops_from_source) return;"
             ));
-            let cx = self.body_ctx(Some(BfsDir::Reverse), None);
-            emit_block(rbody, &cx, &mut self.kernels);
+            if let Some(g) = &rbody.guard {
+                self.kernels.line(&format!("if (!({})) return;", emit(g, &opencl_style())));
+            }
+            render_kernel_ops(&OclKernel, plan, &rbody.ops, &mut self.kernels);
             self.kernels.close("}");
             self.kernels.line("");
             self.host.line("// iterateInReverse host loop");

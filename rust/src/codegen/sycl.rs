@@ -6,21 +6,68 @@
 //! `malloc_device` (§4.3), and the fixedPoint flag is a single device word.
 //!
 //! A thin renderer over [`DevicePlan`]: buffer set, property types, kernel
-//! numbering, and the entire host-statement schedule come from the plan —
-//! this module is the SYCL [`HostDialect`], driven by
-//! [`super::render_host_schedule`]. Lambdas capture buffers, so no
+//! numbering, the entire host-statement schedule, and every kernel body come
+//! from the plan — this module is the SYCL [`HostDialect`] + [`SyclKernel`]
+//! dialect, driven by [`super::render_host_schedule`] and
+//! `super::body::render_kernel_ops`. Lambdas capture buffers, so no
 //! parameter lists are rendered here.
 
-use super::body::{emit_block, BfsDir, BodyCtx, Target};
+use super::body::{render_kernel_ops, KernelDialect};
 use super::buf::CodeBuf;
 use super::cexpr::{emit, sycl_style, Style};
 use super::{render_host_schedule, HostDialect};
-use crate::dsl::ast::{Block, Expr, Iterator_, Stmt};
+use crate::dsl::ast::{Expr, MinMax, ReduceOp};
 use crate::ir::plan::{DevicePlan, GraphArray, TypeMap};
-use crate::ir::IrProgram;
-use crate::sema::TypedFunction;
+use crate::ir::{IrProgram, ScalarTy};
 
 const TYPES: &TypeMap = &TypeMap::C;
+
+/// SYCL device dialect: Fig 8 / Fig 11 `atomic_ref` idioms.
+struct SyclKernel;
+
+impl SyclKernel {
+    fn atomic_ref_decl(buf: &mut CodeBuf, ty: ScalarTy, loc: &str) {
+        buf.line(&format!(
+            "atomic_ref<{t}, memory_order::relaxed, memory_scope::device, access::address_space::global_space> atomic_data({loc});",
+            t = TYPES.name(ty)
+        ));
+    }
+}
+
+impl KernelDialect for SyclKernel {
+    fn types(&self) -> &'static TypeMap {
+        TYPES
+    }
+
+    fn style(&self) -> Style {
+        sycl_style()
+    }
+
+    fn reduce(&self, buf: &mut CodeBuf, loc: &str, op: ReduceOp, ty: ScalarTy, val: &str) {
+        // Fig 8's atomic_ref idiom
+        Self::atomic_ref_decl(buf, ty, loc);
+        match op {
+            ReduceOp::Add | ReduceOp::Count => buf.line(&format!("atomic_data += {val};")),
+            ReduceOp::Mul => {
+                buf.line(&format!("atomic_data = atomic_data * {val}; // CAS loop"))
+            }
+            ReduceOp::And => buf.line(&format!("atomic_data &= {val};")),
+            ReduceOp::Or => buf.line(&format!("atomic_data |= {val};")),
+        }
+    }
+
+    fn min_max_update(&self, buf: &mut CodeBuf, kind: MinMax, loc: &str, tmp: &str, ty: ScalarTy) {
+        Self::atomic_ref_decl(buf, ty, loc);
+        buf.line(&format!(
+            "atomic_data.fetch_{}({tmp});",
+            if kind == MinMax::Min { "min" } else { "max" }
+        ));
+    }
+
+    fn set_or_flag(&self, buf: &mut CodeBuf) {
+        buf.line("*d_finished = false;");
+    }
+}
 
 /// Device member for one CSR array (the SYCL graph wrapper owns them).
 fn dev_arr(a: GraphArray) -> &'static str {
@@ -38,30 +85,17 @@ pub fn generate(ir: &IrProgram) -> String {
 
 /// Render with a pre-built plan ([`super::generate`] lowers once for all
 /// backends).
-pub(crate) fn generate_with(ir: &IrProgram, plan: &DevicePlan) -> String {
-    let mut g = Gen { tf: &ir.tf, plan, buf: CodeBuf::new() };
+pub(crate) fn generate_with(_ir: &IrProgram, plan: &DevicePlan) -> String {
+    let mut g = Gen { plan, buf: CodeBuf::new() };
     g.run()
 }
 
 struct Gen<'a> {
-    tf: &'a TypedFunction,
     plan: &'a DevicePlan,
     buf: CodeBuf,
 }
 
 impl<'a> Gen<'a> {
-    fn body_ctx(&self, bfs: Option<BfsDir>, or_flag: Option<&str>) -> BodyCtx<'a> {
-        BodyCtx {
-            tf: self.tf,
-            plan: self.plan,
-            types: TYPES,
-            style: sycl_style(),
-            target: Target::Sycl,
-            bfs,
-            or_flag: or_flag.map(str::to_string),
-        }
-    }
-
     fn run(&mut self) -> String {
         let plan = self.plan;
         let mut out = super::manifest_header("SYCL", plan);
@@ -159,32 +193,27 @@ impl<'a> HostDialect for Gen<'a> {
         self.close_parallel();
     }
 
-    fn launch(&mut self, kernel: usize, iter: &Iterator_, body: &[Stmt], or_flag: Option<&str>) {
+    fn launch(&mut self, kernel: usize, or_flag: Option<&str>) {
         let plan = self.plan;
         let k = &plan.kernels[kernel];
+        let body = k.body.as_ref().expect("forall kernel carries a lowered body");
+        let _ = or_flag; // lambdas capture d_finished; no parameter list
         for (r, _, _) in &k.reductions {
             self.buf.line(&format!("// device reduction cell for `{r}` (atomic_ref, Fig 8)"));
         }
-        self.open_parallel(&iter.var);
-        if let Some(f) = &iter.filter {
-            let fe = super::simplify_bool_cmp(&super::resolve_filter(f, &iter.var, self.tf));
-            self.buf.line(&format!("if (!({})) continue;", emit(&fe, &sycl_style())));
+        self.open_parallel(&body.thread_var);
+        if let Some(g) = &body.guard {
+            self.buf.line(&format!("if (!({})) continue;", emit(g, &sycl_style())));
         }
-        let cx = self.body_ctx(None, or_flag);
-        emit_block(body, &cx, &mut self.buf);
+        render_kernel_ops(&SyclKernel, plan, &body.ops, &mut self.buf);
         self.close_parallel();
     }
 
-    fn bfs(
-        &mut self,
-        index: usize,
-        var: &str,
-        from: &str,
-        body: &[Stmt],
-        reverse: Option<&(Expr, Block)>,
-    ) {
+    fn bfs(&mut self, index: usize, var: &str, from: &str) {
         let plan = self.plan;
         let b = &plan.bfs_loops[index];
+        let fbody =
+            plan.kernels[b.fwd].body.as_ref().expect("BFS forward sweep carries a lowered body");
         self.buf.line("// iterateInBFS: host do-while, level kernel per hop (§3.4)");
         if b.level.is_none() {
             // implicit level buffer (e.g. BC): owned by the skeleton
@@ -210,23 +239,24 @@ impl<'a> HostDialect for Gen<'a> {
         self.buf.line("*d_finished = false;");
         self.buf.close("}");
         self.buf.close("}");
-        let cx = self.body_ctx(Some(BfsDir::Forward), None);
-        emit_block(body, &cx, &mut self.buf);
+        render_kernel_ops(&SyclKernel, plan, &fbody.ops, &mut self.buf);
         self.buf.close("}");
         self.close_parallel();
         self.buf.line("++hops_from_source;");
         self.buf.line("Q.memcpy(&finished, d_finished, sizeof(bool)).wait();");
         self.buf.close("} while (!finished);");
-        if let Some((cond, rbody)) = reverse {
+        if let Some(ri) = b.rev {
+            let rbody =
+                plan.kernels[ri].body.as_ref().expect("BFS reverse sweep carries a lowered body");
             self.buf.line("// iterateInReverse: no grid.sync needed — one submit per");
             self.buf.line("// level, which is why SYCL wins on road networks (§5.2)");
             self.buf.open("while (--hops_from_source >= 0) {");
             self.open_parallel(var);
             self.buf.line(&format!("if (g.gpu_level[{var}] != hops_from_source) continue;"));
-            let ce = super::simplify_bool_cmp(&super::resolve_filter(cond, var, self.tf));
-            self.buf.line(&format!("if (!({})) continue;", emit(&ce, &sycl_style())));
-            let cx = self.body_ctx(Some(BfsDir::Reverse), None);
-            emit_block(rbody, &cx, &mut self.buf);
+            if let Some(g) = &rbody.guard {
+                self.buf.line(&format!("if (!({})) continue;", emit(g, &sycl_style())));
+            }
+            render_kernel_ops(&SyclKernel, plan, &rbody.ops, &mut self.buf);
             self.close_parallel();
             self.buf.close("}");
         }

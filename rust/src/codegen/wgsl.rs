@@ -1,0 +1,708 @@
+//! WebGPU/WGSL backend — the seventh text renderer and the proof that the
+//! [`crate::ir::kernel::KernelOp`] lowering is genuinely backend-neutral:
+//! WGSL is *not* a C dialect. There are no pointers into raw arrays, buffers
+//! are module-scope `var<storage>` bindings addressed by `@group/@binding`
+//! indices, declarations spell `var x : i32 = e;`, scalars arrive through a
+//! uniform struct instead of by-value parameters, and atomics are
+//! `atomic<i32>` element types — a buffer's declaration changes when any
+//! kernel updates it atomically ([`KernelPlan::atomic_props`]). None of that
+//! fits a walker whose dialect hooks assume `type name = init;` and
+//! `&array[i]` spellings, which is exactly why the old per-`Target` match in
+//! `codegen/body.rs` could never have produced this file.
+//!
+//! Layout mirrors the OpenCL split: one WGSL *module per kernel* (WebGPU
+//! binds a pipeline per entry point; per-module bindings let each kernel's
+//! `@binding` indices follow the plan's canonical parameter order — binding
+//! 0 is the uniform params struct, then graph CSR arrays, property buffers
+//! in slot order, reduction cells, and the fixedPoint OR-flag word), then a
+//! host section written against the Dawn/webgpu_cpp API (`wgpu::Device`,
+//! `queue.WriteBuffer`, compute-pass dispatches; `makeStorageBuffer` /
+//! `readBuffer` / `fillBuffer` / `pipelineFor` / `bindGroupFor` helpers live
+//! in `libstarplat_webgpu.h` — WebGPU readbacks are MapAsync ceremonies the
+//! generated skeleton should not repeat at every site).
+//!
+//! Spelling notes (WGSL):
+//! - 32-bit scalars only; `long` and `double` demote ([`TypeMap::WGSL`]),
+//!   and `bool` buffers are `i32` words (bool is not host-shareable);
+//! - `INF` is the literal `2147483647`;
+//! - f32 reductions go through an emitted `atomicAddF32` helper (WGSL has
+//!   i32/u32 atomics only — the §3.3 OpenCL float-atomics story again).
+
+use super::body::{render_kernel_ops, KernelDialect};
+use super::buf::CodeBuf;
+use super::cexpr::{emit, wgsl_style, Style};
+use super::{render_host_schedule, HostDialect};
+use crate::dsl::ast::{Expr, MinMax, ReduceOp};
+use crate::ir::kernel::KernelOp;
+use crate::ir::plan::{DevicePlan, KernelParam, KernelPlan, TypeMap};
+use crate::ir::{IrProgram, ScalarTy};
+use std::collections::HashSet;
+
+/// Host-side C++ sizes (bool props are `int` words on the device).
+const HOST: &TypeMap = &TypeMap::OPENCL;
+/// Device-side WGSL types.
+const DEV: &TypeMap = &TypeMap::WGSL;
+
+/// Is this type's buffer representable as `atomic<i32>`? (f32 atomics are
+/// emulated through helpers on plain buffers instead.)
+fn i32_atomic(ty: ScalarTy) -> bool {
+    !matches!(ty, ScalarTy::F32 | ScalarTy::F64)
+}
+
+/// WGSL device dialect. `atomic` holds the i32-representable props this
+/// kernel updates atomically — their buffers are `array<atomic<i32>>`, so
+/// plain reads wrap in `atomicLoad` and plain stores in `atomicStore`.
+struct WgslKernel {
+    atomic: HashSet<String>,
+}
+
+impl WgslKernel {
+    fn for_kernel(plan: &DevicePlan, k: &KernelPlan) -> WgslKernel {
+        WgslKernel {
+            atomic: k
+                .atomic_props
+                .iter()
+                .filter(|&&s| i32_atomic(plan.meta(s).ty))
+                .map(|&s| plan.prop_name(s).to_string())
+                .collect(),
+        }
+    }
+}
+
+impl KernelDialect for WgslKernel {
+    fn types(&self) -> &'static TypeMap {
+        DEV
+    }
+
+    fn style(&self) -> Style {
+        wgsl_style(self.atomic.clone())
+    }
+
+    fn decl(&self, buf: &mut CodeBuf, ty: ScalarTy, name: &str, init: Option<&str>) {
+        let t = self.types().name(ty);
+        match init {
+            Some(e) => buf.line(&format!("var {name} : {t} = {e};")),
+            None => buf.line(&format!("var {name} : {t};")),
+        }
+    }
+
+    fn store(&self, buf: &mut CodeBuf, loc: &str, value: &str, atomic: bool) {
+        if atomic {
+            buf.line(&format!("atomicStore(&{loc}, {value});"));
+        } else {
+            buf.line(&format!("{loc} = {value};"));
+        }
+    }
+
+    fn reduce(&self, buf: &mut CodeBuf, loc: &str, op: ReduceOp, ty: ScalarTy, val: &str) {
+        match (op, ty) {
+            (ReduceOp::Add | ReduceOp::Count, ScalarTy::F32 | ScalarTy::F64) => {
+                // WGSL atomics are i32/u32 only (§3.3's float story again)
+                buf.line(&format!("atomicAddF32(&{loc}, {val});"));
+            }
+            (ReduceOp::Add | ReduceOp::Count, _) => {
+                buf.line(&format!("atomicAdd(&{loc}, {val});"))
+            }
+            (ReduceOp::Mul, _) => buf.line(&format!("atomicMulCAS(&{loc}, {val});")),
+            (ReduceOp::And, _) => buf.line(&format!("atomicAnd(&{loc}, {val});")),
+            (ReduceOp::Or, _) => buf.line(&format!("atomicOr(&{loc}, {val});")),
+        }
+    }
+
+    fn min_max_update(&self, buf: &mut CodeBuf, kind: MinMax, loc: &str, tmp: &str, ty: ScalarTy) {
+        let sym = if kind == MinMax::Min { "Min" } else { "Max" };
+        if i32_atomic(ty) {
+            buf.line(&format!("atomic{sym}(&{loc}, {tmp});"));
+        } else {
+            buf.line(&format!("atomic{sym}F32(&{loc}, {tmp});"));
+        }
+    }
+
+    fn set_or_flag(&self, buf: &mut CodeBuf) {
+        buf.line("atomicStore(&gpu_finished[0], 0);");
+    }
+
+    fn neighbor_loop_open(&self, buf: &mut CodeBuf, var: &str, of: &str, reverse: bool) {
+        let st = self.style();
+        let (off, list) =
+            if reverse { (st.rev_offsets, st.src_list) } else { (st.offsets, st.edge_list) };
+        buf.open(&format!(
+            "for (var edge : i32 = {off}[{of}]; edge < {off}[{of} + 1]; edge++) {{"
+        ));
+        buf.line(&format!("let {var} = {list}[edge];"));
+    }
+}
+
+/// Shader helpers one kernel's ops require.
+#[derive(Default)]
+struct Needs {
+    f32_atomics: bool,
+    f32_min: bool,
+    f32_max: bool,
+    mul_cas: bool,
+    edge_lookup: bool,
+}
+
+fn scan_expr(e: &Expr, needs: &mut Needs) {
+    match e {
+        Expr::Call { name, args, .. } => {
+            if name == "is_an_edge" {
+                needs.edge_lookup = true;
+            }
+            for a in args {
+                scan_expr(a, needs);
+            }
+        }
+        Expr::Unary { expr, .. } => scan_expr(expr, needs),
+        Expr::Binary { lhs, rhs, .. } => {
+            scan_expr(lhs, needs);
+            scan_expr(rhs, needs);
+        }
+        _ => {}
+    }
+}
+
+fn scan_ops(ops: &[KernelOp], needs: &mut Needs) {
+    for op in ops {
+        op.visit(&mut |o| match o {
+            KernelOp::Decl { init, .. } => {
+                if let Some(e) = init {
+                    scan_expr(e, needs);
+                }
+            }
+            KernelOp::AssignVar { value, .. } | KernelOp::AssignProp { value, .. } => {
+                scan_expr(value, needs)
+            }
+            KernelOp::Reduce { op, ty, value, .. } => {
+                match (op, ty) {
+                    (ReduceOp::Add | ReduceOp::Count, ScalarTy::F32 | ScalarTy::F64) => {
+                        needs.f32_atomics = true
+                    }
+                    (ReduceOp::Mul, _) => needs.mul_cas = true,
+                    _ => {}
+                }
+                scan_expr(value, needs);
+            }
+            KernelOp::MinMax { kind, ty, compare, extra, .. } => {
+                if !i32_atomic(*ty) {
+                    match kind {
+                        MinMax::Min => needs.f32_min = true,
+                        MinMax::Max => needs.f32_max = true,
+                    }
+                }
+                scan_expr(compare, needs);
+                for (_, v) in extra {
+                    scan_expr(v, needs);
+                }
+            }
+            KernelOp::NeighborLoop { filter, .. } => {
+                if let Some(f) = filter {
+                    scan_expr(f, needs);
+                }
+            }
+            KernelOp::If { cond, .. } => scan_expr(cond, needs),
+            _ => {}
+        });
+    }
+}
+
+pub fn generate(ir: &IrProgram) -> String {
+    generate_with(ir, &DevicePlan::build(ir))
+}
+
+/// Render with a pre-built plan ([`super::generate`] lowers once for all
+/// backends).
+pub(crate) fn generate_with(_ir: &IrProgram, plan: &DevicePlan) -> String {
+    let mut g = Gen { plan, shaders: CodeBuf::new(), host: CodeBuf::new(), dispatch_id: 0 };
+    g.run()
+}
+
+/// The uniform-struct fields and storage bindings of one WGSL module, in
+/// binding order (binding 0 is the uniform).
+struct Layout {
+    /// (field name, host C type) pairs for the params struct
+    uniform: Vec<(String, &'static str)>,
+    /// (buffer name, element type, read-only) per storage binding
+    storage: Vec<(String, String, bool)>,
+}
+
+struct Gen<'a> {
+    plan: &'a DevicePlan,
+    shaders: CodeBuf,
+    host: CodeBuf,
+    /// monotonic dispatch-site counter: uniform-staging locals get unique
+    /// names so repeated launch sites never shadow one another
+    dispatch_id: usize,
+}
+
+impl<'a> Gen<'a> {
+    fn run(&mut self) -> String {
+        let plan = self.plan;
+        self.shaders.line("// ---- shaders.wgsl (one module per kernel/pipeline) ----");
+        self.shaders.line("");
+        self.host.line("// ---- host.cpp (Dawn / webgpu_cpp.h) ----");
+        self.host.line("#include <webgpu/webgpu_cpp.h>");
+        self.host.line("#include <climits>");
+        self.host.line("#include \"libstarplat_webgpu.h\"");
+        self.host.line("");
+        let params = plan.host_signature(&TypeMap::C);
+        self.host.open(&format!("void {}({}) {{", plan.func, params.join(", ")));
+        render_host_schedule(self, &plan.host_ops, None);
+        self.host.close("}");
+
+        let mut out = super::manifest_header("WGSL", plan);
+        out.push('\n');
+        out.push_str(&std::mem::take(&mut self.shaders).finish());
+        out.push_str(&std::mem::take(&mut self.host).finish());
+        out
+    }
+
+    /// Map the plan's canonical parameter list onto a WGSL module layout:
+    /// `V` and by-value scalars fold into the binding-0 uniform; everything
+    /// else is a storage buffer in canonical order.
+    fn layout(&self, params: &[KernelParam], atomic: &[u32]) -> Layout {
+        let mut uniform = vec![("V".to_string(), HOST.name(ScalarTy::I32))];
+        let mut storage = Vec::new();
+        for p in params {
+            match p {
+                KernelParam::NumNodes => {}
+                KernelParam::Scalar { name, ty } => uniform.push((name.clone(), HOST.name(*ty))),
+                KernelParam::Graph(a) => {
+                    storage.push((a.device_name().to_string(), "i32".to_string(), true))
+                }
+                KernelParam::Prop(s) => {
+                    let m = self.plan.meta(*s);
+                    let elem = if atomic.contains(s) && i32_atomic(m.ty) {
+                        "atomic<i32>".to_string()
+                    } else {
+                        DEV.name(m.ty).to_string()
+                    };
+                    storage.push((format!("gpu_{}", m.name), elem, false));
+                }
+                KernelParam::ReductionCell { name, ty } => {
+                    let elem = if i32_atomic(*ty) { "atomic<i32>" } else { DEV.name(*ty) };
+                    storage.push((format!("d_{name}"), elem.to_string(), false));
+                }
+                KernelParam::OrFlag => {
+                    storage.push(("gpu_finished".to_string(), "atomic<i32>".to_string(), false))
+                }
+            }
+        }
+        Layout { uniform, storage }
+    }
+
+    /// Emit one complete WGSL module: params struct, bindings, helpers, and
+    /// the `@compute` entry point around `body_lines`.
+    #[allow(clippy::too_many_arguments)]
+    fn shader_module(
+        &mut self,
+        name: &str,
+        layout: &Layout,
+        needs: &Needs,
+        thread_var: &str,
+        guard: Option<&str>,
+        prelude: impl FnOnce(&mut CodeBuf),
+    ) {
+        let b = &mut self.shaders;
+        b.line(&format!("// shader module: {name}"));
+        b.open("struct Params {");
+        for (f, cty) in &layout.uniform {
+            let wty = match *cty {
+                "float" | "double" => "f32",
+                _ => "i32",
+            };
+            b.line(&format!("{f} : {wty},"));
+        }
+        b.close("}");
+        b.line("@group(0) @binding(0) var<uniform> params : Params;");
+        for (i, (bname, elem, ro)) in layout.storage.iter().enumerate() {
+            let access = if *ro { "read" } else { "read_write" };
+            b.line(&format!(
+                "@group(0) @binding({}) var<storage, {access}> {bname} : array<{elem}>;",
+                i + 1
+            ));
+        }
+        b.line("");
+        if needs.edge_lookup {
+            b.open("fn findNeighborSorted(u : i32, w : i32) -> bool {");
+            b.line("var lo = gpu_OA[u];");
+            b.line("var hi = gpu_OA[u + 1] - 1;");
+            b.open("while (lo <= hi) {");
+            b.line("let mid = (lo + hi) / 2;");
+            b.line("if (gpu_edgeList[mid] == w) { return true; }");
+            b.line("if (gpu_edgeList[mid] < w) { lo = mid + 1; } else { hi = mid - 1; }");
+            b.close("}");
+            b.line("return false;");
+            b.close("}");
+            b.line("");
+        }
+        if needs.f32_atomics || needs.f32_min || needs.f32_max {
+            b.line("// WGSL atomics are i32/u32-only: f32 updates are emulated");
+            b.line("// (production builds bitcast through atomic<u32> CAS)");
+        }
+        if needs.f32_atomics {
+            b.open("fn atomicAddF32(cell : ptr<storage, f32, read_write>, value : f32) {");
+            b.line("*cell = *cell + value;");
+            b.close("}");
+            b.line("");
+        }
+        if needs.f32_min {
+            b.open("fn atomicMinF32(cell : ptr<storage, f32, read_write>, value : f32) {");
+            b.line("if (value < *cell) { *cell = value; }");
+            b.close("}");
+            b.line("");
+        }
+        if needs.f32_max {
+            b.open("fn atomicMaxF32(cell : ptr<storage, f32, read_write>, value : f32) {");
+            b.line("if (value > *cell) { *cell = value; }");
+            b.close("}");
+            b.line("");
+        }
+        if needs.mul_cas {
+            b.open("fn atomicMulCAS(cell : ptr<storage, atomic<i32>, read_write>, value : i32) {");
+            b.open("loop {");
+            b.line("let old = atomicLoad(cell);");
+            b.line(
+                "if (atomicCompareExchangeWeak(cell, old, old * value).exchanged) { break; }",
+            );
+            b.close("}");
+            b.close("}");
+            b.line("");
+        }
+        b.line("@compute @workgroup_size(256)");
+        b.open(&format!("fn {name}(@builtin(global_invocation_id) gid : vec3<u32>) {{"));
+        b.line(&format!("let {thread_var} = i32(gid.x);"));
+        for (f, _) in &layout.uniform {
+            b.line(&format!("let {f} = params.{f};"));
+        }
+        b.line(&format!("if ({thread_var} >= V) {{ return; }}"));
+        if let Some(g) = guard {
+            // bool() absorbs both bool comparisons and i32 flag words
+            b.line(&format!("if (!bool({g})) {{ return; }}"));
+        }
+        prelude(b);
+        b.close("}");
+        b.line("");
+    }
+
+    /// Host-side dispatch of one pipeline: build the uniform, the bind
+    /// group (binding order = layout order), one compute pass. Scoped so
+    /// loop-body launch sites don't redeclare locals.
+    fn dispatch(&mut self, name: &str, layout: &Layout) {
+        let id = self.dispatch_id;
+        self.dispatch_id += 1;
+        self.host.open("{");
+        let fields: Vec<String> =
+            layout.uniform.iter().map(|(f, cty)| format!("{cty} {f};")).collect();
+        let inits: Vec<String> = layout.uniform.iter().map(|(f, _)| f.clone()).collect();
+        self.host.line(&format!(
+            "struct {{ {} }} params_{id} = {{ {} }};",
+            fields.join(" "),
+            inits.join(", ")
+        ));
+        self.host.line(&format!(
+            "wgpu::Buffer params_buf_{id} = makeUniformBuffer(device, &params_{id}, sizeof(params_{id}));"
+        ));
+        let mut group = vec![format!("params_buf_{id}")];
+        group.extend(layout.storage.iter().map(|(n, _, _)| n.clone()));
+        self.host.line("wgpu::CommandEncoder enc = device.CreateCommandEncoder();");
+        self.host.line("wgpu::ComputePassEncoder pass = enc.BeginComputePass();");
+        self.host.line(&format!("pass.SetPipeline(pipelineFor(device, \"{name}\"));"));
+        self.host.line(&format!(
+            "pass.SetBindGroup(0, bindGroupFor(device, \"{name}\", {{ {} }}));",
+            group.join(", ")
+        ));
+        self.host.line("pass.DispatchWorkgroups(numWorkgroups, 1, 1);");
+        self.host.line("pass.End();");
+        self.host.line("wgpu::CommandBuffer cb = enc.Finish();");
+        self.host.line("queue.Submit(1, &cb);");
+        self.host.line(&format!("params_buf_{id}.Destroy();"));
+        self.host.close("}");
+    }
+}
+
+impl<'a> HostDialect for Gen<'a> {
+    fn expr_style(&self) -> Style {
+        // host code is C++ against Dawn: C literals, CUDA-style buffer names
+        super::cexpr::cuda_style()
+    }
+
+    fn buf(&mut self) -> &mut CodeBuf {
+        &mut self.host
+    }
+
+    fn decl_dims(&mut self) {
+        self.host.line("wgpu::Device device = requestDevice();");
+        self.host.line("wgpu::Queue queue = device.GetQueue();");
+        self.host.line("int V = g.num_nodes();");
+        self.host.line("int E = g.num_edges();");
+        self.host.line("");
+    }
+
+    fn graph_to_device(&mut self) {
+        self.host.line("// §4.1: the static graph is copied to the device once, never back");
+        for &arr in &self.plan.graph_arrays {
+            let (dev, host, len) = (arr.device_name(), arr.host_name(), arr.len_sym());
+            self.host.line(&format!(
+                "wgpu::Buffer {dev} = makeStorageBuffer(device, sizeof(int) * {len});"
+            ));
+            self.host
+                .line(&format!("queue.WriteBuffer({dev}, 0, {host}, sizeof(int) * {len});"));
+        }
+    }
+
+    fn alloc_prop(&mut self, slot: u32) {
+        let m = self.plan.meta(slot);
+        let ty = HOST.name(m.ty);
+        let len = m.len_sym();
+        self.host.line(&format!(
+            "wgpu::Buffer gpu_{} = makeStorageBuffer(device, sizeof({ty}) * {len});",
+            m.name
+        ));
+    }
+
+    fn alloc_flag(&mut self) {
+        self.host
+            .line("wgpu::Buffer gpu_finished = makeStorageBuffer(device, sizeof(int));");
+    }
+
+    fn launch_setup(&mut self) {
+        self.host.line("");
+        self.host.line("unsigned workgroupSize = 256;");
+        self.host.line("unsigned numWorkgroups = (V + workgroupSize - 1) / workgroupSize;");
+        self.host.line("");
+    }
+
+    fn copy_prop(&mut self, dst: u32, src: u32) {
+        let ty = HOST.name(self.plan.meta(dst).ty);
+        self.host.open("{");
+        self.host.line("wgpu::CommandEncoder enc = device.CreateCommandEncoder();");
+        self.host.line(&format!(
+            "enc.CopyBufferToBuffer(gpu_{}, 0, gpu_{}, 0, sizeof({ty}) * V);",
+            self.plan.prop_name(src),
+            self.plan.prop_name(dst)
+        ));
+        self.host.line("wgpu::CommandBuffer cb = enc.Finish();");
+        self.host.line("queue.Submit(1, &cb);");
+        self.host.close("}");
+    }
+
+    fn set_element(&mut self, slot: u32, index: &str, value: &Expr) {
+        let m = self.plan.meta(slot);
+        let ty = HOST.name(m.ty);
+        let val = emit(value, &self.expr_style());
+        self.host.open("{");
+        self.host.line(&format!("{ty} element = ({ty}){val};"));
+        self.host.line(&format!(
+            "queue.WriteBuffer(gpu_{}, {index} * sizeof({ty}), &element, sizeof({ty}));",
+            m.name
+        ));
+        self.host.close("}");
+    }
+
+    fn init_props(&mut self, _kernel: usize, inits: &[(u32, Expr)]) {
+        for (slot, e) in inits {
+            let m = self.plan.meta(*slot);
+            let ty = HOST.name(m.ty);
+            let v = emit(e, &self.expr_style());
+            self.host.line(&format!(
+                "fillBuffer(device, queue, gpu_{}, V, ({ty}){v});",
+                m.name
+            ));
+        }
+    }
+
+    fn launch(&mut self, kernel: usize, or_flag: Option<&str>) {
+        let plan = self.plan;
+        let k: &KernelPlan = &plan.kernels[kernel];
+        let body = k.body.as_ref().expect("forall kernel carries a lowered body");
+        let params = k.params(or_flag.is_some());
+        let layout = self.layout(&params, &k.atomic_props);
+        let dialect = WgslKernel::for_kernel(plan, k);
+        let mut needs = Needs::default();
+        scan_ops(&body.ops, &mut needs);
+        if let Some(g) = &body.guard {
+            scan_expr(g, &mut needs);
+        }
+        let guard = body.guard.as_ref().map(|g| emit(g, &dialect.style()));
+        // shader module
+        let name = k.name.clone();
+        let tv = body.thread_var.clone();
+        let ops = &body.ops;
+        self.shader_module(&name, &layout, &needs, &tv, guard.as_deref(), |buf| {
+            render_kernel_ops(&dialect, plan, ops, buf)
+        });
+        // ---- launch site ----
+        for &c in &k.copy_in {
+            let m = self.plan.meta(c);
+            let ty = HOST.name(m.ty);
+            let len = m.len_sym();
+            self.host.line(&format!(
+                "// copy-in (§4.1 analysis): {} is read before first device write",
+                m.name
+            ));
+            self.host
+                .line(&format!("queue.WriteBuffer(gpu_{n}, 0, {n}, sizeof({ty}) * {len});", n = m.name));
+        }
+        for (r, _, ty) in &k.reductions {
+            let t = HOST.name(*ty);
+            self.host.line(&format!("// device reduction cell for `{r}` (§3.3)"));
+            self.host
+                .line(&format!("wgpu::Buffer d_{r} = makeStorageBuffer(device, sizeof({t}));"));
+            self.host.line(&format!("queue.WriteBuffer(d_{r}, 0, &{r}, sizeof({t}));"));
+        }
+        self.dispatch(&name, &layout);
+        for (r, _, ty) in &k.reductions {
+            let t = HOST.name(*ty);
+            self.host.line(&format!("readBuffer(device, queue, d_{r}, &{r}, sizeof({t}));"));
+            self.host.line(&format!("d_{r}.Destroy();"));
+        }
+        if !k.defer_to_loop_exit {
+            for &c in &k.copy_out {
+                let m = self.plan.meta(c);
+                let ty = HOST.name(m.ty);
+                let len = m.len_sym();
+                self.host.line(&format!(
+                    "readBuffer(device, queue, gpu_{n}, {n}, sizeof({ty}) * {len});",
+                    n = m.name
+                ));
+            }
+        }
+    }
+
+    fn bfs(&mut self, index: usize, var: &str, from: &str) {
+        let plan = self.plan;
+        let b = &plan.bfs_loops[index];
+        let fwd = &plan.kernels[b.fwd];
+        let fbody = fwd.body.as_ref().expect("BFS forward sweep carries a lowered body");
+        let lt = b.level.map(|s| self.plan.c_ty(s, DEV)).unwrap_or("i32");
+        let params = fwd.bfs_params(b.level);
+        let mut layout = self.layout(&params, &fwd.atomic_props);
+        layout.uniform.push(("hops_from_source".to_string(), "int"));
+        layout.storage.push(("gpu_level".to_string(), lt.to_string(), false));
+        layout.storage.push(("d_finished".to_string(), "i32".to_string(), false));
+        let dialect = WgslKernel::for_kernel(plan, fwd);
+        let mut needs = Needs::default();
+        scan_ops(&fbody.ops, &mut needs);
+        let fname = fwd.name.clone();
+        let ops = &fbody.ops;
+        self.shader_module(&fname, &layout, &needs, var, None, |buf| {
+            buf.open(&format!("if (gpu_level[{var}] == hops_from_source) {{"));
+            buf.open(&format!(
+                "for (var i : i32 = gpu_OA[{var}]; i < gpu_OA[{var} + 1]; i++) {{"
+            ));
+            buf.line("let nbr = gpu_edgeList[i];");
+            buf.open("if (gpu_level[nbr] == -1) {");
+            buf.line("gpu_level[nbr] = hops_from_source + 1;");
+            buf.line("d_finished[0] = 0;");
+            buf.close("}");
+            buf.close("}");
+            render_kernel_ops(&dialect, plan, ops, buf);
+            buf.close("}");
+        });
+        // host loop (Fig 9)
+        self.host.line("// iterateInBFS: level-synchronous host loop (Fig 9)");
+        if b.level.is_none() {
+            self.host
+                .line("wgpu::Buffer gpu_level = makeStorageBuffer(device, sizeof(int) * V);");
+        }
+        self.host.line("wgpu::Buffer d_finished = makeStorageBuffer(device, sizeof(int));");
+        self.host.line("fillBuffer(device, queue, gpu_level, V, -1);");
+        self.host.open("{");
+        self.host.line("int element = 0;");
+        self.host.line(&format!(
+            "queue.WriteBuffer(gpu_level, {from} * sizeof(int), &element, sizeof(int));"
+        ));
+        self.host.close("}");
+        self.host.line("int hops_from_source = 0;");
+        self.host.line("int finished_word;");
+        self.host.open("do {");
+        self.host.line("finished_word = 1;");
+        self.host.line("queue.WriteBuffer(d_finished, 0, &finished_word, sizeof(int));");
+        self.dispatch(&fname, &layout);
+        self.host.line("++hops_from_source;");
+        self.host.line("readBuffer(device, queue, d_finished, &finished_word, sizeof(int));");
+        self.host.close("} while (!finished_word);");
+        if let Some(ri) = b.rev {
+            let rk = &plan.kernels[ri];
+            let rbody = rk.body.as_ref().expect("BFS reverse sweep carries a lowered body");
+            let rparams = rk.bfs_params(b.level);
+            let mut rlayout = self.layout(&rparams, &rk.atomic_props);
+            rlayout.uniform.push(("hops_from_source".to_string(), "int"));
+            rlayout.storage.push(("gpu_level".to_string(), lt.to_string(), false));
+            let rdialect = WgslKernel::for_kernel(plan, rk);
+            let mut rneeds = Needs::default();
+            scan_ops(&rbody.ops, &mut rneeds);
+            if let Some(g) = &rbody.guard {
+                scan_expr(g, &mut rneeds);
+            }
+            let rguard = rbody.guard.as_ref().map(|g| emit(g, &rdialect.style()));
+            let rname = rk.name.clone();
+            let rops = &rbody.ops;
+            self.shader_module(&rname, &rlayout, &rneeds, var, None, |buf| {
+                buf.line(&format!(
+                    "if (gpu_level[{var}] != hops_from_source) {{ return; }}"
+                ));
+                if let Some(g) = &rguard {
+                    buf.line(&format!("if (!bool({g})) {{ return; }}"));
+                }
+                render_kernel_ops(&rdialect, plan, rops, buf);
+            });
+            self.host.line("// iterateInReverse: walk the BFS levels backwards");
+            self.host.open("while (--hops_from_source >= 0) {");
+            self.dispatch(&rname, &rlayout);
+            self.host.close("}");
+        }
+        // skeleton-owned buffers are created at the BFS site: destroy here
+        self.host.line("d_finished.Destroy();");
+        if b.level.is_none() {
+            self.host.line("gpu_level.Destroy();");
+        }
+    }
+
+    fn fixed_point_enter(&mut self, index: usize, var: &str) -> String {
+        let flag = self.plan.fixed_points[index].flag_name.clone();
+        self.host.line(&format!("// fixedPoint on `{flag}` via a single device flag word (§4.1)"));
+        self.host.line(&format!("bool {var} = false;"));
+        self.host.open(&format!("while (!{var}) {{"));
+        self.host.line(&format!("{var} = true;"));
+        self.host.line("int finished_word = 1;");
+        self.host.line("queue.WriteBuffer(gpu_finished, 0, &finished_word, sizeof(int));");
+        flag
+    }
+
+    fn fixed_point_exit(&mut self, var: &str) {
+        self.host.line("readBuffer(device, queue, gpu_finished, &finished_word, sizeof(int));");
+        self.host.line(&format!("{var} = finished_word != 0;"));
+        self.host.close("}");
+    }
+
+    fn epilogue_begin(&mut self) {
+        self.host.line("");
+        self.host.line("// §4.1: only updated vertex attributes return to the host");
+    }
+
+    fn copy_out(&mut self, slot: u32) {
+        let m = self.plan.meta(slot);
+        let ty = HOST.name(m.ty);
+        let len = m.len_sym();
+        self.host.line(&format!(
+            "readBuffer(device, queue, gpu_{n}, {n}, sizeof({ty}) * {len});",
+            n = m.name
+        ));
+    }
+
+    fn free_prop(&mut self, slot: u32) {
+        self.host.line(&format!("gpu_{}.Destroy();", self.plan.prop_name(slot)));
+    }
+
+    fn free_flag(&mut self) {
+        self.host.line("gpu_finished.Destroy();");
+    }
+
+    fn free_graph(&mut self) {
+        for &arr in &self.plan.graph_arrays {
+            self.host.line(&format!("{}.Destroy();", arr.device_name()));
+        }
+    }
+}

@@ -1,0 +1,494 @@
+//! Backend-neutral kernel-body IR: the device-side twin of the
+//! [`crate::ir::plan::HostOp`] schedule.
+//!
+//! Before this layer existed, every text backend re-walked the typed AST for
+//! kernel *bodies*, and `codegen/body.rs` dispatched atomics, Min/Max, and
+//! neighbor-loop idioms through hardcoded per-`Target` match arms. That shape
+//! could only express C-family targets: a backend whose syntax is not "C with
+//! different API names" (WGSL's `var<storage>` bindings, Metal's
+//! `atomic_fetch_*_explicit`) had nowhere to hang its spellings.
+//!
+//! [`lower_kernel_body`] resolves each kernel body exactly once — in
+//! [`crate::ir::plan::DevicePlan::build`], alongside the host lowering — into
+//! a typed [`KernelOp`] tree:
+//!
+//! - property stores and atomic reductions carry their **slot** and
+//!   [`ScalarTy`], so a dialect picks its atomics idiom from the type instead
+//!   of re-deriving it from the AST;
+//! - neighbor loops are structured CSR / reverse-CSR scans with the §3.4
+//!   BFS-DAG level filter and the `.filter(...)` guard as *resolved
+//!   conditions* (see [`resolve_filter`] / [`simplify_bool_cmp`]), not
+//!   pre-rendered strings;
+//! - the §3.5 Min/Max construct keeps its extra conditional updates and
+//!   records whether a winning update must also clear the enclosing
+//!   fixedPoint's OR-flag (§4.1) — context that used to be threaded through
+//!   every renderer at render time.
+//!
+//! The tree is carried on [`crate::ir::plan::KernelPlan::body`] and rendered
+//! by the one `codegen::body::render_kernel_ops` driver through a backend's
+//! `KernelDialect` spelling table. `HostOp::Launch` / `HostOp::Bfs` no longer
+//! carry AST; renderers never see `dsl::ast::Stmt` at all.
+
+use crate::dsl::ast::{Expr, IterSource, LValue, MinMax, ReduceOp, Stmt};
+use crate::ir::analyze::as_reduction;
+use crate::ir::plan::PropTable;
+use crate::ir::ScalarTy;
+use crate::sema::TypedFunction;
+
+/// Which sweep of `iterateInBFS` a neighbor loop sits in. Both directions
+/// restrict neighbor iteration to BFS-DAG children (`level[nbr] ==
+/// level[v] + 1`); the reverse sweep walks the *vertices* backwards by level
+/// (host loop), not the edges, so the per-edge filter is shared.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum BfsDir {
+    Forward,
+    Reverse,
+}
+
+/// The device cell an atomic reduction lands in.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KCell {
+    /// one element of a property buffer: `dist[nbr]`
+    Prop { slot: u32, obj: String },
+    /// a single-word scalar reduction cell (`d_diff`, `d_triangle_count`)
+    Cell { name: String },
+}
+
+/// An assignment target inside a kernel (Min/Max extras, plain stores).
+#[derive(Clone, Debug, PartialEq)]
+pub enum KTarget {
+    Var(String),
+    Prop { slot: u32, obj: String },
+}
+
+/// One backend-neutral device-side operation. Expressions stay as
+/// [`Expr`] trees (spelled per backend by `codegen::cexpr`); everything
+/// *structural* — loop shape, guards, atomicity, types, slots — is resolved
+/// here, once.
+#[derive(Clone, Debug, PartialEq)]
+pub enum KernelOp {
+    /// kernel-local declaration (`int e = edge;`, `float sum = 0.0;`)
+    Decl { name: String, ty: ScalarTy, init: Option<Expr> },
+    /// plain scalar store
+    AssignVar { name: String, value: Expr },
+    /// plain property store (`level[w] = level[v] + 1`)
+    AssignProp { slot: u32, obj: String, value: Expr },
+    /// atomic reduction into a cell, tagged with the value's machine type
+    /// (drives float-atomics emulation on backends without them, §3.3)
+    Reduce { cell: KCell, op: ReduceOp, ty: ScalarTy, value: Expr },
+    /// §3.5 Min/Max construct: compare-and-update one property element plus
+    /// extra stores applied only when the Min/Max wins; `or_flag` marks that
+    /// a win also clears the enclosing fixedPoint's convergence flag (§4.1)
+    MinMax {
+        kind: MinMax,
+        slot: u32,
+        obj: String,
+        ty: ScalarTy,
+        compare: Expr,
+        extra: Vec<(KTarget, Expr)>,
+        or_flag: bool,
+    },
+    /// CSR (`reverse: false`) or reverse-CSR (`reverse: true`) neighbor scan.
+    /// `bfs` restricts iteration to BFS-DAG children (§3.4); `filter` is the
+    /// `.filter(...)` guard, already resolved against the loop variable.
+    NeighborLoop {
+        var: String,
+        of: String,
+        reverse: bool,
+        bfs: Option<BfsDir>,
+        filter: Option<Expr>,
+        body: Vec<KernelOp>,
+    },
+    If { cond: Expr, then: Vec<KernelOp>, els: Option<Vec<KernelOp>> },
+    /// construct no device backend supports (rendered as a comment)
+    Unsupported { what: String },
+}
+
+impl KernelOp {
+    /// Depth-first visit of this op and everything nested under it.
+    pub fn visit(&self, f: &mut impl FnMut(&KernelOp)) {
+        f(self);
+        match self {
+            KernelOp::NeighborLoop { body, .. } => {
+                for op in body {
+                    op.visit(f);
+                }
+            }
+            KernelOp::If { then, els, .. } => {
+                for op in then {
+                    op.visit(f);
+                }
+                if let Some(e) = els {
+                    for op in e {
+                        op.visit(f);
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+/// The complete lowered body of one device kernel: the thread-index variable
+/// the surrounding emitter binds, the forall's own `.filter(...)` guard
+/// (resolved and simplified — the thread early-out), and the op tree.
+#[derive(Clone, Debug, PartialEq)]
+pub struct KernelBody {
+    pub thread_var: String,
+    pub guard: Option<Expr>,
+    pub ops: Vec<KernelOp>,
+}
+
+impl KernelBody {
+    /// Property slots this body updates atomically (Reduce / MinMax
+    /// targets), sorted. Dialects with typed atomics (Metal's `atomic_int`
+    /// buffers, WGSL's `array<atomic<i32>>`) declare these differently and
+    /// wrap their plain reads in atomic loads.
+    pub fn atomic_prop_slots(&self) -> Vec<u32> {
+        let mut out = Vec::new();
+        for op in &self.ops {
+            op.visit(&mut |o| match o {
+                KernelOp::Reduce { cell: KCell::Prop { slot, .. }, .. } => out.push(*slot),
+                KernelOp::MinMax { slot, .. } => out.push(*slot),
+                _ => {}
+            });
+        }
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+}
+
+/// Context for one kernel-body lowering.
+pub(crate) struct KernelLower<'a> {
+    pub tf: &'a TypedFunction,
+    pub props: &'a PropTable,
+    /// inside iterateInBFS / iterateInReverse (adds the §3.4 level filter)
+    pub bfs: Option<BfsDir>,
+    /// launch site sits inside a fixedPoint: Min/Max wins clear the OR-flag
+    pub or_flag: bool,
+}
+
+/// Lower one kernel body to [`KernelOp`]s. Called exactly once per kernel,
+/// from the plan's host walk (which knows the fixedPoint / BFS context).
+pub(crate) fn lower_kernel_body(body: &[Stmt], cx: &KernelLower<'_>) -> Vec<KernelOp> {
+    body.iter().map(|s| lower_stmt(s, cx)).collect()
+}
+
+fn prop_slot(cx: &KernelLower<'_>, prop: &str) -> Option<u32> {
+    cx.props.slot(prop)
+}
+
+fn prop_ty(cx: &KernelLower<'_>, slot: u32) -> ScalarTy {
+    cx.props.meta(slot).ty
+}
+
+fn var_ty(cx: &KernelLower<'_>, name: &str) -> ScalarTy {
+    // the I64 fallback matches the plan's reduction-cell typing
+    cx.tf.vars.get(name).map(ScalarTy::of).unwrap_or(ScalarTy::I64)
+}
+
+fn lower_target(cx: &KernelLower<'_>, t: &LValue) -> Option<KTarget> {
+    match t {
+        LValue::Var(v) => Some(KTarget::Var(v.clone())),
+        LValue::Prop { obj, prop } => {
+            prop_slot(cx, prop).map(|slot| KTarget::Prop { slot, obj: obj.clone() })
+        }
+    }
+}
+
+fn lower_reduce(cx: &KernelLower<'_>, target: &LValue, op: ReduceOp, value: &Expr) -> KernelOp {
+    match target {
+        LValue::Var(v) => KernelOp::Reduce {
+            cell: KCell::Cell { name: v.clone() },
+            op,
+            ty: var_ty(cx, v),
+            value: value.clone(),
+        },
+        LValue::Prop { obj, prop } => match prop_slot(cx, prop) {
+            Some(slot) => KernelOp::Reduce {
+                cell: KCell::Prop { slot, obj: obj.clone() },
+                op,
+                ty: prop_ty(cx, slot),
+                value: value.clone(),
+            },
+            None => KernelOp::Unsupported { what: format!("reduction into unknown `{prop}`") },
+        },
+    }
+}
+
+fn lower_stmt(s: &Stmt, cx: &KernelLower<'_>) -> KernelOp {
+    match s {
+        Stmt::Decl { ty, name, init, .. } => {
+            KernelOp::Decl { name: name.clone(), ty: ScalarTy::of(ty), init: init.clone() }
+        }
+        Stmt::Assign { target, value, .. } => {
+            // `x = x + e` on a *property* is an atomic reduction in disguise;
+            // scalar accumulators (`sum = sum + ...`) stay plain stores
+            if let Some((t, op, rhs)) = as_reduction(target, value) {
+                if matches!(t, LValue::Prop { .. }) {
+                    return lower_reduce(cx, &t, op, &rhs);
+                }
+            }
+            match target {
+                LValue::Var(v) => KernelOp::AssignVar { name: v.clone(), value: value.clone() },
+                LValue::Prop { obj, prop } => match prop_slot(cx, prop) {
+                    Some(slot) => KernelOp::AssignProp {
+                        slot,
+                        obj: obj.clone(),
+                        value: value.clone(),
+                    },
+                    None => {
+                        KernelOp::Unsupported { what: format!("store to unknown `{prop}`") }
+                    }
+                },
+            }
+        }
+        Stmt::Reduce { target, op, value, .. } => lower_reduce(cx, target, *op, value),
+        Stmt::MinMaxAssign { kind, target, compare, extra, .. } => {
+            let LValue::Prop { obj, prop } = target else {
+                return KernelOp::Unsupported { what: "Min/Max on scalars".to_string() };
+            };
+            let Some(slot) = prop_slot(cx, prop) else {
+                return KernelOp::Unsupported { what: format!("Min/Max on unknown `{prop}`") };
+            };
+            let extra = extra
+                .iter()
+                .filter_map(|(t, v)| lower_target(cx, t).map(|t| (t, v.clone())))
+                .collect();
+            KernelOp::MinMax {
+                kind: *kind,
+                slot,
+                obj: obj.clone(),
+                ty: prop_ty(cx, slot),
+                compare: compare.clone(),
+                extra,
+                or_flag: cx.or_flag,
+            }
+        }
+        Stmt::For { iter, body, .. } => {
+            let reverse = match &iter.source {
+                IterSource::Neighbors { .. } => false,
+                IterSource::NodesTo { .. } => true,
+                IterSource::Nodes { .. } | IterSource::Set { .. } => {
+                    return KernelOp::Unsupported {
+                        what: "nested full-graph iteration".to_string(),
+                    }
+                }
+            };
+            let of = match &iter.source {
+                IterSource::Neighbors { of, .. } | IterSource::NodesTo { of, .. } => of.clone(),
+                _ => unreachable!(),
+            };
+            let filter = iter
+                .filter
+                .as_ref()
+                .map(|f| simplify_bool_cmp(&resolve_filter(f, &iter.var, cx.tf)));
+            // the reverse sweep's edge filter is the forward one: both walk
+            // BFS-DAG children; only the host-side level order flips (§3.4)
+            KernelOp::NeighborLoop {
+                var: iter.var.clone(),
+                of,
+                reverse,
+                bfs: cx.bfs,
+                filter,
+                body: lower_kernel_body(body, cx),
+            }
+        }
+        Stmt::If { cond, then, els, .. } => KernelOp::If {
+            cond: cond.clone(),
+            then: lower_kernel_body(then, cx),
+            els: els.as_ref().map(|e| lower_kernel_body(e, cx)),
+        },
+        other => KernelOp::Unsupported {
+            what: format!("{:?}", std::mem::discriminant(other)),
+        },
+    }
+}
+
+/// Resolve bare property names in filter expressions to explicit
+/// `loopVar.prop` accesses (the StarPlat `filter(modified == True)` idiom).
+pub fn resolve_filter(e: &Expr, var: &str, tf: &TypedFunction) -> Expr {
+    match e {
+        Expr::Var(name) if tf.node_props.contains_key(name) => {
+            Expr::Prop { obj: var.to_string(), prop: name.clone() }
+        }
+        Expr::Unary { op, expr } => {
+            Expr::Unary { op: *op, expr: Box::new(resolve_filter(expr, var, tf)) }
+        }
+        Expr::Binary { op, lhs, rhs } => Expr::Binary {
+            op: *op,
+            lhs: Box::new(resolve_filter(lhs, var, tf)),
+            rhs: Box::new(resolve_filter(rhs, var, tf)),
+        },
+        Expr::Call { recv, name, args } => Expr::Call {
+            recv: recv.clone(),
+            name: name.clone(),
+            args: args.iter().map(|a| resolve_filter(a, var, tf)).collect(),
+        },
+        other => other.clone(),
+    }
+}
+
+/// Normalize boolean comparisons for C output, with the literal on either
+/// side: `x == True` / `True == x` → `x`, `x == False` / `False == x` → `!x`
+/// (cleaner generated code, as in the paper's figures). `!=` flips the sense.
+pub fn simplify_bool_cmp(e: &Expr) -> Expr {
+    use crate::dsl::ast::{BinOp, UnOp};
+    if let Expr::Binary { op, lhs, rhs } = e {
+        let (lit, other) = match (&**lhs, &**rhs) {
+            (_, Expr::BoolLit(b)) => (Some(*b), lhs),
+            (Expr::BoolLit(b), _) => (Some(*b), rhs),
+            _ => (None, lhs),
+        };
+        let want = match (op, lit) {
+            (BinOp::Eq, Some(b)) => Some(b),
+            (BinOp::Ne, Some(b)) => Some(!b),
+            _ => None,
+        };
+        if let Some(w) = want {
+            return if w {
+                (**other).clone()
+            } else {
+                Expr::Unary { op: UnOp::Not, expr: other.clone() }
+            };
+        }
+    }
+    e.clone()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse;
+    use crate::sema::check_function;
+
+    fn lowered(program: &str) -> (TypedFunction, PropTable) {
+        let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+            .join("dsl_programs")
+            .join(program);
+        let src = std::fs::read_to_string(&path).unwrap();
+        let fns = parse(&src).unwrap();
+        let tf = check_function(&fns[0]).unwrap();
+        let props = PropTable::build(&tf);
+        (tf, props)
+    }
+
+    /// The forall body of the first parallel loop found under `body`.
+    fn first_forall(body: &[Stmt]) -> &Stmt {
+        for s in body {
+            match s {
+                Stmt::For { parallel: true, .. } => return s,
+                Stmt::FixedPoint { body, .. }
+                | Stmt::DoWhile { body, .. }
+                | Stmt::While { body, .. } => return first_forall(body),
+                _ => {}
+            }
+        }
+        panic!("no forall found");
+    }
+
+    #[test]
+    fn sssp_relax_lowers_to_minmax_with_or_flag() {
+        let (tf, props) = lowered("sssp.sp");
+        let Stmt::For { body, .. } = first_forall(&tf.func.body) else { unreachable!() };
+        let cx = KernelLower { tf: &tf, props: &props, bfs: None, or_flag: true };
+        let ops = lower_kernel_body(body, &cx);
+        // one neighbor loop, containing the edge decl + Min construct
+        let [KernelOp::NeighborLoop { var, of, reverse, bfs, filter, body }] = &ops[..] else {
+            panic!("expected a single neighbor loop, got {ops:?}");
+        };
+        assert_eq!((var.as_str(), of.as_str()), ("nbr", "v"));
+        assert!(!reverse && bfs.is_none() && filter.is_none());
+        assert!(matches!(&body[0], KernelOp::Decl { name, ty: ScalarTy::I32, .. } if name == "e"));
+        let KernelOp::MinMax { kind, slot, obj, ty, extra, or_flag, .. } = &body[1] else {
+            panic!("expected MinMax, got {:?}", body[1]);
+        };
+        assert_eq!(*kind, MinMax::Min);
+        assert_eq!(*slot, props.slot("dist").unwrap());
+        assert_eq!(obj, "nbr");
+        assert_eq!(*ty, ScalarTy::I32);
+        assert!(*or_flag, "fixedPoint context must mark the OR-flag clear");
+        assert!(matches!(
+            &extra[..],
+            [(KTarget::Prop { slot, obj }, Expr::BoolLit(true))]
+                if *slot == props.slot("modified_nxt").unwrap() && obj == "nbr"
+        ));
+    }
+
+    #[test]
+    fn tc_counts_into_a_scalar_cell_and_filters_resolve() {
+        let (tf, props) = lowered("tc.sp");
+        let Stmt::For { body, .. } = first_forall(&tf.func.body) else { unreachable!() };
+        let cx = KernelLower { tf: &tf, props: &props, bfs: None, or_flag: false };
+        let ops = lower_kernel_body(body, &cx);
+        let KernelOp::NeighborLoop { filter, body: inner, .. } = &ops[0] else {
+            panic!("expected neighbor loop");
+        };
+        assert!(filter.is_some(), "u < v filter survives lowering");
+        let KernelOp::NeighborLoop { body: inner2, .. } = &inner[0] else {
+            panic!("expected nested neighbor loop");
+        };
+        let KernelOp::If { then, .. } = &inner2[0] else { panic!("expected is_an_edge guard") };
+        assert!(matches!(
+            &then[0],
+            KernelOp::Reduce { cell: KCell::Cell { name }, op: ReduceOp::Add, ty: ScalarTy::I64, .. }
+                if name == "triangle_count"
+        ));
+    }
+
+    #[test]
+    fn pr_scalar_accumulator_stays_a_plain_store() {
+        let (tf, props) = lowered("pr.sp");
+        let Stmt::For { body, .. } = first_forall(&tf.func.body) else { unreachable!() };
+        let cx = KernelLower { tf: &tf, props: &props, bfs: None, or_flag: false };
+        let ops = lower_kernel_body(body, &cx);
+        // float sum = 0.0; then the reverse-CSR pull loop with sum = sum + ...
+        assert!(matches!(&ops[0], KernelOp::Decl { name, .. } if name == "sum"));
+        let KernelOp::NeighborLoop { reverse, body: inner, .. } = &ops[1] else {
+            panic!("expected pull loop, got {:?}", ops[1]);
+        };
+        assert!(*reverse, "nodes_to iterates the reverse CSR");
+        assert!(
+            matches!(&inner[0], KernelOp::AssignVar { name, .. } if name == "sum"),
+            "scalar accumulation must not become an atomic reduction"
+        );
+        // diff += abs(...) is a real reduction into the diff cell
+        let has_diff = ops.iter().any(|o| {
+            matches!(o, KernelOp::Reduce { cell: KCell::Cell { name }, op: ReduceOp::Add, ty: ScalarTy::F32, .. } if name == "diff")
+        });
+        assert!(has_diff);
+    }
+
+    #[test]
+    fn bfs_context_marks_neighbor_loops_and_atomic_slots() {
+        let (tf, props) = lowered("bc.sp");
+        // forward BFS body: forall (w in g.neighbors(v)) { w.sigma += v.sigma; }
+        let bfs_body = tf
+            .func
+            .body
+            .iter()
+            .find_map(|s| match s {
+                Stmt::For { body, .. } => body.iter().find_map(|s| match s {
+                    Stmt::IterateBFS { body, .. } => Some(body),
+                    _ => None,
+                }),
+                _ => None,
+            })
+            .expect("bc has an iterateInBFS");
+        let cx =
+            KernelLower { tf: &tf, props: &props, bfs: Some(BfsDir::Forward), or_flag: false };
+        let ops = lower_kernel_body(bfs_body, &cx);
+        let KernelOp::NeighborLoop { bfs, body, .. } = &ops[0] else {
+            panic!("expected neighbor loop");
+        };
+        assert_eq!(*bfs, Some(BfsDir::Forward));
+        assert!(matches!(
+            &body[0],
+            KernelOp::Reduce { cell: KCell::Prop { slot, obj }, op: ReduceOp::Add, .. }
+                if *slot == props.slot("sigma").unwrap() && obj == "w"
+        ));
+        let kb = KernelBody { thread_var: "v".into(), guard: None, ops };
+        assert_eq!(kb.atomic_prop_slots(), vec![props.slot("sigma").unwrap()]);
+    }
+}

@@ -9,6 +9,7 @@
 //! tables the interpreter shares.
 
 pub mod analyze;
+pub mod kernel;
 pub mod plan;
 pub mod slots;
 pub mod transfer;

@@ -49,7 +49,11 @@
 //! `tests/host_schedule_conformance.rs` snapshot them to pin the
 //! cross-backend guarantee.
 
-use crate::dsl::ast::{Block, Expr, IterSource, Iterator_, LValue, ReduceOp, Stmt, Type, UnOp};
+use crate::dsl::ast::{Expr, IterSource, LValue, MinMax, ReduceOp, Stmt, Type, UnOp};
+use crate::ir::kernel::{
+    lower_kernel_body, resolve_filter, simplify_bool_cmp, BfsDir, KCell, KTarget, KernelBody,
+    KernelLower, KernelOp,
+};
 use crate::ir::slots::Interner;
 use crate::ir::{IrProgram, Kernel, KernelKind, ScalarTy};
 use crate::sema::TypedFunction;
@@ -94,6 +98,24 @@ impl TypeMap {
         float: "float32",
         double: "float64",
         boolean: "bool_",
+    };
+    /// Metal Shading Language device code: no `long long` (64-bit int is
+    /// `long`) and no `double` (demotes to `float`).
+    pub const METAL: TypeMap = TypeMap {
+        int: "int",
+        long: "long",
+        float: "float",
+        double: "float",
+        boolean: "bool",
+    };
+    /// WGSL device code: 32-bit scalars only, and `bool` is not
+    /// host-shareable — boolean buffers are `i32` words.
+    pub const WGSL: TypeMap = TypeMap {
+        int: "i32",
+        long: "i32",
+        float: "f32",
+        double: "f32",
+        boolean: "i32",
     };
 
     pub fn name(&self, t: ScalarTy) -> &'static str {
@@ -280,6 +302,14 @@ pub struct KernelPlan {
     pub copy_out: Vec<u32>,
     /// …unless deferred to the enclosing convergence loop's exit
     pub defer_to_loop_exit: bool,
+    /// the lowered device body ([`crate::ir::kernel`]), filled in by the
+    /// host walk (which knows the fixedPoint / BFS context). `None` only
+    /// for [`KernelKind::InitProps`] kernels, whose inits ride on
+    /// [`HostOp::InitProps`].
+    pub body: Option<KernelBody>,
+    /// property slots this body updates atomically, sorted — dialects with
+    /// typed atomics (Metal, WGSL) declare these buffers differently
+    pub atomic_props: Vec<u32>,
 }
 
 impl KernelPlan {
@@ -391,14 +421,15 @@ pub enum HostOp {
     /// `attachNodeProperty`: N-wide initialization launch
     InitProps { kernel: usize, inits: Vec<(u32, Expr)> },
     /// parallel `forall`: kernel emission + launch + bound §4 transfers.
-    /// The iterator/body AST is carried for the device half only.
-    Launch { kernel: usize, iter: Iterator_, body: Block },
+    /// The device body is plan-carried ([`KernelPlan::body`]) — no AST here.
+    Launch { kernel: usize },
     /// sequential host loop over a node set
     SeqFor { var: String, set: String, body: Vec<HostOp> },
     /// Fig 12 fixedPoint skeleton; body launches see the OR-flag
     FixedPoint { index: usize, var: String, body: Vec<HostOp> },
-    /// Fig 9 iterateInBFS skeleton (forward + optional reverse sweep)
-    Bfs { index: usize, var: String, from: String, body: Block, reverse: Option<(Expr, Block)> },
+    /// Fig 9 iterateInBFS skeleton; sweep bodies are plan-carried on the
+    /// [`BfsPlan`]'s forward / reverse kernels
+    Bfs { index: usize, var: String, from: String },
     DoWhile { body: Vec<HostOp>, cond: Expr },
     While { cond: Expr, body: Vec<HostOp> },
     If { cond: Expr, then: Vec<HostOp>, els: Option<Vec<HostOp>> },
@@ -417,12 +448,17 @@ pub enum HostOp {
 /// Walks the function body in the exact order of `ir::collect_kernels`,
 /// producing the [`HostOp`] tree plus the fixedPoint / BFS skeleton lists
 /// (kernel ids are assigned positionally, so the walk must mirror the IR
-/// kernel schedule statement for statement).
+/// kernel schedule statement for statement). The walk also lowers each
+/// kernel *body* to [`KernelOp`]s right here — the only place that knows the
+/// fixedPoint OR-flag and BFS-sweep context a body is launched under.
 struct HostLower<'a> {
+    tf: &'a TypedFunction,
     props: &'a PropTable,
     next_kernel: usize,
     fixed_points: Vec<FixedPointPlan>,
     bfs_loops: Vec<BfsPlan>,
+    /// lowered device bodies, keyed by kernel id
+    bodies: Vec<(usize, KernelBody)>,
 }
 
 impl HostLower<'_> {
@@ -432,15 +468,35 @@ impl HostLower<'_> {
         k
     }
 
-    fn block(&mut self, b: &[Stmt]) -> Vec<HostOp> {
+    /// Lower one device body under the given launch context and file it
+    /// against its kernel id.
+    fn lower_body(
+        &mut self,
+        kernel: usize,
+        thread_var: &str,
+        guard: Option<&Expr>,
+        body: &[Stmt],
+        bfs: Option<BfsDir>,
+        or_flag: bool,
+    ) {
+        let cx = KernelLower { tf: self.tf, props: self.props, bfs, or_flag };
+        let kb = KernelBody {
+            thread_var: thread_var.to_string(),
+            guard: guard.map(|g| simplify_bool_cmp(&resolve_filter(g, thread_var, self.tf))),
+            ops: lower_kernel_body(body, &cx),
+        };
+        self.bodies.push((kernel, kb));
+    }
+
+    fn block(&mut self, b: &[Stmt], or_flag: bool) -> Vec<HostOp> {
         let mut out = Vec::new();
         for s in b {
-            self.stmt(s, &mut out);
+            self.stmt(s, or_flag, &mut out);
         }
         out
     }
 
-    fn stmt(&mut self, s: &Stmt, out: &mut Vec<HostOp>) {
+    fn stmt(&mut self, s: &Stmt, or_flag: bool, out: &mut Vec<HostOp>) {
         match s {
             // device-prop declarations become AllocProp ops in the prologue
             Stmt::Decl { ty, .. } if ty.is_prop() => {}
@@ -495,50 +551,51 @@ impl HostLower<'_> {
                     .collect();
                 out.push(HostOp::InitProps { kernel, inits });
             }
-            Stmt::For { parallel: true, iter, body, .. } => out.push(HostOp::Launch {
-                kernel: self.take_kernel(),
-                iter: iter.clone(),
-                body: body.clone(),
-            }),
+            Stmt::For { parallel: true, iter, body, .. } => {
+                let kernel = self.take_kernel();
+                self.lower_body(kernel, &iter.var, iter.filter.as_ref(), body, None, or_flag);
+                out.push(HostOp::Launch { kernel });
+            }
             Stmt::For { parallel: false, iter, body, .. } => {
                 let set = match &iter.source {
                     IterSource::Set { set } => set.clone(),
                     _ => "g.nodes()".to_string(),
                 };
-                let body = self.block(body);
+                let body = self.block(body, or_flag);
                 out.push(HostOp::SeqFor { var: iter.var.clone(), set, body });
             }
             Stmt::IterateBFS { var, from, body, reverse, .. } => {
                 let fwd = self.take_kernel();
-                let rev = reverse.as_ref().map(|_| self.take_kernel());
+                // sweep bodies run outside the fixedPoint flag protocol: the
+                // BFS skeleton owns its own convergence word
+                self.lower_body(fwd, var, None, body, Some(BfsDir::Forward), false);
+                let rev = reverse.as_ref().map(|(cond, rbody)| {
+                    let rk = self.take_kernel();
+                    self.lower_body(rk, var, Some(cond), rbody, Some(BfsDir::Reverse), false);
+                    rk
+                });
                 let index = self.bfs_loops.len();
                 self.bfs_loops.push(BfsPlan { fwd, rev, level: self.props.slot("level") });
-                out.push(HostOp::Bfs {
-                    index,
-                    var: var.clone(),
-                    from: from.clone(),
-                    body: body.clone(),
-                    reverse: reverse.clone(),
-                });
+                out.push(HostOp::Bfs { index, var: var.clone(), from: from.clone() });
             }
             Stmt::FixedPoint { var, cond, body, .. } => {
                 let flag_name = crate::ir::or_flag_prop(cond).unwrap_or_default();
                 let index = self.fixed_points.len();
                 self.fixed_points
                     .push(FixedPointPlan { flag: self.props.slot(&flag_name), flag_name });
-                let body = self.block(body);
+                let body = self.block(body, true);
                 out.push(HostOp::FixedPoint { index, var: var.clone(), body });
             }
             Stmt::DoWhile { body, cond, .. } => {
-                out.push(HostOp::DoWhile { body: self.block(body), cond: cond.clone() })
+                out.push(HostOp::DoWhile { body: self.block(body, or_flag), cond: cond.clone() })
             }
             Stmt::While { cond, body, .. } => {
-                out.push(HostOp::While { cond: cond.clone(), body: self.block(body) })
+                out.push(HostOp::While { cond: cond.clone(), body: self.block(body, or_flag) })
             }
             Stmt::If { cond, then, els, .. } => out.push(HostOp::If {
                 cond: cond.clone(),
-                then: self.block(then),
-                els: els.as_ref().map(|e| self.block(e)),
+                then: self.block(then, or_flag),
+                els: els.as_ref().map(|e| self.block(e, or_flag)),
             }),
             Stmt::Return { value, .. } => out.push(HostOp::Return { value: value.clone() }),
             Stmt::MinMaxAssign { .. } => {
@@ -617,20 +674,27 @@ impl DevicePlan {
         outputs.sort_unstable();
         outputs.dedup();
 
-        let kernels = ir.kernels.iter().map(|k| kernel_plan(ir, &props, k)).collect();
+        let mut kernels: Vec<KernelPlan> =
+            ir.kernels.iter().map(|k| kernel_plan(ir, &props, k)).collect();
 
         let mut hl = HostLower {
+            tf,
             props: &props,
             next_kernel: 0,
             fixed_points: Vec::new(),
             bfs_loops: Vec::new(),
+            bodies: Vec::new(),
         };
-        let mut body_ops = hl.block(&tf.func.body);
+        let mut body_ops = hl.block(&tf.func.body, false);
         // hard assert (one usize compare per build): the host walk must
         // mirror `ir::collect_kernels` exactly, or every downstream kernel id
         // would be silently shifted
         assert_eq!(hl.next_kernel, ir.kernels.len(), "host walk drifted from kernel schedule");
-        let HostLower { fixed_points, bfs_loops, .. } = hl;
+        let HostLower { fixed_points, bfs_loops, bodies, .. } = hl;
+        for (id, body) in bodies {
+            kernels[id].atomic_props = body.atomic_prop_slots();
+            kernels[id].body = Some(body);
+        }
 
         // a body ending in `return <scalar>` (e.g. TC) must run the epilogue
         // first, or every free would be emitted as unreachable code
@@ -858,11 +922,11 @@ impl DevicePlan {
                     self.host_manifest_block(body, depth + 1, true, out);
                     out.push(format!("{pad}}}"));
                 }
-                HostOp::Bfs { index, var, from, reverse, .. } => {
+                HostOp::Bfs { index, var, from } => {
                     let b = &self.bfs_loops[*index];
-                    let rev = match (b.rev, reverse) {
-                        (Some(r), Some(_)) => format!(" rev=kernel[{r}]"),
-                        _ => String::new(),
+                    let rev = match b.rev {
+                        Some(r) => format!(" rev=kernel[{r}]"),
+                        None => String::new(),
                     };
                     out.push(format!(
                         "{pad}bfs[{index}] fwd=kernel[{}]{rev} ({var} from {from})",
@@ -897,6 +961,141 @@ impl DevicePlan {
                 HostOp::FreeProp { slot } => out.push(format!("{pad}free {}", buf(*slot))),
                 HostOp::FreeFlag => out.push(format!("{pad}free or-flag")),
                 HostOp::FreeGraph => out.push(format!("{pad}free graph")),
+            }
+        }
+    }
+
+    /// Stable, backend-neutral description of every lowered kernel body —
+    /// the device-side twin of [`DevicePlan::host_manifest`]. Every text
+    /// renderer embeds this as a third comment block;
+    /// `tests/host_schedule_conformance.rs` asserts it is byte-identical
+    /// across all seven backends, which is the proof that kernel emission is
+    /// one lowering plus per-backend spellings.
+    pub fn kernel_manifest(&self) -> Vec<String> {
+        let mut out = vec![format!(
+            "==== kernel ops: {} ({} kernels) ====",
+            self.func,
+            self.kernels.len()
+        )];
+        for k in &self.kernels {
+            match &k.body {
+                None => out.push(format!(
+                    "kernel[{}] {} {} (inits on host schedule)",
+                    k.id,
+                    kind_token(&k.kind),
+                    k.name
+                )),
+                Some(b) => {
+                    let guard = match &b.guard {
+                        Some(g) => format!(" guard={}", neutral_expr(g)),
+                        None => String::new(),
+                    };
+                    let atomics = if k.atomic_props.is_empty() {
+                        String::new()
+                    } else {
+                        let names: Vec<&str> =
+                            k.atomic_props.iter().map(|&s| self.prop_name(s)).collect();
+                        format!(" atomics={{{}}}", names.join(", "))
+                    };
+                    out.push(format!(
+                        "kernel[{}] {} {} thread={}{guard}{atomics} {{",
+                        k.id,
+                        kind_token(&k.kind),
+                        k.name,
+                        b.thread_var
+                    ));
+                    self.kernel_ops_block(&b.ops, 1, &mut out);
+                    out.push("}".to_string());
+                }
+            }
+        }
+        out.push("==== end kernel ops ====".to_string());
+        out
+    }
+
+    fn kernel_ops_block(&self, ops: &[KernelOp], depth: usize, out: &mut Vec<String>) {
+        let pad = "  ".repeat(depth);
+        let buf = |s: u32| format!("buffer[{s}] {}", self.prop_name(s));
+        for op in ops {
+            match op {
+                KernelOp::Decl { name, ty, init } => {
+                    let t = TypeMap::C.name(*ty);
+                    match init {
+                        Some(e) => {
+                            out.push(format!("{pad}decl {name} : {t} = {}", neutral_expr(e)))
+                        }
+                        None => out.push(format!("{pad}decl {name} : {t}")),
+                    }
+                }
+                KernelOp::AssignVar { name, value } => {
+                    out.push(format!("{pad}assign {name} = {}", neutral_expr(value)))
+                }
+                KernelOp::AssignProp { slot, obj, value } => out.push(format!(
+                    "{pad}store {}[{obj}] = {}",
+                    buf(*slot),
+                    neutral_expr(value)
+                )),
+                KernelOp::Reduce { cell, op, ty, value } => {
+                    let loc = match cell {
+                        KCell::Prop { slot, obj } => format!("{}[{obj}]", buf(*slot)),
+                        KCell::Cell { name } => format!("cell `{name}`"),
+                    };
+                    out.push(format!(
+                        "{pad}reduce {loc} {} {} : {}",
+                        op.symbol(),
+                        neutral_expr(value),
+                        TypeMap::C.name(*ty)
+                    ));
+                }
+                KernelOp::MinMax { kind, slot, obj, ty, compare, extra, or_flag } => {
+                    let kw = if *kind == MinMax::Min { "min" } else { "max" };
+                    let extras: Vec<String> = extra
+                        .iter()
+                        .map(|(t, v)| {
+                            let t = match t {
+                                KTarget::Var(n) => n.clone(),
+                                KTarget::Prop { slot, obj } => format!("{}[{obj}]", buf(*slot)),
+                            };
+                            format!("{t} = {}", neutral_expr(v))
+                        })
+                        .collect();
+                    out.push(format!(
+                        "{pad}{kw} {}[{obj}] <- {} : {}{}{}",
+                        buf(*slot),
+                        neutral_expr(compare),
+                        TypeMap::C.name(*ty),
+                        if *or_flag { " [+or-flag]" } else { "" },
+                        if extras.is_empty() {
+                            String::new()
+                        } else {
+                            format!(" extras={{{}}}", extras.join("; "))
+                        },
+                    ));
+                }
+                KernelOp::NeighborLoop { var, of, reverse, bfs, filter, body } => {
+                    let dir = if *reverse { "in" } else { "out" };
+                    // both sweeps share the §3.4 BFS-DAG child filter
+                    let bfs_tag = if bfs.is_some() { " bfs-dag" } else { "" };
+                    let filt = match filter {
+                        Some(f) => format!(" filter={}", neutral_expr(f)),
+                        None => String::new(),
+                    };
+                    out.push(format!("{pad}for {var} in {dir}({of}){bfs_tag}{filt} {{"));
+                    self.kernel_ops_block(body, depth + 1, out);
+                    out.push(format!("{pad}}}"));
+                }
+                KernelOp::If { cond, then, els } => {
+                    out.push(format!("{pad}if {} {{", neutral_expr(cond)));
+                    self.kernel_ops_block(then, depth + 1, out);
+                    if let Some(e) = els {
+                        out.push(format!("{pad}}} else {{"));
+                        self.kernel_ops_block(e, depth + 1, out);
+                    }
+                    out.push(format!("{pad}}}"));
+                }
+                KernelOp::Unsupported { what } => {
+                    out.push(format!("{pad}unsupported: {what}"))
+                }
             }
         }
     }
@@ -1006,6 +1205,8 @@ fn kernel_plan(ir: &IrProgram, props: &PropTable, k: &Kernel) -> KernelPlan {
         copy_in: transfers.copy_in.iter().filter_map(|n| props.slot(n)).collect(),
         copy_out: transfers.copy_out.iter().filter_map(|n| props.slot(n)).collect(),
         defer_to_loop_exit: transfers.defer_to_loop_exit,
+        body: None,
+        atomic_props: Vec::new(),
     }
 }
 
@@ -1143,10 +1344,52 @@ mod tests {
             .expect("bc iterates a source set");
         assert_eq!(seq.0, "sourceSet");
         assert!(seq.1.iter().any(|o| matches!(o, HostOp::SetElement { .. })));
-        assert!(seq
-            .1
-            .iter()
-            .any(|o| matches!(o, HostOp::Bfs { index: 0, reverse: Some(_), .. })));
+        assert!(seq.1.iter().any(|o| matches!(o, HostOp::Bfs { index: 0, .. })));
+        assert!(plan.bfs_loops[0].rev.is_some(), "reverse sweep bound on the skeleton");
+    }
+
+    #[test]
+    fn kernel_bodies_are_plan_carried_with_context() {
+        let plan = plan_of("sssp.sp");
+        // init kernels carry no body; the relax kernel does
+        assert!(plan.kernels[0].body.is_none());
+        let relax = plan.kernels[1].body.as_ref().expect("relax body lowered");
+        assert_eq!(relax.thread_var, "v");
+        assert!(relax.guard.is_some(), "filter(modified == True) becomes the thread guard");
+        // the Min construct knows it sits inside the fixedPoint (§4.1)
+        let mut saw_min = false;
+        for op in &relax.ops {
+            op.visit(&mut |o| {
+                if let KernelOp::MinMax { or_flag, .. } = o {
+                    saw_min = true;
+                    assert!(*or_flag);
+                }
+            });
+        }
+        assert!(saw_min);
+        assert_eq!(plan.kernels[1].atomic_props, vec![plan.props.slot("dist").unwrap()]);
+        // BFS sweeps get bodies too, tagged with their sweep direction
+        let bc = plan_of("bc.sp");
+        let b = &bc.bfs_loops[0];
+        let fwd = bc.kernels[b.fwd].body.as_ref().expect("forward sweep body");
+        assert!(matches!(&fwd.ops[0], KernelOp::NeighborLoop { bfs: Some(_), .. }));
+        let rev = bc.kernels[b.rev.unwrap()].body.as_ref().expect("reverse sweep body");
+        assert!(rev.guard.is_some(), "iterateInReverse condition becomes the guard");
+    }
+
+    #[test]
+    fn kernel_manifest_is_deterministic_and_names_cells() {
+        let a = plan_of("sssp.sp").kernel_manifest();
+        let b = plan_of("sssp.sp").kernel_manifest();
+        assert_eq!(a, b);
+        assert!(a[0].contains("kernel ops: Compute_SSSP"));
+        assert!(a.iter().any(|l| l.contains("min buffer[0] dist[nbr]")));
+        assert!(a.iter().any(|l| l.contains("[+or-flag]")));
+        // no DSL literal leaks into generated comment blocks
+        assert!(a.iter().all(|l| !l.contains("True") && !l.contains("False")));
+        assert_eq!(a.last().unwrap(), "==== end kernel ops ====");
+        let tc = plan_of("tc.sp").kernel_manifest();
+        assert!(tc.iter().any(|l| l.contains("reduce cell `triangle_count` += 1 : long long")));
     }
 
     #[test]

@@ -1,15 +1,18 @@
-//! Cross-backend host-schedule conformance: the guarantee the `HostOp`
-//! refactor adds on top of `tests/plan_numbering.rs` is that every backend's
-//! *host section* — declarations, transfers, launches, loop structure,
-//! epilogue frees — is derived from the identical [`HostOp`] sequence, not
-//! from a per-backend AST walk. Each text backend embeds the host-schedule
-//! manifest as a comment block; these tests pin the block byte-identical
-//! across all five backends, and pin HIP↔CUDA launch/parameter agreement
-//! down to the argument list.
+//! Cross-backend host-schedule and kernel-op conformance: the guarantee the
+//! `HostOp` refactor added on top of `tests/plan_numbering.rs` — every
+//! backend's *host section* is derived from the identical [`HostOp`]
+//! sequence, not a per-backend AST walk — now extends to the device half:
+//! every kernel *body* is the identical plan-carried `KernelOp` tree. Each
+//! text backend embeds the host-schedule and kernel-op manifests as comment
+//! blocks; these tests pin both blocks byte-identical across all seven
+//! backends, pin HIP↔CUDA launch/parameter agreement down to the argument
+//! list, and check that every atomic reduction targets a cell the kernel
+//! actually receives as a parameter.
 
 use starplat::codegen;
 use starplat::dsl::parser::parse_file;
-use starplat::ir::plan::{DevicePlan, HostOp};
+use starplat::ir::kernel::{KCell, KernelOp};
+use starplat::ir::plan::{DevicePlan, HostOp, KernelParam};
 use starplat::ir::{lower, IrProgram, KernelKind};
 use starplat::sema::check_function;
 
@@ -131,6 +134,83 @@ fn host_ops_reference_every_kernel_once_in_order() {
         collect_kernel_refs(&plan, &plan.host_ops, &mut refs);
         let expect: Vec<usize> = (0..plan.kernels.len()).collect();
         assert_eq!(refs, expect, "{p}");
+    }
+}
+
+/// Extract the `// ==== kernel ops ... ====` comment block (inclusive).
+fn kernel_ops_block(src: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut inside = false;
+    for l in src.lines() {
+        if l.starts_with("// ==== kernel ops:") {
+            inside = true;
+        }
+        if inside {
+            out.push(l.trim_end().to_string());
+        }
+        if l.starts_with("// ==== end kernel ops") {
+            break;
+        }
+    }
+    out
+}
+
+/// The device-side twin of the host-manifest check: the embedded kernel-op
+/// manifest must be byte-identical across all seven text backends on all six
+/// programs — proof that kernel emission is one lowering (`ir/kernel.rs`)
+/// plus per-backend `KernelDialect` spellings, with no AST walk left in any
+/// renderer.
+#[test]
+fn kernel_manifest_identical_across_all_text_backends() {
+    for p in PROGRAMS {
+        let ir = ir_of(p);
+        let expected: Vec<String> = DevicePlan::build(&ir)
+            .kernel_manifest()
+            .iter()
+            .map(|l| format!("// {l}"))
+            .collect();
+        assert!(expected.len() > 2, "{p}: kernel manifest suspiciously small");
+        for b in codegen::TEXT_BACKENDS {
+            let src = codegen::generate(b, &ir).unwrap();
+            assert_eq!(
+                kernel_ops_block(&src),
+                expected,
+                "{p}/{b}: embedded kernel-op manifest diverged from the plan's lowering"
+            );
+        }
+    }
+}
+
+/// Every `KernelOp::Reduce` names a cell that appears in its kernel's
+/// canonical parameter list — the invariant that makes the launch sites'
+/// reduction-cell allocations line up with what the kernel body touches.
+#[test]
+fn every_kernel_reduce_targets_a_declared_parameter() {
+    for p in PROGRAMS {
+        let plan = DevicePlan::build(&ir_of(p));
+        for k in &plan.kernels {
+            let Some(body) = &k.body else { continue };
+            let params = k.params(true);
+            for op in &body.ops {
+                op.visit(&mut |o| {
+                    if let KernelOp::Reduce { cell, .. } = o {
+                        let ok = match cell {
+                            KCell::Prop { slot, .. } => params
+                                .iter()
+                                .any(|q| matches!(q, KernelParam::Prop(s) if s == slot)),
+                            KCell::Cell { name } => params.iter().any(|q| {
+                                matches!(q, KernelParam::ReductionCell { name: n, .. } if n == name)
+                            }),
+                        };
+                        assert!(
+                            ok,
+                            "{p}: kernel `{}` reduces into {cell:?}, which is not in its parameter list",
+                            k.name
+                        );
+                    }
+                });
+            }
+        }
     }
 }
 

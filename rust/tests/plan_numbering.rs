@@ -1,9 +1,10 @@
 //! Cross-backend numbering snapshots: the property the `ir/plan.rs` device
 //! plan guarantees is that every backend sees the *same* buffer slots and
 //! kernel schedule. Each text backend embeds the plan manifest as a comment
-//! block; these tests assert the block is byte-identical across CUDA, OpenCL,
-//! SYCL, and OpenACC for all six shipped programs, and that the interpreter's
-//! slot assignment (which consumes the same `PropTable`) matches too.
+//! block; these tests assert the block is byte-identical across all text
+//! backends (CUDA, OpenCL, SYCL, OpenACC, HIP, Metal, WGSL) for all six
+//! shipped programs, and that the interpreter's slot assignment (which
+//! consumes the same `PropTable`) matches too.
 
 use starplat::backends::interp;
 use starplat::codegen;

@@ -1,5 +1,5 @@
 //! Full-file snapshot tests: the generated output for the paper's four
-//! algorithms × all five text backends is pinned under `tests/snapshots/`,
+//! algorithms × all seven text backends is pinned under `tests/snapshots/`,
 //! so host-lowering refactors show up as reviewable snapshot diffs instead
 //! of silent drift.
 //!
@@ -82,7 +82,7 @@ fn generated_output_matches_snapshots() {
             bootstrapped.join(", ")
         );
     }
-    // the matrix is complete after one run: 4 algorithms × 5 backends
+    // the matrix is complete after one run: 4 algorithms × 7 backends
     for p in ALGOS {
         let stem = p.trim_end_matches(".sp");
         for b in codegen::TEXT_BACKENDS {

@@ -1,12 +1,19 @@
 #!/usr/bin/env python3
-"""Compare two BENCH_interp.json files and emit a Markdown trend report.
+"""Compare BENCH_interp.json files and emit a Markdown trend report.
 
-Usage: bench_trend.py PREVIOUS.json CURRENT.json [--threshold 0.20]
+Usage: bench_trend.py PREV.json [PREV2.json ...] CURRENT.json [--threshold 0.20]
 
-Cells are keyed by (algorithm, graph, mode); a cell whose `secs` grew by
-more than the threshold relative to the previous run is flagged. The report
-is advisory — the script always exits 0 (runner timing variance is not yet
-characterized well enough to gate on; see ROADMAP) — so CI pipes the output
+All files but the last are previous runs (oldest first); the last is the
+current run. Cells are keyed by (algorithm, graph, mode); a cell whose `secs`
+grew by more than the threshold relative to the *latest* previous run is
+flagged. With more than one previous run the report also records each cell's
+timing **spread** across the previous runs — (max - min) / min, excluding
+the run under test so a real regression can't inflate it — which is the
+runner-variance data the ROADMAP needs before the trend step can flip from
+advisory to blocking: a cell whose spread across unchanged code rivals the
+regression threshold cannot gate on it.
+
+The report is advisory — the script always exits 0 — so CI pipes the output
 into $GITHUB_STEP_SUMMARY instead of failing the job.
 """
 
@@ -24,52 +31,83 @@ def cells_by_key(path):
 
 
 def main(argv):
-    if len(argv) < 3:
-        print("usage: bench_trend.py PREVIOUS.json CURRENT.json [--threshold 0.20]")
-        return 0
     threshold = 0.20
     if "--threshold" in argv:
-        threshold = float(argv[argv.index("--threshold") + 1])
+        i = argv.index("--threshold")
+        threshold = float(argv[i + 1])
+        argv = argv[:i] + argv[i + 2:]
+    paths = argv[1:]
+    if len(paths) < 2:
+        print("usage: bench_trend.py PREV.json [PREV2.json ...] CURRENT.json"
+              " [--threshold 0.20]")
+        return 0
     try:
-        prev, prev_report = cells_by_key(argv[1])
-        cur, cur_report = cells_by_key(argv[2])
+        runs = [cells_by_key(p) for p in paths]
     except (OSError, json.JSONDecodeError, KeyError) as e:
         print(f"### Interpreter bench trend\n\n_not comparable: {e}_")
         return 0
+    cur, cur_report = runs[-1]
+    prev, prev_report = runs[-2]
+    history = [r for r, _ in runs]  # oldest -> current
 
     print("### Interpreter bench trend (advisory)")
     print()
     print(
+        f"{len(runs) - 1} previous run(s) · "
         f"previous bench_n={prev_report.get('bench_n')} "
         f"threads={prev_report.get('threads_par')} · "
         f"current bench_n={cur_report.get('bench_n')} "
         f"threads={cur_report.get('threads_par')}"
     )
     print()
-    print("| algorithm | graph | mode | prev s | cur s | Δ |")
-    print("|---|---|---|---:|---:|---:|")
+    print("| algorithm | graph | mode | prev s | cur s | Δ | spread |")
+    print("|---|---|---|---:|---:|---:|---:|")
     regressions = []
+    spreads = []
     for key in sorted(cur):
         c = cur[key]
+        # spread is measured over *previous* runs only: including the run
+        # under test would let a genuine regression inflate the variance
+        # figure meant to contextualize it
+        series = [r[key]["secs"] for r in history[:-1]
+                  if key in r and r[key].get("secs")]
+        if len(series) >= 2 and min(series) > 0:
+            spread = (max(series) - min(series)) / min(series)
+            spreads.append((key, spread))
+            spread_s = f"{spread:.1%}"
+        else:
+            spread_s = "—"
         p = prev.get(key)
         if p is None or not p.get("secs"):
-            print(f"| {key[0]} | {key[1]} | {key[2]} | — | {c['secs']:.4f} | new |")
+            print(f"| {key[0]} | {key[1]} | {key[2]} | — "
+                  f"| {c['secs']:.4f} | new | {spread_s} |")
             continue
         delta = (c["secs"] - p["secs"]) / p["secs"]
         flag = " ⚠️" if delta > threshold else ""
         print(
             f"| {key[0]} | {key[1]} | {key[2]} | {p['secs']:.4f} "
-            f"| {c['secs']:.4f} | {delta:+.1%}{flag} |"
+            f"| {c['secs']:.4f} | {delta:+.1%}{flag} | {spread_s} |"
         )
         if delta > threshold:
             regressions.append((key, delta))
     print()
+    if spreads:
+        worst_key, worst = max(spreads, key=lambda kv: kv[1])
+        median = sorted(s for _, s in spreads)[len(spreads) // 2]
+        print(
+            f"Per-cell spread over {len(runs) - 1} previous run(s): "
+            f"median {median:.1%}, "
+            f"worst {worst:.1%} ({worst_key[0]}/{worst_key[1]}/{worst_key[2]})."
+            f" Blocking the trend step needs worst-case spread comfortably"
+            f" under the {threshold:.0%} threshold (ROADMAP)."
+        )
+        print()
     if regressions:
         worst = ", ".join(f"{a}/{g}/{m} {d:+.1%}" for (a, g, m), d in regressions)
         print(
             f"**{len(regressions)} cell(s) regressed more than "
-            f"{threshold:.0%}**: {worst}. Advisory only — runner variance is "
-            "not yet characterized (ROADMAP)."
+            f"{threshold:.0%}**: {worst}. Advisory only — see the spread "
+            "column for whether runner variance explains it."
         )
     else:
         print(f"No cell regressed more than {threshold:.0%}.")
