@@ -3,11 +3,18 @@
 //! machine-readable `BENCH_interp.json` (per-algorithm seconds and
 //! nodes/sec) so successive PRs have a perf trajectory to compare against.
 //!
+//! Frontier-eligible algorithms (SSSP/CC — any program whose fixedPoint the
+//! compiler proves sparse-safe) additionally get **frontier-vs-dense**
+//! columns: the same cell timed with the sparse worklist schedule (the
+//! default) and with it forced off (`ExecOpts::frontier = false`), so the
+//! fast path's win is visible per cell instead of inferred across PRs.
+//!
 //! Run: cargo run --release --example bench_interp
 //! Env: STARPLAT_BENCH_N (graph size knob, default 20000),
-//!      STARPLAT_THREADS (Par worker count)
+//!      STARPLAT_THREADS (Par worker count),
+//!      STARPLAT_FRONTIER=0 (force the dense schedule everywhere)
 
-use starplat::backends::interp::{self, env::Val, Args, Mode};
+use starplat::backends::interp::{self, compile, env::Val, Args, ExecOpts};
 use starplat::coordinator::driver::{load_program, Algo};
 use starplat::graph::csr::Graph;
 use starplat::util::json::Json;
@@ -27,15 +34,29 @@ fn bench_args(algo: Algo) -> Args {
     }
 }
 
-/// Best-of-3 wall-clock seconds for one (algo, graph, mode) cell.
-fn time_cell(algo: Algo, g: &Graph, mode: Mode) -> anyhow::Result<f64> {
+/// Does the compiled program contain a frontier-eligible fixedPoint?
+fn has_frontier_path(stmts: &[compile::HostStmt]) -> bool {
+    use compile::HostStmt as H;
+    stmts.iter().any(|s| match s {
+        H::FixedPoint { frontier, body, .. } => frontier.is_some() || has_frontier_path(body),
+        H::SeqFor { body, .. } | H::DoWhile { body, .. } | H::While { body, .. } => {
+            has_frontier_path(body)
+        }
+        H::If { then, els, .. } => has_frontier_path(then) || has_frontier_path(els),
+        _ => false,
+    })
+}
+
+/// Best-of-3 wall-clock seconds for one (algo, graph, mode, schedule) cell.
+fn time_cell(algo: Algo, g: &Graph, threads: usize, frontier: bool) -> anyhow::Result<f64> {
     let tf = load_program(algo)?;
     let args = bench_args(algo);
-    interp::run(&tf, g, &args, mode)?; // warmup (also surfaces errors once)
+    let opts = ExecOpts { threads, frontier };
+    interp::run_with_opts(&tf, g, &args, opts)?; // warmup (also surfaces errors once)
     let mut best = f64::INFINITY;
     for _ in 0..3 {
         let t0 = std::time::Instant::now();
-        interp::run(&tf, g, &args, mode)?;
+        interp::run_with_opts(&tf, g, &args, opts)?;
         best = best.min(t0.elapsed().as_secs_f64());
     }
     Ok(best)
@@ -49,18 +70,19 @@ fn main() -> anyhow::Result<()> {
         starplat::graph::generators::rmat("rmat", n, 5 * n, 0x22),
     ];
     let algos = [Algo::Bfs, Algo::Sssp, Algo::Cc, Algo::Pr];
+    let par_threads = starplat::util::pool::default_threads();
 
     let mut cells = Vec::new();
     for g in &graphs {
         for &algo in &algos {
-            for (mode, label) in [(Mode::Seq, "seq"), (Mode::Par, "par")] {
-                let secs = time_cell(algo, g, mode)?;
+            // the interpreter's own STARPLAT_FRONTIER gate: with the engine
+            // forced off, cells report path:"dense" and skip the second run
+            let eligible = interp::frontier_env_enabled()
+                && has_frontier_path(&compile::compile(&load_program(algo)?)?.body);
+            for (threads, label) in [(1usize, "seq"), (par_threads, "par")] {
+                let secs = time_cell(algo, g, threads, true)?;
                 let nps = g.num_nodes() as f64 / secs;
-                println!(
-                    "{:>4?} on {:<5} [{label}]  {secs:>9.4}s  {nps:>12.0} nodes/s",
-                    algo, g.name
-                );
-                cells.push(Json::obj(vec![
+                let mut fields = vec![
                     ("algorithm", Json::Str(format!("{algo:?}").to_lowercase())),
                     ("graph", Json::Str(g.name.clone())),
                     ("mode", Json::Str(label.to_string())),
@@ -68,14 +90,33 @@ fn main() -> anyhow::Result<()> {
                     ("edges", Json::Num(g.num_edges() as f64)),
                     ("secs", Json::Num(secs)),
                     ("nodes_per_sec", Json::Num(nps)),
-                ]));
+                    ("path", Json::Str(if eligible { "frontier" } else { "dense" }.to_string())),
+                ];
+                if eligible {
+                    // same cell with the sparse schedule forced off: the
+                    // frontier-vs-dense column
+                    let dense_secs = time_cell(algo, g, threads, false)?;
+                    fields.push(("secs_dense", Json::Num(dense_secs)));
+                    println!(
+                        "{:>4?} on {:<5} [{label}]  frontier {secs:>9.4}s  dense {dense_secs:>9.4}s  ({:.2}x)  {nps:>12.0} nodes/s",
+                        algo,
+                        g.name,
+                        dense_secs / secs
+                    );
+                } else {
+                    println!(
+                        "{:>4?} on {:<5} [{label}]  {secs:>9.4}s  {nps:>12.0} nodes/s",
+                        algo, g.name
+                    );
+                }
+                cells.push(Json::obj(fields));
             }
         }
     }
 
     let report = Json::obj(vec![
-        ("engine", Json::Str("slot-resolved-v1".into())),
-        ("threads_par", Json::Num(starplat::util::pool::default_threads() as f64)),
+        ("engine", Json::Str("frontier-engine-v2".into())),
+        ("threads_par", Json::Num(par_threads as f64)),
         ("bench_n", Json::Num(n as f64)),
         ("cells", Json::Arr(cells)),
     ]);

@@ -131,16 +131,24 @@ pub enum HostIter {
 
 /// Frontier fast path for a `fixedPoint` whose body is
 /// `forall(filter(flag)) { ... }; flag = nxt; attach(nxt = False);`
-/// and whose writes to `nxt` only touch the loop element or its
-/// out-neighbors. The executor then processes only flagged vertices and
-/// gathers the next worklist from the updated neighborhood instead of
-/// sweeping all |V| vertices per iteration.
+/// and whose writes to `nxt` only touch the loop element, its out-neighbors
+/// (push kernels, walking `offsets/adj`), or its in-neighbors (pull kernels,
+/// walking `rev_offsets/srcList`). The executor then processes only flagged
+/// vertices and gathers the next worklist from exactly the neighborhoods the
+/// kernel can have written — `gather_out` / `gather_in` record which
+/// directions the sparse gather must scan.
 #[derive(Clone, Copy, Debug)]
 pub struct FrontierInfo {
     /// the filter flag property (`modified`)
     pub flag: u32,
     /// the ping-pong buffer written by the kernel (`modified_nxt`)
     pub nxt: u32,
+    /// some `nxt` write lands on an out-neighbor of the loop element: the
+    /// gather scans the forward CSR
+    pub gather_out: bool,
+    /// some `nxt` write lands on an in-neighbor (reverse-CSR pull): the
+    /// gather scans `rev_offsets/srcList`
+    pub gather_in: bool,
 }
 
 /// Host-level statement.
@@ -827,16 +835,17 @@ impl Compiler {
             return None;
         }
         // the kernel must not touch the flag itself, and all its writes to
-        // `nxt` must target the loop element or its out-neighbors — that is
-        // the neighborhood the sparse gather scans
+        // `nxt` must target the loop element, its out-neighbors, or its
+        // in-neighbors — the union of neighborhoods the sparse gather scans
         if writes_prop(&k.body, flag) {
             return None;
         }
-        let mut allowed = vec![k.reg];
-        if !writes_only_near(&k.body, nxt, k.reg, &mut allowed) {
+        let mut allowed = vec![(k.reg, Near::Root)];
+        let mut dirs = GatherDirs::default();
+        if !writes_only_near(&k.body, nxt, k.reg, &mut allowed, &mut dirs) {
             return None;
         }
-        Some(FrontierInfo { flag, nxt })
+        Some(FrontierInfo { flag, nxt, gather_out: dirs.out, gather_in: dirs.in_ })
     }
 }
 
@@ -862,40 +871,86 @@ fn writes_prop(body: &[DevStmt], prop: u32) -> bool {
     })
 }
 
+/// Which 1-hop neighborhood of the root element a register ranges over.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Near {
+    /// the kernel's loop element itself
+    Root,
+    /// a loop over the root's direct out-neighbors
+    Out,
+    /// a loop over the root's direct in-neighbors (reverse-CSR pull)
+    In,
+}
+
+/// Directions the sparse gather must scan, accumulated from the registers
+/// that actually receive `nxt` writes (a pull kernel that merely *reads*
+/// in-neighbors does not force an in-gather).
+#[derive(Clone, Copy, Debug, Default)]
+struct GatherDirs {
+    out: bool,
+    in_: bool,
+}
+
 /// Are all writes to `prop` indexed by the kernel element or by loop
-/// variables ranging over its *direct* out-neighbors? (`allowed` holds the
-/// eligible registers; neighbor loops of the root element extend it for
-/// their body only.)
-fn writes_only_near(body: &[DevStmt], prop: u32, root: u32, allowed: &mut Vec<u32>) -> bool {
-    let idx_ok = |idx: &Idx, allowed: &[u32]| matches!(idx, Idx::Reg(r) if allowed.contains(r));
+/// variables ranging over its *direct* out- or in-neighbors? (`allowed`
+/// holds the eligible registers with their neighborhood direction; neighbor
+/// loops of the root element extend it for their body only. Loops over a
+/// neighbor's neighbors — 2-hop writes — contribute nothing, so such kernels
+/// stay on the dense schedule.) Every write that lands on an Out/In register
+/// marks that direction in `dirs`.
+fn writes_only_near(
+    body: &[DevStmt],
+    prop: u32,
+    root: u32,
+    allowed: &mut Vec<(u32, Near)>,
+    dirs: &mut GatherDirs,
+) -> bool {
+    fn idx_ok(idx: &Idx, allowed: &[(u32, Near)], dirs: &mut GatherDirs) -> bool {
+        let Idx::Reg(r) = idx else { return false };
+        match allowed.iter().find(|(a, _)| a == r) {
+            Some((_, Near::Root)) => true,
+            Some((_, Near::Out)) => {
+                dirs.out = true;
+                true
+            }
+            Some((_, Near::In)) => {
+                dirs.in_ = true;
+                true
+            }
+            None => false,
+        }
+    }
     body.iter().all(|s| match s {
         DevStmt::PropStore { prop: p, idx, .. } | DevStmt::PropReduce { prop: p, idx, .. } => {
-            *p != prop || idx_ok(idx, allowed)
+            *p != prop || idx_ok(idx, allowed, dirs)
         }
         DevStmt::MinMax { prop: p, idx, extra, .. } => {
-            (*p != prop || idx_ok(idx, allowed))
+            (*p != prop || idx_ok(idx, allowed, dirs))
                 && extra.iter().all(|u| match u {
-                    CUpdate::Prop { prop: q, idx, .. } => *q != prop || idx_ok(idx, allowed),
+                    CUpdate::Prop { prop: q, idx, .. } => *q != prop || idx_ok(idx, allowed, dirs),
                     CUpdate::Scalar { .. } => true,
                 })
         }
         DevStmt::For { reg, source, body, .. } => {
-            let direct = matches!(
-                source,
-                DevIter::Neighbors { of: Idx::Reg(r), dag: false } if *r == root
-            );
-            if direct {
-                allowed.push(*reg);
+            let near = match source {
+                DevIter::Neighbors { of: Idx::Reg(r), dag: false } if *r == root => {
+                    Some(Near::Out)
+                }
+                DevIter::InNeighbors { of: Idx::Reg(r) } if *r == root => Some(Near::In),
+                _ => None,
+            };
+            if let Some(n) = near {
+                allowed.push((*reg, n));
             }
-            let ok = writes_only_near(body, prop, root, allowed);
-            if direct {
+            let ok = writes_only_near(body, prop, root, allowed, dirs);
+            if near.is_some() {
                 allowed.pop();
             }
             ok
         }
         DevStmt::If { then, els, .. } => {
-            writes_only_near(then, prop, root, allowed)
-                && writes_only_near(els, prop, root, allowed)
+            writes_only_near(then, prop, root, allowed, dirs)
+                && writes_only_near(els, prop, root, allowed, dirs)
         }
         _ => true,
     })
@@ -948,6 +1003,8 @@ mod tests {
         let f = fp.expect("sssp fixedPoint is frontier-eligible");
         assert_eq!(prog.props[f.flag as usize].name, "modified");
         assert_eq!(prog.props[f.nxt as usize].name, "modified_nxt");
+        // push kernel: nxt writes land on out-neighbors only
+        assert!(f.gather_out && !f.gather_in);
     }
 
     #[test]
@@ -1028,6 +1085,74 @@ mod tests {
             })
             .unwrap();
         assert!(fp.is_none());
+    }
+
+    fn frontier_of(prog: &Program) -> Option<FrontierInfo> {
+        prog.body
+            .iter()
+            .find_map(|s| match s {
+                HostStmt::FixedPoint { frontier, .. } => Some(*frontier),
+                _ => None,
+            })
+            .flatten()
+    }
+
+    /// A min-label propagation whose relaxation *pulls* along reverse edges:
+    /// every `nxt` write lands on an in-neighbor of the loop element.
+    const PULL_CC: &str = "function Compute_CC_Pull(Graph g, propNode<int> comp) {
+        propNode<bool> modified;
+        propNode<bool> modified_nxt;
+        bool finished = False;
+        forall (v in g.nodes()) {
+          v.comp = v;
+        }
+        g.attachNodeProperty(modified = True, modified_nxt = False);
+        fixedPoint until (finished: !modified) {
+          forall (v in g.nodes().filter(modified == True)) {
+            for (u in g.nodes_to(v)) {
+              <u.comp, u.modified_nxt> = <Min(u.comp, v.comp), True>;
+            }
+          }
+          modified = modified_nxt;
+          g.attachNodeProperty(modified_nxt = False);
+        }
+      }";
+
+    #[test]
+    fn reverse_csr_pull_fixedpoint_is_frontier_eligible() {
+        let prog = compile_src(PULL_CC);
+        let f = frontier_of(&prog).expect("pull-style fixedPoint takes the sparse path");
+        assert_eq!(prog.props[f.flag as usize].name, "modified");
+        assert_eq!(prog.props[f.nxt as usize].name, "modified_nxt");
+        // pull kernel: the gather must walk rev_offsets/srcList, not the CSR
+        assert!(f.gather_in, "in-neighbor writes require the reverse-CSR gather");
+        assert!(!f.gather_out, "no out-neighbor write, no forward scan");
+    }
+
+    #[test]
+    fn two_hop_writing_kernels_stay_dense() {
+        // nxt writes land on neighbors-of-neighbors: outside the 1-hop
+        // neighborhood the sparse gather scans, so no fast path
+        let prog = compile_src(
+            "function f(Graph g, propNode<int> dist) {
+               propNode<bool> modified;
+               propNode<bool> modified_nxt;
+               bool fin = False;
+               g.attachNodeProperty(modified = True, modified_nxt = False);
+               fixedPoint until (fin: !modified) {
+                 forall (v in g.nodes().filter(modified == True)) {
+                   forall (nbr in g.neighbors(v)) {
+                     forall (hop2 in g.neighbors(nbr)) {
+                       hop2.modified_nxt = True;
+                     }
+                   }
+                 }
+                 modified = modified_nxt;
+                 g.attachNodeProperty(modified_nxt = False);
+               }
+             }",
+        );
+        assert!(frontier_of(&prog).is_none(), "2-hop writes must stay on the dense schedule");
     }
 
     #[test]

@@ -12,7 +12,7 @@ use crate::graph::csr::{Graph, Node};
 use crate::ir::ScalarTy;
 use anyhow::{bail, Result};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicI64, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicI32, AtomicI64, AtomicU64, Ordering};
 
 /// A runtime scalar value.
 #[derive(Clone, Copy, Debug, PartialEq)]
@@ -225,6 +225,20 @@ impl PropData {
         }
     }
 
+    /// Atomically claim a set bool cell: returns `true` iff the bit was set
+    /// and *this caller* cleared it. The parallel frontier gather uses this
+    /// so concurrent workers scanning overlapping neighborhoods claim each
+    /// newly-flagged vertex exactly once (no duplicates in the next
+    /// worklist). Non-bool storage never wins a claim — the compiler only
+    /// marks bool ping-pong buffers frontier-eligible.
+    #[inline]
+    pub fn claim_true(&self, i: usize) -> bool {
+        match self {
+            PropData::B(v) => v[i].swap(false, Ordering::Relaxed),
+            _ => false,
+        }
+    }
+
     /// OR over a bool property (fixedPoint convergence check).
     pub fn any_true(&self) -> bool {
         match self {
@@ -243,6 +257,51 @@ impl PropData {
                 v => v.as_i().unwrap_or(0),
             })
             .collect()
+    }
+}
+
+/// BFS level array discovered *by the compiled forward sweep itself* (the
+/// generated CUDA's do-while shape): `-1` marks undiscovered, the source is
+/// level 0, and workers racing to label a vertex settle it with one CAS —
+/// the winner also owns the vertex's slot in the next level bucket, so the
+/// per-level frontier gather produces no duplicates. Replaces the old
+/// host-side `reference::bfs_levels` pass (one whole O(V+E) traversal the
+/// interpreter no longer pays).
+pub struct Levels {
+    cells: Vec<AtomicI32>,
+}
+
+impl Levels {
+    /// All vertices undiscovered (`-1`).
+    pub fn new(n: usize) -> Levels {
+        Levels { cells: (0..n).map(|_| AtomicI32::new(-1)).collect() }
+    }
+
+    /// Unconditional label (the BFS source).
+    pub fn set(&self, v: usize, level: i32) {
+        self.cells[v].store(level, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn get(&self, v: usize) -> i32 {
+        self.cells[v].load(Ordering::Relaxed)
+    }
+
+    /// CAS `-1 → level`: `true` iff this caller discovered `v` (and so owns
+    /// pushing it into the next level bucket).
+    #[inline]
+    pub fn claim(&self, v: usize, level: i32) -> bool {
+        self.cells[v]
+            .compare_exchange(-1, level, Ordering::Relaxed, Ordering::Relaxed)
+            .is_ok()
+    }
+
+    pub fn len(&self) -> usize {
+        self.cells.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.cells.is_empty()
     }
 }
 
@@ -296,6 +355,10 @@ impl ScalarCell {
 pub struct Env<'g> {
     pub g: &'g Graph,
     pub threads: usize,
+    /// frontier-eligible fixedPoints may run the sparse worklist schedule
+    /// (see [`super::ExecOpts::frontier`]; `false` forces dense sweeps —
+    /// the bench harness uses it to time both paths on the same program)
+    pub frontier_enabled: bool,
     props: Vec<PropData>,
     prop_names: Vec<String>,
     scalars: Vec<ScalarCell>,
@@ -324,7 +387,7 @@ impl<'g> Env<'g> {
         let prop_names = prog.props.iter().map(|m| m.name.clone()).collect();
         let scalars = prog.scalars.iter().map(|m| ScalarCell::new(Val::zero_st(m.ty))).collect();
         let sets = vec![Vec::new(); prog.sets.len()];
-        Env { g, threads, props, prop_names, scalars, sets }
+        Env { g, threads, frontier_enabled: true, props, prop_names, scalars, sets }
     }
 
     /// (Re-)allocate a declared property. Re-executing a declaration (e.g. a
@@ -497,6 +560,33 @@ mod tests {
         assert_eq!(b.load(0), Val::B(true));
         b.atomic_reduce(0, ReduceOp::And, Val::B(false)).unwrap();
         assert_eq!(b.load(0), Val::B(false));
+    }
+
+    #[test]
+    fn claim_true_is_exclusive() {
+        let p = PropData::alloc_st(ScalarTy::Bool, 3);
+        p.store(1, Val::B(true));
+        assert!(p.claim_true(1), "first claim wins");
+        assert!(!p.claim_true(1), "second claim must lose");
+        assert!(!p.load_bool(1), "claim clears the bit");
+        assert!(!p.claim_true(0), "unset bit is never claimed");
+        // non-bool storage never wins (frontier buffers are always bool)
+        let i = PropData::alloc_st(ScalarTy::I32, 1);
+        i.store(0, Val::I(1));
+        assert!(!i.claim_true(0));
+    }
+
+    #[test]
+    fn levels_claim_once_and_get() {
+        let l = Levels::new(4);
+        assert_eq!(l.get(2), -1);
+        l.set(0, 0);
+        assert_eq!(l.get(0), 0);
+        assert!(l.claim(2, 1), "undiscovered vertex is claimable");
+        assert!(!l.claim(2, 1), "a vertex is discovered exactly once");
+        assert!(!l.claim(0, 5), "the source is never re-labeled");
+        assert_eq!(l.get(2), 1);
+        assert_eq!(l.len(), 4);
     }
 
     #[test]

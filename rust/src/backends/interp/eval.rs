@@ -8,7 +8,7 @@
 //! ([`super::compile`]).
 
 use super::compile::{CExpr, Idx};
-use super::env::{Env, Val};
+use super::env::{Env, Levels, Val};
 use crate::dsl::ast::{BinOp, ReduceOp, UnOp};
 use crate::graph::csr::Node;
 use anyhow::{anyhow, bail, Result};
@@ -24,8 +24,10 @@ pub struct EvalCtx<'e, 'g> {
     pub env: &'e Env<'g>,
     /// edge id of the innermost tracked neighbor iteration
     pub current_edge: usize,
-    /// BFS level array while inside iterateInBFS / iterateInReverse
-    pub levels: Option<&'e [i32]>,
+    /// BFS level array while inside iterateInBFS / iterateInReverse —
+    /// discovered on the fly by the compiled forward sweep, so the cells are
+    /// atomic ([`Levels`])
+    pub levels: Option<&'e Levels>,
 }
 
 impl<'e, 'g> EvalCtx<'e, 'g> {

@@ -24,21 +24,48 @@
 //! Par mode uses `STARPLAT_THREADS` workers when set, otherwise the machine's
 //! available parallelism (see [`crate::util::pool::default_threads`]).
 //! [`run_with_threads`] pins an explicit worker count — the Seq/Par parity
-//! suite uses it to check determinism across 1/2/8 workers.
+//! suite uses it to check determinism across 1/2/8 workers — and
+//! [`run_with_opts`] additionally exposes the frontier knob below.
 //!
-//! # Frontier fast path
+//! # Frontier engine
 //!
 //! `fixedPoint` loops whose body is the canonical relaxation shape
 //! (`forall` filtered on a bool flag, then `flag = flag_nxt`, then
-//! `attach(flag_nxt = False)`, with all flag-nxt writes landing on the loop
-//! element or its out-neighbors) are executed as a sparse worklist: only
+//! `attach(flag_nxt = False)`) are executed as a **sparse worklist**: only
 //! flagged vertices are processed, and the next worklist is gathered from
-//! the updated neighborhood. When the frontier exceeds |V| / 4 the executor
-//! falls back to a dense filtered sweep, so mesh-like graphs (road networks)
-//! get the asymptotic win while dense frontiers keep the streaming sweep.
-//! Results are bit-identical to the dense schedule: the kernel body itself
-//! is unchanged, only the set of vertices known to fail the filter is
-//! skipped.
+//! exactly the neighborhoods the kernel can have written.
+//!
+//! - **Eligibility** ([`compile::FrontierInfo`]): all flag-nxt writes must
+//!   land on the loop element, its out-neighbors (push kernels, e.g.
+//!   SSSP/CC), or its in-neighbors (reverse-CSR pull kernels — the gather
+//!   then walks `rev_offsets/srcList`). Kernels writing 2-hop neighborhoods
+//!   stay dense.
+//! - **Parallel claim-buffer gather**: after each sweep, workers scan the
+//!   frontier's neighborhoods with per-worker claim buffers
+//!   ([`crate::util::pool::parallel_collect`]); an atomic swap on the
+//!   ping-pong bit ([`env::PropData::claim_true`]) makes each claim
+//!   exclusive, and the buffers concatenate via prefix offsets into the next
+//!   worklist. Small frontiers (< [`FRONTIER_PAR_MIN`]) keep the sequential
+//!   scan — thread fan-out only pays for itself past that size.
+//! - **Density fallback**: when the frontier exceeds |V| / 4 the executor
+//!   uses a dense filtered sweep, so mesh-like graphs (road networks) get
+//!   the asymptotic win while dense frontiers keep the streaming sweep.
+//! - Results are bit-identical to the dense schedule: the kernel body itself
+//!   is unchanged, only the set of vertices known to fail the filter is
+//!   skipped. `STARPLAT_FRONTIER=0` (or [`ExecOpts::frontier`] = false)
+//!   forces the dense schedule — the bench harness times both paths.
+//!
+//! # Compiled BFS levels
+//!
+//! `iterateInBFS` discovers levels **in the compiled form itself**: a
+//! claim-buffer expansion loop CAS-labels each next level
+//! ([`env::Levels`]) and builds the per-level buckets directly — the
+//! buckets the forward sweep walks and the reverse sweep replays backwards.
+//! This replaces the old host-side `reference::bfs_levels` call (a separate
+//! sequential traversal) plus its O(V) bucketing scan with one parallel
+//! discovery. Discovery settles every label before any body sweep runs,
+//! because nested BFS-DAG loops read levels two hops from the current
+//! frontier.
 //!
 //! Semantics notes (matching §2/§3 of the paper):
 //! - `x.p = x.p + e` inside a parallel region is executed as an atomic
@@ -46,6 +73,9 @@
 //! - inside `iterateInBFS` / `iterateInReverse`, `g.neighbors(v)` yields the
 //!   BFS-DAG children of `v` (level(w) == level(v)+1);
 //! - `fixedPoint until (fin : !prop)` loops until no vertex has `prop` set.
+//!
+//! The end-to-end pipeline (parse → sema → plan → render, and where this
+//! backend sits in it) is documented in `docs/ARCHITECTURE.md`.
 
 pub mod compile;
 pub mod env;
@@ -58,13 +88,33 @@ use anyhow::{anyhow, bail, Result};
 use compile::{
     CExpr, CKernel, CUpdate, DevIter, DevStmt, FrontierInfo, HostIter, HostStmt, Idx, ParamBind,
 };
-use env::{Env, PropData, Val};
+use env::{Env, Levels, PropData, Val};
 use eval::{apply_reduce, eval, node_of, EvalCtx, NO_EDGE};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Mode {
     Seq,
     Par,
+}
+
+/// Below this many frontier vertices the post-sweep gather stays sequential:
+/// spawning the pool costs more than scanning a few thousand adjacency rows.
+pub const FRONTIER_PAR_MIN: usize = 4096;
+
+/// Execution knobs beyond the worker count.
+#[derive(Clone, Copy, Debug)]
+pub struct ExecOpts {
+    /// worker count; 0 = [`crate::util::pool::default_threads`]
+    pub threads: usize,
+    /// allow the sparse frontier schedule for eligible fixedPoints (default
+    /// true; `STARPLAT_FRONTIER=0` in the environment also disables it)
+    pub frontier: bool,
+}
+
+impl Default for ExecOpts {
+    fn default() -> Self {
+        ExecOpts { threads: 0, frontier: true }
+    }
 }
 
 /// External argument bindings for a DSL function invocation.
@@ -121,8 +171,27 @@ pub fn run_with_threads(
     args: &Args,
     threads: usize,
 ) -> Result<Output> {
+    run_with_opts(tf, g, args, ExecOpts { threads, frontier: true })
+}
+
+/// Does the environment allow the sparse frontier schedule?
+/// (`STARPLAT_FRONTIER=0` / `off` forces dense sweeps everywhere.) Public
+/// so the bench harness labels its cells with the same gate it runs under.
+pub fn frontier_env_enabled() -> bool {
+    match std::env::var("STARPLAT_FRONTIER") {
+        Ok(v) => !(v == "0" || v.eq_ignore_ascii_case("off")),
+        Err(_) => true,
+    }
+}
+
+/// [`run`] with full execution options ([`ExecOpts`]). The bench harness
+/// uses this to time the frontier and dense schedules on the same program.
+pub fn run_with_opts(tf: &TypedFunction, g: &Graph, args: &Args, opts: ExecOpts) -> Result<Output> {
+    let threads =
+        if opts.threads == 0 { crate::util::pool::default_threads() } else { opts.threads };
     let prog = compile::compile(tf)?;
     let mut env = Env::new(g, &prog, threads.max(1));
+    env.frontier_enabled = opts.frontier && frontier_env_enabled();
     // bind scalar / set params
     for pb in &prog.params {
         match pb {
@@ -351,7 +420,14 @@ impl<'g> Exec<'g> {
     }
 
     /// `iterateInBFS … iterateInReverse` (paper §3.4): level-synchronous
-    /// sweeps with DAG-children neighbor semantics.
+    /// sweeps with DAG-children neighbor semantics. Levels are discovered by
+    /// the compiled form itself: a claim-buffer expansion loop CAS-labels
+    /// each next level ([`env::Levels`]) and builds the per-level buckets
+    /// directly, replacing the old host-side `reference::bfs_levels` pass
+    /// plus its O(V) bucketing scan. Discovery completes *before* any body
+    /// sweep runs: a nested BFS-DAG loop (`neighbors` of a DAG child) reads
+    /// levels two hops out, so labels must be settled for the whole graph,
+    /// not just one level ahead.
     fn exec_bfs(
         &self,
         reg: u32,
@@ -361,31 +437,47 @@ impl<'g> Exec<'g> {
         frame_size: usize,
     ) -> Result<()> {
         let env = &self.env;
-        let src = env.scalar(from).as_i()? as Node;
-        let levels = crate::algorithms::reference::bfs_levels(env.g, src);
-        let maxl = levels
-            .iter()
-            .filter(|&&l| l != crate::algorithms::reference::INF)
-            .copied()
-            .max()
-            .unwrap_or(0);
-        // bucket vertices by level
-        let mut by_level: Vec<Vec<Node>> = vec![Vec::new(); (maxl + 1) as usize];
-        for (v, &l) in levels.iter().enumerate() {
-            if l != crate::algorithms::reference::INF {
-                by_level[l as usize].push(v as Node);
-            }
+        let n = env.g.num_nodes();
+        let src = env.scalar(from).as_i()? as usize;
+        if src >= n {
+            bail!("iterateInBFS source {src} out of range (|V| = {n})");
         }
-        // forward sweep
-        for frontier in &by_level {
-            sweep(env, Domain::List(frontier), reg, None, body, frame_size, Some(&levels))?;
+        let levels = Levels::new(n);
+        levels.set(src, 0);
+        let mut frontier: Vec<Node> = vec![src as Node];
+        let mut by_level: Vec<Vec<Node>> = Vec::new();
+        let mut depth: i32 = 0;
+        while !frontier.is_empty() {
+            let discover = |i: usize, out: &mut Vec<Node>| {
+                for &w in env.g.neighbors(frontier[i]) {
+                    if levels.claim(w as usize, depth + 1) {
+                        out.push(w);
+                    }
+                }
+            };
+            let next: Vec<Node> = if env.threads == 1 || frontier.len() < FRONTIER_PAR_MIN {
+                let mut out = Vec::new();
+                for i in 0..frontier.len() {
+                    discover(i, &mut out);
+                }
+                out
+            } else {
+                crate::util::pool::parallel_collect(frontier.len(), env.threads, 64, discover)
+            };
+            by_level.push(frontier);
+            frontier = next;
+            depth += 1;
         }
-        // reverse sweep
+        // forward sweep over the discovered buckets
+        for bucket in &by_level {
+            sweep(env, Domain::List(bucket), reg, None, body, frame_size, Some(&levels))?;
+        }
+        // reverse sweep: walk the level buckets backwards
         if let Some((cond, rbody)) = reverse {
-            for frontier in by_level.iter().rev() {
+            for bucket in by_level.iter().rev() {
                 sweep(
                     env,
-                    Domain::List(frontier),
+                    Domain::List(bucket),
                     reg,
                     Some(cond),
                     rbody,
@@ -410,8 +502,9 @@ impl<'g> Exec<'g> {
             // The sparse schedule assumes the ping-pong buffer starts clear
             // (the compiler proved the kernel only sets bits reachable from
             // the frontier). A program that pre-seeds `nxt` before the loop
-            // gets the dense schedule instead.
-            if !self.env.prop(fi.nxt).any_true() {
+            // gets the dense schedule instead, as does an execution with the
+            // frontier engine switched off (ExecOpts / STARPLAT_FRONTIER=0).
+            if self.env.frontier_enabled && !self.env.prop(fi.nxt).any_true() {
                 let HostStmt::Kernel(k) = &body[0] else {
                     bail!("internal: frontier plan without a leading kernel")
                 };
@@ -434,8 +527,16 @@ impl<'g> Exec<'g> {
 
     /// Sparse-worklist execution of a frontier-eligible fixedPoint: process
     /// only flagged vertices, gather the next worklist from the updated
-    /// neighborhood (the compiler proved all flag-nxt writes land there),
+    /// neighborhoods (the compiler proved all flag-nxt writes land on the
+    /// element, its out-neighbors, and/or its in-neighbors — `fi.gather_*`),
     /// and fall back to dense filtered sweeps while the frontier is > |V|/4.
+    ///
+    /// The post-sweep gather runs on the pool once the frontier is large
+    /// enough ([`FRONTIER_PAR_MIN`]): workers claim newly-flagged vertices
+    /// into per-worker buffers via an exclusive atomic swap
+    /// ([`PropData::claim_true`]) and the buffers concatenate by prefix
+    /// offsets ([`crate::util::pool::parallel_collect`]) — this was a
+    /// sequential scan that bottlenecked past ~10M vertices.
     fn frontier_loop(
         &self,
         var: u32,
@@ -452,7 +553,33 @@ impl<'g> Exec<'g> {
         }
         let mut frontier: Vec<Node> =
             (0..n as Node).filter(|&v| flag.load_bool(v as usize)).collect();
+        // reused across iterations on the sequential gather paths (mesh
+        // graphs run hundreds of small-frontier rounds: no per-round alloc)
         let mut next: Vec<Node> = Vec::new();
+        // claim a vertex whose nxt bit the kernel set: the swap is exclusive,
+        // so concurrent workers scanning overlapping neighborhoods emit each
+        // vertex into exactly one claim buffer
+        let claim = |w: Node, out: &mut Vec<Node>| {
+            if nxt.claim_true(w as usize) {
+                flag.store(w as usize, Val::B(true));
+                out.push(w);
+            }
+        };
+        // scan one frontier vertex's written neighborhoods
+        let claim_around = |v: Node, out: &mut Vec<Node>| {
+            claim(v, out);
+            if fi.gather_out {
+                for &w in env.g.neighbors(v) {
+                    claim(w, out);
+                }
+            }
+            if fi.gather_in {
+                // pull kernels write in-neighbors: walk rev_offsets/srcList
+                for &w in env.g.in_neighbors(v) {
+                    claim(w, out);
+                }
+            }
+        };
         for _ in 0..max_iters {
             if frontier.is_empty() {
                 // dense-equivalent exit state: both flag arrays all-false
@@ -474,30 +601,41 @@ impl<'g> Exec<'g> {
                 // construction — skip evaluating it
                 sweep(env, Domain::List(&frontier), k.reg, None, &k.body, k.frame_size, None)?;
             }
-            // emulate `flag = nxt; attach(nxt = False);` sparsely:
-            // clear the old frontier's flags, then claim every vertex whose
-            // nxt bit the kernel set
-            for &v in &frontier {
-                flag.store(v as usize, Val::B(false));
-            }
-            next.clear();
-            let claim = |w: Node, next: &mut Vec<Node>| {
-                if nxt.load_bool(w as usize) {
-                    nxt.store(w as usize, Val::B(false));
-                    flag.store(w as usize, Val::B(true));
-                    next.push(w);
-                }
-            };
-            if dense {
-                for v in 0..n as Node {
-                    claim(v, &mut next);
-                }
+            // emulate `flag = nxt; attach(nxt = False);` sparsely: clear the
+            // old frontier's flags, then claim the newly-flagged vertices.
+            // The clear must fully precede the claims (a vertex may be in
+            // both sets), so these are two pool passes, not one.
+            let parallel = env.threads > 1 && frontier.len() >= FRONTIER_PAR_MIN;
+            if parallel {
+                let fr = &frontier;
+                crate::util::pool::parallel_for(fr.len(), env.threads, |i| {
+                    flag.store(fr[i] as usize, Val::B(false));
+                });
             } else {
                 for &v in &frontier {
-                    claim(v, &mut next);
-                    for &w in env.g.neighbors(v) {
-                        claim(w, &mut next);
+                    flag.store(v as usize, Val::B(false));
+                }
+            }
+            if dense {
+                if env.threads > 1 && n >= FRONTIER_PAR_MIN {
+                    next = crate::util::pool::parallel_collect(n, env.threads, 1024, |i, out| {
+                        claim(i as Node, out)
+                    });
+                } else {
+                    next.clear();
+                    for v in 0..n as Node {
+                        claim(v, &mut next);
                     }
+                }
+            } else if parallel {
+                let fr = &frontier;
+                next = crate::util::pool::parallel_collect(fr.len(), env.threads, 64, |i, out| {
+                    claim_around(fr[i], out)
+                });
+            } else {
+                next.clear();
+                for &v in &frontier {
+                    claim_around(v, &mut next);
                 }
             }
             std::mem::swap(&mut frontier, &mut next);
@@ -544,7 +682,7 @@ fn sweep(
     filter: Option<&CExpr>,
     body: &[DevStmt],
     frame_size: usize,
-    levels: Option<&[i32]>,
+    levels: Option<&Levels>,
 ) -> Result<()> {
     let err = std::sync::Mutex::new(None::<anyhow::Error>);
     let failed = std::sync::atomic::AtomicBool::new(false);
@@ -688,11 +826,17 @@ fn exec_dev_for(
             let v = node_of(*of, ctx, frame)?;
             let levels =
                 ctx.levels.ok_or_else(|| anyhow!("BFS-DAG iteration outside iterateInBFS"))?;
-            let lv = levels[v as usize];
+            let lv = levels.get(v as usize);
+            if lv < 0 {
+                // a vertex outside the BFS tree (sentinel -1) has no DAG
+                // children; without this guard `-1 + 1` would claim the
+                // level-0 source as its child
+                return Ok(());
+            }
             let saved_edge = ctx.current_edge;
             ctx.current_edge = NO_EDGE;
             for &w in env.g.neighbors(v) {
-                if levels[w as usize] != lv + 1 {
+                if levels.get(w as usize) != lv + 1 {
                     continue;
                 }
                 frame[reg as usize] = Val::I(w as i64);

@@ -39,8 +39,18 @@ pub(crate) trait KernelDialect {
     }
 
     /// Plain store. `atomic` marks a target whose buffer has an atomic
-    /// element type in this dialect (Metal / WGSL); the C family ignores it.
-    fn store(&self, buf: &mut CodeBuf, loc: &str, value: &str, _atomic: bool) {
+    /// element type in this dialect (Metal / WGSL), `ty` the target
+    /// property's machine type (`None` for kernel locals) — WGSL needs it to
+    /// bitcast stores into f32 bit-pattern buffers. The C family ignores
+    /// both.
+    fn store(
+        &self,
+        buf: &mut CodeBuf,
+        loc: &str,
+        value: &str,
+        _atomic: bool,
+        _ty: Option<ScalarTy>,
+    ) {
         buf.line(&format!("{loc} = {value};"));
     }
 
@@ -99,14 +109,26 @@ fn prop_ref(st: &Style, plan: &DevicePlan, slot: u32, obj: &str) -> String {
 }
 
 /// Read of one property element, wrapped in the dialect's atomic load when
-/// the buffer is atomic in this kernel.
+/// the buffer is atomic in this kernel (bit-pattern f32 buffers additionally
+/// bitcast the loaded word back to float).
 fn prop_read(st: &Style, plan: &DevicePlan, slot: u32, obj: &str) -> String {
     let cell = prop_ref(st, plan, slot, obj);
-    if st.atomic_props.contains(plan.prop_name(slot)) {
+    let name = plan.prop_name(slot);
+    if st.atomic_f32_props.contains(name) {
+        (st.atomic_f32_load)(&cell)
+    } else if st.atomic_props.contains(name) {
         (st.atomic_load)(&cell)
     } else {
         cell
     }
+}
+
+/// Is this property's buffer atomically typed in the current kernel (either
+/// the native-atomic set or the bit-pattern f32 set)? Stores to it must go
+/// through the dialect's atomic-store spelling.
+fn is_atomic(st: &Style, plan: &DevicePlan, slot: u32) -> bool {
+    let name = plan.prop_name(slot);
+    st.atomic_props.contains(name) || st.atomic_f32_props.contains(name)
 }
 
 /// The one kernel-statement driver shared by every text backend: walks a
@@ -126,12 +148,12 @@ pub(crate) fn render_kernel_ops<D: KernelDialect + ?Sized>(
                 d.decl(buf, *ty, name, init.as_deref());
             }
             KernelOp::AssignVar { name, value } => {
-                d.store(buf, &(st.scalar)(name), &emit(value, &st), false);
+                d.store(buf, &(st.scalar)(name), &emit(value, &st), false, None);
             }
             KernelOp::AssignProp { slot, obj, value } => {
-                let atomic = st.atomic_props.contains(plan.prop_name(*slot));
+                let atomic = is_atomic(&st, plan, *slot);
                 let loc = prop_ref(&st, plan, *slot, obj);
-                d.store(buf, &loc, &emit(value, &st), atomic);
+                d.store(buf, &loc, &emit(value, &st), atomic, Some(plan.meta(*slot).ty));
             }
             KernelOp::Reduce { cell, op, ty, value } => {
                 let val = emit(value, &st);
@@ -152,14 +174,15 @@ pub(crate) fn render_kernel_ops<D: KernelDialect + ?Sized>(
                 d.if_open(buf, &format!("{read} {cmp} {tmp}"));
                 d.min_max_update(buf, *kind, &loc, &tmp, *ty);
                 for (t, v) in extra {
-                    let (tloc, atomic) = match t {
-                        KTarget::Var(n) => ((st.scalar)(n), false),
+                    let (tloc, atomic, tty) = match t {
+                        KTarget::Var(n) => ((st.scalar)(n), false, None),
                         KTarget::Prop { slot, obj } => (
                             prop_ref(&st, plan, *slot, obj),
-                            st.atomic_props.contains(plan.prop_name(*slot)),
+                            is_atomic(&st, plan, *slot),
+                            Some(plan.meta(*slot).ty),
                         ),
                     };
-                    d.store(buf, &tloc, &emit(v, &st), atomic);
+                    d.store(buf, &tloc, &emit(v, &st), atomic, tty);
                 }
                 if *or_flag {
                     // any successful update un-finishes the fixed point (§4.1)

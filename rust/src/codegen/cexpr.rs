@@ -37,6 +37,14 @@ pub struct Style {
     /// wrap a read of an atomic cell, e.g. `gpu_dist[v]` →
     /// `atomicLoad(&gpu_dist[v])`
     pub atomic_load: fn(&str) -> String,
+    /// float properties whose buffer is an *integer-word* atomic in this
+    /// kernel (WGSL's `array<atomic<u32>>` — WGSL has no f32 atomics, so
+    /// atomically-updated f32 buffers store the bit pattern and every access
+    /// bitcasts). Empty for every backend with native float atomics.
+    pub atomic_f32_props: HashSet<String>,
+    /// wrap a read of a bit-pattern f32 cell, e.g. `gpu_sigma[v]` →
+    /// `bitcast<f32>(atomicLoad(&gpu_sigma[v]))`
+    pub atomic_f32_load: fn(&str) -> String,
 }
 
 pub fn cuda_style() -> Style {
@@ -55,6 +63,8 @@ pub fn cuda_style() -> Style {
         edge_fn_passes_graph: true,
         atomic_props: HashSet::new(),
         atomic_load: |r| r.to_string(),
+        atomic_f32_props: HashSet::new(),
+        atomic_f32_load: |r| r.to_string(),
     }
 }
 
@@ -98,8 +108,12 @@ pub fn metal_style(atomic_props: HashSet<String>) -> Style {
 /// WGSL device code: storage-buffer names keep the CUDA `gpu_` convention,
 /// booleans are `i32` words (bool is not host-shareable), `INF` is the i32
 /// max literal, and atomically-updated buffers are `array<atomic<i32>>`
-/// whose reads go through `atomicLoad`.
-pub fn wgsl_style(atomic_props: HashSet<String>) -> Style {
+/// whose reads go through `atomicLoad`. WGSL has no float atomics at all,
+/// so atomically-updated *f32* buffers (`atomic_f32_props`) are
+/// `array<atomic<u32>>` holding the bit pattern: plain reads bitcast the
+/// loaded word back to f32, and the update helpers (`atomicAddF32` & co.)
+/// run bitcast compare-exchange loops.
+pub fn wgsl_style(atomic_props: HashSet<String>, atomic_f32_props: HashSet<String>) -> Style {
     Style {
         bool_true: "1",
         bool_false: "0",
@@ -108,6 +122,8 @@ pub fn wgsl_style(atomic_props: HashSet<String>) -> Style {
         edge_fn_passes_graph: false,
         atomic_props,
         atomic_load: |r| format!("atomicLoad(&{r})"),
+        atomic_f32_props,
+        atomic_f32_load: |r| format!("bitcast<f32>(atomicLoad(&{r}))"),
         ..cuda_style()
     }
 }
@@ -130,7 +146,9 @@ pub fn emit(e: &Expr, st: &Style) -> String {
         Expr::Var(v) => (st.scalar)(v),
         Expr::Prop { obj, prop } => {
             let cell = format!("{}[{}]", (st.prop_array)(prop), (st.scalar)(obj));
-            if st.atomic_props.contains(prop) {
+            if st.atomic_f32_props.contains(prop) {
+                (st.atomic_f32_load)(&cell)
+            } else if st.atomic_props.contains(prop) {
                 (st.atomic_load)(&cell)
             } else {
                 cell
@@ -236,13 +254,24 @@ mod tests {
     #[test]
     fn wgsl_style_spellings() {
         let e = first_expr("function f(Graph g) { int x = INF; }");
-        assert_eq!(emit(&e, &wgsl_style(HashSet::new())), "2147483647");
+        assert_eq!(emit(&e, &wgsl_style(HashSet::new(), HashSet::new())), "2147483647");
         let e =
             first_expr("function f(Graph g, propNode<int> dist, node v) { int x = v.dist + 3; }");
-        let mut st = wgsl_style(["dist".to_string()].into_iter().collect());
+        let mut st = wgsl_style(["dist".to_string()].into_iter().collect(), HashSet::new());
         assert_eq!(emit(&e, &st), "atomicLoad(&gpu_dist[v]) + 3");
         st.atomic_props.clear();
         assert_eq!(emit(&e, &st), "gpu_dist[v] + 3");
+    }
+
+    #[test]
+    fn wgsl_style_bitcasts_f32_atomic_reads() {
+        // an atomically-updated f32 buffer is atomic<u32> bit patterns:
+        // plain reads load the word and bitcast back to f32
+        let e = first_expr(
+            "function f(Graph g, propNode<float> sigma, node v) { float x = v.sigma + 1.0; }",
+        );
+        let st = wgsl_style(HashSet::new(), ["sigma".to_string()].into_iter().collect());
+        assert_eq!(emit(&e, &st), "bitcast<f32>(atomicLoad(&gpu_sigma[v])) + 1.0");
     }
 
     #[test]

@@ -29,6 +29,7 @@ use super::buf::CodeBuf;
 use super::cexpr::{emit, metal_style, Style};
 use super::{render_host_schedule, HostDialect};
 use crate::dsl::ast::{Expr, MinMax, ReduceOp};
+use crate::ir::kernel::KernelOp;
 use crate::ir::plan::{DevicePlan, KernelParam, KernelPlan, TypeMap};
 use crate::ir::{IrProgram, ScalarTy};
 use std::collections::HashSet;
@@ -81,7 +82,14 @@ impl KernelDialect for MetalKernel {
         metal_style(self.atomic.clone())
     }
 
-    fn store(&self, buf: &mut CodeBuf, loc: &str, value: &str, atomic: bool) {
+    fn store(
+        &self,
+        buf: &mut CodeBuf,
+        loc: &str,
+        value: &str,
+        atomic: bool,
+        _ty: Option<ScalarTy>,
+    ) {
         if atomic {
             buf.line(&format!("atomic_store_explicit(&{loc}, {value}, memory_order_relaxed);"));
         } else {
@@ -136,6 +144,23 @@ pub(crate) fn generate_with(_ir: &IrProgram, plan: &DevicePlan) -> String {
     g.run()
 }
 
+/// Does any lowered kernel body multiply into an atomic location? MSL has no
+/// `atomic_fetch_mul`, so the Mul reduce arm calls the `atomicMulCAS` helper
+/// this predicate gates.
+fn needs_mul_cas(plan: &DevicePlan) -> bool {
+    plan.kernels.iter().filter_map(|k| k.body.as_ref()).any(|b| {
+        let mut found = false;
+        for op in &b.ops {
+            op.visit(&mut |o| {
+                if matches!(o, KernelOp::Reduce { op: ReduceOp::Mul, .. }) {
+                    found = true;
+                }
+            });
+        }
+        found
+    })
+}
+
 struct Gen<'a> {
     plan: &'a DevicePlan,
     kernels: CodeBuf,
@@ -150,6 +175,24 @@ impl<'a> Gen<'a> {
         self.kernels.line("#include \"libstarplat_metal.h\"");
         self.kernels.line("using namespace metal;");
         self.kernels.line("");
+        if needs_mul_cas(plan) {
+            // products have no fetch-op (§3.3): CAS-loop over the cell,
+            // overloaded for the two atomic element families the buffers use
+            self.kernels.line("// MSL has no atomic_fetch_mul: products CAS-loop on the cell");
+            for (aty, cty) in [("atomic_int", "int"), ("atomic_float", "float")] {
+                self.kernels.open(&format!(
+                    "static inline void atomicMulCAS(device {aty}* cell, {cty} value) {{"
+                ));
+                self.kernels.line(&format!(
+                    "{cty} old = atomic_load_explicit(cell, memory_order_relaxed);"
+                ));
+                self.kernels.line(
+                    "while (!atomic_compare_exchange_weak_explicit(cell, &old, old * value, memory_order_relaxed, memory_order_relaxed)) { }",
+                );
+                self.kernels.close("}");
+            }
+            self.kernels.line("");
+        }
         self.host.line("// ---- host.mm (metal-cpp) ----");
         self.host.line("#include <Metal/Metal.hpp>");
         self.host.line("#include <climits>");

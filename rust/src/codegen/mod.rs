@@ -39,6 +39,10 @@
 //! host-schedule, and kernel-op manifests — that are byte-identical across
 //! all text backends (`tests/plan_numbering.rs`,
 //! `tests/host_schedule_conformance.rs`).
+//!
+//! The end-to-end walk-through of this pipeline — with a worked SSSP
+//! example showing all three manifests, pinned to generator output by
+//! `tests/architecture_doc.rs` — lives in `docs/ARCHITECTURE.md`.
 
 pub mod body;
 pub mod buf;

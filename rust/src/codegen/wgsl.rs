@@ -25,8 +25,13 @@
 //! - 32-bit scalars only; `long` and `double` demote ([`TypeMap::WGSL`]),
 //!   and `bool` buffers are `i32` words (bool is not host-shareable);
 //! - `INF` is the literal `2147483647`;
-//! - f32 reductions go through an emitted `atomicAddF32` helper (WGSL has
-//!   i32/u32 atomics only — the §3.3 OpenCL float-atomics story again).
+//! - WGSL has i32/u32 atomics only (the §3.3 OpenCL float-atomics story
+//!   again), so atomically-updated f32 buffers are `array<atomic<u32>>`
+//!   *bit patterns*: emitted `atomicAddF32` / `atomicMinF32` /
+//!   `atomicMaxF32` helpers run `bitcast` compare-exchange loops, plain
+//!   reads spell `bitcast<f32>(atomicLoad(&…))`, and plain stores
+//!   `atomicStore(&…, bitcast<u32>(…))`. Host-side transfers are unchanged
+//!   — the bit pattern is byte-identical to the float array.
 
 use super::body::{render_kernel_ops, KernelDialect};
 use super::buf::CodeBuf;
@@ -43,8 +48,9 @@ const HOST: &TypeMap = &TypeMap::OPENCL;
 /// Device-side WGSL types.
 const DEV: &TypeMap = &TypeMap::WGSL;
 
-/// Is this type's buffer representable as `atomic<i32>`? (f32 atomics are
-/// emulated through helpers on plain buffers instead.)
+/// Is this type's buffer representable as `atomic<i32>`? (f32 buffers that
+/// need atomics are `atomic<u32>` bit patterns instead — WGSL has i32/u32
+/// atomics only.)
 fn i32_atomic(ty: ScalarTy) -> bool {
     !matches!(ty, ScalarTy::F32 | ScalarTy::F64)
 }
@@ -52,19 +58,22 @@ fn i32_atomic(ty: ScalarTy) -> bool {
 /// WGSL device dialect. `atomic` holds the i32-representable props this
 /// kernel updates atomically — their buffers are `array<atomic<i32>>`, so
 /// plain reads wrap in `atomicLoad` and plain stores in `atomicStore`.
+/// `atomic_f32` holds the float props updated atomically: their buffers are
+/// `array<atomic<u32>>` *bit patterns* (the real §3.3 story — WGSL has no
+/// float atomics), so reads bitcast the loaded word, stores bitcast the
+/// value, and the update helpers run bitcast-CAS loops.
 struct WgslKernel {
     atomic: HashSet<String>,
+    atomic_f32: HashSet<String>,
 }
 
 impl WgslKernel {
     fn for_kernel(plan: &DevicePlan, k: &KernelPlan) -> WgslKernel {
+        let (ints, floats): (Vec<u32>, Vec<u32>) =
+            k.atomic_props.iter().partition(|&&s| i32_atomic(plan.meta(s).ty));
         WgslKernel {
-            atomic: k
-                .atomic_props
-                .iter()
-                .filter(|&&s| i32_atomic(plan.meta(s).ty))
-                .map(|&s| plan.prop_name(s).to_string())
-                .collect(),
+            atomic: ints.iter().map(|&s| plan.prop_name(s).to_string()).collect(),
+            atomic_f32: floats.iter().map(|&s| plan.prop_name(s).to_string()).collect(),
         }
     }
 }
@@ -75,7 +84,7 @@ impl KernelDialect for WgslKernel {
     }
 
     fn style(&self) -> Style {
-        wgsl_style(self.atomic.clone())
+        wgsl_style(self.atomic.clone(), self.atomic_f32.clone())
     }
 
     fn decl(&self, buf: &mut CodeBuf, ty: ScalarTy, name: &str, init: Option<&str>) {
@@ -86,8 +95,19 @@ impl KernelDialect for WgslKernel {
         }
     }
 
-    fn store(&self, buf: &mut CodeBuf, loc: &str, value: &str, atomic: bool) {
-        if atomic {
+    fn store(
+        &self,
+        buf: &mut CodeBuf,
+        loc: &str,
+        value: &str,
+        atomic: bool,
+        ty: Option<ScalarTy>,
+    ) {
+        // an atomic f32 target is an atomic<u32> bit-pattern cell: store the
+        // value's bit pattern, not the float (type-driven, from the plan)
+        if atomic && matches!(ty, Some(ScalarTy::F32 | ScalarTy::F64)) {
+            buf.line(&format!("atomicStore(&{loc}, bitcast<u32>({value}));"));
+        } else if atomic {
             buf.line(&format!("atomicStore(&{loc}, {value});"));
         } else {
             buf.line(&format!("{loc} = {value};"));
@@ -102,6 +122,10 @@ impl KernelDialect for WgslKernel {
             }
             (ReduceOp::Add | ReduceOp::Count, _) => {
                 buf.line(&format!("atomicAdd(&{loc}, {val});"))
+            }
+            (ReduceOp::Mul, ScalarTy::F32 | ScalarTy::F64) => {
+                // f32 products CAS on the bit-pattern cell, like the adds
+                buf.line(&format!("atomicMulF32(&{loc}, {val});"));
             }
             (ReduceOp::Mul, _) => buf.line(&format!("atomicMulCAS(&{loc}, {val});")),
             (ReduceOp::And, _) => buf.line(&format!("atomicAnd(&{loc}, {val});")),
@@ -139,6 +163,7 @@ struct Needs {
     f32_atomics: bool,
     f32_min: bool,
     f32_max: bool,
+    f32_mul: bool,
     mul_cas: bool,
     edge_lookup: bool,
 }
@@ -178,6 +203,7 @@ fn scan_ops(ops: &[KernelOp], needs: &mut Needs) {
                     (ReduceOp::Add | ReduceOp::Count, ScalarTy::F32 | ScalarTy::F64) => {
                         needs.f32_atomics = true
                     }
+                    (ReduceOp::Mul, ScalarTy::F32 | ScalarTy::F64) => needs.f32_mul = true,
                     (ReduceOp::Mul, _) => needs.mul_cas = true,
                     _ => {}
                 }
@@ -272,15 +298,18 @@ impl<'a> Gen<'a> {
                 }
                 KernelParam::Prop(s) => {
                     let m = self.plan.meta(*s);
-                    let elem = if atomic.contains(s) && i32_atomic(m.ty) {
-                        "atomic<i32>".to_string()
+                    let elem = if atomic.contains(s) {
+                        // f32 atomics don't exist in WGSL: atomically-updated
+                        // float buffers hold u32 bit patterns (same bytes on
+                        // the host side, so transfers are unchanged)
+                        if i32_atomic(m.ty) { "atomic<i32>" } else { "atomic<u32>" }.to_string()
                     } else {
                         DEV.name(m.ty).to_string()
                     };
                     storage.push((format!("gpu_{}", m.name), elem, false));
                 }
                 KernelParam::ReductionCell { name, ty } => {
-                    let elem = if i32_atomic(*ty) { "atomic<i32>" } else { DEV.name(*ty) };
+                    let elem = if i32_atomic(*ty) { "atomic<i32>" } else { "atomic<u32>" };
                     storage.push((format!("d_{name}"), elem.to_string(), false));
                 }
                 KernelParam::OrFlag => {
@@ -336,25 +365,51 @@ impl<'a> Gen<'a> {
             b.close("}");
             b.line("");
         }
-        if needs.f32_atomics || needs.f32_min || needs.f32_max {
-            b.line("// WGSL atomics are i32/u32-only: f32 updates are emulated");
-            b.line("// (production builds bitcast through atomic<u32> CAS)");
+        if needs.f32_atomics || needs.f32_min || needs.f32_max || needs.f32_mul {
+            b.line("// WGSL atomics are i32/u32-only: f32 cells are atomic<u32> bit");
+            b.line("// patterns updated through bitcast compare-exchange loops (§3.3)");
         }
         if needs.f32_atomics {
-            b.open("fn atomicAddF32(cell : ptr<storage, f32, read_write>, value : f32) {");
-            b.line("*cell = *cell + value;");
+            b.open("fn atomicAddF32(cell : ptr<storage, atomic<u32>, read_write>, value : f32) {");
+            b.open("loop {");
+            b.line("let old = atomicLoad(cell);");
+            b.line("let updated = bitcast<u32>(bitcast<f32>(old) + value);");
+            b.line("if (atomicCompareExchangeWeak(cell, old, updated).exchanged) { break; }");
+            b.close("}");
             b.close("}");
             b.line("");
         }
         if needs.f32_min {
-            b.open("fn atomicMinF32(cell : ptr<storage, f32, read_write>, value : f32) {");
-            b.line("if (value < *cell) { *cell = value; }");
+            b.open("fn atomicMinF32(cell : ptr<storage, atomic<u32>, read_write>, value : f32) {");
+            b.open("loop {");
+            b.line("let old = atomicLoad(cell);");
+            b.line("if (bitcast<f32>(old) <= value) { break; }");
+            b.line(
+                "if (atomicCompareExchangeWeak(cell, old, bitcast<u32>(value)).exchanged) { break; }",
+            );
+            b.close("}");
             b.close("}");
             b.line("");
         }
         if needs.f32_max {
-            b.open("fn atomicMaxF32(cell : ptr<storage, f32, read_write>, value : f32) {");
-            b.line("if (value > *cell) { *cell = value; }");
+            b.open("fn atomicMaxF32(cell : ptr<storage, atomic<u32>, read_write>, value : f32) {");
+            b.open("loop {");
+            b.line("let old = atomicLoad(cell);");
+            b.line("if (bitcast<f32>(old) >= value) { break; }");
+            b.line(
+                "if (atomicCompareExchangeWeak(cell, old, bitcast<u32>(value)).exchanged) { break; }",
+            );
+            b.close("}");
+            b.close("}");
+            b.line("");
+        }
+        if needs.f32_mul {
+            b.open("fn atomicMulF32(cell : ptr<storage, atomic<u32>, read_write>, value : f32) {");
+            b.open("loop {");
+            b.line("let old = atomicLoad(cell);");
+            b.line("let updated = bitcast<u32>(bitcast<f32>(old) * value);");
+            b.line("if (atomicCompareExchangeWeak(cell, old, updated).exchanged) { break; }");
+            b.close("}");
             b.close("}");
             b.line("");
         }

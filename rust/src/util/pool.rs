@@ -69,13 +69,23 @@ where
 /// slot-resolved interpreter uses this to allocate one register frame per
 /// worker instead of one per element (zero allocations on the per-vertex
 /// path).
-pub fn parallel_for_dynamic_scoped<T, I, F>(n: usize, threads: usize, block: usize, init: I, f: F)
+///
+/// Returns the final per-worker states in worker order — pure `for` callers
+/// ignore it; [`parallel_collect`] uses the states as claim buffers.
+pub fn parallel_for_dynamic_scoped<T, I, F>(
+    n: usize,
+    threads: usize,
+    block: usize,
+    init: I,
+    f: F,
+) -> Vec<T>
 where
+    T: Send,
     I: Fn() -> T + Sync,
     F: Fn(&mut T, usize) + Sync,
 {
     if n == 0 {
-        return;
+        return Vec::new();
     }
     let threads = threads.clamp(1, n);
     if threads == 1 {
@@ -83,30 +93,63 @@ where
         for i in 0..n {
             f(&mut state, i);
         }
-        return;
+        return vec![state];
     }
     let block = block.max(1);
     let next = AtomicUsize::new(0);
     std::thread::scope(|s| {
-        for _ in 0..threads {
-            let f = &f;
-            let init = &init;
-            let next = &next;
-            s.spawn(move || {
-                let mut state = init();
-                loop {
-                    let lo = next.fetch_add(block, Ordering::Relaxed);
-                    if lo >= n {
-                        break;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                let f = &f;
+                let init = &init;
+                let next = &next;
+                s.spawn(move || {
+                    let mut state = init();
+                    loop {
+                        let lo = next.fetch_add(block, Ordering::Relaxed);
+                        if lo >= n {
+                            break;
+                        }
+                        let hi = (lo + block).min(n);
+                        for i in lo..hi {
+                            f(&mut state, i);
+                        }
                     }
-                    let hi = (lo + block).min(n);
-                    for i in lo..hi {
-                        f(&mut state, i);
-                    }
-                }
-            });
-        }
-    });
+                    state
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    })
+}
+
+/// Parallel emit-collect: run `emit(i, &mut buf)` for every `i in 0..n`,
+/// where each worker owns a private **claim buffer**; the buffers are then
+/// concatenated into one `Vec` via prefix offsets (one `with_capacity`
+/// allocation, one append per worker).
+///
+/// This is the frontier-gather primitive of the interpreter backend: after a
+/// sweep, workers claim the vertices whose `nxt` bit the kernel set (an
+/// atomic swap makes each claim exclusive, so no vertex is emitted twice)
+/// and the next worklist is the concatenation. Element order *across*
+/// workers is unspecified — callers must be order-independent, exactly like
+/// a GPU frontier compaction.
+pub fn parallel_collect<T, F>(n: usize, threads: usize, block: usize, emit: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize, &mut Vec<T>) + Sync,
+{
+    // the per-worker scratch of the dynamic-scoped runner IS the claim
+    // buffer: one chunking implementation, not two
+    let buffers = parallel_for_dynamic_scoped(n, threads, block, Vec::new, |buf, i| emit(i, buf));
+    // prefix offsets: one exact allocation, each worker's buffer lands at
+    // the running offset of the lengths before it
+    let total = buffers.iter().map(Vec::len).sum();
+    let mut out = Vec::with_capacity(total);
+    for b in buffers {
+        out.extend(b);
+    }
+    out
 }
 
 /// Parallel map: collects `f(i)` into a Vec, preserving order.
@@ -179,6 +222,38 @@ mod tests {
         assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
         // one frame per worker, not per element
         assert!(inits.load(Ordering::Relaxed) <= 4);
+    }
+
+    #[test]
+    fn collect_emits_every_index_exactly_once() {
+        for threads in [1, 3, 8] {
+            let mut got = parallel_collect(997, threads, 16, |i, out| {
+                if i % 3 == 0 {
+                    out.push(i);
+                }
+            });
+            got.sort_unstable();
+            let want: Vec<usize> = (0..997).filter(|i| i % 3 == 0).collect();
+            assert_eq!(got, want, "{threads} threads");
+        }
+        let empty: Vec<usize> = parallel_collect(0, 4, 8, |i, out| out.push(i));
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn collect_claim_buffers_are_exclusive_under_atomic_claims() {
+        // the frontier-gather shape: many indices race to claim the same
+        // cells; the swap makes each claim exclusive, so the concatenated
+        // buffers contain each claimed cell exactly once
+        let cells: Vec<AtomicU64> = (0..64).map(|_| AtomicU64::new(1)).collect();
+        let mut got = parallel_collect(4096, 8, 32, |i, out| {
+            let c = i % 64;
+            if cells[c].swap(0, Ordering::Relaxed) == 1 {
+                out.push(c);
+            }
+        });
+        got.sort_unstable();
+        assert_eq!(got, (0..64).collect::<Vec<_>>());
     }
 
     #[test]

@@ -1,0 +1,95 @@
+//! docs/ARCHITECTURE.md embeds the three SSSP manifest blocks as worked
+//! examples; this suite pins them to the generator's actual output so the
+//! document cannot drift from the code. Each excerpt sits in a fenced code
+//! block immediately after an HTML marker comment
+//! (`<!-- manifest:sssp:device -->` etc.) and must equal the corresponding
+//! `DevicePlan` manifest line for line.
+
+use starplat::dsl::parser::parse_file;
+use starplat::ir::lower;
+use starplat::ir::plan::DevicePlan;
+use starplat::sema::check_function;
+
+fn doc() -> String {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("..")
+        .join("docs")
+        .join("ARCHITECTURE.md");
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path:?}: {e}"))
+}
+
+fn sssp_plan() -> DevicePlan {
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("dsl_programs")
+        .join("sssp.sp");
+    let fns = parse_file(&path).unwrap();
+    let tf = check_function(&fns[0]).unwrap();
+    DevicePlan::build(&lower(&tf))
+}
+
+/// Lines of the fenced code block immediately following `marker`.
+fn block_after(doc: &str, marker: &str) -> Vec<String> {
+    let at = doc.find(marker).unwrap_or_else(|| panic!("marker `{marker}` missing from doc"));
+    let rest = &doc[at..];
+    let fence = rest.find("```").unwrap_or_else(|| panic!("no fence after `{marker}`"));
+    let mut lines = rest[fence..].lines();
+    lines.next(); // the opening ``` line
+    let mut out = Vec::new();
+    for l in lines {
+        if l.trim_start().starts_with("```") {
+            return out;
+        }
+        out.push(l.to_string());
+    }
+    panic!("unterminated fence after `{marker}`");
+}
+
+#[test]
+fn device_plan_excerpt_matches_generator() {
+    assert_eq!(
+        block_after(&doc(), "<!-- manifest:sssp:device -->"),
+        sssp_plan().manifest(),
+        "docs/ARCHITECTURE.md device-plan excerpt drifted from DevicePlan::manifest()"
+    );
+}
+
+#[test]
+fn host_schedule_excerpt_matches_generator() {
+    assert_eq!(
+        block_after(&doc(), "<!-- manifest:sssp:host -->"),
+        sssp_plan().host_manifest(),
+        "docs/ARCHITECTURE.md host-schedule excerpt drifted from DevicePlan::host_manifest()"
+    );
+}
+
+#[test]
+fn kernel_ops_excerpt_matches_generator() {
+    assert_eq!(
+        block_after(&doc(), "<!-- manifest:sssp:kernel -->"),
+        sssp_plan().kernel_manifest(),
+        "docs/ARCHITECTURE.md kernel-ops excerpt drifted from DevicePlan::kernel_manifest()"
+    );
+}
+
+/// The doc is linked from the places a reader lands first.
+#[test]
+fn architecture_doc_is_linked() {
+    let readme = std::fs::read_to_string(
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("..").join("README.md"),
+    )
+    .unwrap();
+    assert!(
+        readme.contains("docs/ARCHITECTURE.md"),
+        "README must link docs/ARCHITECTURE.md"
+    );
+    for src in ["src/codegen/mod.rs", "src/backends/interp/mod.rs"] {
+        let text = std::fs::read_to_string(
+            std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join(src),
+        )
+        .unwrap();
+        assert!(
+            text.contains("docs/ARCHITECTURE.md"),
+            "{src} rustdoc must point at docs/ARCHITECTURE.md"
+        );
+    }
+}

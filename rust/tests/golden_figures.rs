@@ -16,6 +16,14 @@ fn gen(program: &str, backend: &str) -> String {
     codegen::generate(backend, &lower(&tf)).unwrap()
 }
 
+/// Generate from inline DSL source (idiom pins that need a shape no shipped
+/// program exercises, e.g. a `*=` product reduction).
+fn gen_src(src: &str, backend: &str) -> String {
+    let fns = starplat::dsl::parser::parse(src).unwrap();
+    let tf = check_function(&fns[0]).unwrap();
+    codegen::generate(backend, &lower(&tf)).unwrap()
+}
+
 fn assert_has(src: &str, needles: &[&str], what: &str) {
     for n in needles {
         assert!(src.contains(n), "{what}: missing `{n}` in generated code:\n{src}");
@@ -388,12 +396,108 @@ fn wgsl_min_construct_storage_bindings_and_uniform_params() {
         ],
         "WGSL (TC edge lookup + cell reduction)",
     );
-    // PR: f32 cells fall back to the emulation helper (§3.3's float story)
+    // PR: f32 cells are atomic<u32> bit patterns updated by the real
+    // bitcast-CAS helper (§3.3's float story — WGSL has no f32 atomics)
     let pr = gen("pr.sp", "wgsl");
     assert_has(
         &pr,
-        &["fn atomicAddF32(", "atomicAddF32(&d_diff[0], abs(val - gpu_pageRank[v]));"],
-        "WGSL (f32 reduction emulation)",
+        &[
+            "fn atomicAddF32(cell : ptr<storage, atomic<u32>, read_write>, value : f32) {",
+            "let old = atomicLoad(cell);",
+            "let updated = bitcast<u32>(bitcast<f32>(old) + value);",
+            "if (atomicCompareExchangeWeak(cell, old, updated).exchanged) { break; }",
+            "var<storage, read_write> d_diff : array<atomic<u32>>;",
+            "atomicAddF32(&d_diff[0], abs(val - gpu_pageRank[v]));",
+        ],
+        "WGSL (f32 reduction via atomic<u32> bitcast-CAS)",
+    );
+    // the old commented read-modify-write must be gone
+    assert!(
+        !pr.contains("*cell = *cell + value;"),
+        "plain RMW body crept back into atomicAddF32:\n{pr}"
+    );
+}
+
+/// Satellite pin: an atomically-updated *f32 property buffer* (BC's sigma /
+/// delta accumulations) types as `array<atomic<u32>>`, its plain reads
+/// bitcast the loaded word back to f32, and the add goes through the CAS
+/// helper — the declaration-changes-with-usage property that forced the
+/// KernelDialect design in the first place.
+#[test]
+fn wgsl_f32_prop_buffers_are_bit_pattern_atomics() {
+    let bc = gen("bc.sp", "wgsl");
+    assert_has(
+        &bc,
+        &[
+            "var<storage, read_write> gpu_sigma : array<atomic<u32>>;",
+            "atomicAddF32(&gpu_sigma[w], bitcast<f32>(atomicLoad(&gpu_sigma[v])));",
+            "atomicAddF32(&gpu_delta[v], ",
+        ],
+        "WGSL (f32 property buffer as atomic<u32>)",
+    );
+}
+
+/// Satellite pin: Metal's `atomicMulCAS` has a real definition (MSL has no
+/// `atomic_fetch_mul`), emitted only when a kernel multiplies into an atomic
+/// location; WGSL's integer `atomicMulCAS` helper pairs with it.
+#[test]
+fn mul_reduction_cas_helpers_are_defined() {
+    const MUL_SRC: &str = "function Compute_Scale(Graph g, propNode<int> fact) {
+        forall (v in g.nodes()) {
+          forall (nbr in g.neighbors(v)) {
+            nbr.fact *= 2;
+          }
+        }
+      }";
+    let metal = gen_src(MUL_SRC, "metal");
+    assert_has(
+        &metal,
+        &[
+            "static inline void atomicMulCAS(device atomic_int* cell, int value) {",
+            "static inline void atomicMulCAS(device atomic_float* cell, float value) {",
+            "while (!atomic_compare_exchange_weak_explicit(cell, &old, old * value, memory_order_relaxed, memory_order_relaxed)) { }",
+            "atomicMulCAS(&gpu_fact[nbr], 2);",
+        ],
+        "Metal (atomicMulCAS definition + call site)",
+    );
+    let wgsl = gen_src(MUL_SRC, "wgsl");
+    assert_has(
+        &wgsl,
+        &[
+            "fn atomicMulCAS(cell : ptr<storage, atomic<i32>, read_write>, value : i32) {",
+            "atomicMulCAS(&gpu_fact[nbr], 2);",
+        ],
+        "WGSL (integer mul CAS helper)",
+    );
+    // f32 products must NOT route through the i32 helper: the buffer is an
+    // atomic<u32> bit pattern, so the mul gets its own bitcast-CAS helper
+    const MUL_F32_SRC: &str = "function Compute_Damp(Graph g, propNode<float> w) {
+        forall (v in g.nodes()) {
+          forall (nbr in g.neighbors(v)) {
+            nbr.w *= 0.5;
+          }
+        }
+      }";
+    let wgsl_f = gen_src(MUL_F32_SRC, "wgsl");
+    assert_has(
+        &wgsl_f,
+        &[
+            "var<storage, read_write> gpu_w : array<atomic<u32>>;",
+            "fn atomicMulF32(cell : ptr<storage, atomic<u32>, read_write>, value : f32) {",
+            "let updated = bitcast<u32>(bitcast<f32>(old) * value);",
+            "atomicMulF32(&gpu_w[nbr], 0.5);",
+        ],
+        "WGSL (f32 mul bitcast-CAS helper)",
+    );
+    assert!(
+        !wgsl_f.contains("atomicMulCAS"),
+        "f32 product routed through the i32 helper:\n{wgsl_f}"
+    );
+    // programs without a product reduction don't pay for the helper
+    let sssp = gen("sssp.sp", "metal");
+    assert!(
+        !sssp.contains("atomicMulCAS"),
+        "mul helper emitted without a Mul reduce:\n{sssp}"
     );
 }
 

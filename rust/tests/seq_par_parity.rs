@@ -4,10 +4,12 @@
 //! the atomic idioms are schedule-independent, and the fixedPoint frontier
 //! fast path (SSSP/CC) computes exactly what the dense sweeps compute.
 
-use starplat::backends::interp::{self, env::Val, Args};
+use starplat::backends::interp::{self, env::Val, Args, ExecOpts};
 use starplat::coordinator::driver::{load_program, Algo};
+use starplat::dsl::parser::parse;
 use starplat::graph::csr::Graph;
 use starplat::graph::generators::{rmat, road_grid, uniform_random};
+use starplat::sema::check_function;
 use starplat::util::rng::Rng;
 
 const THREADS: [usize; 3] = [1, 2, 8];
@@ -93,6 +95,102 @@ fn pr_parity_within_tolerance() {
                 );
             }
         });
+    }
+}
+
+/// A pull-style fixedPoint: min-label propagation whose relaxation writes
+/// land on *in-neighbors* (`g.nodes_to`), so the sparse gather must walk the
+/// reverse CSR. The compile-layer tests pin that this shape is
+/// frontier-eligible; here we pin that the sparse schedule computes exactly
+/// what the dense schedule computes, across worker counts.
+const PULL_CC: &str = "function Compute_CC_Pull(Graph g, propNode<int> comp) {
+    propNode<bool> modified;
+    propNode<bool> modified_nxt;
+    bool finished = False;
+    forall (v in g.nodes()) {
+      v.comp = v;
+    }
+    g.attachNodeProperty(modified = True, modified_nxt = False);
+    fixedPoint until (finished: !modified) {
+      forall (v in g.nodes().filter(modified == True)) {
+        for (u in g.nodes_to(v)) {
+          <u.comp, u.modified_nxt> = <Min(u.comp, v.comp), True>;
+        }
+      }
+      modified = modified_nxt;
+      g.attachNodeProperty(modified_nxt = False);
+    }
+  }";
+
+#[test]
+fn pull_fixedpoint_parity_and_frontier_dense_agreement() {
+    let fns = parse(PULL_CC).unwrap();
+    let tf = check_function(&fns[0]).unwrap();
+    for g in test_graphs() {
+        let args = Args::default();
+        // dense schedule at 1 thread is the ground truth
+        let want = interp::run_with_opts(&tf, &g, &args, ExecOpts { threads: 1, frontier: false })
+            .unwrap()
+            .prop_i64("comp");
+        for t in THREADS {
+            for frontier in [true, false] {
+                let out =
+                    interp::run_with_opts(&tf, &g, &args, ExecOpts { threads: t, frontier })
+                        .unwrap();
+                assert_eq!(
+                    out.prop_i64("comp"),
+                    want,
+                    "{} with {t} threads (frontier={frontier})",
+                    g.name
+                );
+            }
+        }
+    }
+}
+
+/// Nested BFS-DAG loops read levels two hops from the current frontier, so
+/// the compiled level discovery must settle the whole graph before any body
+/// sweep runs (a one-level-ahead scheme would silently skip every
+/// grandchild). Oracle: count DAG 2-paths per endpoint from the reference
+/// BFS levels.
+#[test]
+fn nested_bfs_dag_loops_see_settled_levels() {
+    use starplat::algorithms::reference;
+    const TWO_HOP: &str = "function Compute_TwoHop(Graph g, propNode<int> paths2, node src) {
+        g.attachNodeProperty(paths2 = 0);
+        iterateInBFS(v in g.nodes() from src) {
+          forall (w in g.neighbors(v)) {
+            forall (x in g.neighbors(w)) {
+              x.paths2 += 1;
+            }
+          }
+        }
+      }";
+    let fns = parse(TWO_HOP).unwrap();
+    let tf = check_function(&fns[0]).unwrap();
+    for g in test_graphs() {
+        let levels = reference::bfs_levels(&g, 0);
+        let mut want = vec![0i64; g.num_nodes()];
+        for v in 0..g.num_nodes() as u32 {
+            if levels[v as usize] == reference::INF {
+                continue;
+            }
+            for &w in g.neighbors(v) {
+                if levels[w as usize] != levels[v as usize] + 1 {
+                    continue;
+                }
+                for &x in g.neighbors(w) {
+                    if levels[x as usize] == levels[w as usize] + 1 {
+                        want[x as usize] += 1;
+                    }
+                }
+            }
+        }
+        let args = Args::default().node("src", 0);
+        for t in THREADS {
+            let out = interp::run_with_threads(&tf, &g, &args, t).unwrap();
+            assert_eq!(out.prop_i64("paths2"), want, "{} with {t} threads", g.name);
+        }
     }
 }
 

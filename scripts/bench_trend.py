@@ -8,16 +8,20 @@ current run. Cells are keyed by (algorithm, graph, mode); a cell whose `secs`
 grew by more than the threshold relative to the *latest* previous run is
 flagged. With more than one previous run the report also records each cell's
 timing **spread** across the previous runs — (max - min) / min, excluding
-the run under test so a real regression can't inflate it — which is the
-runner-variance data the ROADMAP needs before the trend step can flip from
-advisory to blocking: a cell whose spread across unchanged code rivals the
-regression threshold cannot gate on it.
+the run under test so a real regression can't inflate it — the
+runner-variance context for each flagged cell.
 
-The report is advisory — the script always exits 0 — so CI pipes the output
-into $GITHUB_STEP_SUMMARY instead of failing the job.
+The step is **blocking**: with the spread column landed (PR 4) and worst-case
+runner variance observed comfortably under the threshold, a >threshold
+per-cell regression exits 1 and fails CI. Set `BENCH_TREND_ADVISORY=1` in the
+environment to demote the step back to report-only (the escape hatch for a
+knowingly-accepted regression or a noisy runner). Infrastructure failure
+modes — missing or unparsable artifacts — always exit 0: only a real,
+measured regression may block.
 """
 
 import json
+import os
 import sys
 
 
@@ -50,7 +54,9 @@ def main(argv):
     prev, prev_report = runs[-2]
     history = [r for r, _ in runs]  # oldest -> current
 
-    print("### Interpreter bench trend (advisory)")
+    advisory = os.environ.get("BENCH_TREND_ADVISORY") == "1"
+    print("### Interpreter bench trend"
+          + (" (advisory)" if advisory else " (blocking)"))
     print()
     print(
         f"{len(runs) - 1} previous run(s) · "
@@ -98,19 +104,22 @@ def main(argv):
             f"Per-cell spread over {len(runs) - 1} previous run(s): "
             f"median {median:.1%}, "
             f"worst {worst:.1%} ({worst_key[0]}/{worst_key[1]}/{worst_key[2]})."
-            f" Blocking the trend step needs worst-case spread comfortably"
-            f" under the {threshold:.0%} threshold (ROADMAP)."
         )
         print()
     if regressions:
         worst = ", ".join(f"{a}/{g}/{m} {d:+.1%}" for (a, g, m), d in regressions)
         print(
             f"**{len(regressions)} cell(s) regressed more than "
-            f"{threshold:.0%}**: {worst}. Advisory only — see the spread "
-            "column for whether runner variance explains it."
+            f"{threshold:.0%}**: {worst}. See the spread column for whether "
+            "runner variance explains it."
         )
-    else:
-        print(f"No cell regressed more than {threshold:.0%}.")
+        if advisory:
+            print()
+            print("_BENCH_TREND_ADVISORY=1 set: reporting only, not failing "
+                  "the job._")
+            return 0
+        return 1
+    print(f"No cell regressed more than {threshold:.0%}.")
     return 0
 
 
