@@ -47,19 +47,21 @@ fn has_frontier_path(stmts: &[compile::HostStmt]) -> bool {
     })
 }
 
-/// Best-of-3 wall-clock seconds for one (algo, graph, mode, schedule) cell.
-fn time_cell(algo: Algo, g: &Graph, threads: usize, frontier: bool) -> anyhow::Result<f64> {
+/// Best-of-3 wall-clock seconds (plus dense-fallback count) for one
+/// (algo, graph, mode, schedule) cell.
+fn time_cell(algo: Algo, g: &Graph, threads: usize, frontier: bool) -> anyhow::Result<(f64, u64)> {
     let tf = load_program(algo)?;
     let args = bench_args(algo);
-    let opts = ExecOpts { threads, frontier };
-    interp::run_with_opts(&tf, g, &args, opts)?; // warmup (also surfaces errors once)
+    let opts = ExecOpts { threads, frontier, ..ExecOpts::default() };
+    // warmup (also surfaces errors once)
+    let fallbacks = interp::run_with_opts(&tf, g, &args, opts.clone())?.stats.fallbacks;
     let mut best = f64::INFINITY;
     for _ in 0..3 {
         let t0 = std::time::Instant::now();
-        interp::run_with_opts(&tf, g, &args, opts)?;
+        interp::run_with_opts(&tf, g, &args, opts.clone())?;
         best = best.min(t0.elapsed().as_secs_f64());
     }
-    Ok(best)
+    Ok((best, fallbacks))
 }
 
 fn main() -> anyhow::Result<()> {
@@ -80,7 +82,7 @@ fn main() -> anyhow::Result<()> {
             let eligible = interp::frontier_env_enabled()
                 && has_frontier_path(&compile::compile(&load_program(algo)?)?.body);
             for (threads, label) in [(1usize, "seq"), (par_threads, "par")] {
-                let secs = time_cell(algo, g, threads, true)?;
+                let (secs, fallbacks) = time_cell(algo, g, threads, true)?;
                 let nps = g.num_nodes() as f64 / secs;
                 let mut fields = vec![
                     ("algorithm", Json::Str(format!("{algo:?}").to_lowercase())),
@@ -91,11 +93,12 @@ fn main() -> anyhow::Result<()> {
                     ("secs", Json::Num(secs)),
                     ("nodes_per_sec", Json::Num(nps)),
                     ("path", Json::Str(if eligible { "frontier" } else { "dense" }.to_string())),
+                    ("fallbacks", Json::Num(fallbacks as f64)),
                 ];
                 if eligible {
                     // same cell with the sparse schedule forced off: the
                     // frontier-vs-dense column
-                    let dense_secs = time_cell(algo, g, threads, false)?;
+                    let (dense_secs, _) = time_cell(algo, g, threads, false)?;
                     fields.push(("secs_dense", Json::Num(dense_secs)));
                     println!(
                         "{:>4?} on {:<5} [{label}]  frontier {secs:>9.4}s  dense {dense_secs:>9.4}s  ({:.2}x)  {nps:>12.0} nodes/s",

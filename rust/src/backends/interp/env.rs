@@ -359,6 +359,15 @@ pub struct Env<'g> {
     /// (see [`super::ExecOpts::frontier`]; `false` forces dense sweeps —
     /// the bench harness uses it to time both paths on the same program)
     pub frontier_enabled: bool,
+    /// cooperative cancellation token for this run (deadline + explicit
+    /// cancel), polled at statement / iteration / pool-block boundaries
+    pub cancel: Option<crate::util::cancel::CancelToken>,
+    /// deterministic fault-injection plan for this run (see
+    /// [`crate::util::fault`])
+    pub fault: Option<crate::util::fault::FaultPlan>,
+    /// sparse→dense schedule fallbacks taken during this run (reported as
+    /// [`super::ExecStats::fallbacks`])
+    pub fallbacks: AtomicU64,
     props: Vec<PropData>,
     prop_names: Vec<String>,
     scalars: Vec<ScalarCell>,
@@ -387,7 +396,34 @@ impl<'g> Env<'g> {
         let prop_names = prog.props.iter().map(|m| m.name.clone()).collect();
         let scalars = prog.scalars.iter().map(|m| ScalarCell::new(Val::zero_st(m.ty))).collect();
         let sets = vec![Vec::new(); prog.sets.len()];
-        Env { g, threads, frontier_enabled: true, props, prop_names, scalars, sets }
+        Env {
+            g,
+            threads,
+            frontier_enabled: true,
+            cancel: None,
+            fault: None,
+            fallbacks: AtomicU64::new(0),
+            props,
+            prop_names,
+            scalars,
+            sets,
+        }
+    }
+
+    /// Cooperative cancellation point: maps a tripped token onto the typed
+    /// [`super::ExecError`] variants (carried inside `anyhow::Error`).
+    pub fn check_cancel(&self) -> Result<()> {
+        if let Some(c) = &self.cancel {
+            if let Some(i) = c.interrupted() {
+                return Err(anyhow::Error::new(super::ExecError::from(i)));
+            }
+        }
+        Ok(())
+    }
+
+    /// Record one sparse→dense schedule fallback (graceful degradation).
+    pub fn note_fallback(&self) {
+        self.fallbacks.fetch_add(1, Ordering::Relaxed);
     }
 
     /// (Re-)allocate a declared property. Re-executing a declaration (e.g. a

@@ -84,6 +84,9 @@ pub mod eval;
 use crate::graph::csr::{Graph, Node};
 use crate::ir::ScalarTy;
 use crate::sema::TypedFunction;
+use crate::util::cancel::{CancelToken, Interrupt};
+use crate::util::fault::{FaultPlan, FaultSite};
+use crate::util::pool::PoolInterrupt;
 use anyhow::{anyhow, bail, Result};
 use compile::{
     CExpr, CKernel, CUpdate, DevIter, DevStmt, FrontierInfo, HostIter, HostStmt, Idx, ParamBind,
@@ -101,19 +104,80 @@ pub enum Mode {
 /// spawning the pool costs more than scanning a few thousand adjacency rows.
 pub const FRONTIER_PAR_MIN: usize = 4096;
 
+/// Typed failure classes of one interpreter request. Surfaced inside the
+/// [`anyhow::Error`] the run returns — callers (the execution service)
+/// recover the variant with `err.downcast_ref::<ExecError>()`.
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+pub enum ExecError {
+    /// The run's [`CancelToken`] was cancelled.
+    #[error("request cancelled")]
+    Cancelled,
+    /// The run's deadline passed before it finished.
+    #[error("deadline exceeded")]
+    DeadlineExceeded,
+    /// A pool worker panicked; the panic was confined to this run (the pool
+    /// and shared graph stay healthy) and its message is preserved.
+    #[error("worker panicked: {0}")]
+    WorkerPanic(String),
+    /// An injected fault tripped at the named site (see
+    /// [`crate::util::fault`]).
+    #[error("injected fault at {0}")]
+    Fault(&'static str),
+}
+
+impl From<Interrupt> for ExecError {
+    fn from(i: Interrupt) -> ExecError {
+        match i {
+            Interrupt::Cancelled => ExecError::Cancelled,
+            Interrupt::DeadlineExceeded => ExecError::DeadlineExceeded,
+        }
+    }
+}
+
+impl From<PoolInterrupt> for ExecError {
+    fn from(i: PoolInterrupt) -> ExecError {
+        match i {
+            PoolInterrupt::Cancelled => ExecError::Cancelled,
+            PoolInterrupt::DeadlineExceeded => ExecError::DeadlineExceeded,
+            PoolInterrupt::Panicked(msg) => ExecError::WorkerPanic(msg),
+        }
+    }
+}
+
+/// Is this a cooperative interrupt (cancel / deadline)? Interrupts must
+/// always propagate; other sweep failures may instead trigger the dense
+/// schedule fallback in [`Exec::frontier_loop`].
+fn is_interrupt(e: &anyhow::Error) -> bool {
+    matches!(
+        e.downcast_ref::<ExecError>(),
+        Some(ExecError::Cancelled | ExecError::DeadlineExceeded)
+    )
+}
+
+/// Convert a pool interrupt into the typed error anyhow carries.
+fn pool_err(i: PoolInterrupt) -> anyhow::Error {
+    anyhow::Error::new(ExecError::from(i))
+}
+
 /// Execution knobs beyond the worker count.
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Debug)]
 pub struct ExecOpts {
     /// worker count; 0 = [`crate::util::pool::default_threads`]
     pub threads: usize,
     /// allow the sparse frontier schedule for eligible fixedPoints (default
     /// true; `STARPLAT_FRONTIER=0` in the environment also disables it)
     pub frontier: bool,
+    /// cooperative cancellation (deadline + explicit cancel), polled at
+    /// host-statement, loop-iteration, and pool block boundaries
+    pub cancel: Option<CancelToken>,
+    /// deterministic fault injection; `None` falls back to `STARPLAT_FAULT`
+    /// (use [`FaultPlan::off`] to force injection off regardless)
+    pub fault: Option<FaultPlan>,
 }
 
 impl Default for ExecOpts {
     fn default() -> Self {
-        ExecOpts { threads: 0, frontier: true }
+        ExecOpts { threads: 0, frontier: true, cancel: None, fault: None }
     }
 }
 
@@ -138,11 +202,21 @@ impl Args {
     }
 }
 
+/// Per-run execution statistics: the graceful-degradation accounting the
+/// service and bench harness surface.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    /// sparse (frontier) fixedPoint schedules abandoned for the dense
+    /// schedule after an injected or real sweep fault
+    pub fallbacks: u64,
+}
+
 /// Execution result: output properties + optional scalar return.
 #[derive(Debug)]
 pub struct Output {
     pub props: std::collections::HashMap<String, PropData>,
     pub ret: Option<Val>,
+    pub stats: ExecStats,
 }
 
 impl Output {
@@ -171,7 +245,7 @@ pub fn run_with_threads(
     args: &Args,
     threads: usize,
 ) -> Result<Output> {
-    run_with_opts(tf, g, args, ExecOpts { threads, frontier: true })
+    run_with_opts(tf, g, args, ExecOpts { threads, ..ExecOpts::default() })
 }
 
 /// Does the environment allow the sparse frontier schedule?
@@ -192,6 +266,8 @@ pub fn run_with_opts(tf: &TypedFunction, g: &Graph, args: &Args, opts: ExecOpts)
     let prog = compile::compile(tf)?;
     let mut env = Env::new(g, &prog, threads.max(1));
     env.frontier_enabled = opts.frontier && frontier_env_enabled();
+    env.cancel = opts.cancel.clone();
+    env.fault = opts.fault.or_else(FaultPlan::from_env);
     // bind scalar / set params
     for pb in &prog.params {
         match pb {
@@ -213,7 +289,10 @@ pub fn run_with_opts(tf: &TypedFunction, g: &Graph, args: &Args, opts: ExecOpts)
     }
     let mut ex = Exec { env, ret: None };
     ex.block(&prog.body)?;
-    Ok(Output { props: ex.env.take_props(), ret: ex.ret })
+    let stats = ExecStats {
+        fallbacks: ex.env.fallbacks.load(std::sync::atomic::Ordering::Relaxed),
+    };
+    Ok(Output { props: ex.env.take_props(), ret: ex.ret, stats })
 }
 
 /// Coerce a value to a declared scalar type (C-style): `float x = g.num_nodes()`
@@ -238,10 +317,21 @@ struct Exec<'g> {
     ret: Option<Val>,
 }
 
+/// How a sparse frontier loop ended (short of an error).
+enum FrontierExit {
+    /// Reached the fixpoint; the convergence flag is set.
+    Converged,
+    /// Abandoned the sparse schedule at an iteration boundary after a sweep
+    /// fault — the caller's dense loop continues from the same state.
+    FellBack,
+}
+
 impl<'g> Exec<'g> {
-    /// Host-context (sequential) execution.
+    /// Host-context (sequential) execution. Every statement boundary is a
+    /// cancellation point.
     fn block(&mut self, b: &[HostStmt]) -> Result<()> {
         for s in b {
+            self.env.check_cancel()?;
             if self.ret.is_some() {
                 return Ok(());
             }
@@ -448,6 +538,7 @@ impl<'g> Exec<'g> {
         let mut by_level: Vec<Vec<Node>> = Vec::new();
         let mut depth: i32 = 0;
         while !frontier.is_empty() {
+            env.check_cancel()?; // level boundary = cancellation point
             let discover = |i: usize, out: &mut Vec<Node>| {
                 for &w in env.g.neighbors(frontier[i]) {
                     if levels.claim(w as usize, depth + 1) {
@@ -462,7 +553,14 @@ impl<'g> Exec<'g> {
                 }
                 out
             } else {
-                crate::util::pool::parallel_collect(frontier.len(), env.threads, 64, discover)
+                crate::util::pool::try_parallel_collect(
+                    frontier.len(),
+                    env.threads,
+                    64,
+                    env.cancel.as_ref(),
+                    discover,
+                )
+                .map_err(pool_err)?
             };
             by_level.push(frontier);
             frontier = next;
@@ -470,11 +568,13 @@ impl<'g> Exec<'g> {
         }
         // forward sweep over the discovered buckets
         for bucket in &by_level {
+            env.check_cancel()?;
             sweep(env, Domain::List(bucket), reg, None, body, frame_size, Some(&levels))?;
         }
         // reverse sweep: walk the level buckets backwards
         if let Some((cond, rbody)) = reverse {
             for bucket in by_level.iter().rev() {
+                env.check_cancel()?;
                 sweep(
                     env,
                     Domain::List(bucket),
@@ -508,7 +608,13 @@ impl<'g> Exec<'g> {
                 let HostStmt::Kernel(k) = &body[0] else {
                     bail!("internal: frontier plan without a leading kernel")
                 };
-                return self.frontier_loop(var, fi, k, max_iters);
+                match self.frontier_loop(var, fi, k, max_iters)? {
+                    FrontierExit::Converged => return Ok(()),
+                    // a sweep fault abandoned the sparse schedule at an
+                    // iteration boundary; the dense loop below continues
+                    // from the same flag/nxt state
+                    FrontierExit::FellBack => {}
+                }
             }
         }
         for _ in 0..max_iters {
@@ -543,7 +649,7 @@ impl<'g> Exec<'g> {
         fi: FrontierInfo,
         k: &CKernel,
         max_iters: usize,
-    ) -> Result<()> {
+    ) -> Result<FrontierExit> {
         let env = &self.env;
         let n = env.g.num_nodes();
         let flag = env.prop(fi.flag);
@@ -580,26 +686,40 @@ impl<'g> Exec<'g> {
                 }
             }
         };
-        for _ in 0..max_iters {
+        for iter in 0..max_iters {
+            env.check_cancel()?; // iteration boundary = cancellation point
             if frontier.is_empty() {
                 // dense-equivalent exit state: both flag arrays all-false
-                return env.scalar_store(var, Val::B(true));
+                env.scalar_store(var, Val::B(true))?;
+                return Ok(FrontierExit::Converged);
             }
             let dense = frontier.len() * 4 >= n;
-            if dense {
-                sweep(
-                    env,
-                    Domain::Range(n),
-                    k.reg,
-                    k.filter.as_ref(),
-                    &k.body,
-                    k.frame_size,
-                    None,
-                )?;
+            let swept = if dense {
+                sweep(env, Domain::Range(n), k.reg, k.filter.as_ref(), &k.body, k.frame_size, None)
             } else {
                 // every frontier vertex passes the flag filter by
                 // construction — skip evaluating it
-                sweep(env, Domain::List(&frontier), k.reg, None, &k.body, k.frame_size, None)?;
+                sweep(env, Domain::List(&frontier), k.reg, None, &k.body, k.frame_size, None)
+            };
+            if let Err(e) = swept {
+                if is_interrupt(&e) {
+                    return Err(e);
+                }
+                // graceful degradation: a failed sweep (injected panic, real
+                // kernel error) abandons the sparse schedule. Frontier-
+                // eligible kernels are idempotent relaxations, so the dense
+                // loop may safely re-run this iteration from the current
+                // flag/nxt state; a persistent error surfaces again there.
+                env.note_fallback();
+                return Ok(FrontierExit::FellBack);
+            }
+            // injected fault point at the claim-buffer gather: trips before
+            // any flag mutation below, so the dense schedule takes over from
+            // a consistent iteration boundary (frontier flags set, nxt
+            // holding exactly the kernel's writes)
+            if env.fault.is_some_and(|fp| fp.fires(FaultSite::ClaimGather, iter as u64)) {
+                env.note_fallback();
+                return Ok(FrontierExit::FellBack);
             }
             // emulate `flag = nxt; attach(nxt = False);` sparsely: clear the
             // old frontier's flags, then claim the newly-flagged vertices.
@@ -616,11 +736,20 @@ impl<'g> Exec<'g> {
                     flag.store(v as usize, Val::B(false));
                 }
             }
+            // NOTE: a gather interrupt must PROPAGATE, never fall back — a
+            // partially-run gather has already consumed nxt bits (the claim
+            // swap clears them as it sets flags), so continuing densely from
+            // that state would drop the claimed vertices.
             if dense {
                 if env.threads > 1 && n >= FRONTIER_PAR_MIN {
-                    next = crate::util::pool::parallel_collect(n, env.threads, 1024, |i, out| {
-                        claim(i as Node, out)
-                    });
+                    next = crate::util::pool::try_parallel_collect(
+                        n,
+                        env.threads,
+                        1024,
+                        env.cancel.as_ref(),
+                        |i, out| claim(i as Node, out),
+                    )
+                    .map_err(pool_err)?;
                 } else {
                     next.clear();
                     for v in 0..n as Node {
@@ -629,9 +758,14 @@ impl<'g> Exec<'g> {
                 }
             } else if parallel {
                 let fr = &frontier;
-                next = crate::util::pool::parallel_collect(fr.len(), env.threads, 64, |i, out| {
-                    claim_around(fr[i], out)
-                });
+                next = crate::util::pool::try_parallel_collect(
+                    fr.len(),
+                    env.threads,
+                    64,
+                    env.cancel.as_ref(),
+                    |i, out| claim_around(fr[i], out),
+                )
+                .map_err(pool_err)?;
             } else {
                 next.clear();
                 for &v in &frontier {
@@ -687,10 +821,11 @@ fn sweep(
     let err = std::sync::Mutex::new(None::<anyhow::Error>);
     let failed = std::sync::atomic::AtomicBool::new(false);
     let frame_len = frame_size.max(1);
-    crate::util::pool::parallel_for_dynamic_scoped(
+    let outcome = crate::util::pool::try_parallel_for_dynamic_scoped(
         domain.len(),
         env.threads,
         64,
+        env.cancel.as_ref(),
         || vec![Val::I(0); frame_len],
         |frame, i| {
             // once any element errors, skip the rest of the sweep
@@ -698,6 +833,13 @@ fn sweep(
                 return;
             }
             let v = domain.get(i);
+            // injected fault point inside the worker: the catch_unwind wall
+            // at the pool boundary turns this into ExecError::WorkerPanic
+            if let Some(fp) = &env.fault {
+                if fp.fires(FaultSite::PoolDispatch, v as u64) {
+                    panic!("injected fault: pool_dispatch at element {v}");
+                }
+            }
             let r = (|| -> Result<()> {
                 let mut ctx = EvalCtx { env, current_edge: NO_EDGE, levels };
                 frame[reg as usize] = Val::I(v as i64);
@@ -721,10 +863,25 @@ fn sweep(
             }
         },
     );
+    if let Err(i) = outcome {
+        return Err(pool_err(i));
+    }
     match err.into_inner().unwrap() {
         Some(e) => Err(e),
         None => Ok(()),
     }
+}
+
+/// Deterministic fault point: a typed error when the run's plan fires for
+/// this `(site, key)`.
+#[inline]
+fn fault_check(env: &Env<'_>, site: FaultSite, key: u64) -> Result<()> {
+    if let Some(fp) = &env.fault {
+        if fp.fires(site, key) {
+            return Err(anyhow::Error::new(ExecError::Fault(site.name())));
+        }
+    }
+    Ok(())
 }
 
 /// Execute one device statement for the current element. All shared mutation
@@ -755,6 +912,7 @@ fn exec_dev(
             env.scalar_store(*slot, v)
         }
         DevStmt::ScalarReduce { slot, op, value } => {
+            fault_check(env, FaultSite::AtomicReduce, *slot as u64)?;
             let v = eval(value, ctx, frame)?;
             env.scalar_reduce(*slot, *op, v)
         }
@@ -766,11 +924,15 @@ fn exec_dev(
         }
         DevStmt::PropReduce { prop, idx, op, value } => {
             let i = node_of(*idx, ctx, frame)? as usize;
+            fault_check(env, FaultSite::AtomicReduce, i as u64)?;
             let v = eval(value, ctx, frame)?;
             env.prop(*prop).atomic_reduce(i, *op, v)
         }
         DevStmt::MinMax { kind, prop, idx, compare, extra } => {
             let i = node_of(*idx, ctx, frame)? as usize;
+            // Min/Max constructs are atomic reduces too (paper Fig 1's
+            // relaxation shape) — same injection site as Prop/ScalarReduce
+            fault_check(env, FaultSite::AtomicReduce, i as u64)?;
             let proposed = eval(compare, ctx, frame)?;
             let improved = env.prop(*prop).atomic_min_max(i, proposed, *kind);
             if improved {

@@ -102,8 +102,8 @@ pub(crate) const CUDA_SPELLINGS: Spellings = Spellings {
     launch: cuda_launch,
 };
 
-pub fn generate(ir: &IrProgram) -> String {
-    generate_with(ir, &DevicePlan::build(ir))
+pub fn generate(ir: &IrProgram) -> Result<String, crate::dsl::diag::DslError> {
+    Ok(generate_with(ir, &DevicePlan::build(ir)?))
 }
 
 /// Render with a pre-built plan ([`super::generate`] lowers once for all

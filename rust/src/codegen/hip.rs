@@ -48,8 +48,8 @@ pub(crate) const HIP_SPELLINGS: Spellings = Spellings {
     launch: hip_launch,
 };
 
-pub fn generate(ir: &IrProgram) -> String {
-    generate_with(ir, &DevicePlan::build(ir))
+pub fn generate(ir: &IrProgram) -> Result<String, crate::dsl::diag::DslError> {
+    Ok(generate_with(ir, &DevicePlan::build(ir)?))
 }
 
 /// Render with a pre-built plan ([`super::generate`] lowers once for all

@@ -30,7 +30,7 @@ pub struct JaxProgram {
 }
 
 pub fn generate(ir: &IrProgram) -> Result<JaxProgram> {
-    generate_with(ir, &DevicePlan::build(ir))
+    generate_with(ir, &DevicePlan::build(ir)?)
 }
 
 /// Generate with a pre-built plan ([`super::generate`] lowers once for all

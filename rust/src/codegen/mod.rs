@@ -67,7 +67,7 @@ pub use crate::ir::kernel::{resolve_filter, simplify_bool_cmp};
 /// Textual backends by name. The device plan is lowered once and shared by
 /// whichever renderer is selected.
 pub fn generate(backend: &str, ir: &IrProgram) -> anyhow::Result<String> {
-    let plan = DevicePlan::build(ir);
+    let plan = DevicePlan::build(ir)?;
     Ok(match backend {
         "cuda" => cuda::generate_with(ir, &plan),
         "hip" => hip::generate_with(ir, &plan),

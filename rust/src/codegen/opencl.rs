@@ -68,8 +68,8 @@ impl KernelDialect for OclKernel {
     }
 }
 
-pub fn generate(ir: &IrProgram) -> String {
-    generate_with(ir, &DevicePlan::build(ir))
+pub fn generate(ir: &IrProgram) -> Result<String, crate::dsl::diag::DslError> {
+    Ok(generate_with(ir, &DevicePlan::build(ir)?))
 }
 
 /// Render with a pre-built plan ([`super::generate`] lowers once for all

@@ -9,6 +9,11 @@
 pub type Node = u32;
 pub type Weight = i32;
 
+/// A violated CSR structural invariant, found by [`Graph::validate`].
+#[derive(Clone, Debug, PartialEq, Eq, thiserror::Error)]
+#[error("{0}")]
+pub struct CsrViolation(pub String);
+
 /// Immutable CSR graph with optional reverse adjacency and edge weights.
 #[derive(Clone, Debug)]
 pub struct Graph {
@@ -90,6 +95,104 @@ impl Graph {
     pub fn is_symmetric(&self) -> bool {
         (0..self.num_nodes() as Node)
             .all(|u| self.neighbors(u).iter().all(|&w| self.is_an_edge(w, u)))
+    }
+
+    /// Integrity check over both CSR halves: offsets are monotone and span
+    /// the edge arrays, every adjacency entry is in range, and the reverse
+    /// CSR agrees with the forward one (each reverse entry names a real
+    /// forward edge with matching endpoints, and each forward edge is named
+    /// exactly once).
+    ///
+    /// Every interpreter sweep indexes these arrays unchecked-by-design (the
+    /// accelerator backends do the same on device), so the execution service
+    /// runs this once at graph registration and refuses graphs that fail —
+    /// a corrupt CSR must be an upfront typed error, not a mid-kernel panic.
+    pub fn validate(&self) -> Result<(), CsrViolation> {
+        let n = self.num_nodes();
+        let m = self.adj.len();
+        let fail = |msg: String| Err(CsrViolation(msg));
+        if self.offsets.is_empty() {
+            return fail("offsets array is empty (need |V|+1 entries)".to_string());
+        }
+        if self.offsets[0] != 0 {
+            return fail(format!("offsets[0] = {} (want 0)", self.offsets[0]));
+        }
+        if self.offsets[n] as usize != m {
+            return fail(format!("offsets[|V|] = {} but |E| = {m}", self.offsets[n]));
+        }
+        for (v, w) in self.offsets.windows(2).enumerate() {
+            if w[0] > w[1] {
+                return fail(format!("offsets not monotone at vertex {v}: {} > {}", w[0], w[1]));
+            }
+        }
+        if self.weights.len() != m {
+            return fail(format!("weights has {} entries but |E| = {m}", self.weights.len()));
+        }
+        for (e, &w) in self.adj.iter().enumerate() {
+            if w as usize >= n {
+                return fail(format!("adjacency entry {e} points at vertex {w} (|V| = {n})"));
+            }
+        }
+        // reverse half: same shape rules…
+        if self.rev_offsets.len() != self.offsets.len() {
+            return fail(format!(
+                "rev_offsets has {} entries (want {})",
+                self.rev_offsets.len(),
+                self.offsets.len()
+            ));
+        }
+        if self.rev_offsets[0] != 0 || self.rev_offsets[n] as usize != m {
+            return fail(format!(
+                "rev_offsets spans [{}, {}] but |E| = {m}",
+                self.rev_offsets[0], self.rev_offsets[n]
+            ));
+        }
+        for (v, w) in self.rev_offsets.windows(2).enumerate() {
+            if w[0] > w[1] {
+                return fail(format!("rev_offsets not monotone at vertex {v}"));
+            }
+        }
+        if self.rev_adj.len() != m || self.rev_edge_id.len() != m {
+            return fail(format!(
+                "reverse arrays have {}/{} entries but |E| = {m}",
+                self.rev_adj.len(),
+                self.rev_edge_id.len()
+            ));
+        }
+        // …and agreement: reverse entry i under vertex v must name a forward
+        // edge src→v owned by rev_adj[i]'s row, each forward edge exactly once
+        let mut seen = vec![false; m];
+        for v in 0..n {
+            let lo = self.rev_offsets[v] as usize;
+            let hi = self.rev_offsets[v + 1] as usize;
+            for i in lo..hi {
+                let e = self.rev_edge_id[i] as usize;
+                if e >= m {
+                    return fail(format!("rev_edge_id[{i}] = {e} out of range (|E| = {m})"));
+                }
+                if std::mem::replace(&mut seen[e], true) {
+                    return fail(format!("forward edge {e} named twice by the reverse CSR"));
+                }
+                if self.adj[e] as usize != v {
+                    return fail(format!(
+                        "reverse entry {i} under vertex {v} names forward edge {e} with dst {}",
+                        self.adj[e]
+                    ));
+                }
+                let src = self.rev_adj[i] as usize;
+                if src >= n {
+                    return fail(format!("rev_adj[{i}] = {src} out of range (|V| = {n})"));
+                }
+                let owns = self.offsets[src] as usize <= e && e < self.offsets[src + 1] as usize;
+                if !owns {
+                    return fail(format!(
+                        "reverse entry {i} claims src {src} for forward edge {e}, \
+                         which is outside src's edge range"
+                    ));
+                }
+            }
+        }
+        Ok(())
     }
 }
 
@@ -258,5 +361,65 @@ mod tests {
         let g = diamond();
         assert_eq!(g.min_weight(), 1);
         assert_eq!(g.max_weight(), 7);
+    }
+
+    #[test]
+    fn validate_accepts_built_graphs() {
+        assert_eq!(diamond().validate(), Ok(()));
+        let mut b = GraphBuilder::new(3);
+        b.add_undirected(0, 1, 1);
+        b.add_undirected(1, 2, 1);
+        assert_eq!(b.build().validate(), Ok(()));
+        // empty graph is structurally fine too
+        assert_eq!(GraphBuilder::new(0).build().validate(), Ok(()));
+    }
+
+    #[test]
+    fn validate_rejects_non_monotone_offsets() {
+        let mut g = diamond();
+        g.offsets.swap(1, 2);
+        let err = g.validate().unwrap_err();
+        assert!(err.0.contains("monotone"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_adjacency() {
+        let mut g = diamond();
+        g.adj[1] = 99;
+        let err = g.validate().unwrap_err();
+        assert!(err.0.contains("vertex 99"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_truncated_weights() {
+        let mut g = diamond();
+        g.weights.pop();
+        let err = g.validate().unwrap_err();
+        assert!(err.0.contains("weights"), "{err}");
+    }
+
+    #[test]
+    fn validate_rejects_mismatched_offset_span() {
+        let mut g = diamond();
+        let last = g.offsets.len() - 1;
+        g.offsets[last] -= 1;
+        assert!(g.validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_reverse_disagreement() {
+        // rev_edge_id pointing at a forward edge with the wrong destination
+        let mut g = diamond();
+        g.rev_edge_id.swap(0, 2);
+        assert!(g.validate().is_err());
+        // duplicate claim of one forward edge
+        let mut g = diamond();
+        let e = g.rev_edge_id[0];
+        g.rev_edge_id[1] = e;
+        assert!(g.validate().is_err());
+        // rev_adj naming a vertex that does not own the forward edge
+        let mut g = diamond();
+        g.rev_adj[0] = 3;
+        assert!(g.validate().is_err());
     }
 }

@@ -20,7 +20,9 @@ pub fn load_edge_list(path: &Path) -> Result<Graph> {
     let mut declared_nodes: Option<usize> = None;
     let mut max_id: Node = 0;
     for (lineno, line) in reader.lines().enumerate() {
-        let line = line?;
+        // every diagnostic carries file + 1-based line: "<path>:<line>: why"
+        let at = || format!("{}:{}", path.display(), lineno + 1);
+        let line = line.with_context(|| format!("{}: read error", at()))?;
         let t = line.trim();
         if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
             continue;
@@ -28,32 +30,56 @@ pub fn load_edge_list(path: &Path) -> Result<Graph> {
         let parts: Vec<&str> = t.split_whitespace().collect();
         match parts.len() {
             1 if declared_nodes.is_none() && edges.is_empty() => {
-                declared_nodes = Some(parts[0].parse().with_context(|| {
-                    format!("{}:{}: bad node count", path.display(), lineno + 1)
-                })?);
+                declared_nodes =
+                    Some(parts[0].parse().with_context(|| format!("{}: bad node count", at()))?);
             }
             2 | 3 => {
-                let u: Node = parts[0]
-                    .parse()
-                    .with_context(|| format!("{}:{}: bad src", path.display(), lineno + 1))?;
-                let v: Node = parts[1]
-                    .parse()
-                    .with_context(|| format!("{}:{}: bad dst", path.display(), lineno + 1))?;
-                let w: Weight = if parts.len() == 3 { parts[2].parse()? } else { 1 };
+                // negative ids fail the unsigned parse and report here too
+                let u: Node = parts[0].parse().with_context(|| format!("{}: bad src", at()))?;
+                let v: Node = parts[1].parse().with_context(|| format!("{}: bad dst", at()))?;
+                let w: Weight = match parts.get(2) {
+                    None => 1,
+                    Some(s) => match parse_weight(s) {
+                        Ok(w) => w,
+                        Err(why) => bail!("{}: {why} `{s}`", at()),
+                    },
+                };
+                if let Some(n) = declared_nodes {
+                    let worst = u.max(v);
+                    if worst as usize >= n {
+                        bail!("{}: vertex id {worst} out of range ({n} nodes declared)", at());
+                    }
+                }
                 max_id = max_id.max(u).max(v);
                 edges.push((u, v, w));
             }
-            _ => bail!("{}:{}: expected 'u v [w]'", path.display(), lineno + 1),
+            _ => bail!("{}: expected 'u v [w]', got {} fields", at(), parts.len()),
         }
     }
     let n = declared_nodes.unwrap_or(max_id as usize + 1);
-    if (max_id as usize) >= n {
-        bail!("edge endpoint {} out of range for {} nodes", max_id, n);
+    if !edges.is_empty() && (max_id as usize) >= n {
+        bail!("{}: vertex id {max_id} out of range ({n} nodes declared)", path.display());
     }
     let mut b = GraphBuilder::new(n)
         .named(path.file_stem().and_then(|s| s.to_str()).unwrap_or("graph"));
     b.edges = edges;
     Ok(b.build())
+}
+
+/// Parse a weight column entry. NaN, negative, and non-integer weights are
+/// rejected explicitly — SSSP's relaxations assume non-negative integer
+/// weights, and a silently-accepted bad weight corrupts every result
+/// computed on the graph.
+fn parse_weight(s: &str) -> Result<Weight, &'static str> {
+    if let Ok(w) = s.parse::<Weight>() {
+        return if w < 0 { Err("negative weight") } else { Ok(w) };
+    }
+    match s.parse::<f64>() {
+        Ok(x) if x.is_nan() => Err("NaN weight"),
+        Ok(x) if x < 0.0 => Err("negative weight"),
+        Ok(_) => Err("non-integer weight"),
+        Err(_) => Err("bad weight"),
+    }
 }
 
 pub fn save_edge_list(g: &Graph, path: &Path) -> Result<()> {
@@ -99,12 +125,46 @@ mod tests {
         std::fs::remove_file(path).ok();
     }
 
+    /// Write `content`, load it, and return the rendered error chain.
+    fn load_err(name: &str, content: &str) -> String {
+        let path = std::env::temp_dir().join(name);
+        std::fs::write(&path, content).unwrap();
+        let err = load_edge_list(&path).expect_err("must be rejected");
+        std::fs::remove_file(&path).ok();
+        format!("{err:#}")
+    }
+
     #[test]
     fn rejects_bad_lines() {
-        let dir = std::env::temp_dir();
-        let path = dir.join("starplat_io_test3.el");
-        std::fs::write(&path, "0 1 2 3 4\n").unwrap();
-        assert!(load_edge_list(&path).is_err());
+        // every case reports the offending file and 1-based line number
+        let cases = [
+            ("starplat_io_arity.el", "0 1\n0 1 2 3 4\n", 2, "expected 'u v [w]'"),
+            ("starplat_io_src.el", "x 1\n", 1, "bad src"),
+            ("starplat_io_negsrc.el", "0 1\n-2 1\n", 2, "bad src"),
+            ("starplat_io_dst.el", "0 zzz 4\n", 1, "bad dst"),
+            ("starplat_io_nanw.el", "0 1 NaN\n", 1, "NaN weight"),
+            ("starplat_io_negw.el", "0 1 5\n1 2 -3\n", 2, "negative weight"),
+            ("starplat_io_negfw.el", "0 1 -0.5\n", 1, "negative weight"),
+            ("starplat_io_fracw.el", "0 1 1.5\n", 1, "non-integer weight"),
+            ("starplat_io_badw.el", "0 1 heavy\n", 1, "bad weight"),
+            ("starplat_io_range.el", "3\n0 1\n1 7\n", 3, "out of range"),
+        ];
+        for (name, content, line, why) in cases {
+            let msg = load_err(name, content);
+            assert!(msg.contains(why), "`{msg}` missing `{why}`");
+            assert!(msg.contains(name), "`{msg}` missing file name");
+            assert!(msg.contains(&format!(":{line}:")), "`{msg}` missing line {line}");
+        }
+    }
+
+    #[test]
+    fn header_bounds_are_enforced_per_line() {
+        // in-range ids under a header still load
+        let path = std::env::temp_dir().join("starplat_io_hdr_ok.el");
+        std::fs::write(&path, "3\n0 1\n1 2\n").unwrap();
+        let g = load_edge_list(&path).unwrap();
+        assert_eq!(g.num_nodes(), 3);
+        assert_eq!(g.num_edges(), 2);
         std::fs::remove_file(path).ok();
     }
 }

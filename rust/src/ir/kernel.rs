@@ -267,18 +267,14 @@ fn lower_stmt(s: &Stmt, cx: &KernelLower<'_>) -> KernelOp {
             }
         }
         Stmt::For { iter, body, .. } => {
-            let reverse = match &iter.source {
-                IterSource::Neighbors { .. } => false,
-                IterSource::NodesTo { .. } => true,
+            let (of, reverse) = match &iter.source {
+                IterSource::Neighbors { of, .. } => (of.clone(), false),
+                IterSource::NodesTo { of, .. } => (of.clone(), true),
                 IterSource::Nodes { .. } | IterSource::Set { .. } => {
                     return KernelOp::Unsupported {
                         what: "nested full-graph iteration".to_string(),
                     }
                 }
-            };
-            let of = match &iter.source {
-                IterSource::Neighbors { of, .. } | IterSource::NodesTo { of, .. } => of.clone(),
-                _ => unreachable!(),
             };
             let filter = iter
                 .filter

@@ -50,6 +50,7 @@
 //! cross-backend guarantee.
 
 use crate::dsl::ast::{Expr, IterSource, LValue, MinMax, ReduceOp, Stmt, Type, UnOp};
+use crate::dsl::diag::DslError;
 use crate::ir::kernel::{
     lower_kernel_body, resolve_filter, simplify_bool_cmp, BfsDir, KCell, KTarget, KernelBody,
     KernelLower, KernelOp,
@@ -636,23 +637,29 @@ pub struct DevicePlan {
 }
 
 impl DevicePlan {
-    pub fn build(ir: &IrProgram) -> DevicePlan {
+    /// Lower one IR program into the backend-neutral plan. A program the
+    /// lowering cannot handle yields a spanned [`DslError`] — user-reachable
+    /// paths must diagnose, not panic.
+    pub fn build(ir: &IrProgram) -> Result<DevicePlan, DslError> {
         let tf = &ir.tf;
         let props = PropTable::build(tf);
 
-        let host_params = tf
-            .func
-            .params
-            .iter()
-            .map(|p| match &p.ty {
+        let mut host_params = Vec::with_capacity(tf.func.params.len());
+        for p in &tf.func.params {
+            host_params.push(match &p.ty {
                 Type::Graph => HostParam::Graph { name: p.name.clone() },
                 Type::PropNode(_) | Type::PropEdge(_) => HostParam::Prop {
-                    slot: props.slot(&p.name).expect("property parameter registered"),
+                    slot: props.slot(&p.name).ok_or_else(|| {
+                        DslError::at(
+                            p.span,
+                            &format!("property parameter `{}` has no lowerable slot", p.name),
+                        )
+                    })?,
                 },
                 Type::SetN(_) => HostParam::Set { name: p.name.clone() },
                 t => HostParam::Scalar { name: p.name.clone(), ty: ScalarTy::of(t) },
-            })
-            .collect();
+            });
+        }
 
         let mut graph_arrays = vec![GraphArray::Offsets, GraphArray::EdgeList];
         if ir.kernels.iter().any(|k| k.uses.uses_in_edges) {
@@ -717,7 +724,7 @@ impl DevicePlan {
         host_ops.push(HostOp::FreeGraph);
         host_ops.extend(trailing_return);
 
-        DevicePlan {
+        Ok(DevicePlan {
             func: tf.func.name.clone(),
             props,
             host_params,
@@ -728,7 +735,7 @@ impl DevicePlan {
             fixed_points,
             bfs_loops,
             host_ops,
-        }
+        })
     }
 
     pub fn meta(&self, slot: u32) -> &PropMeta {
@@ -1222,7 +1229,7 @@ mod tests {
         let src = std::fs::read_to_string(&path).unwrap();
         let fns = parse(&src).unwrap();
         let tf = check_function(&fns[0]).unwrap();
-        DevicePlan::build(&lower(&tf))
+        DevicePlan::build(&lower(&tf)).expect("plan builds")
     }
 
     #[test]

@@ -2,6 +2,8 @@
 //! client. Mirrors /opt/xla-example/load_hlo — text is the interchange
 //! format because xla_extension 0.5.1 rejects jax≥0.5's 64-bit-id protos.
 
+pub mod service;
+
 use crate::util::json::Json;
 use crate::xla_stub as xla;
 use anyhow::{anyhow, bail, Context, Result};

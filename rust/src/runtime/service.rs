@@ -1,0 +1,445 @@
+//! Fault-tolerant in-process execution service.
+//!
+//! One [`Service`] owns a registry of immutable CSR graphs (shared as
+//! `Arc<Graph>` across concurrent requests), a registry of parsed +
+//! type-checked DSL programs, and a bounded-admission dispatch path onto the
+//! CPU interpreter. Robustness properties, each pinned by
+//! `tests/service_robustness.rs`:
+//!
+//! - **validated registration**: [`Graph::validate`] gates every graph, so a
+//!   corrupt CSR is rejected at the door instead of crashing a sweep later;
+//!   programs must parse and type-check before they are runnable;
+//! - **admission control**: at most `max_in_flight` requests execute at
+//!   once — excess load fails fast with [`ServiceError::Overloaded`] instead
+//!   of queueing unboundedly;
+//! - **isolation**: the interpreter runs under `catch_unwind`, so a panic
+//!   (real or injected via [`crate::util::fault`]) poisons only its own
+//!   request — the graphs, programs, cache, and in-flight accounting stay
+//!   healthy and the next request succeeds;
+//! - **deadlines / cancellation**: each request gets a [`CancelToken`]
+//!   (caller-supplied or fresh) with the request or service-default deadline
+//!   applied; cooperative polls inside the interpreter surface
+//!   [`ExecError::Cancelled`] / [`ExecError::DeadlineExceeded`];
+//! - **result cache**: completed outputs are memoised by
+//!   (graph id, program hash, argument fingerprint) with FIFO eviction;
+//!   capacity 0 disables caching (the stress suite does this so every
+//!   request actually executes).
+
+use crate::backends::interp::env::Val;
+use crate::backends::interp::{self, Args, ExecError, ExecOpts, Output};
+use crate::dsl::parse;
+use crate::graph::csr::Graph;
+use crate::sema::{check_function, TypedFunction};
+use crate::util::cancel::CancelToken;
+use crate::util::fault::FaultPlan;
+use crate::util::pool::panic_message;
+use std::collections::{HashMap, VecDeque};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+use std::time::Duration;
+
+// ---------------------------------------------------------------------------
+// Errors
+// ---------------------------------------------------------------------------
+
+/// Typed failure classes of the service surface. Everything a request can
+/// do wrong — and everything the runtime can do to a request — has a
+/// variant; nothing escapes as a panic.
+#[derive(Clone, Debug, PartialEq, thiserror::Error)]
+pub enum ServiceError {
+    /// Admission control: `max_in_flight` requests were already executing.
+    #[error("service overloaded: {limit} requests already in flight")]
+    Overloaded { limit: usize },
+    /// No graph registered under this id.
+    #[error("unknown graph `{0}`")]
+    UnknownGraph(String),
+    /// No program registered under this name.
+    #[error("unknown program `{0}`")]
+    UnknownProgram(String),
+    /// The graph failed CSR integrity validation at registration.
+    #[error("graph `{id}` failed validation: {reason}")]
+    InvalidGraph { id: String, reason: String },
+    /// The program failed to parse or type-check at registration.
+    #[error("program `{name}` rejected: {reason}")]
+    InvalidProgram { name: String, reason: String },
+    /// The run terminated with a typed interpreter error (cancelled,
+    /// deadline exceeded, worker panic, injected fault).
+    #[error(transparent)]
+    Exec(#[from] ExecError),
+    /// Any other execution failure (e.g. a missing argument binding).
+    #[error("execution failed: {0}")]
+    Failed(String),
+}
+
+// ---------------------------------------------------------------------------
+// Configuration and requests
+// ---------------------------------------------------------------------------
+
+/// Service-wide knobs. [`Default`] gives a permissive production shape;
+/// tests shrink the limits to force each failure mode deterministically.
+#[derive(Clone, Debug)]
+pub struct ServiceConfig {
+    /// concurrent-request ceiling (admission control)
+    pub max_in_flight: usize,
+    /// deadline applied to requests that do not carry their own
+    pub default_deadline: Option<Duration>,
+    /// interpreter worker threads per request (0 = pool default)
+    pub threads: usize,
+    /// result-cache entries (FIFO eviction); 0 disables caching
+    pub cache_capacity: usize,
+    /// service-wide fault plan for requests that do not carry their own
+    /// (`None` leaves the `STARPLAT_FAULT` environment fallback in effect)
+    pub fault: Option<FaultPlan>,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            max_in_flight: 64,
+            default_deadline: None,
+            threads: 0,
+            cache_capacity: 256,
+            fault: None,
+        }
+    }
+}
+
+/// One execution request against registered state.
+#[derive(Clone, Debug, Default)]
+pub struct Request {
+    /// id of a registered graph
+    pub graph: String,
+    /// name of a registered program
+    pub program: String,
+    /// scalar / set argument bindings
+    pub args: Args,
+    /// per-request deadline (overrides the service default)
+    pub deadline: Option<Duration>,
+    /// caller-held token for explicit cancellation
+    pub cancel: Option<CancelToken>,
+    /// per-request fault plan; callers running many requests under one plan
+    /// should re-scope it per request with [`FaultPlan::salted`], and oracle
+    /// runs should pass [`FaultPlan::off`] to defeat the env fallback
+    pub fault: Option<FaultPlan>,
+}
+
+// ---------------------------------------------------------------------------
+// Statistics
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Default)]
+struct StatCells {
+    completed: AtomicU64,
+    cache_hits: AtomicU64,
+    rejected: AtomicU64,
+    cancelled: AtomicU64,
+    deadline_exceeded: AtomicU64,
+    panics: AtomicU64,
+    faults: AtomicU64,
+    failed: AtomicU64,
+    fallbacks: AtomicU64,
+}
+
+/// Point-in-time copy of the service counters.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    /// requests that returned an [`Output`]
+    pub completed: u64,
+    /// requests served from the result cache (subset of `completed`)
+    pub cache_hits: u64,
+    /// requests refused by admission control
+    pub rejected: u64,
+    /// requests ended by explicit cancellation
+    pub cancelled: u64,
+    /// requests ended by deadline expiry
+    pub deadline_exceeded: u64,
+    /// requests ended by a (caught) worker panic
+    pub panics: u64,
+    /// requests ended by a typed injected fault
+    pub faults: u64,
+    /// requests ended by any other execution error
+    pub failed: u64,
+    /// sparse→dense schedule fallbacks summed over completed runs
+    pub fallbacks: u64,
+}
+
+// ---------------------------------------------------------------------------
+// Service
+// ---------------------------------------------------------------------------
+
+#[derive(Clone)]
+struct ProgramEntry {
+    tf: Arc<TypedFunction>,
+    /// FNV-1a of the source text: the cache's program identity
+    hash: u64,
+}
+
+type CacheKey = (String, u64, u64);
+
+#[derive(Default)]
+struct CacheInner {
+    map: HashMap<CacheKey, Arc<Output>>,
+    /// insertion order for FIFO eviction
+    order: VecDeque<CacheKey>,
+}
+
+/// The in-process execution service. Cheap to share: every method takes
+/// `&self`, so one instance serves many threads.
+pub struct Service {
+    cfg: ServiceConfig,
+    graphs: RwLock<HashMap<String, Arc<Graph>>>,
+    programs: RwLock<HashMap<String, ProgramEntry>>,
+    cache: Mutex<CacheInner>,
+    in_flight: AtomicUsize,
+    stats: StatCells,
+}
+
+/// RAII in-flight slot: decrements on every exit path, including panics
+/// that unwind past `execute` itself.
+struct InFlightSlot<'a>(&'a AtomicUsize);
+
+impl Drop for InFlightSlot<'_> {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Poison-tolerant lock helpers: no user code ever runs under these locks
+/// (panics are caught at the interpreter boundary), but a robustness layer
+/// should not turn a poisoned mutex into a second panic either.
+fn lock_mutex<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn read_lock<T>(l: &RwLock<T>) -> std::sync::RwLockReadGuard<'_, T> {
+    l.read().unwrap_or_else(|e| e.into_inner())
+}
+
+fn write_lock<T>(l: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
+    l.write().unwrap_or_else(|e| e.into_inner())
+}
+
+impl Service {
+    pub fn new(cfg: ServiceConfig) -> Service {
+        Service {
+            cfg,
+            graphs: RwLock::new(HashMap::new()),
+            programs: RwLock::new(HashMap::new()),
+            cache: Mutex::new(CacheInner::default()),
+            in_flight: AtomicUsize::new(0),
+            stats: StatCells::default(),
+        }
+    }
+
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Register a graph under `id` after CSR integrity validation.
+    /// Re-registering an id replaces the graph (in-flight requests keep
+    /// their `Arc` to the old one).
+    pub fn register_graph(&self, id: &str, g: Graph) -> Result<(), ServiceError> {
+        g.validate().map_err(|v| ServiceError::InvalidGraph {
+            id: id.to_string(),
+            reason: v.to_string(),
+        })?;
+        write_lock(&self.graphs).insert(id.to_string(), Arc::new(g));
+        Ok(())
+    }
+
+    /// Parse + type-check `src` and register it under `name`.
+    pub fn register_program(&self, name: &str, src: &str) -> Result<(), ServiceError> {
+        let reject = |reason: String| ServiceError::InvalidProgram {
+            name: name.to_string(),
+            reason,
+        };
+        let fns = parse(src).map_err(|e| reject(e.to_string()))?;
+        let f = fns.first().ok_or_else(|| reject("no function in source".to_string()))?;
+        let tf = check_function(f).map_err(|e| reject(e.to_string()))?;
+        let entry = ProgramEntry { tf: Arc::new(tf), hash: fnv1a(src.as_bytes()) };
+        write_lock(&self.programs).insert(name.to_string(), entry);
+        Ok(())
+    }
+
+    pub fn stats(&self) -> StatsSnapshot {
+        let s = &self.stats;
+        StatsSnapshot {
+            completed: s.completed.load(Ordering::Relaxed),
+            cache_hits: s.cache_hits.load(Ordering::Relaxed),
+            rejected: s.rejected.load(Ordering::Relaxed),
+            cancelled: s.cancelled.load(Ordering::Relaxed),
+            deadline_exceeded: s.deadline_exceeded.load(Ordering::Relaxed),
+            panics: s.panics.load(Ordering::Relaxed),
+            faults: s.faults.load(Ordering::Relaxed),
+            failed: s.failed.load(Ordering::Relaxed),
+            fallbacks: s.fallbacks.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Execute one request. Never panics: interpreter panics are caught at
+    /// this boundary and surfaced as [`ExecError::WorkerPanic`].
+    pub fn execute(&self, req: &Request) -> Result<Arc<Output>, ServiceError> {
+        // ---- admission: claim a slot before doing any work ----
+        let limit = self.cfg.max_in_flight;
+        let prev = self.in_flight.fetch_add(1, Ordering::AcqRel);
+        let _slot = InFlightSlot(&self.in_flight);
+        if prev >= limit {
+            self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(ServiceError::Overloaded { limit });
+        }
+
+        // ---- resolve registered state (Arc clones; no locks held later) ----
+        let graph = read_lock(&self.graphs)
+            .get(&req.graph)
+            .cloned()
+            .ok_or_else(|| ServiceError::UnknownGraph(req.graph.clone()))?;
+        let entry = read_lock(&self.programs)
+            .get(&req.program)
+            .cloned()
+            .ok_or_else(|| ServiceError::UnknownProgram(req.program.clone()))?;
+
+        // ---- result cache ----
+        let key: CacheKey = (req.graph.clone(), entry.hash, fingerprint(&req.args));
+        if self.cfg.cache_capacity > 0 {
+            if let Some(hit) = lock_mutex(&self.cache).map.get(&key).cloned() {
+                self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);
+                self.stats.completed.fetch_add(1, Ordering::Relaxed);
+                return Ok(hit);
+            }
+        }
+
+        // ---- cancellation / deadline ----
+        let token = req.cancel.clone().unwrap_or_default();
+        if let Some(d) = req.deadline.or(self.cfg.default_deadline) {
+            token.set_deadline_in(d);
+        }
+        let opts = ExecOpts {
+            threads: self.cfg.threads,
+            frontier: true,
+            cancel: Some(token),
+            fault: req.fault.or(self.cfg.fault),
+        };
+
+        // ---- dispatch; panics stop here ----
+        let ran = catch_unwind(AssertUnwindSafe(|| {
+            interp::run_with_opts(&entry.tf, &graph, &req.args, opts)
+        }));
+        let out = match ran {
+            Err(payload) => {
+                self.stats.panics.fetch_add(1, Ordering::Relaxed);
+                return Err(ExecError::WorkerPanic(panic_message(payload)).into());
+            }
+            Ok(Err(e)) => {
+                return Err(match e.downcast_ref::<ExecError>() {
+                    Some(te) => {
+                        let cell = match te {
+                            ExecError::Cancelled => &self.stats.cancelled,
+                            ExecError::DeadlineExceeded => &self.stats.deadline_exceeded,
+                            ExecError::WorkerPanic(_) => &self.stats.panics,
+                            ExecError::Fault(_) => &self.stats.faults,
+                        };
+                        cell.fetch_add(1, Ordering::Relaxed);
+                        te.clone().into()
+                    }
+                    None => {
+                        self.stats.failed.fetch_add(1, Ordering::Relaxed);
+                        ServiceError::Failed(format!("{e:#}"))
+                    }
+                });
+            }
+            Ok(Ok(out)) => out,
+        };
+
+        self.stats.completed.fetch_add(1, Ordering::Relaxed);
+        self.stats.fallbacks.fetch_add(out.stats.fallbacks, Ordering::Relaxed);
+        let out = Arc::new(out);
+        if self.cfg.cache_capacity > 0 {
+            let mut c = lock_mutex(&self.cache);
+            if !c.map.contains_key(&key) {
+                if c.order.len() >= self.cfg.cache_capacity {
+                    if let Some(evict) = c.order.pop_front() {
+                        c.map.remove(&evict);
+                    }
+                }
+                c.order.push_back(key.clone());
+            }
+            c.map.insert(key, out.clone());
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hashing
+// ---------------------------------------------------------------------------
+
+/// FNV-1a: small, dependency-free, and stable across platforms — the cache
+/// key only needs identity, not cryptographic strength.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Order-insensitive fingerprint of an argument set: names are sorted so
+/// `Args` built in different insertion orders hash identically.
+fn fingerprint(args: &Args) -> u64 {
+    let mut buf: Vec<u8> = Vec::new();
+    let mut scalars: Vec<_> = args.scalars.iter().collect();
+    scalars.sort_by(|a, b| a.0.cmp(b.0));
+    for (name, v) in scalars {
+        buf.extend_from_slice(name.as_bytes());
+        match v {
+            Val::I(x) => {
+                buf.push(b'i');
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+            Val::F(x) => {
+                buf.push(b'f');
+                buf.extend_from_slice(&x.to_bits().to_le_bytes());
+            }
+            Val::B(x) => buf.extend_from_slice(&[b'b', *x as u8]),
+        }
+    }
+    let mut sets: Vec<_> = args.sets.iter().collect();
+    sets.sort_by(|a, b| a.0.cmp(b.0));
+    for (name, vs) in sets {
+        buf.push(b's');
+        buf.extend_from_slice(name.as_bytes());
+        for v in vs {
+            buf.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    fnv1a(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_ignores_insertion_order() {
+        let a = Args::default().scalar("x", Val::I(3)).scalar("y", Val::F(1.5));
+        let b = Args::default().scalar("y", Val::F(1.5)).scalar("x", Val::I(3));
+        assert_eq!(fingerprint(&a), fingerprint(&b));
+    }
+
+    #[test]
+    fn fingerprint_separates_values_and_types() {
+        let base = fingerprint(&Args::default().scalar("x", Val::I(3)));
+        assert_ne!(base, fingerprint(&Args::default().scalar("x", Val::I(4))));
+        assert_ne!(base, fingerprint(&Args::default().scalar("x", Val::F(3.0))));
+        assert_ne!(base, fingerprint(&Args::default().set("x", vec![3])));
+    }
+
+    #[test]
+    fn fnv1a_is_stable() {
+        // pinned reference value: the cache key must not drift across builds
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+    }
+}

@@ -1,0 +1,131 @@
+//! Cooperative cancellation: a cloneable token carrying an explicit cancel
+//! flag and an optional wall-clock deadline.
+//!
+//! The interpreter has no preemption — a sweep over millions of vertices runs
+//! to completion once launched — so bounding a request means *polling*: the
+//! token is checked at host-statement boundaries, at fixed-point/BFS iteration
+//! boundaries, and at pool block-claim boundaries (see
+//! [`crate::util::pool::try_parallel_for_dynamic_scoped`]). That makes the
+//! worst-case overrun one block of work (~64 elements), not one sweep.
+//!
+//! Both trip conditions surface as an [`Interrupt`], which the interpreter
+//! maps onto its typed `ExecError::{Cancelled, DeadlineExceeded}` variants.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Why a cancellation point tripped.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Interrupt {
+    /// [`CancelToken::cancel`] was called.
+    Cancelled,
+    /// The token's deadline passed.
+    DeadlineExceeded,
+}
+
+/// Cloneable cancellation handle; all clones share one state.
+///
+/// The caller keeps one clone and hands another to the run; calling
+/// [`cancel`](CancelToken::cancel) (or letting the deadline pass) makes every
+/// subsequent [`interrupted`](CancelToken::interrupted) poll report the trip.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken {
+    inner: Arc<Inner>,
+}
+
+#[derive(Debug, Default)]
+struct Inner {
+    cancelled: AtomicBool,
+    // fast-path gate so deadline-free tokens never touch the mutex
+    has_deadline: AtomicBool,
+    deadline: Mutex<Option<Instant>>,
+}
+
+impl CancelToken {
+    pub fn new() -> CancelToken {
+        CancelToken::default()
+    }
+
+    /// A token that auto-expires `after` from now.
+    pub fn with_deadline(after: Duration) -> CancelToken {
+        let t = CancelToken::new();
+        t.set_deadline_in(after);
+        t
+    }
+
+    /// Install (or replace) the deadline as now + `after`. Expiry is
+    /// cooperative: it surfaces at the next cancellation point, not
+    /// preemptively.
+    pub fn set_deadline_in(&self, after: Duration) {
+        *self.inner.deadline.lock().unwrap() = Some(Instant::now() + after);
+        self.inner.has_deadline.store(true, Ordering::Release);
+    }
+
+    /// Request cancellation; idempotent.
+    pub fn cancel(&self) {
+        self.inner.cancelled.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.inner.cancelled.load(Ordering::Acquire)
+    }
+
+    /// The poll every cancellation point runs: `None` while the run may
+    /// continue, `Some(reason)` once it must stop. Explicit cancellation
+    /// wins over an expired deadline when both hold.
+    #[inline]
+    pub fn interrupted(&self) -> Option<Interrupt> {
+        if self.inner.cancelled.load(Ordering::Acquire) {
+            return Some(Interrupt::Cancelled);
+        }
+        if self.inner.has_deadline.load(Ordering::Acquire) {
+            if let Some(d) = *self.inner.deadline.lock().unwrap() {
+                if Instant::now() >= d {
+                    return Some(Interrupt::DeadlineExceeded);
+                }
+            }
+        }
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fresh_token_is_clear() {
+        let t = CancelToken::new();
+        assert!(!t.is_cancelled());
+        assert_eq!(t.interrupted(), None);
+    }
+
+    #[test]
+    fn cancel_is_shared_across_clones() {
+        let t = CancelToken::new();
+        let clone = t.clone();
+        t.cancel();
+        assert!(clone.is_cancelled());
+        assert_eq!(clone.interrupted(), Some(Interrupt::Cancelled));
+    }
+
+    #[test]
+    fn zero_deadline_expires_immediately() {
+        let t = CancelToken::with_deadline(Duration::ZERO);
+        assert_eq!(t.interrupted(), Some(Interrupt::DeadlineExceeded));
+    }
+
+    #[test]
+    fn distant_deadline_does_not_trip() {
+        let t = CancelToken::with_deadline(Duration::from_secs(3600));
+        assert_eq!(t.interrupted(), None);
+    }
+
+    #[test]
+    fn cancel_wins_over_expired_deadline() {
+        let t = CancelToken::with_deadline(Duration::ZERO);
+        t.cancel();
+        assert_eq!(t.interrupted(), Some(Interrupt::Cancelled));
+    }
+}

@@ -1,0 +1,224 @@
+//! Deterministic fault injection for the interpreter runtime.
+//!
+//! Robustness paths (panic isolation, sparse→dense fallback, typed reduce
+//! errors) are worthless if they only run when something actually breaks, so
+//! the runtime carries named **fault points** that a [`FaultPlan`] can trip on
+//! purpose:
+//!
+//! | site            | where it fires                                   | effect            |
+//! |-----------------|--------------------------------------------------|-------------------|
+//! | `pool_dispatch` | per element inside a sweep worker                | injected `panic!` |
+//! | `claim_gather`  | per frontier iteration, before the claim gather  | dense fallback    |
+//! | `atomic_reduce` | per reduce executed by a kernel                  | typed `Err`       |
+//!
+//! Whether a point fires is a **pure function** of `(site, seed, salt, key)` —
+//! no global RNG state, no time, no thread identity — so a fixed seed replays
+//! the exact same faults no matter how requests interleave across threads.
+//! The `salt` distinguishes requests (the service salts each request with a
+//! caller-supplied index); the `key` distinguishes firings within a run
+//! (vertex id, iteration index, reduce target).
+//!
+//! Enable globally with `STARPLAT_FAULT=<site>:<seed>:<rate>`, e.g.
+//! `STARPLAT_FAULT=pool_dispatch:7:0.002`, or per run via
+//! `ExecOpts::fault` / `Request::fault` (which override the environment).
+
+use crate::util::rng::splitmix64;
+use std::sync::OnceLock;
+
+/// A named fault point in the runtime.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultSite {
+    /// Inside a pool worker, per swept element: injects a panic, exercising
+    /// the `catch_unwind` wall at the pool boundary.
+    PoolDispatch,
+    /// At a frontier iteration boundary, before the claim-buffer gather:
+    /// abandons the sparse schedule for the dense one (graceful degradation).
+    ClaimGather,
+    /// At an atomic reduce executed by a kernel: surfaces a typed error.
+    AtomicReduce,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 3] =
+        [FaultSite::PoolDispatch, FaultSite::ClaimGather, FaultSite::AtomicReduce];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::PoolDispatch => "pool_dispatch",
+            FaultSite::ClaimGather => "claim_gather",
+            FaultSite::AtomicReduce => "atomic_reduce",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<FaultSite> {
+        FaultSite::ALL.into_iter().find(|site| site.name() == s)
+    }
+}
+
+/// A seeded plan deciding which fault-point firings trip.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub site: FaultSite,
+    pub seed: u64,
+    /// Probability in [0, 1] that a given `(salt, key)` trips the site.
+    pub rate: f64,
+    /// Request-scoped discriminator, mixed into every decision. Must come
+    /// from the caller (e.g. a request index), never from shared mutable
+    /// state, or determinism under concurrency is lost.
+    pub salt: u64,
+}
+
+impl FaultPlan {
+    pub fn new(site: FaultSite, seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan { site, seed, rate, salt: 0 }
+    }
+
+    /// A plan that never fires — lets callers force faults *off* even when
+    /// `STARPLAT_FAULT` is set (e.g. oracle runs in the stress test).
+    pub fn off() -> FaultPlan {
+        FaultPlan::new(FaultSite::PoolDispatch, 0, 0.0)
+    }
+
+    /// The same plan rescoped to one request.
+    pub fn salted(self, salt: u64) -> FaultPlan {
+        FaultPlan { salt, ..self }
+    }
+
+    /// Parse a `<site>:<seed>:<rate>` spec (the `STARPLAT_FAULT` format).
+    pub fn parse_spec(spec: &str) -> Result<FaultPlan, String> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        if parts.len() != 3 {
+            return Err(format!("bad fault spec `{spec}`: expected <site>:<seed>:<rate>"));
+        }
+        let site = FaultSite::parse(parts[0]).ok_or_else(|| {
+            format!("unknown fault site `{}` (pool_dispatch|claim_gather|atomic_reduce)", parts[0])
+        })?;
+        let seed: u64 = parts[1].parse().map_err(|_| format!("bad fault seed `{}`", parts[1]))?;
+        let rate: f64 = parts[2].parse().map_err(|_| format!("bad fault rate `{}`", parts[2]))?;
+        if !(0.0..=1.0).contains(&rate) {
+            return Err(format!("fault rate {rate} outside [0, 1]"));
+        }
+        Ok(FaultPlan::new(site, seed, rate))
+    }
+
+    /// The process-wide plan from `STARPLAT_FAULT`, if any. Read once and
+    /// cached; a malformed spec warns to stderr and disables injection
+    /// rather than silently corrupting runs.
+    pub fn from_env() -> Option<FaultPlan> {
+        static PLAN: OnceLock<Option<FaultPlan>> = OnceLock::new();
+        *PLAN.get_or_init(|| match std::env::var("STARPLAT_FAULT") {
+            Ok(spec) if !spec.is_empty() => match FaultPlan::parse_spec(&spec) {
+                Ok(p) => Some(p),
+                Err(e) => {
+                    eprintln!("warning: ignoring STARPLAT_FAULT: {e}");
+                    None
+                }
+            },
+            _ => None,
+        })
+    }
+
+    /// Does this firing of `site` (discriminated by `key`) trip? Pure in
+    /// `(self, site, key)`.
+    #[inline]
+    pub fn fires(&self, site: FaultSite, key: u64) -> bool {
+        if site != self.site || self.rate <= 0.0 {
+            return false;
+        }
+        if self.rate >= 1.0 {
+            return true;
+        }
+        let mut x = self.seed.wrapping_mul(0xA24BAED4963EE407)
+            ^ self.salt.wrapping_mul(0xD1B54A32D192ED03)
+            ^ key.wrapping_mul(0x9E3779B97F4A7C15);
+        let z = splitmix64(&mut x);
+        ((z >> 11) as f64) * (1.0 / (1u64 << 53) as f64) < self.rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic() {
+        let site = FaultSite::PoolDispatch;
+        let a = FaultPlan::new(site, 42, 0.25).salted(7);
+        let b = FaultPlan::new(site, 42, 0.25).salted(7);
+        for key in 0..512 {
+            assert_eq!(a.fires(site, key), b.fires(site, key));
+        }
+    }
+
+    #[test]
+    fn rate_zero_never_fires_and_rate_one_always_fires() {
+        let off = FaultPlan::new(FaultSite::AtomicReduce, 1, 0.0);
+        let on = FaultPlan::new(FaultSite::AtomicReduce, 1, 1.0);
+        for key in 0..256 {
+            assert!(!off.fires(FaultSite::AtomicReduce, key));
+            assert!(on.fires(FaultSite::AtomicReduce, key));
+        }
+        assert!(!FaultPlan::off().fires(FaultSite::PoolDispatch, 3));
+    }
+
+    #[test]
+    fn other_sites_never_fire() {
+        let plan = FaultPlan::new(FaultSite::ClaimGather, 9, 1.0);
+        for key in 0..64 {
+            assert!(plan.fires(FaultSite::ClaimGather, key));
+            assert!(!plan.fires(FaultSite::PoolDispatch, key));
+            assert!(!plan.fires(FaultSite::AtomicReduce, key));
+        }
+    }
+
+    #[test]
+    fn rate_is_roughly_respected() {
+        let plan = FaultPlan::new(FaultSite::PoolDispatch, 1234, 0.1);
+        let hits = (0..10_000).filter(|&k| plan.fires(FaultSite::PoolDispatch, k)).count();
+        assert!((700..1300).contains(&hits), "hits {hits} far from 10% of 10000");
+    }
+
+    #[test]
+    fn salt_rescopes_decisions() {
+        let site = FaultSite::PoolDispatch;
+        let base = FaultPlan::new(site, 5, 0.5);
+        let a = base.salted(1);
+        let b = base.salted(2);
+        let differing = (0..1000).filter(|&k| a.fires(site, k) != b.fires(site, k)).count();
+        assert!(differing > 100, "salts produced near-identical decisions ({differing})");
+    }
+
+    #[test]
+    fn parse_spec_round_trips() {
+        let p = FaultPlan::parse_spec("claim_gather:77:0.125").unwrap();
+        assert_eq!(p.site, FaultSite::ClaimGather);
+        assert_eq!(p.seed, 77);
+        assert_eq!(p.rate, 0.125);
+        assert_eq!(p.salt, 0);
+    }
+
+    #[test]
+    fn parse_spec_rejects_malformed() {
+        for bad in [
+            "",
+            "pool_dispatch",
+            "pool_dispatch:1",
+            "nowhere:1:0.5",
+            "pool_dispatch:x:0.5",
+            "pool_dispatch:1:nan",
+            "pool_dispatch:1:1.5",
+            "pool_dispatch:1:-0.1",
+            "pool_dispatch:1:0.5:extra",
+        ] {
+            assert!(FaultPlan::parse_spec(bad).is_err(), "accepted `{bad}`");
+        }
+    }
+
+    #[test]
+    fn site_names_round_trip() {
+        for site in FaultSite::ALL {
+            assert_eq!(FaultSite::parse(site.name()), Some(site));
+        }
+        assert_eq!(FaultSite::parse("bogus"), None);
+    }
+}

@@ -2,6 +2,8 @@
 
 pub mod atomics;
 pub mod bench;
+pub mod cancel;
+pub mod fault;
 pub mod json;
 pub mod pool;
 pub mod rng;

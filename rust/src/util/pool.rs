@@ -5,8 +5,18 @@
 //! chunking over `std::thread::scope`, which is enough for the regular,
 //! balanced loops generated from the DSL (the paper's backends likewise use
 //! static thread/block decompositions).
+//!
+//! The dynamic runners are additionally the runtime's **fault boundary**: the
+//! `try_` variants poll a [`CancelToken`] at every block claim and wrap each
+//! block's user code in `catch_unwind`, so a deadline, an explicit cancel, or
+//! a panicking kernel body surfaces as a typed [`PoolInterrupt`] from *this*
+//! call only — the threads are scoped and joined, no state outlives the call,
+//! and the next call starts from a healthy pool.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::cancel::{CancelToken, Interrupt};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 /// Number of worker threads to use: respects STARPLAT_THREADS, defaults to
 /// available parallelism.
@@ -17,6 +27,49 @@ pub fn default_threads() -> usize {
         }
     }
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Why a `try_` runner stopped early. The first interrupt observed wins;
+/// other workers wind down at their next block claim.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum PoolInterrupt {
+    /// The [`CancelToken`] was cancelled.
+    Cancelled,
+    /// The [`CancelToken`]'s deadline passed.
+    DeadlineExceeded,
+    /// A worker's block panicked; the payload message is preserved. The pool
+    /// itself stays healthy — the panic is confined to the failing call.
+    Panicked(String),
+}
+
+impl From<Interrupt> for PoolInterrupt {
+    fn from(i: Interrupt) -> PoolInterrupt {
+        match i {
+            Interrupt::Cancelled => PoolInterrupt::Cancelled,
+            Interrupt::DeadlineExceeded => PoolInterrupt::DeadlineExceeded,
+        }
+    }
+}
+
+/// Best-effort text of a panic payload (`&str` and `String` payloads; every
+/// `panic!` with a message produces one of those).
+pub fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "panic with non-string payload".to_string()
+    }
+}
+
+/// Record the first interrupt and tell every worker to wind down.
+fn record(first: &Mutex<Option<PoolInterrupt>>, stop: &AtomicBool, interrupt: PoolInterrupt) {
+    let mut slot = first.lock().unwrap();
+    if slot.is_none() {
+        *slot = Some(interrupt);
+    }
+    stop.store(true, Ordering::Relaxed);
 }
 
 /// Run `f(i)` for every `i in 0..n`, statically chunked over `threads`
@@ -72,6 +125,9 @@ where
 ///
 /// Returns the final per-worker states in worker order — pure `for` callers
 /// ignore it; [`parallel_collect`] uses the states as claim buffers.
+///
+/// Infallible wrapper over [`try_parallel_for_dynamic_scoped`] with no cancel
+/// token; a worker panic is re-raised here, preserving the old contract.
 pub fn parallel_for_dynamic_scoped<T, I, F>(
     n: usize,
     threads: usize,
@@ -84,43 +140,121 @@ where
     I: Fn() -> T + Sync,
     F: Fn(&mut T, usize) + Sync,
 {
+    match try_parallel_for_dynamic_scoped(n, threads, block, None, init, f) {
+        Ok(states) => states,
+        Err(PoolInterrupt::Panicked(msg)) => panic!("{msg}"),
+        Err(other) => panic!("pool interrupted without a cancel token: {other:?}"),
+    }
+}
+
+/// Fallible dynamic runner: the cooperative-cancellation and panic-isolation
+/// boundary of the runtime.
+///
+/// At every block claim each worker polls `cancel`; a trip stops all workers
+/// at their next claim and returns the corresponding [`PoolInterrupt`]. Each
+/// block's `f` calls run inside `catch_unwind`, so a panicking element
+/// poisons only this call: the first panic's message is captured, the other
+/// workers wind down, every scoped thread is joined, and the caller gets
+/// `Err(PoolInterrupt::Panicked(_))` instead of a propagating unwind.
+///
+/// On `Ok`, every index in `0..n` was processed exactly once; on `Err`, an
+/// unspecified prefix of blocks was processed (callers treat the work as
+/// abandoned).
+pub fn try_parallel_for_dynamic_scoped<T, I, F>(
+    n: usize,
+    threads: usize,
+    block: usize,
+    cancel: Option<&CancelToken>,
+    init: I,
+    f: F,
+) -> Result<Vec<T>, PoolInterrupt>
+where
+    T: Send,
+    I: Fn() -> T + Sync,
+    F: Fn(&mut T, usize) + Sync,
+{
     if n == 0 {
-        return Vec::new();
+        return Ok(Vec::new());
     }
     let threads = threads.clamp(1, n);
-    if threads == 1 {
-        let mut state = init();
-        for i in 0..n {
-            f(&mut state, i);
-        }
-        return vec![state];
-    }
     let block = block.max(1);
-    let next = AtomicUsize::new(0);
-    std::thread::scope(|s| {
-        let handles: Vec<_> = (0..threads)
-            .map(|_| {
-                let f = &f;
-                let init = &init;
-                let next = &next;
-                s.spawn(move || {
-                    let mut state = init();
-                    loop {
-                        let lo = next.fetch_add(block, Ordering::Relaxed);
-                        if lo >= n {
-                            break;
+    let first = Mutex::new(None);
+    let stop = AtomicBool::new(false);
+    let states = if threads == 1 {
+        let mut state = init();
+        let mut lo = 0;
+        while lo < n {
+            if let Some(i) = cancel.and_then(|c| c.interrupted()) {
+                record(&first, &stop, i.into());
+                break;
+            }
+            let hi = (lo + block).min(n);
+            let state = &mut state;
+            if let Err(p) = catch_unwind(AssertUnwindSafe(|| {
+                for i in lo..hi {
+                    f(state, i);
+                }
+            })) {
+                record(&first, &stop, PoolInterrupt::Panicked(panic_message(p)));
+                break;
+            }
+            lo = hi;
+        }
+        vec![state]
+    } else {
+        let next = AtomicUsize::new(0);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|_| {
+                    let f = &f;
+                    let init = &init;
+                    let next = &next;
+                    let first = &first;
+                    let stop = &stop;
+                    s.spawn(move || {
+                        let mut state = init();
+                        loop {
+                            if stop.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            if let Some(i) = cancel.and_then(|c| c.interrupted()) {
+                                record(first, stop, i.into());
+                                break;
+                            }
+                            let lo = next.fetch_add(block, Ordering::Relaxed);
+                            if lo >= n {
+                                break;
+                            }
+                            let hi = (lo + block).min(n);
+                            let state = &mut state;
+                            if let Err(p) = catch_unwind(AssertUnwindSafe(|| {
+                                for i in lo..hi {
+                                    f(state, i);
+                                }
+                            })) {
+                                record(first, stop, PoolInterrupt::Panicked(panic_message(p)));
+                                break;
+                            }
                         }
-                        let hi = (lo + block).min(n);
-                        for i in lo..hi {
-                            f(&mut state, i);
-                        }
-                    }
-                    state
+                        state
+                    })
                 })
-            })
-            .collect();
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    })
+                .collect();
+            let mut states = Vec::with_capacity(handles.len());
+            for h in handles {
+                match h.join() {
+                    Ok(state) => states.push(state),
+                    // a panic outside the per-block wall (e.g. in `init`)
+                    Err(p) => record(&first, &stop, PoolInterrupt::Panicked(panic_message(p))),
+                }
+            }
+            states
+        })
+    };
+    match first.into_inner().unwrap() {
+        Some(interrupt) => Err(interrupt),
+        None => Ok(states),
+    }
 }
 
 /// Parallel emit-collect: run `emit(i, &mut buf)` for every `i in 0..n`,
@@ -139,9 +273,32 @@ where
     T: Send,
     F: Fn(usize, &mut Vec<T>) + Sync,
 {
+    match try_parallel_collect(n, threads, block, None, emit) {
+        Ok(out) => out,
+        Err(PoolInterrupt::Panicked(msg)) => panic!("{msg}"),
+        Err(other) => panic!("pool interrupted without a cancel token: {other:?}"),
+    }
+}
+
+/// Fallible [`parallel_collect`]: same claim-buffer gather, but cancellable
+/// and panic-isolated like [`try_parallel_for_dynamic_scoped`]. On `Err` the
+/// partial buffers are dropped — an interrupted gather yields no elements.
+pub fn try_parallel_collect<T, F>(
+    n: usize,
+    threads: usize,
+    block: usize,
+    cancel: Option<&CancelToken>,
+    emit: F,
+) -> Result<Vec<T>, PoolInterrupt>
+where
+    T: Send,
+    F: Fn(usize, &mut Vec<T>) + Sync,
+{
     // the per-worker scratch of the dynamic-scoped runner IS the claim
     // buffer: one chunking implementation, not two
-    let buffers = parallel_for_dynamic_scoped(n, threads, block, Vec::new, |buf, i| emit(i, buf));
+    let buffers = try_parallel_for_dynamic_scoped(n, threads, block, cancel, Vec::new, |buf, i| {
+        emit(i, buf)
+    })?;
     // prefix offsets: one exact allocation, each worker's buffer lands at
     // the running offset of the lengths before it
     let total = buffers.iter().map(Vec::len).sum();
@@ -149,7 +306,7 @@ where
     for b in buffers {
         out.extend(b);
     }
-    out
+    Ok(out)
 }
 
 /// Parallel map: collects `f(i)` into a Vec, preserving order.
@@ -173,6 +330,7 @@ where
 mod tests {
     use super::*;
     use std::sync::atomic::AtomicU64;
+    use std::time::Duration;
 
     #[test]
     fn covers_all_indices() {
@@ -261,5 +419,90 @@ mod tests {
         let v = parallel_map(100, 4, |i| i * i);
         assert_eq!(v[7], 49);
         assert_eq!(v[99], 9801);
+    }
+
+    #[test]
+    fn cancelled_token_stops_before_any_work() {
+        for threads in [1, 4] {
+            let token = CancelToken::new();
+            token.cancel();
+            let done = AtomicU64::new(0);
+            let r = try_parallel_for_dynamic_scoped(
+                10_000,
+                threads,
+                8,
+                Some(&token),
+                || (),
+                |_, _| {
+                    done.fetch_add(1, Ordering::Relaxed);
+                },
+            );
+            assert_eq!(r, Err(PoolInterrupt::Cancelled), "{threads} threads");
+            // workers poll before every claim, so a pre-cancelled token
+            // admits no blocks at all
+            assert_eq!(done.load(Ordering::Relaxed), 0, "{threads} threads");
+        }
+    }
+
+    #[test]
+    fn expired_deadline_surfaces_as_interrupt() {
+        let token = CancelToken::with_deadline(Duration::ZERO);
+        let r = try_parallel_for_dynamic_scoped(1000, 4, 8, Some(&token), || (), |_, _| {});
+        assert_eq!(r, Err(PoolInterrupt::DeadlineExceeded));
+    }
+
+    #[test]
+    fn panic_in_block_becomes_typed_interrupt() {
+        for threads in [1, 4] {
+            let r = try_parallel_for_dynamic_scoped(
+                1000,
+                threads,
+                8,
+                None,
+                || (),
+                |_, i| {
+                    if i == 137 {
+                        panic!("boom at {i}");
+                    }
+                },
+            );
+            match r {
+                Err(PoolInterrupt::Panicked(msg)) => {
+                    assert!(msg.contains("boom at 137"), "message lost: {msg}");
+                }
+                other => panic!("expected Panicked, got {other:?} ({threads} threads)"),
+            }
+        }
+    }
+
+    #[test]
+    fn pool_is_healthy_after_a_panicking_call() {
+        let r = try_parallel_for_dynamic_scoped(64, 4, 4, None, || (), |_, _| {
+            panic!("poison attempt");
+        });
+        assert!(matches!(r, Err(PoolInterrupt::Panicked(_))));
+        // the panic was confined to the failing call: the very next call on
+        // the same primitives runs every index exactly once
+        let hits: Vec<AtomicU64> = (0..500).map(|_| AtomicU64::new(0)).collect();
+        parallel_for_dynamic(500, 4, 8, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn interrupted_collect_drops_partial_buffers() {
+        let token = CancelToken::new();
+        token.cancel();
+        let r: Result<Vec<usize>, _> =
+            try_parallel_collect(1000, 4, 8, Some(&token), |i, out| out.push(i));
+        assert_eq!(r, Err(PoolInterrupt::Cancelled));
+    }
+
+    #[test]
+    fn try_runner_matches_infallible_on_success() {
+        let states =
+            try_parallel_for_dynamic_scoped(100, 3, 7, None, || 0u64, |acc, _| *acc += 1).unwrap();
+        assert_eq!(states.iter().sum::<u64>(), 100);
     }
 }

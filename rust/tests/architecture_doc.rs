@@ -24,7 +24,7 @@ fn sssp_plan() -> DevicePlan {
         .join("sssp.sp");
     let fns = parse_file(&path).unwrap();
     let tf = check_function(&fns[0]).unwrap();
-    DevicePlan::build(&lower(&tf))
+    DevicePlan::build(&lower(&tf)).expect("plan builds")
 }
 
 /// Lines of the fenced code block immediately following `marker`.

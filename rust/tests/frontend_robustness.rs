@@ -1,0 +1,108 @@
+//! Corpus-mutation fuzzing of the DSL front-end: every shipped program,
+//! truncated at several points and byte-flipped at seeded positions, must
+//! come back as a typed `Err(DslError)` from parse + type-check — never a
+//! panic, and never silent acceptance of a damaged program. Each candidate
+//! runs under `catch_unwind` so a panic anywhere in the front-end fails the
+//! test with the offending mutation identified.
+
+use starplat::dsl::diag::DslError;
+use starplat::dsl::parse;
+use starplat::sema::check_function;
+use starplat::util::rng::Rng;
+use std::panic::catch_unwind;
+
+const CORPUS: [(&str, &str); 6] = [
+    ("bc.sp", include_str!("../dsl_programs/bc.sp")),
+    ("bfs.sp", include_str!("../dsl_programs/bfs.sp")),
+    ("cc.sp", include_str!("../dsl_programs/cc.sp")),
+    ("pr.sp", include_str!("../dsl_programs/pr.sp")),
+    ("sssp.sp", include_str!("../dsl_programs/sssp.sp")),
+    ("tc.sp", include_str!("../dsl_programs/tc.sp")),
+];
+
+const FLIPS_PER_PROGRAM: usize = 32;
+
+/// Run the front-end on `src`, catching panics. The inner `Result` is the
+/// front-end's own verdict; the outer one records whether it panicked.
+fn front_end(src: String) -> Result<Result<usize, DslError>, String> {
+    catch_unwind(move || -> Result<usize, DslError> {
+        let fns = parse(&src)?;
+        let mut checked = 0;
+        for f in &fns {
+            check_function(f)?;
+            checked += 1;
+        }
+        Ok(checked)
+    })
+    .map_err(|_| "front-end panicked".to_string())
+}
+
+/// The mutated program must be *rejected with a typed error*: a panic and
+/// an accepted parse are both failures.
+fn assert_rejected(label: &str, src: String) {
+    match front_end(src) {
+        Err(msg) => panic!("{label}: {msg}"),
+        Ok(Ok(n)) => panic!("{label}: damaged program accepted ({n} functions checked)"),
+        Ok(Err(_)) => {} // typed rejection — the pin
+    }
+}
+
+/// Byte positions eligible for flipping: printable content outside line
+/// comments (mutating a comment cannot make a program invalid).
+fn eligible_positions(src: &str) -> Vec<usize> {
+    let mut eligible = Vec::new();
+    let mut base = 0;
+    for line in src.split_inclusive('\n') {
+        let code_end = line.find("//").unwrap_or(line.len());
+        for (i, b) in line.as_bytes()[..code_end].iter().enumerate() {
+            if !b.is_ascii_whitespace() {
+                eligible.push(base + i);
+            }
+        }
+        base += line.len();
+    }
+    eligible
+}
+
+#[test]
+fn intact_corpus_still_passes() {
+    // baseline: the harness itself accepts every unmutated program
+    for (name, src) in CORPUS {
+        assert!(src.is_ascii(), "{name}: mutation offsets assume ASCII sources");
+        match front_end(src.to_string()) {
+            Ok(Ok(n)) => assert_eq!(n, 1, "{name}: expected exactly one function"),
+            other => panic!("{name}: intact program rejected: {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn truncated_programs_are_rejected_not_crashed() {
+    for (name, src) in CORPUS {
+        let start = src.find("function").expect("corpus program has a function") + "function".len();
+        let end = src.rfind('}').expect("corpus program has a closing brace");
+        for k in 1..=7 {
+            let cut = start + (end - start) * k / 8;
+            assert_rejected(&format!("{name} truncated at byte {cut}"), src[..cut].to_string());
+        }
+    }
+}
+
+#[test]
+fn byte_flipped_programs_are_rejected_not_crashed() {
+    for (name, src) in CORPUS {
+        let eligible = eligible_positions(src);
+        assert!(eligible.len() > FLIPS_PER_PROGRAM, "{name}: suspiciously little code");
+        let mut rng = Rng::new(0xF1A5 ^ name.len() as u64);
+        for _ in 0..FLIPS_PER_PROGRAM {
+            let pos = eligible[rng.below(eligible.len() as u64) as usize];
+            let mut bytes = src.as_bytes().to_vec();
+            // NUL is never legal DSL outside comments: the lexer either
+            // rejects it or treats it as a hard stop (mid-program EOF) —
+            // both must surface as a typed parse error
+            bytes[pos] = b'\0';
+            let mutated = String::from_utf8(bytes).expect("ASCII source stays valid UTF-8");
+            assert_rejected(&format!("{name} with byte {pos} nulled"), mutated);
+        }
+    }
+}

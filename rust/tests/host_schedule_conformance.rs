@@ -50,6 +50,7 @@ fn host_manifest_identical_across_all_text_backends() {
     for p in PROGRAMS {
         let ir = ir_of(p);
         let expected: Vec<String> = DevicePlan::build(&ir)
+            .expect("plan builds")
             .host_manifest()
             .iter()
             .map(|l| format!("// {l}"))
@@ -74,7 +75,7 @@ fn host_manifest_identical_across_all_text_backends() {
 fn paper_four_host_sections_share_one_lowering() {
     for p in PAPER_FOUR {
         let ir = ir_of(p);
-        let plan = DevicePlan::build(&ir);
+        let plan = DevicePlan::build(&ir).expect("plan builds");
         let blocks: Vec<Vec<String>> = codegen::TEXT_BACKENDS
             .iter()
             .map(|b| host_schedule_block(&codegen::generate(b, &ir).unwrap()))
@@ -129,7 +130,7 @@ fn collect_kernel_refs(plan: &DevicePlan, ops: &[HostOp], out: &mut Vec<usize>) 
 #[test]
 fn host_ops_reference_every_kernel_once_in_order() {
     for p in PROGRAMS {
-        let plan = DevicePlan::build(&ir_of(p));
+        let plan = DevicePlan::build(&ir_of(p)).expect("plan builds");
         let mut refs = Vec::new();
         collect_kernel_refs(&plan, &plan.host_ops, &mut refs);
         let expect: Vec<usize> = (0..plan.kernels.len()).collect();
@@ -165,6 +166,7 @@ fn kernel_manifest_identical_across_all_text_backends() {
     for p in PROGRAMS {
         let ir = ir_of(p);
         let expected: Vec<String> = DevicePlan::build(&ir)
+            .expect("plan builds")
             .kernel_manifest()
             .iter()
             .map(|l| format!("// {l}"))
@@ -187,7 +189,7 @@ fn kernel_manifest_identical_across_all_text_backends() {
 #[test]
 fn every_kernel_reduce_targets_a_declared_parameter() {
     for p in PROGRAMS {
-        let plan = DevicePlan::build(&ir_of(p));
+        let plan = DevicePlan::build(&ir_of(p)).expect("plan builds");
         for k in &plan.kernels {
             let Some(body) = &k.body else { continue };
             let params = k.params(true);
@@ -249,7 +251,7 @@ fn hip_launch_args(src: &str, kernel: &str) -> Vec<String> {
 fn hip_and_cuda_agree_on_kernels_slots_and_launch_args() {
     for p in PROGRAMS {
         let ir = ir_of(p);
-        let plan = DevicePlan::build(&ir);
+        let plan = DevicePlan::build(&ir).expect("plan builds");
         let cuda = codegen::generate("cuda", &ir).unwrap();
         let hip = codegen::generate("hip", &ir).unwrap();
         for k in &plan.kernels {

@@ -50,7 +50,12 @@ fn manifest_identical_across_all_text_backends() {
     for p in PROGRAMS {
         let ir = ir_of(p);
         let expected: Vec<String> =
-            DevicePlan::build(&ir).manifest().iter().map(|l| format!("// {l}")).collect();
+            DevicePlan::build(&ir)
+                .expect("plan builds")
+                .manifest()
+                .iter()
+                .map(|l| format!("// {l}"))
+                .collect();
         assert!(expected.len() > 3, "{p}: manifest suspiciously small");
         for b in codegen::TEXT_BACKENDS {
             let src = codegen::generate(b, &ir).unwrap();
@@ -68,7 +73,7 @@ fn interpreter_and_codegen_agree_on_buffer_numbering() {
     for p in PROGRAMS {
         let tf = typed(p);
         let prog = interp::compile::compile(&tf).unwrap();
-        let plan = DevicePlan::build(&lower(&tf));
+        let plan = DevicePlan::build(&lower(&tf)).expect("plan builds");
         let interp_slots: Vec<(String, bool, bool)> =
             prog.props.iter().map(|m| (m.name.clone(), m.edge, m.param)).collect();
         let plan_slots: Vec<(String, bool, bool)> = plan
@@ -85,7 +90,7 @@ fn interpreter_and_codegen_agree_on_buffer_numbering() {
 fn kernel_schedule_matches_ir_and_names_appear_in_named_backends() {
     for p in PROGRAMS {
         let ir = ir_of(p);
-        let plan = DevicePlan::build(&ir);
+        let plan = DevicePlan::build(&ir).expect("plan builds");
         assert_eq!(plan.kernels.len(), ir.kernels.len(), "{p}");
         for (kp, ki) in plan.kernels.iter().zip(&ir.kernels) {
             assert_eq!(kp.id, ki.id, "{p}");
@@ -109,7 +114,7 @@ fn kernel_schedule_matches_ir_and_names_appear_in_named_backends() {
 fn kernel_parameter_lists_follow_slot_order() {
     use starplat::ir::plan::KernelParam;
     for p in PROGRAMS {
-        let plan = DevicePlan::build(&ir_of(p));
+        let plan = DevicePlan::build(&ir_of(p)).expect("plan builds");
         for k in &plan.kernels {
             let slots: Vec<u32> = k
                 .params(false)

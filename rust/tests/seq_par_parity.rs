@@ -129,14 +129,12 @@ fn pull_fixedpoint_parity_and_frontier_dense_agreement() {
     for g in test_graphs() {
         let args = Args::default();
         // dense schedule at 1 thread is the ground truth
-        let want = interp::run_with_opts(&tf, &g, &args, ExecOpts { threads: 1, frontier: false })
-            .unwrap()
-            .prop_i64("comp");
+        let seq = ExecOpts { threads: 1, frontier: false, ..Default::default() };
+        let want = interp::run_with_opts(&tf, &g, &args, seq).unwrap().prop_i64("comp");
         for t in THREADS {
             for frontier in [true, false] {
-                let out =
-                    interp::run_with_opts(&tf, &g, &args, ExecOpts { threads: t, frontier })
-                        .unwrap();
+                let opts = ExecOpts { threads: t, frontier, ..Default::default() };
+                let out = interp::run_with_opts(&tf, &g, &args, opts).unwrap();
                 assert_eq!(
                     out.prop_i64("comp"),
                     want,

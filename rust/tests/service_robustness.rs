@@ -1,0 +1,221 @@
+//! Robustness pins for the in-process execution service
+//! (`starplat::runtime::service`): validated registration, panic isolation,
+//! deadlines, cancellation, admission control, result caching, and the
+//! sparse→dense schedule fallback — each failure mode forced
+//! deterministically and checked against a fault-free oracle.
+
+use starplat::backends::interp::{self, Args, ExecError, ExecOpts};
+use starplat::dsl::parse;
+use starplat::graph::csr::Graph;
+use starplat::graph::generators::rmat;
+use starplat::runtime::service::{Request, Service, ServiceConfig, ServiceError};
+use starplat::sema::check_function;
+use starplat::util::cancel::CancelToken;
+use starplat::util::fault::{FaultPlan, FaultSite};
+use std::sync::Arc;
+use std::time::Duration;
+
+const SSSP: &str = include_str!("../dsl_programs/sssp.sp");
+const CC: &str = include_str!("../dsl_programs/cc.sp");
+
+fn test_graph() -> Graph {
+    rmat("g", 200, 800, 7)
+}
+
+/// A service with `test_graph` under "g" and sssp/cc registered.
+fn service(cfg: ServiceConfig) -> Service {
+    let svc = Service::new(cfg);
+    svc.register_graph("g", test_graph()).unwrap();
+    svc.register_program("sssp", SSSP).unwrap();
+    svc.register_program("cc", CC).unwrap();
+    svc
+}
+
+/// Fault-free request: `FaultPlan::off` defeats any `STARPLAT_FAULT` in the
+/// environment so only the per-test plan is ever active.
+fn sssp_req() -> Request {
+    Request {
+        graph: "g".to_string(),
+        program: "sssp".to_string(),
+        args: Args::default().node("src", 1),
+        fault: Some(FaultPlan::off()),
+        ..Default::default()
+    }
+}
+
+/// Direct interpreter run of sssp on the same graph: the oracle every
+/// successful service response must match.
+fn sssp_oracle() -> Vec<i64> {
+    let fns = parse(SSSP).unwrap();
+    let tf = check_function(&fns[0]).unwrap();
+    let opts = ExecOpts { threads: 1, fault: Some(FaultPlan::off()), ..Default::default() };
+    let args = Args::default().node("src", 1);
+    interp::run_with_opts(&tf, &test_graph(), &args, opts).unwrap().prop_i64("dist")
+}
+
+#[test]
+fn corrupt_graph_is_rejected_at_registration() {
+    let svc = Service::new(ServiceConfig::default());
+    let mut g = test_graph();
+    g.adj[0] = 1_000_000; // dangling edge target
+    let err = svc.register_graph("bad", g).expect_err("validation must gate registration");
+    match err {
+        ServiceError::InvalidGraph { id, reason } => {
+            assert_eq!(id, "bad");
+            assert!(reason.contains("1000000"), "unhelpful reason: {reason}");
+        }
+        other => panic!("expected InvalidGraph, got {other:?}"),
+    }
+}
+
+#[test]
+fn bad_program_is_rejected_at_registration() {
+    let svc = Service::new(ServiceConfig::default());
+    let err = svc.register_program("broken", "function f(Graph g {").unwrap_err();
+    assert!(matches!(err, ServiceError::InvalidProgram { .. }), "got {err:?}");
+    let err = svc.register_program("empty", "// nothing here\n").unwrap_err();
+    assert!(matches!(err, ServiceError::InvalidProgram { .. }), "got {err:?}");
+}
+
+#[test]
+fn unknown_ids_fail_typed() {
+    let svc = service(ServiceConfig::default());
+    let mut req = sssp_req();
+    req.graph = "nope".to_string();
+    assert!(matches!(svc.execute(&req).unwrap_err(), ServiceError::UnknownGraph(_)));
+    let mut req = sssp_req();
+    req.program = "nope".to_string();
+    assert!(matches!(svc.execute(&req).unwrap_err(), ServiceError::UnknownProgram(_)));
+}
+
+#[test]
+fn missing_argument_is_failed_not_panic() {
+    let svc = service(ServiceConfig::default());
+    let mut req = sssp_req();
+    req.args = Args::default(); // sssp needs `src`
+    match svc.execute(&req).unwrap_err() {
+        ServiceError::Failed(msg) => assert!(msg.contains("src"), "unhelpful: {msg}"),
+        other => panic!("expected Failed, got {other:?}"),
+    }
+}
+
+#[test]
+fn panic_poisons_only_its_own_request() {
+    let svc = service(ServiceConfig { cache_capacity: 0, ..Default::default() });
+
+    // request 1: every pool dispatch panics
+    let mut req = sssp_req();
+    req.fault = Some(FaultPlan::new(FaultSite::PoolDispatch, 7, 1.0));
+    match svc.execute(&req).unwrap_err() {
+        ServiceError::Exec(ExecError::WorkerPanic(msg)) => {
+            assert!(msg.contains("injected fault"), "panic message lost: {msg}");
+        }
+        other => panic!("expected WorkerPanic, got {other:?}"),
+    }
+    assert_eq!(svc.stats().panics, 1);
+
+    // request 2 on the same service: unaffected and correct
+    let out = svc.execute(&sssp_req()).expect("service must survive a worker panic");
+    assert_eq!(out.prop_i64("dist"), sssp_oracle());
+    assert_eq!(svc.stats().completed, 1);
+}
+
+#[test]
+fn expired_deadline_surfaces_typed() {
+    let svc = service(ServiceConfig::default());
+    let mut req = sssp_req();
+    req.deadline = Some(Duration::ZERO);
+    match svc.execute(&req).unwrap_err() {
+        ServiceError::Exec(ExecError::DeadlineExceeded) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    assert_eq!(svc.stats().deadline_exceeded, 1);
+}
+
+#[test]
+fn service_default_deadline_applies() {
+    let svc = service(ServiceConfig {
+        default_deadline: Some(Duration::ZERO),
+        ..Default::default()
+    });
+    let err = svc.execute(&sssp_req()).unwrap_err();
+    assert_eq!(err, ServiceError::Exec(ExecError::DeadlineExceeded));
+}
+
+#[test]
+fn pre_cancelled_token_stops_the_request() {
+    let svc = service(ServiceConfig::default());
+    let token = CancelToken::new();
+    token.cancel();
+    let mut req = sssp_req();
+    req.cancel = Some(token);
+    let err = svc.execute(&req).unwrap_err();
+    assert_eq!(err, ServiceError::Exec(ExecError::Cancelled));
+    assert_eq!(svc.stats().cancelled, 1);
+}
+
+#[test]
+fn admission_control_rejects_and_recovers() {
+    // capacity 0: everything is load-shed, nothing executes
+    let svc = service(ServiceConfig { max_in_flight: 0, ..Default::default() });
+    let err = svc.execute(&sssp_req()).unwrap_err();
+    assert!(matches!(err, ServiceError::Overloaded { limit: 0 }), "got {err:?}");
+    assert_eq!(svc.stats().rejected, 1);
+
+    // capacity 1: sequential requests keep succeeding, proving the
+    // in-flight slot is released on completion
+    let svc = service(ServiceConfig { max_in_flight: 1, ..Default::default() });
+    svc.execute(&sssp_req()).expect("first request fits");
+    svc.execute(&sssp_req()).expect("slot must be released after completion");
+}
+
+#[test]
+fn in_flight_slot_is_released_after_failures() {
+    let svc = service(ServiceConfig {
+        max_in_flight: 1,
+        cache_capacity: 0,
+        ..Default::default()
+    });
+    let mut req = sssp_req();
+    req.fault = Some(FaultPlan::new(FaultSite::PoolDispatch, 9, 1.0));
+    assert!(svc.execute(&req).is_err());
+    svc.execute(&sssp_req()).expect("slot must be released after a panic");
+}
+
+#[test]
+fn identical_requests_share_a_cached_output() {
+    let svc = service(ServiceConfig { cache_capacity: 8, ..Default::default() });
+    let a = svc.execute(&sssp_req()).unwrap();
+    let b = svc.execute(&sssp_req()).unwrap();
+    assert!(Arc::ptr_eq(&a, &b), "second request must be served from cache");
+    assert_eq!(svc.stats().cache_hits, 1);
+    // different arguments miss
+    let mut req = sssp_req();
+    req.args = Args::default().node("src", 2);
+    let c = svc.execute(&req).unwrap();
+    assert!(!Arc::ptr_eq(&a, &c));
+    assert_eq!(svc.stats().cache_hits, 1);
+}
+
+#[test]
+fn claim_gather_fault_falls_back_to_dense_and_stays_correct() {
+    let svc = service(ServiceConfig { cache_capacity: 0, ..Default::default() });
+    let mut req = sssp_req();
+    req.fault = Some(FaultPlan::new(FaultSite::ClaimGather, 3, 1.0));
+    let out = svc.execute(&req).expect("fallback must recover the run");
+    assert_eq!(out.prop_i64("dist"), sssp_oracle(), "dense fallback changed the answer");
+    assert!(out.stats.fallbacks >= 1, "fallback not recorded in run stats");
+    assert!(svc.stats().fallbacks >= 1, "fallback not aggregated in service stats");
+}
+
+#[test]
+fn atomic_reduce_fault_is_typed() {
+    let svc = service(ServiceConfig { cache_capacity: 0, ..Default::default() });
+    let mut req = sssp_req();
+    req.fault = Some(FaultPlan::new(FaultSite::AtomicReduce, 5, 1.0));
+    match svc.execute(&req).unwrap_err() {
+        ServiceError::Exec(ExecError::Fault(site)) => assert_eq!(site, "atomic_reduce"),
+        other => panic!("expected Fault, got {other:?}"),
+    }
+    assert_eq!(svc.stats().faults, 1);
+}

@@ -11,6 +11,12 @@ timing **spread** across the previous runs — (max - min) / min, excluding
 the run under test so a real regression can't inflate it — the
 runner-variance context for each flagged cell.
 
+Cells may carry an optional `fallbacks` column (sparse->dense schedule
+fallbacks observed during the run, PR 6). It is informational only — a
+nonzero count annotates the current-seconds column as ` (fb=N)` — and
+never participates in the regression decision; reports without the column
+compare exactly as before.
+
 The step is **blocking**: with the spread column landed (PR 4) and worst-case
 runner variance observed comfortably under the threshold, a >threshold
 per-cell regression exits 1 and fails CI. Set `BENCH_TREND_ADVISORY=1` in the
@@ -72,6 +78,9 @@ def main(argv):
     spreads = []
     for key in sorted(cur):
         c = cur[key]
+        # optional robustness column: annotate, never gate
+        fb = c.get("fallbacks") or 0
+        fb_s = f" (fb={int(fb)})" if fb else ""
         # spread is measured over *previous* runs only: including the run
         # under test would let a genuine regression inflate the variance
         # figure meant to contextualize it
@@ -86,13 +95,13 @@ def main(argv):
         p = prev.get(key)
         if p is None or not p.get("secs"):
             print(f"| {key[0]} | {key[1]} | {key[2]} | — "
-                  f"| {c['secs']:.4f} | new | {spread_s} |")
+                  f"| {c['secs']:.4f}{fb_s} | new | {spread_s} |")
             continue
         delta = (c["secs"] - p["secs"]) / p["secs"]
         flag = " ⚠️" if delta > threshold else ""
         print(
             f"| {key[0]} | {key[1]} | {key[2]} | {p['secs']:.4f} "
-            f"| {c['secs']:.4f} | {delta:+.1%}{flag} | {spread_s} |"
+            f"| {c['secs']:.4f}{fb_s} | {delta:+.1%}{flag} | {spread_s} |"
         )
         if delta > threshold:
             regressions.append((key, delta))
