@@ -9,6 +9,12 @@
 //! default) and with it forced off (`ExecOpts::frontier = false`), so the
 //! fast path's win is visible per cell instead of inferred across PRs.
 //!
+//! Every cell also carries the persistent runtime's counters
+//! (frontier-engine-v3): `dispatch_ns` (average publish→first-worker-join
+//! wake latency per run) and `steals` (average successful deque steals per
+//! run) — the two numbers that distinguish "dispatch got cheap" from
+//! "load-balancing fired" when a cell moves.
+//!
 //! Run: cargo run --release --example bench_interp
 //! Env: STARPLAT_BENCH_N (graph size knob, default 20000),
 //!      STARPLAT_THREADS (Par worker count),
@@ -47,21 +53,41 @@ fn has_frontier_path(stmts: &[compile::HostStmt]) -> bool {
     })
 }
 
-/// Best-of-3 wall-clock seconds (plus dense-fallback count) for one
-/// (algo, graph, mode, schedule) cell.
-fn time_cell(algo: Algo, g: &Graph, threads: usize, frontier: bool) -> anyhow::Result<(f64, u64)> {
+/// One timed cell: best-of-3 wall-clock seconds, dense-fallback count, and
+/// the persistent-runtime counters attributed to this cell.
+struct Cell {
+    secs: f64,
+    fallbacks: u64,
+    /// average publish→first-worker-join latency per timed run (ns): the
+    /// wake cost the persistent pool replaced thread spawning with
+    dispatch_ns: f64,
+    /// average successful deque steals per timed run
+    steals: f64,
+}
+
+/// Best-of-3 wall-clock seconds (plus dense-fallback count and per-run pool
+/// counter deltas) for one (algo, graph, mode, schedule) cell. The driver is
+/// single-threaded, so the pool's global counters moved only for this cell.
+fn time_cell(algo: Algo, g: &Graph, threads: usize, frontier: bool) -> anyhow::Result<Cell> {
     let tf = load_program(algo)?;
     let args = bench_args(algo);
     let opts = ExecOpts { threads, frontier, ..ExecOpts::default() };
     // warmup (also surfaces errors once)
     let fallbacks = interp::run_with_opts(&tf, g, &args, opts.clone())?.stats.fallbacks;
     let mut best = f64::INFINITY;
+    let before = starplat::util::pool::stats();
     for _ in 0..3 {
         let t0 = std::time::Instant::now();
         interp::run_with_opts(&tf, g, &args, opts.clone())?;
         best = best.min(t0.elapsed().as_secs_f64());
     }
-    Ok((best, fallbacks))
+    let after = starplat::util::pool::stats();
+    Ok(Cell {
+        secs: best,
+        fallbacks,
+        dispatch_ns: (after.dispatch_ns - before.dispatch_ns) as f64 / 3.0,
+        steals: (after.steals - before.steals) as f64 / 3.0,
+    })
 }
 
 fn main() -> anyhow::Result<()> {
@@ -82,7 +108,8 @@ fn main() -> anyhow::Result<()> {
             let eligible = interp::frontier_env_enabled()
                 && has_frontier_path(&compile::compile(&load_program(algo)?)?.body);
             for (threads, label) in [(1usize, "seq"), (par_threads, "par")] {
-                let (secs, fallbacks) = time_cell(algo, g, threads, true)?;
+                let cell = time_cell(algo, g, threads, true)?;
+                let secs = cell.secs;
                 let nps = g.num_nodes() as f64 / secs;
                 let mut fields = vec![
                     ("algorithm", Json::Str(format!("{algo:?}").to_lowercase())),
@@ -93,23 +120,29 @@ fn main() -> anyhow::Result<()> {
                     ("secs", Json::Num(secs)),
                     ("nodes_per_sec", Json::Num(nps)),
                     ("path", Json::Str(if eligible { "frontier" } else { "dense" }.to_string())),
-                    ("fallbacks", Json::Num(fallbacks as f64)),
+                    ("fallbacks", Json::Num(cell.fallbacks as f64)),
+                    // persistent-runtime columns (frontier-engine-v3): wake
+                    // latency and steal traffic attributed to this cell
+                    ("dispatch_ns", Json::Num(cell.dispatch_ns)),
+                    ("steals", Json::Num(cell.steals)),
                 ];
                 if eligible {
                     // same cell with the sparse schedule forced off: the
                     // frontier-vs-dense column
-                    let (dense_secs, _) = time_cell(algo, g, threads, false)?;
-                    fields.push(("secs_dense", Json::Num(dense_secs)));
+                    let dense = time_cell(algo, g, threads, false)?;
+                    fields.push(("secs_dense", Json::Num(dense.secs)));
                     println!(
-                        "{:>4?} on {:<5} [{label}]  frontier {secs:>9.4}s  dense {dense_secs:>9.4}s  ({:.2}x)  {nps:>12.0} nodes/s",
+                        "{:>4?} on {:<5} [{label}]  frontier {secs:>9.4}s  dense {:>9.4}s  ({:.2}x)  {nps:>12.0} nodes/s  steals {:.0}",
                         algo,
                         g.name,
-                        dense_secs / secs
+                        dense.secs,
+                        dense.secs / secs,
+                        cell.steals
                     );
                 } else {
                     println!(
-                        "{:>4?} on {:<5} [{label}]  {secs:>9.4}s  {nps:>12.0} nodes/s",
-                        algo, g.name
+                        "{:>4?} on {:<5} [{label}]  {secs:>9.4}s  {nps:>12.0} nodes/s  steals {:.0}",
+                        algo, g.name, cell.steals
                     );
                 }
                 cells.push(Json::obj(fields));
@@ -118,7 +151,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     let report = Json::obj(vec![
-        ("engine", Json::Str("frontier-engine-v2".into())),
+        ("engine", Json::Str("frontier-engine-v3".into())),
         ("threads_par", Json::Num(par_threads as f64)),
         ("bench_n", Json::Num(n as f64)),
         ("cells", Json::Arr(cells)),

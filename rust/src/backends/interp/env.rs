@@ -368,6 +368,13 @@ pub struct Env<'g> {
     /// sparse→dense schedule fallbacks taken during this run (reported as
     /// [`super::ExecStats::fallbacks`])
     pub fallbacks: AtomicU64,
+    /// recycled per-worker register frames: a sweep takes one frame per
+    /// participant and returns it afterwards, so a fixedPoint running
+    /// hundreds of rounds allocates frames only on its first sweep
+    pub frame_arena: crate::util::pool::Arena<Vec<Val>>,
+    /// recycled claim/worklist buffers for the parallel frontier gathers
+    /// and BFS level discovery (same per-level reuse story)
+    pub buf_arena: crate::util::pool::Arena<Vec<Node>>,
     props: Vec<PropData>,
     prop_names: Vec<String>,
     scalars: Vec<ScalarCell>,
@@ -403,6 +410,8 @@ impl<'g> Env<'g> {
             cancel: None,
             fault: None,
             fallbacks: AtomicU64::new(0),
+            frame_arena: crate::util::pool::Arena::new(),
+            buf_arena: crate::util::pool::Arena::new(),
             props,
             prop_names,
             scalars,

@@ -42,11 +42,13 @@
 //!   stay dense.
 //! - **Parallel claim-buffer gather**: after each sweep, workers scan the
 //!   frontier's neighborhoods with per-worker claim buffers
-//!   ([`crate::util::pool::parallel_collect`]); an atomic swap on the
-//!   ping-pong bit ([`env::PropData::claim_true`]) makes each claim
-//!   exclusive, and the buffers concatenate via prefix offsets into the next
-//!   worklist. Small frontiers (< [`FRONTIER_PAR_MIN`]) keep the sequential
-//!   scan — thread fan-out only pays for itself past that size.
+//!   ([`crate::util::pool::try_parallel_collect_in`], recycled through the
+//!   run's arena); an atomic swap on the ping-pong bit
+//!   ([`env::PropData::claim_true`]) makes each claim exclusive, and the
+//!   buffers concatenate via prefix offsets into the next worklist. Small
+//!   frontiers (< [`frontier_par_min`], default 1024 now that dispatch is a
+//!   condvar wake on the persistent pool rather than a thread spawn) keep
+//!   the sequential scan — even a wake only pays for itself past that size.
 //! - **Density fallback**: when the frontier exceeds |V| / 4 the executor
 //!   uses a dense filtered sweep, so mesh-like graphs (road networks) get
 //!   the asymptotic win while dense frontiers keep the streaming sweep.
@@ -101,8 +103,23 @@ pub enum Mode {
 }
 
 /// Below this many frontier vertices the post-sweep gather stays sequential:
-/// spawning the pool costs more than scanning a few thousand adjacency rows.
-pub const FRONTIER_PAR_MIN: usize = 4096;
+/// even a condvar wake costs more than scanning a few hundred adjacency rows.
+/// The persistent pool dropped dispatch from a thread spawn (~tens of µs ×
+/// workers) to a wake (single-digit µs), so the default is 1024 — a quarter
+/// of the old spawn-era 4096. `STARPLAT_FRONTIER_PAR_MIN` overrides it (the
+/// bench harness sweeps the knob when re-tuning).
+pub const FRONTIER_PAR_MIN_DEFAULT: usize = 1024;
+
+/// The effective small-frontier threshold (cached after first read).
+pub fn frontier_par_min() -> usize {
+    static MIN: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    *MIN.get_or_init(|| {
+        std::env::var("STARPLAT_FRONTIER_PAR_MIN")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .unwrap_or(FRONTIER_PAR_MIN_DEFAULT)
+    })
+}
 
 /// Typed failure classes of one interpreter request. Surfaced inside the
 /// [`anyhow::Error`] the run returns — callers (the execution service)
@@ -546,18 +563,19 @@ impl<'g> Exec<'g> {
                     }
                 }
             };
-            let next: Vec<Node> = if env.threads == 1 || frontier.len() < FRONTIER_PAR_MIN {
+            let next: Vec<Node> = if env.threads == 1 || frontier.len() < frontier_par_min() {
                 let mut out = Vec::new();
                 for i in 0..frontier.len() {
                     discover(i, &mut out);
                 }
                 out
             } else {
-                crate::util::pool::try_parallel_collect(
+                crate::util::pool::try_parallel_collect_in(
                     frontier.len(),
                     env.threads,
                     64,
                     env.cancel.as_ref(),
+                    &env.buf_arena,
                     discover,
                 )
                 .map_err(pool_err)?
@@ -638,11 +656,12 @@ impl<'g> Exec<'g> {
     /// and fall back to dense filtered sweeps while the frontier is > |V|/4.
     ///
     /// The post-sweep gather runs on the pool once the frontier is large
-    /// enough ([`FRONTIER_PAR_MIN`]): workers claim newly-flagged vertices
+    /// enough ([`frontier_par_min`]): workers claim newly-flagged vertices
     /// into per-worker buffers via an exclusive atomic swap
     /// ([`PropData::claim_true`]) and the buffers concatenate by prefix
-    /// offsets ([`crate::util::pool::parallel_collect`]) — this was a
-    /// sequential scan that bottlenecked past ~10M vertices.
+    /// offsets ([`crate::util::pool::try_parallel_collect_in`], buffers
+    /// recycled through the run's arena) — this was a sequential scan that
+    /// bottlenecked past ~10M vertices.
     fn frontier_loop(
         &self,
         var: u32,
@@ -725,7 +744,7 @@ impl<'g> Exec<'g> {
             // old frontier's flags, then claim the newly-flagged vertices.
             // The clear must fully precede the claims (a vertex may be in
             // both sets), so these are two pool passes, not one.
-            let parallel = env.threads > 1 && frontier.len() >= FRONTIER_PAR_MIN;
+            let parallel = env.threads > 1 && frontier.len() >= frontier_par_min();
             if parallel {
                 let fr = &frontier;
                 crate::util::pool::parallel_for(fr.len(), env.threads, |i| {
@@ -741,12 +760,14 @@ impl<'g> Exec<'g> {
             // swap clears them as it sets flags), so continuing densely from
             // that state would drop the claimed vertices.
             if dense {
-                if env.threads > 1 && n >= FRONTIER_PAR_MIN {
-                    next = crate::util::pool::try_parallel_collect(
+                if env.threads > 1 && n >= frontier_par_min() {
+                    env.buf_arena.put(std::mem::take(&mut next));
+                    next = crate::util::pool::try_parallel_collect_in(
                         n,
                         env.threads,
                         1024,
                         env.cancel.as_ref(),
+                        &env.buf_arena,
                         |i, out| claim(i as Node, out),
                     )
                     .map_err(pool_err)?;
@@ -758,11 +779,13 @@ impl<'g> Exec<'g> {
                 }
             } else if parallel {
                 let fr = &frontier;
-                next = crate::util::pool::try_parallel_collect(
+                env.buf_arena.put(std::mem::take(&mut next));
+                next = crate::util::pool::try_parallel_collect_in(
                     fr.len(),
                     env.threads,
                     64,
                     env.cancel.as_ref(),
+                    &env.buf_arena,
                     |i, out| claim_around(fr[i], out),
                 )
                 .map_err(pool_err)?;
@@ -807,8 +830,11 @@ impl Domain<'_> {
 }
 
 /// Run a kernel body over `domain`, one element per worker-claimed index.
-/// Each worker allocates one register frame up front and reuses it for every
-/// element it processes.
+/// Each worker takes one register frame from the run's arena up front
+/// (zeroed, resized to this kernel's frame size) and reuses it for every
+/// element it processes; the frames return to the arena afterwards, so
+/// repeated sweeps — a fixedPoint running hundreds of rounds — allocate
+/// nothing on the per-vertex path.
 fn sweep(
     env: &Env<'_>,
     domain: Domain<'_>,
@@ -826,7 +852,14 @@ fn sweep(
         env.threads,
         64,
         env.cancel.as_ref(),
-        || vec![Val::I(0); frame_len],
+        || {
+            // recycled frames carry a previous sweep's values: clear before
+            // resize so every slot starts zeroed, exactly like a fresh alloc
+            let mut frame = env.frame_arena.take().unwrap_or_default();
+            frame.clear();
+            frame.resize(frame_len, Val::I(0));
+            frame
+        },
         |frame, i| {
             // once any element errors, skip the rest of the sweep
             if failed.load(std::sync::atomic::Ordering::Relaxed) {
@@ -863,8 +896,13 @@ fn sweep(
             }
         },
     );
-    if let Err(i) = outcome {
-        return Err(pool_err(i));
+    match outcome {
+        Ok(frames) => {
+            for f in frames {
+                env.frame_arena.put(f);
+            }
+        }
+        Err(i) => return Err(pool_err(i)),
     }
     match err.into_inner().unwrap() {
         Some(e) => Err(e),

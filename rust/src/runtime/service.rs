@@ -21,9 +21,11 @@
 //!   applied; cooperative polls inside the interpreter surface
 //!   [`ExecError::Cancelled`] / [`ExecError::DeadlineExceeded`];
 //! - **result cache**: completed outputs are memoised by
-//!   (graph id, program hash, argument fingerprint) with FIFO eviction;
-//!   capacity 0 disables caching (the stress suite does this so every
-//!   request actually executes).
+//!   (graph id, graph version, program hash, argument fingerprint) with
+//!   FIFO eviction; the version is bumped on re-registration so a replaced
+//!   CSR never serves the old graph's cached results; capacity 0 disables
+//!   caching (the stress suite does this so every request actually
+//!   executes).
 
 use crate::backends::interp::env::Val;
 use crate::backends::interp::{self, Args, ExecError, ExecOpts, Output};
@@ -175,7 +177,11 @@ struct ProgramEntry {
     hash: u64,
 }
 
-type CacheKey = (String, u64, u64);
+/// (graph id, graph version, program hash, argument fingerprint). The
+/// version is bumped every time an id is re-registered, so entries computed
+/// against a replaced CSR can never be served for the new graph (they age
+/// out via FIFO eviction).
+type CacheKey = (String, u64, u64, u64);
 
 #[derive(Default)]
 struct CacheInner {
@@ -188,7 +194,8 @@ struct CacheInner {
 /// `&self`, so one instance serves many threads.
 pub struct Service {
     cfg: ServiceConfig,
-    graphs: RwLock<HashMap<String, Arc<Graph>>>,
+    /// graph per id plus its registration version (monotonic per id)
+    graphs: RwLock<HashMap<String, (Arc<Graph>, u64)>>,
     programs: RwLock<HashMap<String, ProgramEntry>>,
     cache: Mutex<CacheInner>,
     in_flight: AtomicUsize,
@@ -238,13 +245,17 @@ impl Service {
 
     /// Register a graph under `id` after CSR integrity validation.
     /// Re-registering an id replaces the graph (in-flight requests keep
-    /// their `Arc` to the old one).
+    /// their `Arc` to the old one) and bumps the id's version, so cached
+    /// results computed against the old CSR are never served for the new
+    /// one.
     pub fn register_graph(&self, id: &str, g: Graph) -> Result<(), ServiceError> {
         g.validate().map_err(|v| ServiceError::InvalidGraph {
             id: id.to_string(),
             reason: v.to_string(),
         })?;
-        write_lock(&self.graphs).insert(id.to_string(), Arc::new(g));
+        let mut graphs = write_lock(&self.graphs);
+        let version = graphs.get(id).map_or(0, |(_, v)| v + 1);
+        graphs.insert(id.to_string(), (Arc::new(g), version));
         Ok(())
     }
 
@@ -290,7 +301,7 @@ impl Service {
         }
 
         // ---- resolve registered state (Arc clones; no locks held later) ----
-        let graph = read_lock(&self.graphs)
+        let (graph, graph_version) = read_lock(&self.graphs)
             .get(&req.graph)
             .cloned()
             .ok_or_else(|| ServiceError::UnknownGraph(req.graph.clone()))?;
@@ -300,7 +311,8 @@ impl Service {
             .ok_or_else(|| ServiceError::UnknownProgram(req.program.clone()))?;
 
         // ---- result cache ----
-        let key: CacheKey = (req.graph.clone(), entry.hash, fingerprint(&req.args));
+        let key: CacheKey =
+            (req.graph.clone(), graph_version, entry.hash, fingerprint(&req.args));
         if self.cfg.cache_capacity > 0 {
             if let Some(hit) = lock_mutex(&self.cache).map.get(&key).cloned() {
                 self.stats.cache_hits.fetch_add(1, Ordering::Relaxed);

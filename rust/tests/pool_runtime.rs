@@ -1,0 +1,173 @@
+//! Behavioral pins for the persistent work-stealing runtime
+//! (`starplat::util::pool`): stealing under skewed chunk costs, idempotent
+//! shutdown + lazy re-initialization, cancellation and deadlines tripping
+//! mid-run, panic isolation, and the dispatch accounting the bench harness
+//! consumes.
+//!
+//! These tests observe process-global pool state (worker counts, monotonic
+//! stats counters), so they serialize on one mutex — the rest of the test
+//! binary would otherwise race the counters and the shutdown/re-init cycle.
+
+use starplat::util::cancel::CancelToken;
+use starplat::util::pool::{self, PoolInterrupt};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+/// Serialize every test in this binary (pool stats and worker lifecycle are
+/// process-global). Poison-tolerant: a failing test must not cascade.
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: OnceLock<Mutex<()>> = OnceLock::new();
+    GATE.get_or_init(|| Mutex::new(())).lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[test]
+fn stealing_rebalances_skewed_chunk_costs() {
+    let _g = gate();
+    let before = pool::stats().steals;
+    // the first partition is pathologically expensive: whoever owns it gets
+    // stuck, and everyone else must finish by stealing from its range (or
+    // from the ranges of participants that never woke). 2048 items over 8
+    // participants in chunks of 16.
+    let hits: Vec<AtomicU64> = (0..2048).map(|_| AtomicU64::new(0)).collect();
+    pool::parallel_for_dynamic(2048, 8, 16, |i| {
+        if i < 48 {
+            // ~10ms of skew concentrated at the head of participant 0's range
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        hits[i].fetch_add(1, Ordering::Relaxed);
+    });
+    // exactly-once under stealing: the deque CAS transitions hand each index
+    // to one participant regardless of who ends up running it
+    assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    let after = pool::stats().steals;
+    assert!(
+        after > before,
+        "skewed costs must trigger work stealing (steals {before} -> {after})"
+    );
+}
+
+#[test]
+fn shutdown_is_idempotent_and_pool_reinitializes() {
+    let _g = gate();
+    // warm the pool
+    let c = AtomicU64::new(0);
+    pool::parallel_for_dynamic(4096, 4, 64, |_| {
+        c.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(c.load(Ordering::Relaxed), 4096);
+    assert!(pool::stats().workers >= 1, "parallel region must have spawned workers");
+
+    pool::shutdown();
+    assert_eq!(pool::stats().workers, 0, "shutdown must join every worker");
+    pool::shutdown(); // second call is a no-op, not a hang or panic
+    assert_eq!(pool::stats().workers, 0);
+
+    // the pool lazily re-initializes on the next parallel region
+    let c = AtomicU64::new(0);
+    pool::parallel_for_dynamic(4096, 4, 64, |_| {
+        c.fetch_add(1, Ordering::Relaxed);
+    });
+    assert_eq!(c.load(Ordering::Relaxed), 4096);
+    assert!(pool::stats().workers >= 1, "pool must re-initialize after shutdown");
+}
+
+#[test]
+fn cancel_mid_run_stops_stealing_participants() {
+    let _g = gate();
+    // enough slow work that the region is mid-flight (and mid-steal: tiny
+    // chunks force constant deque traffic) when the cancel lands
+    let token = CancelToken::new();
+    let done = AtomicU64::new(0);
+    let canceller = {
+        let token = token.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(5));
+            token.cancel();
+        })
+    };
+    let r = pool::try_parallel_for_dynamic_scoped(
+        100_000,
+        8,
+        4,
+        Some(&token),
+        || (),
+        |_, _| {
+            std::thread::sleep(Duration::from_micros(20));
+            done.fetch_add(1, Ordering::Relaxed);
+        },
+    );
+    canceller.join().unwrap();
+    assert_eq!(r, Err(PoolInterrupt::Cancelled));
+    let done = done.load(Ordering::Relaxed);
+    assert!(done < 100_000, "cancel must interrupt the run, not drain it ({done} done)");
+}
+
+#[test]
+fn deadline_mid_run_stops_stealing_participants() {
+    let _g = gate();
+    let token = CancelToken::with_deadline(Duration::from_millis(5));
+    let done = AtomicU64::new(0);
+    let r = pool::try_parallel_for_dynamic_scoped(
+        100_000,
+        8,
+        4,
+        Some(&token),
+        || (),
+        |_, _| {
+            std::thread::sleep(Duration::from_micros(20));
+            done.fetch_add(1, Ordering::Relaxed);
+        },
+    );
+    assert_eq!(r, Err(PoolInterrupt::DeadlineExceeded));
+    assert!(done.load(Ordering::Relaxed) < 100_000);
+}
+
+#[test]
+fn panic_isolation_matches_the_scoped_pool_contract() {
+    let _g = gate();
+    let workers_before = {
+        // warm the pool so the count is meaningful
+        pool::parallel_for_dynamic(1024, 4, 16, |_| {});
+        pool::stats().workers
+    };
+    // a panicking chunk surfaces as a typed interrupt with its message…
+    let r = pool::try_parallel_for_dynamic_scoped(1024, 4, 16, None, || (), |_, i| {
+        if i == 513 {
+            panic!("skewed boom at {i}");
+        }
+    });
+    match r {
+        Err(PoolInterrupt::Panicked(msg)) => {
+            assert!(msg.contains("skewed boom at 513"), "message lost: {msg}");
+        }
+        other => panic!("expected Panicked, got {other:?}"),
+    }
+    // …and the persistent workers survive it: same pool, next region is
+    // exact (the old scoped pool got this for free by respawning; the
+    // persistent pool must actively confine the unwind)
+    assert_eq!(pool::stats().workers, workers_before, "a worker died on a caught panic");
+    let hits: Vec<AtomicU64> = (0..1024).map(|_| AtomicU64::new(0)).collect();
+    pool::parallel_for_dynamic(1024, 4, 16, |i| {
+        hits[i].fetch_add(1, Ordering::Relaxed);
+    });
+    assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+}
+
+#[test]
+fn dispatch_accounting_separates_inline_from_pooled_regions() {
+    let _g = gate();
+    let s0 = pool::stats();
+    // n <= block: runs inline on the caller, no job published
+    pool::parallel_for_dynamic(32, 8, 64, |_| {});
+    let s1 = pool::stats();
+    assert_eq!(s1.dispatches, s0.dispatches, "tiny region must not dispatch");
+    // threads == 1: sequential path, no job published
+    pool::parallel_for_dynamic(4096, 1, 64, |_| {});
+    let s2 = pool::stats();
+    assert_eq!(s2.dispatches, s1.dispatches, "single-thread region must not dispatch");
+    // a real parallel region publishes exactly one job
+    pool::parallel_for_dynamic(4096, 4, 64, |_| {});
+    let s3 = pool::stats();
+    assert_eq!(s3.dispatches, s2.dispatches + 1, "parallel region must count one dispatch");
+}

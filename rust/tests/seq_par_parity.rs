@@ -28,12 +28,19 @@ fn test_graphs() -> Vec<Graph> {
     gs
 }
 
-/// Run one algorithm across all worker counts and hand results to `check`.
-fn sweep_threads(algo: Algo, g: &Graph, args: &Args, check: impl Fn(&interp::Output, usize)) {
+/// Run one algorithm across all worker counts × both schedules (sparse
+/// frontier on/off) and hand results to `check` with a context label. The
+/// full grid pins that the persistent work-stealing runtime is
+/// schedule-independent: claims, steals, and gather order must never show
+/// up in results.
+fn sweep_threads(algo: Algo, g: &Graph, args: &Args, check: impl Fn(&interp::Output, &str)) {
     let tf = load_program(algo).unwrap();
     for t in THREADS {
-        let out = interp::run_with_threads(&tf, g, args, t).unwrap();
-        check(&out, t);
+        for frontier in [true, false] {
+            let opts = ExecOpts { threads: t, frontier, ..Default::default() };
+            let out = interp::run_with_opts(&tf, g, args, opts).unwrap();
+            check(&out, &format!("{t} threads (frontier={frontier})"));
+        }
     }
 }
 
@@ -43,8 +50,8 @@ fn bfs_parity() {
         let tf = load_program(Algo::Bfs).unwrap();
         let args = Args::default().node("src", 0);
         let want = interp::run_with_threads(&tf, &g, &args, 1).unwrap().prop_i64("level");
-        sweep_threads(Algo::Bfs, &g, &args, |out, t| {
-            assert_eq!(out.prop_i64("level"), want, "{} with {t} threads", g.name);
+        sweep_threads(Algo::Bfs, &g, &args, |out, ctx| {
+            assert_eq!(out.prop_i64("level"), want, "{} with {ctx}", g.name);
         });
     }
 }
@@ -57,8 +64,8 @@ fn sssp_parity() {
         let tf = load_program(Algo::Sssp).unwrap();
         let args = Args::default().node("src", src);
         let want = interp::run_with_threads(&tf, &g, &args, 1).unwrap().prop_i64("dist");
-        sweep_threads(Algo::Sssp, &g, &args, |out, t| {
-            assert_eq!(out.prop_i64("dist"), want, "{} src {src} with {t} threads", g.name);
+        sweep_threads(Algo::Sssp, &g, &args, |out, ctx| {
+            assert_eq!(out.prop_i64("dist"), want, "{} src {src} with {ctx}", g.name);
         });
     }
 }
@@ -69,8 +76,8 @@ fn cc_parity() {
         let tf = load_program(Algo::Cc).unwrap();
         let args = Args::default();
         let want = interp::run_with_threads(&tf, &g, &args, 1).unwrap().prop_i64("comp");
-        sweep_threads(Algo::Cc, &g, &args, |out, t| {
-            assert_eq!(out.prop_i64("comp"), want, "{} with {t} threads", g.name);
+        sweep_threads(Algo::Cc, &g, &args, |out, ctx| {
+            assert_eq!(out.prop_i64("comp"), want, "{} with {ctx}", g.name);
         });
     }
 }
@@ -84,15 +91,11 @@ fn pr_parity_within_tolerance() {
             .scalar("maxIter", Val::I(50));
         let tf = load_program(Algo::Pr).unwrap();
         let want = interp::run_with_threads(&tf, &g, &args, 1).unwrap().prop_f64("pageRank");
-        sweep_threads(Algo::Pr, &g, &args, |out, t| {
+        sweep_threads(Algo::Pr, &g, &args, |out, ctx| {
             let got = out.prop_f64("pageRank");
             assert_eq!(got.len(), want.len());
             for (i, (a, b)) in got.iter().zip(&want).enumerate() {
-                assert!(
-                    (a - b).abs() < 1e-7,
-                    "{} v{i} with {t} threads: {a} vs {b}",
-                    g.name
-                );
+                assert!((a - b).abs() < 1e-7, "{} v{i} with {ctx}: {a} vs {b}", g.name);
             }
         });
     }

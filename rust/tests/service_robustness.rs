@@ -198,6 +198,39 @@ fn identical_requests_share_a_cached_output() {
 }
 
 #[test]
+fn re_registering_a_graph_invalidates_cached_results() {
+    let svc = service(ServiceConfig { cache_capacity: 8, ..Default::default() });
+    let first = svc.execute(&sssp_req()).unwrap();
+    assert_eq!(svc.stats().cache_hits, 0);
+
+    // replace "g" with a *different* graph under the same id; the oracle is
+    // a direct interpreter run on an identically-generated copy
+    let replacement = || rmat("g", 200, 900, 11);
+    let oracle = {
+        let fns = parse(SSSP).unwrap();
+        let tf = check_function(&fns[0]).unwrap();
+        let opts = ExecOpts { threads: 1, fault: Some(FaultPlan::off()), ..Default::default() };
+        let args = Args::default().node("src", 1);
+        interp::run_with_opts(&tf, &replacement(), &args, opts).unwrap().prop_i64("dist")
+    };
+    svc.register_graph("g", replacement()).unwrap();
+
+    // the version bump keys this request away from the stale entry
+    let second = svc.execute(&sssp_req()).unwrap();
+    assert!(
+        !Arc::ptr_eq(&first, &second),
+        "re-registered graph must not be served the old graph's cached result"
+    );
+    assert_eq!(svc.stats().cache_hits, 0);
+    assert_eq!(second.prop_i64("dist"), oracle, "result computed against the old CSR");
+
+    // and the new version has its own working cache line
+    let third = svc.execute(&sssp_req()).unwrap();
+    assert!(Arc::ptr_eq(&second, &third), "new-version result must itself be cacheable");
+    assert_eq!(svc.stats().cache_hits, 1);
+}
+
+#[test]
 fn claim_gather_fault_falls_back_to_dense_and_stays_correct() {
     let svc = service(ServiceConfig { cache_capacity: 0, ..Default::default() });
     let mut req = sssp_req();

@@ -17,6 +17,15 @@ nonzero count annotates the current-seconds column as ` (fb=N)` — and
 never participates in the regression decision; reports without the column
 compare exactly as before.
 
+Cells from the persistent-runtime engine (frontier-engine-v3, PR 7) carry
+two more optional columns, `dispatch_ns` and `steals`. Like `fallbacks`
+they never gate: unknown columns are simply ignored by the comparison,
+which keys on (algorithm, graph, mode) and reads only `secs`. The report
+additionally summarizes the **frontier-path speedup** vs the previous run
+(geometric mean of prev/cur over cells whose `path` is "frontier") — the
+headline number for the persistent pool's cheap-dispatch claim — again
+informational only.
+
 The step is **blocking**: with the spread column landed (PR 4) and worst-case
 runner variance observed comfortably under the threshold, a >threshold
 per-cell regression exits 1 and fails CI. Set `BENCH_TREND_ADVISORY=1` in the
@@ -106,6 +115,26 @@ def main(argv):
         if delta > threshold:
             regressions.append((key, delta))
     print()
+    # frontier-path speedup vs the previous run: geometric mean of
+    # prev/cur over cells running the sparse worklist schedule. Purely
+    # informational — never part of the regression decision.
+    ratios = []
+    for key in sorted(cur):
+        c, p = cur[key], prev.get(key)
+        if (c.get("path") == "frontier" and p and p.get("secs")
+                and c.get("secs")):
+            ratios.append(p["secs"] / c["secs"])
+    if ratios:
+        geo = 1.0
+        for r in ratios:
+            geo *= r
+        geo **= 1.0 / len(ratios)
+        print(
+            f"Frontier-path cells vs previous run: {geo:.2f}x "
+            f"geomean speedup over {len(ratios)} cell(s) "
+            "(>1 is faster; informational)."
+        )
+        print()
     if spreads:
         worst_key, worst = max(spreads, key=lambda kv: kv[1])
         median = sorted(s for _, s in spreads)[len(spreads) // 2]
