@@ -15,12 +15,22 @@
 //! run) — the two numbers that distinguish "dispatch got cheap" from
 //! "load-balancing fired" when a cell moves.
 //!
+//! The adaptive scheduler (frontier-engine-v4) adds the decision columns:
+//! `schedule` (the direction policy the cell ran under), `direction_switches`
+//! and `pull_rounds` (what the auto policy actually did), and `delta` (did
+//! any fixedPoint run the bucketed delta-stepping schedule). Frontier-eligible
+//! cells are additionally re-timed with the direction forced
+//! (`secs_push`/`secs_pull`) so auto's overhead vs the better static choice
+//! is visible per cell, and SSSP cells get a `secs_delta` column (forced
+//! `STARPLAT_DELTA=auto`).
+//!
 //! Run: cargo run --release --example bench_interp
 //! Env: STARPLAT_BENCH_N (graph size knob, default 20000),
 //!      STARPLAT_THREADS (Par worker count),
-//!      STARPLAT_FRONTIER=0 (force the dense schedule everywhere)
+//!      STARPLAT_FRONTIER=0 (force the dense schedule everywhere),
+//!      STARPLAT_DIRECTION / STARPLAT_DELTA (see README knob table)
 
-use starplat::backends::interp::{self, compile, env::Val, Args, ExecOpts};
+use starplat::backends::interp::{self, compile, env::Val, Args, DeltaMode, Direction, ExecOpts};
 use starplat::coordinator::driver::{load_program, Algo};
 use starplat::graph::csr::Graph;
 use starplat::util::json::Json;
@@ -53,8 +63,9 @@ fn has_frontier_path(stmts: &[compile::HostStmt]) -> bool {
     })
 }
 
-/// One timed cell: best-of-3 wall-clock seconds, dense-fallback count, and
-/// the persistent-runtime counters attributed to this cell.
+/// One timed cell: best-of-3 wall-clock seconds, dense-fallback count, the
+/// persistent-runtime counters, and the adaptive scheduler's decision
+/// counters attributed to this cell.
 struct Cell {
     secs: f64,
     fallbacks: u64,
@@ -63,17 +74,31 @@ struct Cell {
     dispatch_ns: f64,
     /// average successful deque steals per timed run
     steals: f64,
+    /// push↔pull switches over the warmup run's rounds/levels
+    direction_switches: u64,
+    /// rounds/levels the warmup run executed in the pull direction
+    pull_rounds: u64,
+    /// did any fixedPoint run the delta-stepping schedule?
+    delta_used: bool,
 }
 
-/// Best-of-3 wall-clock seconds (plus dense-fallback count and per-run pool
-/// counter deltas) for one (algo, graph, mode, schedule) cell. The driver is
-/// single-threaded, so the pool's global counters moved only for this cell.
-fn time_cell(algo: Algo, g: &Graph, threads: usize, frontier: bool) -> anyhow::Result<Cell> {
+/// Best-of-3 wall-clock seconds (plus dense-fallback count, per-run pool
+/// counter deltas, and schedule-decision counters) for one
+/// (algo, graph, mode, schedule) cell. The driver is single-threaded, so the
+/// pool's global counters moved only for this cell.
+fn time_cell(
+    algo: Algo,
+    g: &Graph,
+    threads: usize,
+    frontier: bool,
+    direction: Option<Direction>,
+    delta: Option<DeltaMode>,
+) -> anyhow::Result<Cell> {
     let tf = load_program(algo)?;
     let args = bench_args(algo);
-    let opts = ExecOpts { threads, frontier, ..ExecOpts::default() };
-    // warmup (also surfaces errors once)
-    let fallbacks = interp::run_with_opts(&tf, g, &args, opts.clone())?.stats.fallbacks;
+    let opts = ExecOpts { threads, frontier, direction, delta, ..ExecOpts::default() };
+    // warmup (also surfaces errors once and yields the decision counters)
+    let stats = interp::run_with_opts(&tf, g, &args, opts.clone())?.stats;
     let mut best = f64::INFINITY;
     let before = starplat::util::pool::stats();
     for _ in 0..3 {
@@ -84,9 +109,12 @@ fn time_cell(algo: Algo, g: &Graph, threads: usize, frontier: bool) -> anyhow::R
     let after = starplat::util::pool::stats();
     Ok(Cell {
         secs: best,
-        fallbacks,
+        fallbacks: stats.fallbacks,
         dispatch_ns: (after.dispatch_ns - before.dispatch_ns) as f64 / 3.0,
         steals: (after.steals - before.steals) as f64 / 3.0,
+        direction_switches: stats.direction_switches,
+        pull_rounds: stats.pull_rounds,
+        delta_used: stats.delta_used,
     })
 }
 
@@ -108,7 +136,7 @@ fn main() -> anyhow::Result<()> {
             let eligible = interp::frontier_env_enabled()
                 && has_frontier_path(&compile::compile(&load_program(algo)?)?.body);
             for (threads, label) in [(1usize, "seq"), (par_threads, "par")] {
-                let cell = time_cell(algo, g, threads, true)?;
+                let cell = time_cell(algo, g, threads, true, None, None)?;
                 let secs = cell.secs;
                 let nps = g.num_nodes() as f64 / secs;
                 let mut fields = vec![
@@ -125,19 +153,41 @@ fn main() -> anyhow::Result<()> {
                     // latency and steal traffic attributed to this cell
                     ("dispatch_ns", Json::Num(cell.dispatch_ns)),
                     ("steals", Json::Num(cell.steals)),
+                    // schedule-decision columns (frontier-engine-v4): what
+                    // the adaptive policy was and what it actually chose
+                    ("schedule", Json::Str("auto".to_string())),
+                    ("direction_switches", Json::Num(cell.direction_switches as f64)),
+                    ("pull_rounds", Json::Num(cell.pull_rounds as f64)),
+                    ("delta", Json::Bool(cell.delta_used)),
                 ];
                 if eligible {
                     // same cell with the sparse schedule forced off: the
                     // frontier-vs-dense column
-                    let dense = time_cell(algo, g, threads, false)?;
+                    let dense = time_cell(algo, g, threads, false, None, None)?;
                     fields.push(("secs_dense", Json::Num(dense.secs)));
+                    // same cell with the direction forced each way: auto's
+                    // overhead vs the better static schedule, per cell
+                    let push =
+                        time_cell(algo, g, threads, true, Some(Direction::Push), None)?;
+                    let pull =
+                        time_cell(algo, g, threads, true, Some(Direction::Pull), None)?;
+                    fields.push(("secs_push", Json::Num(push.secs)));
+                    fields.push(("secs_pull", Json::Num(pull.secs)));
+                    if algo == Algo::Sssp {
+                        // the bucketed relaxation schedule, forced on
+                        let delta =
+                            time_cell(algo, g, threads, true, None, Some(DeltaMode::Auto))?;
+                        fields.push(("secs_delta", Json::Num(delta.secs)));
+                    }
                     println!(
-                        "{:>4?} on {:<5} [{label}]  frontier {secs:>9.4}s  dense {:>9.4}s  ({:.2}x)  {nps:>12.0} nodes/s  steals {:.0}",
+                        "{:>4?} on {:<5} [{label}]  frontier {secs:>9.4}s  dense {:>9.4}s  ({:.2}x)  push {:>9.4}s  pull {:>9.4}s  sw {}  {nps:>12.0} nodes/s",
                         algo,
                         g.name,
                         dense.secs,
                         dense.secs / secs,
-                        cell.steals
+                        push.secs,
+                        pull.secs,
+                        cell.direction_switches,
                     );
                 } else {
                     println!(
@@ -151,7 +201,7 @@ fn main() -> anyhow::Result<()> {
     }
 
     let report = Json::obj(vec![
-        ("engine", Json::Str("frontier-engine-v3".into())),
+        ("engine", Json::Str("frontier-engine-v4".into())),
         ("threads_par", Json::Num(par_threads as f64)),
         ("bench_n", Json::Num(n as f64)),
         ("cells", Json::Arr(cells)),

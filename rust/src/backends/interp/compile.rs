@@ -149,6 +149,25 @@ pub struct FrontierInfo {
     /// some `nxt` write lands on an in-neighbor (reverse-CSR pull): the
     /// gather scans `rev_offsets/srcList`
     pub gather_in: bool,
+    /// the kernel body is *exactly* the canonical edge relaxation — the
+    /// stronger shape that admits pull rounds and delta-stepping (the
+    /// executor runs the relaxation natively instead of the compiled body)
+    pub relax: Option<RelaxInfo>,
+}
+
+/// The canonical relaxation shape: for every frontier vertex `v` and each
+/// out-neighbor `w`, `dist[w] = Min(dist[w], dist[v] (+ weight[e]))`, with
+/// the ping-pong mark as the only side effect. SSSP and min-label CC both
+/// compile to it. Because the whole per-edge effect is this one idempotent
+/// Min, the executor may legally re-order, re-direct (pull over
+/// `rev_offsets/srcList`), or re-bucket (delta-stepping) the edge visits.
+#[derive(Clone, Copy, Debug)]
+pub struct RelaxInfo {
+    /// the integer distance/label property being minimized
+    pub dist: u32,
+    /// edge-weight property added to `dist[v]` (`None` = weight-free, e.g.
+    /// min-label CC; delta-stepping requires `Some`)
+    pub weight: Option<u32>,
 }
 
 /// Host-level statement.
@@ -845,7 +864,73 @@ impl Compiler {
         if !writes_only_near(&k.body, nxt, k.reg, &mut allowed, &mut dirs) {
             return None;
         }
-        Some(FrontierInfo { flag, nxt, gather_out: dirs.out, gather_in: dirs.in_ })
+        let relax = if dirs.in_ { None } else { self.detect_relax(k, nxt) };
+        Some(FrontierInfo { flag, nxt, gather_out: dirs.out, gather_in: dirs.in_, relax })
+    }
+
+    /// Recognize the canonical push-relaxation kernel body (see
+    /// [`RelaxInfo`]): one out-neighbor loop whose entire effect is a single
+    /// Min into an integer distance property plus the ping-pong mark.
+    fn detect_relax(&self, k: &CKernel, nxt: u32) -> Option<RelaxInfo> {
+        let [DevStmt::For { reg: w, source, filter: None, body: inner }] = k.body.as_slice()
+        else {
+            return None;
+        };
+        let DevIter::Neighbors { of: Idx::Reg(of), dag: false } = source else { return None };
+        if *of != k.reg {
+            return None;
+        }
+        // optional `edge e = g.get_edge(v, nbr);` binding the current edge
+        let (edge_reg, relax) = match inner.as_slice() {
+            [DevStmt::SetReg { reg, coerce: _, value: CExpr::CurrentEdge }, m] => (Some(*reg), m),
+            [m] => (None, m),
+            _ => return None,
+        };
+        let DevStmt::MinMax { kind: MinMax::Min, prop: dist, idx: Idx::Reg(t), compare, extra } =
+            relax
+        else {
+            return None;
+        };
+        if *t != *w {
+            return None;
+        }
+        // the only extra update is the ping-pong mark on the relaxed vertex
+        let [CUpdate::Prop { prop: mark, idx: Idx::Reg(mi), value: CExpr::ConstB(true) }] =
+            extra.as_slice()
+        else {
+            return None;
+        };
+        if *mark != nxt || *mi != *w {
+            return None;
+        }
+        let dist_at_root = |e: &CExpr| {
+            matches!(e, CExpr::LoadProp { prop, idx: Idx::Reg(r) } if *prop == *dist && *r == k.reg)
+        };
+        let weight = match compare {
+            // weight-free: dist[w] = Min(dist[w], dist[v])
+            e if dist_at_root(e) => None,
+            // weighted: dist[w] = Min(dist[w], dist[v] + weight[e])
+            CExpr::Binary { op: BinOp::Add, lhs, rhs } if dist_at_root(lhs) => match &**rhs {
+                CExpr::LoadProp { prop: wp, idx: Idx::Reg(r) }
+                    if Some(*r) == edge_reg && self.props.meta(*wp).edge =>
+                {
+                    Some(*wp)
+                }
+                _ => return None,
+            },
+            _ => return None,
+        };
+        // bucketing and the pull round assume integer arithmetic
+        let int = |ty: ScalarTy| matches!(ty, ScalarTy::I32 | ScalarTy::I64);
+        if !int(self.props.meta(*dist).ty) || self.props.meta(*dist).edge {
+            return None;
+        }
+        if let Some(wp) = weight {
+            if !int(self.props.meta(wp).ty) {
+                return None;
+            }
+        }
+        Some(RelaxInfo { dist: *dist, weight })
     }
 }
 
@@ -1005,6 +1090,11 @@ mod tests {
         assert_eq!(prog.props[f.nxt as usize].name, "modified_nxt");
         // push kernel: nxt writes land on out-neighbors only
         assert!(f.gather_out && !f.gather_in);
+        // ...and the body is the canonical weighted relaxation, so pull
+        // rounds and delta-stepping are admissible
+        let r = f.relax.expect("sssp relax shape");
+        assert_eq!(prog.props[r.dist as usize].name, "dist");
+        assert_eq!(prog.props[r.weight.unwrap() as usize].name, "weight");
     }
 
     #[test]
@@ -1018,7 +1108,10 @@ mod tests {
                 _ => None,
             })
             .expect("cc has a fixedPoint");
-        assert!(fp.is_some(), "cc fixedPoint should be frontier-eligible");
+        let f = fp.expect("cc fixedPoint should be frontier-eligible");
+        // weight-free relaxation: pull-eligible but not delta-eligible
+        let r = f.relax.expect("cc relax shape");
+        assert!(r.weight.is_none());
     }
 
     #[test]
@@ -1127,6 +1220,9 @@ mod tests {
         // pull kernel: the gather must walk rev_offsets/srcList, not the CSR
         assert!(f.gather_in, "in-neighbor writes require the reverse-CSR gather");
         assert!(!f.gather_out, "no out-neighbor write, no forward scan");
+        // direction selection only re-orients the canonical *push* shape;
+        // an already-pull kernel keeps its compiled body
+        assert!(f.relax.is_none(), "in-neighbor relaxations are not redirectable");
     }
 
     #[test]

@@ -368,6 +368,24 @@ pub struct Env<'g> {
     /// sparse→dense schedule fallbacks taken during this run (reported as
     /// [`super::ExecStats::fallbacks`])
     pub fallbacks: AtomicU64,
+    /// direction policy for frontier rounds / BFS levels (resolved from
+    /// [`super::ExecOpts::direction`] / `STARPLAT_DIRECTION` once per run)
+    pub direction: super::Direction,
+    /// delta-stepping policy for relaxation-shaped fixedPoints (resolved
+    /// from [`super::ExecOpts::delta`] / `STARPLAT_DELTA` once per run)
+    pub delta: super::DeltaMode,
+    /// sequential/parallel cutover for sweeps and gathers, resolved once per
+    /// run ([`super::ExecOpts::frontier_par_min`] overrides the cached
+    /// `STARPLAT_FRONTIER_PAR_MIN` read) — the hot loops never consult the
+    /// environment
+    pub frontier_par_min: usize,
+    /// push↔pull direction changes taken across frontier rounds and BFS
+    /// levels (reported as [`super::ExecStats::direction_switches`])
+    pub direction_switches: AtomicU64,
+    /// rounds / levels executed in the pull (reverse-CSR) direction
+    pub pull_rounds: AtomicU64,
+    /// did any fixedPoint run the delta-stepping schedule this run?
+    pub delta_used: AtomicBool,
     /// recycled per-worker register frames: a sweep takes one frame per
     /// participant and returns it afterwards, so a fixedPoint running
     /// hundreds of rounds allocates frames only on its first sweep
@@ -410,6 +428,12 @@ impl<'g> Env<'g> {
             cancel: None,
             fault: None,
             fallbacks: AtomicU64::new(0),
+            direction: super::Direction::Auto,
+            delta: super::DeltaMode::Off,
+            frontier_par_min: super::frontier_par_min(),
+            direction_switches: AtomicU64::new(0),
+            pull_rounds: AtomicU64::new(0),
+            delta_used: AtomicBool::new(false),
             frame_arena: crate::util::pool::Arena::new(),
             buf_arena: crate::util::pool::Arena::new(),
             props,
@@ -433,6 +457,16 @@ impl<'g> Env<'g> {
     /// Record one sparse→dense schedule fallback (graceful degradation).
     pub fn note_fallback(&self) {
         self.fallbacks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one push↔pull direction change (Beamer-style switching).
+    pub fn note_direction_switch(&self) {
+        self.direction_switches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Record one round / level executed in the pull direction.
+    pub fn note_pull_round(&self) {
+        self.pull_rounds.fetch_add(1, Ordering::Relaxed);
     }
 
     /// (Re-)allocate a declared property. Re-executing a declaration (e.g. a

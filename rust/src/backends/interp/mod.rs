@@ -52,6 +52,21 @@
 //! - **Density fallback**: when the frontier exceeds |V| / 4 the executor
 //!   uses a dense filtered sweep, so mesh-like graphs (road networks) get
 //!   the asymptotic win while dense frontiers keep the streaming sweep.
+//! - **Direction optimization**: fixedPoints whose kernel is the canonical
+//!   relaxation ([`compile::RelaxInfo`]) may run **pull** rounds — a dense
+//!   reverse-CSR scan where each vertex min-reduces `dist (+ weight)` over
+//!   flagged in-neighbors and commits to its own slot with a plain store —
+//!   chosen per round from the frontier's out-edge volume (enter at
+//!   mf·4 ≥ m, leave at mf·8 < m: ×2 hysteresis). `iterateInBFS` levels
+//!   switch push/bottom-up the same way with Beamer's α=14 / β=24 pair.
+//!   `STARPLAT_DIRECTION=push|pull` (or [`ExecOpts::direction`]) pins the
+//!   mode; programs with no redirectable kernel always push.
+//! - **Delta-stepping**: weighted canonical relaxations may opt into
+//!   bucketed priority worklists (`STARPLAT_DELTA=auto|<width>` /
+//!   [`ExecOpts::delta`]): buckets keyed by `dist / Δ`, light edges
+//!   (weight ≤ Δ) drained to a fixpoint per bucket before heavy edges relax
+//!   once, stale entries lazily skipped. Negative weights or a weight-free
+//!   relaxation fall back to the schedules above at run time.
 //! - Results are bit-identical to the dense schedule: the kernel body itself
 //!   is unchanged, only the set of vertices known to fail the filter is
 //!   skipped. `STARPLAT_FRONTIER=0` (or [`ExecOpts::frontier`] = false)
@@ -92,6 +107,7 @@ use crate::util::pool::PoolInterrupt;
 use anyhow::{anyhow, bail, Result};
 use compile::{
     CExpr, CKernel, CUpdate, DevIter, DevStmt, FrontierInfo, HostIter, HostStmt, Idx, ParamBind,
+    RelaxInfo,
 };
 use env::{Env, Levels, PropData, Val};
 use eval::{apply_reduce, eval, node_of, EvalCtx, NO_EDGE};
@@ -176,6 +192,61 @@ fn pool_err(i: PoolInterrupt) -> anyhow::Error {
     anyhow::Error::new(ExecError::from(i))
 }
 
+/// Traversal direction policy for frontier rounds and BFS levels.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Direction {
+    /// Beamer-style switching on frontier size / scanned-edge estimates
+    /// (with hysteresis) — the default
+    #[default]
+    Auto,
+    /// always walk the frontier's out-edges (the classic top-down sweep)
+    Push,
+    /// always scan unvisited/all vertices reading in-edges over
+    /// `rev_offsets/srcList` (bottom-up); programs with no pull-eligible
+    /// kernel ignore the force and stay push
+    Pull,
+}
+
+impl Direction {
+    /// Parse `STARPLAT_DIRECTION` (`auto` / `push` / `pull`; anything else,
+    /// including unset, means `Auto`).
+    pub fn from_env() -> Direction {
+        match std::env::var("STARPLAT_DIRECTION") {
+            Ok(v) if v.eq_ignore_ascii_case("push") => Direction::Push,
+            Ok(v) if v.eq_ignore_ascii_case("pull") => Direction::Pull,
+            _ => Direction::Auto,
+        }
+    }
+}
+
+/// Delta-stepping policy for relaxation-shaped fixedPoints.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DeltaMode {
+    /// never bucket; run the sweep/frontier schedule — the default
+    #[default]
+    Off,
+    /// bucket with the degree-based default width
+    /// `Δ = max(1, avg_weight / avg_degree)`
+    Auto,
+    /// bucket with an explicit width (> 0)
+    Width(i64),
+}
+
+impl DeltaMode {
+    /// Parse `STARPLAT_DELTA` (`auto`, a positive integer width, or
+    /// `0`/unset/garbage = off).
+    pub fn from_env() -> DeltaMode {
+        match std::env::var("STARPLAT_DELTA") {
+            Ok(v) if v.eq_ignore_ascii_case("auto") => DeltaMode::Auto,
+            Ok(v) => match v.parse::<i64>() {
+                Ok(w) if w > 0 => DeltaMode::Width(w),
+                _ => DeltaMode::Off,
+            },
+            Err(_) => DeltaMode::Off,
+        }
+    }
+}
+
 /// Execution knobs beyond the worker count.
 #[derive(Clone, Debug)]
 pub struct ExecOpts {
@@ -190,11 +261,27 @@ pub struct ExecOpts {
     /// deterministic fault injection; `None` falls back to `STARPLAT_FAULT`
     /// (use [`FaultPlan::off`] to force injection off regardless)
     pub fault: Option<FaultPlan>,
+    /// traversal direction policy; `None` falls back to `STARPLAT_DIRECTION`
+    pub direction: Option<Direction>,
+    /// delta-stepping policy; `None` falls back to `STARPLAT_DELTA`
+    pub delta: Option<DeltaMode>,
+    /// sequential/parallel cutover override; `None` falls back to the cached
+    /// `STARPLAT_FRONTIER_PAR_MIN` read (tests override here instead of
+    /// mutating the process environment)
+    pub frontier_par_min: Option<usize>,
 }
 
 impl Default for ExecOpts {
     fn default() -> Self {
-        ExecOpts { threads: 0, frontier: true, cancel: None, fault: None }
+        ExecOpts {
+            threads: 0,
+            frontier: true,
+            cancel: None,
+            fault: None,
+            direction: None,
+            delta: None,
+            frontier_par_min: None,
+        }
     }
 }
 
@@ -226,6 +313,12 @@ pub struct ExecStats {
     /// sparse (frontier) fixedPoint schedules abandoned for the dense
     /// schedule after an injected or real sweep fault
     pub fallbacks: u64,
+    /// push↔pull direction changes across frontier rounds and BFS levels
+    pub direction_switches: u64,
+    /// rounds / levels executed in the pull (reverse-CSR) direction
+    pub pull_rounds: u64,
+    /// did any fixedPoint run the delta-stepping schedule?
+    pub delta_used: bool,
 }
 
 /// Execution result: output properties + optional scalar return.
@@ -285,6 +378,11 @@ pub fn run_with_opts(tf: &TypedFunction, g: &Graph, args: &Args, opts: ExecOpts)
     env.frontier_enabled = opts.frontier && frontier_env_enabled();
     env.cancel = opts.cancel.clone();
     env.fault = opts.fault.or_else(FaultPlan::from_env);
+    env.direction = opts.direction.unwrap_or_else(Direction::from_env);
+    env.delta = opts.delta.unwrap_or_else(DeltaMode::from_env);
+    if let Some(min) = opts.frontier_par_min {
+        env.frontier_par_min = min;
+    }
     // bind scalar / set params
     for pb in &prog.params {
         match pb {
@@ -308,6 +406,9 @@ pub fn run_with_opts(tf: &TypedFunction, g: &Graph, args: &Args, opts: ExecOpts)
     ex.block(&prog.body)?;
     let stats = ExecStats {
         fallbacks: ex.env.fallbacks.load(std::sync::atomic::Ordering::Relaxed),
+        direction_switches: ex.env.direction_switches.load(std::sync::atomic::Ordering::Relaxed),
+        pull_rounds: ex.env.pull_rounds.load(std::sync::atomic::Ordering::Relaxed),
+        delta_used: ex.env.delta_used.load(std::sync::atomic::Ordering::Relaxed),
     };
     Ok(Output { props: ex.env.take_props(), ret: ex.ret, stats })
 }
@@ -554,32 +655,100 @@ impl<'g> Exec<'g> {
         let mut frontier: Vec<Node> = vec![src as Node];
         let mut by_level: Vec<Vec<Node>> = Vec::new();
         let mut depth: i32 = 0;
+        // Beamer direction-optimizing discovery: `mf` estimates the edges a
+        // push step would scan (Σ out-degree over the frontier), `mu` the
+        // edges still hanging off unvisited vertices. Switch to the pull
+        // (bottom-up) scan when the frontier's edge frontier dominates
+        // (mf > mu/α), and back to push when the frontier thins out
+        // (|frontier| < n/β) — the classic α=14 / β=24 hysteresis pair.
+        // Forced directions (`STARPLAT_DIRECTION` / ExecOpts) pin the mode.
+        let mut mf: u64 = env.g.out_degree(src as Node) as u64;
+        let mut mu: u64 = (env.g.num_edges() as u64).saturating_sub(mf);
+        let mut pulling = env.direction == Direction::Pull;
         while !frontier.is_empty() {
             env.check_cancel()?; // level boundary = cancellation point
-            let discover = |i: usize, out: &mut Vec<Node>| {
-                for &w in env.g.neighbors(frontier[i]) {
-                    if levels.claim(w as usize, depth + 1) {
-                        out.push(w);
+            let want_pull = match env.direction {
+                Direction::Push => false,
+                Direction::Pull => true,
+                Direction::Auto => {
+                    if pulling {
+                        // hysteresis: stay bottom-up until the frontier thins
+                        frontier.len() >= n / 24
+                    } else {
+                        mf > mu / 14
                     }
                 }
             };
-            let next: Vec<Node> = if env.threads == 1 || frontier.len() < frontier_par_min() {
-                let mut out = Vec::new();
-                for i in 0..frontier.len() {
-                    discover(i, &mut out);
+            if want_pull != pulling {
+                env.note_direction_switch();
+                pulling = want_pull;
+            }
+            let parallel = env.threads > 1;
+            let next: Vec<Node> = if pulling {
+                env.note_pull_round();
+                // bottom-up: every unvisited vertex checks its in-edges for
+                // a parent on the current level and claims itself. Early
+                // exit on the first parent found is the pull win.
+                let discover = |v: usize, out: &mut Vec<Node>| {
+                    if levels.get(v) != -1 {
+                        return;
+                    }
+                    for &u in env.g.in_neighbors(v as Node) {
+                        if levels.get(u as usize) == depth {
+                            if levels.claim(v, depth + 1) {
+                                out.push(v as Node);
+                            }
+                            break;
+                        }
+                    }
+                };
+                if !parallel || n < env.frontier_par_min {
+                    let mut out = Vec::new();
+                    for v in 0..n {
+                        discover(v, &mut out);
+                    }
+                    out
+                } else {
+                    crate::util::pool::try_parallel_collect_in(
+                        n,
+                        env.threads,
+                        1024,
+                        env.cancel.as_ref(),
+                        &env.buf_arena,
+                        discover,
+                    )
+                    .map_err(pool_err)?
                 }
-                out
             } else {
-                crate::util::pool::try_parallel_collect_in(
-                    frontier.len(),
-                    env.threads,
-                    64,
-                    env.cancel.as_ref(),
-                    &env.buf_arena,
-                    discover,
-                )
-                .map_err(pool_err)?
+                let discover = |i: usize, out: &mut Vec<Node>| {
+                    for &w in env.g.neighbors(frontier[i]) {
+                        if levels.claim(w as usize, depth + 1) {
+                            out.push(w);
+                        }
+                    }
+                };
+                if !parallel || frontier.len() < env.frontier_par_min {
+                    let mut out = Vec::new();
+                    for i in 0..frontier.len() {
+                        discover(i, &mut out);
+                    }
+                    out
+                } else {
+                    crate::util::pool::try_parallel_collect_in(
+                        frontier.len(),
+                        env.threads,
+                        64,
+                        env.cancel.as_ref(),
+                        &env.buf_arena,
+                        discover,
+                    )
+                    .map_err(pool_err)?
+                }
             };
+            // the next level's push cost; claimed vertices leave `mu`
+            let next_edges: u64 = next.iter().map(|&v| env.g.out_degree(v) as u64).sum();
+            mu = mu.saturating_sub(next_edges);
+            mf = next_edges;
             by_level.push(frontier);
             frontier = next;
             depth += 1;
@@ -623,6 +792,15 @@ impl<'g> Exec<'g> {
             // gets the dense schedule instead, as does an execution with the
             // frontier engine switched off (ExecOpts / STARPLAT_FRONTIER=0).
             if self.env.frontier_enabled && !self.env.prop(fi.nxt).any_true() {
+                // delta-stepping: a weighted canonical relaxation may run
+                // the bucketed priority schedule instead of round-based
+                // sweeps (opt-in via STARPLAT_DELTA / ExecOpts::delta;
+                // ineligible or negative-weight programs fall through)
+                if let Some(r) = fi.relax {
+                    if self.try_delta(var, fi, r)?.is_some() {
+                        return Ok(());
+                    }
+                }
                 let HostStmt::Kernel(k) = &body[0] else {
                     bail!("internal: frontier plan without a leading kernel")
                 };
@@ -647,6 +825,128 @@ impl<'g> Exec<'g> {
             }
         }
         bail!("fixedPoint did not converge after {max_iters} iterations")
+    }
+
+    /// Delta-stepping execution of a weighted canonical relaxation: bucketed
+    /// priority worklists keyed by `dist / Δ`, light edges (weight ≤ Δ)
+    /// relaxed to a fixpoint inside the current bucket before heavy edges
+    /// (weight > Δ) are relaxed once from the settled distances. Correctness
+    /// does not hinge on the bucket order — every successful improvement
+    /// re-enqueues its vertex, and the loop drains until no bucket is left —
+    /// so the order is purely a work-efficiency heuristic, exactly like the
+    /// push/pull choice. Entries are lazily invalidated: a vertex whose
+    /// distance migrated to a lower bucket is skipped when its stale entry
+    /// surfaces.
+    ///
+    /// Returns `Ok(None)` when the schedule does not apply (delta mode off,
+    /// a negative edge weight at run time, or uninitialized properties) —
+    /// the caller then runs the frontier/dense schedule unchanged.
+    fn try_delta(&self, var: u32, fi: FrontierInfo, r: RelaxInfo) -> Result<Option<()>> {
+        let Some(wslot) = r.weight else { return Ok(None) };
+        let env = &self.env;
+        if env.delta == DeltaMode::Off {
+            return Ok(None);
+        }
+        let g = env.g;
+        let n = g.num_nodes();
+        let me = g.num_edges();
+        let dist = env.prop(r.dist);
+        let flag = env.prop(fi.flag);
+        let weight = env.prop(wslot);
+        if flag.len() != n || dist.len() != n || weight.len() != me {
+            return Ok(None); // let the dense path surface the real error
+        }
+        // one O(m) scan resolves both the non-negativity precondition and
+        // the degree-based default width Δ = max(1, avg_weight / avg_degree)
+        let mut total: i64 = 0;
+        let mut minw = i64::MAX;
+        for e in 0..me {
+            let w = ival(weight.load(e));
+            total = total.saturating_add(w);
+            minw = minw.min(w);
+        }
+        if me > 0 && minw < 0 {
+            return Ok(None); // delta-stepping requires non-negative weights
+        }
+        let width = match env.delta {
+            DeltaMode::Width(d) => d.max(1),
+            _ => {
+                let avg_w = total / me.max(1) as i64;
+                let avg_deg = (me / n.max(1)).max(1) as i64;
+                (avg_w / avg_deg).max(1)
+            }
+        };
+        // seed the buckets from the flagged vertices and clear their flags:
+        // the bucketed run replaces the whole ping-pong loop, so it must
+        // exit in the converged dense state (both flag arrays all-false)
+        let mut buckets: std::collections::BTreeMap<i64, Vec<Node>> =
+            std::collections::BTreeMap::new();
+        for v in 0..n {
+            if flag.load_bool(v) {
+                buckets.entry(ival(dist.load(v)) / width).or_default().push(v as Node);
+                flag.store(v, Val::B(false));
+            }
+        }
+        env.delta_used.store(true, std::sync::atomic::Ordering::Relaxed);
+        // relax one vertex's light or heavy out-edges from its current
+        // distance; every winning Min emits the relaxed head for re-bucketing
+        let relax_edges = |v: Node, light: bool, out: &mut Vec<Node>| {
+            let dv = ival(dist.load(v as usize));
+            for e in g.edge_range(v) {
+                let we = ival(weight.load(e));
+                if (we <= width) != light {
+                    continue;
+                }
+                let u = g.adj[e] as usize;
+                let cand = Val::I(dv.saturating_add(we));
+                if dist.atomic_min_max(u, cand, crate::dsl::ast::MinMax::Min) {
+                    out.push(u as Node);
+                }
+            }
+        };
+        let run_phase = |list: &[Node], light: bool| -> Result<Vec<Node>> {
+            if env.threads > 1 && list.len() >= env.frontier_par_min {
+                crate::util::pool::try_parallel_collect_in(
+                    list.len(),
+                    env.threads,
+                    64,
+                    env.cancel.as_ref(),
+                    &env.buf_arena,
+                    |i, out| relax_edges(list[i], light, out),
+                )
+                .map_err(pool_err)
+            } else {
+                let mut out = Vec::new();
+                for &v in list {
+                    relax_edges(v, light, &mut out);
+                }
+                Ok(out)
+            }
+        };
+        while let Some((&bi, _)) = buckets.iter().next() {
+            env.check_cancel()?; // bucket boundary = cancellation point
+            let mut settled: Vec<Node> = Vec::new();
+            // light phase: drain bucket `bi` to a fixpoint (light-edge wins
+            // can land back in it)
+            while let Some(bucket) = buckets.remove(&bi) {
+                let fresh: Vec<Node> = bucket
+                    .into_iter()
+                    .filter(|&v| ival(dist.load(v as usize)) / width == bi)
+                    .collect();
+                let improved = run_phase(&fresh, true)?;
+                settled.extend_from_slice(&fresh);
+                for &u in &improved {
+                    buckets.entry(ival(dist.load(u as usize)) / width).or_default().push(u);
+                }
+            }
+            // heavy phase: one pass from the settled distances
+            let improved = run_phase(&settled, false)?;
+            for &u in &improved {
+                buckets.entry(ival(dist.load(u as usize)) / width).or_default().push(u);
+            }
+        }
+        env.scalar_store(var, Val::B(true))?;
+        Ok(Some(()))
     }
 
     /// Sparse-worklist execution of a frontier-eligible fixedPoint: process
@@ -705,12 +1005,64 @@ impl<'g> Exec<'g> {
                 }
             }
         };
+        // Direction-optimizing rounds: the canonical relaxation shape
+        // (fi.relax) admits a pull round — a dense scan where every vertex
+        // reads its *in*-edges over rev_offsets/srcList and min-reduces over
+        // flagged in-neighbors, writing only its own distance (no atomics,
+        // no ping-pong traffic). Chosen when the frontier's out-edge volume
+        // `mf` reaches the total edge count (mf·4 ≥ m), with a ×2 hysteresis
+        // margin so borderline rounds don't flap; `STARPLAT_DIRECTION` /
+        // ExecOpts force push or pull outright.
+        let m = env.g.num_edges() as u64;
+        let mut pulling = false;
         for iter in 0..max_iters {
             env.check_cancel()?; // iteration boundary = cancellation point
             if frontier.is_empty() {
                 // dense-equivalent exit state: both flag arrays all-false
                 env.scalar_store(var, Val::B(true))?;
                 return Ok(FrontierExit::Converged);
+            }
+            let want_pull = fi.relax.is_some()
+                && match env.direction {
+                    Direction::Push => false,
+                    Direction::Pull => true,
+                    Direction::Auto => {
+                        let mf: u64 =
+                            frontier.iter().map(|&v| env.g.out_degree(v) as u64).sum();
+                        // hysteresis: leaving pull needs the estimate to
+                        // drop twice as far as entering it required
+                        if pulling {
+                            mf * 8 >= m
+                        } else {
+                            mf * 4 >= m
+                        }
+                    }
+                };
+            if want_pull != pulling {
+                env.note_direction_switch();
+                pulling = want_pull;
+            }
+            if pulling {
+                // the injected-fault hook sits before any flag mutation, so
+                // the dense schedule resumes from a consistent boundary
+                if env.fault.is_some_and(|fp| fp.fires(FaultSite::ClaimGather, iter as u64)) {
+                    env.note_fallback();
+                    return Ok(FrontierExit::FellBack);
+                }
+                env.note_pull_round();
+                env.buf_arena.put(std::mem::take(&mut next));
+                next = pull_round(env, fi.relax.unwrap(), flag)?;
+                // emulate the round's flag hand-over: clear the old
+                // frontier, then flag the improved vertices (a vertex can be
+                // in both sets, so the clear fully precedes the sets)
+                for &v in &frontier {
+                    flag.store(v as usize, Val::B(false));
+                }
+                for &v in &next {
+                    flag.store(v as usize, Val::B(true));
+                }
+                std::mem::swap(&mut frontier, &mut next);
+                continue;
             }
             let dense = frontier.len() * 4 >= n;
             let swept = if dense {
@@ -744,7 +1096,7 @@ impl<'g> Exec<'g> {
             // old frontier's flags, then claim the newly-flagged vertices.
             // The clear must fully precede the claims (a vertex may be in
             // both sets), so these are two pool passes, not one.
-            let parallel = env.threads > 1 && frontier.len() >= frontier_par_min();
+            let parallel = env.threads > 1 && frontier.len() >= env.frontier_par_min;
             if parallel {
                 let fr = &frontier;
                 crate::util::pool::parallel_for(fr.len(), env.threads, |i| {
@@ -760,7 +1112,7 @@ impl<'g> Exec<'g> {
             // swap clears them as it sets flags), so continuing densely from
             // that state would drop the claimed vertices.
             if dense {
-                if env.threads > 1 && n >= frontier_par_min() {
+                if env.threads > 1 && n >= env.frontier_par_min {
                     env.buf_arena.put(std::mem::take(&mut next));
                     next = crate::util::pool::try_parallel_collect_in(
                         n,
@@ -798,6 +1150,69 @@ impl<'g> Exec<'g> {
             std::mem::swap(&mut frontier, &mut next);
         }
         bail!("fixedPoint did not converge after {max_iters} iterations")
+    }
+}
+
+/// Integer view of a runtime value (the relax/delta paths only ever touch
+/// properties the compiler proved integer-typed).
+#[inline]
+fn ival(v: Val) -> i64 {
+    match v {
+        Val::I(x) => x,
+        Val::F(x) => x as i64,
+        Val::B(b) => b as i64,
+    }
+}
+
+/// One pull (bottom-up) round of a canonical relaxation: every vertex scans
+/// its in-edges over `rev_offsets/srcList/rev_edge_id`, min-reduces
+/// `dist[u] (+ weight)` over *flagged* in-neighbors `u`, and — having sole
+/// ownership of its own slot this round — commits any improvement with a
+/// plain store. Returns the improved vertices: the next frontier. The
+/// caller swaps the flag sets afterwards, so this round reads a stable
+/// frontier snapshot.
+fn pull_round(env: &Env<'_>, r: RelaxInfo, flag: &PropData) -> Result<Vec<Node>> {
+    let g = env.g;
+    let n = g.num_nodes();
+    let dist = env.prop(r.dist);
+    let weight = r.weight.map(|w| env.prop(w));
+    let scan = |v: usize, out: &mut Vec<Node>| {
+        let cur = ival(dist.load(v));
+        let mut best = cur;
+        for i in g.rev_offsets[v] as usize..g.rev_offsets[v + 1] as usize {
+            let u = g.rev_adj[i] as usize;
+            if !flag.load_bool(u) {
+                continue;
+            }
+            let mut cand = ival(dist.load(u));
+            if let Some(w) = weight {
+                // rev_edge_id maps the reverse slot to its forward edge —
+                // the id the push kernel's `get_edge` would have seen
+                cand = cand.saturating_add(ival(w.load(g.rev_edge_id[i] as usize)));
+            }
+            best = best.min(cand);
+        }
+        if best < cur {
+            dist.store(v, Val::I(best));
+            out.push(v as Node);
+        }
+    };
+    if env.threads > 1 && n >= env.frontier_par_min {
+        crate::util::pool::try_parallel_collect_in(
+            n,
+            env.threads,
+            1024,
+            env.cancel.as_ref(),
+            &env.buf_arena,
+            scan,
+        )
+        .map_err(pool_err)
+    } else {
+        let mut out = Vec::new();
+        for v in 0..n {
+            scan(v, &mut out);
+        }
+        Ok(out)
     }
 }
 
@@ -1106,4 +1521,30 @@ fn run_list(
     }
     ctx.current_edge = saved_edge;
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frontier_par_min_env_is_read_once() {
+        // the threshold is cached on first use: later environment changes
+        // must not reach the hot loops (they read `env.frontier_par_min`,
+        // resolved once per run; tests override via ExecOpts instead)
+        let first = frontier_par_min();
+        std::env::set_var("STARPLAT_FRONTIER_PAR_MIN", (first + 999).to_string());
+        assert_eq!(frontier_par_min(), first, "STARPLAT_FRONTIER_PAR_MIN must be read once");
+        std::env::remove_var("STARPLAT_FRONTIER_PAR_MIN");
+        assert_eq!(frontier_par_min(), first);
+    }
+
+    #[test]
+    fn schedule_knobs_default_off() {
+        assert_eq!(Direction::default(), Direction::Auto);
+        assert_eq!(DeltaMode::default(), DeltaMode::Off);
+        let opts = ExecOpts::default();
+        assert!(opts.direction.is_none() && opts.delta.is_none());
+        assert!(opts.frontier_par_min.is_none());
+    }
 }

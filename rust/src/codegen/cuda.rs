@@ -91,7 +91,13 @@ fn cuda_launch(kernel: &str, grid: &str, block: &str, args: &str) -> String {
 
 pub(crate) const CUDA_SPELLINGS: Spellings = Spellings {
     label: "CUDA",
-    includes: &["#include <cuda.h>", "#include <climits>", "#include \"libstarplat_cuda.h\""],
+    includes: &[
+        "#include <cuda.h>",
+        "#include <climits>",
+        "#include <cstdlib>",
+        "#include <cstring>",
+        "#include \"libstarplat_cuda.h\"",
+    ],
     malloc: "cudaMalloc",
     memcpy: "cudaMemcpy",
     h2d: "cudaMemcpyHostToDevice",
@@ -276,6 +282,20 @@ impl<'a> HostDialect for Gen<'a> {
         render_kernel_ops(&CudaKernel, plan, &body.ops, &mut self.kernels);
         self.kernels.close("}");
         self.kernels.line("");
+        // schedule plan: a derived pull twin re-orients the relaxation onto
+        // the reverse CSR; the host picks a direction at runtime
+        if let Some(pull) = &k.pull_body {
+            self.kernels
+                .open(&format!("__global__ void {}_pull({}) {{", k.name, sig.join(", ")));
+            self.kernels.line(&format!(
+                "unsigned {v} = blockIdx.x * blockDim.x + threadIdx.x;",
+                v = pull.thread_var
+            ));
+            self.kernels.line(&format!("if ({} >= V) return;", pull.thread_var));
+            render_kernel_ops(&CudaKernel, plan, &pull.ops, &mut self.kernels);
+            self.kernels.close("}");
+            self.kernels.line("");
+        }
         // ---- launch site (Fig 2's host half): plan-bound transfer steps ----
         for &c in &k.copy_in {
             let m = self.plan.meta(c);
@@ -302,7 +322,28 @@ impl<'a> HostDialect for Gen<'a> {
         }
         let args: Vec<String> = params.iter().map(|p| self.plan.launch_arg(p)).collect();
         let name = k.name.clone();
-        self.launch_line(&name, "numBlocks", "threadsPerBlock", &args.join(", "));
+        if k.pull_body.is_some() {
+            self.host
+                .line("// schedule plan: STARPLAT_DIRECTION=pull selects the reverse-CSR variant");
+            self.host.line(&format!(
+                "bool usePull_{} = getenv(\"STARPLAT_DIRECTION\") != NULL && \
+                 strcmp(getenv(\"STARPLAT_DIRECTION\"), \"pull\") == 0;",
+                k.id
+            ));
+            self.host.open(&format!("if (usePull_{}) {{", k.id));
+            self.launch_line(
+                &format!("{name}_pull"),
+                "numBlocks",
+                "threadsPerBlock",
+                &args.join(", "),
+            );
+            self.host.close("} else {");
+            self.host.inc();
+            self.launch_line(&name, "numBlocks", "threadsPerBlock", &args.join(", "));
+            self.host.close("}");
+        } else {
+            self.launch_line(&name, "numBlocks", "threadsPerBlock", &args.join(", "));
+        }
         self.host.line(self.sp.sync);
         for (r, _, ty) in &k.reductions {
             let t = TYPES.name(*ty);

@@ -36,6 +36,8 @@ pub(crate) const HIP_SPELLINGS: Spellings = Spellings {
     includes: &[
         "#include <hip/hip_runtime.h>",
         "#include <climits>",
+        "#include <cstdlib>",
+        "#include <cstring>",
         "#include \"libstarplat_hip.h\"",
     ],
     malloc: "hipMalloc",

@@ -196,6 +196,7 @@ impl<'a> Gen<'a> {
         self.host.line("// ---- host.mm (metal-cpp) ----");
         self.host.line("#include <Metal/Metal.hpp>");
         self.host.line("#include <climits>");
+        self.host.line("#include <cstdlib>");
         self.host.line("#include <cstring>");
         self.host.line("#include \"libstarplat_metal.h\"");
         self.host.line("");
@@ -386,6 +387,14 @@ impl<'a> HostDialect for Gen<'a> {
         render_kernel_ops(&dialect, plan, &body.ops, &mut self.kernels);
         self.kernels.close("}");
         self.kernels.line("");
+        // schedule plan: a derived pull twin re-orients the relaxation onto
+        // the reverse CSR; the host picks a direction at runtime
+        if let Some(pull) = &k.pull_body {
+            self.open_kernel(&format!("{}_pull", k.name), &sig, &pull.thread_var);
+            render_kernel_ops(&dialect, plan, &pull.ops, &mut self.kernels);
+            self.kernels.close("}");
+            self.kernels.line("");
+        }
         // ---- launch site: §4-bound transfers are shared-memory memcpys ----
         for &c in &k.copy_in {
             let m = self.plan.meta(c);
@@ -408,7 +417,23 @@ impl<'a> HostDialect for Gen<'a> {
         }
         let binds = self.bind_lines(&params);
         let name = k.name.clone();
-        self.dispatch(&name, binds);
+        if k.pull_body.is_some() {
+            self.host
+                .line("// schedule plan: STARPLAT_DIRECTION=pull selects the reverse-CSR variant");
+            self.host.line(&format!(
+                "bool usePull_{} = getenv(\"STARPLAT_DIRECTION\") != NULL && \
+                 strcmp(getenv(\"STARPLAT_DIRECTION\"), \"pull\") == 0;",
+                k.id
+            ));
+            self.host.open(&format!("if (usePull_{}) {{", k.id));
+            self.dispatch(&format!("{name}_pull"), binds.clone());
+            self.host.close("} else {");
+            self.host.inc();
+            self.dispatch(&name, binds);
+            self.host.close("}");
+        } else {
+            self.dispatch(&name, binds);
+        }
         for (r, _, ty) in &k.reductions {
             let t = cell_host_ty(*ty);
             self.host.line(&format!("{r} = *({t}*)d_{r}->contents();"));

@@ -35,9 +35,9 @@
 //! what makes a non-C-family backend possible: `wgsl.rs` spells the same op
 //! tree into `var<storage>` bindings and `@compute` entry points.
 //!
-//! Each generated file embeds three comment blocks — the device-plan,
-//! host-schedule, and kernel-op manifests — that are byte-identical across
-//! all text backends (`tests/plan_numbering.rs`,
+//! Each generated file embeds four comment blocks — the device-plan,
+//! host-schedule, kernel-op, and schedule-plan manifests — that are
+//! byte-identical across all text backends (`tests/plan_numbering.rs`,
 //! `tests/host_schedule_conformance.rs`).
 //!
 //! The end-to-end walk-through of this pipeline — with a worked SSSP
@@ -222,9 +222,9 @@ pub(crate) fn render_host_schedule<D: HostDialect + ?Sized>(
     }
 }
 
-/// Standard file header: generator banner + the three manifest comment
-/// blocks (device plan, host schedule, kernel ops) every text backend
-/// embeds.
+/// Standard file header: generator banner + the four manifest comment
+/// blocks (device plan, host schedule, kernel ops, schedule plan) every
+/// text backend embeds.
 pub(crate) fn manifest_header(label: &str, plan: &DevicePlan) -> String {
     let mut out = format!("// Generated by starplat-rs — {label} backend\n");
     for l in plan
@@ -232,6 +232,7 @@ pub(crate) fn manifest_header(label: &str, plan: &DevicePlan) -> String {
         .iter()
         .chain(plan.host_manifest().iter())
         .chain(plan.kernel_manifest().iter())
+        .chain(plan.schedule_manifest().iter())
     {
         out.push_str("// ");
         out.push_str(l);

@@ -97,6 +97,8 @@ impl<'a> Gen<'a> {
         let plan = self.plan;
         let mut out = super::manifest_header("OpenACC", plan);
         self.buf.line("#include <climits>");
+        self.buf.line("#include <cstdlib>");
+        self.buf.line("#include <cstring>");
         self.buf.line("#include \"libstarplat_acc.h\"");
         self.buf.line("");
         let params = plan.host_signature(TYPES);
@@ -230,6 +232,27 @@ impl<'a> HostDialect for Gen<'a> {
         if !reds.is_empty() {
             pragma = format!("{pragma} {}", reds.join(" "));
         }
+        if let Some(pull) = &k.pull_body {
+            // schedule plan: a derived pull twin re-orients the relaxation
+            // onto the reverse CSR; the host picks a direction at runtime
+            self.buf
+                .line("// schedule plan: STARPLAT_DIRECTION=pull selects the reverse-CSR variant");
+            self.buf.line(&format!(
+                "bool usePull_{} = getenv(\"STARPLAT_DIRECTION\") != NULL && \
+                 strcmp(getenv(\"STARPLAT_DIRECTION\"), \"pull\") == 0;",
+                k.id
+            ));
+            self.buf.open(&format!("if (usePull_{}) {{", k.id));
+            self.buf.line(&pragma);
+            self.buf.open(&format!(
+                "for (int {v} = 0; {v} < g.num_nodes(); {v}++) {{",
+                v = pull.thread_var
+            ));
+            render_kernel_ops(&AccKernel, plan, &pull.ops, &mut self.buf);
+            self.buf.close("}");
+            self.buf.close("} else {");
+            self.buf.inc();
+        }
         self.buf.line(&pragma);
         self.buf.open(&format!(
             "for (int {v} = 0; {v} < g.num_nodes(); {v}++) {{",
@@ -240,6 +263,9 @@ impl<'a> HostDialect for Gen<'a> {
         }
         render_kernel_ops(&AccKernel, plan, &body.ops, &mut self.buf);
         self.buf.close("}");
+        if k.pull_body.is_some() {
+            self.buf.close("}");
+        }
     }
 
     fn bfs(&mut self, index: usize, var: &str, from: &str) {

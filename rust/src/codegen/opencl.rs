@@ -110,6 +110,8 @@ impl<'a> Gen<'a> {
         let params = plan.host_signature(&TypeMap::C);
         self.host.line("// ---- host.cpp ----");
         self.host.line("#include <CL/cl.h>");
+        self.host.line("#include <cstdlib>");
+        self.host.line("#include <cstring>");
         self.host.line("#include \"libstarplat_ocl.h\"");
         self.host.line("");
         self.host.open(&format!("void {}({}) {{", plan.func, params.join(", ")));
@@ -243,8 +245,35 @@ impl<'a> HostDialect for Gen<'a> {
         render_kernel_ops(&OclKernel, plan, &body.ops, &mut self.kernels);
         self.kernels.close("}");
         self.kernels.line("");
+        // schedule plan: a derived pull twin re-orients the relaxation onto
+        // the reverse CSR; the host picks a direction at runtime
+        if let Some(pull) = &k.pull_body {
+            self.kernels
+                .open(&format!("__kernel void {}_pull({}) {{", k.name, sig.join(", ")));
+            self.kernels.line(&format!("unsigned {v} = get_global_id(0);", v = pull.thread_var));
+            self.kernels.line(&format!("if ({} >= V) return;", pull.thread_var));
+            render_kernel_ops(&OclKernel, plan, &pull.ops, &mut self.kernels);
+            self.kernels.close("}");
+            self.kernels.line("");
+        }
         let name = k.name.clone();
-        self.enqueue_launch(&name, &args);
+        if k.pull_body.is_some() {
+            self.host
+                .line("// schedule plan: STARPLAT_DIRECTION=pull selects the reverse-CSR variant");
+            self.host.line(&format!(
+                "bool usePull_{} = getenv(\"STARPLAT_DIRECTION\") != NULL && \
+                 strcmp(getenv(\"STARPLAT_DIRECTION\"), \"pull\") == 0;",
+                k.id
+            ));
+            self.host.open(&format!("if (usePull_{}) {{", k.id));
+            self.enqueue_launch(&format!("{name}_pull"), &args);
+            self.host.close("} else {");
+            self.host.inc();
+            self.enqueue_launch(&name, &args);
+            self.host.close("}");
+        } else {
+            self.enqueue_launch(&name, &args);
+        }
         for (r, _, ty) in &k.reductions {
             let t = DEV.name(*ty);
             self.host.line(&format!(

@@ -100,6 +100,8 @@ impl<'a> Gen<'a> {
         let plan = self.plan;
         let mut out = super::manifest_header("SYCL", plan);
         self.buf.line("#include <CL/sycl.hpp>");
+        self.buf.line("#include <cstdlib>");
+        self.buf.line("#include <cstring>");
         self.buf.line("#include \"libstarplat_sycl.h\"");
         self.buf.line("using namespace sycl;");
         self.buf.line("");
@@ -201,12 +203,37 @@ impl<'a> HostDialect for Gen<'a> {
         for (r, _, _) in &k.reductions {
             self.buf.line(&format!("// device reduction cell for `{r}` (atomic_ref, Fig 8)"));
         }
-        self.open_parallel(&body.thread_var);
-        if let Some(g) = &body.guard {
-            self.buf.line(&format!("if (!({})) continue;", emit(g, &sycl_style())));
+        if let Some(pull) = &k.pull_body {
+            // schedule plan: a derived pull twin re-orients the relaxation
+            // onto the reverse CSR; the host picks a direction at runtime
+            self.buf
+                .line("// schedule plan: STARPLAT_DIRECTION=pull selects the reverse-CSR variant");
+            self.buf.line(&format!(
+                "bool usePull_{} = getenv(\"STARPLAT_DIRECTION\") != NULL && \
+                 strcmp(getenv(\"STARPLAT_DIRECTION\"), \"pull\") == 0;",
+                k.id
+            ));
+            self.buf.open(&format!("if (usePull_{}) {{", k.id));
+            self.open_parallel(&pull.thread_var);
+            render_kernel_ops(&SyclKernel, plan, &pull.ops, &mut self.buf);
+            self.close_parallel();
+            self.buf.close("} else {");
+            self.buf.inc();
+            self.open_parallel(&body.thread_var);
+            if let Some(g) = &body.guard {
+                self.buf.line(&format!("if (!({})) continue;", emit(g, &sycl_style())));
+            }
+            render_kernel_ops(&SyclKernel, plan, &body.ops, &mut self.buf);
+            self.close_parallel();
+            self.buf.close("}");
+        } else {
+            self.open_parallel(&body.thread_var);
+            if let Some(g) = &body.guard {
+                self.buf.line(&format!("if (!({})) continue;", emit(g, &sycl_style())));
+            }
+            render_kernel_ops(&SyclKernel, plan, &body.ops, &mut self.buf);
+            self.close_parallel();
         }
-        render_kernel_ops(&SyclKernel, plan, &body.ops, &mut self.buf);
-        self.close_parallel();
     }
 
     fn bfs(&mut self, index: usize, var: &str, from: &str) {

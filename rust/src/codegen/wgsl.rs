@@ -269,6 +269,8 @@ impl<'a> Gen<'a> {
         self.host.line("// ---- host.cpp (Dawn / webgpu_cpp.h) ----");
         self.host.line("#include <webgpu/webgpu_cpp.h>");
         self.host.line("#include <climits>");
+        self.host.line("#include <cstdlib>");
+        self.host.line("#include <cstring>");
         self.host.line("#include \"libstarplat_webgpu.h\"");
         self.host.line("");
         let params = plan.host_signature(&TypeMap::C);
@@ -587,6 +589,21 @@ impl<'a> HostDialect for Gen<'a> {
         self.shader_module(&name, &layout, &needs, &tv, guard.as_deref(), |buf| {
             render_kernel_ops(&dialect, plan, ops, buf)
         });
+        // schedule plan: a derived pull twin re-orients the relaxation onto
+        // the reverse CSR; the host picks a direction at runtime
+        if let Some(pull) = &k.pull_body {
+            let mut pneeds = Needs::default();
+            scan_ops(&pull.ops, &mut pneeds);
+            let pops = &pull.ops;
+            self.shader_module(
+                &format!("{name}_pull"),
+                &layout,
+                &pneeds,
+                &pull.thread_var,
+                None,
+                |buf| render_kernel_ops(&dialect, plan, pops, buf),
+            );
+        }
         // ---- launch site ----
         for &c in &k.copy_in {
             let m = self.plan.meta(c);
@@ -606,7 +623,23 @@ impl<'a> HostDialect for Gen<'a> {
                 .line(&format!("wgpu::Buffer d_{r} = makeStorageBuffer(device, sizeof({t}));"));
             self.host.line(&format!("queue.WriteBuffer(d_{r}, 0, &{r}, sizeof({t}));"));
         }
-        self.dispatch(&name, &layout);
+        if k.pull_body.is_some() {
+            self.host
+                .line("// schedule plan: STARPLAT_DIRECTION=pull selects the reverse-CSR variant");
+            self.host.line(&format!(
+                "bool usePull_{} = getenv(\"STARPLAT_DIRECTION\") != NULL && \
+                 strcmp(getenv(\"STARPLAT_DIRECTION\"), \"pull\") == 0;",
+                k.id
+            ));
+            self.host.open(&format!("if (usePull_{}) {{", k.id));
+            self.dispatch(&format!("{name}_pull"), &layout);
+            self.host.close("} else {");
+            self.host.inc();
+            self.dispatch(&name, &layout);
+            self.host.close("}");
+        } else {
+            self.dispatch(&name, &layout);
+        }
         for (r, _, ty) in &k.reductions {
             let t = HOST.name(*ty);
             self.host.line(&format!("readBuffer(device, queue, d_{r}, &{r}, sizeof({t}));"));

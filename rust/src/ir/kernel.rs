@@ -159,6 +159,112 @@ impl KernelBody {
     }
 }
 
+/// Does `e` reference properties only at `obj` (and otherwise only scalars,
+/// literals, and pure operators)? The conservative admissibility check for
+/// re-orienting a relaxation: anything else (neighbor-indexed reads, edge
+/// lookups, calls) pins the body to its compiled direction.
+fn refs_props_only_at(e: &Expr, obj: &str) -> bool {
+    match e {
+        Expr::Prop { obj: o, .. } => o == obj,
+        Expr::Unary { expr, .. } => refs_props_only_at(expr, obj),
+        Expr::Binary { lhs, rhs, .. } => {
+            refs_props_only_at(lhs, obj) && refs_props_only_at(rhs, obj)
+        }
+        Expr::Var(_) | Expr::IntLit(_) | Expr::FloatLit(_) | Expr::BoolLit(_) | Expr::Inf => true,
+        _ => false,
+    }
+}
+
+/// Rewrite property accesses on `from` to accesses on `to` (the push→pull
+/// re-orientation: the relaxation source moves from the thread vertex to the
+/// reverse-loop variable).
+fn retarget_props(e: &Expr, from: &str, to: &str) -> Expr {
+    match e {
+        Expr::Prop { obj, prop } if obj == from => {
+            Expr::Prop { obj: to.to_string(), prop: prop.clone() }
+        }
+        Expr::Unary { op, expr } => {
+            Expr::Unary { op: *op, expr: Box::new(retarget_props(expr, from, to)) }
+        }
+        Expr::Binary { op, lhs, rhs } => Expr::Binary {
+            op: *op,
+            lhs: Box::new(retarget_props(lhs, from, to)),
+            rhs: Box::new(retarget_props(rhs, from, to)),
+        },
+        other => other.clone(),
+    }
+}
+
+/// Derive the **pull variant** of a push-relaxation kernel body, or `None`
+/// when the body is not mechanically re-orientable.
+///
+/// The push shape `for w in neighbors(v): MinMax(dist[w], f(v)) + marks` is
+/// rewritten to `for w in nodes_to(v) [if guard(w)]: MinMax(dist[v], f(w)) +
+/// marks on v` — same edges visited, each relaxation landing on the thread's
+/// own vertex, with the old thread guard becoming the reverse-loop filter.
+/// Admissible only when the compare and guard read properties at the thread
+/// vertex alone and every extra update stores a literal to the neighbor:
+/// notably a *weighted* relaxation (SSSP's `e.weight`) is NOT derivable,
+/// because device buffers carry no `rev_edge_id` map from a reverse slot
+/// back to its forward edge — the interpreter pulls weighted relaxations,
+/// generated kernels cannot.
+pub fn pull_variant(body: &KernelBody) -> Option<KernelBody> {
+    let tv = body.thread_var.as_str();
+    let [KernelOp::NeighborLoop { var, of, reverse: false, bfs: None, filter: None, body: inner }] =
+        &body.ops[..]
+    else {
+        return None;
+    };
+    if of != tv {
+        return None;
+    }
+    let [KernelOp::MinMax { kind, slot, obj, ty, compare, extra, or_flag }] = &inner[..] else {
+        return None;
+    };
+    if obj != var || !refs_props_only_at(compare, tv) {
+        return None;
+    }
+    if let Some(g) = &body.guard {
+        if !refs_props_only_at(g, tv) {
+            return None;
+        }
+    }
+    let extra_ok = extra.iter().all(|(t, v)| {
+        matches!(t, KTarget::Prop { obj, .. } if obj == var)
+            && matches!(v, Expr::IntLit(_) | Expr::FloatLit(_) | Expr::BoolLit(_))
+    });
+    if !extra_ok {
+        return None;
+    }
+    let pulled = KernelOp::MinMax {
+        kind: *kind,
+        slot: *slot,
+        obj: tv.to_string(),
+        ty: *ty,
+        compare: retarget_props(compare, tv, var),
+        extra: extra
+            .iter()
+            .map(|(t, v)| {
+                let KTarget::Prop { slot, .. } = t else { unreachable!() };
+                (KTarget::Prop { slot: *slot, obj: tv.to_string() }, v.clone())
+            })
+            .collect(),
+        or_flag: *or_flag,
+    };
+    Some(KernelBody {
+        thread_var: body.thread_var.clone(),
+        guard: None,
+        ops: vec![KernelOp::NeighborLoop {
+            var: var.clone(),
+            of: tv.to_string(),
+            reverse: true,
+            bfs: None,
+            filter: body.guard.as_ref().map(|g| retarget_props(g, tv, var)),
+            body: vec![pulled],
+        }],
+    })
+}
+
 /// Context for one kernel-body lowering.
 pub(crate) struct KernelLower<'a> {
     pub tf: &'a TypedFunction,
@@ -486,5 +592,74 @@ mod tests {
         ));
         let kb = KernelBody { thread_var: "v".into(), guard: None, ops };
         assert_eq!(kb.atomic_prop_slots(), vec![props.slot("sigma").unwrap()]);
+    }
+
+    #[test]
+    fn cc_relax_has_a_pull_variant() {
+        let (tf, props) = lowered("cc.sp");
+        let Stmt::For { body, .. } = first_forall(&tf.func.body) else { unreachable!() };
+        let cx = KernelLower { tf: &tf, props: &props, bfs: None, or_flag: true };
+        let ops = lower_kernel_body(body, &cx);
+        let guard = Expr::Prop { obj: "v".into(), prop: "modified".into() };
+        let push = KernelBody { thread_var: "v".into(), guard: Some(guard), ops };
+        let pull = pull_variant(&push).expect("weight-free relax is re-orientable");
+        assert!(pull.guard.is_none(), "pull scans every vertex; the guard moves inward");
+        let [KernelOp::NeighborLoop { var, of, reverse, bfs, filter, body }] = &pull.ops[..]
+        else {
+            panic!("expected a single reverse loop, got {:?}", pull.ops);
+        };
+        assert_eq!((var.as_str(), of.as_str()), ("nbr", "v"));
+        assert!(*reverse && bfs.is_none());
+        assert!(
+            matches!(filter, Some(Expr::Prop { obj, prop }) if obj == "nbr" && prop == "modified"),
+            "thread guard becomes an in-neighbor filter, got {filter:?}"
+        );
+        let [KernelOp::MinMax { kind, slot, obj, compare, extra, or_flag, .. }] = &body[..]
+        else {
+            panic!("expected a single MinMax, got {body:?}");
+        };
+        assert_eq!(*kind, MinMax::Min);
+        assert_eq!(*slot, props.slot("comp").unwrap());
+        assert_eq!(obj, "v", "pull relaxes into the thread's own vertex");
+        assert!(
+            matches!(compare, Expr::Prop { obj, prop } if obj == "nbr" && prop == "comp"),
+            "compare reads the in-neighbor, got {compare:?}"
+        );
+        assert!(*or_flag);
+        assert!(matches!(
+            &extra[..],
+            [(KTarget::Prop { slot, obj }, Expr::BoolLit(true))]
+                if *slot == props.slot("modified_nxt").unwrap() && obj == "v"
+        ));
+    }
+
+    #[test]
+    fn weighted_relax_has_no_pull_variant() {
+        // SSSP's compare reads e.weight through a forward edge id; device
+        // buffers carry no rev_edge_id, so the body must stay push-only.
+        let (tf, props) = lowered("sssp.sp");
+        let Stmt::For { body, .. } = first_forall(&tf.func.body) else { unreachable!() };
+        let cx = KernelLower { tf: &tf, props: &props, bfs: None, or_flag: true };
+        let ops = lower_kernel_body(body, &cx);
+        let push = KernelBody { thread_var: "v".into(), guard: None, ops };
+        assert!(pull_variant(&push).is_none());
+    }
+
+    #[test]
+    fn pull_variant_rejects_filtered_and_reverse_loops() {
+        let (tf, props) = lowered("cc.sp");
+        let Stmt::For { body, .. } = first_forall(&tf.func.body) else { unreachable!() };
+        let cx = KernelLower { tf: &tf, props: &props, bfs: None, or_flag: true };
+        let ops = lower_kernel_body(body, &cx);
+        let mut filtered = KernelBody { thread_var: "v".into(), guard: None, ops };
+        let KernelOp::NeighborLoop { filter, .. } = &mut filtered.ops[0] else { unreachable!() };
+        *filter = Some(Expr::BoolLit(true));
+        assert!(pull_variant(&filtered).is_none(), "an existing filter pins the direction");
+        let KernelOp::NeighborLoop { filter, reverse, .. } = &mut filtered.ops[0] else {
+            unreachable!()
+        };
+        *filter = None;
+        *reverse = true;
+        assert!(pull_variant(&filtered).is_none(), "already-pull bodies are not re-derived");
     }
 }

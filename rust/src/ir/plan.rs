@@ -52,8 +52,8 @@
 use crate::dsl::ast::{Expr, IterSource, LValue, MinMax, ReduceOp, Stmt, Type, UnOp};
 use crate::dsl::diag::DslError;
 use crate::ir::kernel::{
-    lower_kernel_body, resolve_filter, simplify_bool_cmp, BfsDir, KCell, KTarget, KernelBody,
-    KernelLower, KernelOp,
+    lower_kernel_body, pull_variant, resolve_filter, simplify_bool_cmp, BfsDir, KCell, KTarget,
+    KernelBody, KernelLower, KernelOp,
 };
 use crate::ir::slots::Interner;
 use crate::ir::{IrProgram, Kernel, KernelKind, ScalarTy};
@@ -311,6 +311,10 @@ pub struct KernelPlan {
     /// property slots this body updates atomically, sorted — dialects with
     /// typed atomics (Metal, WGSL) declare these buffers differently
     pub atomic_props: Vec<u32>,
+    /// the pull-direction twin of `body`, when the schedule pass derived one
+    /// ([`crate::ir::kernel::pull_variant`]): renderers emit a second
+    /// `{name}_pull` kernel and a host-side `STARPLAT_DIRECTION` switch
+    pub pull_body: Option<KernelBody>,
 }
 
 impl KernelPlan {
@@ -350,6 +354,81 @@ impl KernelPlan {
             .into_iter()
             .filter(|p| !matches!(p, KernelParam::Prop(s) if Some(*s) == level))
             .collect()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Schedule plan
+// ---------------------------------------------------------------------------
+
+/// Why a kernel did not get a pull variant. Carried in the manifest so the
+/// decision (not just its absence) is pinned across backends.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PushOnly {
+    /// inits ride on the host schedule; nothing to re-orient
+    Init,
+    /// one-shot forall — a runtime direction switch buys nothing
+    NotIterated,
+    /// weighted relaxation: device buffers carry no `rev_edge_id` map, so
+    /// the weight of a reverse slot cannot be read (the interpreter pulls
+    /// these; generated kernels cannot)
+    Weighted,
+    /// body shape is not a mechanically re-orientable relaxation
+    Shape,
+}
+
+impl PushOnly {
+    fn token(self) -> &'static str {
+        match self {
+            PushOnly::Init => "init",
+            PushOnly::NotIterated => "not-iterated",
+            PushOnly::Weighted => "weighted (no rev_edge_id)",
+            PushOnly::Shape => "shape",
+        }
+    }
+}
+
+/// One kernel's schedule decision: which traversal directions it can run in
+/// and whether its relaxation is delta-stepping eligible (interpreter only —
+/// text backends always emit the sweep).
+#[derive(Clone, Debug)]
+pub struct ScheduleChoice {
+    pub kernel: usize,
+    /// `None` means both directions: the renderer emits push and pull
+    /// kernels plus a host-side runtime switch on `STARPLAT_DIRECTION`
+    pub push_only: Option<PushOnly>,
+    /// weighted relaxation in a host loop — the interpreter may route it
+    /// through bucketed delta-stepping (`STARPLAT_DELTA`)
+    pub delta_eligible: bool,
+}
+
+/// The function's traversal-schedule decisions, recorded once at plan time
+/// so every backend (and the bench harness) reads the same verdicts.
+#[derive(Clone, Debug, Default)]
+pub struct SchedulePlan {
+    pub choices: Vec<ScheduleChoice>,
+    /// an `iterateInBFS` is present: the interpreter runs it
+    /// direction-optimized (push/pull per level); text backends keep the
+    /// level-synchronous push skeleton
+    pub bfs_direction_optimized: bool,
+}
+
+/// Classify a lowered body as a relaxation sweep: a single forward
+/// unfiltered neighbor loop over the thread vertex whose payload is one
+/// `MinMax` (weight-free) or an edge decl plus one `MinMax` (weighted).
+fn relax_shape(body: &KernelBody) -> Option<bool /* weighted */> {
+    let [KernelOp::NeighborLoop { of, reverse: false, bfs: None, filter: None, body: inner, .. }] =
+        &body.ops[..]
+    else {
+        return None;
+    };
+    if of != &body.thread_var {
+        return None;
+    }
+    match &inner[..] {
+        [KernelOp::MinMax { .. }] => Some(false),
+        [KernelOp::Decl { .. }, KernelOp::MinMax { .. }] => Some(true),
+        _ => None,
     }
 }
 
@@ -631,6 +710,8 @@ pub struct DevicePlan {
     pub fixed_points: Vec<FixedPointPlan>,
     /// iterateInBFS skeletons in program order
     pub bfs_loops: Vec<BfsPlan>,
+    /// per-kernel traversal-schedule decisions (push/pull/delta)
+    pub schedule: SchedulePlan,
     /// the complete host-statement schedule (prologue, body, epilogue);
     /// renderers consume this instead of walking the AST for host syntax
     pub host_ops: Vec<HostOp>,
@@ -659,12 +740,6 @@ impl DevicePlan {
                 Type::SetN(_) => HostParam::Set { name: p.name.clone() },
                 t => HostParam::Scalar { name: p.name.clone(), ty: ScalarTy::of(t) },
             });
-        }
-
-        let mut graph_arrays = vec![GraphArray::Offsets, GraphArray::EdgeList];
-        if ir.kernels.iter().any(|k| k.uses.uses_in_edges) {
-            graph_arrays.push(GraphArray::RevOffsets);
-            graph_arrays.push(GraphArray::SrcList);
         }
 
         let mut device_resident: Vec<u32> = ir
@@ -703,6 +778,42 @@ impl DevicePlan {
             kernels[id].body = Some(body);
         }
 
+        // Schedule pass: decide per kernel which traversal directions it can
+        // run in. A pull variant flips a host-loop relaxation onto the
+        // reverse CSR, so it must run before `graph_arrays` is fixed below.
+        let mut choices = Vec::with_capacity(kernels.len());
+        for k in &mut kernels {
+            let (push_only, delta_eligible) = match &k.body {
+                None => (Some(PushOnly::Init), false),
+                Some(b) => {
+                    let weighted = relax_shape(b);
+                    if !k.in_host_loop {
+                        (Some(PushOnly::NotIterated), false)
+                    } else if let Some(pull) = pull_variant(b) {
+                        k.pull_body = Some(pull);
+                        k.uses_in_edges = true;
+                        (None, false)
+                    } else {
+                        match weighted {
+                            Some(true) => (Some(PushOnly::Weighted), true),
+                            _ => (Some(PushOnly::Shape), false),
+                        }
+                    }
+                }
+            };
+            choices.push(ScheduleChoice { kernel: k.id, push_only, delta_eligible });
+        }
+        let schedule = SchedulePlan {
+            choices,
+            bfs_direction_optimized: !bfs_loops.is_empty(),
+        };
+
+        let mut graph_arrays = vec![GraphArray::Offsets, GraphArray::EdgeList];
+        if kernels.iter().any(|k| k.uses_in_edges) {
+            graph_arrays.push(GraphArray::RevOffsets);
+            graph_arrays.push(GraphArray::SrcList);
+        }
+
         // a body ending in `return <scalar>` (e.g. TC) must run the epilogue
         // first, or every free would be emitted as unreachable code
         let trailing_return = match body_ops.last() {
@@ -734,6 +845,7 @@ impl DevicePlan {
             kernels,
             fixed_points,
             bfs_loops,
+            schedule,
             host_ops,
         })
     }
@@ -1020,6 +1132,41 @@ impl DevicePlan {
         out
     }
 
+    /// Stable, backend-neutral description of the traversal-schedule
+    /// decisions — the fourth manifest block. One line per kernel records
+    /// its direction verdict (and why pull is unavailable, when it is), and
+    /// derived pull bodies are printed in full so the re-orientation itself
+    /// is pinned. `tests/host_schedule_conformance.rs` asserts the block is
+    /// byte-identical across all seven text backends.
+    pub fn schedule_manifest(&self) -> Vec<String> {
+        let mut out = vec![format!("==== schedule plan: {} ====", self.func)];
+        out.push(format!(
+            "bfs: {}",
+            if self.schedule.bfs_direction_optimized {
+                "direction-optimizing (interp switches push/pull per level)"
+            } else {
+                "none"
+            }
+        ));
+        for c in &self.schedule.choices {
+            let k = &self.kernels[c.kernel];
+            let dir = match c.push_only {
+                Some(r) => format!("push ({})", r.token()),
+                None => "push+pull (runtime switch `STARPLAT_DIRECTION`)".to_string(),
+            };
+            let delta =
+                if c.delta_eligible { " delta=eligible (`STARPLAT_DELTA`)" } else { "" };
+            out.push(format!("kernel[{}] {} : {dir}{delta}", k.id, k.name));
+            if let Some(b) = &k.pull_body {
+                out.push(format!("  pull thread={} {{", b.thread_var));
+                self.kernel_ops_block(&b.ops, 2, &mut out);
+                out.push("  }".to_string());
+            }
+        }
+        out.push("==== end schedule plan ====".to_string());
+        out
+    }
+
     fn kernel_ops_block(&self, ops: &[KernelOp], depth: usize, out: &mut Vec<String>) {
         let pad = "  ".repeat(depth);
         let buf = |s: u32| format!("buffer[{s}] {}", self.prop_name(s));
@@ -1214,6 +1361,7 @@ fn kernel_plan(ir: &IrProgram, props: &PropTable, k: &Kernel) -> KernelPlan {
         defer_to_loop_exit: transfers.defer_to_loop_exit,
         body: None,
         atomic_props: Vec::new(),
+        pull_body: None,
     }
 }
 
@@ -1431,6 +1579,58 @@ mod tests {
         assert!(a.iter().any(|l| l.contains("buffer[0] dist")));
         assert!(a.iter().any(|l| l.contains("fixedPoint[0] flag=`modified`")));
         assert_eq!(a.last().unwrap(), "==== end device plan ====");
+    }
+
+    #[test]
+    fn cc_relax_gets_a_pull_body_and_the_reverse_csr() {
+        let plan = plan_of("cc.sp");
+        let relax = plan
+            .kernels
+            .iter()
+            .find(|k| k.in_host_loop && k.body.is_some())
+            .expect("cc has a host-loop relax kernel");
+        let pull = relax.pull_body.as_ref().expect("weight-free relax pulls");
+        assert!(matches!(&pull.ops[0], KernelOp::NeighborLoop { reverse: true, .. }));
+        assert!(relax.uses_in_edges, "pull variant flips the kernel onto the reverse CSR");
+        assert_eq!(
+            plan.graph_arrays,
+            vec![
+                GraphArray::Offsets,
+                GraphArray::EdgeList,
+                GraphArray::RevOffsets,
+                GraphArray::SrcList
+            ],
+            "graph H2D must ship the reverse CSR once a pull body exists"
+        );
+        let c = &plan.schedule.choices[relax.id];
+        assert!(c.push_only.is_none() && !c.delta_eligible);
+    }
+
+    #[test]
+    fn sssp_relax_is_push_only_but_delta_eligible() {
+        let plan = plan_of("sssp.sp");
+        let c = &plan.schedule.choices[1];
+        assert_eq!(c.push_only, Some(PushOnly::Weighted));
+        assert!(c.delta_eligible);
+        assert!(plan.kernels[1].pull_body.is_none());
+        // and the decision must not drag the reverse CSR onto the device
+        assert_eq!(plan.graph_arrays, vec![GraphArray::Offsets, GraphArray::EdgeList]);
+    }
+
+    #[test]
+    fn schedule_manifest_is_deterministic_and_prints_pull_bodies() {
+        let a = plan_of("cc.sp").schedule_manifest();
+        let b = plan_of("cc.sp").schedule_manifest();
+        assert_eq!(a, b);
+        assert!(a[0].contains("schedule plan: Compute_CC"));
+        assert!(a.iter().any(|l| l.contains("push+pull (runtime switch `STARPLAT_DIRECTION`)")));
+        assert!(a.iter().any(|l| l.contains("for nbr in in(v)")), "pull body printed: {a:?}");
+        assert_eq!(a.last().unwrap(), "==== end schedule plan ====");
+        let s = plan_of("sssp.sp").schedule_manifest();
+        assert!(s.iter().any(|l| l.contains("push (weighted (no rev_edge_id))")));
+        assert!(s.iter().any(|l| l.contains("delta=eligible (`STARPLAT_DELTA`)")));
+        let bfs = plan_of("bfs.sp").schedule_manifest();
+        assert!(bfs[1].contains("direction-optimizing"));
     }
 
     #[test]

@@ -399,12 +399,22 @@ fn fnv1a(bytes: &[u8]) -> u64 {
 
 /// Order-insensitive fingerprint of an argument set: names are sorted so
 /// `Args` built in different insertion orders hash identically.
+///
+/// Every variable-length field (names, set payloads) is length-prefixed so
+/// field boundaries are unambiguous: without the prefixes, bytes that end a
+/// name and bytes that start a value can trade places across two different
+/// argument sets and still serialize identically, silently sharing a cache
+/// entry between distinct invocations.
 fn fingerprint(args: &Args) -> u64 {
     let mut buf: Vec<u8> = Vec::new();
+    let put_name = |buf: &mut Vec<u8>, name: &str| {
+        buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        buf.extend_from_slice(name.as_bytes());
+    };
     let mut scalars: Vec<_> = args.scalars.iter().collect();
     scalars.sort_by(|a, b| a.0.cmp(b.0));
     for (name, v) in scalars {
-        buf.extend_from_slice(name.as_bytes());
+        put_name(&mut buf, name);
         match v {
             Val::I(x) => {
                 buf.push(b'i');
@@ -421,7 +431,8 @@ fn fingerprint(args: &Args) -> u64 {
     sets.sort_by(|a, b| a.0.cmp(b.0));
     for (name, vs) in sets {
         buf.push(b's');
-        buf.extend_from_slice(name.as_bytes());
+        put_name(&mut buf, name);
+        buf.extend_from_slice(&(vs.len() as u32).to_le_bytes());
         for v in vs {
             buf.extend_from_slice(&v.to_le_bytes());
         }
@@ -453,5 +464,38 @@ mod tests {
         // pinned reference value: the cache key must not drift across builds
         assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
         assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+    }
+
+    // The next three cases are crafted collisions of the unprefixed
+    // serialization: each pair produced byte-identical buffers before names
+    // and set payloads were length-prefixed.
+
+    #[test]
+    fn fingerprint_separates_adjacent_set_names() {
+        // {"a": [], "b": []} vs {"asb": []}: without a name-length prefix the
+        // second set's 's' marker and name fuse into one longer name.
+        let split = Args::default().set("a", vec![]).set("b", vec![]);
+        let fused = Args::default().set("asb", vec![]);
+        assert_ne!(fingerprint(&split), fingerprint(&fused));
+    }
+
+    #[test]
+    fn fingerprint_separates_set_values_from_set_headers() {
+        // 25203 is 0x6273 — little-endian it spells "sb\0\0", i.e. exactly the
+        // marker + name + two pad bytes of a following set("b\0\0", []).
+        let a = Args::default().set("a", vec![5, 25203]);
+        let b = Args::default().set("a", vec![5]).set("b\0\0", vec![]);
+        assert_ne!(fingerprint(&a), fingerprint(&b));
+    }
+
+    #[test]
+    fn fingerprint_separates_scalar_names_from_values() {
+        // Bool scalars serialize as name + 'b' + byte, so {"a": true,
+        // "ab": true} and {"ab\x01ab": true} were byte-identical unprefixed.
+        let pair = Args::default()
+            .scalar("a", Val::B(true))
+            .scalar("ab", Val::B(true));
+        let fused = Args::default().scalar("ab\u{1}ab", Val::B(true));
+        assert_ne!(fingerprint(&pair), fingerprint(&fused));
     }
 }

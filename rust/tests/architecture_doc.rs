@@ -1,4 +1,4 @@
-//! docs/ARCHITECTURE.md embeds the three SSSP manifest blocks as worked
+//! docs/ARCHITECTURE.md embeds the four SSSP manifest blocks as worked
 //! examples; this suite pins them to the generator's actual output so the
 //! document cannot drift from the code. Each excerpt sits in a fenced code
 //! block immediately after an HTML marker comment
@@ -68,6 +68,15 @@ fn kernel_ops_excerpt_matches_generator() {
         block_after(&doc(), "<!-- manifest:sssp:kernel -->"),
         sssp_plan().kernel_manifest(),
         "docs/ARCHITECTURE.md kernel-ops excerpt drifted from DevicePlan::kernel_manifest()"
+    );
+}
+
+#[test]
+fn schedule_plan_excerpt_matches_generator() {
+    assert_eq!(
+        block_after(&doc(), "<!-- manifest:sssp:schedule -->"),
+        sssp_plan().schedule_manifest(),
+        "docs/ARCHITECTURE.md schedule-plan excerpt drifted from DevicePlan::schedule_manifest()"
     );
 }
 

@@ -4,7 +4,7 @@
 //! the atomic idioms are schedule-independent, and the fixedPoint frontier
 //! fast path (SSSP/CC) computes exactly what the dense sweeps compute.
 
-use starplat::backends::interp::{self, env::Val, Args, ExecOpts};
+use starplat::backends::interp::{self, env::Val, Args, DeltaMode, Direction, ExecOpts};
 use starplat::coordinator::driver::{load_program, Algo};
 use starplat::dsl::parser::parse;
 use starplat::graph::csr::Graph;
@@ -145,6 +145,86 @@ fn pull_fixedpoint_parity_and_frontier_dense_agreement() {
                     g.name
                 );
             }
+        }
+    }
+}
+
+/// The adaptive scheduler is a pure work-order heuristic: every point in
+/// {push, pull, auto} × {sweep, delta-stepping} must compute exactly what
+/// the 1-thread dense oracle computes, across worker counts. SSSP exercises
+/// the weighted relaxation (delta-eligible, interpreter-pullable); CC the
+/// unweighted one (pull-eligible, delta silently inapplicable).
+#[test]
+fn schedule_cross_parity() {
+    let mut rng = Rng::new(0xD1CE);
+    for g in test_graphs() {
+        for algo in [Algo::Sssp, Algo::Cc] {
+            let tf = load_program(algo).unwrap();
+            let (args, prop) = match algo {
+                Algo::Sssp => {
+                    (Args::default().node("src", rng.range(0, g.num_nodes()) as u32), "dist")
+                }
+                _ => (Args::default(), "comp"),
+            };
+            // dense schedule at 1 thread is the ground truth
+            let seq = ExecOpts { threads: 1, frontier: false, ..Default::default() };
+            let want = interp::run_with_opts(&tf, &g, &args, seq).unwrap().prop_i64(prop);
+            for t in THREADS {
+                for dir in [Direction::Push, Direction::Pull, Direction::Auto] {
+                    for delta in [DeltaMode::Off, DeltaMode::Auto] {
+                        let opts = ExecOpts {
+                            threads: t,
+                            direction: Some(dir),
+                            delta: Some(delta),
+                            ..Default::default()
+                        };
+                        let out = interp::run_with_opts(&tf, &g, &args, opts).unwrap();
+                        let ctx = format!(
+                            "{algo:?} on {} with {t} threads dir={dir:?} delta={delta:?}",
+                            g.name
+                        );
+                        assert_eq!(out.prop_i64(prop), want, "{ctx}");
+                        // a forced direction must actually be honored: pull
+                        // rounds run unless the delta schedule replaced the
+                        // frontier loop outright (weighted relax + delta on)
+                        let delta_ran = algo == Algo::Sssp && delta == DeltaMode::Auto;
+                        assert_eq!(out.stats.delta_used, delta_ran, "{ctx}");
+                        if dir == Direction::Pull && !delta_ran {
+                            assert!(out.stats.pull_rounds > 0, "{ctx}: pull forced but never ran");
+                        }
+                        if dir == Direction::Push {
+                            assert_eq!(out.stats.pull_rounds, 0, "{ctx}: push forced but pulled");
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Forcing pull must be a no-op when no kernel admits a reverse-CSR
+/// schedule: PULL_CC's relaxation already writes *in*-neighbors (not the
+/// canonical push-relax shape), so no pull twin exists and the engine must
+/// stay push — pinned by the `pull_rounds` counter staying at zero while
+/// results still match the dense oracle.
+#[test]
+fn forced_pull_is_ignored_without_an_eligible_kernel() {
+    let fns = parse(PULL_CC).unwrap();
+    let tf = check_function(&fns[0]).unwrap();
+    for g in test_graphs() {
+        let args = Args::default();
+        let seq = ExecOpts { threads: 1, frontier: false, ..Default::default() };
+        let want = interp::run_with_opts(&tf, &g, &args, seq).unwrap().prop_i64("comp");
+        for t in THREADS {
+            let opts =
+                ExecOpts { threads: t, direction: Some(Direction::Pull), ..Default::default() };
+            let out = interp::run_with_opts(&tf, &g, &args, opts).unwrap();
+            assert_eq!(
+                out.stats.pull_rounds, 0,
+                "{} with {t} threads: pull forced but no reverse-CSR-eligible kernel",
+                g.name
+            );
+            assert_eq!(out.prop_i64("comp"), want, "{} with {t} threads", g.name);
         }
     }
 }

@@ -26,13 +26,26 @@ additionally summarizes the **frontier-path speedup** vs the previous run
 headline number for the persistent pool's cheap-dispatch claim — again
 informational only.
 
+Cells from the adaptive scheduler (frontier-engine-v4, PR 8) may carry
+`schedule`, `direction_switches`, `pull_rounds`, `delta`, and the
+forced-direction timings `secs_push`/`secs_pull`. Cells with both forced
+timings feed an informational **push-vs-pull win/loss table** — which static
+direction won, and how close the auto policy came to the better one. Like
+every optional column it never participates in the regression decision.
+
 The step is **blocking**: with the spread column landed (PR 4) and worst-case
 runner variance observed comfortably under the threshold, a >threshold
 per-cell regression exits 1 and fails CI. Set `BENCH_TREND_ADVISORY=1` in the
 environment to demote the step back to report-only (the escape hatch for a
 knowingly-accepted regression or a noisy runner). Infrastructure failure
-modes — missing or unparsable artifacts — always exit 0: only a real,
-measured regression may block.
+modes — missing or unparsable artifacts, and cells whose `secs` is absent or
+zero (a broken or skipped measurement, rendered `n/a`) — always exit 0: only
+a real, measured regression may block.
+
+`bench_trend.py --selftest` runs a built-in fixture through the comparison
+(missing-`secs` cell, zero-`secs` cell, push/pull duel, one real regression)
+and exits nonzero if the guards or the gate misbehave; CI runs it before the
+real comparison so a broken trend script can't silently pass.
 """
 
 import json
@@ -101,16 +114,26 @@ def main(argv):
             spread_s = f"{spread:.1%}"
         else:
             spread_s = "—"
+        # a cell whose current `secs` is absent or zero is a broken or
+        # skipped measurement — an infrastructure problem, not a measured
+        # regression: render n/a and never let it reach the gate (or a
+        # divide / format crash)
+        cs = c.get("secs") or 0
+        cur_s = f"{cs:.4f}{fb_s}" if cs else "n/a"
         p = prev.get(key)
         if p is None or not p.get("secs"):
             print(f"| {key[0]} | {key[1]} | {key[2]} | — "
-                  f"| {c['secs']:.4f}{fb_s} | new | {spread_s} |")
+                  f"| {cur_s} | new | {spread_s} |")
             continue
-        delta = (c["secs"] - p["secs"]) / p["secs"]
+        if not cs:
+            print(f"| {key[0]} | {key[1]} | {key[2]} | {p['secs']:.4f} "
+                  f"| n/a | n/a | {spread_s} |")
+            continue
+        delta = (cs - p["secs"]) / p["secs"]
         flag = " ⚠️" if delta > threshold else ""
         print(
             f"| {key[0]} | {key[1]} | {key[2]} | {p['secs']:.4f} "
-            f"| {c['secs']:.4f}{fb_s} | {delta:+.1%}{flag} | {spread_s} |"
+            f"| {cur_s} | {delta:+.1%}{flag} | {spread_s} |"
         )
         if delta > threshold:
             regressions.append((key, delta))
@@ -134,6 +157,35 @@ def main(argv):
             f"geomean speedup over {len(ratios)} cell(s) "
             "(>1 is faster; informational)."
         )
+        print()
+    # push-vs-pull win/loss from the schedule columns (frontier-engine-v4):
+    # which static direction won each forced-direction cell, and how close
+    # the adaptive policy landed to the better one. Purely informational —
+    # the regression gate reads only `secs`.
+    duel = [(key, cur[key]) for key in sorted(cur)
+            if cur[key].get("secs_push") and cur[key].get("secs_pull")]
+    if duel:
+        print("#### Push vs pull (informational)")
+        print()
+        print("| algorithm | graph | mode | push s | pull s | winner "
+              "| auto s | auto vs best | switches |")
+        print("|---|---|---|---:|---:|---|---:|---:|---:|")
+        wins = {"push": 0, "pull": 0}
+        for key, c in duel:
+            ps, ls = c["secs_push"], c["secs_pull"]
+            winner = "push" if ps <= ls else "pull"
+            wins[winner] += 1
+            best = min(ps, ls)
+            a = c.get("secs") or 0
+            auto_s = f"{a:.4f}" if a else "n/a"
+            gap_s = f"{(a - best) / best:+.1%}" if a else "n/a"
+            sw = c.get("direction_switches")
+            sw_s = "—" if sw is None else f"{int(sw)}"
+            print(f"| {key[0]} | {key[1]} | {key[2]} | {ps:.4f} | {ls:.4f} "
+                  f"| {winner} | {auto_s} | {gap_s} | {sw_s} |")
+        print()
+        print(f"Direction wins: push {wins['push']}, pull {wins['pull']} "
+              "(informational; never gates).")
         print()
     if spreads:
         worst_key, worst = max(spreads, key=lambda kv: kv[1])
@@ -161,5 +213,55 @@ def main(argv):
     return 0
 
 
+def selftest():
+    """Fixture check: broken cells must render n/a and never gate; a real
+    regression must still gate; the push/pull table must not crash on a
+    zero-`secs` auto cell. Exits 0 on success, raises on failure."""
+    import tempfile
+
+    prev = {"bench_n": 1, "threads_par": 2, "cells": [
+        {"algorithm": "bfs", "graph": "road", "mode": "seq", "secs": 1.0},
+        {"algorithm": "cc", "graph": "road", "mode": "seq", "secs": 2.0},
+        {"algorithm": "pr", "graph": "road", "mode": "seq", "secs": 1.0},
+    ]}
+    broken_cur = {"bench_n": 1, "threads_par": 2, "cells": [
+        # `secs` missing entirely: must render n/a, not KeyError
+        {"algorithm": "bfs", "graph": "road", "mode": "seq"},
+        # `secs` zero, with a push/pull duel attached: must render n/a in
+        # both tables, not divide by zero, and never gate
+        {"algorithm": "cc", "graph": "road", "mode": "seq", "secs": 0.0,
+         "secs_push": 0.5, "secs_pull": 0.7, "schedule": "auto",
+         "direction_switches": 3, "pull_rounds": 2, "delta": False},
+        {"algorithm": "pr", "graph": "road", "mode": "seq", "secs": 1.0},
+    ]}
+    regressed_cur = {"bench_n": 1, "threads_par": 2, "cells": [
+        {"algorithm": "bfs", "graph": "road", "mode": "seq", "secs": 1.0},
+        {"algorithm": "cc", "graph": "road", "mode": "seq", "secs": 2.0},
+        # +100%: far past any sane threshold, must exit 1
+        {"algorithm": "pr", "graph": "road", "mode": "seq", "secs": 2.0},
+    ]}
+    advisory = os.environ.pop("BENCH_TREND_ADVISORY", None)
+    try:
+        with tempfile.TemporaryDirectory() as d:
+            paths = {}
+            for name, report in [("prev", prev), ("broken", broken_cur),
+                                 ("regressed", regressed_cur)]:
+                paths[name] = os.path.join(d, name + ".json")
+                with open(paths[name], "w") as f:
+                    json.dump(report, f)
+            rc = main(["bench_trend.py", paths["prev"], paths["broken"]])
+            assert rc == 0, f"broken cells must not gate (exit {rc})"
+            rc = main(["bench_trend.py", paths["prev"], paths["regressed"]])
+            assert rc == 1, f"a real regression must gate (exit {rc})"
+    finally:
+        if advisory is not None:
+            os.environ["BENCH_TREND_ADVISORY"] = advisory
+    print()
+    print("selftest ok: n/a cells never gate, real regressions still do")
+    return 0
+
+
 if __name__ == "__main__":
+    if "--selftest" in sys.argv:
+        sys.exit(selftest())
     sys.exit(main(sys.argv))
