@@ -24,15 +24,24 @@
 //! is visible per cell, and SSSP cells get a `secs_delta` column (forced
 //! `STARPLAT_DELTA=auto`).
 //!
+//! Batched multi-source execution (frontier-engine-v5) adds a separate
+//! `batch_cells` table: for k ∈ {1, 8, 32, 64} roots, one
+//! `batch::run_batch_with_opts` traversal is timed against k independent
+//! runs of the same roots, yielding per-root amortized seconds and the
+//! batch speedup. The table is informational — it lives outside `cells` so
+//! the trend gate (keyed on algorithm/graph/mode `secs`) never sees it.
+//!
 //! Run: cargo run --release --example bench_interp
 //! Env: STARPLAT_BENCH_N (graph size knob, default 20000),
 //!      STARPLAT_THREADS (Par worker count),
 //!      STARPLAT_FRONTIER=0 (force the dense schedule everywhere),
 //!      STARPLAT_DIRECTION / STARPLAT_DELTA (see README knob table)
 
-use starplat::backends::interp::{self, compile, env::Val, Args, DeltaMode, Direction, ExecOpts};
+use starplat::backends::interp::{
+    self, batch, compile, env::Val, Args, DeltaMode, Direction, ExecOpts,
+};
 use starplat::coordinator::driver::{load_program, Algo};
-use starplat::graph::csr::Graph;
+use starplat::graph::csr::{Graph, Node};
 use starplat::util::json::Json;
 
 fn env_usize(name: &str, default: usize) -> usize {
@@ -200,11 +209,69 @@ fn main() -> anyhow::Result<()> {
         }
     }
 
+    // ---- batched multi-source cells (frontier-engine-v5) ----------------
+    // One shared traversal carrying k roots vs k independent runs of the
+    // same roots. Kept out of `cells` on purpose: the trend comparison keys
+    // on (algorithm, graph, mode) and gates on `secs`, and these timings
+    // must stay informational.
+    let mut batch_cells = Vec::new();
+    for g in &graphs {
+        for &algo in &[Algo::Bfs, Algo::Sssp] {
+            let tf = load_program(algo)?;
+            let opts = ExecOpts { threads: par_threads, ..ExecOpts::default() };
+            let prop = if algo == Algo::Bfs { "level" } else { "dist" };
+            // warmup (also surfaces errors once)
+            interp::run_with_opts(&tf, g, &bench_args(algo), opts.clone())?;
+            for k in [1usize, 8, 32, 64] {
+                let roots: Vec<Node> =
+                    (0..k).map(|i| ((i * g.num_nodes()) / k) as Node).collect();
+                // k independent single-root runs
+                let t0 = std::time::Instant::now();
+                for &r in &roots {
+                    interp::run_with_opts(&tf, g, &Args::default().node("src", r), opts.clone())?;
+                }
+                let secs_indep = t0.elapsed().as_secs_f64();
+                // one batched traversal carrying every root
+                let t0 = std::time::Instant::now();
+                let outs =
+                    batch::run_batch_with_opts(&tf, g, &Args::default(), "src", &roots, &opts);
+                let secs_batch = t0.elapsed().as_secs_f64();
+                let mut batched = 0u64;
+                for out in outs {
+                    let out = out?;
+                    batched += out.stats.batched_roots;
+                    // keep the timing honest: the outputs must be real
+                    assert_eq!(out.prop_i64(prop).len(), g.num_nodes());
+                }
+                let speedup = secs_indep / secs_batch;
+                println!(
+                    "{:>4?} on {:<5} [batch k={k:>2}]  batch {secs_batch:>9.4}s  indep {secs_indep:>9.4}s  ({speedup:.2}x)  amortized {:>9.6}s/root",
+                    algo,
+                    g.name,
+                    secs_batch / k as f64,
+                );
+                batch_cells.push(Json::obj(vec![
+                    ("algorithm", Json::Str(format!("{algo:?}").to_lowercase())),
+                    ("graph", Json::Str(g.name.clone())),
+                    ("k", Json::Num(k as f64)),
+                    ("secs_batch", Json::Num(secs_batch)),
+                    ("secs_indep", Json::Num(secs_indep)),
+                    ("amortized_secs", Json::Num(secs_batch / k as f64)),
+                    ("speedup", Json::Num(speedup)),
+                    // lane engagement: 0 would mean the engine fell back and
+                    // the cell timed the independent path twice
+                    ("batched_roots", Json::Num(batched as f64)),
+                ]));
+            }
+        }
+    }
+
     let report = Json::obj(vec![
-        ("engine", Json::Str("frontier-engine-v4".into())),
+        ("engine", Json::Str("frontier-engine-v5".into())),
         ("threads_par", Json::Num(par_threads as f64)),
         ("bench_n", Json::Num(n as f64)),
         ("cells", Json::Arr(cells)),
+        ("batch_cells", Json::Arr(batch_cells)),
     ]);
     std::fs::write("BENCH_interp.json", format!("{report}\n"))?;
     println!("\nwrote BENCH_interp.json");

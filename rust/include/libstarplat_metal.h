@@ -1,0 +1,94 @@
+// libstarplat_metal.h — shared helper header for the generated Metal
+// skeletons. The same file is included from both halves of a generated
+// program: the `kernels.metal` section (compiled by the Metal shader
+// compiler, __METAL_VERSION__ defined) and the `host.mm` section (metal-cpp
+// C++). Each side sees only its own half of this header.
+//
+// Build shape the host half assumes: `kernels.metal` is compiled into the
+// app's default library (`default.metallib`), so `pipelineFor` can resolve
+// every kernel by entry-point name at first use.
+#pragma once
+
+#if defined(__METAL_VERSION__)
+
+// ---- MSL side -------------------------------------------------------------
+
+#include <metal_stdlib>
+
+// generated kernels spell the DSL's INF as INT_MAX; metal_stdlib's
+// <metal_limits> provides it on current toolchains, older ones do not
+#ifndef INT_MAX
+#define INT_MAX 2147483647
+#endif
+
+// `is_an_edge` lookup: binary search of w in u's adjacency slice (the CSR
+// edge list is sorted within each row). Same contract as the CUDA/OpenCL
+// helper of the same name.
+static inline bool findNeighborSorted(int u, int w,
+                                      device const int* OA,
+                                      device const int* edgeList) {
+    int lo = OA[u];
+    int hi = OA[u + 1] - 1;
+    while (lo <= hi) {
+        int mid = (lo + hi) / 2;
+        if (edgeList[mid] == w) {
+            return true;
+        }
+        if (edgeList[mid] < w) {
+            lo = mid + 1;
+        } else {
+            hi = mid - 1;
+        }
+    }
+    return false;
+}
+
+#else  // !__METAL_VERSION__
+
+// ---- host side (metal-cpp) ------------------------------------------------
+
+#include <Metal/Metal.hpp>
+#include <cstdio>
+#include <cstdlib>
+#include <map>
+#include <string>
+
+// One compute pipeline per kernel entry point, compiled lazily from the
+// default library and cached: generated code calls `pipelineFor` at every
+// dispatch site, including inside fixedPoint/BFS host loops, so repeat
+// lookups must be cheap.
+inline MTL::ComputePipelineState* pipelineFor(MTL::Device* dev, const char* name) {
+    static std::map<std::string, MTL::ComputePipelineState*> cache;
+    auto it = cache.find(name);
+    if (it != cache.end()) {
+        return it->second;
+    }
+    static MTL::Library* lib = nullptr;
+    if (lib == nullptr) {
+        lib = dev->newDefaultLibrary();
+        if (lib == nullptr) {
+            std::fprintf(stderr,
+                         "libstarplat_metal: no default.metallib — compile the "
+                         "kernels.metal section into the app's default library\n");
+            std::abort();
+        }
+    }
+    NS::String* entry = NS::String::string(name, NS::UTF8StringEncoding);
+    MTL::Function* fn = lib->newFunction(entry);
+    if (fn == nullptr) {
+        std::fprintf(stderr, "libstarplat_metal: kernel `%s` not in default library\n", name);
+        std::abort();
+    }
+    NS::Error* err = nullptr;
+    MTL::ComputePipelineState* pipeline = dev->newComputePipelineState(fn, &err);
+    if (pipeline == nullptr) {
+        std::fprintf(stderr, "libstarplat_metal: pipeline for `%s` failed: %s\n", name,
+                     err != nullptr ? err->localizedDescription()->utf8String() : "unknown");
+        std::abort();
+    }
+    fn->release();
+    cache[name] = pipeline;
+    return pipeline;
+}
+
+#endif  // __METAL_VERSION__

@@ -1,0 +1,194 @@
+// libstarplat_webgpu.h — host-side helpers for the generated WGSL/Dawn
+// skeletons (the `host.cpp` section of a generated program). WebGPU's
+// ceremonies — async adapter/device acquisition, MapAsync readbacks,
+// per-pipeline bind-group layouts — live here once instead of being
+// repeated at every generated dispatch site.
+//
+// Build shape the helpers assume: the embedder splits the generated file's
+// `shaders.wgsl` section on its `// shader module: <name>` markers (each
+// module is a self-contained WGSL compilation unit with its own Params
+// struct and @group(0) bindings — see scripts/wgsl_smoke.py for the same
+// split) and calls `registerShaderModule(name, source)` for each before
+// invoking the generated entry point.
+#pragma once
+
+#include <webgpu/webgpu_cpp.h>
+
+#include <cstdio>
+#include <cstdlib>
+#include <cstring>
+#include <initializer_list>
+#include <map>
+#include <string>
+#include <vector>
+
+// ---- shader module registry -----------------------------------------------
+
+inline std::map<std::string, std::string>& starplatShaderSources() {
+    static std::map<std::string, std::string> sources;
+    return sources;
+}
+
+inline void registerShaderModule(const char* name, const char* wgsl) {
+    starplatShaderSources()[name] = wgsl;
+}
+
+// ---- device acquisition ---------------------------------------------------
+
+// Synchronous wrapper over the async adapter/device handshake; one device
+// is shared by every generated function in the process.
+inline wgpu::Device requestDevice() {
+    static wgpu::Device device = nullptr;
+    if (device) {
+        return device;
+    }
+    static wgpu::Instance instance = wgpu::CreateInstance();
+    wgpu::Adapter adapter = nullptr;
+    instance.RequestAdapter(
+        nullptr,
+        [](WGPURequestAdapterStatus status, WGPUAdapter a, const char* msg, void* userdata) {
+            if (status != WGPURequestAdapterStatus_Success) {
+                std::fprintf(stderr, "libstarplat_webgpu: adapter request failed: %s\n",
+                             msg != nullptr ? msg : "(no message)");
+                std::abort();
+            }
+            *static_cast<wgpu::Adapter*>(userdata) = wgpu::Adapter::Acquire(a);
+        },
+        &adapter);
+    while (!adapter) {
+        instance.ProcessEvents();
+    }
+    adapter.RequestDevice(
+        nullptr,
+        [](WGPURequestDeviceStatus status, WGPUDevice d, const char* msg, void* userdata) {
+            if (status != WGPURequestDeviceStatus_Success) {
+                std::fprintf(stderr, "libstarplat_webgpu: device request failed: %s\n",
+                             msg != nullptr ? msg : "(no message)");
+                std::abort();
+            }
+            *static_cast<wgpu::Device*>(userdata) = wgpu::Device::Acquire(d);
+        },
+        &device);
+    while (!device) {
+        instance.ProcessEvents();
+    }
+    return device;
+}
+
+// ---- buffers --------------------------------------------------------------
+
+inline wgpu::Buffer makeStorageBuffer(const wgpu::Device& device, size_t size) {
+    wgpu::BufferDescriptor desc;
+    desc.size = size;
+    desc.usage = wgpu::BufferUsage::Storage | wgpu::BufferUsage::CopySrc |
+                 wgpu::BufferUsage::CopyDst;
+    return device.CreateBuffer(&desc);
+}
+
+// Uniform params structs are tiny and rebuilt per dispatch; the generated
+// code destroys them right after submission.
+inline wgpu::Buffer makeUniformBuffer(const wgpu::Device& device, const void* data,
+                                      size_t size) {
+    wgpu::BufferDescriptor desc;
+    desc.size = (size + 3) & ~static_cast<size_t>(3);
+    desc.usage = wgpu::BufferUsage::Uniform | wgpu::BufferUsage::CopyDst;
+    wgpu::Buffer buf = device.CreateBuffer(&desc);
+    device.GetQueue().WriteBuffer(buf, 0, data, size);
+    return buf;
+}
+
+template <typename T>
+inline void fillBuffer(const wgpu::Device& /*device*/, const wgpu::Queue& queue,
+                       const wgpu::Buffer& buf, int count, T value) {
+    std::vector<T> host(static_cast<size_t>(count), value);
+    queue.WriteBuffer(buf, 0, host.data(), host.size() * sizeof(T));
+}
+
+// The MapAsync readback ceremony: copy into a MapRead staging buffer,
+// submit, poll to completion, memcpy out. Every §4.1 copy-out in the
+// generated host code funnels through here.
+inline void readBuffer(const wgpu::Device& device, const wgpu::Queue& queue,
+                       const wgpu::Buffer& src, void* dst, size_t size) {
+    size_t padded = (size + 3) & ~static_cast<size_t>(3);
+    wgpu::BufferDescriptor desc;
+    desc.size = padded;
+    desc.usage = wgpu::BufferUsage::MapRead | wgpu::BufferUsage::CopyDst;
+    wgpu::Buffer staging = device.CreateBuffer(&desc);
+    wgpu::CommandEncoder enc = device.CreateCommandEncoder();
+    enc.CopyBufferToBuffer(src, 0, staging, 0, padded);
+    wgpu::CommandBuffer cb = enc.Finish();
+    queue.Submit(1, &cb);
+    bool done = false;
+    staging.MapAsync(
+        wgpu::MapMode::Read, 0, padded,
+        [](WGPUBufferMapAsyncStatus status, void* userdata) {
+            if (status != WGPUBufferMapAsyncStatus_Success) {
+                std::fprintf(stderr, "libstarplat_webgpu: MapAsync failed (%d)\n",
+                             static_cast<int>(status));
+                std::abort();
+            }
+            *static_cast<bool*>(userdata) = true;
+        },
+        &done);
+    while (!done) {
+        device.Tick();  // Dawn; use wgpuInstanceProcessEvents on other runtimes
+    }
+    std::memcpy(dst, staging.GetConstMappedRange(0, padded), size);
+    staging.Unmap();
+    staging.Destroy();
+}
+
+// ---- pipelines and bind groups --------------------------------------------
+
+// One compute pipeline per kernel entry point, compiled lazily from the
+// registered WGSL source and cached: generated code resolves pipelines at
+// every dispatch site, including inside fixedPoint/BFS host loops.
+inline wgpu::ComputePipeline pipelineFor(const wgpu::Device& device, const char* name) {
+    static std::map<std::string, wgpu::ComputePipeline> cache;
+    auto it = cache.find(name);
+    if (it != cache.end()) {
+        return it->second;
+    }
+    auto& sources = starplatShaderSources();
+    auto src = sources.find(name);
+    if (src == sources.end()) {
+        std::fprintf(stderr,
+                     "libstarplat_webgpu: shader module `%s` not registered — call "
+                     "registerShaderModule before the generated entry point\n",
+                     name);
+        std::abort();
+    }
+    wgpu::ShaderModuleWGSLDescriptor wgsl;
+    wgsl.code = src->second.c_str();
+    wgpu::ShaderModuleDescriptor smDesc;
+    smDesc.nextInChain = &wgsl;
+    wgpu::ShaderModule module = device.CreateShaderModule(&smDesc);
+    wgpu::ComputePipelineDescriptor desc;
+    desc.compute.module = module;
+    desc.compute.entryPoint = name;
+    wgpu::ComputePipeline pipeline = device.CreateComputePipeline(&desc);
+    cache[name] = pipeline;
+    return pipeline;
+}
+
+// Bind group in the generated binding order: binding 0 is the uniform
+// params buffer, then the module's storage buffers in canonical parameter
+// order (the same order the module's @binding indices were emitted in).
+inline wgpu::BindGroup bindGroupFor(const wgpu::Device& device, const char* name,
+                                    std::initializer_list<wgpu::Buffer> buffers) {
+    std::vector<wgpu::BindGroupEntry> entries;
+    uint32_t binding = 0;
+    for (const wgpu::Buffer& buf : buffers) {
+        wgpu::BindGroupEntry e;
+        e.binding = binding++;
+        e.buffer = buf;
+        e.offset = 0;
+        e.size = buf.GetSize();
+        entries.push_back(e);
+    }
+    wgpu::BindGroupDescriptor desc;
+    desc.layout = pipelineFor(device, name).GetBindGroupLayout(0);
+    desc.entryCount = entries.size();
+    desc.entries = entries.data();
+    return device.CreateBindGroup(&desc);
+}

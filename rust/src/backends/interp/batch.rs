@@ -1,0 +1,603 @@
+//! Batched multi-source execution: many roots, one traversal.
+//!
+//! The service's traffic shape is thousands of BFS/SSSP requests against a
+//! handful of registered graphs, differing only in the root argument. Run
+//! independently, each request streams the whole CSR through the cache
+//! once; batched, up to 64 roots share every adjacency-row read:
+//!
+//! - **MS-BFS** ([`BatchPlan::BfsLevels`]): per-vertex `u64` bitmasks carry
+//!   one lane per root. `visited[w]` accumulates the lanes that have
+//!   reached `w`; a frontier vertex offers its whole frontier mask to each
+//!   neighbor in one `fetch_or`, and the bits that come back *new* assign
+//!   that lane's level. Discovery is level-synchronous, so every lane's
+//!   levels are exactly its single-source run's levels. Larger batches
+//!   tile in waves of ≤ 64 lanes.
+//! - **k-lane relaxation** ([`BatchPlan::KLane`]): the distance property
+//!   becomes k row-major lanes (one contiguous row per root) and per-vertex
+//!   `u64` active masks replace the bool flag ping-pong. One edge scan
+//!   CAS-mins every active lane; convergence is the all-lanes-quiet
+//!   fixpoint, which for the idempotent monotone Min relaxation is the same
+//!   unique fixpoint each single-source run reaches. (Min-label CC has no
+//!   root parameter; the service deduplicates those through the result
+//!   cache instead.)
+//!
+//! Programs that match neither shape — and roots that are out of range —
+//! run as ordinary independent [`super::run_with_opts`] calls, so
+//! [`run_batch_with_opts`] is *always* bit-for-bit faithful per root; the
+//! recognizers only decide how much sharing is safe. A `claim_gather`
+//! fault firing mid-wave abandons that wave the same way the sparse
+//! frontier schedule degrades: the wave's roots re-run independently (each
+//! run carrying the proven sparse→dense fallback machinery), counted in
+//! [`super::ExecStats::fallbacks`].
+//!
+//! Lane width comes from [`super::ExecOpts::batch`], falling back to the
+//! `STARPLAT_BATCH` environment knob (clamped to 1..=64; default 64).
+
+use super::compile::{self, CExpr, DevIter, DevStmt, HostStmt, Idx, ParamBind, Program};
+use super::env::PropData;
+use super::{frontier_par_min, run_with_opts, Args, ExecError, ExecOpts, ExecStats, Output};
+use crate::dsl::ast::BinOp;
+use crate::graph::csr::{Graph, Node};
+use crate::ir::ScalarTy;
+use crate::sema::TypedFunction;
+use crate::util::cancel::CancelToken;
+use crate::util::fault::{FaultPlan, FaultSite};
+use crate::util::pool::{self, Arena};
+use anyhow::{anyhow, bail, Result};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+
+/// Hard lane ceiling: one bit per root in the per-vertex `u64` masks.
+/// Batches beyond it tile in waves.
+pub const MAX_LANES: usize = 64;
+
+/// One distance/level row per lane, row-major: `rows[lane][vertex]`.
+type LaneRows = Vec<Vec<AtomicI64>>;
+
+/// Effective lane width: explicit [`ExecOpts::batch`], else the
+/// `STARPLAT_BATCH` environment knob (cached on first read), else 64.
+/// Always clamped to 1..=[`MAX_LANES`].
+pub fn batch_width(opts: &ExecOpts) -> usize {
+    static ENV: std::sync::OnceLock<usize> = std::sync::OnceLock::new();
+    let env = *ENV.get_or_init(|| {
+        std::env::var("STARPLAT_BATCH")
+            .ok()
+            .and_then(|v| v.parse::<usize>().ok())
+            .filter(|&w| w > 0)
+            .unwrap_or(MAX_LANES)
+    });
+    opts.batch.unwrap_or(env).clamp(1, MAX_LANES)
+}
+
+// ---------------------------------------------------------------------------
+// Shape recognition
+// ---------------------------------------------------------------------------
+
+/// How a compiled program may be batched across roots. Both shapes require
+/// that the *entire* observable output is reconstructible per lane: every
+/// property of the program is either the batched one, a flag pair that ends
+/// all-false, or the graph's own edge weights.
+#[derive(Clone, Copy, Debug)]
+pub enum BatchPlan {
+    /// `iterateInBFS` level assignment (bfs.sp): attach `level = init`,
+    /// seed `root.level = root_val`, then each BFS-DAG child stores
+    /// `parent.level + step`. Level-synchronous ⇒ `level(w) = root_val +
+    /// depth(w) · step`, reproducible from MS-BFS discovery alone.
+    BfsLevels { level: u32, init: i64, root_val: i64, step: i64 },
+    /// Canonical relaxation fixedPoint (sssp.sp): attach `dist = init` and
+    /// both flags false, seed `root.{flag, dist}`, relax to the Min
+    /// fixpoint. `weight == None` means weight-free relaxation (adds 0).
+    KLane { dist: u32, weight: Option<u32>, init: i64, root_val: i64 },
+}
+
+/// The scalar slot bound to `root_param`, if the program declares it.
+fn root_slot(prog: &Program, root_param: &str) -> Option<u32> {
+    prog.params.iter().find_map(|p| match p {
+        ParamBind::Scalar { name, slot, .. } if name == root_param => Some(*slot),
+        _ => None,
+    })
+}
+
+fn const_i(e: &CExpr) -> Option<i64> {
+    match e {
+        CExpr::ConstI(x) => Some(*x),
+        _ => None,
+    }
+}
+
+/// `LoadProp(prop, Reg(reg)) + ConstI(step)` in either operand order.
+fn level_step(e: &CExpr, prop: u32, reg: u32) -> Option<i64> {
+    let CExpr::Binary { op: BinOp::Add, lhs, rhs } = e else { return None };
+    let is_load = |e: &CExpr| {
+        matches!(e, CExpr::LoadProp { prop: p, idx: Idx::Reg(r) } if *p == prop && *r == reg)
+    };
+    match (&**lhs, &**rhs) {
+        (l, r) if is_load(l) => const_i(r),
+        (l, r) if is_load(r) => const_i(l),
+        _ => None,
+    }
+}
+
+/// Recognize the batched-BFS shape: exactly
+/// `[Attach{level = init}, root.level = root_val, iterateInBFS{...}]` whose
+/// BFS body is one DAG-children loop storing `parent.level + step`.
+fn recognize_bfs(prog: &Program, root: u32) -> Option<BatchPlan> {
+    let [HostStmt::Attach { inits }, HostStmt::PropElemStore { prop, obj, value }, HostStmt::IterateBFS { reg, from, body, reverse: None, .. }] =
+        prog.body.as_slice()
+    else {
+        return None;
+    };
+    let [(level, init_e)] = inits.as_slice() else { return None };
+    let init = const_i(init_e)?;
+    if *prop != *level || *obj != root || *from != root {
+        return None;
+    }
+    let root_val = const_i(value)?;
+    let [DevStmt::For { reg: w, source, filter: None, body: fbody }] = body.as_slice() else {
+        return None;
+    };
+    let DevIter::Neighbors { of: Idx::Reg(of), dag: true } = source else { return None };
+    if *of != *reg {
+        return None;
+    }
+    let [DevStmt::PropStore { prop, idx: Idx::Reg(widx), value }] = fbody.as_slice() else {
+        return None;
+    };
+    if *prop != *level || *widx != *w {
+        return None;
+    }
+    let step = level_step(value, *level, *reg)?;
+    // the level property must be the program's only property: the engine
+    // reconstructs the whole Output per lane
+    if prog.props.len() != 1 || prog.props[*level as usize].edge {
+        return None;
+    }
+    Some(BatchPlan::BfsLevels { level: *level, init, root_val, step })
+}
+
+/// Recognize the k-lane relaxation shape: a prefix of pure declarations,
+/// one attach covering `{dist = init, flag = false, nxt = false}`, the two
+/// root seeds, then a trailing frontier-eligible relaxation fixedPoint —
+/// and no other properties anywhere.
+fn recognize_klane(prog: &Program, root: u32) -> Option<BatchPlan> {
+    let body = prog.body.as_slice();
+    let HostStmt::FixedPoint { flag, frontier: Some(fi), .. } = body.last()? else {
+        return None;
+    };
+    let r = fi.relax?;
+    // push-only writes: the engine's edge scan walks the forward CSR
+    if !fi.gather_out || fi.gather_in || fi.flag != *flag {
+        return None;
+    }
+    if body.len() < 4 {
+        return None;
+    }
+    // the two root seeds, in either order
+    let seeds = &body[body.len() - 3..body.len() - 1];
+    let seed = |prop: u32| {
+        seeds.iter().find_map(|s| match s {
+            HostStmt::PropElemStore { prop: p, obj, value } if *p == prop && *obj == root => {
+                Some(value)
+            }
+            _ => None,
+        })
+    };
+    if !matches!(seed(fi.flag)?, CExpr::ConstB(true)) {
+        return None;
+    }
+    let root_val = const_i(seed(r.dist)?)?;
+    // one attach covering exactly {dist, flag, nxt}
+    let HostStmt::Attach { inits } = &body[body.len() - 4] else { return None };
+    if inits.len() != 3 {
+        return None;
+    }
+    let attach = |prop: u32| inits.iter().find_map(|(p, e)| (*p == prop).then_some(e));
+    let init = const_i(attach(r.dist)?)?;
+    for flagp in [fi.flag, fi.nxt] {
+        if !matches!(attach(flagp)?, CExpr::ConstB(false)) {
+            return None;
+        }
+    }
+    // prefix: declarations only, whose effects are invisible in the Output
+    for s in &body[..body.len() - 4] {
+        match s {
+            HostStmt::AllocProp { .. } => {}
+            HostStmt::DeclScalar { init: None, .. } => {}
+            HostStmt::DeclScalar {
+                init: Some(CExpr::ConstI(_) | CExpr::ConstF(_) | CExpr::ConstB(_)),
+                ..
+            } => {}
+            _ => return None,
+        }
+    }
+    // every property must be reconstructible per lane: the dist lanes, the
+    // all-false flag pair, or the graph's own (param-bound) edge weights
+    for (slot, meta) in prog.props.iter().enumerate() {
+        let slot = slot as u32;
+        let ok = (slot == r.dist && !meta.edge)
+            || (slot == fi.flag && !meta.edge)
+            || (slot == fi.nxt && !meta.edge)
+            || (Some(slot) == r.weight && meta.edge && meta.param);
+        if !ok {
+            return None;
+        }
+    }
+    Some(BatchPlan::KLane { dist: r.dist, weight: r.weight, init, root_val })
+}
+
+/// Recognize either batchable shape (BFS first — it is the more specific).
+pub fn recognize(prog: &Program, root_param: &str) -> Option<BatchPlan> {
+    let root = root_slot(prog, root_param)?;
+    if !prog.sets.is_empty() {
+        return None;
+    }
+    recognize_bfs(prog, root).or_else(|| recognize_klane(prog, root))
+}
+
+// ---------------------------------------------------------------------------
+// Wave engines
+// ---------------------------------------------------------------------------
+
+/// Shared per-wave execution context — the `Env`-free analog of the pieces
+/// the single-run engines read.
+struct Wave<'g> {
+    g: &'g Graph,
+    threads: usize,
+    par_min: usize,
+    cancel: Option<CancelToken>,
+    fault: Option<FaultPlan>,
+    /// recycled claim buffers, same role as `Env::buf_arena`
+    arena: Arena<Vec<Node>>,
+}
+
+impl Wave<'_> {
+    fn check_cancel(&self) -> Result<()> {
+        if let Some(c) = &self.cancel {
+            if let Some(i) = c.interrupted() {
+                return Err(anyhow::Error::new(ExecError::from(i)));
+            }
+        }
+        Ok(())
+    }
+
+    /// The same injected-fault site the sparse gather polls, keyed by the
+    /// wave's round index — a firing abandons the wave for per-root runs.
+    fn fault_fires(&self, round: u64) -> bool {
+        self.fault.is_some_and(|fp| fp.fires(FaultSite::ClaimGather, round))
+    }
+
+    /// Claim-buffer collect over `list`, sequential under the same
+    /// small-frontier cutover the sparse gather uses.
+    fn collect(
+        &self,
+        list: &[Node],
+        emit: impl Fn(usize, &mut Vec<Node>) + Sync,
+    ) -> Result<Vec<Node>> {
+        if self.threads > 1 && list.len() >= self.par_min {
+            pool::try_parallel_collect_in(
+                list.len(),
+                self.threads,
+                64,
+                self.cancel.as_ref(),
+                &self.arena,
+                emit,
+            )
+            .map_err(super::pool_err)
+        } else {
+            let mut out = self.arena.take().unwrap_or_default();
+            out.clear();
+            for i in 0..list.len() {
+                emit(i, &mut out);
+            }
+            Ok(out)
+        }
+    }
+}
+
+/// CAS-min on one lane cell; `true` iff `cand` strictly improved it (the
+/// same contract as `PropData::atomic_min_max`).
+#[inline]
+fn atomic_min(cell: &AtomicI64, cand: i64) -> bool {
+    let mut cur = cell.load(Ordering::Relaxed);
+    while cand < cur {
+        match cell.compare_exchange_weak(cur, cand, Ordering::Relaxed, Ordering::Relaxed) {
+            Ok(_) => return true,
+            Err(seen) => cur = seen,
+        }
+    }
+    false
+}
+
+/// One wave of MS-BFS: ≤ 64 roots swept level-synchronously through shared
+/// bitmask frontiers. Returns one level row per lane; `Ok(None)` when an
+/// injected fault abandons the wave (the caller re-runs its roots
+/// independently); `Err` on interrupt.
+fn ms_bfs_wave(
+    w: &Wave<'_>,
+    init: i64,
+    root_val: i64,
+    step: i64,
+    roots: &[Node],
+) -> Result<Option<LaneRows>> {
+    let g = w.g;
+    let n = g.num_nodes();
+    let rows: LaneRows =
+        roots.iter().map(|_| (0..n).map(|_| AtomicI64::new(init)).collect()).collect();
+    let visited: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let fmask: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let nmask: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let mut worklist: Vec<Node> = Vec::new();
+    for (r, &root) in roots.iter().enumerate() {
+        let v = root as usize;
+        rows[r][v].store(root_val, Ordering::Relaxed);
+        visited[v].fetch_or(1 << r, Ordering::Relaxed);
+        // duplicate roots share one worklist entry
+        if fmask[v].fetch_or(1 << r, Ordering::Relaxed) == 0 {
+            worklist.push(root);
+        }
+    }
+    let mut depth: i64 = 0;
+    while !worklist.is_empty() {
+        w.check_cancel()?;
+        if w.fault_fires(depth as u64) {
+            return Ok(None);
+        }
+        // every lane discovered this round lands on the same level value:
+        // MS-BFS is level-synchronous, so depth alone determines it
+        let lvl = root_val + (depth + 1) * step;
+        let rows = &rows;
+        let visited = &visited;
+        let fmask_r = &fmask;
+        let nmask_r = &nmask;
+        let worklist_ref = &worklist;
+        let expand = move |i: usize, out: &mut Vec<Node>| {
+            let v = worklist_ref[i];
+            let fv = fmask_r[v as usize].load(Ordering::Relaxed);
+            for &t in g.neighbors(v) {
+                let ti = t as usize;
+                let cand = fv & !visited[ti].load(Ordering::Relaxed);
+                if cand == 0 {
+                    continue;
+                }
+                // fetch_or hands each lane's first discovery of `t` to
+                // exactly one worker — the winner assigns that lane's level
+                let prev = visited[ti].fetch_or(cand, Ordering::Relaxed);
+                let claim = cand & !prev;
+                if claim == 0 {
+                    continue;
+                }
+                let mut new = claim;
+                while new != 0 {
+                    let r = new.trailing_zeros() as usize;
+                    new &= new - 1;
+                    rows[r][ti].store(lvl, Ordering::Relaxed);
+                }
+                // exclusive worklist claim: the claim_true idiom widened to
+                // the whole mask
+                if nmask_r[ti].fetch_or(claim, Ordering::Relaxed) == 0 {
+                    out.push(t);
+                }
+            }
+        };
+        let next = w.collect(&worklist, expand)?;
+        // hand the frontier over: clear the old masks fully *before*
+        // installing the new (a vertex can sit in consecutive frontiers
+        // when different lanes reach it at different depths)
+        for &v in &worklist {
+            fmask[v as usize].store(0, Ordering::Relaxed);
+        }
+        for &v in &next {
+            let vi = v as usize;
+            fmask[vi].store(nmask[vi].swap(0, Ordering::Relaxed), Ordering::Relaxed);
+        }
+        w.arena.put(std::mem::replace(&mut worklist, next));
+        depth += 1;
+    }
+    Ok(Some(rows))
+}
+
+/// One wave of k-lane relaxation: ≤ 64 lanes of the distance property
+/// relaxed by a single edge scan per round. Same return contract as
+/// [`ms_bfs_wave`].
+fn klane_wave(
+    w: &Wave<'_>,
+    init: i64,
+    root_val: i64,
+    weighted: bool,
+    roots: &[Node],
+) -> Result<Option<LaneRows>> {
+    let g = w.g;
+    let n = g.num_nodes();
+    let rows: LaneRows =
+        roots.iter().map(|_| (0..n).map(|_| AtomicI64::new(init)).collect()).collect();
+    let active: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let nmask: Vec<AtomicU64> = (0..n).map(|_| AtomicU64::new(0)).collect();
+    let mut worklist: Vec<Node> = Vec::new();
+    for (r, &root) in roots.iter().enumerate() {
+        let v = root as usize;
+        rows[r][v].store(root_val, Ordering::Relaxed);
+        if active[v].fetch_or(1 << r, Ordering::Relaxed) == 0 {
+            worklist.push(root);
+        }
+    }
+    let max_iters = 4 * n + 16;
+    for round in 0..max_iters {
+        if worklist.is_empty() {
+            return Ok(Some(rows));
+        }
+        w.check_cancel()?;
+        if w.fault_fires(round as u64) {
+            return Ok(None);
+        }
+        let rows = &rows;
+        let active_r = &active;
+        let nmask_r = &nmask;
+        let worklist_ref = &worklist;
+        let relax = move |i: usize, out: &mut Vec<Node>| {
+            let v = worklist_ref[i] as usize;
+            let av = active_r[v].load(Ordering::Relaxed);
+            for e in g.edge_range(v as Node) {
+                let t = g.adj[e] as usize;
+                let we = if weighted { g.weights[e] as i64 } else { 0 };
+                let mut bits = av;
+                while bits != 0 {
+                    let r = bits.trailing_zeros() as usize;
+                    bits &= bits - 1;
+                    let cand = rows[r][v].load(Ordering::Relaxed).saturating_add(we);
+                    if atomic_min(&rows[r][t], cand)
+                        && nmask_r[t].fetch_or(1 << r, Ordering::Relaxed) == 0
+                    {
+                        out.push(t as Node);
+                    }
+                }
+            }
+        };
+        let next = w.collect(&worklist, relax)?;
+        for &v in &worklist {
+            active[v as usize].store(0, Ordering::Relaxed);
+        }
+        for &v in &next {
+            let vi = v as usize;
+            active[vi].store(nmask[vi].swap(0, Ordering::Relaxed), Ordering::Relaxed);
+        }
+        w.arena.put(std::mem::replace(&mut worklist, next));
+    }
+    bail!("fixedPoint did not converge after {max_iters} iterations")
+}
+
+// ---------------------------------------------------------------------------
+// Output reconstruction and the driver
+// ---------------------------------------------------------------------------
+
+/// Assemble one lane's [`Output`]: the batched property row plus the
+/// invariant rest (all-false flag pair, graph edge weights).
+fn lane_output(
+    prog: &Program,
+    g: &Graph,
+    plan: &BatchPlan,
+    row: Vec<AtomicI64>,
+    wave_k: usize,
+) -> Output {
+    let n = g.num_nodes();
+    let batched = match plan {
+        BatchPlan::BfsLevels { level, .. } => *level,
+        BatchPlan::KLane { dist, .. } => *dist,
+    };
+    let mut props = std::collections::HashMap::new();
+    let mut row = Some(row);
+    for (slot, meta) in prog.props.iter().enumerate() {
+        let data = if slot as u32 == batched {
+            PropData::I(row.take().expect("one batched row per lane"))
+        } else if meta.edge {
+            PropData::from_weights(g)
+        } else {
+            // converged flag pair: all-false, exactly the fixpoint exit
+            PropData::alloc_st(ScalarTy::Bool, n)
+        };
+        props.insert(meta.name.clone(), data);
+    }
+    let stats = ExecStats { batched_roots: wave_k as u64, ..ExecStats::default() };
+    Output { props, ret: None, stats }
+}
+
+/// `base` with the root parameter rebound — the arguments an independent
+/// (fallback) run of one root needs.
+fn args_with_root(base: &Args, root_param: &str, root: Node) -> Args {
+    base.clone().node(root_param, root)
+}
+
+/// Execute the program once per root, sharing CSR traversals across roots
+/// where the compiled shape allows it (waves of ≤ [`batch_width`] lanes).
+/// Results align positionally with `roots`, and each is bit-for-bit equal
+/// to [`run_with_opts`] with that root bound — unbatchable programs,
+/// out-of-range roots, and fault-abandoned waves all take the independent
+/// path, so the equivalence holds unconditionally.
+pub fn run_batch_with_opts(
+    tf: &TypedFunction,
+    g: &Graph,
+    base_args: &Args,
+    root_param: &str,
+    roots: &[Node],
+    opts: &ExecOpts,
+) -> Vec<Result<Output>> {
+    let mut results: Vec<Option<Result<Output>>> = roots.iter().map(|_| None).collect();
+    let fallback = |root: Node| -> Result<Output> {
+        run_with_opts(tf, g, &args_with_root(base_args, root_param, root), opts.clone())
+    };
+    let plan = compile::compile(tf)
+        .ok()
+        .and_then(|prog| recognize(&prog, root_param).map(|plan| (prog, plan)));
+    let Some((prog, plan)) = plan else {
+        return roots.iter().map(|&root| fallback(root)).collect();
+    };
+    let n = g.num_nodes();
+    let threads = if opts.threads == 0 { pool::default_threads() } else { opts.threads }.max(1);
+    let wave = Wave {
+        g,
+        threads,
+        par_min: opts.frontier_par_min.unwrap_or_else(frontier_par_min),
+        cancel: opts.cancel.clone(),
+        fault: opts.fault.or_else(FaultPlan::from_env),
+        arena: Arena::new(),
+    };
+    // engine-eligible roots batch in waves; out-of-range roots surface the
+    // same error their independent run would
+    let mut in_range: Vec<usize> = Vec::new();
+    for (i, &root) in roots.iter().enumerate() {
+        if (root as usize) < n {
+            in_range.push(i);
+        } else {
+            results[i] = Some(fallback(root));
+        }
+    }
+    let width = batch_width(opts);
+    'waves: for chunk in in_range.chunks(width) {
+        let wave_roots: Vec<Node> = chunk.iter().map(|&i| roots[i]).collect();
+        let ran = match plan {
+            BatchPlan::BfsLevels { init, root_val, step, .. } => {
+                ms_bfs_wave(&wave, init, root_val, step, &wave_roots)
+            }
+            BatchPlan::KLane { init, root_val, weight, .. } => {
+                klane_wave(&wave, init, root_val, weight.is_some(), &wave_roots)
+            }
+        };
+        match ran {
+            Ok(Some(rows)) => {
+                let wave_k = wave_roots.len();
+                for (lane, row) in rows.into_iter().enumerate() {
+                    results[chunk[lane]] = Some(Ok(lane_output(&prog, g, &plan, row, wave_k)));
+                }
+            }
+            // injected fault: degrade this wave to independent runs (each
+            // carrying its own sparse→dense fallback machinery) and count
+            // the abandonment the way the sparse schedule does
+            Ok(None) => {
+                for &i in chunk {
+                    results[i] = Some(fallback(roots[i]).map(|mut out| {
+                        out.stats.fallbacks += 1;
+                        out
+                    }));
+                }
+            }
+            // an interrupt poisons this wave and every wave after it, the
+            // same way it stops a single run mid-request
+            Err(e) => {
+                let typed = e.downcast_ref::<ExecError>().cloned();
+                let mut original = Some(e);
+                for &i in &in_range {
+                    if results[i].is_none() {
+                        results[i] = Some(Err(match (original.take(), &typed) {
+                            (Some(e), _) => e,
+                            (None, Some(te)) => anyhow::Error::new(te.clone()),
+                            (None, None) => anyhow!("batched wave interrupted"),
+                        }));
+                    }
+                }
+                break 'waves;
+            }
+        }
+    }
+    results
+        .into_iter()
+        .map(|r| r.expect("every root resolved by wave, fallback, or interrupt"))
+        .collect()
+}

@@ -94,6 +94,7 @@
 //! The end-to-end pipeline (parse → sema → plan → render, and where this
 //! backend sits in it) is documented in `docs/ARCHITECTURE.md`.
 
+pub mod batch;
 pub mod compile;
 pub mod env;
 pub mod eval;
@@ -269,6 +270,9 @@ pub struct ExecOpts {
     /// `STARPLAT_FRONTIER_PAR_MIN` read (tests override here instead of
     /// mutating the process environment)
     pub frontier_par_min: Option<usize>,
+    /// lane width for [`batch::run_batch_with_opts`] (1..=64); `None` falls
+    /// back to `STARPLAT_BATCH` (default 64). Single runs ignore it.
+    pub batch: Option<usize>,
 }
 
 impl Default for ExecOpts {
@@ -281,6 +285,7 @@ impl Default for ExecOpts {
             direction: None,
             delta: None,
             frontier_par_min: None,
+            batch: None,
         }
     }
 }
@@ -319,6 +324,9 @@ pub struct ExecStats {
     pub pull_rounds: u64,
     /// did any fixedPoint run the delta-stepping schedule?
     pub delta_used: bool,
+    /// lanes sharing the traversal that produced this output (0 for single
+    /// runs; set by [`batch::run_batch_with_opts`] to the wave's lane count)
+    pub batched_roots: u64,
 }
 
 /// Execution result: output properties + optional scalar return.
@@ -856,14 +864,17 @@ impl<'g> Exec<'g> {
         if flag.len() != n || dist.len() != n || weight.len() != me {
             return Ok(None); // let the dense path surface the real error
         }
-        // one O(m) scan resolves both the non-negativity precondition and
-        // the degree-based default width Δ = max(1, avg_weight / avg_degree)
+        // one O(m) scan resolves the non-negativity precondition, the
+        // degree-based default width Δ = max(1, avg_weight / avg_degree),
+        // and the max weight that bounds the bucket ring's window
         let mut total: i64 = 0;
         let mut minw = i64::MAX;
+        let mut maxw: i64 = 0;
         for e in 0..me {
             let w = ival(weight.load(e));
             total = total.saturating_add(w);
             minw = minw.min(w);
+            maxw = maxw.max(w);
         }
         if me > 0 && minw < 0 {
             return Ok(None); // delta-stepping requires non-negative weights
@@ -878,12 +889,24 @@ impl<'g> Exec<'g> {
         };
         // seed the buckets from the flagged vertices and clear their flags:
         // the bucketed run replaces the whole ping-pong loop, so it must
-        // exit in the converged dense state (both flag arrays all-false)
-        let mut buckets: std::collections::BTreeMap<i64, Vec<Node>> =
-            std::collections::BTreeMap::new();
+        // exit in the converged dense state (both flag arrays all-false).
+        // Relaxations from bucket `bi` land in [bi, bi + maxw/Δ + 1] (light
+        // wins stay < (bi+1)Δ, heavy wins add ≤ maxw), so an indexed ring
+        // of maxw/Δ + 2 slots replaces the old ordered-map bucket store —
+        // O(1) slot addressing instead of a tree walk per insert. The cap
+        // plus arbitrary seed distances go through the overflow list, which
+        // rebases into the window when it drains.
+        let bucket_of = |v: Node| ival(dist.load(v as usize)) / width;
+        let mut ring = BucketRing::new(((maxw / width) + 2).clamp(2, 4096) as usize);
+        let mut seeded = false;
         for v in 0..n {
             if flag.load_bool(v) {
-                buckets.entry(ival(dist.load(v)) / width).or_default().push(v as Node);
+                let node = v as Node;
+                if !seeded {
+                    ring.base = bucket_of(node);
+                    seeded = true;
+                }
+                ring.insert(bucket_of(node), node);
                 flag.store(v, Val::B(false));
             }
         }
@@ -923,26 +946,27 @@ impl<'g> Exec<'g> {
                 Ok(out)
             }
         };
-        while let Some((&bi, _)) = buckets.iter().next() {
+        while let Some(bi) = ring.next(&bucket_of) {
             env.check_cancel()?; // bucket boundary = cancellation point
             let mut settled: Vec<Node> = Vec::new();
             // light phase: drain bucket `bi` to a fixpoint (light-edge wins
             // can land back in it)
-            while let Some(bucket) = buckets.remove(&bi) {
-                let fresh: Vec<Node> = bucket
-                    .into_iter()
-                    .filter(|&v| ival(dist.load(v as usize)) / width == bi)
-                    .collect();
+            loop {
+                let bucket = ring.take(bi);
+                if bucket.is_empty() {
+                    break;
+                }
+                let fresh: Vec<Node> = bucket.into_iter().filter(|&v| bucket_of(v) == bi).collect();
                 let improved = run_phase(&fresh, true)?;
                 settled.extend_from_slice(&fresh);
                 for &u in &improved {
-                    buckets.entry(ival(dist.load(u as usize)) / width).or_default().push(u);
+                    ring.insert(bucket_of(u), u);
                 }
             }
             // heavy phase: one pass from the settled distances
             let improved = run_phase(&settled, false)?;
             for &u in &improved {
-                buckets.entry(ival(dist.load(u as usize)) / width).or_default().push(u);
+                ring.insert(bucket_of(u), u);
             }
         }
         env.scalar_store(var, Val::B(true))?;
@@ -1150,6 +1174,74 @@ impl<'g> Exec<'g> {
             std::mem::swap(&mut frontier, &mut next);
         }
         bail!("fixedPoint did not converge after {max_iters} iterations")
+    }
+}
+
+/// Indexed circular bucket store for the delta-stepping drain: a window of
+/// consecutive bucket indices maps onto a fixed slot ring (`O(1)` insert,
+/// no ordered-map walk), and everything outside the window parks in an
+/// overflow list that rebases when the window drains. Bucket order is a
+/// work-efficiency heuristic only (see [`Exec::try_delta`]), so overflow
+/// rebasing — which recomputes buckets from *current* distances — never
+/// affects the fixpoint, just how much stale work gets filtered.
+struct BucketRing {
+    /// lowest bucket index the window currently covers; slides forward as
+    /// buckets drain
+    base: i64,
+    /// `slots[bi.rem_euclid(len)]` holds bucket `bi` for
+    /// `bi ∈ [base, base + len)`
+    slots: Vec<Vec<Node>>,
+    /// entries whose bucket fell outside the window at insert time
+    overflow: Vec<Node>,
+}
+
+impl BucketRing {
+    fn new(window: usize) -> BucketRing {
+        BucketRing { base: 0, slots: (0..window).map(|_| Vec::new()).collect(), overflow: Vec::new() }
+    }
+
+    fn idx(&self, bi: i64) -> usize {
+        bi.rem_euclid(self.slots.len() as i64) as usize
+    }
+
+    fn insert(&mut self, bi: i64, v: Node) {
+        if bi >= self.base && bi < self.base + self.slots.len() as i64 {
+            let i = self.idx(bi);
+            self.slots[i].push(v);
+        } else {
+            self.overflow.push(v);
+        }
+    }
+
+    /// Drain bucket `bi`'s slot (valid while `bi` is in the window).
+    fn take(&mut self, bi: i64) -> Vec<Node> {
+        let i = self.idx(bi);
+        std::mem::take(&mut self.slots[i])
+    }
+
+    /// The next non-empty bucket at or above `base`, sliding the window to
+    /// it. When the window is dry, the overflow rebases in (re-bucketed by
+    /// `bucket_of` from current distances) and the scan repeats; `None`
+    /// means the whole drain is complete.
+    fn next(&mut self, bucket_of: impl Fn(Node) -> i64) -> Option<i64> {
+        loop {
+            let nb = self.slots.len() as i64;
+            if let Some(bi) = (self.base..self.base + nb).find(|&bi| {
+                let i = self.idx(bi);
+                !self.slots[i].is_empty()
+            }) {
+                self.base = bi;
+                return Some(bi);
+            }
+            if self.overflow.is_empty() {
+                return None;
+            }
+            let pending = std::mem::take(&mut self.overflow);
+            self.base = pending.iter().map(|&v| bucket_of(v)).min().expect("pending not empty");
+            for v in pending {
+                self.insert(bucket_of(v), v);
+            }
+        }
     }
 }
 

@@ -26,11 +26,25 @@
 //!   CSR never serves the old graph's cached results; capacity 0 disables
 //!   caching (the stress suite does this so every request actually
 //!   executes).
+//!
+//! On top of the solo path sits **batched multi-source execution**
+//! (`tests/service_batch.rs`): [`Service::execute_batch`] groups requests
+//! that target the same (graph, version, program) and differ only in the
+//! program's single `Node` parameter, and runs each group through
+//! [`interp::batch::run_batch_with_opts`] — one shared CSR traversal
+//! carrying up to 64 roots per wave. Results fan back out as ordinary
+//! per-root [`Output`]s cached under the same per-request keys the solo
+//! path uses, so later solo requests hit them. A configured
+//! [`ServiceConfig::batch_window`] makes the merging transparent:
+//! [`Service::execute`] holds an eligible cache-missing request open for
+//! the window, and any same-group requests arriving meanwhile coalesce into
+//! the leader's merged run instead of traversing the graph again.
 
 use crate::backends::interp::env::Val;
 use crate::backends::interp::{self, Args, ExecError, ExecOpts, Output};
+use crate::dsl::ast::Type;
 use crate::dsl::parse;
-use crate::graph::csr::Graph;
+use crate::graph::csr::{Graph, Node};
 use crate::sema::{check_function, TypedFunction};
 use crate::util::cancel::CancelToken;
 use crate::util::fault::FaultPlan;
@@ -38,7 +52,7 @@ use crate::util::pool::panic_message;
 use std::collections::{HashMap, VecDeque};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard, RwLock};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, RwLock};
 use std::time::Duration;
 
 // ---------------------------------------------------------------------------
@@ -93,6 +107,14 @@ pub struct ServiceConfig {
     /// service-wide fault plan for requests that do not carry their own
     /// (`None` leaves the `STARPLAT_FAULT` environment fallback in effect)
     pub fault: Option<FaultPlan>,
+    /// lane width for merged runs (1..=64); 0 defers to the interpreter's
+    /// `STARPLAT_BATCH` default
+    pub batch_width: usize,
+    /// transparent request coalescing: an eligible cache-missing
+    /// [`Service::execute`] call waits this long for same-group requests to
+    /// arrive, then runs them all as one batched traversal. `None` (the
+    /// default) dispatches immediately, exactly the pre-batching behavior.
+    pub batch_window: Option<Duration>,
 }
 
 impl Default for ServiceConfig {
@@ -103,6 +125,8 @@ impl Default for ServiceConfig {
             threads: 0,
             cache_capacity: 256,
             fault: None,
+            batch_width: 0,
+            batch_window: None,
         }
     }
 }
@@ -141,6 +165,8 @@ struct StatCells {
     faults: AtomicU64,
     failed: AtomicU64,
     fallbacks: AtomicU64,
+    batched_roots: AtomicU64,
+    coalesced: AtomicU64,
 }
 
 /// Point-in-time copy of the service counters.
@@ -164,6 +190,11 @@ pub struct StatsSnapshot {
     pub failed: u64,
     /// sparse→dense schedule fallbacks summed over completed runs
     pub fallbacks: u64,
+    /// unique roots dispatched through merged (multi-source) runs
+    pub batched_roots: u64,
+    /// requests that joined another request's coalescing window instead of
+    /// dispatching their own run
+    pub coalesced: u64,
 }
 
 // ---------------------------------------------------------------------------
@@ -175,6 +206,9 @@ struct ProgramEntry {
     tf: Arc<TypedFunction>,
     /// FNV-1a of the source text: the cache's program identity
     hash: u64,
+    /// the program's unique `Node` parameter, when it has exactly one —
+    /// the axis [`Service::execute_batch`] merges requests along
+    root_param: Option<String>,
 }
 
 /// (graph id, graph version, program hash, argument fingerprint). The
@@ -183,11 +217,34 @@ struct ProgramEntry {
 /// out via FIFO eviction).
 type CacheKey = (String, u64, u64, u64);
 
+/// Same shape as [`CacheKey`], but the argument fingerprint excludes the
+/// root parameter: requests sharing a group key differ only in root and may
+/// merge into one batched run.
+type GroupKey = (String, u64, u64, u64);
+
 #[derive(Default)]
 struct CacheInner {
     map: HashMap<CacheKey, Arc<Output>>,
     /// insertion order for FIFO eviction
     order: VecDeque<CacheKey>,
+}
+
+/// Rendezvous for one coalescing window: the leader collects members while
+/// it sleeps, runs the merged batch, and publishes per-member results.
+struct GatherState {
+    /// (root, per-request cache key) per member; index 0 is the leader
+    members: Vec<(Node, CacheKey)>,
+    /// set once the leader snapshots `members` — late arrivals must open a
+    /// new gather instead of joining one that stopped listening
+    closed: bool,
+    /// per-member results, aligned with `members`; publication wakes the
+    /// condvar
+    results: Option<Vec<Result<Arc<Output>, ServiceError>>>,
+}
+
+struct Gather {
+    state: Mutex<GatherState>,
+    cv: Condvar,
 }
 
 /// The in-process execution service. Cheap to share: every method takes
@@ -198,6 +255,8 @@ pub struct Service {
     graphs: RwLock<HashMap<String, (Arc<Graph>, u64)>>,
     programs: RwLock<HashMap<String, ProgramEntry>>,
     cache: Mutex<CacheInner>,
+    /// open coalescing windows by group key
+    windows: Mutex<HashMap<GroupKey, Arc<Gather>>>,
     in_flight: AtomicUsize,
     stats: StatCells,
 }
@@ -227,6 +286,17 @@ fn write_lock<T>(l: &RwLock<T>) -> std::sync::RwLockWriteGuard<'_, T> {
     l.write().unwrap_or_else(|e| e.into_inner())
 }
 
+/// The request's root vertex, when the bound value is representable as a
+/// `Node`. Anything else (missing, wrong type, negative, oversized) makes
+/// the request ineligible for merging — the solo path then surfaces exactly
+/// the error it always did.
+fn root_of(root_param: &str, args: &Args) -> Option<Node> {
+    match args.scalars.get(root_param) {
+        Some(Val::I(x)) if *x >= 0 && *x <= u32::MAX as i64 => Some(*x as Node),
+        _ => None,
+    }
+}
+
 impl Service {
     pub fn new(cfg: ServiceConfig) -> Service {
         Service {
@@ -234,6 +304,7 @@ impl Service {
             graphs: RwLock::new(HashMap::new()),
             programs: RwLock::new(HashMap::new()),
             cache: Mutex::new(CacheInner::default()),
+            windows: Mutex::new(HashMap::new()),
             in_flight: AtomicUsize::new(0),
             stats: StatCells::default(),
         }
@@ -268,7 +339,12 @@ impl Service {
         let fns = parse(src).map_err(|e| reject(e.to_string()))?;
         let f = fns.first().ok_or_else(|| reject("no function in source".to_string()))?;
         let tf = check_function(f).map_err(|e| reject(e.to_string()))?;
-        let entry = ProgramEntry { tf: Arc::new(tf), hash: fnv1a(src.as_bytes()) };
+        let mut node_params = tf.func.params.iter().filter(|p| matches!(p.ty, Type::Node));
+        let root_param = match (node_params.next(), node_params.next()) {
+            (Some(p), None) => Some(p.name.clone()),
+            _ => None,
+        };
+        let entry = ProgramEntry { tf: Arc::new(tf), hash: fnv1a(src.as_bytes()), root_param };
         write_lock(&self.programs).insert(name.to_string(), entry);
         Ok(())
     }
@@ -285,11 +361,59 @@ impl Service {
             faults: s.faults.load(Ordering::Relaxed),
             failed: s.failed.load(Ordering::Relaxed),
             fallbacks: s.fallbacks.load(Ordering::Relaxed),
+            batched_roots: s.batched_roots.load(Ordering::Relaxed),
+            coalesced: s.coalesced.load(Ordering::Relaxed),
         }
+    }
+
+    /// Classify an interpreter error without touching the counters (merged
+    /// runs count once per affected request, not once per unique root).
+    fn classify(&self, e: &anyhow::Error) -> ServiceError {
+        match e.downcast_ref::<ExecError>() {
+            Some(te) => te.clone().into(),
+            None => ServiceError::Failed(format!("{e:#}")),
+        }
+    }
+
+    /// Bump the stats cell a terminal error belongs to. Registration and
+    /// admission errors are counted at their own sites.
+    fn count_error(&self, err: &ServiceError) {
+        let cell = match err {
+            ServiceError::Exec(ExecError::Cancelled) => &self.stats.cancelled,
+            ServiceError::Exec(ExecError::DeadlineExceeded) => &self.stats.deadline_exceeded,
+            ServiceError::Exec(ExecError::WorkerPanic(_)) => &self.stats.panics,
+            ServiceError::Exec(ExecError::Fault(_)) => &self.stats.faults,
+            _ => &self.stats.failed,
+        };
+        cell.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Memoise `out` under `key` with FIFO eviction (no-op when caching is
+    /// disabled).
+    fn cache_insert(&self, key: &CacheKey, out: Arc<Output>) {
+        if self.cfg.cache_capacity == 0 {
+            return;
+        }
+        let mut c = lock_mutex(&self.cache);
+        if !c.map.contains_key(key) {
+            if c.order.len() >= self.cfg.cache_capacity {
+                if let Some(evict) = c.order.pop_front() {
+                    c.map.remove(&evict);
+                }
+            }
+            c.order.push_back(key.clone());
+        }
+        c.map.insert(key.clone(), out);
     }
 
     /// Execute one request. Never panics: interpreter panics are caught at
     /// this boundary and surfaced as [`ExecError::WorkerPanic`].
+    ///
+    /// When [`ServiceConfig::batch_window`] is set and the request is
+    /// merge-eligible (no per-request deadline/cancel/fault, program has a
+    /// unique `Node` parameter bound to a valid root), a cache miss holds
+    /// the request open for the window so concurrent same-group requests
+    /// coalesce into one batched traversal.
     pub fn execute(&self, req: &Request) -> Result<Arc<Output>, ServiceError> {
         // ---- admission: claim a slot before doing any work ----
         let limit = self.cfg.max_in_flight;
@@ -321,6 +445,19 @@ impl Service {
             }
         }
 
+        // ---- transparent coalescing window ----
+        if let Some(window) = self.cfg.batch_window {
+            if req.deadline.is_none() && req.cancel.is_none() && req.fault.is_none() {
+                if let Some(rp) = entry.root_param.clone() {
+                    if let Some(root) = root_of(&rp, &req.args) {
+                        return self.execute_coalesced(
+                            req, window, &graph, graph_version, &entry, &rp, root, key,
+                        );
+                    }
+                }
+            }
+        }
+
         // ---- cancellation / deadline ----
         let token = req.cancel.clone().unwrap_or_default();
         if let Some(d) = req.deadline.or(self.cfg.default_deadline) {
@@ -328,9 +465,9 @@ impl Service {
         }
         let opts = ExecOpts {
             threads: self.cfg.threads,
-            frontier: true,
             cancel: Some(token),
             fault: req.fault.or(self.cfg.fault),
+            ..ExecOpts::default()
         };
 
         // ---- dispatch; panics stop here ----
@@ -343,22 +480,9 @@ impl Service {
                 return Err(ExecError::WorkerPanic(panic_message(payload)).into());
             }
             Ok(Err(e)) => {
-                return Err(match e.downcast_ref::<ExecError>() {
-                    Some(te) => {
-                        let cell = match te {
-                            ExecError::Cancelled => &self.stats.cancelled,
-                            ExecError::DeadlineExceeded => &self.stats.deadline_exceeded,
-                            ExecError::WorkerPanic(_) => &self.stats.panics,
-                            ExecError::Fault(_) => &self.stats.faults,
-                        };
-                        cell.fetch_add(1, Ordering::Relaxed);
-                        te.clone().into()
-                    }
-                    None => {
-                        self.stats.failed.fetch_add(1, Ordering::Relaxed);
-                        ServiceError::Failed(format!("{e:#}"))
-                    }
-                });
+                let err = self.classify(&e);
+                self.count_error(&err);
+                return Err(err);
             }
             Ok(Ok(out)) => out,
         };
@@ -366,19 +490,270 @@ impl Service {
         self.stats.completed.fetch_add(1, Ordering::Relaxed);
         self.stats.fallbacks.fetch_add(out.stats.fallbacks, Ordering::Relaxed);
         let out = Arc::new(out);
+        self.cache_insert(&key, out.clone());
+        Ok(out)
+    }
+
+    /// Execute many requests, merging the ones that differ only in root.
+    ///
+    /// Requests that cannot merge — unknown graph/program, per-request
+    /// deadline/cancel/fault, no unique `Node` parameter, root not a valid
+    /// `Node` — run through [`Service::execute`] individually and keep its
+    /// exact semantics. Merge-eligible requests group by (graph, version,
+    /// program hash, non-root arguments); each group claims **one**
+    /// in-flight slot, serves members from the result cache first, runs the
+    /// remaining unique roots as one batched traversal, and fans the
+    /// outputs back out (cached under each member's own request key).
+    /// Results align positionally with `reqs`.
+    pub fn execute_batch(&self, reqs: &[Request]) -> Vec<Result<Arc<Output>, ServiceError>> {
+        let mut results: Vec<Option<Result<Arc<Output>, ServiceError>>> =
+            reqs.iter().map(|_| None).collect();
+        struct Group {
+            graph: Arc<Graph>,
+            entry: ProgramEntry,
+            root_param: String,
+            base_args: Args,
+            /// (request index, root, per-request cache key)
+            members: Vec<(usize, Node, CacheKey)>,
+        }
+        let mut order: Vec<GroupKey> = Vec::new();
+        let mut groups: HashMap<GroupKey, Group> = HashMap::new();
+        for (i, req) in reqs.iter().enumerate() {
+            let eligible = req.deadline.is_none() && req.cancel.is_none() && req.fault.is_none();
+            let resolved = if eligible {
+                let graph = read_lock(&self.graphs).get(&req.graph).cloned();
+                let entry = read_lock(&self.programs).get(&req.program).cloned();
+                match (graph, entry) {
+                    (Some((graph, version)), Some(entry)) => match entry.root_param.clone() {
+                        Some(rp) => {
+                            root_of(&rp, &req.args).map(|root| (graph, version, entry, rp, root))
+                        }
+                        None => None,
+                    },
+                    _ => None,
+                }
+            } else {
+                None
+            };
+            match resolved {
+                None => results[i] = Some(self.execute(req)),
+                Some((graph, version, entry, rp, root)) => {
+                    let full_key: CacheKey =
+                        (req.graph.clone(), version, entry.hash, fingerprint(&req.args));
+                    let mut base_args = req.args.clone();
+                    base_args.scalars.remove(&rp);
+                    let gkey: GroupKey =
+                        (req.graph.clone(), version, entry.hash, fingerprint(&base_args));
+                    let group = groups.entry(gkey.clone()).or_insert_with(|| {
+                        order.push(gkey.clone());
+                        Group { graph, entry, root_param: rp, base_args, members: Vec::new() }
+                    });
+                    group.members.push((i, root, full_key));
+                }
+            }
+        }
+        for gkey in order {
+            let group = groups.remove(&gkey).expect("group recorded in order");
+            // one admission slot per merged run, not per member
+            let limit = self.cfg.max_in_flight;
+            let prev = self.in_flight.fetch_add(1, Ordering::AcqRel);
+            let _slot = InFlightSlot(&self.in_flight);
+            if prev >= limit {
+                for (i, _, _) in &group.members {
+                    self.stats.rejected.fetch_add(1, Ordering::Relaxed);
+                    results[*i] = Some(Err(ServiceError::Overloaded { limit }));
+                }
+                continue;
+            }
+            let members: Vec<(Node, CacheKey)> =
+                group.members.iter().map(|(_, root, key)| (*root, key.clone())).collect();
+            let merged = self.run_merged(
+                &group.graph,
+                &group.entry,
+                &group.root_param,
+                &group.base_args,
+                &members,
+            );
+            for ((i, _, _), r) in group.members.iter().zip(merged) {
+                results[*i] = Some(r);
+            }
+        }
+        results.into_iter().map(|r| r.expect("every request resolved")).collect()
+    }
+
+    /// Shared core of [`execute_batch`] and the coalescing window: serve
+    /// each member from the cache if possible, run the remaining unique
+    /// roots as one batched traversal, and fan results back out with the
+    /// same per-request stats/cache accounting the solo path performs.
+    /// The caller handles admission.
+    fn run_merged(
+        &self,
+        graph: &Arc<Graph>,
+        entry: &ProgramEntry,
+        root_param: &str,
+        base_args: &Args,
+        members: &[(Node, CacheKey)],
+    ) -> Vec<Result<Arc<Output>, ServiceError>> {
+        let mut results: Vec<Option<Result<Arc<Output>, ServiceError>>> =
+            members.iter().map(|_| None).collect();
         if self.cfg.cache_capacity > 0 {
-            let mut c = lock_mutex(&self.cache);
-            if !c.map.contains_key(&key) {
-                if c.order.len() >= self.cfg.cache_capacity {
-                    if let Some(evict) = c.order.pop_front() {
-                        c.map.remove(&evict);
+            let c = lock_mutex(&self.cache);
+            for (i, (_, key)) in members.iter().enumerate() {
+                if let Some(hit) = c.map.get(key).cloned() {
+                    results[i] = Some(Ok(hit));
+                }
+            }
+        }
+        let hits = results.iter().filter(|r| r.is_some()).count() as u64;
+        if hits > 0 {
+            self.stats.cache_hits.fetch_add(hits, Ordering::Relaxed);
+            self.stats.completed.fetch_add(hits, Ordering::Relaxed);
+        }
+        let misses: Vec<usize> = (0..members.len()).filter(|&i| results[i].is_none()).collect();
+        if !misses.is_empty() {
+            // identical roots run once and share the resulting Arc
+            let mut uniq_roots: Vec<Node> = Vec::new();
+            let mut root_ix: HashMap<Node, usize> = HashMap::new();
+            for &i in &misses {
+                let root = members[i].0;
+                root_ix.entry(root).or_insert_with(|| {
+                    uniq_roots.push(root);
+                    uniq_roots.len() - 1
+                });
+            }
+            let token = CancelToken::default();
+            if let Some(d) = self.cfg.default_deadline {
+                token.set_deadline_in(d);
+            }
+            let opts = ExecOpts {
+                threads: self.cfg.threads,
+                cancel: Some(token),
+                fault: self.cfg.fault,
+                batch: (self.cfg.batch_width > 0).then_some(self.cfg.batch_width),
+                ..ExecOpts::default()
+            };
+            let ran = catch_unwind(AssertUnwindSafe(|| {
+                interp::batch::run_batch_with_opts(
+                    &entry.tf, graph, base_args, root_param, &uniq_roots, &opts,
+                )
+            }));
+            let per_root: Vec<Result<Arc<Output>, ServiceError>> = match ran {
+                Err(payload) => {
+                    let err: ServiceError =
+                        ExecError::WorkerPanic(panic_message(payload)).into();
+                    uniq_roots.iter().map(|_| Err(err.clone())).collect()
+                }
+                Ok(v) => {
+                    self.stats.batched_roots.fetch_add(uniq_roots.len() as u64, Ordering::Relaxed);
+                    v.into_iter()
+                        .map(|r| match r {
+                            Ok(out) => {
+                                // once per unique root, matching the solo
+                                // run-then-cache-hit accounting
+                                self.stats
+                                    .fallbacks
+                                    .fetch_add(out.stats.fallbacks, Ordering::Relaxed);
+                                Ok(Arc::new(out))
+                            }
+                            Err(e) => Err(self.classify(&e)),
+                        })
+                        .collect()
+                }
+            };
+            for &i in &misses {
+                let (root, key) = &members[i];
+                match &per_root[root_ix[root]] {
+                    Ok(out) => {
+                        self.stats.completed.fetch_add(1, Ordering::Relaxed);
+                        self.cache_insert(key, out.clone());
+                        results[i] = Some(Ok(out.clone()));
+                    }
+                    Err(err) => {
+                        self.count_error(err);
+                        results[i] = Some(Err(err.clone()));
                     }
                 }
-                c.order.push_back(key.clone());
             }
-            c.map.insert(key, out.clone());
         }
-        Ok(out)
+        results.into_iter().map(|r| r.expect("every member resolved")).collect()
+    }
+
+    /// The coalescing rendezvous behind [`Service::execute`]: the first
+    /// request of a group opens a gather and sleeps the window (it already
+    /// holds an admission slot); same-group requests arriving meanwhile
+    /// join as members (each holding its own slot) and wait on the condvar.
+    /// The leader then runs the merged batch and publishes per-member
+    /// results.
+    #[allow(clippy::too_many_arguments)]
+    fn execute_coalesced(
+        &self,
+        req: &Request,
+        window: Duration,
+        graph: &Arc<Graph>,
+        graph_version: u64,
+        entry: &ProgramEntry,
+        root_param: &str,
+        root: Node,
+        key: CacheKey,
+    ) -> Result<Arc<Output>, ServiceError> {
+        let mut base_args = req.args.clone();
+        base_args.scalars.remove(root_param);
+        let gkey: GroupKey =
+            (req.graph.clone(), graph_version, entry.hash, fingerprint(&base_args));
+        use std::collections::hash_map::Entry;
+        loop {
+            let (gather, leader) = {
+                let mut w = lock_mutex(&self.windows);
+                match w.entry(gkey.clone()) {
+                    Entry::Occupied(e) => (e.get().clone(), false),
+                    Entry::Vacant(e) => {
+                        let g = Arc::new(Gather {
+                            state: Mutex::new(GatherState {
+                                members: vec![(root, key.clone())],
+                                closed: false,
+                                results: None,
+                            }),
+                            cv: Condvar::new(),
+                        });
+                        e.insert(g.clone());
+                        (g, true)
+                    }
+                }
+            };
+            if leader {
+                // collect members while the window is open
+                std::thread::sleep(window);
+                lock_mutex(&self.windows).remove(&gkey);
+                let members = {
+                    let mut st = lock_mutex(&gather.state);
+                    st.closed = true;
+                    st.members.clone()
+                };
+                let merged = self.run_merged(graph, entry, root_param, &base_args, &members);
+                let mine = merged[0].clone();
+                let mut st = lock_mutex(&gather.state);
+                st.results = Some(merged);
+                drop(st);
+                gather.cv.notify_all();
+                return mine;
+            }
+            let my_index = {
+                let mut st = lock_mutex(&gather.state);
+                if st.closed {
+                    // the leader snapshotted between our map lookup and this
+                    // lock: start a fresh gather
+                    continue;
+                }
+                st.members.push((root, key.clone()));
+                st.members.len() - 1
+            };
+            self.stats.coalesced.fetch_add(1, Ordering::Relaxed);
+            let mut st = lock_mutex(&gather.state);
+            while st.results.is_none() {
+                st = gather.cv.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+            return st.results.as_ref().expect("published with results")[my_index].clone();
+        }
     }
 }
 
@@ -497,5 +872,18 @@ mod tests {
             .scalar("ab", Val::B(true));
         let fused = Args::default().scalar("ab\u{1}ab", Val::B(true));
         assert_ne!(fingerprint(&pair), fingerprint(&fused));
+    }
+
+    #[test]
+    fn root_of_requires_a_representable_node() {
+        let args = Args::default().scalar("src", Val::I(7));
+        assert_eq!(root_of("src", &args), Some(7));
+        assert_eq!(root_of("src", &Args::default()), None);
+        assert_eq!(root_of("src", &Args::default().scalar("src", Val::I(-1))), None);
+        assert_eq!(root_of("src", &Args::default().scalar("src", Val::F(7.0))), None);
+        assert_eq!(
+            root_of("src", &Args::default().scalar("src", Val::I(i64::from(u32::MAX) + 1))),
+            None
+        );
     }
 }

@@ -1,0 +1,233 @@
+//! Batched multi-source execution parity: every per-root `Output` of
+//! [`batch::run_batch_with_opts`] must be bit-for-bit equal to an
+//! independent single-root run — across thread counts, forced traversal
+//! directions, wave tilings, duplicate roots, and mid-batch fault
+//! injection. The single-root side of that equivalence is itself pinned
+//! against the sequential oracle by `seq_par_parity.rs`, so one oracle per
+//! (graph, root) closes the whole triangle.
+
+use starplat::backends::interp::{self, batch, compile, Args, Direction, ExecOpts};
+use starplat::coordinator::driver::{load_program, Algo};
+use starplat::graph::csr::{Graph, Node};
+use starplat::graph::generators::{rmat, road_grid, uniform_random};
+use starplat::sema::TypedFunction;
+use starplat::util::fault::{FaultPlan, FaultSite};
+use starplat::util::rng::Rng;
+
+const THREADS: [usize; 3] = [1, 2, 8];
+const DIRECTIONS: [Direction; 3] = [Direction::Auto, Direction::Push, Direction::Pull];
+
+fn test_graphs() -> Vec<Graph> {
+    let mut rng = Rng::new(0xC0FFEE);
+    let mut gs = Vec::new();
+    for i in 0..3 {
+        let n = rng.range(60, 280);
+        let m = rng.range(n, 5 * n);
+        gs.push(rmat(&format!("rmat{i}"), n, m, rng.next_u64()));
+    }
+    gs.push(uniform_random("ur", 150, 600, rng.next_u64()));
+    // mesh-shaped graph: many BFS levels / frontier rounds per wave
+    gs.push(road_grid("grid", 15, 14, 9));
+    gs
+}
+
+/// k roots spread across the vertex range (all in range, first is 0).
+fn roots_for(g: &Graph, k: usize) -> Vec<Node> {
+    let n = g.num_nodes().max(1);
+    (0..k).map(|i| ((i * n) / k) as Node).collect()
+}
+
+/// Batch-side options: forced direction, pool engaged even on these tiny
+/// graphs, env fault injection defeated.
+fn opts(threads: usize, dir: Direction) -> ExecOpts {
+    ExecOpts {
+        threads,
+        direction: Some(dir),
+        fault: Some(FaultPlan::off()),
+        frontier_par_min: Some(1),
+        ..ExecOpts::default()
+    }
+}
+
+/// Independent single-root run at one thread with faults off.
+fn oracle(tf: &TypedFunction, g: &Graph, root: Node, prop: &str) -> Vec<i64> {
+    let o = ExecOpts { threads: 1, fault: Some(FaultPlan::off()), ..ExecOpts::default() };
+    interp::run_with_opts(tf, g, &Args::default().node("src", root), o)
+        .unwrap()
+        .prop_i64(prop)
+}
+
+/// The shipped BFS/SSSP programs must actually engage the batch engines —
+/// otherwise the parity sweeps below would silently test the fallback path
+/// against itself.
+#[test]
+fn shipped_programs_are_recognized_as_batchable() {
+    let bfs = compile::compile(&load_program(Algo::Bfs).unwrap()).unwrap();
+    assert!(
+        matches!(batch::recognize(&bfs, "src"), Some(batch::BatchPlan::BfsLevels { .. })),
+        "bfs.sp must recognize as an MS-BFS shape"
+    );
+    let sssp = compile::compile(&load_program(Algo::Sssp).unwrap()).unwrap();
+    assert!(
+        matches!(batch::recognize(&sssp, "src"), Some(batch::BatchPlan::KLane { .. })),
+        "sssp.sp must recognize as a k-lane relaxation shape"
+    );
+    // a parameter the program does not declare can never be a batch axis
+    assert!(batch::recognize(&bfs, "nonexistent").is_none());
+}
+
+#[test]
+fn bfs_batch_matches_independent_runs_across_schedules() {
+    let tf = load_program(Algo::Bfs).unwrap();
+    for g in test_graphs() {
+        let roots = roots_for(&g, 8);
+        let want: Vec<Vec<i64>> =
+            roots.iter().map(|&r| oracle(&tf, &g, r, "level")).collect();
+        for t in THREADS {
+            for dir in DIRECTIONS {
+                let outs =
+                    batch::run_batch_with_opts(&tf, &g, &Args::default(), "src", &roots, &opts(t, dir));
+                for (i, out) in outs.into_iter().enumerate() {
+                    let out = out.unwrap();
+                    assert_eq!(
+                        out.prop_i64("level"),
+                        want[i],
+                        "{} root {} ({t} threads, {dir:?})",
+                        g.name,
+                        roots[i]
+                    );
+                    // all 8 roots fit one wave; anything else means the
+                    // engine fell back without being asked to
+                    assert_eq!(out.stats.batched_roots, roots.len() as u64, "{}", g.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn sssp_batch_matches_independent_runs_across_schedules() {
+    let tf = load_program(Algo::Sssp).unwrap();
+    for g in test_graphs() {
+        let roots = roots_for(&g, 8);
+        let want: Vec<Vec<i64>> = roots.iter().map(|&r| oracle(&tf, &g, r, "dist")).collect();
+        for t in THREADS {
+            for dir in DIRECTIONS {
+                let outs =
+                    batch::run_batch_with_opts(&tf, &g, &Args::default(), "src", &roots, &opts(t, dir));
+                for (i, out) in outs.into_iter().enumerate() {
+                    let out = out.unwrap();
+                    assert_eq!(
+                        out.prop_i64("dist"),
+                        want[i],
+                        "{} root {} ({t} threads, {dir:?})",
+                        g.name,
+                        roots[i]
+                    );
+                    assert_eq!(out.stats.batched_roots, roots.len() as u64, "{}", g.name);
+                }
+            }
+        }
+    }
+}
+
+/// A lane width below the root count tiles the batch into waves; results
+/// must not change, and each output reports its own wave's width.
+#[test]
+fn narrow_lane_width_tiles_waves_without_changing_results() {
+    let bfs = load_program(Algo::Bfs).unwrap();
+    let sssp = load_program(Algo::Sssp).unwrap();
+    let g = rmat("tiling", 180, 720, 0x7A11E5);
+    let roots = roots_for(&g, 8);
+    for (tf, prop) in [(&bfs, "level"), (&sssp, "dist")] {
+        let want: Vec<Vec<i64>> = roots.iter().map(|&r| oracle(tf, &g, r, prop)).collect();
+        let o = ExecOpts { batch: Some(3), ..opts(2, Direction::Auto) };
+        let outs = batch::run_batch_with_opts(tf, &g, &Args::default(), "src", &roots, &o);
+        for (i, out) in outs.into_iter().enumerate() {
+            let out = out.unwrap();
+            assert_eq!(out.prop_i64(prop), want[i], "{prop} root {}", roots[i]);
+            // waves of 3, 3, 2 over 8 roots
+            let expect_wave = if i < 6 { 3 } else { 2 };
+            assert_eq!(out.stats.batched_roots, expect_wave, "{prop} root {}", roots[i]);
+        }
+    }
+}
+
+/// Duplicate roots are legal: they ride the same lane-discovery bits and
+/// every copy gets a full, equal output.
+#[test]
+fn duplicate_roots_all_receive_faithful_outputs() {
+    let tf = load_program(Algo::Bfs).unwrap();
+    let g = uniform_random("dups", 120, 500, 0xD0D0);
+    let roots: Vec<Node> = vec![5, 17, 5, 5, 63, 17];
+    let outs =
+        batch::run_batch_with_opts(&tf, &g, &Args::default(), "src", &roots, &opts(2, Direction::Auto));
+    for (i, out) in outs.into_iter().enumerate() {
+        let out = out.unwrap();
+        assert_eq!(out.prop_i64("level"), oracle(&tf, &g, roots[i], "level"), "root {}", roots[i]);
+    }
+}
+
+/// `STARPLAT_FAULT=claim_gather` mid-batch: a firing wave is abandoned and
+/// every root of that wave re-runs independently (those runs honor the same
+/// plan, degrading sparse→dense where it applies). Results must equal the
+/// fault-free oracle and the abandonment must be visible in the stats.
+#[test]
+fn claim_gather_fault_degrades_to_faithful_independent_runs() {
+    let plan = FaultPlan::new(FaultSite::ClaimGather, 7, 1.0);
+    let bfs = load_program(Algo::Bfs).unwrap();
+    let sssp = load_program(Algo::Sssp).unwrap();
+    let g = rmat("faulted", 150, 600, 0xFA17);
+    let roots = roots_for(&g, 8);
+    for (tf, prop) in [(&bfs, "level"), (&sssp, "dist")] {
+        let want: Vec<Vec<i64>> = roots.iter().map(|&r| oracle(tf, &g, r, prop)).collect();
+        for t in THREADS {
+            let o = ExecOpts {
+                threads: t,
+                fault: Some(plan),
+                frontier_par_min: Some(1),
+                ..ExecOpts::default()
+            };
+            let outs = batch::run_batch_with_opts(tf, &g, &Args::default(), "src", &roots, &o);
+            for (i, out) in outs.into_iter().enumerate() {
+                let out = out.unwrap();
+                assert_eq!(
+                    out.prop_i64(prop),
+                    want[i],
+                    "{prop} root {} under claim_gather ({t} threads)",
+                    roots[i]
+                );
+                assert!(
+                    out.stats.fallbacks >= 1,
+                    "{prop} root {}: wave abandonment must be counted",
+                    roots[i]
+                );
+                // the degraded path runs single-source: no batched lanes
+                assert_eq!(out.stats.batched_roots, 0, "{prop} root {}", roots[i]);
+            }
+        }
+    }
+}
+
+/// Programs without a batchable shape still work — every root just takes
+/// the independent path, preserving the positional contract.
+#[test]
+fn unbatchable_programs_fall_back_per_root() {
+    // CC declares no root parameter at all, so the recognizer declines and
+    // the spurious per-root binding is ignored by the interpreter's by-name
+    // parameter lookup: every "root" gets the same full CC output.
+    let tf = load_program(Algo::Cc).unwrap();
+    let g = road_grid("fallback", 8, 8, 3);
+    let want = {
+        let o = ExecOpts { threads: 1, fault: Some(FaultPlan::off()), ..ExecOpts::default() };
+        interp::run_with_opts(&tf, &g, &Args::default(), o).unwrap().prop_i64("comp")
+    };
+    let roots: Vec<Node> = vec![0, 9, 33];
+    let outs =
+        batch::run_batch_with_opts(&tf, &g, &Args::default(), "src", &roots, &opts(1, Direction::Auto));
+    for out in outs {
+        let out = out.unwrap();
+        assert_eq!(out.prop_i64("comp"), want);
+        assert_eq!(out.stats.batched_roots, 0, "fallback runs carry no lanes");
+    }
+}

@@ -1,0 +1,184 @@
+//! Service-layer batched execution: `execute_batch` grouping/fan-out,
+//! per-request cache interop, counter accounting, the configured lane
+//! width, and the transparent coalescing window. Output fidelity against
+//! independent runs is pinned here end-to-end; the engine-level parity
+//! grid lives in `batch_parity.rs`.
+
+use starplat::backends::interp::{self, Args, ExecOpts};
+use starplat::dsl::parse;
+use starplat::graph::csr::Graph;
+use starplat::graph::generators::rmat;
+use starplat::runtime::service::{Request, Service, ServiceConfig};
+use starplat::sema::check_function;
+use starplat::util::fault::FaultPlan;
+use std::sync::Arc;
+use std::time::Duration;
+
+const BFS: &str = include_str!("../dsl_programs/bfs.sp");
+const SSSP: &str = include_str!("../dsl_programs/sssp.sp");
+const CC: &str = include_str!("../dsl_programs/cc.sp");
+
+/// Deterministic generator: reconstructible for oracle runs outside the
+/// service.
+fn test_graph() -> Graph {
+    rmat("g", 200, 800, 7)
+}
+
+fn service(cfg: ServiceConfig) -> Service {
+    let svc = Service::new(cfg);
+    svc.register_graph("g", test_graph()).unwrap();
+    svc.register_program("bfs", BFS).unwrap();
+    svc.register_program("sssp", SSSP).unwrap();
+    svc.register_program("cc", CC).unwrap();
+    svc
+}
+
+/// Faults forced off so `STARPLAT_FAULT` in the environment (the CI
+/// fault-stress matrix) can never leak into these deterministic checks.
+fn cfg() -> ServiceConfig {
+    ServiceConfig { threads: 2, fault: Some(FaultPlan::off()), ..Default::default() }
+}
+
+fn req(program: &str, root: u32) -> Request {
+    Request {
+        graph: "g".into(),
+        program: program.into(),
+        args: Args::default().node("src", root),
+        ..Request::default()
+    }
+}
+
+/// Independent single-root oracle straight through the interpreter.
+fn oracle(src: &str, args: &Args, prop: &str) -> Vec<i64> {
+    let fns = parse(src).unwrap();
+    let tf = check_function(&fns[0]).unwrap();
+    let o = ExecOpts { threads: 1, fault: Some(FaultPlan::off()), ..ExecOpts::default() };
+    interp::run_with_opts(&tf, &test_graph(), args, o).unwrap().prop_i64(prop)
+}
+
+fn bfs_oracle(root: u32) -> Vec<i64> {
+    oracle(BFS, &Args::default().node("src", root), "level")
+}
+
+#[test]
+fn execute_batch_matches_independent_outputs_and_counts_roots() {
+    let svc = service(cfg());
+    assert!(svc.execute_batch(&[]).is_empty());
+    let roots = [0u32, 5, 5, 9, 13, 21];
+    let reqs: Vec<Request> = roots.iter().map(|&r| req("bfs", r)).collect();
+    let results = svc.execute_batch(&reqs);
+    assert_eq!(results.len(), reqs.len());
+    for (i, r) in results.iter().enumerate() {
+        let out = r.as_ref().unwrap();
+        assert_eq!(out.prop_i64("level"), bfs_oracle(roots[i]), "root {}", roots[i]);
+    }
+    // duplicate roots ran one lane and share one Arc
+    assert!(Arc::ptr_eq(results[1].as_ref().unwrap(), results[2].as_ref().unwrap()));
+    let s = svc.stats();
+    assert_eq!(s.completed, 6);
+    assert_eq!(s.batched_roots, 5, "five unique roots in one merged run");
+    assert_eq!(s.cache_hits, 0);
+    assert_eq!(s.coalesced, 0, "execute_batch merges explicitly, not via the window");
+
+    // fan-out cached every root under its ordinary per-request key
+    let again = svc.execute(&req("bfs", 13)).unwrap();
+    assert_eq!(again.prop_i64("level"), bfs_oracle(13));
+    assert_eq!(svc.stats().cache_hits, 1);
+
+    // a second identical batch is served from cache end to end
+    let cached = svc.execute_batch(&reqs);
+    for (i, r) in cached.iter().enumerate() {
+        assert_eq!(r.as_ref().unwrap().prop_i64("level"), bfs_oracle(roots[i]));
+    }
+    let s = svc.stats();
+    assert_eq!(s.cache_hits, 7);
+    assert_eq!(s.batched_roots, 5, "no new lanes dispatched for cache hits");
+}
+
+#[test]
+fn mixed_batch_routes_ineligible_requests_through_the_solo_path() {
+    let svc = service(cfg());
+    let cc_req = Request { graph: "g".into(), program: "cc".into(), ..Request::default() };
+    // a per-request knob (here: an explicit fault plan) opts out of merging
+    let pinned = Request { fault: Some(FaultPlan::off()), ..req("bfs", 40) };
+    let reqs = vec![req("bfs", 3), cc_req.clone(), req("sssp", 3), cc_req, pinned];
+    let results = svc.execute_batch(&reqs);
+    assert_eq!(results[0].as_ref().unwrap().prop_i64("level"), bfs_oracle(3));
+    let cc_want = oracle(CC, &Args::default(), "comp");
+    assert_eq!(results[1].as_ref().unwrap().prop_i64("comp"), cc_want);
+    assert_eq!(
+        results[2].as_ref().unwrap().prop_i64("dist"),
+        oracle(SSSP, &Args::default().node("src", 3), "dist")
+    );
+    // the duplicate rootless request deduped through the result cache
+    assert!(Arc::ptr_eq(results[1].as_ref().unwrap(), results[3].as_ref().unwrap()));
+    assert_eq!(results[4].as_ref().unwrap().prop_i64("level"), bfs_oracle(40));
+    let s = svc.stats();
+    assert_eq!(s.completed, 5);
+    assert_eq!(s.cache_hits, 1, "second cc request is a cache hit");
+    // bfs root 3 and sssp root 3 are different groups of one root each; the
+    // solo-path requests contribute no lanes
+    assert_eq!(s.batched_roots, 2);
+}
+
+#[test]
+fn configured_batch_width_tiles_waves_without_changing_results() {
+    let svc = service(ServiceConfig { batch_width: 2, ..cfg() });
+    let roots = [1u32, 3, 5, 7, 9];
+    let reqs: Vec<Request> = roots.iter().map(|&r| req("sssp", r)).collect();
+    let results = svc.execute_batch(&reqs);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(
+            r.as_ref().unwrap().prop_i64("dist"),
+            oracle(SSSP, &Args::default().node("src", roots[i]), "dist"),
+            "root {}",
+            roots[i]
+        );
+    }
+    assert_eq!(svc.stats().batched_roots, 5);
+}
+
+/// Concurrent same-group requests inside the coalescing window merge into
+/// the leader's single batched traversal; every caller still gets its own
+/// faithful per-root output.
+#[test]
+fn coalescing_window_merges_concurrent_requests() {
+    let svc = service(ServiceConfig {
+        // cache off so every request must miss and reach the window
+        cache_capacity: 0,
+        batch_window: Some(Duration::from_millis(400)),
+        ..cfg()
+    });
+    let roots = [2u32, 4, 8, 16];
+    std::thread::scope(|s| {
+        let handles: Vec<_> = roots
+            .iter()
+            .map(|&r| {
+                let svc = &svc;
+                s.spawn(move || svc.execute(&req("bfs", r)).unwrap())
+            })
+            .collect();
+        for (h, &r) in handles.into_iter().zip(&roots) {
+            let out = h.join().unwrap();
+            assert_eq!(out.prop_i64("level"), bfs_oracle(r), "root {r}");
+        }
+    });
+    let s = svc.stats();
+    assert_eq!(s.completed, 4);
+    assert!(s.coalesced >= 1, "concurrent same-group requests should coalesce: {s:?}");
+    // every distinct root rode exactly one merged run, whether it joined the
+    // leader's window or (under pathological scheduling) led its own
+    assert_eq!(s.batched_roots, 4);
+}
+
+/// With no window configured, execute() behaves exactly as before batching
+/// existed — no gather detour, no counters moving.
+#[test]
+fn no_window_means_no_coalescing() {
+    let svc = service(cfg());
+    let out = svc.execute(&req("bfs", 11)).unwrap();
+    assert_eq!(out.prop_i64("level"), bfs_oracle(11));
+    let s = svc.stats();
+    assert_eq!((s.coalesced, s.batched_roots), (0, 0));
+    assert_eq!(s.completed, 1);
+}

@@ -42,6 +42,13 @@ modes — missing or unparsable artifacts, and cells whose `secs` is absent or
 zero (a broken or skipped measurement, rendered `n/a`) — always exit 0: only
 a real, measured regression may block.
 
+Reports from the batched multi-source engine (frontier-engine-v5, PR 9)
+carry a top-level `batch_cells` array: per (algorithm, graph, k) the time of
+one k-root batched traversal vs k independent runs. It feeds an
+informational **per-root amortization table** and is structurally invisible
+to the gate, which iterates `cells` only — a batch-column wobble can never
+fail CI.
+
 `bench_trend.py --selftest` runs a built-in fixture through the comparison
 (missing-`secs` cell, zero-`secs` cell, push/pull duel, one real regression)
 and exits nonzero if the guards or the gate misbehave; CI runs it before the
@@ -187,6 +194,36 @@ def main(argv):
         print(f"Direction wins: push {wins['push']}, pull {wins['pull']} "
               "(informational; never gates).")
         print()
+    # batched multi-source amortization (frontier-engine-v5): per-root cost
+    # of one k-root traversal vs k independent runs. Informational only —
+    # the gate iterates `cells` and never sees `batch_cells`.
+    batch = [c for c in cur_report.get("batch_cells", [])
+             if c.get("secs_batch") and c.get("secs_indep") and c.get("k")]
+    if batch:
+        print("#### Batched multi-source amortization (informational)")
+        print()
+        print("| algorithm | graph | k | batch s | indep s | speedup "
+              "| amortized s/root |")
+        print("|---|---|---:|---:|---:|---:|---:|")
+        amortized = {}
+        for c in batch:
+            k = int(c["k"])
+            per_root = c["secs_batch"] / k
+            amortized[(c.get("algorithm"), c.get("graph"), k)] = per_root
+            print(f"| {c.get('algorithm')} | {c.get('graph')} | {k} "
+                  f"| {c['secs_batch']:.4f} | {c['secs_indep']:.4f} "
+                  f"| {c['secs_indep'] / c['secs_batch']:.2f}x "
+                  f"| {per_root:.6f} |")
+        print()
+        gains = []
+        for (algo, graph, k), per_root in sorted(amortized.items()):
+            base = amortized.get((algo, graph, 1))
+            if k > 1 and base and per_root > 0:
+                gains.append(f"{algo}/{graph} k={k}: {base / per_root:.2f}x")
+        if gains:
+            print("Per-root amortized speedup vs k=1: " + ", ".join(gains)
+                  + " (informational; never gates).")
+            print()
     if spreads:
         worst_key, worst = max(spreads, key=lambda kv: kv[1])
         median = sorted(s for _, s in spreads)[len(spreads) // 2]
@@ -216,7 +253,8 @@ def main(argv):
 def selftest():
     """Fixture check: broken cells must render n/a and never gate; a real
     regression must still gate; the push/pull table must not crash on a
-    zero-`secs` auto cell. Exits 0 on success, raises on failure."""
+    zero-`secs` auto cell; broken batch cells must be skipped and a batch
+    slowdown must never gate. Exits 0 on success, raises on failure."""
     import tempfile
 
     prev = {"bench_n": 1, "threads_par": 2, "cells": [
@@ -233,6 +271,17 @@ def selftest():
          "secs_push": 0.5, "secs_pull": 0.7, "schedule": "auto",
          "direction_switches": 3, "pull_rounds": 2, "delta": False},
         {"algorithm": "pr", "graph": "road", "mode": "seq", "secs": 1.0},
+    ], "batch_cells": [
+        # broken batch cells (missing/zero columns): skipped, never a crash
+        {"algorithm": "bfs", "graph": "road", "k": 8},
+        {"algorithm": "bfs", "graph": "road", "k": 0, "secs_batch": 1.0,
+         "secs_indep": 1.0},
+        # a batch SLOWDOWN (0.5x) in an otherwise clean report: must render
+        # in the informational table without gating
+        {"algorithm": "bfs", "graph": "road", "k": 1, "secs_batch": 1.0,
+         "secs_indep": 1.0},
+        {"algorithm": "bfs", "graph": "road", "k": 8, "secs_batch": 16.0,
+         "secs_indep": 8.0},
     ]}
     regressed_cur = {"bench_n": 1, "threads_par": 2, "cells": [
         {"algorithm": "bfs", "graph": "road", "mode": "seq", "secs": 1.0},

@@ -1,0 +1,129 @@
+#!/usr/bin/env python3
+"""Smoke-compile generated WGSL with naga.
+
+A generated `.wgsl` file is a manifest header plus two sections: a
+`shaders.wgsl` section holding one self-contained WGSL module per kernel
+(each with its own `struct Params` and `@group(0)` bindings, delimited by
+`// shader module: <name>` markers) and a C++ `host.cpp` section. The
+concatenation is NOT one valid WGSL compilation unit — modules redeclare
+`Params` and reuse binding indices by design — so this script performs the
+same split the embedder does (see rust/include/libstarplat_webgpu.h),
+writes each module to its own file, and runs `naga <module>.wgsl` on each.
+
+Exit codes:
+  0  every module of every input validated (or naga missing without
+     --require-naga: extraction still ran, validation skipped)
+  1  naga rejected a module, an input had no shader modules, or naga is
+     missing while --require-naga is set
+
+Usage: wgsl_smoke.py [--require-naga] [--keep DIR] FILE.wgsl...
+"""
+
+import argparse
+import pathlib
+import shutil
+import subprocess
+import sys
+import tempfile
+
+SHADERS_MARK = "// ---- shaders.wgsl"
+HOST_MARK = "// ---- host.cpp"
+MODULE_MARK = "// shader module: "
+
+
+def split_modules(text):
+    """Return [(module_name, wgsl_source)] for one generated file."""
+    modules = []
+    name = None
+    lines = []
+    in_shaders = False
+    for line in text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith(HOST_MARK):
+            break
+        if stripped.startswith(SHADERS_MARK):
+            in_shaders = True
+            continue
+        if not in_shaders:
+            continue
+        if stripped.startswith(MODULE_MARK):
+            if name is not None:
+                modules.append((name, "\n".join(lines) + "\n"))
+            name = stripped[len(MODULE_MARK):].strip()
+            lines = []
+            continue
+        if name is not None:
+            lines.append(line)
+    if name is not None:
+        modules.append((name, "\n".join(lines) + "\n"))
+    return modules
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("files", nargs="+", help="generated .wgsl files")
+    ap.add_argument(
+        "--require-naga",
+        action="store_true",
+        help="fail (instead of skipping validation) when naga is not installed",
+    )
+    ap.add_argument(
+        "--keep",
+        metavar="DIR",
+        help="write split modules here instead of a temp dir (kept afterwards)",
+    )
+    args = ap.parse_args()
+
+    naga = shutil.which("naga")
+    if naga is None:
+        if args.require_naga:
+            print("wgsl-smoke: FAIL: naga not found and --require-naga set", file=sys.stderr)
+            return 1
+        print("wgsl-smoke: naga not found; extracting modules without validating")
+
+    if args.keep:
+        out_dir = pathlib.Path(args.keep)
+        out_dir.mkdir(parents=True, exist_ok=True)
+        tmp = None
+    else:
+        tmp = tempfile.TemporaryDirectory(prefix="wgsl_smoke_")
+        out_dir = pathlib.Path(tmp.name)
+
+    failures = 0
+    total = 0
+    try:
+        for f in args.files:
+            path = pathlib.Path(f)
+            modules = split_modules(path.read_text())
+            if not modules:
+                print(f"wgsl-smoke: FAIL: {f}: no `{MODULE_MARK.strip()}` sections found")
+                failures += 1
+                continue
+            for name, source in modules:
+                total += 1
+                mod_path = out_dir / f"{path.stem}__{name}.wgsl"
+                mod_path.write_text(source)
+                if naga is None:
+                    continue
+                r = subprocess.run(
+                    [naga, str(mod_path)], capture_output=True, text=True
+                )
+                if r.returncode != 0:
+                    failures += 1
+                    print(f"wgsl-smoke: FAIL: {f} module `{name}`:")
+                    sys.stdout.write(r.stdout)
+                    sys.stderr.write(r.stderr)
+    finally:
+        if tmp is not None:
+            tmp.cleanup()
+
+    verb = "validated" if naga else "extracted"
+    print(
+        f"wgsl-smoke: {verb} {total} modules from {len(args.files)} files, "
+        f"{failures} failures"
+    )
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
