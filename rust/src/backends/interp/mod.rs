@@ -417,6 +417,7 @@ pub fn run_with_opts(tf: &TypedFunction, g: &Graph, args: &Args, opts: ExecOpts)
         direction_switches: ex.env.direction_switches.load(std::sync::atomic::Ordering::Relaxed),
         pull_rounds: ex.env.pull_rounds.load(std::sync::atomic::Ordering::Relaxed),
         delta_used: ex.env.delta_used.load(std::sync::atomic::Ordering::Relaxed),
+        batched_roots: 0,
     };
     Ok(Output { props: ex.env.take_props(), ret: ex.ret, stats })
 }

@@ -1,5 +1,7 @@
-//! Execution backends: the CPU interpreter (Seq/Par) and the XLA/PJRT
-//! accelerator driver.
+//! Execution backends: the CPU interpreter (Seq/Par), the plan-level
+//! reference executor (the semantic twin of the text codegens), and the
+//! XLA/PJRT accelerator driver.
 
 pub mod interp;
+pub mod planexec;
 pub mod xla;

@@ -1,0 +1,171 @@
+//! Expression evaluation over the device plan's simulated state.
+//!
+//! Unlike the interpreter's compiled form ([`crate::backends::interp::eval`]),
+//! planexec evaluates raw [`Expr`] trees — the same trees the text backends
+//! spell out via `codegen::cexpr` — against plan-slot buffers. Numeric
+//! semantics (promotion, division, short-circuiting) are shared with the
+//! interpreter by delegating to [`interp::eval::binop`], so a differential
+//! test between the two engines compares *lowering* semantics, never two
+//! subtly different arithmetic models.
+
+use crate::backends::interp::env::{PropData, Val, INF_I};
+use crate::backends::interp::eval::binop;
+use crate::dsl::ast::{BinOp, Expr, UnOp};
+use crate::graph::csr::Graph;
+use crate::ir::plan::DevicePlan;
+use crate::ir::ScalarTy;
+use anyhow::{anyhow, bail, Result};
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// One evaluation scope: host context (`frame: None`) or a kernel thread
+/// (`frame: Some`, with the thread/loop variables bound). Cheap to build per
+/// evaluation point; everything inside is a borrow.
+pub(crate) struct Scope<'a> {
+    pub g: &'a Graph,
+    pub plan: &'a DevicePlan,
+    /// simulated device buffers, indexed by plan slot
+    pub device: &'a [Option<Rc<PropData>>],
+    /// host scalars (declared locals + by-value scalar parameters)
+    pub scalars: &'a HashMap<String, (ScalarTy, Val)>,
+    /// kernel-local bindings (thread var, loop vars, `Decl`s); `None` on host
+    pub frame: Option<&'a HashMap<String, Val>>,
+    /// edge id of the innermost neighbor iteration (`get_edge` / `edge`)
+    pub edge: Option<usize>,
+}
+
+impl Scope<'_> {
+    /// Variable lookup: kernel frame first (loop vars shadow by-value scalar
+    /// parameters, exactly as C block scoping does), then host scalars.
+    pub fn var(&self, name: &str) -> Result<Val> {
+        if let Some(f) = self.frame {
+            if let Some(v) = f.get(name) {
+                return Ok(*v);
+            }
+        }
+        self.scalars
+            .get(name)
+            .map(|(_, v)| *v)
+            .ok_or_else(|| anyhow!("unbound variable `{name}`"))
+    }
+
+    /// Variable lookup as an element index (node or edge id).
+    pub fn index_of(&self, name: &str) -> Result<usize> {
+        let i = self.var(name)?.as_i()?;
+        if i < 0 {
+            bail!("negative index {i} via `{name}`");
+        }
+        Ok(i as usize)
+    }
+
+    fn prop_buf(&self, prop: &str) -> Result<&PropData> {
+        let slot = self
+            .plan
+            .props
+            .slot(prop)
+            .ok_or_else(|| anyhow!("property `{prop}` has no plan slot"))?;
+        self.device[slot as usize]
+            .as_deref()
+            .ok_or_else(|| anyhow!("device buffer for `{prop}` (slot {slot}) is not allocated"))
+    }
+}
+
+/// C-cast semantics onto a machine scalar type: the `({ty})` casts the text
+/// backends emit at init launches, typed `Decl`s, and scalar declarations.
+pub(crate) fn cast_to(st: ScalarTy, v: &Val) -> Val {
+    match st {
+        ScalarTy::F32 | ScalarTy::F64 => Val::F(match v {
+            Val::I(x) => *x as f64,
+            Val::F(x) => *x,
+            Val::B(b) => *b as i64 as f64,
+        }),
+        ScalarTy::Bool => Val::B(match v {
+            Val::B(b) => *b,
+            Val::I(x) => *x != 0,
+            Val::F(x) => *x != 0.0,
+        }),
+        _ => Val::I(match v {
+            Val::I(x) => *x,
+            Val::F(x) => *x as i64,
+            Val::B(b) => *b as i64,
+        }),
+    }
+}
+
+pub(crate) fn eval(e: &Expr, s: &Scope<'_>) -> Result<Val> {
+    Ok(match e {
+        Expr::IntLit(n) => Val::I(*n),
+        Expr::FloatLit(x) => Val::F(*x),
+        Expr::BoolLit(b) => Val::B(*b),
+        // the C family spells this `(INT_MAX / 2)` — the same halved
+        // sentinel as the interpreter's `INF_I`
+        Expr::Inf => Val::I(INF_I),
+        Expr::Var(v) => s.var(v)?,
+        Expr::Prop { obj, prop } => {
+            let idx = s.index_of(obj)?;
+            let buf = s.prop_buf(prop)?;
+            if idx >= buf.len() {
+                bail!("`{obj}.{prop}`: index {idx} out of range (len {})", buf.len());
+            }
+            buf.load(idx)
+        }
+        Expr::Call { recv, name, args } => eval_call(recv.as_deref(), name, args, s)?,
+        Expr::Unary { op, expr } => {
+            let v = eval(expr, s)?;
+            match op {
+                UnOp::Not => Val::B(!v.as_b()?),
+                UnOp::Neg => match v {
+                    Val::I(x) => Val::I(-x),
+                    Val::F(x) => Val::F(-x),
+                    Val::B(_) => bail!("cannot negate a bool"),
+                },
+            }
+        }
+        Expr::Binary { op, lhs, rhs } => {
+            let l = eval(lhs, s)?;
+            // short-circuit exactly like the generated `&&` / `||`
+            if *op == BinOp::And {
+                return Ok(Val::B(l.as_b()? && eval(rhs, s)?.as_b()?));
+            }
+            if *op == BinOp::Or {
+                return Ok(Val::B(l.as_b()? || eval(rhs, s)?.as_b()?));
+            }
+            let r = eval(rhs, s)?;
+            binop(*op, l, r)?
+        }
+    })
+}
+
+fn eval_call(recv: Option<&str>, name: &str, args: &[Expr], s: &Scope<'_>) -> Result<Val> {
+    Ok(match (recv, name) {
+        (Some(_), "num_nodes") => Val::I(s.g.num_nodes() as i64),
+        (Some(_), "num_edges") => Val::I(s.g.num_edges() as i64),
+        (Some(r), "outDegree") => {
+            let v = s.index_of(r)?;
+            Val::I(s.g.out_degree(v as u32) as i64)
+        }
+        (Some(r), "inDegree") => {
+            let v = s.index_of(r)?;
+            Val::I(s.g.in_degree(v as u32) as i64)
+        }
+        (Some(_), "is_an_edge") => {
+            // generated code calls the `findNeighborSorted` binary-search
+            // helper over the sorted CSR — semantically edge existence
+            let u = eval(&args[0], s)?.as_i()?;
+            let w = eval(&args[1], s)?.as_i()?;
+            Val::B(s.g.is_an_edge(u as u32, w as u32))
+        }
+        (Some(_), "get_edge") => {
+            // neighbor iteration supplies the current edge id (spelled
+            // `edge` in generated kernels)
+            let e = s.edge.ok_or_else(|| anyhow!("get_edge outside a neighbor iteration"))?;
+            Val::I(e as i64)
+        }
+        (None, "abs") => match eval(&args[0], s)? {
+            Val::I(x) => Val::I(x.abs()),
+            Val::F(x) => Val::F(x.abs()),
+            Val::B(_) => bail!("abs of bool"),
+        },
+        _ => bail!("unsupported call `{name}` in plan execution"),
+    })
+}

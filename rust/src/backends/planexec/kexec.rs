@@ -1,0 +1,231 @@
+//! Kernel-body execution: one simulated device thread at a time.
+//!
+//! A [`HostOp::Launch`](crate::ir::plan::HostOp::Launch) in the generated
+//! code dispatches `V` threads; planexec sweeps them sequentially,
+//! `v = 0..V`, executing the plan-carried [`KernelOp`] tree per thread. The
+//! op semantics mirror `codegen::body::render_kernel_ops` statement for
+//! statement: guard early-outs, the §3.4 BFS-DAG level filter as the *outer*
+//! condition of a neighbor loop, §3.5 Min/Max as compare-then-update with
+//! win-gated extras and OR-flag clearing, and atomics flattened to
+//! sequential read-modify-write (sound because launches are single-threaded
+//! here — every generated interleaving of these confluent updates reaches
+//! the same fixpoint, which the differential suite checks against the
+//! interpreter).
+
+use super::eval::{cast_to, eval, Scope};
+use crate::backends::interp::env::{PropData, Val};
+use crate::backends::interp::eval::{apply_reduce, binop};
+use crate::dsl::ast::{BinOp, MinMax};
+use crate::graph::csr::Graph;
+use crate::ir::kernel::{KCell, KTarget, KernelBody, KernelOp};
+use crate::ir::plan::DevicePlan;
+use crate::ir::ScalarTy;
+use anyhow::{anyhow, bail, Result};
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Everything a launch's threads can see: simulated device buffers, host
+/// scalars passed by value, the BFS level buffer (inside a BFS sweep), and
+/// the fixedPoint OR-flag word.
+pub(crate) struct KernelCtx<'a> {
+    pub g: &'a Graph,
+    pub plan: &'a DevicePlan,
+    pub device: &'a [Option<Rc<PropData>>],
+    pub scalars: &'a HashMap<String, (ScalarTy, Val)>,
+    /// the enclosing BFS skeleton's level buffer (`gpu_level` in generated
+    /// kernels); `None` outside BFS sweeps
+    pub levels: Option<&'a PropData>,
+    /// the fixedPoint convergence word (`d_finished`); a winning Min/Max
+    /// with `or_flag` clears it
+    pub flag: &'a Cell<bool>,
+}
+
+impl KernelCtx<'_> {
+    fn scope<'b>(&'b self, frame: &'b HashMap<String, Val>, edge: Option<usize>) -> Scope<'b> {
+        Scope {
+            g: self.g,
+            plan: self.plan,
+            device: self.device,
+            scalars: self.scalars,
+            frame: Some(frame),
+            edge,
+        }
+    }
+
+    fn buf(&self, slot: u32) -> Result<&PropData> {
+        self.device
+            .get(slot as usize)
+            .and_then(|b| b.as_deref())
+            .ok_or_else(|| anyhow!("kernel touches unallocated device slot {slot}"))
+    }
+}
+
+/// Run one simulated thread of a kernel body: bind the thread variable,
+/// apply the guard early-out (`if (!(guard)) return;`), then execute the op
+/// tree. `cells` holds the launch's scalar-reduction words.
+pub(crate) fn exec_thread(
+    cx: &KernelCtx<'_>,
+    body: &KernelBody,
+    v: usize,
+    cells: &mut HashMap<String, Val>,
+) -> Result<()> {
+    let mut frame: HashMap<String, Val> = HashMap::new();
+    frame.insert(body.thread_var.clone(), Val::I(v as i64));
+    if let Some(g) = &body.guard {
+        if !eval(g, &cx.scope(&frame, None))?.as_b()? {
+            return Ok(());
+        }
+    }
+    exec_ops(cx, &body.ops, &mut frame, cells, None)
+}
+
+fn exec_ops(
+    cx: &KernelCtx<'_>,
+    ops: &[KernelOp],
+    frame: &mut HashMap<String, Val>,
+    cells: &mut HashMap<String, Val>,
+    edge: Option<usize>,
+) -> Result<()> {
+    for op in ops {
+        match op {
+            KernelOp::Decl { name, ty, init } => {
+                let v = match init {
+                    Some(e) => cast_to(*ty, &eval(e, &cx.scope(frame, edge))?),
+                    None => Val::zero_st(*ty),
+                };
+                frame.insert(name.clone(), v);
+            }
+            KernelOp::AssignVar { name, value } => {
+                let v = eval(value, &cx.scope(frame, edge))?;
+                // C assignment converts to the lvalue's declared kind
+                let v = match frame.get(name) {
+                    Some(old) => cast_to(val_kind(old), &v),
+                    None => v,
+                };
+                frame.insert(name.clone(), v);
+            }
+            KernelOp::AssignProp { slot, obj, value } => {
+                let (idx, v) = {
+                    let s = cx.scope(frame, edge);
+                    (s.index_of(obj)?, eval(value, &s)?)
+                };
+                cx.buf(*slot)?.store(idx, cast_to(cx.plan.props.meta(*slot).ty, &v));
+            }
+            KernelOp::Reduce { cell, op, ty, value } => {
+                let rhs = eval(value, &cx.scope(frame, edge))?;
+                match cell {
+                    KCell::Cell { name } => {
+                        let cur = *cells
+                            .get(name)
+                            .ok_or_else(|| anyhow!("reduction cell `{name}` not bound"))?;
+                        let next = apply_reduce(*op, cur, rhs)?;
+                        cells.insert(name.clone(), cast_to(*ty, &next));
+                    }
+                    KCell::Prop { slot, obj } => {
+                        let idx = cx.scope(frame, edge).index_of(obj)?;
+                        let buf = cx.buf(*slot)?;
+                        let next = apply_reduce(*op, buf.load(idx), rhs)?;
+                        buf.store(idx, cast_to(cx.plan.props.meta(*slot).ty, &next));
+                    }
+                }
+            }
+            KernelOp::MinMax { kind, slot, obj, ty, compare, extra, or_flag } => {
+                // rendered as: `{ty} {prop}_new = compare; if (cur > new) {...}`
+                let (idx, proposed) = {
+                    let s = cx.scope(frame, edge);
+                    (s.index_of(obj)?, cast_to(*ty, &eval(compare, &s)?))
+                };
+                let buf = cx.buf(*slot)?;
+                let cmp = match kind {
+                    MinMax::Min => BinOp::Gt,
+                    MinMax::Max => BinOp::Lt,
+                };
+                if binop(cmp, buf.load(idx), proposed)?.as_b()? {
+                    buf.store(idx, proposed);
+                    for (target, e) in extra {
+                        let v = eval(e, &cx.scope(frame, edge))?;
+                        match target {
+                            KTarget::Var(name) => {
+                                let v = match frame.get(name) {
+                                    Some(old) => cast_to(val_kind(old), &v),
+                                    None => v,
+                                };
+                                frame.insert(name.clone(), v);
+                            }
+                            KTarget::Prop { slot, obj } => {
+                                let idx = cx.scope(frame, edge).index_of(obj)?;
+                                cx.buf(*slot)?
+                                    .store(idx, cast_to(cx.plan.props.meta(*slot).ty, &v));
+                            }
+                        }
+                    }
+                    if *or_flag {
+                        cx.flag.set(false);
+                    }
+                }
+            }
+            KernelOp::NeighborLoop { var, of, reverse, bfs, filter, body } => {
+                let of_idx = cx.scope(frame, edge).index_of(of)?;
+                let (start, end) = if *reverse {
+                    (
+                        cx.g.rev_offsets[of_idx] as usize,
+                        cx.g.rev_offsets[of_idx + 1] as usize,
+                    )
+                } else {
+                    (cx.g.offsets[of_idx] as usize, cx.g.offsets[of_idx + 1] as usize)
+                };
+                let saved = frame.get(var).copied();
+                for i in start..end {
+                    let nbr = if *reverse { cx.g.rev_adj[i] } else { cx.g.adj[i] } as usize;
+                    frame.insert(var.clone(), Val::I(nbr as i64));
+                    // §3.4 BFS-DAG filter, the outer condition: a CSR scan
+                    // keeps the children (level(of) + 1), a reverse-CSR pull
+                    // keeps the parents (level(of) - 1)
+                    if bfs.is_some() {
+                        let lv = cx
+                            .levels
+                            .ok_or_else(|| anyhow!("BFS-DAG filter outside a BFS sweep"))?;
+                        let rel = if *reverse { -1 } else { 1 };
+                        if lv.load(nbr).as_i()? != lv.load(of_idx).as_i()? + rel {
+                            continue;
+                        }
+                    }
+                    if let Some(f) = filter {
+                        if !eval(f, &cx.scope(frame, Some(i)))?.as_b()? {
+                            continue;
+                        }
+                    }
+                    exec_ops(cx, body, frame, cells, Some(i))?;
+                }
+                // the loop variable is block-scoped in the rendered kernel
+                match saved {
+                    Some(v) => frame.insert(var.clone(), v),
+                    None => frame.remove(var),
+                };
+            }
+            KernelOp::If { cond, then, els } => {
+                if eval(cond, &cx.scope(frame, edge))?.as_b()? {
+                    exec_ops(cx, then, frame, cells, edge)?;
+                } else if let Some(e) = els {
+                    exec_ops(cx, e, frame, cells, edge)?;
+                }
+            }
+            KernelOp::Unsupported { what } => {
+                bail!("kernel op unsupported by every backend: {what}")
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The machine kind a runtime value currently has — used to model C's
+/// convert-on-assignment for kernel locals (whose declared width is not
+/// tracked past their `Decl`).
+fn val_kind(v: &Val) -> ScalarTy {
+    match v {
+        Val::F(_) => ScalarTy::F64,
+        Val::B(_) => ScalarTy::Bool,
+        Val::I(_) => ScalarTy::I64,
+    }
+}

@@ -1,0 +1,582 @@
+//! Plan-level reference executor: runs the backend-neutral [`DevicePlan`]
+//! the way a generated program would run it.
+//!
+//! Every text backend (CUDA, OpenCL, SYCL, OpenACC, HIP, Metal, WGSL) is a
+//! spelling table over the same lowered artifact: the [`HostOp`] schedule
+//! plus plan-carried [`KernelOp`](crate::ir::kernel::KernelOp) bodies. Until
+//! now that artifact was only checked *syntactically* (snapshot and
+//! conformance tests over the rendered text); whether the lowering it
+//! describes actually computes SSSP was untested without a GPU. This module
+//! closes that gap: it interprets the plan itself — simulated device buffers
+//! keyed by plan slot, the §4.1 transfer protocol, Fig 9/12 loop skeletons,
+//! kernel sweeps as sequential `v = 0..V` thread loops — so the lowering's
+//! *semantics* differential-test against the AST interpreter
+//! ([`crate::backends::interp`]) on every machine (`tests/planexec_parity.rs`).
+//!
+//! What it models faithfully:
+//! - buffer identity by **slot number** (an aliasing bug in the plan's slot
+//!   assignment shows up as wrong answers, exactly as it would on device);
+//! - the launch protocol: bound H2D copies, scalar-reduction cells seeded
+//!   from host scalars and copied back after the launch, deferred D2H left
+//!   to the epilogue's outputs-only copy-out;
+//! - the fixedPoint skeleton's single OR-flag word and the BFS skeleton's
+//!   level expansion / reverse level descent, including the synthetic
+//!   level save/restore repair kernels the plan inserts;
+//! - the `SchedulePlan` pull twins behind the same runtime direction switch
+//!   generated hosts compile in (`STARPLAT_DIRECTION=pull`).
+//!
+//! What it deliberately does not model: device *concurrency*. A launch runs
+//! its threads sequentially, and atomics collapse to plain
+//! read-modify-write. The algorithms the DSL targets are confluent — any
+//! interleaving reaches the same fixpoint — so the sequential schedule is
+//! one of the schedules real hardware could produce, and bit-for-bit parity
+//! with the interpreter is exactly the property the differential suite
+//! asserts. Floats are f64, like the interpreter oracle (hardware f32
+//! backends diverge in precision, not in semantics).
+
+mod eval;
+mod kexec;
+
+use crate::backends::interp::env::{PropData, Val};
+use crate::backends::interp::eval::apply_reduce;
+use crate::backends::interp::{Args, Direction, ExecOpts, ExecStats, Output};
+use crate::graph::csr::Graph;
+use crate::ir::plan::{DevicePlan, HostOp, HostParam};
+use crate::ir::{lower, ScalarTy};
+use crate::sema::TypedFunction;
+use anyhow::{anyhow, bail, ensure, Result};
+use eval::{cast_to, eval as eval_expr, Scope};
+use kexec::KernelCtx;
+use std::cell::Cell;
+use std::collections::HashMap;
+use std::rc::Rc;
+
+/// Run a type-checked DSL function by executing its device plan. Direction
+/// policy falls back to `STARPLAT_DIRECTION`, mirroring the `getenv` switch
+/// compiled into generated hosts.
+pub fn run(tf: &TypedFunction, g: &Graph, args: &Args) -> Result<Output> {
+    run_with_opts(tf, g, args, ExecOpts::default())
+}
+
+/// [`run`] with explicit [`ExecOpts`]. Only the `direction` option is
+/// meaningful here — generated programs have no thread-count, frontier,
+/// fault, or delta switches, so the executor ignores those fields.
+pub fn run_with_opts(tf: &TypedFunction, g: &Graph, args: &Args, opts: ExecOpts) -> Result<Output> {
+    let ir = lower(tf);
+    let plan = DevicePlan::build(&ir)?;
+    run_plan(&plan, g, args, &opts)
+}
+
+/// Execute an already-built plan (the parity and coverage tests build plans
+/// once and reuse them).
+pub fn run_plan(plan: &DevicePlan, g: &Graph, args: &Args, opts: &ExecOpts) -> Result<Output> {
+    let mut ex = Exec::new(plan, g, args, opts)?;
+    ex.run_ops(&plan.host_ops)?;
+    Ok(ex.into_output())
+}
+
+/// Host-side control flow: a generated `return` unwinds the whole schedule.
+enum Flow {
+    Normal,
+    Return,
+}
+
+/// Runaway guard for `while` / `do-while` loops the plan carries verbatim
+/// (fixedPoints get the interpreter's tighter `4V + 16` bound; a plain DSL
+/// loop like PageRank's is bounded by its own condition).
+const LOOP_CAP: usize = 1_000_000;
+
+struct Exec<'a> {
+    g: &'a Graph,
+    plan: &'a DevicePlan,
+    /// simulated device buffers, by plan slot
+    device: Vec<Option<Rc<PropData>>>,
+    /// host-side arrays (property parameters; epilogue copy-outs land here)
+    host: Vec<Option<Rc<PropData>>>,
+    /// host scalars: declared locals and by-value scalar parameters
+    scalars: HashMap<String, (ScalarTy, Val)>,
+    sets: HashMap<String, Vec<crate::graph::csr::Node>>,
+    /// the single fixedPoint OR-flag word (§4.1)
+    flag: Cell<bool>,
+    /// the host's `STARPLAT_DIRECTION=pull` switch: launches with a pull
+    /// twin run it instead of the push body
+    use_pull: bool,
+    pull_rounds: u64,
+    ret: Option<Val>,
+}
+
+impl<'a> Exec<'a> {
+    fn new(plan: &'a DevicePlan, g: &'a Graph, args: &Args, opts: &ExecOpts) -> Result<Exec<'a>> {
+        let mut host: Vec<Option<Rc<PropData>>> = vec![None; plan.props.len()];
+        let mut scalars = HashMap::new();
+        let mut sets = HashMap::new();
+        for p in &plan.host_params {
+            match p {
+                HostParam::Graph { .. } => {}
+                HostParam::Prop { slot } => {
+                    let m = plan.props.meta(*slot);
+                    // edge-property parameters are the weight array, exactly
+                    // as generated mains pass them; node parameters arrive
+                    // zeroed like the interpreter's
+                    let buf = if m.edge {
+                        PropData::from_weights(g)
+                    } else {
+                        PropData::alloc_st(m.ty, g.num_nodes())
+                    };
+                    host[*slot as usize] = Some(Rc::new(buf));
+                }
+                HostParam::Scalar { name, ty } => {
+                    let v = args
+                        .scalars
+                        .get(name)
+                        .ok_or_else(|| anyhow!("missing scalar argument `{name}`"))?;
+                    scalars.insert(name.clone(), (*ty, cast_to(*ty, v)));
+                }
+                HostParam::Set { name } => {
+                    let vs = args
+                        .sets
+                        .get(name)
+                        .ok_or_else(|| anyhow!("missing SetN argument `{name}`"))?;
+                    sets.insert(name.clone(), vs.clone());
+                }
+            }
+        }
+        let dir = opts.direction.unwrap_or_else(Direction::from_env);
+        Ok(Exec {
+            g,
+            plan,
+            device: vec![None; plan.props.len()],
+            host,
+            scalars,
+            sets,
+            flag: Cell::new(true),
+            // generated hosts test `getenv("STARPLAT_DIRECTION") == "pull"`;
+            // anything else (including Auto) runs the push body
+            use_pull: dir == Direction::Pull,
+            pull_rounds: 0,
+            ret: None,
+        })
+    }
+
+    fn into_output(self) -> Output {
+        let mut props = HashMap::new();
+        for (i, h) in self.host.iter().enumerate() {
+            if let Some(buf) = h {
+                props.insert(self.plan.props.meta(i as u32).name.clone(), clone_buf(buf));
+            }
+        }
+        Output {
+            props,
+            ret: self.ret,
+            stats: ExecStats { pull_rounds: self.pull_rounds, ..ExecStats::default() },
+        }
+    }
+
+    fn heval(&self, e: &crate::dsl::ast::Expr) -> Result<Val> {
+        let s = Scope {
+            g: self.g,
+            plan: self.plan,
+            device: &self.device,
+            scalars: &self.scalars,
+            frame: None,
+            edge: None,
+        };
+        eval_expr(e, &s)
+    }
+
+    fn dev(&self, slot: u32) -> Result<Rc<PropData>> {
+        self.device
+            .get(slot as usize)
+            .and_then(|b| b.clone())
+            .ok_or_else(|| anyhow!("device slot {slot} used before its AllocProp"))
+    }
+
+    fn elem_count(&self, slot: u32) -> usize {
+        if self.plan.props.meta(slot).edge {
+            self.g.num_edges()
+        } else {
+            self.g.num_nodes()
+        }
+    }
+
+    fn run_ops(&mut self, ops: &[HostOp]) -> Result<Flow> {
+        for op in ops {
+            if let Flow::Return = self.op(op)? {
+                return Ok(Flow::Return);
+            }
+        }
+        Ok(Flow::Normal)
+    }
+
+    fn op(&mut self, op: &HostOp) -> Result<Flow> {
+        let plan = self.plan;
+        match op {
+            // pure setup/teardown spellings — nothing to simulate
+            HostOp::DeclDims
+            | HostOp::GraphToDevice
+            | HostOp::LaunchSetup
+            | HostOp::AllocFlag
+            | HostOp::EpilogueBegin
+            | HostOp::FreeFlag
+            | HostOp::FreeGraph => {}
+            HostOp::AllocProp { slot } => {
+                let m = plan.props.meta(*slot);
+                self.device[*slot as usize] =
+                    Some(Rc::new(PropData::alloc_st(m.ty, self.elem_count(*slot))));
+            }
+            HostOp::DeclScalar { name, ty, init } => {
+                let v = match init {
+                    Some(e) => cast_to(*ty, &self.heval(e)?),
+                    None => Val::zero_st(*ty),
+                };
+                self.scalars.insert(name.clone(), (*ty, v));
+            }
+            HostOp::AssignScalar { name, value } => {
+                let v = self.heval(value)?;
+                let v = match self.scalars.get(name) {
+                    Some((ty, _)) => (*ty, cast_to(*ty, &v)),
+                    None => (kind_of(&v), v),
+                };
+                self.scalars.insert(name.clone(), v);
+            }
+            HostOp::ReduceScalar { name, op, value } => {
+                let rhs = self.heval(value)?;
+                let (ty, cur) = *self
+                    .scalars
+                    .get(name)
+                    .ok_or_else(|| anyhow!("reduction into undeclared scalar `{name}`"))?;
+                let next = apply_reduce(*op, cur, rhs)?;
+                self.scalars.insert(name.clone(), (ty, cast_to(ty, &next)));
+            }
+            HostOp::CopyProp { dst, src } => {
+                // device-to-device memcpy
+                copy_buf(&self.dev(*dst)?, &self.dev(*src)?)?;
+            }
+            HostOp::SetElement { slot, index, value } => {
+                // single-element device store (`src.dist = 0`)
+                let idx = self
+                    .scalars
+                    .get(index)
+                    .ok_or_else(|| anyhow!("SetElement index `{index}` unbound"))?
+                    .1
+                    .as_i()?;
+                ensure!(idx >= 0, "SetElement index `{index}` is negative");
+                let v = self.heval(value)?;
+                self.dev(*slot)?
+                    .store(idx as usize, cast_to(plan.props.meta(*slot).ty, &v));
+            }
+            HostOp::InitProps { inits, .. } => {
+                // attachNodeProperty: host-evaluated broadcast with a C cast,
+                // `initKernel<ty>(len, buf, (ty)value)`
+                for (slot, e) in inits {
+                    let v = cast_to(plan.props.meta(*slot).ty, &self.heval(e)?);
+                    let buf = self.dev(*slot)?;
+                    for i in 0..buf.len() {
+                        buf.store(i, v);
+                    }
+                }
+            }
+            HostOp::Launch { kernel } => self.launch(*kernel)?,
+            HostOp::SeqFor { var, set, body } => {
+                let items: Vec<i64> = if set == "g.nodes()" {
+                    (0..self.g.num_nodes() as i64).collect()
+                } else {
+                    self.sets
+                        .get(set)
+                        .ok_or_else(|| anyhow!("sequential loop over unbound set `{set}`"))?
+                        .iter()
+                        .map(|&n| n as i64)
+                        .collect()
+                };
+                for it in items {
+                    self.scalars.insert(var.clone(), (ScalarTy::I32, Val::I(it)));
+                    if let Flow::Return = self.run_ops(body)? {
+                        return Ok(Flow::Return);
+                    }
+                }
+            }
+            HostOp::FixedPoint { var, body, .. } => {
+                // Fig 12: host bool mirrors the device OR-flag word each
+                // iteration; converged when no launch cleared it
+                self.scalars.insert(var.clone(), (ScalarTy::Bool, Val::B(false)));
+                let cap = 4 * self.g.num_nodes() + 16;
+                let mut iters = 0usize;
+                loop {
+                    self.scalars.insert(var.clone(), (ScalarTy::Bool, Val::B(true)));
+                    self.flag.set(true);
+                    if let Flow::Return = self.run_ops(body)? {
+                        return Ok(Flow::Return);
+                    }
+                    let fin = self.flag.get();
+                    self.scalars.insert(var.clone(), (ScalarTy::Bool, Val::B(fin)));
+                    if fin {
+                        break;
+                    }
+                    iters += 1;
+                    ensure!(iters <= cap, "fixedPoint exceeded {cap} iterations");
+                }
+            }
+            HostOp::Bfs { index, from, .. } => self.bfs(*index, from)?,
+            HostOp::DoWhile { body, cond } => {
+                let mut iters = 0usize;
+                loop {
+                    if let Flow::Return = self.run_ops(body)? {
+                        return Ok(Flow::Return);
+                    }
+                    if !self.heval(cond)?.as_b()? {
+                        break;
+                    }
+                    iters += 1;
+                    ensure!(iters <= LOOP_CAP, "do-while exceeded {LOOP_CAP} iterations");
+                }
+            }
+            HostOp::While { cond, body } => {
+                let mut iters = 0usize;
+                while self.heval(cond)?.as_b()? {
+                    if let Flow::Return = self.run_ops(body)? {
+                        return Ok(Flow::Return);
+                    }
+                    iters += 1;
+                    ensure!(iters <= LOOP_CAP, "while exceeded {LOOP_CAP} iterations");
+                }
+            }
+            HostOp::If { cond, then, els } => {
+                let taken = if self.heval(cond)?.as_b()? {
+                    then
+                } else {
+                    match els {
+                        Some(e) => e,
+                        None => return Ok(Flow::Normal),
+                    }
+                };
+                return self.run_ops(taken);
+            }
+            HostOp::Return { value } => {
+                self.ret = Some(self.heval(value)?);
+                return Ok(Flow::Return);
+            }
+            HostOp::Unsupported { what } => {
+                bail!("host construct generated code cannot express: {what}")
+            }
+            HostOp::CopyOut { slot } => {
+                let dst = self.host_buf(*slot);
+                copy_buf(&dst, &self.dev(*slot)?)?;
+            }
+            HostOp::FreeProp { slot } => self.device[*slot as usize] = None,
+        }
+        Ok(Flow::Normal)
+    }
+
+    /// Host array for a slot, created on first use (parameters preexist).
+    fn host_buf(&mut self, slot: u32) -> Rc<PropData> {
+        let len = self.elem_count(slot);
+        let m = self.plan.props.meta(slot);
+        self.host[slot as usize]
+            .get_or_insert_with(|| Rc::new(PropData::alloc_st(m.ty, len)))
+            .clone()
+    }
+
+    /// One `forall` launch: the full §4.1 protocol around a sequential
+    /// thread sweep.
+    fn launch(&mut self, kernel: usize) -> Result<()> {
+        let plan = self.plan;
+        let k = &plan.kernels[kernel];
+        // bound H2D copies
+        for &slot in &k.copy_in {
+            let src = self.host[slot as usize]
+                .clone()
+                .ok_or_else(|| anyhow!("copy-in of slot {slot} with no host array"))?;
+            copy_buf(&self.dev(slot)?, &src)?;
+        }
+        // scalar-reduction cells seeded from the current host scalars
+        let mut cells: HashMap<String, Val> = HashMap::new();
+        for (name, _, ty) in &k.reductions {
+            let cur = self
+                .scalars
+                .get(name)
+                .map(|(_, v)| *v)
+                .unwrap_or_else(|| Val::zero_st(*ty));
+            cells.insert(name.clone(), cast_to(*ty, &cur));
+        }
+        // the host-side direction switch: run the pull twin when compiled in
+        // and selected, else the push body
+        let pull = self.use_pull && k.pull_body.is_some();
+        let body = if pull {
+            k.pull_body.as_ref().unwrap()
+        } else {
+            k.body
+                .as_ref()
+                .ok_or_else(|| anyhow!("kernel {} has no body to launch", k.name))?
+        };
+        {
+            let cx = KernelCtx {
+                g: self.g,
+                plan,
+                device: &self.device,
+                scalars: &self.scalars,
+                levels: None,
+                flag: &self.flag,
+            };
+            for v in 0..self.g.num_nodes() {
+                kexec::exec_thread(&cx, body, v, &mut cells)?;
+            }
+        }
+        if pull {
+            self.pull_rounds += 1;
+        }
+        // cells return to their host scalars
+        for (name, _, _) in &k.reductions {
+            let v = cells.remove(name).expect("cell seeded above");
+            let ty = self.scalars.get(name).map(|(t, _)| *t).unwrap_or(kind_of(&v));
+            self.scalars.insert(name.clone(), (ty, cast_to(ty, &v)));
+        }
+        // bound D2H copies — unless deferred, in which case the epilogue's
+        // outputs-only copy-out is the only return path (generated loops
+        // never flush mid-stream)
+        if !k.defer_to_loop_exit {
+            for &slot in &k.copy_out {
+                let dst = self.host_buf(slot);
+                copy_buf(&dst, &self.dev(slot)?)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// The Fig 9 `iterateInBFS` skeleton: level-synchronous forward
+    /// expansion over an explicit level buffer, then the optional reverse
+    /// sweep walking the levels back down.
+    fn bfs(&mut self, index: usize, from: &str) -> Result<()> {
+        let plan = self.plan;
+        let b = &plan.bfs_loops[index];
+        let vcount = self.g.num_nodes();
+        let src = self
+            .scalars
+            .get(from)
+            .ok_or_else(|| anyhow!("BFS source `{from}` unbound"))?
+            .1
+            .as_i()?;
+        ensure!(
+            (0..vcount as i64).contains(&src),
+            "BFS source `{from}` = {src} out of range (V = {vcount})"
+        );
+        // a declared `level` property doubles as the skeleton's buffer;
+        // otherwise the skeleton allocates an implicit one at the site (BC)
+        let lvl: Rc<PropData> = match b.level {
+            Some(slot) => self.dev(slot)?,
+            None => Rc::new(PropData::alloc_st(ScalarTy::I32, vcount)),
+        };
+        for i in 0..vcount {
+            lvl.store(i, Val::I(-1));
+        }
+        lvl.store(src as usize, Val::I(0));
+
+        let fwd = &plan.kernels[b.fwd];
+        ensure!(
+            fwd.reductions.is_empty(),
+            "BFS sweep kernels with scalar reductions are not modeled"
+        );
+        let fwd_body =
+            fwd.body.as_ref().ok_or_else(|| anyhow!("BFS forward kernel has no body"))?;
+        let mut hops: i64 = 0;
+        loop {
+            let mut finished = true;
+            for v in 0..vcount {
+                if lvl.load(v).as_i()? != hops {
+                    continue;
+                }
+                // discovery first, then the sweep body — the generated
+                // kernel's statement order
+                for i in self.g.edge_range(v as u32) {
+                    let nbr = self.g.adj[i] as usize;
+                    if lvl.load(nbr).as_i()? == -1 {
+                        lvl.store(nbr, Val::I(hops + 1));
+                        finished = false;
+                    }
+                }
+                let cx = KernelCtx {
+                    g: self.g,
+                    plan,
+                    device: &self.device,
+                    scalars: &self.scalars,
+                    levels: Some(&*lvl),
+                    flag: &self.flag,
+                };
+                let mut cells = HashMap::new();
+                kexec::exec_thread(&cx, fwd_body, v, &mut cells)?;
+            }
+            hops += 1;
+            if finished {
+                break;
+            }
+        }
+
+        if let Some(rk) = b.rev {
+            let rev = &plan.kernels[rk];
+            ensure!(
+                rev.reductions.is_empty(),
+                "BFS sweep kernels with scalar reductions are not modeled"
+            );
+            let rev_body =
+                rev.body.as_ref().ok_or_else(|| anyhow!("BFS reverse kernel has no body"))?;
+            // the skeleton re-descends from the depth counter where the
+            // forward loop left it (one past the deepest level)
+            let mut h = hops;
+            while h >= 0 {
+                for v in 0..vcount {
+                    if lvl.load(v).as_i()? != h {
+                        continue;
+                    }
+                    let cx = KernelCtx {
+                        g: self.g,
+                        plan,
+                        device: &self.device,
+                        scalars: &self.scalars,
+                        levels: Some(&*lvl),
+                        flag: &self.flag,
+                    };
+                    let mut cells = HashMap::new();
+                    kexec::exec_thread(&cx, rev_body, v, &mut cells)?;
+                }
+                h -= 1;
+            }
+        }
+        Ok(())
+    }
+}
+
+/// The machine kind a runtime value currently has (declared types are used
+/// wherever the plan records them; this is the fallback for undeclared
+/// bindings).
+fn kind_of(v: &Val) -> ScalarTy {
+    match v {
+        Val::F(_) => ScalarTy::F64,
+        Val::B(_) => ScalarTy::Bool,
+        Val::I(_) => ScalarTy::I64,
+    }
+}
+
+/// Element-wise buffer copy (the simulated `memcpy`).
+fn copy_buf(dst: &PropData, src: &PropData) -> Result<()> {
+    ensure!(
+        dst.len() == src.len(),
+        "buffer copy length mismatch ({} vs {})",
+        dst.len(),
+        src.len()
+    );
+    for i in 0..src.len() {
+        dst.store(i, src.load(i));
+    }
+    Ok(())
+}
+
+fn clone_buf(src: &PropData) -> PropData {
+    let dst = match src {
+        PropData::I(_) => PropData::alloc_st(ScalarTy::I64, src.len()),
+        PropData::F(_) => PropData::alloc_st(ScalarTy::F64, src.len()),
+        PropData::B(_) => PropData::alloc_st(ScalarTy::Bool, src.len()),
+    };
+    for i in 0..src.len() {
+        dst.store(i, src.load(i));
+    }
+    dst
+}

@@ -89,10 +89,11 @@ fn print_help() {
          USAGE: starplat <COMMAND> [FLAGS]\n\
          \n\
          COMMANDS:\n\
-         \x20 compile --backend <cuda|hip|opencl|sycl|openacc|metal|wgsl|jax|all> [--out DIR] FILE...\n\
-         \x20         (--backend all emits every text backend for each file)\n\
+         \x20 compile --backend <cuda|hip|opencl|sycl|openacc|metal|wgsl|jax|planexec|all> [--out DIR] FILE...\n\
+         \x20         (--backend all emits every text backend for each file;\n\
+         \x20          planexec emits the executable plan's schedule listing)\n\
          \x20 export-graphs [--out artifacts/graphs] [--scale 800]\n\
-         \x20 run --algo <bc|pr|sssp|tc|bfs|cc> --graph <TW|..|UR> --backend <seq|par|xla|gunrock|lonestar>\n\
+         \x20 run --algo <bc|pr|sssp|tc|bfs|cc> --graph <TW|..|UR> --backend <seq|par|planexec|xla|gunrock|lonestar>\n\
          \x20 stats [--scale 4000]          print the Table-2 graph suite\n\
          \x20 graphgen --kind <rmat|uniform|road|social> --nodes N --edges M --out FILE\n\
          \x20 loc                           paper §5 DSL vs generated LoC table"
@@ -108,6 +109,7 @@ pub fn backend_ext(b: &str) -> &'static str {
         "sycl" => "sycl.cpp",
         "metal" => "metal",
         "wgsl" => "wgsl",
+        "planexec" => "planexec.txt",
         _ => "acc.cpp",
     }
 }

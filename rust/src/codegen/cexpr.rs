@@ -21,7 +21,11 @@ pub struct Style {
     pub num_nodes: &'static str,
     pub bool_true: &'static str,
     pub bool_false: &'static str,
-    /// spelling of the DSL's `INF` ("INT_MAX"; WGSL has no such macro)
+    /// spelling of the DSL's `INF`. `(INT_MAX / 2)` in the C family — the
+    /// halved sentinel keeps `dist[v] + weight[e]` from overflowing (UB in
+    /// C) and matches the interpreter oracle's `reference::INF`, so plan
+    /// execution and generated code agree bit-for-bit on unreachable
+    /// vertices. WGSL has no macro, so it spells the literal.
     pub inf: &'static str,
     /// spelling of `abs(x)` ("fabs" for the C family, "abs" in WGSL)
     pub abs_fn: &'static str,
@@ -58,7 +62,7 @@ pub fn cuda_style() -> Style {
         num_nodes: "V",
         bool_true: "true",
         bool_false: "false",
-        inf: "INT_MAX",
+        inf: "(INT_MAX / 2)",
         abs_fn: "fabs",
         edge_fn_passes_graph: true,
         atomic_props: HashSet::new(),
@@ -117,7 +121,7 @@ pub fn wgsl_style(atomic_props: HashSet<String>, atomic_f32_props: HashSet<Strin
     Style {
         bool_true: "1",
         bool_false: "0",
-        inf: "2147483647",
+        inf: "1073741823",
         abs_fn: "abs",
         edge_fn_passes_graph: false,
         atomic_props,
@@ -246,15 +250,18 @@ mod tests {
     }
 
     #[test]
-    fn inf_is_int_max() {
+    fn inf_is_the_overflow_safe_half_sentinel() {
+        // must equal the interpreter's `reference::INF` (i32::MAX / 2): the
+        // plan executor differential-tests generated semantics against it
         let e = first_expr("function f(Graph g) { int x = INF; }");
-        assert_eq!(emit(&e, &cuda_style()), "INT_MAX");
+        assert_eq!(emit(&e, &cuda_style()), "(INT_MAX / 2)");
+        assert_eq!(crate::algorithms::reference::INF, 1073741823);
     }
 
     #[test]
     fn wgsl_style_spellings() {
         let e = first_expr("function f(Graph g) { int x = INF; }");
-        assert_eq!(emit(&e, &wgsl_style(HashSet::new(), HashSet::new())), "2147483647");
+        assert_eq!(emit(&e, &wgsl_style(HashSet::new(), HashSet::new())), "1073741823");
         let e =
             first_expr("function f(Graph g, propNode<int> dist, node v) { int x = v.dist + 3; }");
         let mut st = wgsl_style(["dist".to_string()].into_iter().collect(), HashSet::new());

@@ -77,10 +77,42 @@ pub fn generate(backend: &str, ir: &IrProgram) -> anyhow::Result<String> {
         "metal" => metal::generate_with(ir, &plan),
         "wgsl" => wgsl::generate_with(ir, &plan),
         "jax" => jax::generate_with(ir, &plan)?.python,
+        "planexec" => planexec_listing(&plan),
         other => anyhow::bail!(
-            "unknown backend `{other}` (cuda|hip|opencl|sycl|openacc|metal|wgsl|jax)"
+            "unknown backend `{other}` (cuda|hip|opencl|sycl|openacc|metal|wgsl|jax|planexec)"
         ),
     })
+}
+
+/// `--backend planexec` emits no device source — the plan executor
+/// ([`crate::backends::planexec`]) runs the lowering in-process. Compiling
+/// still produces a text artifact: the exact plan manifests the executor
+/// walks (the same blocks every text backend embeds as comments), so the
+/// executed schedule can be inspected and diffed like any generated file.
+fn planexec_listing(plan: &DevicePlan) -> String {
+    let mut buf = CodeBuf::new();
+    buf.line(&format!("// {} — plan-level reference execution listing", plan.func));
+    buf.line("// This backend is executable, not textual: `--backend planexec` at run");
+    buf.line("// time walks the device plan below in-process (simulated slot buffers,");
+    buf.line("// sequential thread sweeps), differential-tested against the AST");
+    buf.line("// interpreter in tests/planexec_parity.rs.");
+    buf.line("");
+    for l in plan.manifest() {
+        buf.line(&format!("// {l}"));
+    }
+    buf.line("");
+    for l in plan.host_manifest() {
+        buf.line(&format!("// {l}"));
+    }
+    buf.line("");
+    for l in plan.kernel_manifest() {
+        buf.line(&format!("// {l}"));
+    }
+    buf.line("");
+    for l in plan.schedule_manifest() {
+        buf.line(&format!("// {l}"));
+    }
+    buf.finish()
 }
 
 /// Every text backend, in the order the snapshot matrix pins them.

@@ -4,10 +4,13 @@
 //! - `gunrock` / `lonestar`     — the Table-3 hand-crafted baselines;
 //! - `xla`                      — StarPlat's accelerator path (CUDA analog);
 //! - `par` (interpreter, MT)    — SYCL-on-CPU analog (Table 4);
-//! - `seq` (interpreter, 1T)    — OpenACC-on-CPU analog (Table 4).
+//! - `seq` (interpreter, 1T)    — OpenACC-on-CPU analog (Table 4);
+//! - `planexec`                 — the device-plan reference executor: runs
+//!   the exact lowering the 7 text backends render, in-process.
 
 use crate::algorithms::{gunrock, lonestar, reference};
-use crate::backends::interp::{self, env::Val, Args, Mode};
+use crate::backends::interp::{self, env::Val, Args, Mode, Output};
+use crate::backends::planexec;
 use crate::backends::xla::XlaBackend;
 use crate::dsl::parser::parse_file;
 use crate::graph::csr::{Graph, Node};
@@ -56,6 +59,8 @@ impl Algo {
 pub enum Backend {
     Seq,
     Par,
+    /// the plan-level reference executor (`backends::planexec`)
+    Planexec,
     Xla,
     Gunrock,
     Lonestar,
@@ -66,6 +71,7 @@ impl Backend {
         Ok(match s {
             "seq" => Backend::Seq,
             "par" => Backend::Par,
+            "planexec" => Backend::Planexec,
             "xla" => Backend::Xla,
             "gunrock" => Backend::Gunrock,
             "lonestar" => Backend::Lonestar,
@@ -138,8 +144,15 @@ pub fn run_cell(
         (Backend::Seq, _) | (Backend::Par, _) => {
             let tf = load_program(algo)?;
             let mode = if backend == Backend::Seq { Mode::Seq } else { Mode::Par };
-            let out = run_dsl(&tf, algo, g, sources, mode)?;
-            out
+            let out = interp::run(&tf, g, &algo_args(algo, sources), mode)?;
+            checksum_of(algo, &out)?
+        }
+        // ---- DSL via the device-plan executor (same bindings, same
+        // checksum extraction — a drop-in second executing backend) ----
+        (Backend::Planexec, _) => {
+            let tf = load_program(algo)?;
+            let out = planexec::run(&tf, g, &algo_args(algo, sources))?;
+            checksum_of(algo, &out)?
         }
         // ---- DSL via XLA artifacts (accelerator rows) ----
         (Backend::Xla, a) => {
@@ -169,53 +182,42 @@ fn sum_i32(v: &[i32]) -> f64 {
     v.iter().map(|&x| if x >= reference::INF { 0.0 } else { x as f64 }).sum()
 }
 
-fn run_dsl(
-    tf: &TypedFunction,
-    algo: Algo,
-    g: &Graph,
-    sources: &[Node],
-    mode: Mode,
-) -> Result<f64> {
+/// Canonical argument bindings for one algorithm — shared by every backend
+/// that runs the DSL program itself (interpreter and plan executor).
+pub fn algo_args(algo: Algo, sources: &[Node]) -> Args {
     let src: Node = sources.first().copied().unwrap_or(0);
+    match algo {
+        Algo::Sssp | Algo::Bfs => Args::default().node("src", src),
+        Algo::Cc | Algo::Tc => Args::default(),
+        Algo::Pr => Args::default()
+            .scalar("beta", Val::F(PR_BETA))
+            .scalar("delta", Val::F(PR_DAMPING))
+            .scalar("maxIter", Val::I(PR_MAX_ITER as i64)),
+        Algo::Bc => Args::default().set("sourceSet", sources.to_vec()),
+    }
+}
+
+/// Canonical checksum over an execution output — unreachable sentinels
+/// contribute zero, matching the baselines' accounting.
+pub fn checksum_of(algo: Algo, out: &Output) -> Result<f64> {
     Ok(match algo {
-        Algo::Sssp => {
-            let out = interp::run(tf, g, &Args::default().node("src", src), mode)?;
-            out.prop_i64("dist")
-                .iter()
-                .map(|&x| if x >= reference::INF as i64 { 0.0 } else { x as f64 })
-                .sum()
-        }
-        Algo::Bfs => {
-            let out = interp::run(tf, g, &Args::default().node("src", src), mode)?;
-            out.prop_i64("level")
-                .iter()
-                .map(|&x| if x >= reference::INF as i64 { 0.0 } else { x as f64 })
-                .sum()
-        }
-        Algo::Cc => {
-            let out = interp::run(tf, g, &Args::default(), mode)?;
-            out.prop_i64("comp").iter().map(|&x| x as f64).sum()
-        }
-        Algo::Pr => {
-            let args = Args::default()
-                .scalar("beta", Val::F(PR_BETA))
-                .scalar("delta", Val::F(PR_DAMPING))
-                .scalar("maxIter", Val::I(PR_MAX_ITER as i64));
-            let out = interp::run(tf, g, &args, mode)?;
-            out.prop_f64("pageRank").iter().sum()
-        }
-        Algo::Bc => {
-            let out =
-                interp::run(tf, g, &Args::default().set("sourceSet", sources.to_vec()), mode)?;
-            out.prop_f64("BC").iter().sum()
-        }
-        Algo::Tc => {
-            let out = interp::run(tf, g, &Args::default(), mode)?;
-            match out.ret {
-                Some(Val::I(n)) => n as f64,
-                _ => bail!("TC returned no count"),
-            }
-        }
+        Algo::Sssp => out
+            .prop_i64("dist")
+            .iter()
+            .map(|&x| if x >= reference::INF as i64 { 0.0 } else { x as f64 })
+            .sum(),
+        Algo::Bfs => out
+            .prop_i64("level")
+            .iter()
+            .map(|&x| if x >= reference::INF as i64 { 0.0 } else { x as f64 })
+            .sum(),
+        Algo::Cc => out.prop_i64("comp").iter().map(|&x| x as f64).sum(),
+        Algo::Pr => out.prop_f64("pageRank").iter().sum(),
+        Algo::Bc => out.prop_f64("BC").iter().sum(),
+        Algo::Tc => match out.ret {
+            Some(Val::I(n)) => n as f64,
+            _ => bail!("TC returned no count"),
+        },
     })
 }
 

@@ -1,0 +1,62 @@
+//! Degenerate-topology generators: path and star graphs.
+//!
+//! Neither shape appears in the paper's Table 2 — they exist for the
+//! differential-test families (`tests/planexec_parity.rs`): a path maximizes
+//! diameter (many BFS levels / fixedPoint rounds with tiny frontiers), a
+//! star maximizes single-vertex degree (one dense frontier, depth 2). Both
+//! are the classic boundary cases for level-synchronous skeletons and
+//! direction-optimized traversal.
+
+use crate::graph::csr::{Graph, GraphBuilder, Node};
+use crate::util::rng::Rng;
+
+/// Undirected path `0 — 1 — … — n-1` with seeded uniform weights in
+/// [1, 100] (pass `unit_weights` for an unweighted view — all weights 1).
+pub fn path_graph(name: &str, num_nodes: usize, seed: u64, unit_weights: bool) -> Graph {
+    assert!(num_nodes >= 2);
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(num_nodes).named(name);
+    for v in 0..num_nodes - 1 {
+        let w = if unit_weights { 1 } else { rng.range(1, 101) as i32 };
+        b.add_undirected(v as Node, v as Node + 1, w);
+    }
+    b.build()
+}
+
+/// Undirected star: hub 0 joined to every leaf `1..n-1`, seeded uniform
+/// weights in [1, 100] (`unit_weights` for the unweighted view).
+pub fn star_graph(name: &str, num_nodes: usize, seed: u64, unit_weights: bool) -> Graph {
+    assert!(num_nodes >= 2);
+    let mut rng = Rng::new(seed);
+    let mut b = GraphBuilder::new(num_nodes).named(name);
+    for v in 1..num_nodes {
+        let w = if unit_weights { 1 } else { rng.range(1, 101) as i32 };
+        b.add_undirected(0, v as Node, w);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn path_shape() {
+        let g = path_graph("p", 10, 1, false);
+        assert_eq!(g.num_nodes(), 10);
+        assert_eq!(g.num_edges(), 18); // 9 undirected edges
+        assert_eq!(g.out_degree(0), 1);
+        assert_eq!(g.out_degree(5), 2);
+        // deterministic under the same seed
+        assert_eq!(g.weights, path_graph("p", 10, 1, false).weights);
+        assert!(path_graph("p", 10, 1, true).weights.iter().all(|&w| w == 1));
+    }
+
+    #[test]
+    fn star_shape() {
+        let g = star_graph("s", 8, 2, false);
+        assert_eq!(g.out_degree(0), 7);
+        assert!((1..8u32).all(|v| g.out_degree(v) == 1));
+        assert!((1..8u32).all(|v| g.is_an_edge(0, v) && g.is_an_edge(v, 0)));
+    }
+}

@@ -6,11 +6,13 @@
 //! large diameter (road networks), and uniform-random.
 
 pub mod grid;
+pub mod line;
 pub mod rmat;
 pub mod smallworld;
 pub mod uniform;
 
 pub use grid::road_grid;
+pub use line::{path_graph, star_graph};
 pub use rmat::rmat;
 pub use smallworld::preferential_attachment;
 pub use uniform::uniform_random;

@@ -49,7 +49,7 @@
 //! `tests/host_schedule_conformance.rs` snapshot them to pin the
 //! cross-backend guarantee.
 
-use crate::dsl::ast::{Expr, IterSource, LValue, MinMax, ReduceOp, Stmt, Type, UnOp};
+use crate::dsl::ast::{BinOp, Expr, IterSource, LValue, MinMax, ReduceOp, Stmt, Type, UnOp};
 use crate::dsl::diag::DslError;
 use crate::ir::kernel::{
     lower_kernel_body, pull_variant, resolve_filter, simplify_bool_cmp, BfsDir, KCell, KTarget,
@@ -142,6 +142,10 @@ pub struct PropMeta {
     pub ty: ScalarTy,
     pub edge: bool,
     pub param: bool,
+    /// plan-synthesized buffer (e.g. the BFS level save/restore scratch),
+    /// not a DSL-declared property — never present in the interpreter's
+    /// table, always slotted after every declared property
+    pub synthetic: bool,
 }
 
 impl PropMeta {
@@ -184,9 +188,26 @@ impl PropTable {
                 ty: ScalarTy::of(inner),
                 edge,
                 param: param_names.contains(name.as_str()),
+                synthetic: false,
             });
         }
         table
+    }
+
+    /// Append a plan-synthesized buffer. Always slotted *after* every
+    /// declared property, so the numbering the interpreter derives from the
+    /// same `TypedFunction` stays a prefix of the plan's.
+    pub fn push_synthetic(&mut self, name: &str, ty: ScalarTy, edge: bool) -> u32 {
+        let slot = self.interner.intern(name);
+        debug_assert_eq!(slot as usize, self.metas.len());
+        self.metas.push(PropMeta {
+            name: name.to_string(),
+            ty,
+            edge,
+            param: false,
+            synthetic: true,
+        });
+        slot
     }
 
     /// Slot of a registered property.
@@ -315,6 +336,10 @@ pub struct KernelPlan {
     /// ([`crate::ir::kernel::pull_variant`]): renderers emit a second
     /// `{name}_pull` kernel and a host-side `STARPLAT_DIRECTION` switch
     pub pull_body: Option<KernelBody>,
+    /// plan-synthesized kernel (the BFS level restore launch), absent from
+    /// the IR kernel schedule — always appended after every IR kernel so
+    /// `ir.kernels` ids stay a prefix of the plan's
+    pub synthetic: bool,
 }
 
 impl KernelPlan {
@@ -723,7 +748,7 @@ impl DevicePlan {
     /// paths must diagnose, not panic.
     pub fn build(ir: &IrProgram) -> Result<DevicePlan, DslError> {
         let tf = &ir.tf;
-        let props = PropTable::build(tf);
+        let mut props = PropTable::build(tf);
 
         let mut host_params = Vec::with_capacity(tf.func.params.len());
         for p in &tf.func.params {
@@ -776,6 +801,56 @@ impl DevicePlan {
         for (id, body) in bodies {
             kernels[id].atomic_props = body.atomic_prop_slots();
             kernels[id].body = Some(body);
+        }
+
+        // BFS level save/restore repair: the generated BFS skeleton reuses a
+        // *declared* `level` property as its discovery buffer and seeds it
+        // with -1, clobbering whatever the program stored there (bfs.sp
+        // attaches INF so unreachable vertices keep it — the interpreter
+        // honors that). Repair it at the plan level so all renderers and the
+        // plan executor inherit the fix: snapshot the buffer into a synthetic
+        // scratch right before the skeleton, then one restore launch writes
+        // the saved value back into every vertex the sweep never discovered
+        // (level == -1). Discovered vertices keep their hop counts.
+        for (bfs_index, b) in bfs_loops.iter().enumerate() {
+            let Some(lvl) = b.level else { continue };
+            let level_meta = props.meta(lvl).clone();
+            let save_name = format!("{}_bfs_save", level_meta.name);
+            let save = props.push_synthetic(&save_name, level_meta.ty, level_meta.edge);
+            device_resident.push(save); // max slot so far: the vec stays sorted
+            let id = kernels.len();
+            let body = KernelBody {
+                thread_var: "v".to_string(),
+                guard: Some(Expr::Binary {
+                    op: BinOp::Eq,
+                    lhs: Box::new(Expr::Prop { obj: "v".to_string(), prop: level_meta.name }),
+                    rhs: Box::new(Expr::IntLit(-1)),
+                }),
+                ops: vec![KernelOp::AssignProp {
+                    slot: lvl,
+                    obj: "v".to_string(),
+                    value: Expr::Prop { obj: "v".to_string(), prop: save_name },
+                }],
+            };
+            kernels.push(KernelPlan {
+                id,
+                kind: KernelKind::VertexParallel,
+                name: format!("{}_bfs_restore_kernel_{id}", tf.func.name),
+                in_host_loop: false,
+                props: vec![lvl, save],
+                uses_in_edges: false,
+                reductions: Vec::new(),
+                scalar_params: Vec::new(),
+                copy_in: Vec::new(),
+                copy_out: Vec::new(),
+                defer_to_loop_exit: false,
+                body: Some(body),
+                atomic_props: Vec::new(),
+                pull_body: None,
+                synthetic: true,
+            });
+            let inserted = insert_bfs_repair(&mut body_ops, bfs_index, save, lvl, id);
+            debug_assert!(inserted, "bfs[{bfs_index}] op missing from host schedule");
         }
 
         // Schedule pass: decide per kernel which traversal directions it can
@@ -929,6 +1004,9 @@ impl DevicePlan {
             let mut tags = vec![if m.edge { "edge" } else { "node" }];
             if m.param {
                 tags.push("param");
+            }
+            if m.synthetic {
+                tags.push("synthetic");
             }
             if self.outputs.contains(&(i as u32)) {
                 tags.push("output");
@@ -1362,7 +1440,51 @@ fn kernel_plan(ir: &IrProgram, props: &PropTable, k: &Kernel) -> KernelPlan {
         body: None,
         atomic_props: Vec::new(),
         pull_body: None,
+        synthetic: false,
     }
+}
+
+/// Wrap `bfs[bfs_index]` — wherever it sits in the host tree — with the
+/// level-buffer snapshot before and the restore launch after. Returns true
+/// once the op is found.
+fn insert_bfs_repair(
+    ops: &mut Vec<HostOp>,
+    bfs_index: usize,
+    save: u32,
+    lvl: u32,
+    repair: usize,
+) -> bool {
+    let mut i = 0;
+    while i < ops.len() {
+        if matches!(&ops[i], HostOp::Bfs { index, .. } if *index == bfs_index) {
+            ops.insert(i, HostOp::CopyProp { dst: save, src: lvl });
+            ops.insert(i + 2, HostOp::Launch { kernel: repair });
+            return true;
+        }
+        match &mut ops[i] {
+            HostOp::SeqFor { body, .. }
+            | HostOp::FixedPoint { body, .. }
+            | HostOp::DoWhile { body, .. }
+            | HostOp::While { body, .. } => {
+                if insert_bfs_repair(body, bfs_index, save, lvl, repair) {
+                    return true;
+                }
+            }
+            HostOp::If { then, els, .. } => {
+                if insert_bfs_repair(then, bfs_index, save, lvl, repair) {
+                    return true;
+                }
+                if let Some(e) = els {
+                    if insert_bfs_repair(e, bfs_index, save, lvl, repair) {
+                        return true;
+                    }
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    false
 }
 
 #[cfg(test)]
@@ -1427,6 +1549,40 @@ mod tests {
         // bfs.sp declares `level`, so its skeleton binds the slot
         let bfs = plan_of("bfs.sp");
         assert_eq!(bfs.bfs_loops[0].level, bfs.props.slot("level"));
+    }
+
+    #[test]
+    fn bfs_declared_level_gets_save_restore_repair() {
+        // the BFS skeleton seeds its discovery buffer with -1; when that
+        // buffer is a declared property (bfs.sp attaches INF to `level`),
+        // the plan snapshots it before the skeleton and restores every
+        // undiscovered vertex afterwards — interpreter semantics
+        let plan = plan_of("bfs.sp");
+        let lvl = plan.props.slot("level").unwrap();
+        let save = plan.props.slot("level_bfs_save").expect("synthetic save buffer");
+        let m = plan.props.meta(save);
+        assert!(m.synthetic && !m.param);
+        assert_eq!(m.ty, plan.props.meta(lvl).ty);
+        assert!(plan.device_resident.contains(&save));
+        let repair = plan.kernels.last().unwrap();
+        assert!(repair.synthetic);
+        assert_eq!(repair.props, vec![lvl, save]);
+        let rb = repair.body.as_ref().unwrap();
+        assert!(rb.guard.is_some(), "restore only rewrites undiscovered (-1) vertices");
+        let bfs_at =
+            plan.host_ops.iter().position(|o| matches!(o, HostOp::Bfs { .. })).unwrap();
+        assert!(matches!(
+            plan.host_ops[bfs_at - 1],
+            HostOp::CopyProp { dst, src } if dst == save && src == lvl
+        ));
+        assert!(matches!(
+            plan.host_ops[bfs_at + 1],
+            HostOp::Launch { kernel } if kernel == repair.id
+        ));
+        // bc's level buffer is implicit — nothing to repair, nothing synthetic
+        let bc = plan_of("bc.sp");
+        assert!(bc.props.metas().iter().all(|m| !m.synthetic));
+        assert!(bc.kernels.iter().all(|k| !k.synthetic));
     }
 
     // (host-schedule ↔ kernel-schedule agreement across all programs and

@@ -1,0 +1,224 @@
+//! Differential testing of the 7-backend lowering: the plan executor
+//! (`backends::planexec`) runs the exact `DevicePlan` every text backend
+//! renders, and must match the AST interpreter **bit for bit** — integer
+//! props by value, float props by `f64::to_bits` — across all six shipped
+//! programs, seeded graph families, and all three direction policies.
+//!
+//! The oracle is the interpreter at 1 thread with the dense schedule: the
+//! executor's sequential `v = 0..V` sweeps visit vertices in the same order,
+//! so even order-sensitive float accumulations (PageRank's `diff`, BC's
+//! delta sums) agree exactly. Confluent integer algorithms (SSSP/BFS/CC)
+//! agree under any schedule. A mismatch therefore indicts the lowering —
+//! slot assignment, transfer protocol, loop skeletons, kernel-op semantics —
+//! not arithmetic noise, which is the point of executing the plan at all.
+//!
+//! Every assertion message carries the family seed, so a failure reproduces
+//! with `SEEDS = [<seed>]`.
+
+use starplat::backends::interp::{self, DeltaMode, Direction, ExecOpts};
+use starplat::backends::planexec;
+use starplat::coordinator::driver::{algo_args, load_program, Algo};
+use starplat::graph::csr::Graph;
+use starplat::graph::generators::{
+    path_graph, road_grid, sample_sources, star_graph, uniform_random,
+};
+use starplat::util::rng::Rng;
+
+const SEEDS: [u64; 2] = [0xA11CE, 0x5EED2];
+
+const ALGOS: [Algo; 6] = [Algo::Bfs, Algo::Sssp, Algo::Cc, Algo::Pr, Algo::Tc, Algo::Bc];
+
+/// Rewrite every weight to 1: the unweighted view of a family (weights are
+/// CSR-parallel, so this preserves the topology exactly).
+fn unit_weighted(mut g: Graph) -> Graph {
+    for w in &mut g.weights {
+        *w = 1;
+    }
+    g
+}
+
+/// The seeded families: path (max diameter), star (max degree), grid
+/// (mesh), G(n,m) (uniform random) — weighted and unweighted views.
+fn families(seed: u64) -> Vec<Graph> {
+    let mut rng = Rng::new(seed);
+    let n_path = rng.range(12, 40);
+    let n_star = rng.range(8, 30);
+    let rows = rng.range(4, 8);
+    let cols = rng.range(4, 8);
+    let n = rng.range(40, 120);
+    let m = rng.range(2 * n, 4 * n);
+    vec![
+        path_graph("path-w", n_path, seed, false),
+        path_graph("path-u", n_path, seed, true),
+        star_graph("star-w", n_star, seed, false),
+        road_grid("grid", rows, cols, seed),
+        uniform_random("gnm-w", n, m, seed),
+        unit_weighted(uniform_random("gnm-u", n, m, seed ^ 0x9E37)),
+    ]
+}
+
+fn assert_bits_eq(got: &[f64], want: &[f64], ctx: &str) {
+    assert_eq!(got.len(), want.len(), "{ctx}: prop length diverged");
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "{ctx}: v{i} diverged bitwise: planexec {a:?} vs interp {b:?}"
+        );
+    }
+}
+
+/// Run one (program, graph, direction) cell through both engines and
+/// compare bit-for-bit.
+fn run_pair(algo: Algo, g: &Graph, seed: u64, dir: Direction) {
+    let ctx = format!("{algo:?} on {} (seed {seed:#x}, dir {dir:?})", g.name);
+    let tf = load_program(algo).unwrap();
+    let sources = sample_sources(g, 3, seed);
+    let args = algo_args(algo, &sources);
+    // oracle: 1-thread dense interpreter — same vertex order as the
+    // executor's sequential sweeps
+    let oracle = ExecOpts {
+        threads: 1,
+        frontier: false,
+        direction: Some(dir),
+        delta: Some(DeltaMode::Off),
+        ..Default::default()
+    };
+    let want = interp::run_with_opts(&tf, g, &args, oracle)
+        .unwrap_or_else(|e| panic!("{ctx}: interpreter failed: {e:#}"));
+    let got = planexec::run_with_opts(
+        &tf,
+        g,
+        &args,
+        ExecOpts { direction: Some(dir), ..Default::default() },
+    )
+    .unwrap_or_else(|e| panic!("{ctx}: plan executor failed: {e:#}"));
+    match algo {
+        Algo::Bfs => {
+            let w = want.prop_i64("level");
+            assert!(!w.is_empty(), "{ctx}: oracle produced no levels");
+            assert_eq!(got.prop_i64("level"), w, "{ctx}: BFS levels diverged");
+        }
+        Algo::Sssp => {
+            let w = want.prop_i64("dist");
+            assert!(!w.is_empty(), "{ctx}: oracle produced no distances");
+            assert_eq!(got.prop_i64("dist"), w, "{ctx}: SSSP distances diverged");
+        }
+        Algo::Cc => {
+            let w = want.prop_i64("comp");
+            assert!(!w.is_empty(), "{ctx}: oracle produced no components");
+            assert_eq!(got.prop_i64("comp"), w, "{ctx}: CC labels diverged");
+            // acceptance: the one program whose relaxation compiles a pull
+            // twin must actually run it when the host switch selects pull
+            if dir == Direction::Pull {
+                assert!(
+                    got.stats.pull_rounds > 0,
+                    "{ctx}: pull twin compiled in but the executor never ran it"
+                );
+            }
+        }
+        Algo::Pr => {
+            let w = want.prop_f64("pageRank");
+            assert!(!w.is_empty(), "{ctx}: oracle produced no ranks");
+            assert_bits_eq(&got.prop_f64("pageRank"), &w, &ctx);
+        }
+        Algo::Bc => {
+            let w = want.prop_f64("BC");
+            assert!(!w.is_empty(), "{ctx}: oracle produced no centrality");
+            assert_bits_eq(&got.prop_f64("BC"), &w, &ctx);
+        }
+        Algo::Tc => {
+            let w = want.ret.and_then(|v| v.as_i().ok());
+            let g_ = got.ret.and_then(|v| v.as_i().ok());
+            assert!(w.is_some(), "{ctx}: oracle returned no count");
+            assert_eq!(g_, w, "{ctx}: triangle counts diverged");
+        }
+    }
+    // the executor never pulls without the switch; forced push must stay push
+    if dir == Direction::Push {
+        assert_eq!(got.stats.pull_rounds, 0, "{ctx}: push forced but executor pulled");
+    }
+}
+
+fn sweep(dir: Direction) {
+    for seed in SEEDS {
+        for g in families(seed) {
+            for algo in ALGOS {
+                run_pair(algo, &g, seed, dir);
+            }
+        }
+    }
+}
+
+#[test]
+fn planexec_matches_interpreter_push() {
+    sweep(Direction::Push);
+}
+
+#[test]
+fn planexec_matches_interpreter_pull() {
+    sweep(Direction::Pull);
+}
+
+#[test]
+fn planexec_matches_interpreter_auto() {
+    sweep(Direction::Auto);
+}
+
+/// The reverse differential: planexec as the *oracle* for the interpreter's
+/// parallel frontier engine. Integer algorithms are confluent (any
+/// schedule reaches the same fixpoint exactly), so the work-stealing
+/// frontier path at 8 threads must match the executor's sequential plan
+/// semantics bit-for-bit — including under `STARPLAT_FAULT` (CI's
+/// planexec-differential job exports claim_gather / pool_dispatch seeds;
+/// the sparse→dense fallback is exact recovery, and planexec ignores fault
+/// switches entirely, so parity must survive injected faults unchanged).
+#[test]
+fn parallel_frontier_interpreter_matches_planexec() {
+    for seed in SEEDS {
+        for g in families(seed) {
+            for algo in [Algo::Bfs, Algo::Sssp, Algo::Cc, Algo::Tc] {
+                let ctx = format!("{algo:?} on {} (seed {seed:#x}, 8 threads)", g.name);
+                let tf = load_program(algo).unwrap();
+                let sources = sample_sources(&g, 3, seed);
+                let args = algo_args(algo, &sources);
+                let want = planexec::run(&tf, &g, &args)
+                    .unwrap_or_else(|e| panic!("{ctx}: plan executor failed: {e:#}"));
+                let opts = ExecOpts { threads: 8, frontier: true, ..Default::default() };
+                let got = interp::run_with_opts(&tf, &g, &args, opts)
+                    .unwrap_or_else(|e| panic!("{ctx}: interpreter failed: {e:#}"));
+                match algo {
+                    Algo::Tc => {
+                        let w = want.ret.and_then(|v| v.as_i().ok());
+                        assert_eq!(got.ret.and_then(|v| v.as_i().ok()), w, "{ctx}");
+                    }
+                    _ => {
+                        let prop = match algo {
+                            Algo::Bfs => "level",
+                            Algo::Sssp => "dist",
+                            _ => "comp",
+                        };
+                        assert_eq!(got.prop_i64(prop), want.prop_i64(prop), "{ctx}");
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The CLI surface: `--backend planexec` resolves through the coordinator
+/// and produces the interpreter's checksum for every algorithm.
+#[test]
+fn planexec_backend_checksums_match_interpreter() {
+    use starplat::backends::interp::Mode;
+    use starplat::coordinator::driver::checksum_of;
+    let g = uniform_random("cli", 80, 240, 0xD15C);
+    let sources = sample_sources(&g, 3, 11);
+    for algo in ALGOS {
+        let tf = load_program(algo).unwrap();
+        let args = algo_args(algo, &sources);
+        let want = checksum_of(algo, &interp::run(&tf, &g, &args, Mode::Seq).unwrap()).unwrap();
+        let got = checksum_of(algo, &planexec::run(&tf, &g, &args).unwrap()).unwrap();
+        assert_eq!(got.to_bits(), want.to_bits(), "{algo:?}: checksum diverged");
+    }
+}

@@ -275,6 +275,55 @@ fn nested_bfs_dag_loops_see_settled_levels() {
     }
 }
 
+/// ExecStats must be *invariants*, not best-effort telemetry: downstream
+/// harnesses (the planexec differential suite, the CI fault matrix, the
+/// bench tables) branch on these counters, so a drifting counter silently
+/// rewires what those harnesses think they tested. Pinned here with the
+/// fault machinery explicitly disabled (`FaultPlan::off()`), so the
+/// assertions stay meaningful even when CI exports `STARPLAT_FAULT` seeds
+/// into the whole test run: forcing push means zero pull rounds, an
+/// unfaulted run means zero fallbacks, and single-source runs never batch.
+#[test]
+fn exec_stats_counters_are_invariants() {
+    use starplat::util::fault::FaultPlan;
+    let mut rng = Rng::new(0x57A7);
+    for g in test_graphs() {
+        for algo in [Algo::Bfs, Algo::Sssp, Algo::Cc, Algo::Pr] {
+            let tf = load_program(algo).unwrap();
+            let args = match algo {
+                Algo::Bfs | Algo::Sssp => {
+                    Args::default().node("src", rng.range(0, g.num_nodes()) as u32)
+                }
+                Algo::Pr => Args::default()
+                    .scalar("beta", Val::F(1e-9))
+                    .scalar("delta", Val::F(0.85))
+                    .scalar("maxIter", Val::I(30)),
+                _ => Args::default(),
+            };
+            for t in [1, 4] {
+                let opts = ExecOpts {
+                    threads: t,
+                    direction: Some(Direction::Push),
+                    delta: Some(DeltaMode::Off),
+                    fault: Some(FaultPlan::off()),
+                    ..Default::default()
+                };
+                let out = interp::run_with_opts(&tf, &g, &args, opts).unwrap();
+                let ctx = format!("{algo:?} on {} with {t} threads", g.name);
+                let s = &out.stats;
+                assert_eq!(s.pull_rounds, 0, "{ctx}: push forced, yet pull rounds ran");
+                assert_eq!(s.fallbacks, 0, "{ctx}: unfaulted run recorded a fault fallback");
+                assert_eq!(s.batched_roots, 0, "{ctx}: single-source run claimed batching");
+                assert!(!s.delta_used, "{ctx}: delta disabled, yet delta schedule used");
+                assert_eq!(
+                    s.direction_switches, 0,
+                    "{ctx}: forced direction cannot switch mid-run"
+                );
+            }
+        }
+    }
+}
+
 /// The frontier fast path must agree with the oracles, not just with itself.
 #[test]
 fn frontier_path_matches_oracles() {
